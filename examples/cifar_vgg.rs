@@ -1,0 +1,56 @@
+//! CIFAR-10/VGG scenario (paper §5.2.4): masking-policy comparison on the
+//! large conv model, reporting accuracy and the byte-level saving of
+//! shipping sparse masked updates.
+//!
+//! Knobs via env: FEDMASK_ROUNDS, FEDMASK_CLIENTS, FEDMASK_GAMMAS (csv).
+
+use std::sync::Arc;
+
+use fedmask::config::experiment::ExperimentConfig;
+use fedmask::fl::masking::MaskPolicy;
+use fedmask::fl::server::Server;
+use fedmask::runtime::manifest::Manifest;
+use fedmask::runtime::pool::EnginePool;
+
+fn main() -> fedmask::Result<()> {
+    fedmask::util::logging::init();
+    let manifest = Manifest::load("artifacts")?;
+    let rounds: usize = std::env::var("FEDMASK_ROUNDS").ok().and_then(|v| v.parse().ok()).unwrap_or(6);
+    let clients: usize = std::env::var("FEDMASK_CLIENTS").ok().and_then(|v| v.parse().ok()).unwrap_or(6);
+    let gammas: Vec<f32> = std::env::var("FEDMASK_GAMMAS")
+        .map(|s| s.split(',').filter_map(|g| g.parse().ok()).collect())
+        .unwrap_or_else(|_| vec![0.2, 0.6]);
+    let pool = Arc::new(EnginePool::new(&manifest, &["vggmini"], 6)?);
+
+    let p = manifest.model("vggmini")?.p;
+    println!("VGG-mini: P = {p} parameters; dense upload = {:.1} KiB", (4 * p) as f64 / 1024.0);
+    println!("{:<24} {:>9} {:>12} {:>16}", "setting", "accuracy", "cost(units)", "mean KiB/upload");
+    for &gamma in &gammas {
+        for policy in [MaskPolicy::random(gamma), MaskPolicy::selective(gamma)] {
+            let mut cfg = ExperimentConfig::defaults("vggmini")?;
+            cfg.label = format!("cifar-{}", policy.label());
+            cfg.clients = clients;
+            cfg.rounds = rounds;
+            cfg.masking = policy;
+            cfg.eval_every = rounds;
+            let out = Server::with_pool(cfg, &manifest, Arc::clone(&pool))?.run()?;
+            let uploads = out.ledger.messages as f64 / 2.0;
+            println!(
+                "{:<24} {:>9.4} {:>12.2} {:>16.1}",
+                cfg_label(&policy, gamma),
+                out.recorder.final_accuracy(),
+                out.ledger.uplink_units,
+                out.ledger.uplink_bytes as f64 / 1024.0 / uploads,
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cfg_label(policy: &MaskPolicy, gamma: f32) -> String {
+    match policy {
+        MaskPolicy::Random { .. } => format!("random gamma={gamma}"),
+        MaskPolicy::Selective { .. } => format!("selective gamma={gamma}"),
+        MaskPolicy::None => "dense".into(),
+    }
+}

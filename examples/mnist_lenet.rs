@@ -1,0 +1,60 @@
+//! MNIST/LeNet scenario (paper §5.2): head-to-head of the four policy
+//! combinations on the image-classification task.
+//!
+//!   static + dense          (vanilla FedAvg, Alg. 1)
+//!   dynamic + dense         (paper contribution 1, Alg. 3)
+//!   static + selective      (paper contribution 2, Alg. 4)
+//!   dynamic + selective     (both combined, §5.2.3)
+//!
+//! Prints a final table of accuracy vs communication cost — the trade-off
+//! the whole paper is about. Knobs via env: FEDMASK_ROUNDS, FEDMASK_CLIENTS.
+
+use std::sync::Arc;
+
+use fedmask::config::experiment::ExperimentConfig;
+use fedmask::fl::masking::MaskPolicy;
+use fedmask::fl::sampling::SamplingSchedule;
+use fedmask::fl::server::Server;
+use fedmask::runtime::manifest::Manifest;
+use fedmask::runtime::pool::EnginePool;
+
+fn env_or(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> fedmask::Result<()> {
+    fedmask::util::logging::init();
+    let manifest = Manifest::load("artifacts")?;
+    let rounds = env_or("FEDMASK_ROUNDS", 15);
+    let clients = env_or("FEDMASK_CLIENTS", 10);
+    let pool = Arc::new(EnginePool::new(&manifest, &["lenet"], 6)?);
+
+    let dynamic = SamplingSchedule::DynamicExp { c0: 1.0, beta: 0.1 };
+    let settings: [(&str, SamplingSchedule, MaskPolicy); 4] = [
+        ("static+dense", SamplingSchedule::Static { c0: 1.0 }, MaskPolicy::None),
+        ("dynamic+dense", dynamic.clone(), MaskPolicy::None),
+        ("static+selective", SamplingSchedule::Static { c0: 1.0 }, MaskPolicy::selective(0.3)),
+        ("dynamic+selective", dynamic, MaskPolicy::selective(0.3)),
+    ];
+
+    println!("{:<20} {:>9} {:>14} {:>14}", "setting", "accuracy", "cost(units)", "uplink(KiB)");
+    for (label, sampling, masking) in settings {
+        let mut cfg = ExperimentConfig::defaults("lenet")?;
+        cfg.label = label.into();
+        cfg.clients = clients;
+        cfg.rounds = rounds;
+        cfg.min_clients = sampling.default_min_clients();
+        cfg.sampling = sampling;
+        cfg.masking = masking;
+        cfg.eval_every = rounds;
+        let out = Server::with_pool(cfg, &manifest, Arc::clone(&pool))?.run()?;
+        println!(
+            "{:<20} {:>9.4} {:>14.2} {:>14.1}",
+            label,
+            out.recorder.final_accuracy(),
+            out.ledger.uplink_units,
+            out.ledger.uplink_bytes as f64 / 1024.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,154 @@
+"""AOT compile path: lower every model's artifact set to HLO *text*.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model four artifacts are produced (flat f32[P] calling convention):
+
+  {m}_init.hlo.txt   (seed i32[])                          -> (f32[P],)
+  {m}_train.hlo.txt  (f32[P], xs, ys, lr f32[])            -> (f32[P], f32[])
+  {m}_eval.hlo.txt   (f32[P], xs, ys)                      -> (f32[], f32[], f32[])
+  {m}_mask.hlo.txt   (f32[P], f32[P], gamma f32[])         -> (f32[P],)
+
+plus ``manifest.json`` describing shapes + the per-layer table the rust
+coordinator needs. Run via ``make artifacts``:
+
+  cd python && python -m compile.aot --outdir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import functools
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.kernels.selective_mask import selective_mask_layered
+from compile.models import REGISTRY, ModelDef, build_fns
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype(name: str):
+    return {"f32": jnp.float32, "i32": jnp.int32}[name]
+
+
+def _shape_specs(md: ModelDef):
+    p = md.param_count
+    params = jax.ShapeDtypeStruct((p,), jnp.float32)
+    xs_tr = jax.ShapeDtypeStruct((md.nb_train, md.batch, *md.x_elem_shape), _dtype(md.x_dtype))
+    ys_tr = jax.ShapeDtypeStruct((md.nb_train, md.batch, *md.y_elem_shape), jnp.int32)
+    xs_ev = jax.ShapeDtypeStruct((md.nb_eval, md.batch, *md.x_elem_shape), _dtype(md.x_dtype))
+    ys_ev = jax.ShapeDtypeStruct((md.nb_eval, md.batch, *md.y_elem_shape), jnp.int32)
+    scalar_f = jax.ShapeDtypeStruct((), jnp.float32)
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+    return params, xs_tr, ys_tr, xs_ev, ys_ev, scalar_f, scalar_i
+
+
+def lower_model(md: ModelDef, outdir: Path, verbose: bool = True) -> dict:
+    """Lower one model's artifact set; returns its manifest entry."""
+    fns = build_fns(md)
+    params, xs_tr, ys_tr, xs_ev, ys_ev, scalar_f, scalar_i = _shape_specs(md)
+    segments = md.mask_segments()
+
+    mask_fn = functools.partial(selective_mask_layered, segments=segments)
+
+    jobs = {
+        "init": (fns.init, (scalar_i,)),
+        "train": (fns.train_epoch, (params, xs_tr, ys_tr, scalar_f)),
+        "eval": (fns.eval_chunk, (params, xs_ev, ys_ev)),
+        "mask": (lambda wn, wo, g: mask_fn(wn, wo, g), (params, params, scalar_f)),
+    }
+
+    artifacts = {}
+    for kind, (fn, args) in jobs.items():
+        t0 = time.time()
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        fname = f"{md.name}_{kind}.hlo.txt"
+        (outdir / fname).write_text(text)
+        artifacts[kind] = fname
+        if verbose:
+            print(
+                f"  {fname:28s} {len(text) / 1024:9.1f} KiB  ({time.time() - t0:.1f}s)",
+                file=sys.stderr,
+            )
+
+    return {
+        "p": md.param_count,
+        "task": md.task,
+        "batch": md.batch,
+        "nb_train": md.nb_train,
+        "nb_eval": md.nb_eval,
+        "x_elem_shape": list(md.x_elem_shape),
+        "x_dtype": md.x_dtype,
+        "y_elem_shape": list(md.y_elem_shape),
+        "layers": md.layer_table(),
+        "meta": md.meta,
+        "artifacts": artifacts,
+    }
+
+
+def hlo_op_histogram(text: str) -> dict:
+    """Crude HLO instruction histogram for the --report L2 perf check."""
+    hist = collections.Counter()
+    for line in text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{},\s/]*?\s([a-z][\w\-]*)\(", line)
+        if m:
+            hist[m.group(1)] += 1
+    return dict(hist.most_common())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--models", default=",".join(REGISTRY), help="comma-separated model subset")
+    ap.add_argument("--report", action="store_true", help="print HLO op histograms")
+    # legacy flag kept for the original Makefile stub; ignored if --outdir given
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    outdir = Path(args.outdir if args.out is None else Path(args.out).parent)
+    outdir.mkdir(parents=True, exist_ok=True)
+    names = [n.strip() for n in args.models.split(",") if n.strip()]
+    unknown = [n for n in names if n not in REGISTRY]
+    if unknown:
+        ap.error(f"unknown models: {unknown}; available: {list(REGISTRY)}")
+
+    manifest = {"version": MANIFEST_VERSION, "models": {}}
+    for name in names:
+        print(f"[aot] lowering {name}", file=sys.stderr)
+        manifest["models"][name] = lower_model(REGISTRY[name], outdir)
+
+    manifest_path = outdir / "manifest.json"
+    manifest_path.write_text(json.dumps(manifest, indent=2))
+    print(f"[aot] wrote {manifest_path}", file=sys.stderr)
+
+    if args.report:
+        for name in names:
+            for kind, fname in manifest["models"][name]["artifacts"].items():
+                hist = hlo_op_histogram((outdir / fname).read_text())
+                top = ", ".join(f"{k}={v}" for k, v in list(hist.items())[:8])
+                print(f"[report] {name}/{kind}: {top}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These are the ground-truth implementations the Pallas kernels are tested
+against (pytest + hypothesis in ``python/tests``). They use exact sort-based
+top-k selection, which is simple and obviously correct but not TPU-shaped
+(data-dependent gather patterns); the production kernel in
+``selective_mask.py`` replaces the sort with threshold bisection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "selective_mask_ref",
+    "selective_mask_threshold_ref",
+    "random_mask_ref",
+]
+
+
+def selective_mask_threshold_ref(w_new: jnp.ndarray, w_old: jnp.ndarray, gamma) -> jnp.ndarray:
+    """Exact keep-threshold tau for selective masking (Eq. 4 of the paper).
+
+    Returns the value tau such that keeping entries with |w_new - w_old| >= tau
+    keeps (at least) ``round(gamma * P)`` entries; ties at tau may keep more.
+    """
+    p = w_new.shape[0]
+    d = jnp.abs(w_new - w_old)
+    k = jnp.round(gamma * p).astype(jnp.int32)
+    sorted_desc = jnp.sort(d)[::-1]
+    # k-th largest value; k == 0 keeps nothing (tau = +inf).
+    tau = jnp.where(k >= 1, sorted_desc[jnp.clip(k - 1, 0, p - 1)], jnp.inf)
+    return tau
+
+
+def selective_mask_ref(w_new: jnp.ndarray, w_old: jnp.ndarray, gamma) -> jnp.ndarray:
+    """Oracle for Alg. 4: keep the top-``round(gamma*P)`` entries of w_new by
+    |w_new - w_old|, zero the rest (paper-literal: the *weights* are masked,
+    not the delta)."""
+    d = jnp.abs(w_new - w_old)
+    tau = selective_mask_threshold_ref(w_new, w_old, gamma)
+    return jnp.where(d >= tau, w_new, jnp.zeros_like(w_new))
+
+
+def random_mask_ref(key: jax.Array, w: jnp.ndarray, gamma) -> jnp.ndarray:
+    """Oracle for Alg. 2 (random masking): keep a Bernoulli(gamma) subset of
+    entries of ``w``, zero the rest. The rust client implements the same
+    policy with its deterministic splitmix RNG; this reference exists to
+    validate distributional properties in tests."""
+    keep = jax.random.uniform(key, w.shape) < gamma
+    return jnp.where(keep, w, jnp.zeros_like(w))

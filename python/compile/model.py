@@ -1,0 +1,11 @@
+"""L2 facade: re-exports the model zoo for the documented entry point.
+
+The actual definitions live in ``compile/models/`` (one module per client
+learner); ``compile/aot.py`` lowers them. Import from here when scripting:
+
+    from compile.model import REGISTRY, build_fns
+"""
+
+from compile.models import REGISTRY, ModelDef, ParamSpec, build_fns
+
+__all__ = ["REGISTRY", "ModelDef", "ParamSpec", "build_fns"]

@@ -1,0 +1,17 @@
+"""L2 model zoo: the paper's three client learners as pure-JAX fwd/bwd.
+
+Each model is described by a :class:`~compile.models.common.ModelDef` and
+lowered by ``aot.py`` to four HLO-text artifacts (init / train / eval / mask)
+with a flat ``f32[P]`` parameter calling convention — see DESIGN.md §1.
+"""
+
+from compile.models.common import ModelDef, ParamSpec, build_fns
+from compile.models import gru, lenet, vggmini
+
+REGISTRY = {
+    "lenet": lenet.model_def,
+    "vggmini": vggmini.model_def,
+    "gru": gru.model_def,
+}
+
+__all__ = ["ModelDef", "ParamSpec", "build_fns", "REGISTRY"]

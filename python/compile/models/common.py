@@ -1,0 +1,199 @@
+"""Shared model machinery: flat-parameter packing, init, SGD epoch, eval.
+
+The whole model lives in one ``f32[P]`` vector. ``aot.py`` bakes the layer
+table (name/offset/size/shape/masked) into ``manifest.json`` so the rust
+coordinator can do per-layer accounting without re-deriving shapes.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """One named parameter tensor inside the flat vector.
+
+    ``init`` selects the initializer: ``glorot`` (fan-avg normal, weights),
+    ``zeros`` (biases), or ``embed`` (N(0, 0.1), embedding tables).
+    ``masked`` marks tensors eligible for selective/random masking — the
+    paper's Alg. 2/4 mask per-*layer weight matrices*, so only ndim >= 2
+    tensors default to maskable.
+    """
+
+    name: str
+    shape: tuple
+    init: str = "glorot"
+    masked: bool | None = None
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+    @property
+    def is_masked(self) -> bool:
+        return self.masked if self.masked is not None else len(self.shape) >= 2
+
+
+@dataclass(frozen=True)
+class ModelDef:
+    """Static description of a client learner + its batching geometry."""
+
+    name: str
+    task: str  # "image" | "lm"
+    specs: tuple  # tuple[ParamSpec, ...]
+    batch: int  # per-batch sample count B
+    nb_train: int  # batches per local-epoch artifact call
+    nb_eval: int  # batches per eval-chunk artifact call
+    x_elem_shape: tuple  # per-sample input shape
+    x_dtype: str  # "f32" | "i32"
+    y_elem_shape: tuple  # per-sample label shape (() image, (T,) lm)
+    apply_fn: Callable  # (params: dict, x_batch) -> logits
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def param_count(self) -> int:
+        return sum(s.size for s in self.specs)
+
+    def layer_table(self) -> list[dict]:
+        """Layer table for manifest.json (offsets into the flat vector)."""
+        table, offset = [], 0
+        for s in self.specs:
+            table.append(
+                {
+                    "name": s.name,
+                    "shape": list(s.shape),
+                    "offset": offset,
+                    "size": s.size,
+                    "masked": s.is_masked,
+                }
+            )
+            offset += s.size
+        return table
+
+    def mask_segments(self) -> list[tuple]:
+        """(offset, size, masked) triples for the L1 layered mask kernel."""
+        return [(t["offset"], t["size"], t["masked"]) for t in self.layer_table()]
+
+
+def unpack(flat: jnp.ndarray, specs) -> dict:
+    """Split the flat vector into named, shaped tensors (inside the HLO)."""
+    params, offset = {}, 0
+    for s in specs:
+        params[s.name] = lax.slice(flat, (offset,), (offset + s.size,)).reshape(s.shape)
+        offset += s.size
+    return params
+
+
+def pack(params: dict, specs) -> jnp.ndarray:
+    return jnp.concatenate([params[s.name].reshape(-1) for s in specs])
+
+
+def _init_one(key: jax.Array, spec: ParamSpec) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, jnp.float32)
+    if spec.init == "embed":
+        return 0.1 * jax.random.normal(key, spec.shape, jnp.float32)
+    # glorot normal; for conv HWIO tensors fan_in/out include the window.
+    if len(spec.shape) == 4:
+        rf = spec.shape[0] * spec.shape[1]
+        fan_in, fan_out = rf * spec.shape[2], rf * spec.shape[3]
+    elif len(spec.shape) == 2:
+        fan_in, fan_out = spec.shape
+    else:
+        fan_in = fan_out = spec.size
+    scale = math.sqrt(2.0 / float(fan_in + fan_out))
+    return scale * jax.random.normal(key, spec.shape, jnp.float32)
+
+
+def _image_batch_loss(md: ModelDef, params: dict, x, y):
+    logits = md.apply_fn(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def _lm_batch_loss(md: ModelDef, params: dict, x, y):
+    logits = md.apply_fn(params, x)  # [B, T, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+@dataclass(frozen=True)
+class ModelFns:
+    """The four traceable functions lowered to HLO artifacts."""
+
+    init: Callable  # (seed i32[]) -> f32[P]
+    train_epoch: Callable  # (f32[P], xs, ys, lr f32[]) -> (f32[P], f32[])
+    eval_chunk: Callable  # (f32[P], xs, ys) -> (loss_sum, metric_sum, count)
+    batch_loss: Callable  # (f32[P], x, y) -> f32[]
+
+
+def build_fns(md: ModelDef) -> ModelFns:
+    specs = md.specs
+    per_batch_loss = _lm_batch_loss if md.task == "lm" else _image_batch_loss
+
+    def batch_loss(flat, x, y):
+        return per_batch_loss(md, unpack(flat, specs), x, y)
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        return jnp.concatenate(
+            [_init_one(jax.random.fold_in(key, i), s).reshape(-1) for i, s in enumerate(specs)]
+        )
+
+    def train_epoch(flat, xs, ys, lr):
+        """One local epoch: plain SGD (paper Alg. 2/4 line 8), scanned over
+        NB static batches so the rust->PJRT call count is 1 per epoch."""
+
+        def step(carry, batch):
+            x, y = batch
+            loss, grad = jax.value_and_grad(batch_loss)(carry, x, y)
+            return carry - lr * grad, loss
+
+        flat, losses = lax.scan(step, flat, (xs, ys))
+        return flat, jnp.mean(losses)
+
+    def eval_chunk(flat, xs, ys):
+        """Scanned eval: returns (loss_sum, metric_sum, count). metric is
+        correct-prediction count (argmax == label) for both tasks; for the
+        LM task the coordinator derives perplexity as exp(loss_sum/count)."""
+
+        def step(acc, batch):
+            x, y = batch
+            params = unpack(flat, specs)
+            logits = md.apply_fn(params, x)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+            correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+            n = jnp.float32(nll.size)
+            return (acc[0] + jnp.sum(nll), acc[1] + correct, acc[2] + n), None
+
+        (loss_sum, metric_sum, count), _ = lax.scan(
+            step, (jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0)), (xs, ys)
+        )
+        return loss_sum, metric_sum, count
+
+    return ModelFns(init=init, train_epoch=train_epoch, eval_chunk=eval_chunk, batch_loss=batch_loss)
+
+
+def conv2d(x, w, b, *, padding="VALID"):
+    """NHWC conv + bias (HWIO weights)."""
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=padding, dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + b
+
+
+def maxpool2(x):
+    """2x2 max pool, stride 2, NHWC."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, window_dimensions=(1, 2, 2, 1), window_strides=(1, 2, 2, 1), padding="VALID"
+    )

@@ -1,0 +1,75 @@
+"""GRU language model with tied input/output embeddings (paper §5.3).
+
+The paper uses a GRU [5] client learner on WikiText-2 with tied word
+embedding and classifier [9, 29] to cut communication. We keep exactly that
+structure at vocab V=2000 / d=64 / seq T=32 (corpus substitution documented
+in DESIGN.md §2).
+
+embed (V, 64), tied with the output projection (logits = h @ embed^T + b).
+GRU gates use concatenated [x, h] weights of shape (128, 64).
+
+P = 154,768 parameters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.models.common import ModelDef, ParamSpec
+
+VOCAB = 2000
+DIM = 64
+SEQ = 32
+
+SPECS = (
+    ParamSpec("embed", (VOCAB, DIM), init="embed"),
+    ParamSpec("gru_wz", (2 * DIM, DIM)),
+    ParamSpec("gru_bz", (DIM,), init="zeros"),
+    ParamSpec("gru_wr", (2 * DIM, DIM)),
+    ParamSpec("gru_br", (DIM,), init="zeros"),
+    ParamSpec("gru_wh", (2 * DIM, DIM)),
+    ParamSpec("gru_bh", (DIM,), init="zeros"),
+    ParamSpec("out_b", (VOCAB,), init="zeros"),
+)
+
+
+def apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: i32[B, T] token ids -> logits f32[B, T, V] (next-token)."""
+    emb = p["embed"][x]  # [B, T, D]
+    batch = emb.shape[0]
+    h0 = jnp.zeros((batch, DIM), jnp.float32)
+
+    def cell(h, xt):
+        hx = jnp.concatenate([xt, h], axis=-1)
+        z = jax.nn.sigmoid(hx @ p["gru_wz"] + p["gru_bz"])
+        r = jax.nn.sigmoid(hx @ p["gru_wr"] + p["gru_br"])
+        hxr = jnp.concatenate([xt, r * h], axis=-1)
+        h_tilde = jnp.tanh(hxr @ p["gru_wh"] + p["gru_bh"])
+        h_new = (1.0 - z) * h + z * h_tilde
+        return h_new, h_new
+
+    _, hs = lax.scan(cell, h0, emb.transpose(1, 0, 2))  # hs: [T, B, D]
+    logits = hs @ p["embed"].T + p["out_b"]  # tied projection, [T, B, V]
+    return logits.transpose(1, 0, 2)
+
+
+model_def = ModelDef(
+    name="gru",
+    task="lm",
+    specs=SPECS,
+    batch=16,
+    nb_train=8,
+    nb_eval=8,
+    x_elem_shape=(SEQ,),
+    x_dtype="i32",
+    y_elem_shape=(SEQ,),
+    apply_fn=apply,
+    meta={
+        "vocab": VOCAB,
+        "dim": DIM,
+        "seq": SEQ,
+        "paper_model": "GRU [5] LM on WikiText-2, tied embeddings [9,29]",
+    },
+)

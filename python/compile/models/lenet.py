@@ -1,0 +1,52 @@
+"""LeNet-5-style CNN for 28x28x1 10-class images (paper: LeNet on MNIST).
+
+conv(1->8, 5x5, VALID) -> relu -> pool2   28 -> 24 -> 12
+conv(8->16, 5x5, VALID) -> relu -> pool2  12 ->  8 ->  4
+fc(256 -> 64) -> relu -> fc(64 -> 10)
+
+P = 20,522 parameters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.common import ModelDef, ParamSpec, conv2d, maxpool2
+
+SPECS = (
+    ParamSpec("conv1_w", (5, 5, 1, 8)),
+    ParamSpec("conv1_b", (8,), init="zeros"),
+    ParamSpec("conv2_w", (5, 5, 8, 16)),
+    ParamSpec("conv2_b", (16,), init="zeros"),
+    ParamSpec("fc1_w", (256, 64)),
+    ParamSpec("fc1_b", (64,), init="zeros"),
+    ParamSpec("fc2_w", (64, 10)),
+    ParamSpec("fc2_b", (10,), init="zeros"),
+)
+
+
+def apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: f32[B, 28, 28, 1] -> logits f32[B, 10]."""
+    h = jax.nn.relu(conv2d(x, p["conv1_w"], p["conv1_b"]))
+    h = maxpool2(h)
+    h = jax.nn.relu(conv2d(h, p["conv2_w"], p["conv2_b"]))
+    h = maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["fc1_w"] + p["fc1_b"])
+    return h @ p["fc2_w"] + p["fc2_b"]
+
+
+model_def = ModelDef(
+    name="lenet",
+    task="image",
+    specs=SPECS,
+    batch=32,
+    nb_train=8,
+    nb_eval=8,
+    x_elem_shape=(28, 28, 1),
+    x_dtype="f32",
+    y_elem_shape=(),
+    apply_fn=apply,
+    meta={"classes": 10, "paper_model": "LeNet [18] on MNIST"},
+)

@@ -1,0 +1,70 @@
+"""VGG-mini: VGG-family conv net for 32x32x3 10-class images.
+
+The paper runs VGG-16 (~138M params) on CIFAR-10; that is infeasible on this
+single-core CPU testbed (a 205k-param variant already costs ~13 s per
+scanned train chunk — measured, see EXPERIMENTS.md §Perf), so we keep the
+VGG idiom — stacked 3x3 conv-conv-pool blocks with doubling channel widths
+and an FC head — at a width the figure sweeps can afford (DESIGN.md §2
+substitution table). Still ~2.5x LeNet's parameter count and ~8x its
+per-sample FLOPs, preserving the "large conv model" contrast of Fig. 6/7.
+
+block1: 3 -> 8 -> 8, pool  32 -> 16
+block2: 8 ->16 ->16, pool  16 ->  8
+block3: 16->32 ->32, pool   8 ->  4
+fc(512 -> 64) -> relu -> fc(64 -> 10)
+
+P = 51,666 parameters.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.models.common import ModelDef, ParamSpec, conv2d, maxpool2
+
+SPECS = (
+    ParamSpec("b1c1_w", (3, 3, 3, 8)),
+    ParamSpec("b1c1_b", (8,), init="zeros"),
+    ParamSpec("b1c2_w", (3, 3, 8, 8)),
+    ParamSpec("b1c2_b", (8,), init="zeros"),
+    ParamSpec("b2c1_w", (3, 3, 8, 16)),
+    ParamSpec("b2c1_b", (16,), init="zeros"),
+    ParamSpec("b2c2_w", (3, 3, 16, 16)),
+    ParamSpec("b2c2_b", (16,), init="zeros"),
+    ParamSpec("b3c1_w", (3, 3, 16, 32)),
+    ParamSpec("b3c1_b", (32,), init="zeros"),
+    ParamSpec("b3c2_w", (3, 3, 32, 32)),
+    ParamSpec("b3c2_b", (32,), init="zeros"),
+    ParamSpec("fc1_w", (512, 64)),
+    ParamSpec("fc1_b", (64,), init="zeros"),
+    ParamSpec("fc2_w", (64, 10)),
+    ParamSpec("fc2_b", (10,), init="zeros"),
+)
+
+
+def apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: f32[B, 32, 32, 3] -> logits f32[B, 10]."""
+    h = x
+    for blk in ("b1", "b2", "b3"):
+        h = jax.nn.relu(conv2d(h, p[f"{blk}c1_w"], p[f"{blk}c1_b"], padding="SAME"))
+        h = jax.nn.relu(conv2d(h, p[f"{blk}c2_w"], p[f"{blk}c2_b"], padding="SAME"))
+        h = maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["fc1_w"] + p["fc1_b"])
+    return h @ p["fc2_w"] + p["fc2_b"]
+
+
+model_def = ModelDef(
+    name="vggmini",
+    task="image",
+    specs=SPECS,
+    batch=32,
+    nb_train=4,
+    nb_eval=4,
+    x_elem_shape=(32, 32, 3),
+    x_dtype="f32",
+    y_elem_shape=(),
+    apply_fn=apply,
+    meta={"classes": 10, "paper_model": "VGG-16 [31] on CIFAR-10 (scaled, see DESIGN.md)"},
+)

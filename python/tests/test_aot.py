@@ -1,0 +1,55 @@
+"""AOT path tests: HLO text artifacts are well-formed and the manifest is
+consistent with the model definitions. Uses lenet (fastest to lower)."""
+
+import json
+
+import pytest
+
+from compile.aot import hlo_op_histogram, lower_model, to_hlo_text
+from compile.models import REGISTRY
+
+import jax
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="module")
+def lowered_lenet(tmp_path_factory):
+    outdir = tmp_path_factory.mktemp("artifacts")
+    entry = lower_model(REGISTRY["lenet"], outdir, verbose=False)
+    return outdir, entry
+
+
+def test_artifacts_exist_and_are_hlo_text(lowered_lenet):
+    outdir, entry = lowered_lenet
+    assert set(entry["artifacts"]) == {"init", "train", "eval", "mask"}
+    for fname in entry["artifacts"].values():
+        text = (outdir / fname).read_text()
+        assert text.startswith("HloModule"), fname
+        assert "ENTRY" in text
+
+
+def test_manifest_entry_consistent(lowered_lenet):
+    _, entry = lowered_lenet
+    md = REGISTRY["lenet"]
+    assert entry["p"] == md.param_count
+    assert entry["batch"] == md.batch
+    assert sum(l["size"] for l in entry["layers"]) == md.param_count
+    masked = [l for l in entry["layers"] if l["masked"]]
+    assert all(len(l["shape"]) >= 2 for l in masked)
+    assert json.dumps(entry)  # serializable
+
+
+def test_train_artifact_contains_no_python_callback(lowered_lenet):
+    """The request path must be self-contained HLO: no host callbacks."""
+    outdir, entry = lowered_lenet
+    for fname in entry["artifacts"].values():
+        text = (outdir / fname).read_text()
+        assert "custom-call" not in text or "Callback" not in text, fname
+
+
+def test_hlo_op_histogram_smoke():
+    lowered = jax.jit(lambda x, y: (jnp.matmul(x, y) + 2.0,)).lower(
+        jax.ShapeDtypeStruct((2, 2), jnp.float32), jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    )
+    hist = hlo_op_histogram(to_hlo_text(lowered))
+    assert hist.get("dot", 0) >= 1

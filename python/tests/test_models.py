@@ -1,0 +1,152 @@
+"""L2 model tests: shapes, init, gradient flow, learnability, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import REGISTRY, build_fns
+from compile.models.common import pack, unpack
+
+
+def _image_batch(md, seed=0):
+    rng = np.random.default_rng(seed)
+    tmpl = rng.normal(size=(10, *md.x_elem_shape)).astype(np.float32)
+    ys = rng.integers(0, 10, size=(md.nb_train, md.batch)).astype(np.int32)
+    xs = (tmpl[ys] + 0.3 * rng.normal(size=(md.nb_train, md.batch, *md.x_elem_shape))).astype(
+        np.float32
+    )
+    return jnp.asarray(xs), jnp.asarray(ys)
+
+
+def _lm_batch(md, seed=0):
+    rng = np.random.default_rng(seed)
+    seq = md.x_elem_shape[0]
+    toks = rng.integers(0, 50, size=(md.nb_train, md.batch, seq + 1)).astype(np.int32)
+    return jnp.asarray(toks[..., :-1]), jnp.asarray(toks[..., 1:])
+
+
+def _batches(md, seed=0):
+    return _lm_batch(md, seed) if md.task == "lm" else _image_batch(md, seed)
+
+
+@pytest.fixture(scope="module", params=list(REGISTRY))
+def model(request):
+    md = REGISTRY[request.param]
+    return md, build_fns(md)
+
+
+def test_param_count_matches_layer_table(model):
+    md, _ = model
+    table = md.layer_table()
+    assert sum(t["size"] for t in table) == md.param_count
+    # offsets are contiguous and ordered
+    offset = 0
+    for t in table:
+        assert t["offset"] == offset
+        offset += t["size"]
+
+
+def test_init_shape_and_determinism(model):
+    md, fns = model
+    a = jax.jit(fns.init)(jnp.int32(42))
+    b = jax.jit(fns.init)(jnp.int32(42))
+    c = jax.jit(fns.init)(jnp.int32(43))
+    assert a.shape == (md.param_count,)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert np.isfinite(np.asarray(a)).all()
+
+
+def test_biases_init_zero(model):
+    md, fns = model
+    flat = jax.jit(fns.init)(jnp.int32(0))
+    params = unpack(flat, md.specs)
+    for s in md.specs:
+        if s.init == "zeros":
+            np.testing.assert_array_equal(np.asarray(params[s.name]), 0.0)
+
+
+def test_pack_unpack_roundtrip(model):
+    md, fns = model
+    flat = jax.jit(fns.init)(jnp.int32(1))
+    np.testing.assert_array_equal(np.asarray(pack(unpack(flat, md.specs), md.specs)), np.asarray(flat))
+
+
+def test_train_epoch_decreases_loss(model):
+    md, fns = model
+    xs, ys = _batches(md)
+    flat = jax.jit(fns.init)(jnp.int32(0))
+    train = jax.jit(fns.train_epoch)
+    lr = jnp.float32(0.5 if md.task == "lm" else 0.05)
+    _, first = train(flat, xs, ys, lr)
+    for _ in range(4):
+        flat, loss = train(flat, xs, ys, lr)
+    assert float(loss) < float(first)
+    assert np.isfinite(np.asarray(flat)).all()
+
+
+def test_eval_chunk_counts(model):
+    md, fns = model
+    xs, ys = _batches(md)
+    xs, ys = xs[: md.nb_eval], ys[: md.nb_eval]
+    flat = jax.jit(fns.init)(jnp.int32(0))
+    loss_sum, metric_sum, count = jax.jit(fns.eval_chunk)(flat, xs, ys)
+    per_sample = int(np.prod(md.y_elem_shape)) if md.y_elem_shape else 1
+    assert float(count) == md.nb_eval * md.batch * per_sample
+    assert 0.0 <= float(metric_sum) <= float(count)
+    assert float(loss_sum) > 0.0
+
+
+def test_eval_improves_after_training(model):
+    md, fns = model
+    xs, ys = _batches(md)
+    exs, eys = xs[: md.nb_eval], ys[: md.nb_eval]
+    flat = jax.jit(fns.init)(jnp.int32(0))
+    ev = jax.jit(fns.eval_chunk)
+    before = ev(flat, exs, eys)
+    train = jax.jit(fns.train_epoch)
+    lr = jnp.float32(0.5 if md.task == "lm" else 0.05)
+    for _ in range(5):
+        flat, _ = train(flat, xs, ys, lr)
+    after = ev(flat, exs, eys)
+    assert float(after[0]) < float(before[0])  # loss_sum drops
+    assert float(after[1]) >= float(before[1])  # correct count does not regress
+
+
+def test_gradient_matches_finite_difference():
+    """Spot-check jax.grad against central finite differences (lenet)."""
+    md = REGISTRY["lenet"]
+    fns = build_fns(md)
+    xs, ys = _image_batch(md)
+    x, y = xs[0], ys[0]
+    flat = jax.jit(fns.init)(jnp.int32(0))
+    g = jax.jit(jax.grad(fns.batch_loss))(flat, x, y)
+    rng = np.random.default_rng(0)
+    idxs = rng.choice(md.param_count, size=5, replace=False)
+    eps = 1e-3
+    f = jax.jit(fns.batch_loss)
+    for i in idxs:
+        e = np.zeros(md.param_count, np.float32)
+        e[i] = eps
+        num = (float(f(flat + e, x, y)) - float(f(flat - e, x, y))) / (2 * eps)
+        assert abs(num - float(g[i])) < 5e-2 * max(1.0, abs(num))
+
+
+def test_gru_tied_embedding_shares_parameters():
+    """Tied projection: perturbing the embedding row changes that token's
+    logit bias everywhere (no separate output matrix exists)."""
+    md = REGISTRY["gru"]
+    names = {s.name for s in md.specs}
+    assert "embed" in names and "out_b" in names
+    assert not any("out_w" in n for n in names)
+
+
+def test_lm_logits_shape():
+    md = REGISTRY["gru"]
+    fns = build_fns(md)
+    flat = jax.jit(fns.init)(jnp.int32(0))
+    params = unpack(flat, md.specs)
+    x = jnp.zeros((4, md.x_elem_shape[0]), jnp.int32)
+    logits = md.apply_fn(params, x)
+    assert logits.shape == (4, md.x_elem_shape[0], md.meta["vocab"])

@@ -1,0 +1,41 @@
+//! Aggregation hot-path bench: weighted FedAvg over flat parameter vectors
+//! at each model's true P, across cohort sizes (paper Eq. 2 — the L3
+//! operation executed once per round).
+//!
+//! Run: cargo bench --bench aggregation   (FEDMASK_BENCH_MS tunes budget)
+
+use fedmask::fl::aggregate::{uniform_mean, weighted_mean, Contribution};
+use fedmask::sim::rng::Rng;
+use fedmask::util::bench::Bench;
+
+fn vectors(p: usize, k: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..k).map(|_| (0..p).map(|_| rng.next_normal()).collect()).collect()
+}
+
+fn main() {
+    let mut b = Bench::new();
+    println!("== aggregation (weighted FedAvg, Eq. 2) ==");
+    for (model, p) in [("lenet", 20_522usize), ("gru", 154_768), ("vggmini", 51_666)] {
+        for clients in [4usize, 16, 64] {
+            let vecs = vectors(p, clients, 7);
+            let contribs: Vec<Contribution> = vecs
+                .iter()
+                .map(|v| Contribution { params: v, n_samples: 200 })
+                .collect();
+            let m = b.run(&format!("weighted_mean/{model}/m={clients}"), || {
+                weighted_mean(&contribs).unwrap()
+            });
+            let items = (p * clients) as f64;
+            println!("{}", m.report(Some((items, "param"))));
+        }
+    }
+    // rule ablation: uniform vs weighted at one size
+    let vecs = vectors(51_666, 16, 9);
+    let contribs: Vec<Contribution> = vecs
+        .iter()
+        .map(|v| Contribution { params: v, n_samples: 200 })
+        .collect();
+    let m = b.run("uniform_mean/vggmini/m=16", || uniform_mean(&contribs).unwrap());
+    println!("{}", m.report(Some(((51_666 * 16) as f64, "param"))));
+}

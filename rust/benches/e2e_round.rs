@@ -1,0 +1,49 @@
+//! End-to-end round bench: full federated rounds through the real PJRT
+//! artifacts — the paper-table workloads in miniature. One measurement per
+//! (model x policy) cell; this is the number the §Perf optimization loop
+//! tracks.
+//!
+//! Run: cargo bench --bench e2e_round   (needs `make artifacts`)
+
+use std::sync::Arc;
+
+use fedmask::config::experiment::ExperimentConfig;
+use fedmask::fl::masking::MaskPolicy;
+use fedmask::fl::server::Server;
+use fedmask::runtime::manifest::Manifest;
+use fedmask::runtime::pool::EnginePool;
+use fedmask::util::bench::Bench;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(manifest) = Manifest::load(&dir) else {
+        println!("(artifacts missing: run `make artifacts` first)");
+        return;
+    };
+    std::env::set_var(
+        "FEDMASK_BENCH_MS",
+        std::env::var("FEDMASK_BENCH_MS").unwrap_or_else(|_| "3000".into()),
+    );
+    let mut b = Bench::new();
+    for (model, clients, n_train, n_test) in
+        [("lenet", 6usize, 1536usize, 512usize), ("gru", 4, 20_000, 8_000)]
+    {
+        let pool = Arc::new(EnginePool::new(&manifest, &[model], 6).unwrap());
+        for (plabel, policy) in [("dense", MaskPolicy::None), ("selective", MaskPolicy::selective(0.3))] {
+            let mut cfg = ExperimentConfig::defaults(model).unwrap();
+            cfg.label = format!("bench-{model}-{plabel}");
+            cfg.clients = clients;
+            cfg.rounds = 1;
+            cfg.n_train = n_train;
+            cfg.n_test = n_test;
+            cfg.eval_every = 10; // exclude eval from the round number
+            cfg.masking = policy;
+            let m = b.run(&format!("round/{model}/{plabel}"), || {
+                let mut server =
+                    Server::with_pool(cfg.clone(), &manifest, Arc::clone(&pool)).unwrap();
+                server.run_round(1).unwrap()
+            });
+            println!("{}", m.report(Some((clients as f64, "client"))));
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Masking hot-path bench: the exact rust selective mask (per-layer and
+//! global top-k) and random masking at each model's true P and the paper's
+//! gamma sweep — plus, when artifacts exist, the L1 Pallas kernel path
+//! through PJRT for direct comparison (the production mask path).
+//!
+//! Run: cargo bench --bench masking
+
+use fedmask::fl::masking::{random_mask_rust, selective_mask_rust, MaskScope};
+use fedmask::runtime::engine::Engine;
+use fedmask::runtime::manifest::{LayerInfo, Manifest};
+use fedmask::sim::rng::Rng;
+use fedmask::util::bench::Bench;
+
+fn flat_layer(p: usize) -> Vec<LayerInfo> {
+    vec![LayerInfo { name: "w".into(), shape: vec![p], offset: 0, size: p, masked: true }]
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(3);
+    println!("== selective masking (rust exact oracle) ==");
+    for (model, p) in [("lenet", 20_522usize), ("gru", 154_768), ("vggmini", 51_666)] {
+        let wn: Vec<f32> = (0..p).map(|_| rng.next_normal()).collect();
+        let wo: Vec<f32> = (0..p).map(|_| rng.next_normal()).collect();
+        let layers = flat_layer(p);
+        for gamma in [0.1f32, 0.5, 0.9] {
+            let m = b.run(&format!("selective_rust/{model}/g={gamma}"), || {
+                selective_mask_rust(&wn, &wo, gamma, &layers, MaskScope::PerLayer)
+            });
+            println!("{}", m.report(Some((p as f64, "param"))));
+        }
+        let m = b.run(&format!("random_rust/{model}/g=0.5"), || {
+            let mut r = Rng::new(1);
+            random_mask_rust(&wn, 0.5, &layers, &mut r)
+        });
+        println!("{}", m.report(Some((p as f64, "param"))));
+    }
+
+    // Production path: the Pallas threshold-bisection kernel via PJRT.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if let Ok(manifest) = Manifest::load(&dir) {
+        println!("== selective masking (L1 Pallas kernel via PJRT) ==");
+        for model in ["lenet", "gru", "vggmini"] {
+            let engine = Engine::load(&manifest, &[model]).unwrap();
+            let p = engine.model(model).unwrap().p;
+            let wn: Vec<f32> = (0..p).map(|_| rng.next_normal()).collect();
+            let wo: Vec<f32> = (0..p).map(|_| rng.next_normal()).collect();
+            for gamma in [0.1f32, 0.5] {
+                let m = b.run(&format!("selective_hlo/{model}/g={gamma}"), || {
+                    engine.mask(model, &wn, &wo, gamma).unwrap()
+                });
+                println!("{}", m.report(Some((p as f64, "param"))));
+            }
+        }
+    } else {
+        println!("(artifacts missing: skipping Pallas kernel bench; run `make artifacts`)");
+    }
+}

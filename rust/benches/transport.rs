@@ -1,0 +1,39 @@
+//! Transport bench: codec encode/decode at model sizes across densities
+//! (the wire work per upload), plus 8-bit quantization. Establishes that
+//! transport never dominates a round (DESIGN.md §6 L3 target).
+//!
+//! Run: cargo bench --bench transport
+
+use fedmask::sim::rng::Rng;
+use fedmask::transport::codec::{decode_update, encode_update, Encoding};
+use fedmask::transport::quantize::{dequantize, quantize};
+use fedmask::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(11);
+    println!("== wire codec ==");
+    for (model, p) in [("lenet", 20_522usize), ("vggmini", 51_666)] {
+        for density in [1.0f32, 0.5, 0.1] {
+            let params: Vec<f32> = (0..p)
+                .map(|_| if rng.next_f32() < density { rng.next_normal() } else { 0.0 })
+                .collect();
+            let m = b.run(&format!("encode/{model}/density={density}"), || {
+                encode_update(1, 1, 100, &params, Encoding::Auto)
+            });
+            println!("{}", m.report(Some((p as f64, "param"))));
+            let encoded = encode_update(1, 1, 100, &params, Encoding::Auto);
+            let m = b.run(&format!("decode/{model}/density={density}"), || {
+                decode_update(&encoded).unwrap()
+            });
+            println!("{}", m.report(Some((p as f64, "param"))));
+        }
+    }
+    println!("== 8-bit quantization (compression extension) ==");
+    let params: Vec<f32> = (0..51_666).map(|_| rng.next_normal()).collect();
+    let m = b.run("quantize/vggmini", || quantize(&params).unwrap());
+    println!("{}", m.report(Some((51_666f64, "param"))));
+    let q = quantize(&params).unwrap();
+    let m = b.run("dequantize/vggmini", || dequantize(&q));
+    println!("{}", m.report(Some((51_666f64, "param"))));
+}

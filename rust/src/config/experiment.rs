@@ -1,0 +1,441 @@
+//! Experiment configuration: one struct describing a full federated run.
+//!
+//! Configs serialize to/from JSON (`fedmask run --config exp.json`), carry
+//! paper-aligned defaults per model, and validate eagerly so figure sweeps
+//! fail before any engine compiles. Every stochastic element of a run
+//! derives from `seed`.
+
+use std::path::Path;
+
+use crate::data::loader::DatasetSpec;
+use crate::data::partition::Scheme;
+use crate::fl::masking::{MaskPolicy, MaskTarget};
+use crate::fl::sampling::SamplingSchedule;
+use crate::transport::codec::Encoding;
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// Which network model the virtual clock uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetworkKind {
+    /// Instantaneous transfers (the paper's setting).
+    Ideal,
+    /// The default mobile-fleet bandwidth/latency profile.
+    Simulated,
+}
+
+/// Server-side aggregation rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Aggregator {
+    /// Sample-weighted FedAvg (paper Eq. 2; default).
+    FedAvg,
+    /// Attentive aggregation (Ji et al. [11]) with softmax temperature.
+    Attentive { temp: f64 },
+}
+
+/// Full description of one federated experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Label used in CSV output and logs.
+    pub label: String,
+    /// Model key: `lenet` | `vggmini` | `gru`.
+    pub model: String,
+    /// Registered client count M.
+    pub clients: usize,
+    /// Communication rounds R.
+    pub rounds: usize,
+    /// Local epochs E per selected client per round.
+    pub local_epochs: usize,
+    /// Local SGD learning rate eta.
+    pub lr: f32,
+    /// Client sampling schedule (static / dynamic).
+    pub sampling: SamplingSchedule,
+    /// Floor on selected clients (paper: 2 for dynamic schedules).
+    pub min_clients: usize,
+    /// Upload masking policy.
+    pub masking: MaskPolicy,
+    /// Mask the weights (paper-literal) or the delta (ablation).
+    pub mask_target: MaskTarget,
+    /// Data partitioning scheme.
+    pub partition: Scheme,
+    /// Synthetic dataset sizing (ignored if real data present).
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Evaluate every k rounds (1 = every round).
+    pub eval_every: usize,
+    /// Cap on eval chunks per evaluation (0 = full test set).
+    pub eval_max_chunks: usize,
+    /// Client availability (1.0 = paper's always-on setting).
+    pub ack_prob: f64,
+    pub straggler_prob: f64,
+    /// Network model for virtual-time accounting.
+    pub network: NetworkKind,
+    /// Wire encoding for uploads.
+    pub encoding: Encoding,
+    /// Server aggregation rule.
+    pub aggregator: Aggregator,
+    /// Engine pool width.
+    pub workers: usize,
+}
+
+impl ExperimentConfig {
+    /// Paper-aligned defaults for a model (lr / epochs per §5).
+    pub fn defaults(model: &str) -> Result<ExperimentConfig> {
+        let (lr, n_train, n_test) = match model {
+            "lenet" => (0.05f32, 4_000, 1_024),
+            "vggmini" => (0.05f32, 1_200, 512),
+            "gru" => (0.5f32, 120_000, 12_000),
+            other => return Err(Error::invalid(format!("unknown model '{other}'"))),
+        };
+        Ok(ExperimentConfig {
+            label: format!("{model}-default"),
+            model: model.to_string(),
+            clients: 20,
+            rounds: 10,
+            local_epochs: 1,
+            lr,
+            sampling: SamplingSchedule::Static { c0: 1.0 },
+            min_clients: 1,
+            masking: MaskPolicy::None,
+            // Delta semantics by default: dropped positions keep W_t
+            // server-side. Alg. 2/4 read literally zero the weights, but
+            // that contradicts the paper's own Fig. 4/6 results (selective
+            // masking stays usable at gamma = 0.1, impossible when 90% of
+            // weights are zeroed); see DESIGN.md §4. `mask_target =
+            // "weights"` selects the literal reading as an ablation.
+            mask_target: MaskTarget::Delta,
+            partition: Scheme::Iid,
+            n_train,
+            n_test,
+            seed: 42,
+            eval_every: 1,
+            eval_max_chunks: 4,
+            ack_prob: 1.0,
+            straggler_prob: 0.0,
+            network: NetworkKind::Ideal,
+            encoding: Encoding::Auto,
+            aggregator: Aggregator::FedAvg,
+            workers: default_workers(),
+        })
+    }
+
+    /// Dataset spec implied by this config.
+    pub fn dataset_spec(&self) -> Result<DatasetSpec> {
+        let mut spec = DatasetSpec::for_model(&self.model, self.seed)?;
+        spec.n_train = self.n_train;
+        spec.n_test = self.n_test;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.clients < 2 {
+            return Err(Error::invalid("need at least 2 clients"));
+        }
+        if self.rounds == 0 || self.local_epochs == 0 {
+            return Err(Error::invalid("rounds and local_epochs must be >= 1"));
+        }
+        if !(self.lr > 0.0 && self.lr.is_finite()) {
+            return Err(Error::invalid(format!("lr {} must be positive", self.lr)));
+        }
+        if self.min_clients == 0 || self.min_clients > self.clients {
+            return Err(Error::invalid(format!(
+                "min_clients {} out of range [1, {}]",
+                self.min_clients, self.clients
+            )));
+        }
+        if self.eval_every == 0 {
+            return Err(Error::invalid("eval_every must be >= 1"));
+        }
+        if !(0.0..=1.0).contains(&self.ack_prob) || !(0.0..=1.0).contains(&self.straggler_prob) {
+            return Err(Error::invalid("probabilities must be in [0, 1]"));
+        }
+        if self.workers == 0 {
+            return Err(Error::invalid("workers must be >= 1"));
+        }
+        self.sampling.validate()?;
+        self.masking.validate()?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // JSON round trip
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let (samp_kind, samp_param) = match &self.sampling {
+            SamplingSchedule::Static { .. } => ("static", 0.0),
+            SamplingSchedule::DynamicExp { beta, .. } => ("dynamic-exp", *beta),
+            SamplingSchedule::DynamicLinear { slope, .. } => ("dynamic-linear", *slope),
+            SamplingSchedule::DynamicStep { factor, .. } => ("dynamic-step", *factor),
+        };
+        let (mask_kind, gamma) = match &self.masking {
+            MaskPolicy::None => ("none", 1.0f32),
+            MaskPolicy::Random { gamma } => ("random", *gamma),
+            MaskPolicy::Selective { gamma, engine, scope } => (
+                match (engine, scope) {
+                    (crate::fl::masking::MaskEngine::Hlo, crate::fl::masking::MaskScope::PerLayer) => "selective",
+                    (crate::fl::masking::MaskEngine::Rust, crate::fl::masking::MaskScope::PerLayer) => "selective-rust",
+                    (_, crate::fl::masking::MaskScope::Global) => "selective-global",
+                },
+                *gamma,
+            ),
+        };
+        Json::obj(vec![
+            ("label", Json::str(&self.label)),
+            ("model", Json::str(&self.model)),
+            ("clients", Json::num(self.clients as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("local_epochs", Json::num(self.local_epochs as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("sampling", Json::str(samp_kind)),
+            ("sampling_c0", Json::num(self.sampling.c0())),
+            ("sampling_param", Json::num(samp_param)),
+            ("min_clients", Json::num(self.min_clients as f64)),
+            ("masking", Json::str(mask_kind)),
+            ("gamma", Json::num(gamma as f64)),
+            (
+                "mask_target",
+                Json::str(match self.mask_target {
+                    MaskTarget::Weights => "weights",
+                    MaskTarget::Delta => "delta",
+                }),
+            ),
+            (
+                "partition",
+                Json::str(match self.partition {
+                    Scheme::Iid => "iid".to_string(),
+                    Scheme::NonIidShards { shards_per_client } => {
+                        format!("noniid-{shards_per_client}")
+                    }
+                }),
+            ),
+            ("n_train", Json::num(self.n_train as f64)),
+            ("n_test", Json::num(self.n_test as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("eval_max_chunks", Json::num(self.eval_max_chunks as f64)),
+            ("ack_prob", Json::num(self.ack_prob)),
+            ("straggler_prob", Json::num(self.straggler_prob)),
+            (
+                "network",
+                Json::str(match self.network {
+                    NetworkKind::Ideal => "ideal",
+                    NetworkKind::Simulated => "simulated",
+                }),
+            ),
+            (
+                "encoding",
+                Json::str(match self.encoding {
+                    Encoding::Auto => "auto",
+                    Encoding::Dense => "dense",
+                    Encoding::Sparse => "sparse",
+                    Encoding::AutoQ8 => "auto-q8",
+                }),
+            ),
+            (
+                "aggregator",
+                Json::str(match self.aggregator {
+                    Aggregator::FedAvg => "fedavg".to_string(),
+                    Aggregator::Attentive { temp } => format!("attentive-{temp}"),
+                }),
+            ),
+            ("workers", Json::num(self.workers as f64)),
+        ])
+    }
+
+    pub fn from_json(root: &Json) -> Result<ExperimentConfig> {
+        let model = root.get("model")?.as_str()?.to_string();
+        let mut cfg = ExperimentConfig::defaults(&model)?;
+        let get_usize = |k: &str, d: usize| -> Result<usize> {
+            match root.opt(k) {
+                Some(v) => v.as_usize(),
+                None => Ok(d),
+            }
+        };
+        let get_f64 = |k: &str, d: f64| -> Result<f64> {
+            match root.opt(k) {
+                Some(v) => v.as_f64(),
+                None => Ok(d),
+            }
+        };
+        if let Some(v) = root.opt("label") {
+            cfg.label = v.as_str()?.to_string();
+        }
+        cfg.clients = get_usize("clients", cfg.clients)?;
+        cfg.rounds = get_usize("rounds", cfg.rounds)?;
+        cfg.local_epochs = get_usize("local_epochs", cfg.local_epochs)?;
+        cfg.lr = get_f64("lr", cfg.lr as f64)? as f32;
+        let samp_kind = root
+            .opt("sampling")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "static".into());
+        let c0 = get_f64("sampling_c0", 1.0)?;
+        let sp = get_f64("sampling_param", 0.0)?;
+        cfg.sampling = SamplingSchedule::from_config(&samp_kind, c0, sp)?;
+        cfg.min_clients = get_usize("min_clients", cfg.sampling.default_min_clients())?;
+        let mask_kind = root
+            .opt("masking")
+            .map(|v| v.as_str().map(str::to_string))
+            .transpose()?
+            .unwrap_or_else(|| "none".into());
+        let gamma = get_f64("gamma", 1.0)? as f32;
+        cfg.masking = MaskPolicy::from_config(&mask_kind, gamma)?;
+        cfg.mask_target = match root.opt("mask_target").map(|v| v.as_str()).transpose()? {
+            None | Some("delta") => MaskTarget::Delta,
+            Some("weights") => MaskTarget::Weights,
+            Some(other) => return Err(Error::invalid(format!("bad mask_target '{other}'"))),
+        };
+        cfg.partition = match root.opt("partition").map(|v| v.as_str()).transpose()? {
+            None | Some("iid") => Scheme::Iid,
+            Some(s) if s.starts_with("noniid-") => Scheme::NonIidShards {
+                shards_per_client: s[7..]
+                    .parse()
+                    .map_err(|_| Error::invalid(format!("bad partition '{s}'")))?,
+            },
+            Some(other) => return Err(Error::invalid(format!("bad partition '{other}'"))),
+        };
+        cfg.n_train = get_usize("n_train", cfg.n_train)?;
+        cfg.n_test = get_usize("n_test", cfg.n_test)?;
+        cfg.seed = get_f64("seed", cfg.seed as f64)? as u64;
+        cfg.eval_every = get_usize("eval_every", cfg.eval_every)?;
+        cfg.eval_max_chunks = get_usize("eval_max_chunks", cfg.eval_max_chunks)?;
+        cfg.ack_prob = get_f64("ack_prob", cfg.ack_prob)?;
+        cfg.straggler_prob = get_f64("straggler_prob", cfg.straggler_prob)?;
+        cfg.network = match root.opt("network").map(|v| v.as_str()).transpose()? {
+            None | Some("ideal") => NetworkKind::Ideal,
+            Some("simulated") => NetworkKind::Simulated,
+            Some(other) => return Err(Error::invalid(format!("bad network '{other}'"))),
+        };
+        cfg.encoding = match root.opt("encoding").map(|v| v.as_str()).transpose()? {
+            None | Some("auto") => Encoding::Auto,
+            Some("dense") => Encoding::Dense,
+            Some("sparse") => Encoding::Sparse,
+            Some("auto-q8") => Encoding::AutoQ8,
+            Some(other) => return Err(Error::invalid(format!("bad encoding '{other}'"))),
+        };
+        cfg.aggregator = match root.opt("aggregator").map(|v| v.as_str()).transpose()? {
+            None | Some("fedavg") => Aggregator::FedAvg,
+            Some(s) if s == "attentive" => Aggregator::Attentive { temp: 1.0 },
+            Some(s) if s.starts_with("attentive-") => Aggregator::Attentive {
+                temp: s[10..]
+                    .parse()
+                    .map_err(|_| Error::invalid(format!("bad aggregator '{s}'")))?,
+            },
+            Some(other) => return Err(Error::invalid(format!("bad aggregator '{other}'"))),
+        };
+        cfg.workers = get_usize("workers", cfg.workers)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+}
+
+/// Default pool width: physical-ish core count, capped — engine compilation
+/// is paid per worker, so more isn't always better for short sweeps.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        for m in ["lenet", "vggmini", "gru"] {
+            ExperimentConfig::defaults(m).unwrap().validate().unwrap();
+        }
+        assert!(ExperimentConfig::defaults("resnet").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.label = "fig3-dynamic".into();
+        cfg.sampling = SamplingSchedule::DynamicExp { c0: 0.7, beta: 0.1 };
+        cfg.min_clients = 2;
+        cfg.masking = MaskPolicy::selective(0.3);
+        cfg.mask_target = MaskTarget::Delta;
+        cfg.partition = Scheme::NonIidShards { shards_per_client: 2 };
+        cfg.rounds = 50;
+        cfg.network = NetworkKind::Simulated;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.label, cfg.label);
+        assert_eq!(back.sampling, cfg.sampling);
+        assert_eq!(back.masking, cfg.masking);
+        assert_eq!(back.mask_target, cfg.mask_target);
+        assert_eq!(back.partition, cfg.partition);
+        assert_eq!(back.rounds, 50);
+        assert_eq!(back.network, NetworkKind::Simulated);
+    }
+
+    #[test]
+    fn validation_catches_bad_fields() {
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.clients = 1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.lr = -0.1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.min_clients = 100;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_applies_defaults_for_missing_keys() {
+        let root = json::parse(r#"{"model": "gru"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&root).unwrap();
+        assert_eq!(cfg.model, "gru");
+        assert_eq!(cfg.lr, 0.5);
+        assert_eq!(cfg.masking, MaskPolicy::None);
+    }
+
+    #[test]
+    fn min_clients_defaults_to_two_for_dynamic() {
+        let root = json::parse(
+            r#"{"model": "lenet", "sampling": "dynamic-exp", "sampling_c0": 1.0, "sampling_param": 0.1}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&root).unwrap();
+        assert_eq!(cfg.min_clients, 2, "paper §4.1 floor");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fedmask_cfg_{}", std::process::id()));
+        let path = dir.join("exp.json");
+        let cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.save(&path).unwrap();
+        let back = ExperimentConfig::load(&path).unwrap();
+        assert_eq!(back.model, "lenet");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dataset_spec_respects_overrides() {
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.n_train = 123;
+        let spec = cfg.dataset_spec().unwrap();
+        assert_eq!(spec.n_train, 123);
+        assert_eq!(spec.name, "mnist");
+    }
+}

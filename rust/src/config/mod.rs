@@ -1,0 +1,5 @@
+//! Experiment configuration system.
+
+pub mod experiment;
+
+pub use experiment::{ExperimentConfig, NetworkKind};

@@ -1,0 +1,291 @@
+//! Chunk assembly: client shards -> the fixed-geometry [`Batches`] the
+//! train/eval artifacts expect.
+//!
+//! The train artifact consumes `nb_train * batch` samples per call (one
+//! scanned local epoch); a client whose shard is smaller wraps around its
+//! own shard (standard epoch semantics with replacement at the tail), and a
+//! larger shard yields multiple chunks per epoch. Shard order is reshuffled
+//! per (client, round, epoch) from the experiment seed.
+
+use std::ops::Range;
+
+use crate::data::{ImageData, TextData};
+use crate::runtime::manifest::ModelManifest;
+use crate::runtime::tensor::{Batches, XData};
+use crate::sim::rng::Rng;
+use crate::util::error::Result;
+
+/// Build one train-epoch's worth of chunks from an image shard.
+pub fn image_train_chunks(
+    data: &ImageData,
+    shard: &[usize],
+    mm: &ModelManifest,
+    rng: &mut Rng,
+) -> Result<Vec<Batches>> {
+    assert!(!shard.is_empty(), "empty client shard");
+    let chunk_samples = mm.train_chunk_samples();
+    let n_chunks = (shard.len() + chunk_samples - 1) / chunk_samples;
+    let mut order: Vec<usize> = shard.to_vec();
+    rng.shuffle(&mut order);
+    let elem = data.elem_len();
+    let mut chunks = Vec::with_capacity(n_chunks);
+    for c in 0..n_chunks {
+        let mut xs = Vec::with_capacity(chunk_samples * elem);
+        let mut ys = Vec::with_capacity(chunk_samples);
+        for s in 0..chunk_samples {
+            // wrap within the shard for the final partial chunk
+            let idx = order[(c * chunk_samples + s) % order.len()];
+            xs.extend_from_slice(&data.x[idx * elem..(idx + 1) * elem]);
+            ys.push(data.y[idx]);
+        }
+        chunks.push(Batches::new(
+            mm.nb_train,
+            mm.batch,
+            mm.x_elem_shape.clone(),
+            mm.y_elem_shape.clone(),
+            XData::F32(xs),
+            ys,
+        )?);
+    }
+    Ok(chunks)
+}
+
+/// Build eval chunks covering (a prefix of) the test set; `max_chunks`
+/// bounds eval cost for the figure sweeps (0 = cover everything).
+pub fn image_eval_chunks(
+    data: &ImageData,
+    mm: &ModelManifest,
+    max_chunks: usize,
+) -> Result<Vec<Batches>> {
+    let chunk_samples = mm.eval_chunk_samples();
+    let mut n_chunks = data.len() / chunk_samples;
+    if max_chunks > 0 {
+        n_chunks = n_chunks.min(max_chunks);
+    }
+    assert!(n_chunks > 0, "test set smaller than one eval chunk");
+    let elem = data.elem_len();
+    let mut chunks = Vec::with_capacity(n_chunks);
+    for c in 0..n_chunks {
+        let start = c * chunk_samples;
+        let xs = data.x[start * elem..(start + chunk_samples) * elem].to_vec();
+        let ys = data.y[start..start + chunk_samples].to_vec();
+        chunks.push(Batches::new(
+            mm.nb_eval,
+            mm.batch,
+            mm.x_elem_shape.clone(),
+            mm.y_elem_shape.clone(),
+            XData::F32(xs),
+            ys,
+        )?);
+    }
+    Ok(chunks)
+}
+
+/// Sequence windows for LM training: non-overlapping `seq+1` windows from
+/// the client's contiguous token range, shuffled; x = w[..seq], y = w[1..].
+pub fn text_train_chunks(
+    data: &TextData,
+    range: &Range<usize>,
+    mm: &ModelManifest,
+    rng: &mut Rng,
+) -> Result<Vec<Batches>> {
+    let seq = mm.x_elem_shape[0];
+    let window = seq + 1;
+    let tokens = &data.tokens[range.clone()];
+    let n_windows = tokens.len() / window;
+    assert!(n_windows > 0, "client token range smaller than one window");
+    let mut order: Vec<usize> = (0..n_windows).collect();
+    rng.shuffle(&mut order);
+
+    let chunk_samples = mm.train_chunk_samples();
+    let n_chunks = (n_windows + chunk_samples - 1) / chunk_samples;
+    let mut chunks = Vec::with_capacity(n_chunks);
+    for c in 0..n_chunks {
+        let mut xs = Vec::with_capacity(chunk_samples * seq);
+        let mut ys = Vec::with_capacity(chunk_samples * seq);
+        for s in 0..chunk_samples {
+            let w = order[(c * chunk_samples + s) % order.len()];
+            let at = w * window;
+            xs.extend_from_slice(&tokens[at..at + seq]);
+            ys.extend_from_slice(&tokens[at + 1..at + 1 + seq]);
+        }
+        chunks.push(Batches::new(
+            mm.nb_train,
+            mm.batch,
+            mm.x_elem_shape.clone(),
+            mm.y_elem_shape.clone(),
+            XData::I32(xs),
+            ys,
+        )?);
+    }
+    Ok(chunks)
+}
+
+/// Eval windows over the test stream (sequential, non-overlapping).
+pub fn text_eval_chunks(data: &TextData, mm: &ModelManifest, max_chunks: usize) -> Result<Vec<Batches>> {
+    let seq = mm.x_elem_shape[0];
+    let window = seq + 1;
+    let chunk_samples = mm.eval_chunk_samples();
+    let n_windows = data.tokens.len() / window;
+    let mut n_chunks = n_windows / chunk_samples;
+    if max_chunks > 0 {
+        n_chunks = n_chunks.min(max_chunks);
+    }
+    assert!(n_chunks > 0, "test stream smaller than one eval chunk");
+    let mut chunks = Vec::with_capacity(n_chunks);
+    for c in 0..n_chunks {
+        let mut xs = Vec::with_capacity(chunk_samples * seq);
+        let mut ys = Vec::with_capacity(chunk_samples * seq);
+        for s in 0..chunk_samples {
+            let at = (c * chunk_samples + s) * window;
+            xs.extend_from_slice(&data.tokens[at..at + seq]);
+            ys.extend_from_slice(&data.tokens[at + 1..at + 1 + seq]);
+        }
+        chunks.push(Batches::new(
+            mm.nb_eval,
+            mm.batch,
+            mm.x_elem_shape.clone(),
+            mm.y_elem_shape.clone(),
+            XData::I32(xs),
+            ys,
+        )?);
+    }
+    Ok(chunks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ModelManifest;
+    use std::collections::BTreeMap;
+
+    fn image_mm() -> ModelManifest {
+        ModelManifest {
+            name: "toy".into(),
+            p: 4,
+            task: "image".into(),
+            batch: 4,
+            nb_train: 2,
+            nb_eval: 2,
+            x_elem_shape: vec![3],
+            x_dtype: "f32".into(),
+            y_elem_shape: vec![],
+            layers: vec![],
+            artifacts: BTreeMap::new(),
+            meta: BTreeMap::new(),
+        }
+    }
+
+    fn lm_mm() -> ModelManifest {
+        ModelManifest {
+            name: "toylm".into(),
+            p: 4,
+            task: "lm".into(),
+            batch: 2,
+            nb_train: 2,
+            nb_eval: 2,
+            x_elem_shape: vec![4],
+            x_dtype: "i32".into(),
+            y_elem_shape: vec![4],
+            layers: vec![],
+            artifacts: BTreeMap::new(),
+            meta: BTreeMap::new(),
+        }
+    }
+
+    fn image_data(n: usize) -> ImageData {
+        ImageData {
+            x: (0..n * 3).map(|i| i as f32).collect(),
+            y: (0..n).map(|i| (i % 10) as i32).collect(),
+            elem_shape: vec![3],
+            classes: 10,
+        }
+    }
+
+    #[test]
+    fn image_chunks_cover_shard_with_wrap() {
+        let data = image_data(50);
+        let shard: Vec<usize> = (10..23).collect(); // 13 samples, chunk=8
+        let mut rng = Rng::new(0);
+        let chunks = image_train_chunks(&data, &shard, &image_mm(), &mut rng).unwrap();
+        assert_eq!(chunks.len(), 2); // ceil(13/8)
+        for ch in &chunks {
+            assert_eq!(ch.samples(), 8);
+            // labels must come from the shard
+            for &y in &ch.ys {
+                let idx = y as usize; // label == idx % 10; just check range
+                assert!(idx < 10);
+            }
+        }
+        // all shard samples appear at least once across the epoch
+        let mut seen = std::collections::HashSet::new();
+        for ch in &chunks {
+            let XData::F32(xs) = &ch.xs else { panic!() };
+            for s in 0..ch.samples() {
+                // reconstruct the sample index from its first feature value
+                let v = xs[s * 3] as usize / 3;
+                seen.insert(v);
+            }
+        }
+        for i in &shard {
+            assert!(seen.contains(i), "sample {i} missing from epoch");
+        }
+    }
+
+    #[test]
+    fn eval_chunks_sequential_cap() {
+        let data = image_data(40);
+        let chunks = image_eval_chunks(&data, &image_mm(), 3).unwrap();
+        assert_eq!(chunks.len(), 3);
+        let all = image_eval_chunks(&data, &image_mm(), 0).unwrap();
+        assert_eq!(all.len(), 5); // 40 / 8
+        // first chunk is the first 8 samples in order
+        assert_eq!(all[0].ys, (0..8).map(|i| (i % 10) as i32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn text_chunks_shift_labels_by_one() {
+        let data = TextData {
+            tokens: (0..200).map(|i| (i % 50) as i32).collect(),
+            vocab: 50,
+        };
+        let mut rng = Rng::new(1);
+        let chunks = text_train_chunks(&data, &(0..200), &lm_mm(), &mut rng).unwrap();
+        for ch in &chunks {
+            let XData::I32(xs) = &ch.xs else { panic!() };
+            for s in 0..ch.samples() {
+                for t in 0..3 {
+                    // y[t] == x[t+1] within a window
+                    assert_eq!(ch.ys[s * 4 + t], xs[s * 4 + t + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn text_eval_deterministic_and_ordered() {
+        let data = TextData {
+            tokens: (0..500).map(|i| (i % 50) as i32).collect(),
+            vocab: 50,
+        };
+        let a = text_eval_chunks(&data, &lm_mm(), 2).unwrap();
+        let b = text_eval_chunks(&data, &lm_mm(), 2).unwrap();
+        assert_eq!(a, b);
+        let XData::I32(xs) = &a[0].xs else { panic!() };
+        assert_eq!(&xs[..4], &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn reshuffle_changes_order_not_content() {
+        let data = image_data(64);
+        let shard: Vec<usize> = (0..16).collect();
+        let a = image_train_chunks(&data, &shard, &image_mm(), &mut Rng::new(1)).unwrap();
+        let b = image_train_chunks(&data, &shard, &image_mm(), &mut Rng::new(2)).unwrap();
+        assert_ne!(a[0].ys, b[0].ys, "different seeds should reorder");
+        let mut ya: Vec<i32> = a.iter().flat_map(|c| c.ys.clone()).collect();
+        let mut yb: Vec<i32> = b.iter().flat_map(|c| c.ys.clone()).collect();
+        ya.sort_unstable();
+        yb.sort_unstable();
+        assert_eq!(ya, yb, "same multiset of labels");
+    }
+}

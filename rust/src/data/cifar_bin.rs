@@ -1,0 +1,111 @@
+//! CIFAR-10 binary format parser (`data_batch_{1..5}.bin`, `test_batch.bin`).
+//!
+//! Each record is 3073 bytes: 1 label byte + 3072 pixel bytes in CHW order
+//! (1024 R, 1024 G, 1024 B). We convert to the HWC layout the VGG artifact
+//! expects and standardize with the canonical per-channel CIFAR-10 stats.
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::data::ImageData;
+use crate::util::error::{Error, Result};
+
+pub const RECORD_BYTES: usize = 3073;
+const SIDE: usize = 32;
+const PLANE: usize = SIDE * SIDE;
+
+const MEAN: [f32; 3] = [0.4914, 0.4822, 0.4465];
+const STD: [f32; 3] = [0.2470, 0.2435, 0.2616];
+
+/// Parse one binary batch buffer into (labels, HWC standardized pixels).
+pub fn parse_batch(data: &[u8]) -> Result<(Vec<i32>, Vec<f32>)> {
+    if data.is_empty() || data.len() % RECORD_BYTES != 0 {
+        return Err(Error::parse(format!(
+            "cifar: payload {} not a multiple of {RECORD_BYTES}",
+            data.len()
+        )));
+    }
+    let n = data.len() / RECORD_BYTES;
+    let mut labels = Vec::with_capacity(n);
+    let mut pixels = Vec::with_capacity(n * 3 * PLANE);
+    for rec in data.chunks_exact(RECORD_BYTES) {
+        let label = rec[0];
+        if label > 9 {
+            return Err(Error::parse(format!("cifar: label {label} > 9")));
+        }
+        labels.push(label as i32);
+        let body = &rec[1..];
+        // CHW -> HWC with standardization
+        for pix in 0..PLANE {
+            for ch in 0..3 {
+                let v = body[ch * PLANE + pix] as f32 / 255.0;
+                pixels.push((v - MEAN[ch]) / STD[ch]);
+            }
+        }
+    }
+    Ok((labels, pixels))
+}
+
+/// Load several batch files into one [`ImageData`].
+pub fn load_batches(paths: &[&Path]) -> Result<ImageData> {
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for path in paths {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        let (labels, pixels) = parse_batch(&bytes)?;
+        y.extend(labels);
+        x.extend(pixels);
+    }
+    let data = ImageData {
+        x,
+        y,
+        elem_shape: vec![SIDE, SIDE, 3],
+        classes: 10,
+    };
+    data.validate()?;
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_record(label: u8, fill: u8) -> Vec<u8> {
+        let mut rec = vec![label];
+        rec.extend(std::iter::repeat(fill).take(3072));
+        rec
+    }
+
+    #[test]
+    fn parses_records() {
+        let mut buf = fake_record(3, 128);
+        buf.extend(fake_record(7, 0));
+        let (labels, pixels) = parse_batch(&buf).unwrap();
+        assert_eq!(labels, vec![3, 7]);
+        assert_eq!(pixels.len(), 2 * 3072);
+        // second image all-zero pixels standardize to -mean/std per channel
+        let r = pixels[3072];
+        assert!((r - (0.0 - MEAN[0]) / STD[0]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn chw_to_hwc_layout() {
+        // distinct per-channel fills: R=255, G=0, B=0
+        let mut rec = vec![0u8];
+        rec.extend(std::iter::repeat(255u8).take(PLANE)); // R plane
+        rec.extend(std::iter::repeat(0u8).take(2 * PLANE)); // G,B planes
+        let (_, pixels) = parse_batch(&rec).unwrap();
+        // HWC: first three values are (R,G,B) of pixel 0
+        assert!(pixels[0] > 0.0, "R should be high");
+        assert!(pixels[1] < 0.0, "G should be low");
+        assert!(pixels[2] < 0.0, "B should be low");
+    }
+
+    #[test]
+    fn rejects_bad_sizes_and_labels() {
+        assert!(parse_batch(&[0u8; 100]).is_err());
+        let rec = fake_record(12, 0);
+        assert!(parse_batch(&rec).is_err());
+    }
+}

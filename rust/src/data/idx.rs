@@ -1,0 +1,146 @@
+//! MNIST IDX format parser (the real `train-images-idx3-ubyte` files).
+//!
+//! Format: big-endian magic (0x00000803 images / 0x00000801 labels), dim
+//! sizes, then raw u8 payload. Pixels are scaled to [0, 1] and standardized
+//! with the canonical MNIST mean/std so real data plugs into the same
+//! LeNet artifact as the synthetic generator.
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::data::ImageData;
+use crate::util::error::{Error, Result};
+
+const MAGIC_IMAGES: u32 = 0x0000_0803;
+const MAGIC_LABELS: u32 = 0x0000_0801;
+
+fn read_u32_be(data: &[u8], at: usize) -> Result<u32> {
+    data.get(at..at + 4)
+        .map(|b| u32::from_be_bytes([b[0], b[1], b[2], b[3]]))
+        .ok_or_else(|| Error::parse("idx: truncated header"))
+}
+
+/// Parse an IDX3 image file into (pixels u8, rows, cols).
+pub fn parse_images(data: &[u8]) -> Result<(Vec<u8>, usize, usize)> {
+    if read_u32_be(data, 0)? != MAGIC_IMAGES {
+        return Err(Error::parse("idx: bad image magic"));
+    }
+    let n = read_u32_be(data, 4)? as usize;
+    let rows = read_u32_be(data, 8)? as usize;
+    let cols = read_u32_be(data, 12)? as usize;
+    let want = 16 + n * rows * cols;
+    if data.len() != want {
+        return Err(Error::parse(format!(
+            "idx: image payload {} != expected {want}",
+            data.len()
+        )));
+    }
+    Ok((data[16..].to_vec(), rows, cols))
+}
+
+/// Parse an IDX1 label file.
+pub fn parse_labels(data: &[u8]) -> Result<Vec<u8>> {
+    if read_u32_be(data, 0)? != MAGIC_LABELS {
+        return Err(Error::parse("idx: bad label magic"));
+    }
+    let n = read_u32_be(data, 4)? as usize;
+    if data.len() != 8 + n {
+        return Err(Error::parse("idx: label payload size mismatch"));
+    }
+    Ok(data[8..].to_vec())
+}
+
+/// Load an (images, labels) IDX pair into [`ImageData`], standardized.
+pub fn load_pair(images_path: &Path, labels_path: &Path) -> Result<ImageData> {
+    let mut img_bytes = Vec::new();
+    std::fs::File::open(images_path)?.read_to_end(&mut img_bytes)?;
+    let mut lbl_bytes = Vec::new();
+    std::fs::File::open(labels_path)?.read_to_end(&mut lbl_bytes)?;
+
+    let (pixels, rows, cols) = parse_images(&img_bytes)?;
+    let labels = parse_labels(&lbl_bytes)?;
+    if pixels.len() != labels.len() * rows * cols {
+        return Err(Error::parse("idx: image/label count mismatch"));
+    }
+    // canonical MNIST standardization
+    const MEAN: f32 = 0.1307;
+    const STD: f32 = 0.3081;
+    let x: Vec<f32> = pixels
+        .iter()
+        .map(|&p| (p as f32 / 255.0 - MEAN) / STD)
+        .collect();
+    let y: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+    let data = ImageData {
+        x,
+        y,
+        elem_shape: vec![rows, cols, 1],
+        classes: 10,
+    };
+    data.validate()?;
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny in-memory IDX pair.
+    fn fake_idx(n: usize, rows: usize, cols: usize) -> (Vec<u8>, Vec<u8>) {
+        let mut img = Vec::new();
+        img.extend_from_slice(&MAGIC_IMAGES.to_be_bytes());
+        img.extend_from_slice(&(n as u32).to_be_bytes());
+        img.extend_from_slice(&(rows as u32).to_be_bytes());
+        img.extend_from_slice(&(cols as u32).to_be_bytes());
+        for i in 0..n * rows * cols {
+            img.push((i % 251) as u8);
+        }
+        let mut lbl = Vec::new();
+        lbl.extend_from_slice(&MAGIC_LABELS.to_be_bytes());
+        lbl.extend_from_slice(&(n as u32).to_be_bytes());
+        for i in 0..n {
+            lbl.push((i % 10) as u8);
+        }
+        (img, lbl)
+    }
+
+    #[test]
+    fn parses_valid_pair() {
+        let (img, lbl) = fake_idx(5, 28, 28);
+        let (pixels, r, c) = parse_images(&img).unwrap();
+        assert_eq!((r, c), (28, 28));
+        assert_eq!(pixels.len(), 5 * 28 * 28);
+        let labels = parse_labels(&lbl).unwrap();
+        assert_eq!(labels, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let (mut img, _) = fake_idx(2, 4, 4);
+        img[3] = 0x99;
+        assert!(parse_images(&img).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let (mut img, _) = fake_idx(2, 4, 4);
+        img.truncate(img.len() - 3);
+        assert!(parse_images(&img).is_err());
+    }
+
+    #[test]
+    fn load_pair_roundtrip_via_tempfiles() {
+        let dir = std::env::temp_dir().join(format!("fedmask_idx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (img, lbl) = fake_idx(6, 28, 28);
+        let ip = dir.join("images");
+        let lp = dir.join("labels");
+        std::fs::write(&ip, &img).unwrap();
+        std::fs::write(&lp, &lbl).unwrap();
+        let data = load_pair(&ip, &lp).unwrap();
+        assert_eq!(data.len(), 6);
+        assert_eq!(data.elem_shape, vec![28, 28, 1]);
+        // standardized values are finite and zero pixel maps to -mean/std
+        assert!((data.x[0] - (0.0 - 0.1307) / 0.3081).abs() < 1e-5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,128 @@
+//! Dataset substrate.
+//!
+//! The paper evaluates on MNIST, CIFAR-10 and WikiText-2. This environment
+//! has no network access, so each dataset has two sources:
+//!
+//! * **real-format loaders** — [`idx`] parses MNIST IDX files, [`cifar_bin`]
+//!   parses the CIFAR-10 binary batches, [`tokenizer`] builds a word-level
+//!   vocab from any raw-text corpus. Drop the original files under
+//!   `data/{mnist,cifar10,wikitext2}/` and they are used automatically.
+//! * **procedural synthetic generators** ([`synth`]) — class-conditional
+//!   image distributions and a Zipf/Markov corpus with the same tensor
+//!   geometry and learnability profile (DESIGN.md §2 substitution table).
+//!
+//! [`partition`] implements the I.I.D. split of McMahan et al. (plus the
+//! pathological non-IID shard split as an extension) and [`batcher`] turns
+//! client shards into the fixed-geometry chunks the train artifact expects.
+
+pub mod batcher;
+pub mod cifar_bin;
+pub mod idx;
+pub mod loader;
+pub mod partition;
+pub mod synth;
+pub mod tokenizer;
+
+/// Image dataset half (train or test): row-major `[n, elem...]` pixels
+/// (already scaled/standardized) + integer labels.
+#[derive(Debug, Clone)]
+pub struct ImageData {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub elem_shape: Vec<usize>,
+    pub classes: usize,
+}
+
+impl ImageData {
+    pub fn elem_len(&self) -> usize {
+        self.elem_shape.iter().product()
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Sanity invariant: x length matches labels * elem size.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.x.len() != self.y.len() * self.elem_len() {
+            return Err(crate::Error::invalid(format!(
+                "image data x len {} != n {} * elem {}",
+                self.x.len(),
+                self.y.len(),
+                self.elem_len()
+            )));
+        }
+        if let Some(&bad) = self.y.iter().find(|&&c| c < 0 || c as usize >= self.classes) {
+            return Err(crate::Error::invalid(format!("label {bad} out of range")));
+        }
+        Ok(())
+    }
+}
+
+/// Token-stream dataset half for language modeling.
+#[derive(Debug, Clone)]
+pub struct TextData {
+    pub tokens: Vec<i32>,
+    pub vocab: usize,
+}
+
+impl TextData {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if let Some(&bad) = self
+            .tokens
+            .iter()
+            .find(|&&t| t < 0 || t as usize >= self.vocab)
+        {
+            return Err(crate::Error::invalid(format!("token {bad} out of vocab")));
+        }
+        Ok(())
+    }
+}
+
+/// Train+test pair for one task.
+#[derive(Debug, Clone)]
+pub enum Dataset {
+    Image { train: ImageData, test: ImageData },
+    Text { train: TextData, test: TextData },
+}
+
+impl Dataset {
+    pub fn train_len(&self) -> usize {
+        match self {
+            Dataset::Image { train, .. } => train.len(),
+            Dataset::Text { train, .. } => train.len(),
+        }
+    }
+
+    pub fn test_len(&self) -> usize {
+        match self {
+            Dataset::Image { test, .. } => test.len(),
+            Dataset::Text { test, .. } => test.len(),
+        }
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        match self {
+            Dataset::Image { train, test } => {
+                train.validate()?;
+                test.validate()
+            }
+            Dataset::Text { train, test } => {
+                train.validate()?;
+                test.validate()
+            }
+        }
+    }
+}

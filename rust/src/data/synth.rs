@@ -1,0 +1,286 @@
+//! Procedural synthetic datasets (DESIGN.md §2 substitution table).
+//!
+//! Offline stand-ins for the paper's three corpora, built to exercise the
+//! identical code paths and produce the same *relative* dynamics:
+//!
+//! * `mnist_like`  — 28x28x1, 10 classes. Each class is a low-rank "stroke"
+//!   template; samples add spatial shift + pixel noise. A LeNet reaches
+//!   high accuracy in a few federated rounds, from a ~10% random-guess
+//!   start, matching real-MNIST curve shape.
+//! * `cifar_like`  — 32x32x3, 10 classes. Class-conditional smooth color
+//!   fields + texture noise; deliberately harder (lower SNR) so conv-net
+//!   accuracy climbs slowly, like real CIFAR.
+//! * `markov_text` — Zipf unigram marginals with order-1 Markov structure
+//!   and per-token successor sparsity; a GRU LM's perplexity falls from
+//!   ~vocab to a low plateau, like word-level WikiText-2.
+
+use crate::data::{Dataset, ImageData, TextData};
+use crate::sim::rng::Rng;
+
+/// Smooth per-class template of `elem` pixels built from `k` random
+/// cosine "strokes" — low-rank, so classes are separable but overlapping.
+fn class_template(rng: &mut Rng, h: usize, w: usize, c: usize, strokes: usize) -> Vec<f32> {
+    let mut img = vec![0.0f32; h * w * c];
+    for _ in 0..strokes {
+        let fx = 0.5 + 2.5 * rng.next_f32();
+        let fy = 0.5 + 2.5 * rng.next_f32();
+        let px = rng.next_f32() * std::f32::consts::PI * 2.0;
+        let py = rng.next_f32() * std::f32::consts::PI * 2.0;
+        let chan = rng.next_below(c as u64) as usize;
+        let amp = 0.5 + 0.5 * rng.next_f32();
+        for y in 0..h {
+            for x in 0..w {
+                let v = amp
+                    * ((fx * x as f32 / w as f32 * std::f32::consts::TAU + px).cos()
+                        * (fy * y as f32 / h as f32 * std::f32::consts::TAU + py).cos());
+                img[(y * w + x) * c + chan] += v;
+            }
+        }
+    }
+    img
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gen_images(
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    classes: usize,
+    noise: f32,
+    max_shift: usize,
+    template_seed: u64,
+    sample_seed: u64,
+) -> ImageData {
+    // Templates depend ONLY on template_seed so the train and test halves
+    // of one dataset share the same class-conditional distribution.
+    let mut trng = Rng::new(template_seed).fork(0x7e17);
+    let templates: Vec<Vec<f32>> = (0..classes)
+        .map(|cl| class_template(&mut trng, h, w, c, 6 + cl % 3))
+        .collect();
+    let mut rng = Rng::new(sample_seed).fork(1);
+    let elem = h * w * c;
+    let mut x = Vec::with_capacity(n * elem);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let cl = rng.next_below(classes as u64) as usize;
+        y.push(cl as i32);
+        let dx = rng.next_below((2 * max_shift + 1) as u64) as isize - max_shift as isize;
+        let dy = rng.next_below((2 * max_shift + 1) as u64) as isize - max_shift as isize;
+        let t = &templates[cl];
+        for py in 0..h {
+            for px in 0..w {
+                let sy = (py as isize + dy).rem_euclid(h as isize) as usize;
+                let sx = (px as isize + dx).rem_euclid(w as isize) as usize;
+                for ch in 0..c {
+                    let v = t[(sy * w + sx) * c + ch] + noise * rng.next_normal();
+                    x.push(v);
+                }
+            }
+        }
+    }
+    ImageData {
+        x,
+        y,
+        elem_shape: vec![h, w, c],
+        classes,
+    }
+}
+
+/// MNIST-like synthetic dataset (28x28x1, 10 classes).
+pub fn mnist_like(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    Dataset::Image {
+        train: gen_images(n_train, 28, 28, 1, 10, 2.8, 2, seed, seed),
+        test: gen_images(n_test, 28, 28, 1, 10, 2.8, 2, seed, seed ^ 0x5a5a),
+    }
+}
+
+/// CIFAR-like synthetic dataset (32x32x3, 10 classes, lower SNR).
+pub fn cifar_like(n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    Dataset::Image {
+        train: gen_images(n_train, 32, 32, 3, 10, 2.2, 3, seed.wrapping_add(101), seed.wrapping_add(101)),
+        test: gen_images(n_test, 32, 32, 3, 10, 2.2, 3, seed.wrapping_add(101), seed.wrapping_add(101) ^ 0x5a5a),
+    }
+}
+
+/// Zipf + order-1 Markov token stream (WikiText-2-like dynamics).
+///
+/// Each token's successor distribution is concentrated on `succ` candidates
+/// with Zipf weights, and candidates are themselves Zipf-distributed over
+/// the vocab, so unigram frequencies are heavy-tailed like natural text.
+pub fn markov_text(n_train: usize, n_test: usize, vocab: usize, seed: u64) -> Dataset {
+    let succ = 24usize;
+    let mut srng = Rng::new(seed).fork(7);
+    // Zipf sampler over the vocab via inverse CDF on precomputed weights.
+    let weights: Vec<f64> = (0..vocab).map(|i| 1.0 / (1.0 + i as f64)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(vocab);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    let zipf = |rng: &mut Rng| -> i32 {
+        let u = rng.next_f64();
+        cdf.partition_point(|&c| c < u).min(vocab - 1) as i32
+    };
+    // successor tables: token -> [succ] candidates
+    let table: Vec<Vec<i32>> = (0..vocab)
+        .map(|_| (0..succ).map(|_| zipf(&mut srng)).collect())
+        .collect();
+    // successor pick: Zipf over the candidate list (first candidates likely)
+    let cand_weights: Vec<f64> = (0..succ).map(|i| 1.0 / (1.0 + i as f64)).collect();
+    let cand_total: f64 = cand_weights.iter().sum();
+    let mut cand_cdf = Vec::with_capacity(succ);
+    let mut acc = 0.0;
+    for w in &cand_weights {
+        acc += w / cand_total;
+        cand_cdf.push(acc);
+    }
+    let gen_stream = |n: usize, stream_seed: u64| -> TextData {
+        let mut rng = Rng::new(stream_seed);
+        let mut tok = zipf(&mut rng) as usize;
+        let mut tokens = Vec::with_capacity(n);
+        for _ in 0..n {
+            tokens.push(tok as i32);
+            // occasional resample keeps the chain mixing over the vocab
+            tok = if rng.next_f64() < 0.05 {
+                zipf(&mut rng) as usize
+            } else {
+                let u = rng.next_f64();
+                let pick = cand_cdf.partition_point(|&c| c < u).min(succ - 1);
+                table[tok][pick] as usize
+            };
+        }
+        TextData { tokens, vocab }
+    };
+    Dataset::Text {
+        train: gen_stream(n_train, seed.wrapping_add(11)),
+        test: gen_stream(n_test, seed.wrapping_add(13)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_like_shapes_and_labels() {
+        let ds = mnist_like(200, 50, 0);
+        ds.validate().unwrap();
+        let Dataset::Image { train, test } = &ds else {
+            panic!()
+        };
+        assert_eq!(train.len(), 200);
+        assert_eq!(test.len(), 50);
+        assert_eq!(train.elem_shape, vec![28, 28, 1]);
+        // all 10 classes present in 200 draws (overwhelmingly likely)
+        let mut seen = [false; 10];
+        for &c in &train.y {
+            seen[c as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn cifar_like_is_three_channel() {
+        let ds = cifar_like(50, 10, 1);
+        ds.validate().unwrap();
+        let Dataset::Image { train, .. } = &ds else {
+            panic!()
+        };
+        assert_eq!(train.elem_shape, vec![32, 32, 3]);
+        assert_eq!(train.x.len(), 50 * 32 * 32 * 3);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = mnist_like(20, 5, 7);
+        let b = mnist_like(20, 5, 7);
+        let (Dataset::Image { train: ta, .. }, Dataset::Image { train: tb, .. }) = (&a, &b) else {
+            panic!()
+        };
+        assert_eq!(ta.x, tb.x);
+        assert_eq!(ta.y, tb.y);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // nearest-template classification on clean means should beat chance
+        let ds = mnist_like(400, 0, 3);
+        let Dataset::Image { train, .. } = &ds else {
+            panic!()
+        };
+        let elem = train.elem_len();
+        // per-class mean
+        let mut means = vec![vec![0.0f32; elem]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..train.len() {
+            let c = train.y[i] as usize;
+            counts[c] += 1;
+            for j in 0..elem {
+                means[c][j] += train.x[i * elem + j];
+            }
+        }
+        for c in 0..10 {
+            for v in means[c].iter_mut() {
+                *v /= counts[c].max(1) as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..train.len() {
+            let xi = &train.x[i * elem..(i + 1) * elem];
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f32 = xi.iter().zip(&means[a]).map(|(x, m)| (x - m).powi(2)).sum();
+                    let db: f32 = xi.iter().zip(&means[b]).map(|(x, m)| (x - m).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == train.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / train.len() as f64;
+        assert!(acc > 0.6, "template separability too low: {acc}");
+    }
+
+    #[test]
+    fn markov_text_in_vocab_and_predictable() {
+        let ds = markov_text(20_000, 2_000, 500, 9);
+        ds.validate().unwrap();
+        let Dataset::Text { train, .. } = &ds else {
+            panic!()
+        };
+        assert_eq!(train.len(), 20_000);
+        // bigram structure: the most frequent successor of a frequent token
+        // should appear far above the unigram rate of a random token.
+        let mut next_counts = std::collections::HashMap::new();
+        for w in train.tokens.windows(2) {
+            *next_counts.entry((w[0], w[1])).or_insert(0usize) += 1;
+        }
+        let max_bigram = next_counts.values().copied().max().unwrap();
+        assert!(
+            max_bigram > train.len() / 500,
+            "no bigram structure: {max_bigram}"
+        );
+    }
+
+    #[test]
+    fn zipf_marginal_is_heavy_tailed() {
+        let ds = markov_text(30_000, 0, 1000, 4);
+        let Dataset::Text { train, .. } = &ds else {
+            panic!()
+        };
+        let mut counts = vec![0usize; 1000];
+        for &t in &train.tokens {
+            counts[t as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top10: usize = counts[..10].iter().sum();
+        assert!(
+            top10 as f64 > 0.15 * train.len() as f64,
+            "marginal not heavy-tailed"
+        );
+    }
+}

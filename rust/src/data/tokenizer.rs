@@ -1,0 +1,159 @@
+//! Word-level tokenizer + vocabulary builder (the WikiText-2 pipeline).
+//!
+//! Mirrors the standard word-level LM preprocessing: whitespace tokens,
+//! lowercasing, frequency-ranked vocab capped at the model's vocab size,
+//! out-of-vocab words mapped to `<unk>`, newlines to `<eos>`. If a real
+//! `wiki.train.tokens` is dropped under `data/wikitext2/`, this is the path
+//! that ingests it; the synthetic Markov corpus bypasses tokenization.
+
+use std::collections::HashMap;
+
+use crate::data::TextData;
+
+pub const UNK: &str = "<unk>";
+pub const EOS: &str = "<eos>";
+
+/// Frequency-ranked word vocabulary.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    id_of: HashMap<String, i32>,
+    words: Vec<String>,
+}
+
+impl Vocab {
+    /// Build from a corpus: rank words by frequency (ties broken
+    /// lexicographically for determinism), cap at `max_size` including the
+    /// reserved `<unk>`/`<eos>` entries.
+    pub fn build(text: &str, max_size: usize) -> Vocab {
+        assert!(max_size >= 3, "vocab too small");
+        let mut freq: HashMap<&str, usize> = HashMap::new();
+        for line in text.lines() {
+            for w in line.split_whitespace() {
+                *freq.entry(w).or_default() += 1;
+            }
+        }
+        let mut ranked: Vec<(&str, usize)> = freq
+            .into_iter()
+            .filter(|(w, _)| *w != UNK && *w != EOS)
+            .collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+
+        let mut words = vec![UNK.to_string(), EOS.to_string()];
+        words.extend(
+            ranked
+                .into_iter()
+                .take(max_size - 2)
+                .map(|(w, _)| w.to_string()),
+        );
+        let id_of = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Vocab { id_of, words }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        *self.id_of.get(word).unwrap_or(&0) // 0 == <unk>
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.words
+            .get(id as usize)
+            .map(String::as_str)
+            .unwrap_or(UNK)
+    }
+
+    /// Encode a corpus: words to ids, line breaks to `<eos>`.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        for line in text.lines() {
+            for w in line.split_whitespace() {
+                out.push(self.id(w));
+            }
+            out.push(self.id(EOS));
+        }
+        out
+    }
+}
+
+/// Tokenize a (train, test) corpus pair with a train-derived vocab.
+pub fn tokenize_corpus(train_text: &str, test_text: &str, vocab_size: usize) -> (TextData, TextData, Vocab) {
+    let vocab = Vocab::build(train_text, vocab_size);
+    let train = TextData {
+        tokens: vocab.encode(train_text),
+        vocab: vocab.len().max(vocab_size),
+    };
+    let test = TextData {
+        tokens: vocab.encode(test_text),
+        vocab: train.vocab,
+    };
+    (train, test, vocab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "the cat sat on the mat\nthe dog sat on the log\n";
+
+    #[test]
+    fn vocab_ranks_by_frequency() {
+        let v = Vocab::build(CORPUS, 50);
+        // "the" (4x) must be the first non-reserved word
+        assert_eq!(v.word(2), "the");
+        assert_eq!(v.id("the"), 2);
+        assert_eq!(v.id(UNK), 0);
+        assert_eq!(v.id(EOS), 1);
+    }
+
+    #[test]
+    fn oov_maps_to_unk() {
+        let v = Vocab::build(CORPUS, 50);
+        assert_eq!(v.id("zebra"), 0);
+    }
+
+    #[test]
+    fn cap_keeps_most_frequent() {
+        let v = Vocab::build(CORPUS, 4); // unk, eos + 2 words
+        assert_eq!(v.len(), 4);
+        assert_eq!(v.word(2), "the");
+        // "sat"/"on" (2x each, tie broken lexicographically: "on" < "sat")
+        assert_eq!(v.word(3), "on");
+        assert!(v.id("cat") == 0); // evicted -> unk
+    }
+
+    #[test]
+    fn encode_inserts_eos_per_line() {
+        let v = Vocab::build(CORPUS, 50);
+        let ids = v.encode("the cat\nthe dog\n");
+        let eos = v.id(EOS);
+        assert_eq!(ids.iter().filter(|&&i| i == eos).count(), 2);
+        assert_eq!(ids.len(), 6);
+    }
+
+    #[test]
+    fn tokenize_corpus_shares_vocab() {
+        let (train, test, vocab) = tokenize_corpus(CORPUS, "the zebra\n", 50);
+        assert_eq!(train.vocab, test.vocab);
+        assert_eq!(test.tokens[0], vocab.id("the"));
+        assert_eq!(test.tokens[1], 0); // zebra -> unk
+        train.validate().unwrap();
+        test.validate().unwrap();
+    }
+
+    #[test]
+    fn deterministic_ranking_on_ties() {
+        let a = Vocab::build(CORPUS, 10);
+        let b = Vocab::build(CORPUS, 10);
+        assert_eq!(a.words, b.words);
+    }
+}

@@ -1,0 +1,107 @@
+//! Ablation studies for the design choices DESIGN.md calls out.
+//!
+//! `fedmask figure ablations` runs four small studies on MNIST/LeNet:
+//!
+//! 1. **mask-target** — paper-literal weight zeroing (`weights`) vs the
+//!    sparse-delta reading (`delta`) at low gamma: demonstrates the
+//!    collapse documented in DESIGN.md §4 / EXPERIMENTS.md.
+//! 2. **mask-scope** — per-layer top-k (Alg. 4's layer loop) vs one global
+//!    top-k over all maskable parameters.
+//! 3. **decay-family** — exponential (Eq. 3) vs linear vs step annealing at
+//!    matched total communication budget.
+//! 4. **partition** — IID (paper) vs pathological non-IID shards
+//!    (McMahan et al.), both under dynamic+selective.
+
+use crate::config::experiment::ExperimentConfig;
+use crate::data::partition::Scheme;
+use crate::figures::common::FigureCtx;
+use crate::fl::masking::{MaskEngine, MaskPolicy, MaskScope, MaskTarget};
+use crate::fl::sampling::SamplingSchedule;
+use crate::metrics::csv::{fmt, Table};
+use crate::util::error::Result;
+
+pub fn run(ctx: &FigureCtx) -> Result<()> {
+    let pool = ctx.pool("lenet", 6)?;
+    let mut summary = Table::new(&["study", "variant", "test_accuracy", "uplink_units"]);
+
+    let mut base = ExperimentConfig::defaults("lenet")?;
+    base.clients = 10;
+    base.rounds = if ctx.quick { 5 } else { 10 };
+    base.eval_every = base.rounds;
+    let base = ctx.apply(base);
+
+    // 1. mask target at gamma = 0.2
+    for (variant, target) in [("delta (default)", MaskTarget::Delta), ("weights (Alg.4 literal)", MaskTarget::Weights)] {
+        let mut cfg = base.clone();
+        cfg.label = format!("ablate-target-{variant}");
+        cfg.masking = MaskPolicy::selective(0.2);
+        cfg.mask_target = target;
+        let out = ctx.run_config(cfg, &pool)?;
+        summary.push(vec![
+            "mask-target".into(),
+            variant.into(),
+            fmt(out.recorder.final_accuracy()),
+            fmt(out.ledger.uplink_units),
+        ]);
+    }
+
+    // 2. mask scope at gamma = 0.2
+    for (variant, scope) in [("per-layer (Alg.4)", MaskScope::PerLayer), ("global", MaskScope::Global)] {
+        let mut cfg = base.clone();
+        cfg.label = format!("ablate-scope-{variant}");
+        cfg.masking = MaskPolicy::Selective {
+            gamma: 0.2,
+            engine: MaskEngine::Rust,
+            scope,
+        };
+        let out = ctx.run_config(cfg, &pool)?;
+        summary.push(vec![
+            "mask-scope".into(),
+            variant.into(),
+            fmt(out.recorder.final_accuracy()),
+            fmt(out.ledger.uplink_units),
+        ]);
+    }
+
+    // 3. decay family, budget-matched-ish (all land near the same total
+    //    units over the horizon; exact totals reported alongside)
+    let r = base.rounds;
+    let schedules: [(&str, SamplingSchedule); 3] = [
+        ("exponential (Eq.3)", SamplingSchedule::DynamicExp { c0: 1.0, beta: 0.2 }),
+        ("linear", SamplingSchedule::DynamicLinear { c0: 1.0, slope: 1.0 / (1.5 * r as f64) }),
+        ("step x0.5/3", SamplingSchedule::DynamicStep { c0: 1.0, every: 3, factor: 0.5 }),
+    ];
+    for (variant, sched) in schedules {
+        let mut cfg = base.clone();
+        cfg.label = format!("ablate-decay-{variant}");
+        cfg.sampling = sched;
+        cfg.min_clients = 2;
+        let out = ctx.run_config(cfg, &pool)?;
+        summary.push(vec![
+            "decay-family".into(),
+            variant.into(),
+            fmt(out.recorder.final_accuracy()),
+            fmt(out.ledger.uplink_units),
+        ]);
+    }
+
+    // 4. partition scheme under dynamic+selective
+    for (variant, scheme) in [("iid (paper)", Scheme::Iid), ("noniid-2shards", Scheme::NonIidShards { shards_per_client: 2 })] {
+        let mut cfg = base.clone();
+        cfg.label = format!("ablate-partition-{variant}");
+        cfg.partition = scheme;
+        cfg.sampling = SamplingSchedule::DynamicExp { c0: 1.0, beta: 0.1 };
+        cfg.min_clients = 2;
+        cfg.masking = MaskPolicy::selective(0.3);
+        let out = ctx.run_config(cfg, &pool)?;
+        summary.push(vec![
+            "partition".into(),
+            variant.into(),
+            fmt(out.recorder.final_accuracy()),
+            fmt(out.ledger.uplink_units),
+        ]);
+    }
+
+    println!("# ablations (MNIST/LeNet, {} rounds)", base.rounds);
+    ctx.emit(&summary)
+}

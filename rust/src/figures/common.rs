@@ -1,0 +1,152 @@
+//! Shared figure-driver machinery: CLI context, sweep runner, CSV merging.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::config::experiment::ExperimentConfig;
+use crate::fl::server::{Server, ServerOutcome};
+use crate::metrics::csv::Table;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::pool::EnginePool;
+use crate::util::cli::{Args, OptSpec};
+use crate::util::error::Result;
+
+/// Options shared by every figure driver.
+pub const FIGURE_OPTS: &[OptSpec] = &[
+    OptSpec::value("out", "CSV output path (also printed to stdout)"),
+    OptSpec::value("rounds", "override communication rounds"),
+    OptSpec::value("clients", "override registered client count M"),
+    OptSpec::value("seed", "experiment seed (default 42)"),
+    OptSpec::value("workers", "engine pool width"),
+    OptSpec::value("artifacts", "artifacts directory (default ./artifacts)"),
+    OptSpec::flag("paper-scale", "paper-size datasets (60k MNIST etc.)"),
+    OptSpec::flag("quick", "coarser sweeps for a fast smoke run"),
+];
+
+/// Parsed figure context.
+pub struct FigureCtx {
+    pub manifest: Manifest,
+    pub out: Option<PathBuf>,
+    pub rounds: Option<usize>,
+    pub clients: Option<usize>,
+    pub seed: u64,
+    pub workers: Option<usize>,
+    pub paper_scale: bool,
+    pub quick: bool,
+}
+
+impl FigureCtx {
+    pub fn from_args(args: &Args) -> Result<FigureCtx> {
+        let artifacts = args.get("artifacts").unwrap_or("artifacts");
+        Ok(FigureCtx {
+            manifest: Manifest::load(artifacts)?,
+            out: args.get("out").map(PathBuf::from),
+            rounds: args.get("rounds").map(|s| s.parse()).transpose().map_err(|_| {
+                crate::Error::invalid("--rounds must be an integer")
+            })?,
+            clients: args
+                .get("clients")
+                .map(|s| s.parse())
+                .transpose()
+                .map_err(|_| crate::Error::invalid("--clients must be an integer"))?,
+            seed: args.get_or("seed", 42u64)?,
+            workers: args
+                .get("workers")
+                .map(|s| s.parse())
+                .transpose()
+                .map_err(|_| crate::Error::invalid("--workers must be an integer"))?,
+            paper_scale: args.has_flag("paper-scale"),
+            quick: args.has_flag("quick"),
+        })
+    }
+
+    /// Apply the context overrides to a config.
+    pub fn apply(&self, mut cfg: ExperimentConfig) -> ExperimentConfig {
+        if let Some(r) = self.rounds {
+            cfg.rounds = r;
+        }
+        if let Some(m) = self.clients {
+            cfg.clients = m;
+        }
+        if let Some(w) = self.workers {
+            cfg.workers = w;
+        }
+        cfg.seed = self.seed;
+        if self.paper_scale {
+            let spec = crate::data::loader::DatasetSpec::for_model(&cfg.model, cfg.seed)
+                .expect("model known")
+                .paper_scale();
+            cfg.n_train = spec.n_train;
+            cfg.n_test = spec.n_test;
+        }
+        cfg
+    }
+
+    /// Build a pool for `model` sized for this context.
+    pub fn pool(&self, model: &str, workers: usize) -> Result<Arc<EnginePool>> {
+        Ok(Arc::new(EnginePool::new(
+            &self.manifest,
+            &[model],
+            self.workers.unwrap_or(workers),
+        )?))
+    }
+
+    /// Run one configured experiment on a shared pool.
+    pub fn run_config(
+        &self,
+        cfg: ExperimentConfig,
+        pool: &Arc<EnginePool>,
+    ) -> Result<ServerOutcome> {
+        log::info!("running {}", cfg.label);
+        Server::with_pool(cfg, &self.manifest, Arc::clone(pool))?.run()
+    }
+
+    /// Emit a finished table: print to stdout and write CSV if requested.
+    pub fn emit(&self, table: &Table) -> Result<()> {
+        table.print();
+        if let Some(path) = &self.out {
+            table.write(path)?;
+            eprintln!("wrote {}", path.display());
+        }
+        Ok(())
+    }
+}
+
+/// Append every round row of an outcome into a merged per-round table.
+pub fn append_rounds(table: &mut Table, outcome: &ServerOutcome) {
+    let t = outcome.recorder.table();
+    // Table has no row iterator by design; rebuild from the recorder.
+    let _ = t;
+    for r in &outcome.recorder.rounds {
+        table.push(vec![
+            outcome.recorder.label.clone(),
+            r.round.to_string(),
+            crate::metrics::csv::fmt(r.sample_rate),
+            r.clients.to_string(),
+            crate::metrics::csv::fmt(r.train_loss),
+            crate::metrics::csv::fmt(r.test_loss),
+            crate::metrics::csv::fmt(r.test_accuracy),
+            crate::metrics::csv::fmt(r.test_perplexity),
+            crate::metrics::csv::fmt(r.uplink_units),
+            r.uplink_bytes.to_string(),
+            crate::metrics::csv::fmt(r.virtual_time_s),
+        ]);
+    }
+}
+
+/// The standard per-round merged header.
+pub fn rounds_header() -> Table {
+    Table::new(&[
+        "label",
+        "round",
+        "sample_rate",
+        "clients",
+        "train_loss",
+        "test_loss",
+        "test_accuracy",
+        "test_perplexity",
+        "uplink_units",
+        "uplink_bytes",
+        "virtual_time_s",
+    ])
+}

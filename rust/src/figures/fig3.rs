@@ -1,0 +1,74 @@
+//! Fig. 3: static vs dynamic sampling on MNIST/LeNet.
+//!
+//! Paper setup: 100% initial sampling; dynamic decay beta in {0.01, 0.1};
+//! reports (a) test accuracy after 10/50/100 rounds and (b) cumulative
+//! transport cost. CPU-scaled default: 20 clients, 30 rounds with
+//! checkpoints at 20%/50%/100% of the horizon; `--rounds 100 --clients 100`
+//! restores paper geometry.
+//!
+//! Expected shape (paper §5.2.1): dynamic(0.01) tracks or beats static at
+//! short horizons and saves modest cost; dynamic(0.1) trades accuracy at
+//! longer horizons for large savings; static always costs 100%.
+
+use crate::config::experiment::ExperimentConfig;
+use crate::figures::common::{append_rounds, rounds_header, FigureCtx};
+use crate::fl::sampling::SamplingSchedule;
+use crate::metrics::csv::{fmt, Table};
+use crate::util::error::Result;
+
+pub fn run(ctx: &FigureCtx) -> Result<()> {
+    let schedules = [
+        SamplingSchedule::Static { c0: 1.0 },
+        SamplingSchedule::DynamicExp { c0: 1.0, beta: 0.01 },
+        SamplingSchedule::DynamicExp { c0: 1.0, beta: 0.1 },
+    ];
+    let pool = ctx.pool("lenet", 6)?;
+    let mut rounds_table = rounds_header();
+    let mut summary = Table::new(&[
+        "schedule",
+        "checkpoint_round",
+        "test_accuracy",
+        "cum_uplink_units",
+        "cost_vs_static_pct",
+    ]);
+
+    let mut base = ExperimentConfig::defaults("lenet")?;
+    base.rounds = 30;
+    base.eval_every = 1;
+    let base = ctx.apply(base);
+    let checkpoints = [
+        (base.rounds / 3).max(1),
+        (base.rounds * 2 / 3).max(1),
+        base.rounds,
+    ];
+    let static_units_at = |r: usize, m: usize| (r * m) as f64;
+
+    for sched in schedules {
+        let mut cfg = base.clone();
+        cfg.label = sched.label();
+        cfg.sampling = sched.clone();
+        cfg.min_clients = sched.default_min_clients();
+        let out = ctx.run_config(cfg, &pool)?;
+        append_rounds(&mut rounds_table, &out);
+        for &cp in &checkpoints {
+            let rec = &out.recorder.rounds[cp - 1];
+            summary.push(vec![
+                sched.label(),
+                cp.to_string(),
+                fmt(rec.test_accuracy),
+                fmt(rec.uplink_units),
+                fmt(100.0 * rec.uplink_units / static_units_at(cp, base.clients)),
+            ]);
+        }
+        eprintln!("{}", out.recorder.summary());
+    }
+
+    println!("# fig3a/fig3b summary (accuracy + cost at checkpoints)");
+    ctx.emit(&summary)?;
+    if let Some(out) = &ctx.out {
+        let rounds_path = out.with_extension("rounds.csv");
+        rounds_table.write(&rounds_path)?;
+        eprintln!("wrote {}", rounds_path.display());
+    }
+    Ok(())
+}

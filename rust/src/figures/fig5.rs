@@ -1,0 +1,60 @@
+//! Fig. 5: combined dynamic sampling + masking on MNIST/LeNet.
+//!
+//! Paper setup: initial sampling rates C in {0.3, 0.5, 0.7, 1.0}, decay
+//! beta in {0.01, 0.1}, random vs selective masking, 50 rounds. Expected
+//! shape (§5.2.3): selective beats random in nearly every cell (paper's
+//! exception: C = 1.0 with beta = 0.01).
+
+use crate::config::experiment::ExperimentConfig;
+use crate::figures::common::FigureCtx;
+use crate::fl::masking::MaskPolicy;
+use crate::fl::sampling::SamplingSchedule;
+use crate::metrics::csv::{fmt, Table};
+use crate::util::error::Result;
+
+pub fn run(ctx: &FigureCtx) -> Result<()> {
+    let c0s: Vec<f64> = if ctx.quick { vec![0.5, 1.0] } else { vec![0.3, 0.5, 0.7, 1.0] };
+    let betas = [0.01, 0.1];
+    let gamma = 0.5f32;
+    let pool = ctx.pool("lenet", 6)?;
+    let mut summary = Table::new(&[
+        "beta",
+        "c0",
+        "policy",
+        "gamma",
+        "test_accuracy",
+        "uplink_units",
+    ]);
+
+    let mut base = ExperimentConfig::defaults("lenet")?;
+    base.rounds = if ctx.quick { 10 } else { 25 };
+    base.eval_every = base.rounds;
+    let base = ctx.apply(base);
+
+    for &beta in &betas {
+        for &c0 in &c0s {
+            for policy in [MaskPolicy::random(gamma), MaskPolicy::selective(gamma)] {
+                let mut cfg = base.clone();
+                cfg.sampling = SamplingSchedule::DynamicExp { c0, beta };
+                cfg.min_clients = 2;
+                cfg.masking = policy;
+                cfg.label = format!("fig5-b{beta}-c{c0}-{}", policy.label());
+                let out = ctx.run_config(cfg, &pool)?;
+                summary.push(vec![
+                    fmt(beta),
+                    fmt(c0),
+                    match policy {
+                        MaskPolicy::Random { .. } => "random".into(),
+                        _ => "selective".into(),
+                    },
+                    fmt(gamma as f64),
+                    fmt(out.recorder.final_accuracy()),
+                    fmt(out.ledger.uplink_units),
+                ]);
+                eprintln!("{}", out.recorder.summary());
+            }
+        }
+    }
+    println!("# fig5: dynamic sampling x masking combined (MNIST)");
+    ctx.emit(&summary)
+}

@@ -1,0 +1,53 @@
+//! Fig. 6: random vs selective masking on CIFAR-10/VGG.
+//!
+//! Paper setup: static sampling C = 1.0, 100 rounds, gamma swept 0.1..0.9
+//! on the large conv model. Expected shape (§5.2.4): selective wins for
+//! gamma in 0.1..0.6; the two converge at high gamma.
+//!
+//! CPU-scaled default: 8 clients, 10 rounds, VGG-mini (DESIGN.md §2).
+
+use crate::config::experiment::ExperimentConfig;
+use crate::figures::common::FigureCtx;
+use crate::fl::masking::MaskPolicy;
+use crate::fl::sampling::SamplingSchedule;
+use crate::metrics::csv::{fmt, Table};
+use crate::util::error::Result;
+
+pub fn run(ctx: &FigureCtx) -> Result<()> {
+    let gammas: Vec<f32> = if ctx.quick {
+        vec![0.1, 0.5, 0.9]
+    } else {
+        vec![0.1, 0.3, 0.5, 0.7, 0.9]
+    };
+    let pool = ctx.pool("vggmini", 6)?;
+    let mut summary = Table::new(&["policy", "gamma", "test_accuracy", "uplink_units", "uplink_bytes"]);
+
+    let mut base = ExperimentConfig::defaults("vggmini")?;
+    base.clients = 6;
+    base.rounds = if ctx.quick { 4 } else { 6 };
+    base.sampling = SamplingSchedule::Static { c0: 1.0 };
+    base.eval_every = base.rounds;
+    let base = ctx.apply(base);
+
+    for &gamma in &gammas {
+        for policy in [MaskPolicy::random(gamma), MaskPolicy::selective(gamma)] {
+            let mut cfg = base.clone();
+            cfg.masking = policy;
+            cfg.label = format!("fig6-{}", policy.label());
+            let out = ctx.run_config(cfg, &pool)?;
+            summary.push(vec![
+                match policy {
+                    MaskPolicy::Random { .. } => "random".into(),
+                    _ => "selective".into(),
+                },
+                fmt(gamma as f64),
+                fmt(out.recorder.final_accuracy()),
+                fmt(out.ledger.uplink_units),
+                out.ledger.uplink_bytes.to_string(),
+            ]);
+            eprintln!("{}", out.recorder.summary());
+        }
+    }
+    println!("# fig6: random vs selective masking accuracy by gamma (CIFAR/VGG)");
+    ctx.emit(&summary)
+}

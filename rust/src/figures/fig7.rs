@@ -1,0 +1,62 @@
+//! Fig. 7: effect of the decay coefficient under masking on CIFAR-10/VGG.
+//!
+//! Paper setup: dynamic sampling with beta swept on a log axis, masking
+//! rates gamma in {0.3, 0.5, 0.7, 0.9}, random vs selective. Expected
+//! shape (§5.2.4): selective >= random at low/mid gamma; performance
+//! fluctuates then drops by beta = 0.5 (most communication-efficient).
+
+use crate::config::experiment::ExperimentConfig;
+use crate::figures::common::FigureCtx;
+use crate::fl::masking::MaskPolicy;
+use crate::fl::sampling::SamplingSchedule;
+use crate::metrics::csv::{fmt, Table};
+use crate::util::error::Result;
+
+pub fn run(ctx: &FigureCtx) -> Result<()> {
+    let betas: Vec<f64> = if ctx.quick {
+        vec![0.01, 0.1, 0.5]
+    } else {
+        vec![0.01, 0.05, 0.1, 0.5]
+    };
+    let gammas: Vec<f32> = if ctx.quick { vec![0.3, 0.9] } else { vec![0.3, 0.5, 0.7, 0.9] };
+    let pool = ctx.pool("vggmini", 6)?;
+    let mut summary = Table::new(&[
+        "gamma",
+        "beta",
+        "policy",
+        "test_accuracy",
+        "uplink_units",
+    ]);
+
+    let mut base = ExperimentConfig::defaults("vggmini")?;
+    base.clients = 6;
+    base.rounds = if ctx.quick { 4 } else { 6 };
+    base.eval_every = base.rounds;
+    let base = ctx.apply(base);
+
+    for &gamma in &gammas {
+        for &beta in &betas {
+            for policy in [MaskPolicy::random(gamma), MaskPolicy::selective(gamma)] {
+                let mut cfg = base.clone();
+                cfg.sampling = SamplingSchedule::DynamicExp { c0: 1.0, beta };
+                cfg.min_clients = 2;
+                cfg.masking = policy;
+                cfg.label = format!("fig7-g{gamma}-b{beta}-{}", policy.label());
+                let out = ctx.run_config(cfg, &pool)?;
+                summary.push(vec![
+                    fmt(gamma as f64),
+                    fmt(beta),
+                    match policy {
+                        MaskPolicy::Random { .. } => "random".into(),
+                        _ => "selective".into(),
+                    },
+                    fmt(out.recorder.final_accuracy()),
+                    fmt(out.ledger.uplink_units),
+                ]);
+                eprintln!("{}", out.recorder.summary());
+            }
+        }
+    }
+    println!("# fig7: decay coefficient x masking rate (CIFAR/VGG, log-x beta)");
+    ctx.emit(&summary)
+}

@@ -1,0 +1,50 @@
+//! Fig. 9: random vs selective masking on WikiText/GRU (perplexity).
+//!
+//! Expected shape (§5.3): selective is better at larger masking rates;
+//! random surprisingly wins at low gamma (the paper attributes this to a
+//! regularization effect of randomness on the recurrent model).
+
+use crate::config::experiment::ExperimentConfig;
+use crate::figures::common::FigureCtx;
+use crate::fl::masking::MaskPolicy;
+use crate::fl::sampling::SamplingSchedule;
+use crate::metrics::csv::{fmt, Table};
+use crate::util::error::Result;
+
+pub fn run(ctx: &FigureCtx) -> Result<()> {
+    let gammas: Vec<f32> = if ctx.quick {
+        vec![0.1, 0.5, 0.9]
+    } else {
+        vec![0.1, 0.3, 0.5, 0.7, 0.9]
+    };
+    let pool = ctx.pool("gru", 6)?;
+    let mut summary = Table::new(&["policy", "gamma", "test_perplexity", "uplink_units"]);
+
+    let mut base = ExperimentConfig::defaults("gru")?;
+    base.clients = 10;
+    base.rounds = if ctx.quick { 5 } else { 10 };
+    base.sampling = SamplingSchedule::Static { c0: 0.5 };
+    base.eval_every = base.rounds;
+    let base = ctx.apply(base);
+
+    for &gamma in &gammas {
+        for policy in [MaskPolicy::random(gamma), MaskPolicy::selective(gamma)] {
+            let mut cfg = base.clone();
+            cfg.masking = policy;
+            cfg.label = format!("fig9-{}", policy.label());
+            let out = ctx.run_config(cfg, &pool)?;
+            summary.push(vec![
+                match policy {
+                    MaskPolicy::Random { .. } => "random".into(),
+                    _ => "selective".into(),
+                },
+                fmt(gamma as f64),
+                fmt(out.recorder.final_perplexity()),
+                fmt(out.ledger.uplink_units),
+            ]);
+            eprintln!("{}", out.recorder.summary());
+        }
+    }
+    println!("# fig9: random vs selective masking (WikiText/GRU, perplexity)");
+    ctx.emit(&summary)
+}

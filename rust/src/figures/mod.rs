@@ -1,0 +1,56 @@
+//! Paper-figure harness: one driver per table/figure in the evaluation
+//! section (§5), each regenerating the same series the paper plots.
+//!
+//! | id     | paper content                                             |
+//! |--------|-----------------------------------------------------------|
+//! | table1 | dataset statistics                                        |
+//! | fig3   | MNIST static vs dynamic sampling: accuracy + cost         |
+//! | fig4   | MNIST random vs selective masking, gamma sweep            |
+//! | fig5   | MNIST combined dynamic sampling x masking                 |
+//! | fig6   | CIFAR VGG random vs selective masking, gamma sweep        |
+//! | fig7   | CIFAR decay-coefficient sweep x masking rates             |
+//! | fig8   | WikiText GRU static vs dynamic x masking (perplexity)     |
+//! | fig9   | WikiText GRU random vs selective masking (perplexity)     |
+//!
+//! Defaults are CPU-scaled (fewer clients/rounds than the paper's 100);
+//! `--clients/--rounds/--paper-scale` restore paper geometry. Every driver
+//! prints its series and writes CSV when `--out` is given.
+
+pub mod ablations;
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+
+use crate::util::cli::Args;
+use crate::util::error::{Error, Result};
+
+/// All figure ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "ablations",
+];
+
+/// Dispatch a figure driver by id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    let ctx = common::FigureCtx::from_args(args)?;
+    match id {
+        "table1" => table1::run(&ctx),
+        "fig3" => fig3::run(&ctx),
+        "fig4" => fig4::run(&ctx),
+        "fig5" => fig5::run(&ctx),
+        "fig6" => fig6::run(&ctx),
+        "fig7" => fig7::run(&ctx),
+        "fig8" => fig8::run(&ctx),
+        "fig9" => fig9::run(&ctx),
+        "ablations" => ablations::run(&ctx),
+        other => Err(Error::invalid(format!(
+            "unknown figure '{other}'; available: {}",
+            ALL.join(", ")
+        ))),
+    }
+}

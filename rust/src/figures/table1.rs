@@ -1,0 +1,31 @@
+//! Table 1: dataset summary (type, #train, #test).
+//!
+//! Prints both the paper-scale statistics (what Table 1 reports) and the
+//! actually-loaded statistics for this environment (synthetic unless the
+//! real corpora are present under `data/`).
+
+use crate::data::loader::{self, DatasetSpec};
+use crate::figures::common::FigureCtx;
+use crate::metrics::csv::Table;
+use crate::util::error::Result;
+
+pub fn run(ctx: &FigureCtx) -> Result<()> {
+    let mut t = Table::new(&["dataset", "type", "paper_train", "paper_test", "loaded_train", "loaded_test"]);
+    for (name, kind) in [("mnist", "image"), ("cifar10", "image"), ("wikitext2", "token")] {
+        let paper = DatasetSpec::named(name, ctx.seed)?.paper_scale();
+        let mut spec = DatasetSpec::named(name, ctx.seed)?;
+        if ctx.paper_scale {
+            spec = spec.paper_scale();
+        }
+        let ds = loader::load(&spec, std::path::Path::new("data"))?;
+        t.push(vec![
+            name.to_string(),
+            kind.to_string(),
+            paper.n_train.to_string(),
+            paper.n_test.to_string(),
+            ds.train_len().to_string(),
+            ds.test_len().to_string(),
+        ]);
+    }
+    ctx.emit(&t)
+}

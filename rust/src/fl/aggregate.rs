@@ -1,0 +1,278 @@
+//! Weighted federated averaging (paper §3.1).
+//!
+//! The aggregation rule is FedAvg's sample-weighted mean,
+//! `Theta_{t+1} = sum_i (n_i / n) Theta_t^i` — Eq. 2 of the paper modulo its
+//! extra `1/m` factor, which would shrink the aggregate by the cohort size
+//! and contradicts both Eq. 1 and the cited McMahan et al.; DESIGN.md §4
+//! records this as a presumed typo. Masked uploads are averaged exactly as
+//! received (zeros included), which is the paper-literal semantics of
+//! Alg. 2/4.
+//!
+//! The inner loop is the aggregation hot path (P-length fused
+//! multiply-adds); the criterion bench `aggregation` tracks it.
+
+use crate::util::error::{Error, Result};
+
+/// One client's contribution to a round.
+#[derive(Debug, Clone)]
+pub struct Contribution<'a> {
+    pub params: &'a [f32],
+    /// Local training-sample count n_i (the FedAvg weight).
+    pub n_samples: u32,
+}
+
+/// Sample-weighted mean of client parameter vectors.
+///
+/// Accumulates in f64 to keep the mean exact to f32 resolution even for
+/// hundreds of clients (matters for bit-reproducibility across pool sizes:
+/// summation order is fixed by client index upstream).
+pub fn weighted_mean(contribs: &[Contribution]) -> Result<Vec<f32>> {
+    if contribs.is_empty() {
+        return Err(Error::invalid("cannot aggregate zero contributions"));
+    }
+    let p = contribs[0].params.len();
+    if contribs.iter().any(|c| c.params.len() != p) {
+        return Err(Error::invalid("contribution length mismatch"));
+    }
+    let total: u64 = contribs.iter().map(|c| c.n_samples as u64).sum();
+    if total == 0 {
+        return Err(Error::invalid("total sample count is zero"));
+    }
+    let mut acc = vec![0.0f64; p];
+    for c in contribs {
+        let w = c.n_samples as f64 / total as f64;
+        for (slot, &v) in acc.iter_mut().zip(c.params) {
+            *slot += w * v as f64;
+        }
+    }
+    Ok(acc.into_iter().map(|v| v as f32).collect())
+}
+
+/// Unweighted mean (Eq. 1) — kept for the uniform-shard fast path and the
+/// ablation bench comparing the two rules.
+pub fn uniform_mean(contribs: &[Contribution]) -> Result<Vec<f32>> {
+    if contribs.is_empty() {
+        return Err(Error::invalid("cannot aggregate zero contributions"));
+    }
+    let p = contribs[0].params.len();
+    if contribs.iter().any(|c| c.params.len() != p) {
+        return Err(Error::invalid("contribution length mismatch"));
+    }
+    let w = 1.0f64 / contribs.len() as f64;
+    let mut acc = vec![0.0f64; p];
+    for c in contribs {
+        for (slot, &v) in acc.iter_mut().zip(c.params) {
+            *slot += w * v as f64;
+        }
+    }
+    Ok(acc.into_iter().map(|v| v as f32).collect())
+}
+
+/// Attentive aggregation (Ji et al. [11], the paper's cited improvement to
+/// vanilla FedAvg): per layer, clients whose update stays closer to the
+/// current global model get larger softmax weights,
+/// `a_i = softmax(-d_i / (T * mean(d)))` with `d_i = ||Theta_i^l - Theta^l||_2`.
+/// Normalizing by the mean distance makes the temperature `temp`
+/// scale-free. Exposed as `aggregator = "attentive"` in the config and in
+/// the ablation driver; downweights divergent/outlier clients.
+pub fn attentive_mean(
+    global: &[f32],
+    contribs: &[Contribution],
+    layers: &[crate::runtime::manifest::LayerInfo],
+    temp: f64,
+) -> Result<Vec<f32>> {
+    if contribs.is_empty() {
+        return Err(Error::invalid("cannot aggregate zero contributions"));
+    }
+    if contribs.iter().any(|c| c.params.len() != global.len()) {
+        return Err(Error::invalid("contribution length mismatch"));
+    }
+    if !(temp > 0.0) {
+        return Err(Error::invalid("temperature must be positive"));
+    }
+    let mut out = vec![0.0f32; global.len()];
+    for l in layers {
+        let seg = l.offset..l.offset + l.size;
+        // per-client L2 distance to the global layer
+        let dists: Vec<f64> = contribs
+            .iter()
+            .map(|c| {
+                c.params[seg.clone()]
+                    .iter()
+                    .zip(&global[seg.clone()])
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .collect();
+        let mean_d = dists.iter().sum::<f64>() / dists.len() as f64;
+        let scale = if mean_d > 0.0 { temp * mean_d } else { 1.0 };
+        let logits: Vec<f64> = dists.iter().map(|d| -d / scale).collect();
+        let max_logit = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|z| (z - max_logit).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        for (c, w) in contribs.iter().zip(exps.iter().map(|e| e / z)) {
+            for (slot, &v) in out[seg.clone()].iter_mut().zip(&c.params[seg.clone()]) {
+                *slot += (w * v as f64) as f32;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn one_layer(size: usize) -> Vec<crate::runtime::manifest::LayerInfo> {
+        vec![crate::runtime::manifest::LayerInfo {
+            name: "w".into(),
+            shape: vec![size],
+            offset: 0,
+            size,
+            masked: true,
+        }]
+    }
+
+    #[test]
+    fn attentive_equal_contribs_is_identity() {
+        let global = vec![0.0f32; 8];
+        let a = vec![1.0f32; 8];
+        let contribs = vec![
+            Contribution { params: &a, n_samples: 1 },
+            Contribution { params: &a, n_samples: 1 },
+        ];
+        let out = attentive_mean(&global, &contribs, &one_layer(8), 1.0).unwrap();
+        for v in out {
+            assert!((v - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn attentive_downweights_outlier() {
+        let global = vec![0.0f32; 16];
+        let near: Vec<f32> = vec![0.1; 16];
+        let far: Vec<f32> = vec![10.0; 16];
+        let contribs = vec![
+            Contribution { params: &near, n_samples: 1 },
+            Contribution { params: &near, n_samples: 1 },
+            Contribution { params: &far, n_samples: 1 },
+        ];
+        let attn = attentive_mean(&global, &contribs, &one_layer(16), 0.5).unwrap();
+        let plain = uniform_mean(&contribs).unwrap();
+        assert!(
+            attn[0] < plain[0],
+            "attentive {} should pull toward the near majority vs mean {}",
+            attn[0],
+            plain[0]
+        );
+    }
+
+    #[test]
+    fn attentive_rejects_bad_inputs() {
+        let global = vec![0.0f32; 4];
+        assert!(attentive_mean(&global, &[], &one_layer(4), 1.0).is_err());
+        let a = vec![1.0f32; 4];
+        let c = vec![Contribution { params: &a, n_samples: 1 }];
+        assert!(attentive_mean(&global, &c, &one_layer(4), 0.0).is_err());
+    }
+
+    #[test]
+    fn equal_weights_reduce_to_plain_mean() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![3.0f32, 4.0, 5.0];
+        let out = weighted_mean(&[
+            Contribution { params: &a, n_samples: 10 },
+            Contribution { params: &b, n_samples: 10 },
+        ])
+        .unwrap();
+        assert_eq!(out, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn weights_follow_sample_counts() {
+        let a = vec![0.0f32];
+        let b = vec![4.0f32];
+        let out = weighted_mean(&[
+            Contribution { params: &a, n_samples: 3 },
+            Contribution { params: &b, n_samples: 1 },
+        ])
+        .unwrap();
+        assert!((out[0] - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        assert!(weighted_mean(&[]).is_err());
+        let a = vec![1.0f32, 2.0];
+        let b = vec![1.0f32];
+        assert!(weighted_mean(&[
+            Contribution { params: &a, n_samples: 1 },
+            Contribution { params: &b, n_samples: 1 },
+        ])
+        .is_err());
+        assert!(weighted_mean(&[Contribution { params: &a, n_samples: 0 }]).is_err());
+    }
+
+    #[test]
+    fn single_contribution_is_identity() {
+        let a = vec![1.5f32, -2.5, 0.0];
+        let out = weighted_mean(&[Contribution { params: &a, n_samples: 7 }]).unwrap();
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn prop_mean_within_value_envelope() {
+        check("aggregate envelope", 80, |g| {
+            let p = g.usize_in(1, 300);
+            let k = g.usize_in(1, 8);
+            let vecs: Vec<Vec<f32>> = (0..k).map(|_| g.normal_vec(p)).collect();
+            let contribs: Vec<Contribution> = vecs
+                .iter()
+                .map(|v| Contribution {
+                    params: v,
+                    n_samples: 1 + (g.seed % 100) as u32,
+                })
+                .collect();
+            let out = weighted_mean(&contribs).unwrap();
+            for j in 0..p {
+                let lo = vecs.iter().map(|v| v[j]).fold(f32::INFINITY, f32::min);
+                let hi = vecs.iter().map(|v| v[j]).fold(f32::NEG_INFINITY, f32::max);
+                assert!(out[j] >= lo - 1e-5 && out[j] <= hi + 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_uniform_equals_weighted_when_counts_equal() {
+        check("uniform == weighted under equal counts", 50, |g| {
+            let p = g.usize_in(1, 200);
+            let k = g.usize_in(1, 6);
+            let vecs: Vec<Vec<f32>> = (0..k).map(|_| g.normal_vec(p)).collect();
+            let cs: Vec<Contribution> = vecs
+                .iter()
+                .map(|v| Contribution { params: v, n_samples: 42 })
+                .collect();
+            let a = weighted_mean(&cs).unwrap();
+            let b = uniform_mean(&cs).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn masked_zeros_dilute_the_mean() {
+        // paper-literal semantics: a masked (zero) entry pulls the average
+        // toward zero rather than being skipped
+        let a = vec![2.0f32];
+        let b = vec![0.0f32]; // masked out at this position
+        let out = weighted_mean(&[
+            Contribution { params: &a, n_samples: 1 },
+            Contribution { params: &b, n_samples: 1 },
+        ])
+        .unwrap();
+        assert_eq!(out[0], 1.0);
+    }
+}

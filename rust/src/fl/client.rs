@@ -1,0 +1,177 @@
+//! Simulated on-device client (Alg. 2 / Alg. 4, "Run on the k-th client").
+//!
+//! A [`ClientJob`] carries everything one selected client needs for a round:
+//! the broadcast global model, its data shard (via a shared `Arc<Dataset>`),
+//! and the run parameters. [`ClientJob::run`] executes on an engine-pool
+//! worker: local epochs of scanned mini-batch SGD through the train
+//! artifact, then the configured masking, then wire encoding. Everything is
+//! seeded from (experiment seed, round, client id), so a round's outcome is
+//! independent of worker scheduling.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::config::experiment::ExperimentConfig;
+use crate::data::{batcher, Dataset};
+use crate::fl::masking::{
+    apply_delta_target, random_mask_rust, selective_mask_rust, MaskEngine, MaskPolicy, MaskTarget,
+};
+use crate::runtime::engine::Engine;
+use crate::sim::rng::Rng;
+use crate::transport::codec::encode_update;
+use crate::util::error::{Error, Result};
+
+/// A client's data shard reference.
+#[derive(Debug, Clone)]
+pub enum ShardRef {
+    Image(Vec<usize>),
+    Text(Range<usize>),
+}
+
+impl ShardRef {
+    /// Local sample count n_i (FedAvg weight). For text shards this is the
+    /// number of training windows.
+    pub fn n_samples(&self, seq_window: usize) -> usize {
+        match self {
+            ShardRef::Image(idx) => idx.len(),
+            ShardRef::Text(range) => (range.end - range.start) / seq_window,
+        }
+    }
+}
+
+/// What a client sends back to the server.
+#[derive(Debug, Clone)]
+pub struct LocalOutcome {
+    pub client: usize,
+    /// Upload payload after masking (and mask-target transformation) —
+    /// what the server aggregates.
+    pub params: Vec<f32>,
+    /// FedAvg weight n_i.
+    pub n_samples: u32,
+    /// Mean local training loss over the final epoch.
+    pub train_loss: f32,
+    /// Non-zero entries in the wire payload (unit-cost accounting).
+    pub nnz: usize,
+    /// Exact encoded upload size.
+    pub upload_bytes: usize,
+}
+
+/// One selected client's work for one round.
+pub struct ClientJob {
+    pub client_id: usize,
+    pub round: usize,
+    pub dataset: Arc<Dataset>,
+    pub shard: ShardRef,
+    pub global: Arc<Vec<f32>>,
+    pub cfg: Arc<ExperimentConfig>,
+}
+
+impl ClientJob {
+    /// Substream for (round, client, purpose).
+    fn rng(&self, purpose: u64) -> Rng {
+        Rng::new(self.cfg.seed)
+            .fork(self.round as u64)
+            .fork(self.client_id as u64)
+            .fork(purpose)
+    }
+
+    /// Run the local update on an engine worker.
+    pub fn run(&self, engine: &Engine) -> Result<LocalOutcome> {
+        let model = &self.cfg.model;
+        let mm = engine.model(model)?.clone();
+        let mut params = (*self.global).clone();
+        let mut last_loss = 0.0f32;
+
+        // E local epochs; each epoch reshuffles the shard and streams the
+        // chunks through the scanned train artifact.
+        for epoch in 0..self.cfg.local_epochs {
+            let mut rng = self.rng(epoch as u64);
+            let chunks = match (&*self.dataset, &self.shard) {
+                (Dataset::Image { train, .. }, ShardRef::Image(idx)) => {
+                    batcher::image_train_chunks(train, idx, &mm, &mut rng)?
+                }
+                (Dataset::Text { train, .. }, ShardRef::Text(range)) => {
+                    batcher::text_train_chunks(train, range, &mm, &mut rng)?
+                }
+                _ => return Err(Error::invalid("dataset/shard kind mismatch")),
+            };
+            let mut loss_acc = 0.0f32;
+            for chunk in &chunks {
+                let (np, loss) = engine.train_epoch(model, &params, chunk, self.cfg.lr)?;
+                params = np;
+                loss_acc += loss;
+            }
+            last_loss = loss_acc / chunks.len().max(1) as f32;
+        }
+
+        // Masking (Alg. 2 line 9-12 / Alg. 4 line 9-14).
+        let masked = match self.cfg.masking {
+            MaskPolicy::None => params,
+            MaskPolicy::Random { gamma } => {
+                let mut rng = self.rng(0xa5);
+                random_mask_rust(&params, gamma, &mm.layers, &mut rng)
+            }
+            MaskPolicy::Selective { gamma, engine: me, scope } => match me {
+                MaskEngine::Hlo => engine.mask(model, &params, &self.global, gamma)?,
+                MaskEngine::Rust => {
+                    selective_mask_rust(&params, &self.global, gamma, &mm.layers, scope)
+                }
+            },
+        };
+
+        // Wire accounting happens on the masked (sparse) payload; the
+        // Delta target then restores dropped weights to their broadcast
+        // values server-side (the server knows w_old — it sent it).
+        // Unmasked uploads are a full model by definition (incidental exact
+        // zeros in trained weights are not a sparsity the protocol exploits).
+        let nnz = match self.cfg.masking {
+            MaskPolicy::None => masked.len(),
+            _ => masked.iter().filter(|v| **v != 0.0).count(),
+        };
+        let n_samples = self.shard.n_samples(mm.x_elem_shape.first().copied().unwrap_or(1) + 1) as u32;
+        let wire = encode_update(
+            self.client_id as u32,
+            self.round as u32,
+            n_samples,
+            &masked,
+            self.cfg.encoding,
+        );
+        let upload_bytes = wire.len();
+
+        // Lossy encodings (q8) must aggregate what the server would actually
+        // receive, so decode our own message back when the codec is lossy.
+        let received = match self.cfg.encoding {
+            crate::transport::codec::Encoding::AutoQ8 => {
+                crate::transport::codec::decode_update(&wire)?.params
+            }
+            _ => masked,
+        };
+
+        let final_params = match self.cfg.mask_target {
+            MaskTarget::Weights => received,
+            MaskTarget::Delta => apply_delta_target(&received, &self.global, &mm.layers),
+        };
+
+        Ok(LocalOutcome {
+            client: self.client_id,
+            params: final_params,
+            n_samples,
+            train_loss: last_loss,
+            nnz,
+            upload_bytes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_sample_counts() {
+        let img = ShardRef::Image((0..37).collect());
+        assert_eq!(img.n_samples(33), 37);
+        let txt = ShardRef::Text(100..430);
+        assert_eq!(txt.n_samples(33), 10);
+    }
+}

@@ -1,0 +1,413 @@
+//! Upload masking policies (paper §3.2.1 and §4.2).
+//!
+//! * **Random masking** (Alg. 2): each maskable layer keeps a random
+//!   `gamma` fraction of entries (`randi` in the paper), seeded per
+//!   (client, round) so runs replay exactly.
+//! * **Selective masking** (Alg. 4): keep the `gamma` fraction with the
+//!   largest `|W_{t+1} - W_t|` per layer (Eq. 4–5).
+//!
+//! Selective masking has two interchangeable implementations:
+//! the **L1 Pallas kernel** baked into each model's `mask` artifact
+//! (threshold bisection; the production path), and an **exact rust**
+//! `select_nth_unstable` fallback used as a baseline, for property tests
+//! (kernel vs. exact), and by the masking criterion bench.
+//!
+//! `MaskTarget` selects what is masked: the paper-literal `Weights`
+//! (Alg. 2/4 zero entries of `W_{t+1}` itself) or the production-sane
+//! `Delta` variant (send `W_t + M (x) (W_{t+1} - W_t)`, i.e. a sparse
+//! delta the server can apply losslessly) — an ablation DESIGN.md §4
+//! calls out.
+
+use crate::runtime::manifest::LayerInfo;
+use crate::sim::rng::Rng;
+use crate::util::error::{Error, Result};
+
+/// What gets masked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskTarget {
+    /// Paper-literal: upload `M (x) W_{t+1}` (zeros replace dropped weights).
+    Weights,
+    /// Ablation: upload `W_t + M (x) delta` (dropped weights keep their old
+    /// value server-side; the wire carries the sparse delta).
+    Delta,
+}
+
+/// Top-k scope for selective masking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskScope {
+    /// Per-layer top-k, exactly Alg. 4's layer loop (default).
+    PerLayer,
+    /// Single global top-k over all maskable parameters (ablation).
+    Global,
+}
+
+/// Which implementation computes the selective mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskEngine {
+    /// The AOT Pallas kernel (`{model}_mask.hlo.txt`) — production path.
+    Hlo,
+    /// Exact rust select_nth — baseline/oracle.
+    Rust,
+}
+
+/// The masking policy attached to an experiment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MaskPolicy {
+    /// Upload everything (vanilla FedAvg).
+    None,
+    /// Alg. 2: random keep of rate `gamma`.
+    Random { gamma: f32 },
+    /// Alg. 4: top-k keep of rate `gamma` by |delta|.
+    Selective {
+        gamma: f32,
+        engine: MaskEngine,
+        scope: MaskScope,
+    },
+}
+
+impl MaskPolicy {
+    pub fn selective(gamma: f32) -> MaskPolicy {
+        MaskPolicy::Selective {
+            gamma,
+            engine: MaskEngine::Hlo,
+            scope: MaskScope::PerLayer,
+        }
+    }
+
+    pub fn random(gamma: f32) -> MaskPolicy {
+        MaskPolicy::Random { gamma }
+    }
+
+    pub fn gamma(&self) -> f32 {
+        match self {
+            MaskPolicy::None => 1.0,
+            MaskPolicy::Random { gamma } | MaskPolicy::Selective { gamma, .. } => *gamma,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let g = self.gamma();
+        if !(0.0 < g && g <= 1.0) {
+            return Err(Error::invalid(format!("masking gamma {g} not in (0, 1]")));
+        }
+        Ok(())
+    }
+
+    /// From config strings: `none`, `random`, `selective`, `selective-rust`,
+    /// `selective-global`.
+    pub fn from_config(kind: &str, gamma: f32) -> Result<MaskPolicy> {
+        let p = match kind {
+            "none" => MaskPolicy::None,
+            "random" => MaskPolicy::Random { gamma },
+            "selective" => MaskPolicy::selective(gamma),
+            "selective-rust" => MaskPolicy::Selective {
+                gamma,
+                engine: MaskEngine::Rust,
+                scope: MaskScope::PerLayer,
+            },
+            "selective-global" => MaskPolicy::Selective {
+                gamma,
+                engine: MaskEngine::Rust,
+                scope: MaskScope::Global,
+            },
+            other => return Err(Error::invalid(format!("unknown masking '{other}'"))),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            MaskPolicy::None => "nomask".into(),
+            MaskPolicy::Random { gamma } => format!("random(g={gamma})"),
+            MaskPolicy::Selective { gamma, engine, scope } => format!(
+                "selective(g={gamma},{}{})",
+                match engine {
+                    MaskEngine::Hlo => "hlo",
+                    MaskEngine::Rust => "rust",
+                },
+                match scope {
+                    MaskScope::PerLayer => "",
+                    MaskScope::Global => ",global",
+                }
+            ),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Rust implementations (exact oracle + random)
+// ----------------------------------------------------------------------
+
+/// Keep-count for a segment of `size` entries at rate `gamma` —
+/// `round(gamma * size)`, the convention shared with the Pallas kernel.
+pub fn keep_count(size: usize, gamma: f32) -> usize {
+    ((gamma as f64) * size as f64).round() as usize
+}
+
+/// Exact selective mask of one flat segment: zero all but the top-k
+/// |w_new - w_old| entries of `w_new[seg]`. O(n) via select_nth_unstable.
+fn selective_mask_segment(w_new: &mut [f32], w_old: &[f32], gamma: f32) {
+    let n = w_new.len();
+    let k = keep_count(n, gamma);
+    if k >= n {
+        return;
+    }
+    if k == 0 {
+        w_new.fill(0.0);
+        return;
+    }
+    let mut deltas: Vec<f32> = w_new
+        .iter()
+        .zip(w_old)
+        .map(|(n, o)| (n - o).abs())
+        .collect();
+    // threshold = k-th largest |delta|
+    let mut scratch = deltas.clone();
+    let (_, &mut thresh, _) =
+        scratch.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+    // keep d >= thresh, but cap kept count at k to resolve ties exactly
+    // like the sort-based oracle (first-come within equal values).
+    let mut kept = 0usize;
+    for i in 0..n {
+        if deltas[i] > thresh {
+            kept += 1;
+        }
+    }
+    for i in 0..n {
+        let keep = if deltas[i] > thresh {
+            true
+        } else if deltas[i] == thresh && kept < k {
+            kept += 1;
+            true
+        } else {
+            false
+        };
+        if !keep {
+            w_new[i] = 0.0;
+        }
+        let _ = &mut deltas;
+    }
+}
+
+/// Exact rust selective masking over the layer table (the oracle the HLO
+/// kernel path is property-tested against).
+pub fn selective_mask_rust(
+    w_new: &[f32],
+    w_old: &[f32],
+    gamma: f32,
+    layers: &[LayerInfo],
+    scope: MaskScope,
+) -> Vec<f32> {
+    assert_eq!(w_new.len(), w_old.len());
+    let mut out = w_new.to_vec();
+    match scope {
+        MaskScope::PerLayer => {
+            for l in layers {
+                if l.masked {
+                    let seg = l.offset..l.offset + l.size;
+                    selective_mask_segment(&mut out[seg.clone()], &w_old[seg], gamma);
+                }
+            }
+        }
+        MaskScope::Global => {
+            // gather maskable entries, mask jointly, scatter back
+            let idx: Vec<usize> = layers
+                .iter()
+                .filter(|l| l.masked)
+                .flat_map(|l| l.offset..l.offset + l.size)
+                .collect();
+            let mut gathered_new: Vec<f32> = idx.iter().map(|&i| w_new[i]).collect();
+            let gathered_old: Vec<f32> = idx.iter().map(|&i| w_old[i]).collect();
+            selective_mask_segment(&mut gathered_new, &gathered_old, gamma);
+            for (j, &i) in idx.iter().enumerate() {
+                out[i] = gathered_new[j];
+            }
+        }
+    }
+    out
+}
+
+/// Random masking (Alg. 2): Bernoulli(gamma) keep per entry of each
+/// maskable layer, derived from `rng` (seeded per client/round upstream).
+pub fn random_mask_rust(w_new: &[f32], gamma: f32, layers: &[LayerInfo], rng: &mut Rng) -> Vec<f32> {
+    let mut out = w_new.to_vec();
+    for l in layers {
+        if !l.masked {
+            continue;
+        }
+        for v in &mut out[l.offset..l.offset + l.size] {
+            if rng.next_f32() >= gamma {
+                *v = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// Convert a masked-weights vector into the `Delta` target form:
+/// positions the mask dropped revert to `w_old` instead of zero.
+/// (A dropped position is one where masked == 0 but w_old != 0 — exact
+/// because kept entries are w_new verbatim and true zeros are untouched.)
+pub fn apply_delta_target(masked: &[f32], w_old: &[f32], layers: &[LayerInfo]) -> Vec<f32> {
+    let mut out = masked.to_vec();
+    for l in layers {
+        if !l.masked {
+            continue;
+        }
+        for i in l.offset..l.offset + l.size {
+            if masked[i] == 0.0 {
+                out[i] = w_old[i];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn layers_of(sizes: &[(usize, bool)]) -> Vec<LayerInfo> {
+        let mut out = Vec::new();
+        let mut offset = 0;
+        for (i, &(size, masked)) in sizes.iter().enumerate() {
+            out.push(LayerInfo {
+                name: format!("l{i}"),
+                shape: vec![size],
+                offset,
+                size,
+                masked,
+            });
+            offset += size;
+        }
+        out
+    }
+
+    fn gen_pair(g: &mut Gen, n: usize) -> (Vec<f32>, Vec<f32>) {
+        (g.normal_vec(n), g.normal_vec(n))
+    }
+
+    #[test]
+    fn selective_keeps_exactly_k_per_layer() {
+        check("selective exact k", 60, |g| {
+            let n = g.usize_in(4, 800);
+            let gamma = g.f32_in(0.05, 1.0);
+            let (wn, wo) = gen_pair(g, n);
+            let layers = layers_of(&[(n, true)]);
+            let out = selective_mask_rust(&wn, &wo, gamma, &layers, MaskScope::PerLayer);
+            let kept = out.iter().filter(|v| **v != 0.0).count();
+            // exact-to-the-tie: continuous data means kept == k (unless a
+            // kept w_new is exactly 0.0, measure-zero for normals)
+            assert_eq!(kept, keep_count(n, gamma).min(n), "seed {:#x}", g.seed);
+        });
+    }
+
+    #[test]
+    fn selective_dominance_property() {
+        check("selective dominance", 60, |g| {
+            let n = g.usize_in(10, 500);
+            let gamma = g.f32_in(0.1, 0.9);
+            let (wn, wo) = gen_pair(g, n);
+            let layers = layers_of(&[(n, true)]);
+            let out = selective_mask_rust(&wn, &wo, gamma, &layers, MaskScope::PerLayer);
+            let kept_min = out
+                .iter()
+                .zip(&wn)
+                .zip(&wo)
+                .filter(|((o, _), _)| **o != 0.0)
+                .map(|((_, n), o)| (n - o).abs())
+                .fold(f32::INFINITY, f32::min);
+            let dropped_max = out
+                .iter()
+                .zip(&wn)
+                .zip(&wo)
+                .filter(|((o, _), _)| **o == 0.0)
+                .map(|((_, n), o)| (n - o).abs())
+                .fold(0.0f32, f32::max);
+            assert!(kept_min >= dropped_max, "kept {kept_min} < dropped {dropped_max}");
+        });
+    }
+
+    #[test]
+    fn unmasked_layers_pass_through() {
+        let layers = layers_of(&[(100, true), (10, false), (100, true)]);
+        let mut g = Gen::new(1);
+        let (wn, wo) = gen_pair(&mut g, 210);
+        let out = selective_mask_rust(&wn, &wo, 0.2, &layers, MaskScope::PerLayer);
+        assert_eq!(&out[100..110], &wn[100..110]);
+    }
+
+    #[test]
+    fn global_scope_moves_budget_across_layers() {
+        // layer A has huge deltas, layer B tiny ones; global top-k should
+        // spend nearly all keeps in A
+        let layers = layers_of(&[(100, true), (100, true)]);
+        let wo = vec![0.0f32; 200];
+        let mut wn = vec![0.0f32; 200];
+        for i in 0..100 {
+            wn[i] = 10.0 + i as f32; // layer A: big deltas
+            wn[100 + i] = 0.001 * (i + 1) as f32; // layer B: small
+        }
+        let global = selective_mask_rust(&wn, &wo, 0.5, &layers, MaskScope::Global);
+        let kept_a = global[..100].iter().filter(|v| **v != 0.0).count();
+        let kept_b = global[100..].iter().filter(|v| **v != 0.0).count();
+        assert_eq!(kept_a, 100);
+        assert_eq!(kept_b, 0);
+        // per-layer keeps 50/50 by construction
+        let per = selective_mask_rust(&wn, &wo, 0.5, &layers, MaskScope::PerLayer);
+        assert_eq!(per[..100].iter().filter(|v| **v != 0.0).count(), 50);
+        assert_eq!(per[100..].iter().filter(|v| **v != 0.0).count(), 50);
+    }
+
+    #[test]
+    fn random_mask_rate_and_determinism() {
+        let layers = layers_of(&[(20_000, true)]);
+        let wn = vec![1.0f32; 20_000];
+        let a = random_mask_rust(&wn, 0.3, &layers, &mut Rng::new(5));
+        let b = random_mask_rust(&wn, 0.3, &layers, &mut Rng::new(5));
+        assert_eq!(a, b);
+        let kept = a.iter().filter(|v| **v != 0.0).count() as f64 / 20_000.0;
+        assert!((kept - 0.3).abs() < 0.02, "kept {kept}");
+        let c = random_mask_rust(&wn, 0.3, &layers, &mut Rng::new(6));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn delta_target_restores_old_values() {
+        let layers = layers_of(&[(6, true)]);
+        let wo = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let masked = vec![9.0, 0.0, 9.0, 0.0, 0.0, 9.0];
+        let out = apply_delta_target(&masked, &wo, &layers);
+        assert_eq!(out, vec![9.0, 2.0, 9.0, 4.0, 5.0, 9.0]);
+    }
+
+    #[test]
+    fn gamma_one_is_identity() {
+        let layers = layers_of(&[(50, true)]);
+        let mut g = Gen::new(2);
+        let (wn, wo) = gen_pair(&mut g, 50);
+        let out = selective_mask_rust(&wn, &wo, 1.0, &layers, MaskScope::PerLayer);
+        assert_eq!(out, wn);
+    }
+
+    #[test]
+    fn policy_validation_and_labels() {
+        assert!(MaskPolicy::from_config("selective", 0.5).is_ok());
+        assert!(MaskPolicy::from_config("random", 0.0).is_err());
+        assert!(MaskPolicy::from_config("bogus", 0.5).is_err());
+        assert!(MaskPolicy::selective(0.3).label().contains("selective"));
+        assert_eq!(MaskPolicy::None.gamma(), 1.0);
+    }
+
+    #[test]
+    fn tie_handling_caps_at_k() {
+        // all deltas identical -> ties everywhere; kept must still be k
+        let layers = layers_of(&[(10, true)]);
+        let wo = vec![0.0f32; 10];
+        let wn = vec![2.0f32; 10];
+        let out = selective_mask_rust(&wn, &wo, 0.5, &layers, MaskScope::PerLayer);
+        assert_eq!(out.iter().filter(|v| **v != 0.0).count(), 5);
+    }
+}

@@ -1,0 +1,23 @@
+//! The federated-learning core — the paper's L3 contribution.
+//!
+//! * [`sampling`] — client sampling schedules: the FedAvg **static** rate
+//!   (Alg. 1) and the paper's **dynamic exponential decay** (Alg. 3,
+//!   Eq. 3), plus linear/step decay ablations.
+//! * [`masking`] — upload masking policies: none, **random** (Alg. 2) and
+//!   **selective top-k by |delta|** (Alg. 4), with both the exact rust
+//!   implementation and the L1 Pallas kernel path.
+//! * [`aggregate`] — weighted federated averaging (Eq. 2).
+//! * [`client`] — simulated on-device training (local epochs + masking +
+//!   upload encoding).
+//! * [`server`] — the round loop: sample, ACK, fan out local training over
+//!   the engine pool, aggregate, account, evaluate.
+
+pub mod aggregate;
+pub mod client;
+pub mod masking;
+pub mod sampling;
+pub mod server;
+
+pub use masking::{MaskEngine, MaskPolicy, MaskScope, MaskTarget};
+pub use sampling::SamplingSchedule;
+pub use server::{Server, ServerOutcome};

@@ -1,0 +1,247 @@
+//! Client sampling schedules (paper §3.2 and §4.1).
+//!
+//! Static sampling keeps the FedAvg fraction `C` for every round; the
+//! paper's dynamic sampling anneals it exponentially,
+//! `c(t) = C / exp(beta * t)` (Eq. 3), trading late-round participation for
+//! communication. Linear and step decay are included as ablations (the
+//! "declining rate ... can be chosen accordingly" remark in §4.1).
+//!
+//! Round indexing follows the paper: `t` starts at 1 (Alg. 3 line 6), so
+//! the first dynamic round already pays the `exp(-beta)` discount.
+
+use crate::util::error::{Error, Result};
+
+/// A sampling-rate schedule over rounds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SamplingSchedule {
+    /// Alg. 1: constant fraction `c0`.
+    Static { c0: f64 },
+    /// Alg. 3 / Eq. 3: `c0 / exp(beta * t)`.
+    DynamicExp { c0: f64, beta: f64 },
+    /// Ablation: `c0 * max(0, 1 - slope * t)`.
+    DynamicLinear { c0: f64, slope: f64 },
+    /// Ablation: multiply by `factor` every `every` rounds.
+    DynamicStep { c0: f64, every: usize, factor: f64 },
+}
+
+impl SamplingSchedule {
+    /// Parse from config strings: `static`, `dynamic-exp`, `dynamic-linear`,
+    /// `dynamic-step`.
+    pub fn from_config(kind: &str, c0: f64, param: f64) -> Result<SamplingSchedule> {
+        let s = match kind {
+            "static" => SamplingSchedule::Static { c0 },
+            "dynamic-exp" => SamplingSchedule::DynamicExp { c0, beta: param },
+            "dynamic-linear" => SamplingSchedule::DynamicLinear { c0, slope: param },
+            "dynamic-step" => SamplingSchedule::DynamicStep {
+                c0,
+                every: 10,
+                factor: param,
+            },
+            other => {
+                return Err(Error::invalid(format!(
+                    "unknown sampling schedule '{other}'"
+                )))
+            }
+        };
+        s.validate()?;
+        Ok(s)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let c0 = self.c0();
+        if !(0.0 < c0 && c0 <= 1.0) {
+            return Err(Error::invalid(format!("sampling c0 {c0} not in (0, 1]")));
+        }
+        match self {
+            SamplingSchedule::DynamicExp { beta, .. } if *beta < 0.0 => {
+                Err(Error::invalid("beta must be >= 0"))
+            }
+            SamplingSchedule::DynamicLinear { slope, .. } if *slope < 0.0 => {
+                Err(Error::invalid("slope must be >= 0"))
+            }
+            SamplingSchedule::DynamicStep { every, factor, .. }
+                if *every == 0 || !(0.0..=1.0).contains(factor) =>
+            {
+                Err(Error::invalid("step schedule needs every >= 1, factor in [0,1]"))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    pub fn c0(&self) -> f64 {
+        match self {
+            SamplingSchedule::Static { c0 }
+            | SamplingSchedule::DynamicExp { c0, .. }
+            | SamplingSchedule::DynamicLinear { c0, .. }
+            | SamplingSchedule::DynamicStep { c0, .. } => *c0,
+        }
+    }
+
+    /// Sampling rate at round `t` (1-based, per the paper).
+    pub fn rate(&self, t: usize) -> f64 {
+        assert!(t >= 1, "rounds are 1-based");
+        match self {
+            SamplingSchedule::Static { c0 } => *c0,
+            SamplingSchedule::DynamicExp { c0, beta } => c0 / (beta * t as f64).exp(),
+            SamplingSchedule::DynamicLinear { c0, slope } => {
+                (c0 * (1.0 - slope * t as f64)).max(0.0)
+            }
+            SamplingSchedule::DynamicStep { c0, every, factor } => {
+                c0 * factor.powi((t / every) as i32)
+            }
+        }
+    }
+
+    /// Number of clients to select at round `t` from `m` registered:
+    /// `max(rate * M, 1)` per Alg. 1/3, with the paper's floor of two
+    /// clients for dynamic schedules (§4.1) expressed via `min_clients`.
+    pub fn num_clients(&self, t: usize, m: usize, min_clients: usize) -> usize {
+        let raw = (self.rate(t) * m as f64).round() as usize;
+        raw.max(1).max(min_clients).min(m)
+    }
+
+    /// The paper's default client floor: 1 for static, 2 for dynamic.
+    pub fn default_min_clients(&self) -> usize {
+        match self {
+            SamplingSchedule::Static { .. } => 1,
+            _ => 2,
+        }
+    }
+
+    /// Human label for figure legends.
+    pub fn label(&self) -> String {
+        match self {
+            SamplingSchedule::Static { c0 } => format!("static(C={c0})"),
+            SamplingSchedule::DynamicExp { c0, beta } => format!("dynamic(C={c0},beta={beta})"),
+            SamplingSchedule::DynamicLinear { c0, slope } => {
+                format!("linear(C={c0},slope={slope})")
+            }
+            SamplingSchedule::DynamicStep { c0, every, factor } => {
+                format!("step(C={c0},every={every},x{factor})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn static_rate_is_constant() {
+        let s = SamplingSchedule::Static { c0: 0.3 };
+        for t in 1..100 {
+            assert_eq!(s.rate(t), 0.3);
+        }
+    }
+
+    #[test]
+    fn dynamic_exp_matches_eq3() {
+        let s = SamplingSchedule::DynamicExp { c0: 1.0, beta: 0.1 };
+        for t in [1usize, 10, 31] {
+            let want = 1.0 / (0.1 * t as f64).exp();
+            assert!((s.rate(t) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn paper_example_31_vs_10_epochs() {
+        // §5.2: "with a decay coefficient of 0.1 and the same amount of
+        // transportation cost, the dynamic method can update 31 epochs,
+        // while static method can only train 10 epochs"
+        let dynamic = SamplingSchedule::DynamicExp { c0: 1.0, beta: 0.1 };
+        let static_cost_10: f64 = 10.0; // 10 rounds at rate 1.0
+        let dynamic_cost_31: f64 = (1..=31).map(|t| dynamic.rate(t)).sum();
+        assert!(
+            dynamic_cost_31 <= static_cost_10,
+            "31 dynamic rounds ({dynamic_cost_31:.2}) should cost <= 10 static rounds"
+        );
+        let dynamic_cost_32: f64 = (1..=32).map(|t| dynamic.rate(t)).sum();
+        // 31 is the last round within the budget, consistent with the paper
+        assert!(dynamic_cost_32 > static_cost_10 * 0.9);
+    }
+
+    #[test]
+    fn num_clients_floor_behaviour() {
+        let s = SamplingSchedule::DynamicExp { c0: 1.0, beta: 0.5 };
+        // late rounds decay below 2/M; the paper floors at two clients
+        assert_eq!(s.num_clients(50, 100, 2), 2);
+        assert_eq!(s.num_clients(1, 100, 2), 61); // 100/e^0.5 ~ 60.7
+        // never exceeds m even when the floor would demand more
+        assert_eq!(s.num_clients(50, 2, 2), 2);
+        assert_eq!(s.num_clients(1, 3, 2), 2); // round(0.61 * 3) = 2
+        assert_eq!(s.default_min_clients(), 2);
+        assert_eq!(SamplingSchedule::Static { c0: 0.1 }.default_min_clients(), 1);
+    }
+
+    #[test]
+    fn step_and_linear_decay() {
+        let step = SamplingSchedule::DynamicStep {
+            c0: 1.0,
+            every: 10,
+            factor: 0.5,
+        };
+        assert_eq!(step.rate(5), 1.0);
+        assert_eq!(step.rate(10), 0.5);
+        assert_eq!(step.rate(25), 0.25);
+        let lin = SamplingSchedule::DynamicLinear { c0: 1.0, slope: 0.02 };
+        assert!((lin.rate(25) - 0.5).abs() < 1e-12);
+        assert_eq!(lin.rate(100), 0.0);
+    }
+
+    #[test]
+    fn config_parsing_and_validation() {
+        assert!(SamplingSchedule::from_config("static", 0.5, 0.0).is_ok());
+        assert!(SamplingSchedule::from_config("dynamic-exp", 1.0, 0.1).is_ok());
+        assert!(SamplingSchedule::from_config("bogus", 1.0, 0.1).is_err());
+        assert!(SamplingSchedule::from_config("static", 0.0, 0.0).is_err());
+        assert!(SamplingSchedule::from_config("static", 1.5, 0.0).is_err());
+        assert!(SamplingSchedule::from_config("dynamic-exp", 1.0, -0.1).is_err());
+    }
+
+    #[test]
+    fn prop_rate_monotone_nonincreasing_and_bounded() {
+        check("schedule monotonicity", 100, |g| {
+            let c0 = g.f64_in(0.05, 1.0);
+            let s = match g.usize_in(0, 2) {
+                0 => SamplingSchedule::DynamicExp {
+                    c0,
+                    beta: g.f64_in(0.0, 1.0),
+                },
+                1 => SamplingSchedule::DynamicLinear {
+                    c0,
+                    slope: g.f64_in(0.0, 0.05),
+                },
+                _ => SamplingSchedule::DynamicStep {
+                    c0,
+                    every: g.usize_in(1, 20),
+                    factor: g.f64_in(0.1, 1.0),
+                },
+            };
+            let mut prev = f64::INFINITY;
+            for t in 1..=100 {
+                let r = s.rate(t);
+                assert!(r <= prev + 1e-12, "rate must not increase");
+                assert!((0.0..=1.0 + 1e-12).contains(&r));
+                prev = r;
+            }
+        });
+    }
+
+    #[test]
+    fn prop_num_clients_within_bounds() {
+        check("num_clients bounds", 100, |g| {
+            let m = g.usize_in(2, 500);
+            let s = SamplingSchedule::DynamicExp {
+                c0: g.f64_in(0.05, 1.0),
+                beta: g.f64_in(0.0, 1.0),
+            };
+            let min = g.usize_in(1, 2);
+            for t in 1..=50 {
+                let n = s.num_clients(t, m, min);
+                assert!(n >= min.min(m) && n <= m, "n={n} m={m} min={min}");
+            }
+        });
+    }
+}

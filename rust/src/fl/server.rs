@@ -1,0 +1,319 @@
+//! The federated server: Alg. 1 (static) / Alg. 3 (dynamic), end to end.
+//!
+//! Per round `t` (1-based): compute the sampling rate, run the ACK
+//! selection loop against the availability model, broadcast the global
+//! model (downlink accounting), fan client jobs out over the engine pool,
+//! aggregate the returned (masked) models with weighted FedAvg, account
+//! uplink cost, advance the virtual clock, and periodically evaluate on
+//! the held-out test set.
+//!
+//! Determinism: client selection, shard shuffles and masking RNG all derive
+//! from (seed, round, client); aggregation order is fixed by client id, so
+//! the same config reproduces bit-identical runs regardless of pool width.
+
+use std::sync::Arc;
+
+use crate::config::experiment::{ExperimentConfig, NetworkKind};
+use crate::data::{batcher, loader, partition, Dataset};
+use crate::fl::aggregate::{weighted_mean, Contribution};
+use crate::fl::client::{ClientJob, LocalOutcome, ShardRef};
+use crate::metrics::recorder::{RoundRecord, RunRecorder};
+use crate::runtime::engine::EvalSums;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::pool::EnginePool;
+use crate::runtime::tensor::Batches;
+use crate::sim::availability::{AvailabilityModel, ClientState};
+use crate::sim::clock::VirtualClock;
+use crate::sim::rng::Rng;
+use crate::transport::codec::wire_bytes;
+use crate::transport::cost::CostLedger;
+use crate::transport::network::NetworkModel;
+use crate::util::error::{Error, Result};
+
+/// Result of a completed run.
+#[derive(Debug)]
+pub struct ServerOutcome {
+    pub recorder: RunRecorder,
+    pub final_params: Vec<f32>,
+    pub ledger: CostLedger,
+}
+
+/// The coordinator.
+pub struct Server {
+    cfg: Arc<ExperimentConfig>,
+    pool: Arc<EnginePool>,
+    dataset: Arc<Dataset>,
+    shards: Vec<ShardRef>,
+    eval_chunks: Arc<Vec<Batches>>,
+    params: Arc<Vec<f32>>,
+    p: usize,
+    layers: Vec<crate::runtime::manifest::LayerInfo>,
+    ledger: CostLedger,
+    clock: VirtualClock,
+    availability: AvailabilityModel,
+    network: NetworkModel,
+    recorder: RunRecorder,
+}
+
+impl Server {
+    /// Build a server: load + partition data, spin up the engine pool,
+    /// initialize the global model through the init artifact.
+    pub fn new(cfg: ExperimentConfig, manifest: &Manifest) -> Result<Server> {
+        cfg.validate()?;
+        let pool = Arc::new(EnginePool::new(manifest, &[cfg.model.as_str()], cfg.workers)?);
+        Server::with_pool(cfg, manifest, pool)
+    }
+
+    /// Build a server over an existing pool (figure sweeps share one pool
+    /// across many configs to amortize artifact compilation).
+    pub fn with_pool(
+        cfg: ExperimentConfig,
+        manifest: &Manifest,
+        pool: Arc<EnginePool>,
+    ) -> Result<Server> {
+        cfg.validate()?;
+        let mm = manifest.model(&cfg.model)?.clone();
+        let spec = cfg.dataset_spec()?;
+        let dataset = Arc::new(loader::load(&spec, std::path::Path::new("data"))?);
+
+        // Partition across M clients.
+        let mut prng = Rng::new(cfg.seed).fork(0xda7a);
+        let shards: Vec<ShardRef> = match &*dataset {
+            Dataset::Image { train, .. } => {
+                partition::partition_images(&train.y, cfg.clients, cfg.partition, &mut prng)?
+                    .into_iter()
+                    .map(ShardRef::Image)
+                    .collect()
+            }
+            Dataset::Text { train, .. } => partition::partition_text(train.len(), cfg.clients)?
+                .into_iter()
+                .map(ShardRef::Text)
+                .collect(),
+        };
+
+        // Pre-build eval chunks once.
+        let eval_chunks = Arc::new(match &*dataset {
+            Dataset::Image { test, .. } => {
+                batcher::image_eval_chunks(test, &mm, cfg.eval_max_chunks)?
+            }
+            Dataset::Text { test, .. } => {
+                batcher::text_eval_chunks(test, &mm, cfg.eval_max_chunks)?
+            }
+        });
+
+        // Global model init through the artifact (seeded).
+        let model = cfg.model.clone();
+        let seed = cfg.seed as i32;
+        let params = pool
+            .submit(move |e| e.init(&model, seed))
+            .recv()
+            .map_err(|_| Error::Engine("init job lost".into()))??;
+        let p = params.len();
+
+        let availability = AvailabilityModel::new(cfg.ack_prob, cfg.straggler_prob, cfg.seed ^ 0xacc);
+        let network = match cfg.network {
+            NetworkKind::Ideal => NetworkModel::ideal(),
+            NetworkKind::Simulated => NetworkModel::default(),
+        };
+        let recorder = RunRecorder::new(cfg.label.clone());
+
+        Ok(Server {
+            cfg: Arc::new(cfg),
+            pool,
+            dataset,
+            shards,
+            eval_chunks,
+            params: Arc::new(params),
+            p,
+            layers: mm.layers.clone(),
+            ledger: CostLedger::new(),
+            clock: VirtualClock::new(),
+            availability,
+            network,
+            recorder,
+        })
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    /// ACK selection loop (Alg. 1/3 lines 9–14): walk a seeded permutation
+    /// of the registry, requesting connections until `want` clients ACK.
+    /// Returns `(completers, stragglers)` — stragglers ACKed (and therefore
+    /// receive the broadcast, paying downlink) but miss the round deadline
+    /// and are dropped before aggregation. Both lists sorted for
+    /// deterministic aggregation order.
+    fn select_clients(&self, round: usize, want: usize) -> (Vec<usize>, Vec<usize>) {
+        let mut order: Vec<usize> = (0..self.cfg.clients).collect();
+        let mut rng = Rng::new(self.cfg.seed).fork(round as u64).fork(0x5e1);
+        rng.shuffle(&mut order);
+        let mut completers = Vec::with_capacity(want);
+        let mut stragglers = Vec::new();
+        for &c in &order {
+            if completers.len() + stragglers.len() >= want {
+                break;
+            }
+            match self.availability.state(round as u64, c as u64) {
+                ClientState::Available => completers.push(c),
+                ClientState::Straggler => stragglers.push(c),
+                ClientState::Offline => {}
+            }
+        }
+        if completers.is_empty() {
+            // Degenerate availability: fall back to the first candidate so a
+            // run cannot deadlock (logged; the paper assumes full ACK).
+            log::warn!("round {round}: no client completed; forcing client {}", order[0]);
+            completers.push(order[0]);
+            stragglers.retain(|&c| c != order[0]);
+        }
+        completers.sort_unstable();
+        stragglers.sort_unstable();
+        (completers, stragglers)
+    }
+
+    /// Execute one round (1-based `t`). Returns the round record.
+    pub fn run_round(&mut self, t: usize) -> Result<RoundRecord> {
+        let rate = self.cfg.sampling.rate(t);
+        let want = self
+            .cfg
+            .sampling
+            .num_clients(t, self.cfg.clients, self.cfg.min_clients);
+        let (selected, stragglers) = self.select_clients(t, want);
+
+        // Downlink: broadcast the dense global model to every client that
+        // ACKed — stragglers included (their download is spent bandwidth
+        // even though their update misses the deadline).
+        let download_bytes = wire_bytes(self.p, self.p, crate::transport::codec::Encoding::Dense);
+        for _ in selected.iter().chain(&stragglers) {
+            self.ledger.record_download(download_bytes);
+        }
+        if !stragglers.is_empty() {
+            log::debug!("round {t}: {} stragglers dropped past deadline", stragglers.len());
+        }
+
+        // Fan out local training.
+        let jobs: Vec<_> = selected
+            .iter()
+            .map(|&cid| {
+                let job = ClientJob {
+                    client_id: cid,
+                    round: t,
+                    dataset: Arc::clone(&self.dataset),
+                    shard: self.shards[cid].clone(),
+                    global: Arc::clone(&self.params),
+                    cfg: Arc::clone(&self.cfg),
+                };
+                move |e: &crate::runtime::engine::Engine| job.run(e)
+            })
+            .collect();
+        let outcomes: Vec<LocalOutcome> = self
+            .pool
+            .map(jobs)?
+            .into_iter()
+            .collect::<Result<Vec<_>>>()?;
+
+        // Aggregate: sample-weighted FedAvg (Eq. 2) or attentive (Ji [11]).
+        let contribs: Vec<Contribution> = outcomes
+            .iter()
+            .map(|o| Contribution {
+                params: &o.params,
+                n_samples: o.n_samples,
+            })
+            .collect();
+        self.params = Arc::new(match self.cfg.aggregator {
+            crate::config::experiment::Aggregator::FedAvg => weighted_mean(&contribs)?,
+            crate::config::experiment::Aggregator::Attentive { temp } => {
+                let layers = &self.layers;
+                crate::fl::aggregate::attentive_mean(&self.params, &contribs, layers, temp)?
+            }
+        });
+
+        // Uplink accounting + virtual time.
+        let mut upload_sizes = Vec::with_capacity(outcomes.len());
+        for o in &outcomes {
+            self.ledger.record_upload(self.p, o.nnz, o.upload_bytes);
+            upload_sizes.push(o.upload_bytes);
+        }
+        let compute_s = selected
+            .iter()
+            .map(|&c| {
+                self.availability
+                    .compute_time(t as u64, c as u64, self.cfg.local_epochs)
+            })
+            .fold(0.0f64, f64::max);
+        self.clock.advance(self.network.download_time(download_bytes));
+        self.clock.advance(compute_s);
+        self.clock
+            .advance(self.network.upload_round_time(&upload_sizes));
+
+        let train_loss = outcomes.iter().map(|o| o.train_loss as f64).sum::<f64>()
+            / outcomes.len() as f64;
+
+        // Periodic evaluation.
+        let eval = if t % self.cfg.eval_every == 0 || t == self.cfg.rounds {
+            Some(self.evaluate()?)
+        } else {
+            None
+        };
+
+        let rec = RoundRecord {
+            round: t,
+            sample_rate: rate,
+            clients: selected.len(),
+            train_loss,
+            test_loss: eval.map(|e| e.mean_loss()).unwrap_or(f64::NAN),
+            test_accuracy: eval.map(|e| e.accuracy()).unwrap_or(f64::NAN),
+            test_perplexity: eval.map(|e| e.perplexity()).unwrap_or(f64::NAN),
+            uplink_units: self.ledger.uplink_units,
+            uplink_bytes: self.ledger.uplink_bytes,
+            virtual_time_s: self.clock.now(),
+        };
+        self.recorder.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Evaluate the current global model over the pre-built eval chunks,
+    /// fanned out across the pool.
+    pub fn evaluate(&self) -> Result<EvalSums> {
+        let jobs: Vec<_> = (0..self.eval_chunks.len())
+            .map(|i| {
+                let chunks = Arc::clone(&self.eval_chunks);
+                let params = Arc::clone(&self.params);
+                let model = self.cfg.model.clone();
+                move |e: &crate::runtime::engine::Engine| e.eval_chunk(&model, &params, &chunks[i])
+            })
+            .collect();
+        let mut total = EvalSums::default();
+        for s in self.pool.map(jobs)? {
+            total.add(s?);
+        }
+        Ok(total)
+    }
+
+    /// Run all configured rounds.
+    pub fn run(mut self) -> Result<ServerOutcome> {
+        let rounds = self.cfg.rounds;
+        for t in 1..=rounds {
+            let rec = self.run_round(t)?;
+            log::info!(
+                "[{}] round {t}/{rounds}: clients={} rate={:.3} loss={:.4} acc={:.4} cost={:.2}u",
+                self.cfg.label,
+                rec.clients,
+                rec.sample_rate,
+                rec.train_loss,
+                rec.test_accuracy,
+                rec.uplink_units,
+            );
+        }
+        Ok(ServerOutcome {
+            recorder: self.recorder,
+            final_params: Arc::try_unwrap(self.params).unwrap_or_else(|arc| (*arc).clone()),
+            ledger: self.ledger,
+        })
+    }
+}

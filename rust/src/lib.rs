@@ -1,0 +1,35 @@
+//! # fedmask — communication-efficient federated learning
+//!
+//! A three-layer reproduction of *Dynamic Sampling and Selective Masking for
+//! Communication-Efficient Federated Learning* (Ji, Jiang, Walid, Li; cs.LG
+//! 2020):
+//!
+//! * **Layer 3 (this crate)** — the federated runtime: client registry,
+//!   per-round sampling scheduler ([`fl::sampling`]), masking policies
+//!   ([`fl::masking`]), weighted FedAvg aggregation ([`fl::aggregate`]),
+//!   sparse transport + byte accounting ([`transport`]), simulated network
+//!   and client availability ([`sim`]), metrics, config, CLI, and the
+//!   paper-figure harness ([`figures`]).
+//! * **Layer 2 (build-time JAX)** — the client learners (LeNet / VGG-mini /
+//!   tied-embedding GRU LM) AOT-lowered to HLO text artifacts that
+//!   [`runtime`] loads and executes via PJRT. Python never runs at request
+//!   time.
+//! * **Layer 1 (build-time Pallas)** — the selective-masking top-k kernel,
+//!   threshold-bisection formulation, baked into each model's `*_mask`
+//!   artifact.
+//!
+//! See `DESIGN.md` for the architecture and substitution notes and
+//! `EXPERIMENTS.md` for the paper-vs-measured record.
+
+pub mod config;
+pub mod data;
+pub mod figures;
+pub mod fl;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod transport;
+pub mod util;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,144 @@
+//! `fedmask` CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! fedmask figure <table1|fig3..fig9> [--out csv] [--rounds N] [--clients M]
+//! fedmask run --config exp.json [--out csv]
+//! fedmask eq6 --c0 1.0 --beta 0.1 --gamma 0.5 --rounds 50
+//! fedmask inspect [--artifacts dir]
+//! fedmask help [command]
+//! ```
+
+use fedmask::config::experiment::ExperimentConfig;
+use fedmask::figures;
+use fedmask::fl::server::Server;
+use fedmask::runtime::manifest::Manifest;
+use fedmask::transport::cost::eq6_cost;
+use fedmask::util::cli::{render_help, Args, OptSpec};
+use fedmask::util::error::Result;
+use fedmask::util::logging;
+
+const RUN_OPTS: &[OptSpec] = &[
+    OptSpec::value("config", "experiment JSON config path"),
+    OptSpec::value("out", "write per-round CSV here"),
+    OptSpec::value("save-config", "write the resolved config JSON here"),
+];
+
+const EQ6_OPTS: &[OptSpec] = &[
+    OptSpec::value("c0", "initial sampling rate C (default 1.0)"),
+    OptSpec::value("beta", "decay coefficient (default 0.1)"),
+    OptSpec::value("gamma", "masking rate (default 1.0)"),
+    OptSpec::value("rounds", "communication rounds R (default 50)"),
+];
+
+const INSPECT_OPTS: &[OptSpec] = &[OptSpec::value("artifacts", "artifacts directory")];
+
+fn usage() -> String {
+    let figs = figures::ALL.join("|");
+    format!(
+        "fedmask — communication-efficient federated learning (Ji et al. 2020 reproduction)\n\n\
+         usage:\n\
+         \x20 fedmask figure <{figs}> [options]   regenerate a paper table/figure\n\
+         \x20 fedmask run --config exp.json        run one experiment from JSON\n\
+         \x20 fedmask eq6 [options]                evaluate the Eq. 6 cost closed form\n\
+         \x20 fedmask inspect                      describe the loaded artifacts\n\
+         \x20 fedmask help <command>               detailed options\n"
+    )
+}
+
+fn cmd_figure(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv.to_vec(), figures::common::FIGURE_OPTS)?;
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| fedmask::Error::invalid(format!("figure id required: {}", figures::ALL.join(", "))))?;
+    figures::run(id, &args)
+}
+
+fn cmd_run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv.to_vec(), RUN_OPTS)?;
+    let config_path = args
+        .get("config")
+        .ok_or_else(|| fedmask::Error::invalid("--config is required"))?;
+    let cfg = ExperimentConfig::load(std::path::Path::new(config_path))?;
+    if let Some(path) = args.get("save-config") {
+        cfg.save(std::path::Path::new(path))?;
+    }
+    let manifest = Manifest::load("artifacts")?;
+    let outcome = Server::new(cfg, &manifest)?.run()?;
+    println!("{}", outcome.recorder.summary());
+    if let Some(path) = args.get("out") {
+        outcome.recorder.write_csv(std::path::Path::new(path))?;
+        eprintln!("wrote {path}");
+    } else {
+        outcome.recorder.table().print();
+    }
+    Ok(())
+}
+
+fn cmd_eq6(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv.to_vec(), EQ6_OPTS)?;
+    let c0 = args.get_or("c0", 1.0f64)?;
+    let beta = args.get_or("beta", 0.1f64)?;
+    let gamma = args.get_or("gamma", 1.0f64)?;
+    let rounds = args.get_or("rounds", 50usize)?;
+    let cost = eq6_cost(c0, beta, gamma, rounds);
+    println!(
+        "f(beta={beta}, gamma={gamma}) over R={rounds} rounds with C={c0}: \
+         {cost:.6} units/round/client ({:.2}% of static dense)",
+        100.0 * cost / (c0 * 1.0)
+    );
+    Ok(())
+}
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv.to_vec(), INSPECT_OPTS)?;
+    let manifest = Manifest::load(args.get("artifacts").unwrap_or("artifacts"))?;
+    print!("{}", fedmask::model::describe_manifest(&manifest));
+    Ok(())
+}
+
+fn cmd_help(argv: &[String]) {
+    match argv.first().map(String::as_str) {
+        Some("figure") => print!(
+            "{}",
+            render_help("fedmask figure", "regenerate a paper table/figure", figures::common::FIGURE_OPTS)
+        ),
+        Some("run") => print!("{}", render_help("fedmask run", "run one experiment", RUN_OPTS)),
+        Some("eq6") => print!("{}", render_help("fedmask eq6", "Eq. 6 closed form", EQ6_OPTS)),
+        Some("inspect") => print!(
+            "{}",
+            render_help("fedmask inspect", "describe loaded artifacts", INSPECT_OPTS)
+        ),
+        _ => print!("{}", usage()),
+    }
+}
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd {
+        "figure" => cmd_figure(&rest),
+        "run" => cmd_run(&rest),
+        "eq6" => cmd_eq6(&rest),
+        "inspect" => cmd_inspect(&rest),
+        "help" | "--help" | "-h" => {
+            cmd_help(&rest);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

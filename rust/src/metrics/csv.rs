@@ -1,0 +1,144 @@
+//! Tiny CSV writer (RFC 4180 quoting) — figure drivers emit their series
+//! through this so results diff cleanly and plot with any tool.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::error::Result;
+
+/// Quote a field if it contains a delimiter, quote, or newline.
+pub fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// In-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Push a row; panics if the arity differs from the header (a driver
+    /// bug we want loud, not silently ragged CSV).
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row arity {} != header {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .header
+                .iter()
+                .map(|f| escape(f))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|f| escape(f)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.render().as_bytes())?;
+        Ok(())
+    }
+
+    /// Also print to stdout (figure drivers do both).
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with enough precision for plotting without noise.
+pub fn fmt(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1e6 || v.abs() < 1e-4 {
+        format!("{v:.6e}")
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = Table::new(&["round", "acc"]);
+        t.push(vec!["1".into(), "0.5".into()]);
+        t.push(vec!["2".into(), "0.75".into()]);
+        assert_eq!(t.render(), "round,acc\n1,0.5\n2,0.75\n");
+    }
+
+    #[test]
+    fn escapes_delimiters_and_quotes() {
+        assert_eq!(escape("a,b"), "\"a,b\"");
+        assert_eq!(escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(escape("plain"), "plain");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn ragged_rows_panic() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(0.5), "0.500000");
+        assert!(fmt(1e-7).contains('e'));
+        assert!(fmt(3e9).contains('e'));
+    }
+
+    #[test]
+    fn writes_to_disk() {
+        let path = std::env::temp_dir()
+            .join(format!("fedmask_csv_{}", std::process::id()))
+            .join("t.csv");
+        let mut t = Table::new(&["x"]);
+        t.push(vec!["1".into()]);
+        t.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n1\n");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+}

@@ -1,0 +1,6 @@
+//! Metrics: per-round records, run summaries, CSV output.
+
+pub mod csv;
+pub mod recorder;
+
+pub use recorder::{RoundRecord, RunRecorder};

@@ -1,0 +1,184 @@
+//! Per-round experiment records and the run-level recorder.
+
+use std::path::Path;
+
+use crate::metrics::csv::{fmt, Table};
+use crate::util::error::Result;
+
+/// Everything the coordinator knows at the end of one federated round.
+#[derive(Debug, Clone, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Sampling rate used this round (c in the paper).
+    pub sample_rate: f64,
+    /// Clients actually aggregated.
+    pub clients: usize,
+    /// Mean local training loss across selected clients.
+    pub train_loss: f64,
+    /// Test metrics (NaN if this round was not evaluated).
+    pub test_loss: f64,
+    pub test_accuracy: f64,
+    pub test_perplexity: f64,
+    /// Cumulative uplink cost in full-model units (paper metric).
+    pub uplink_units: f64,
+    /// Cumulative uplink bytes (codec-accurate).
+    pub uplink_bytes: u64,
+    /// Virtual wall-clock seconds elapsed.
+    pub virtual_time_s: f64,
+}
+
+/// Collects round records and renders them as CSV / summaries.
+#[derive(Debug, Clone, Default)]
+pub struct RunRecorder {
+    pub label: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunRecorder {
+    pub fn new(label: impl Into<String>) -> RunRecorder {
+        RunRecorder {
+            label: label.into(),
+            rounds: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.rounds.push(rec);
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.rounds.last()
+    }
+
+    /// Last round that carried an evaluation.
+    pub fn last_evaluated(&self) -> Option<&RoundRecord> {
+        self.rounds.iter().rev().find(|r| !r.test_loss.is_nan())
+    }
+
+    /// Final test accuracy (image tasks).
+    pub fn final_accuracy(&self) -> f64 {
+        self.last_evaluated().map(|r| r.test_accuracy).unwrap_or(f64::NAN)
+    }
+
+    /// Final test perplexity (LM tasks).
+    pub fn final_perplexity(&self) -> f64 {
+        self.last_evaluated().map(|r| r.test_perplexity).unwrap_or(f64::NAN)
+    }
+
+    /// Total uplink units spent (cumulative of the last round).
+    pub fn total_uplink_units(&self) -> f64 {
+        self.last().map(|r| r.uplink_units).unwrap_or(0.0)
+    }
+
+    /// CSV with one row per round.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&[
+            "label",
+            "round",
+            "sample_rate",
+            "clients",
+            "train_loss",
+            "test_loss",
+            "test_accuracy",
+            "test_perplexity",
+            "uplink_units",
+            "uplink_bytes",
+            "virtual_time_s",
+        ]);
+        for r in &self.rounds {
+            t.push(vec![
+                self.label.clone(),
+                r.round.to_string(),
+                fmt(r.sample_rate),
+                r.clients.to_string(),
+                fmt(r.train_loss),
+                fmt(r.test_loss),
+                fmt(r.test_accuracy),
+                fmt(r.test_perplexity),
+                fmt(r.uplink_units),
+                r.uplink_bytes.to_string(),
+                fmt(r.virtual_time_s),
+            ]);
+        }
+        t
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        self.table().write(path)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        match self.last_evaluated() {
+            Some(r) => format!(
+                "{}: round {} acc {:.4} ppl {:.2} loss {:.4} | uplink {:.2} units / {} bytes",
+                self.label,
+                r.round,
+                r.test_accuracy,
+                r.test_perplexity,
+                r.test_loss,
+                self.total_uplink_units(),
+                self.last().map(|l| l.uplink_bytes).unwrap_or(0),
+            ),
+            None => format!("{}: no evaluated rounds", self.label),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, acc: f64, units: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            sample_rate: 1.0,
+            clients: 10,
+            train_loss: 1.0,
+            test_loss: if acc.is_nan() { f64::NAN } else { 1.0 - acc },
+            test_accuracy: acc,
+            test_perplexity: f64::NAN,
+            uplink_units: units,
+            uplink_bytes: (units * 1000.0) as u64,
+            virtual_time_s: round as f64,
+        }
+    }
+
+    #[test]
+    fn tracks_last_evaluated_round() {
+        let mut r = RunRecorder::new("test");
+        r.push(rec(1, 0.5, 10.0));
+        r.push(rec(2, f64::NAN, 20.0)); // unevaluated round
+        assert_eq!(r.last_evaluated().unwrap().round, 1);
+        assert!((r.final_accuracy() - 0.5).abs() < 1e-12);
+        assert!((r.total_uplink_units() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_has_row_per_round() {
+        let mut r = RunRecorder::new("lbl");
+        r.push(rec(1, 0.1, 1.0));
+        r.push(rec(2, 0.2, 2.0));
+        let rendered = r.table().render();
+        assert_eq!(rendered.lines().count(), 3);
+        assert!(rendered.starts_with("label,round"));
+        assert!(rendered.contains("lbl,2"));
+    }
+
+    #[test]
+    fn summary_mentions_label_and_accuracy() {
+        let mut r = RunRecorder::new("fig3-static");
+        r.push(rec(5, 0.87, 50.0));
+        let s = r.summary();
+        assert!(s.contains("fig3-static"));
+        assert!(s.contains("0.87"));
+    }
+
+    #[test]
+    fn empty_recorder_is_graceful() {
+        let r = RunRecorder::new("empty");
+        assert!(r.final_accuracy().is_nan());
+        assert_eq!(r.total_uplink_units(), 0.0);
+        assert!(r.summary().contains("no evaluated rounds"));
+    }
+}

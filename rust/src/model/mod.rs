@@ -1,0 +1,132 @@
+//! Model registry: static facts about the model zoo that are not derivable
+//! from the artifact manifest (paper pairing, tuned defaults), plus pretty
+//! inspection of a loaded manifest.
+
+use crate::runtime::manifest::{Manifest, ModelManifest};
+use crate::util::error::{Error, Result};
+
+/// Static registry entry for one model.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelInfo {
+    pub name: &'static str,
+    /// The paper's dataset for this learner.
+    pub dataset: &'static str,
+    /// The paper's model this reproduces.
+    pub paper_model: &'static str,
+    /// Tuned default learning rate on the synthetic corpora.
+    pub default_lr: f32,
+    /// Headline metric.
+    pub metric: Metric,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    Perplexity,
+}
+
+/// All models, in paper order.
+pub const REGISTRY: &[ModelInfo] = &[
+    ModelInfo {
+        name: "lenet",
+        dataset: "mnist",
+        paper_model: "LeNet [18]",
+        default_lr: 0.05,
+        metric: Metric::Accuracy,
+    },
+    ModelInfo {
+        name: "vggmini",
+        dataset: "cifar10",
+        paper_model: "VGG-16 [31] (CPU-scaled)",
+        default_lr: 0.05,
+        metric: Metric::Accuracy,
+    },
+    ModelInfo {
+        name: "gru",
+        dataset: "wikitext2",
+        paper_model: "GRU [5] tied-embedding LM",
+        default_lr: 0.5,
+        metric: Metric::Perplexity,
+    },
+];
+
+/// Look up a registry entry.
+pub fn info(name: &str) -> Result<&'static ModelInfo> {
+    REGISTRY
+        .iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| Error::invalid(format!("unknown model '{name}'")))
+}
+
+/// Render a human-readable description of one model's manifest entry.
+pub fn describe(mm: &ModelManifest) -> String {
+    let mut out = format!(
+        "{}: task={} P={} batch={} nb_train={} nb_eval={} maskable={} ({:.1}%)\n",
+        mm.name,
+        mm.task,
+        mm.p,
+        mm.batch,
+        mm.nb_train,
+        mm.nb_eval,
+        mm.maskable_params(),
+        100.0 * mm.maskable_params() as f64 / mm.p as f64,
+    );
+    for l in &mm.layers {
+        out.push_str(&format!(
+            "  {:<10} {:?} offset={} size={} masked={}\n",
+            l.name, l.shape, l.offset, l.size, l.masked
+        ));
+    }
+    out
+}
+
+/// Render the whole manifest.
+pub fn describe_manifest(manifest: &Manifest) -> String {
+    let mut out = String::new();
+    for mm in manifest.models.values() {
+        out.push_str(&describe(mm));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_paper_models() {
+        assert_eq!(REGISTRY.len(), 3);
+        assert_eq!(info("lenet").unwrap().dataset, "mnist");
+        assert_eq!(info("gru").unwrap().metric, Metric::Perplexity);
+        assert!(info("bert").is_err());
+    }
+
+    #[test]
+    fn describe_lists_layers() {
+        use std::collections::BTreeMap;
+        let mm = ModelManifest {
+            name: "toy".into(),
+            p: 6,
+            task: "image".into(),
+            batch: 2,
+            nb_train: 1,
+            nb_eval: 1,
+            x_elem_shape: vec![3],
+            x_dtype: "f32".into(),
+            y_elem_shape: vec![],
+            layers: vec![crate::runtime::manifest::LayerInfo {
+                name: "w".into(),
+                shape: vec![2, 3],
+                offset: 0,
+                size: 6,
+                masked: true,
+            }],
+            artifacts: BTreeMap::new(),
+            meta: BTreeMap::new(),
+        };
+        let text = describe(&mm);
+        assert!(text.contains("toy"));
+        assert!(text.contains("P=6"));
+        assert!(text.contains("masked=true"));
+    }
+}

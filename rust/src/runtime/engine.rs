@@ -1,0 +1,250 @@
+//! PJRT engine: owns one CPU client plus the compiled executables for a set
+//! of models, and exposes the four artifact entry points.
+//!
+//! HLO *text* is the interchange format (`HloModuleProto::from_text_file`):
+//! jax >= 0.5 serialized protos carry 64-bit instruction ids that this
+//! xla_extension rejects, while the text parser reassigns ids cleanly.
+//!
+//! `Engine` is deliberately **not** `Send`/`Sync` (the underlying PJRT
+//! wrappers hold raw pointers); cross-thread use goes through
+//! [`crate::runtime::pool::EnginePool`], which gives each worker thread its
+//! own engine.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::manifest::{Manifest, ModelManifest};
+use crate::runtime::tensor::{Batches, XData};
+use crate::util::error::{Error, Result};
+
+/// Eval-chunk output: summed loss / metric / sample count.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EvalSums {
+    pub loss_sum: f64,
+    pub metric_sum: f64,
+    pub count: f64,
+}
+
+impl EvalSums {
+    pub fn add(&mut self, other: EvalSums) {
+        self.loss_sum += other.loss_sum;
+        self.metric_sum += other.metric_sum;
+        self.count += other.count;
+    }
+
+    /// Mean loss per sample (cross-entropy; exp of this is LM perplexity).
+    pub fn mean_loss(&self) -> f64 {
+        if self.count > 0.0 {
+            self.loss_sum / self.count
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Accuracy (image) / next-token accuracy (LM).
+    pub fn accuracy(&self) -> f64 {
+        if self.count > 0.0 {
+            self.metric_sum / self.count
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Perplexity = exp(mean token NLL); only meaningful for LM models.
+    pub fn perplexity(&self) -> f64 {
+        self.mean_loss().exp()
+    }
+}
+
+struct ModelExes {
+    init: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    mask: xla::PjRtLoadedExecutable,
+}
+
+/// One PJRT client + compiled executables for a set of models.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: BTreeMap<String, ModelExes>,
+}
+
+impl Engine {
+    /// Build a CPU engine and compile the artifacts for `models` (all
+    /// manifest models if empty).
+    pub fn load(manifest: &Manifest, models: &[&str]) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        let names: Vec<String> = if models.is_empty() {
+            manifest.models.keys().cloned().collect()
+        } else {
+            models.iter().map(|s| s.to_string()).collect()
+        };
+        let mut exes = BTreeMap::new();
+        for name in &names {
+            manifest.model(name)?; // validates existence
+            let compile = |kind: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path = manifest.artifact_path(name, kind)?;
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str()
+                        .ok_or_else(|| Error::invalid("non-utf8 artifact path"))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                Ok(client.compile(&comp)?)
+            };
+            exes.insert(
+                name.clone(),
+                ModelExes {
+                    init: compile("init")?,
+                    train: compile("train")?,
+                    eval: compile("eval")?,
+                    mask: compile("mask")?,
+                },
+            );
+            log::debug!("engine: compiled artifacts for {name}");
+        }
+        Ok(Engine {
+            client,
+            manifest: manifest.clone(),
+            exes,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.manifest.model(name)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn exes(&self, model: &str) -> Result<&ModelExes> {
+        self.exes
+            .get(model)
+            .ok_or_else(|| Error::invalid(format!("model '{model}' not loaded in engine")))
+    }
+
+    // ------------------------------------------------------------------
+    // Literal plumbing
+    // ------------------------------------------------------------------
+
+    fn params_literal(&self, model: &str, params: &[f32]) -> Result<xla::Literal> {
+        let p = self.model(model)?.p;
+        if params.len() != p {
+            return Err(Error::invalid(format!(
+                "{model}: params len {} != P {p}",
+                params.len()
+            )));
+        }
+        Ok(xla::Literal::vec1(params))
+    }
+
+    fn x_literal(&self, b: &Batches) -> Result<xla::Literal> {
+        let lit = match &b.xs {
+            XData::F32(v) => xla::Literal::vec1(v.as_slice()),
+            XData::I32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        Ok(lit.reshape(&b.x_dims())?)
+    }
+
+    fn y_literal(&self, b: &Batches) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(b.ys.as_slice()).reshape(&b.y_dims())?)
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = exe.execute::<xla::Literal>(args)?;
+        let out = bufs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Engine("executable returned no outputs".into()))?
+            .to_literal_sync()?;
+        // Artifacts are lowered with return_tuple=True.
+        Ok(out.to_tuple()?)
+    }
+
+    fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+        Ok(lit.to_vec::<f32>()?[0])
+    }
+
+    // ------------------------------------------------------------------
+    // Artifact entry points
+    // ------------------------------------------------------------------
+
+    /// `init(seed) -> params` — fresh global model parameters.
+    pub fn init(&self, model: &str, seed: i32) -> Result<Vec<f32>> {
+        let outs = self.run(&self.exes(model)?.init, &[xla::Literal::scalar(seed)])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// `train_epoch(params, xs, ys, lr) -> (params', mean_loss)` — one local
+    /// epoch (NB scanned mini-batch SGD steps) on a client shard.
+    pub fn train_epoch(
+        &self,
+        model: &str,
+        params: &[f32],
+        chunk: &Batches,
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        chunk.check_train(self.model(model)?)?;
+        let args = [
+            self.params_literal(model, params)?,
+            self.x_literal(chunk)?,
+            self.y_literal(chunk)?,
+            xla::Literal::scalar(lr),
+        ];
+        let outs = self.run(&self.exes(model)?.train, &args)?;
+        if outs.len() != 2 {
+            return Err(Error::Engine(format!(
+                "train artifact returned {} outputs, want 2",
+                outs.len()
+            )));
+        }
+        let new_params = outs[0].to_vec::<f32>()?;
+        let loss = Self::scalar_f32(&outs[1])?;
+        Ok((new_params, loss))
+    }
+
+    /// `eval_chunk(params, xs, ys) -> (loss_sum, metric_sum, count)`.
+    pub fn eval_chunk(&self, model: &str, params: &[f32], chunk: &Batches) -> Result<EvalSums> {
+        chunk.check_eval(self.model(model)?)?;
+        let args = [
+            self.params_literal(model, params)?,
+            self.x_literal(chunk)?,
+            self.y_literal(chunk)?,
+        ];
+        let outs = self.run(&self.exes(model)?.eval, &args)?;
+        if outs.len() != 3 {
+            return Err(Error::Engine(format!(
+                "eval artifact returned {} outputs, want 3",
+                outs.len()
+            )));
+        }
+        Ok(EvalSums {
+            loss_sum: Self::scalar_f32(&outs[0])? as f64,
+            metric_sum: Self::scalar_f32(&outs[1])? as f64,
+            count: Self::scalar_f32(&outs[2])? as f64,
+        })
+    }
+
+    /// `mask(w_new, w_old, gamma) -> masked` — the L1 Pallas selective-mask
+    /// kernel (per-layer top-k by |delta|, threshold bisection).
+    pub fn mask(&self, model: &str, w_new: &[f32], w_old: &[f32], gamma: f32) -> Result<Vec<f32>> {
+        if !(0.0..=1.0).contains(&gamma) {
+            return Err(Error::invalid(format!("gamma {gamma} out of [0,1]")));
+        }
+        let args = [
+            self.params_literal(model, w_new)?,
+            self.params_literal(model, w_old)?,
+            xla::Literal::scalar(gamma),
+        ];
+        let outs = self.run(&self.exes(model)?.mask, &args)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,302 @@
+//! `artifacts/manifest.json` — the contract between the python compile path
+//! and the rust runtime.
+//!
+//! The manifest describes, per model: the flat parameter count `P`, the
+//! batching geometry baked into the `train`/`eval` artifacts, the per-layer
+//! table (name/shape/offset/size/masked) mirroring the L1 kernel's segment
+//! metadata, and the artifact file names.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// Version this runtime understands; bumped in lockstep with `aot.py`.
+pub const SUPPORTED_VERSION: usize = 2;
+
+/// One parameter tensor inside the flat vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    /// Eligible for masking (ndim >= 2 weight matrices, per Alg. 2/4).
+    pub masked: bool,
+}
+
+/// Manifest entry for one model.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    /// Flat parameter count P.
+    pub p: usize,
+    /// "image" | "lm".
+    pub task: String,
+    /// Per-batch sample count B.
+    pub batch: usize,
+    /// Batches per train-epoch artifact call.
+    pub nb_train: usize,
+    /// Batches per eval-chunk artifact call.
+    pub nb_eval: usize,
+    /// Per-sample input shape.
+    pub x_elem_shape: Vec<usize>,
+    /// "f32" | "i32".
+    pub x_dtype: String,
+    /// Per-sample label shape (empty for image classification).
+    pub y_elem_shape: Vec<usize>,
+    pub layers: Vec<LayerInfo>,
+    /// kind ("init"/"train"/"eval"/"mask") -> artifact file name.
+    pub artifacts: BTreeMap<String, String>,
+    /// Free-form metadata (vocab size etc.).
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ModelManifest {
+    /// Samples consumed by one train-epoch call.
+    pub fn train_chunk_samples(&self) -> usize {
+        self.nb_train * self.batch
+    }
+
+    /// Samples consumed by one eval-chunk call.
+    pub fn eval_chunk_samples(&self) -> usize {
+        self.nb_eval * self.batch
+    }
+
+    /// Elements per input sample.
+    pub fn x_elem_len(&self) -> usize {
+        self.x_elem_shape.iter().product::<usize>().max(1)
+    }
+
+    /// Elements per label sample.
+    pub fn y_elem_len(&self) -> usize {
+        self.y_elem_shape.iter().product::<usize>().max(1)
+    }
+
+    /// Number of maskable parameters (weights; biases pass through).
+    pub fn maskable_params(&self) -> usize {
+        self.layers.iter().filter(|l| l.masked).map(|l| l.size).sum()
+    }
+
+    /// Vocab size for LM models (from meta), if present.
+    pub fn vocab(&self) -> Option<usize> {
+        self.meta.get("vocab").and_then(|v| v.as_usize().ok())
+    }
+
+    fn validate(&self) -> Result<()> {
+        let mut offset = 0;
+        for l in &self.layers {
+            if l.offset != offset {
+                return Err(Error::invalid(format!(
+                    "{}: layer '{}' offset {} != expected {offset}",
+                    self.name, l.name, l.offset
+                )));
+            }
+            let shape_size: usize = l.shape.iter().product();
+            if shape_size != l.size {
+                return Err(Error::invalid(format!(
+                    "{}: layer '{}' shape/size mismatch",
+                    self.name, l.name
+                )));
+            }
+            offset += l.size;
+        }
+        if offset != self.p {
+            return Err(Error::invalid(format!(
+                "{}: layer sizes sum {offset} != p {}",
+                self.name, self.p
+            )));
+        }
+        for kind in ["init", "train", "eval", "mask"] {
+            if !self.artifacts.contains_key(kind) {
+                return Err(Error::invalid(format!(
+                    "{}: missing artifact '{kind}'",
+                    self.name
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The whole artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Invalid(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let root = json::parse(&text)?;
+        Self::from_json(&root, dir)
+    }
+
+    /// Parse from an already-loaded JSON document (tests use this).
+    pub fn from_json(root: &Json, dir: PathBuf) -> Result<Manifest> {
+        let version = root.get("version")?.as_usize()?;
+        if version != SUPPORTED_VERSION {
+            return Err(Error::invalid(format!(
+                "manifest version {version} != supported {SUPPORTED_VERSION}; re-run `make artifacts`"
+            )));
+        }
+        let mut models = BTreeMap::new();
+        for (name, entry) in root.get("models")?.as_obj()? {
+            let mm = parse_model(name, entry)?;
+            mm.validate()?;
+            models.insert(name.clone(), mm);
+        }
+        if models.is_empty() {
+            return Err(Error::invalid("manifest has no models"));
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models.get(name).ok_or_else(|| {
+            Error::invalid(format!(
+                "model '{name}' not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// Absolute path of an artifact file for (model, kind).
+    pub fn artifact_path(&self, model: &str, kind: &str) -> Result<PathBuf> {
+        let mm = self.model(model)?;
+        let fname = mm
+            .artifacts
+            .get(kind)
+            .ok_or_else(|| Error::invalid(format!("{model}: no artifact kind '{kind}'")))?;
+        Ok(self.dir.join(fname))
+    }
+}
+
+fn parse_model(name: &str, entry: &Json) -> Result<ModelManifest> {
+    let layers = entry
+        .get("layers")?
+        .as_arr()?
+        .iter()
+        .map(|l| {
+            Ok(LayerInfo {
+                name: l.get("name")?.as_str()?.to_string(),
+                shape: l.get("shape")?.as_usize_vec()?,
+                offset: l.get("offset")?.as_usize()?,
+                size: l.get("size")?.as_usize()?,
+                masked: l.get("masked")?.as_bool()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let artifacts = entry
+        .get("artifacts")?
+        .as_obj()?
+        .iter()
+        .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+        .collect::<Result<BTreeMap<_, _>>>()?;
+    let meta = entry
+        .opt("meta")
+        .and_then(|m| m.as_obj().ok())
+        .map(|m| m.clone())
+        .unwrap_or_default();
+    Ok(ModelManifest {
+        name: name.to_string(),
+        p: entry.get("p")?.as_usize()?,
+        task: entry.get("task")?.as_str()?.to_string(),
+        batch: entry.get("batch")?.as_usize()?,
+        nb_train: entry.get("nb_train")?.as_usize()?,
+        nb_eval: entry.get("nb_eval")?.as_usize()?,
+        x_elem_shape: entry.get("x_elem_shape")?.as_usize_vec()?,
+        x_dtype: entry.get("x_dtype")?.as_str()?.to_string(),
+        y_elem_shape: entry.get("y_elem_shape")?.as_usize_vec()?,
+        layers,
+        artifacts,
+        meta,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        r#"{
+          "version": 2,
+          "models": {
+            "toy": {
+              "p": 6,
+              "task": "image",
+              "batch": 2,
+              "nb_train": 3,
+              "nb_eval": 1,
+              "x_elem_shape": [2],
+              "x_dtype": "f32",
+              "y_elem_shape": [],
+              "layers": [
+                {"name": "w", "shape": [2, 2], "offset": 0, "size": 4, "masked": true},
+                {"name": "b", "shape": [2], "offset": 4, "size": 2, "masked": false}
+              ],
+              "meta": {"vocab": 100},
+              "artifacts": {"init": "t_i.hlo.txt", "train": "t_t.hlo.txt",
+                            "eval": "t_e.hlo.txt", "mask": "t_m.hlo.txt"}
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let root = json::parse(&sample_json()).unwrap();
+        let m = Manifest::from_json(&root, PathBuf::from("/tmp/a")).unwrap();
+        let toy = m.model("toy").unwrap();
+        assert_eq!(toy.p, 6);
+        assert_eq!(toy.maskable_params(), 4);
+        assert_eq!(toy.train_chunk_samples(), 6);
+        assert_eq!(toy.vocab(), Some(100));
+        assert_eq!(
+            m.artifact_path("toy", "train").unwrap(),
+            PathBuf::from("/tmp/a/t_t.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let src = sample_json().replace("\"version\": 2", "\"version\": 1");
+        let root = json::parse(&src).unwrap();
+        let err = Manifest::from_json(&root, PathBuf::from("/tmp")).unwrap_err();
+        assert!(err.to_string().contains("version"));
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let src = sample_json().replace("\"offset\": 4", "\"offset\": 5");
+        let root = json::parse(&src).unwrap();
+        assert!(Manifest::from_json(&root, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifact_kind() {
+        let src = sample_json().replace("\"mask\": \"t_m.hlo.txt\"", "\"other\": \"x\"");
+        let root = json::parse(&src).unwrap();
+        let err = Manifest::from_json(&root, PathBuf::from("/tmp")).unwrap_err();
+        assert!(err.to_string().contains("mask"));
+    }
+
+    #[test]
+    fn unknown_model_lists_available() {
+        let root = json::parse(&sample_json()).unwrap();
+        let m = Manifest::from_json(&root, PathBuf::from("/tmp")).unwrap();
+        let err = m.model("lenet").unwrap_err().to_string();
+        assert!(err.contains("toy"));
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the coordinator hot path.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (shapes, layer tables).
+//! * [`tensor`] — host-side batch containers matching artifact input shapes.
+//! * [`engine`] — one PJRT CPU client + compiled executables; the four
+//!   entry points (`init` / `train_epoch` / `eval_chunk` / `mask`).
+//! * [`pool`] — a multi-worker engine pool (PJRT wrappers are not `Send`,
+//!   so each worker thread owns a full engine; jobs fan out over a channel).
+//!
+//! Python never runs here: the rust binary is self-contained once
+//! `make artifacts` has produced the HLO text.
+
+pub mod engine;
+pub mod manifest;
+pub mod pool;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{LayerInfo, Manifest, ModelManifest};
+pub use pool::EnginePool;
+pub use tensor::{Batches, ElemType};

@@ -1,0 +1,128 @@
+//! Multi-worker engine pool.
+//!
+//! The PJRT wrappers are not `Send`, so an [`Engine`] can never cross
+//! threads. The pool instead spawns `workers` threads that each construct
+//! their **own** engine (own PJRT client + compiled executables) and pull
+//! jobs from a shared channel. Client-local training within a federated
+//! round fans out across workers; results come back over per-job reply
+//! channels.
+//!
+//! Compilation cost is paid once per worker at startup; the figure drivers
+//! amortize it over hundreds of rounds.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::Manifest;
+use crate::util::error::{Error, Result};
+
+type Job = Box<dyn FnOnce(&Engine) + Send + 'static>;
+
+/// A pool of engine-owning worker threads.
+pub struct EnginePool {
+    tx: Sender<Job>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl EnginePool {
+    /// Spawn `workers` threads, each compiling `models` from `manifest`.
+    /// Fails fast if any worker fails to build its engine.
+    pub fn new(manifest: &Manifest, models: &[&str], workers: usize) -> Result<EnginePool> {
+        assert!(workers >= 1, "need at least one worker");
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let rx = Arc::clone(&rx);
+            let ready = ready_tx.clone();
+            let manifest = manifest.clone();
+            let models: Vec<String> = models.iter().map(|s| s.to_string()).collect();
+            handles.push(std::thread::spawn(move || {
+                let model_refs: Vec<&str> = models.iter().map(String::as_str).collect();
+                let engine = match Engine::load(&manifest, &model_refs) {
+                    Ok(e) => {
+                        let _ = ready.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                log::debug!("engine pool worker {wid} ready");
+                loop {
+                    // Hold the lock only while receiving, not while running.
+                    let job = match rx.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => break,
+                    };
+                    match job {
+                        Ok(job) => job(&engine),
+                        Err(_) => break, // sender dropped: shutdown
+                    }
+                }
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..workers {
+            ready_rx
+                .recv()
+                .map_err(|_| Error::Engine("worker died during startup".into()))??;
+        }
+        Ok(EnginePool {
+            tx,
+            handles,
+            workers,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Submit a job; returns a receiver for its result.
+    pub fn submit<R, F>(&self, f: F) -> Receiver<R>
+    where
+        R: Send + 'static,
+        F: FnOnce(&Engine) -> R + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        let job: Job = Box::new(move |engine| {
+            let _ = tx.send(f(engine));
+        });
+        // Send fails only if all workers are gone; surfaced on recv.
+        let _ = self.tx.send(job);
+        rx
+    }
+
+    /// Run a batch of jobs and collect results **in input order**.
+    pub fn map<R, F>(&self, jobs: Vec<F>) -> Result<Vec<R>>
+    where
+        R: Send + 'static,
+        F: FnOnce(&Engine) -> R + Send + 'static,
+    {
+        let receivers: Vec<Receiver<R>> = jobs.into_iter().map(|f| self.submit(f)).collect();
+        receivers
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .map_err(|_| Error::Engine("worker dropped job (thread died?)".into()))
+            })
+            .collect()
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        // Close the channel; workers exit their recv loop and join.
+        let (tx, _) = channel();
+        drop(std::mem::replace(&mut self.tx, tx));
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

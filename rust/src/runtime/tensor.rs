@@ -1,0 +1,190 @@
+//! Host-side batch containers matching the artifact input shapes.
+//!
+//! The train artifact takes `xs[NB, B, ...]` / `ys[NB, B, ...]`; this module
+//! owns those flattened buffers plus the dtype tag, and converts them into
+//! `xla::Literal`s at the engine boundary.
+
+use crate::runtime::manifest::ModelManifest;
+use crate::util::error::{Error, Result};
+
+/// Element type of the input tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElemType {
+    F32,
+    I32,
+}
+
+impl ElemType {
+    pub fn parse(s: &str) -> Result<ElemType> {
+        match s {
+            "f32" => Ok(ElemType::F32),
+            "i32" => Ok(ElemType::I32),
+            other => Err(Error::invalid(format!("unsupported dtype '{other}'"))),
+        }
+    }
+}
+
+/// Raw input data, either f32 (images) or i32 (token ids).
+#[derive(Debug, Clone, PartialEq)]
+pub enum XData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl XData {
+    pub fn len(&self) -> usize {
+        match self {
+            XData::F32(v) => v.len(),
+            XData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn elem_type(&self) -> ElemType {
+        match self {
+            XData::F32(_) => ElemType::F32,
+            XData::I32(_) => ElemType::I32,
+        }
+    }
+}
+
+/// One artifact-call worth of batches: `nb` batches of `batch` samples.
+///
+/// Invariants (checked by [`Batches::new`]):
+/// * `xs.len() == nb * batch * x_elem_len`
+/// * `ys.len() == nb * batch * y_elem_len`
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batches {
+    pub nb: usize,
+    pub batch: usize,
+    pub x_elem_shape: Vec<usize>,
+    pub y_elem_shape: Vec<usize>,
+    pub xs: XData,
+    pub ys: Vec<i32>,
+}
+
+impl Batches {
+    pub fn new(
+        nb: usize,
+        batch: usize,
+        x_elem_shape: Vec<usize>,
+        y_elem_shape: Vec<usize>,
+        xs: XData,
+        ys: Vec<i32>,
+    ) -> Result<Batches> {
+        let x_elem: usize = x_elem_shape.iter().product::<usize>().max(1);
+        let y_elem: usize = y_elem_shape.iter().product::<usize>().max(1);
+        if xs.len() != nb * batch * x_elem {
+            return Err(Error::invalid(format!(
+                "xs len {} != nb*batch*x_elem {}",
+                xs.len(),
+                nb * batch * x_elem
+            )));
+        }
+        if ys.len() != nb * batch * y_elem {
+            return Err(Error::invalid(format!(
+                "ys len {} != nb*batch*y_elem {}",
+                ys.len(),
+                nb * batch * y_elem
+            )));
+        }
+        Ok(Batches {
+            nb,
+            batch,
+            x_elem_shape,
+            y_elem_shape,
+            xs,
+            ys,
+        })
+    }
+
+    /// Total sample count in this chunk.
+    pub fn samples(&self) -> usize {
+        self.nb * self.batch
+    }
+
+    /// Full xs dims for the literal: `[nb, batch, ...x_elem_shape]`.
+    pub fn x_dims(&self) -> Vec<i64> {
+        let mut d = vec![self.nb as i64, self.batch as i64];
+        d.extend(self.x_elem_shape.iter().map(|&s| s as i64));
+        d
+    }
+
+    /// Full ys dims for the literal: `[nb, batch, ...y_elem_shape]`.
+    pub fn y_dims(&self) -> Vec<i64> {
+        let mut d = vec![self.nb as i64, self.batch as i64];
+        d.extend(self.y_elem_shape.iter().map(|&s| s as i64));
+        d
+    }
+
+    /// Check this chunk is compatible with a model's train artifact.
+    pub fn check_train(&self, mm: &ModelManifest) -> Result<()> {
+        self.check(mm, mm.nb_train, "train")
+    }
+
+    /// Check this chunk is compatible with a model's eval artifact.
+    pub fn check_eval(&self, mm: &ModelManifest) -> Result<()> {
+        self.check(mm, mm.nb_eval, "eval")
+    }
+
+    fn check(&self, mm: &ModelManifest, nb: usize, kind: &str) -> Result<()> {
+        if self.nb != nb || self.batch != mm.batch {
+            return Err(Error::invalid(format!(
+                "{kind} chunk geometry ({}, {}) != artifact ({nb}, {})",
+                self.nb, self.batch, mm.batch
+            )));
+        }
+        if self.x_elem_shape != mm.x_elem_shape {
+            return Err(Error::invalid(format!(
+                "{kind} x_elem_shape {:?} != artifact {:?}",
+                self.x_elem_shape, mm.x_elem_shape
+            )));
+        }
+        let want = ElemType::parse(&mm.x_dtype)?;
+        if self.xs.elem_type() != want {
+            return Err(Error::invalid(format!("{kind} dtype mismatch")));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_invariants_enforced() {
+        let xs = XData::F32(vec![0.0; 2 * 3 * 4]);
+        let ys = vec![0i32; 2 * 3];
+        let b = Batches::new(2, 3, vec![4], vec![], xs, ys).unwrap();
+        assert_eq!(b.samples(), 6);
+        assert_eq!(b.x_dims(), vec![2, 3, 4]);
+        assert_eq!(b.y_dims(), vec![2, 3]);
+    }
+
+    #[test]
+    fn wrong_lengths_rejected() {
+        let xs = XData::F32(vec![0.0; 5]);
+        assert!(Batches::new(2, 3, vec![4], vec![], xs, vec![0; 6]).is_err());
+        let xs = XData::F32(vec![0.0; 24]);
+        assert!(Batches::new(2, 3, vec![4], vec![], xs, vec![0; 5]).is_err());
+    }
+
+    #[test]
+    fn lm_label_shape() {
+        let xs = XData::I32(vec![0; 2 * 3 * 8]);
+        let ys = vec![0i32; 2 * 3 * 8];
+        let b = Batches::new(2, 3, vec![8], vec![8], xs, ys).unwrap();
+        assert_eq!(b.y_dims(), vec![2, 3, 8]);
+    }
+
+    #[test]
+    fn elem_type_parse() {
+        assert_eq!(ElemType::parse("f32").unwrap(), ElemType::F32);
+        assert_eq!(ElemType::parse("i32").unwrap(), ElemType::I32);
+        assert!(ElemType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Client availability / straggler model.
+//!
+//! Algorithms 1 and 3 of the paper select clients with an ACK handshake:
+//! the server keeps requesting until `m` clients have acknowledged. This
+//! module decides, per (round, client), whether the device ACKs and how
+//! long its local round trip takes — mirroring the cross-device reality
+//! (devices are intermittently online, compute at different speeds) that
+//! the paper's single-machine simulation abstracts away.
+
+use crate::sim::rng::Rng;
+
+/// Availability status of one client for one round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientState {
+    /// Device answers the connection request.
+    Available,
+    /// Device never ACKs this round (offline / declined).
+    Offline,
+    /// Device ACKs but would exceed the round deadline (dropped mid-round).
+    Straggler,
+}
+
+/// Stochastic availability model, evaluated deterministically per
+/// (seed, round, client).
+#[derive(Debug, Clone)]
+pub struct AvailabilityModel {
+    /// Probability a client ACKs a connection request.
+    pub ack_prob: f64,
+    /// Probability an ACKed client then straggles past the deadline.
+    pub straggler_prob: f64,
+    /// Mean local compute time per epoch (virtual seconds).
+    pub compute_mean_s: f64,
+    /// Multiplicative jitter spread (+- fraction of the mean).
+    pub compute_jitter: f64,
+    seed: u64,
+}
+
+impl Default for AvailabilityModel {
+    /// Default: the paper's idealized setting — everyone available,
+    /// homogeneous compute. Figure drivers use this; failure-injection
+    /// tests and the ablation benches tighten it.
+    fn default() -> Self {
+        AvailabilityModel {
+            ack_prob: 1.0,
+            straggler_prob: 0.0,
+            compute_mean_s: 1.0,
+            compute_jitter: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl AvailabilityModel {
+    pub fn new(ack_prob: f64, straggler_prob: f64, seed: u64) -> AvailabilityModel {
+        assert!((0.0..=1.0).contains(&ack_prob), "ack_prob out of range");
+        assert!(
+            (0.0..=1.0).contains(&straggler_prob),
+            "straggler_prob out of range"
+        );
+        AvailabilityModel {
+            ack_prob,
+            straggler_prob,
+            seed,
+            ..AvailabilityModel::default()
+        }
+    }
+
+    fn rng_for(&self, round: u64, client: u64) -> Rng {
+        Rng::new(self.seed).fork(round).fork(client)
+    }
+
+    /// Does this client ACK, and does it finish in time?
+    pub fn state(&self, round: u64, client: u64) -> ClientState {
+        let mut rng = self.rng_for(round, client);
+        if rng.next_f64() >= self.ack_prob {
+            return ClientState::Offline;
+        }
+        if rng.next_f64() < self.straggler_prob {
+            return ClientState::Straggler;
+        }
+        ClientState::Available
+    }
+
+    /// Virtual local-compute duration for `epochs` local epochs.
+    pub fn compute_time(&self, round: u64, client: u64, epochs: usize) -> f64 {
+        let mut rng = self.rng_for(round, client).fork(0xc0);
+        let jitter = 1.0 + self.compute_jitter * (2.0 * rng.next_f64() - 1.0);
+        self.compute_mean_s * epochs as f64 * jitter.max(0.05)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_fully_available() {
+        let m = AvailabilityModel::default();
+        for r in 0..5 {
+            for c in 0..20 {
+                assert_eq!(m.state(r, c), ClientState::Available);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_round_client() {
+        let m = AvailabilityModel::new(0.7, 0.1, 99);
+        for r in 0..10 {
+            for c in 0..10 {
+                assert_eq!(m.state(r, c), m.state(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn ack_rate_tracks_probability() {
+        let m = AvailabilityModel::new(0.7, 0.0, 5);
+        let n = 20_000;
+        let acks = (0..n)
+            .filter(|&i| m.state(i / 100, i % 100) == ClientState::Available)
+            .count();
+        let rate = acks as f64 / n as f64;
+        assert!((rate - 0.7).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn straggler_rate_is_conditional_on_ack() {
+        let m = AvailabilityModel::new(1.0, 0.25, 5);
+        let n = 20_000;
+        let stragglers = (0..n)
+            .filter(|&i| m.state(i / 100, i % 100) == ClientState::Straggler)
+            .count();
+        let rate = stragglers as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn compute_time_scales_with_epochs() {
+        let mut m = AvailabilityModel::default();
+        m.compute_mean_s = 2.0;
+        let t1 = m.compute_time(0, 0, 1);
+        let t3 = m.compute_time(0, 0, 3);
+        assert!((t3 - 3.0 * t1).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "ack_prob")]
+    fn rejects_bad_probability() {
+        AvailabilityModel::new(1.5, 0.0, 0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulation substrate: deterministic RNG, client availability / straggler
+//! model, and the virtual clock used by the simulated network.
+//!
+//! The paper runs its federated setting on a single server and "ignores the
+//! communication noise and delay in network" (§5.1.3); this module is what
+//! lets `fedmask` additionally *model* those effects (DESIGN.md §2) while
+//! keeping every run bit-reproducible from a single seed.
+
+pub mod availability;
+pub mod clock;
+pub mod rng;
+
+pub use availability::{AvailabilityModel, ClientState};
+pub use clock::VirtualClock;
+pub use rng::Rng;

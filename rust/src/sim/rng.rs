@@ -1,0 +1,191 @@
+//! Deterministic pseudo-random source (splitmix64 core).
+//!
+//! Every stochastic decision in the coordinator — client sampling, random
+//! masking, synthetic data, availability jitter — draws from one of these,
+//! derived from the experiment seed, so whole runs replay bit-identically.
+//! splitmix64 is tiny, passes BigCrush on the streams we use, and `fork`
+//! gives cheap independent substreams per client/round.
+
+/// splitmix64 PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// Cached second normal from the Box–Muller pair.
+    spare_normal: Option<f32>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng {
+            // Avoid the all-zeros fixed point without perturbing other seeds.
+            state: seed ^ 0x9e3779b97f4a7c15,
+            spare_normal: None,
+        }
+    }
+
+    /// Derive an independent substream, e.g. per client id or round index.
+    /// `fork(a) != fork(b)` streams are decorrelated by the golden-gamma
+    /// multiply even for adjacent labels.
+    pub fn fork(&self, label: u64) -> Rng {
+        let mut base = Rng::new(
+            self.state
+                .wrapping_add(label.wrapping_mul(0xbf58476d1ce4e5b9))
+                .wrapping_add(0x94d049bb133111eb),
+        );
+        // burn a step so fork(0) != clone
+        base.next_u64();
+        base
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n). Uses rejection sampling to kill modulo
+    /// bias (matters for the partitioner's permutations).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (pairs cached).
+    pub fn next_normal(&mut self) -> f32 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // u in (0,1] to keep ln finite
+        let u = 1.0 - self.next_f64();
+        let v = self.next_f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.spare_normal = Some((r * theta.sin()) as f32);
+        (r * theta.cos()) as f32
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            items.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} of {n}");
+        let mut pool: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.next_below((n - i) as u64) as usize;
+            pool.swap(i, j);
+        }
+        pool.truncate(k);
+        pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn forks_are_decorrelated() {
+        let base = Rng::new(3);
+        let mut f0 = base.fork(0);
+        let mut f1 = base.fork(1);
+        let a: Vec<u64> = (0..8).map(|_| f0.next_u64()).collect();
+        let b: Vec<u64> = (0..8).map(|_| f1.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 40_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Rng::new(17);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.next_below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Rng::new(19);
+        let idx = r.sample_indices(100, 30);
+        assert_eq!(idx.len(), 30);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 30);
+        assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

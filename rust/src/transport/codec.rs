@@ -1,0 +1,374 @@
+//! Wire encoding of model updates.
+//!
+//! A masked update is mostly zeros; shipping it densely would throw the
+//! paper's saving away. The codec picks the cheaper of:
+//!
+//! * **dense**  — header + P * 4 bytes of f32;
+//! * **sparse** — header + nnz * (4-byte index + 4-byte value).
+//!
+//! Sparse wins whenever nnz < P/2 — exactly the masked regimes the paper
+//! sweeps (gamma <= 0.5 strictly, and layered masking keeps biases dense so
+//! the crossover is measured, not assumed). All integers are little-endian;
+//! the header carries (client id, round, sample count) for the aggregator.
+
+use crate::transport::quantize::quantize;
+use crate::util::error::{Error, Result};
+
+/// Magic + version guard ("FM" + v1).
+const MAGIC: u16 = 0x464d;
+const VERSION: u8 = 1;
+
+const TAG_DENSE: u8 = 0;
+const TAG_SPARSE: u8 = 1;
+const TAG_DENSE_Q8: u8 = 2;
+const TAG_SPARSE_Q8: u8 = 3;
+
+/// Chosen wire representation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    Dense,
+    Sparse,
+    /// Pick whichever is smaller for the given payload.
+    Auto,
+    /// 8-bit linear quantization stacked on the auto dense/sparse choice
+    /// (paper §1: masking "can also be combined with cutting-edge
+    /// compression algorithms"). Lossy: values dequantize within half a
+    /// quantization step (see [`crate::transport::quantize`]).
+    AutoQ8,
+}
+
+/// A decoded update message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireUpdate {
+    pub client: u32,
+    pub round: u32,
+    pub n_samples: u32,
+    pub params: Vec<f32>,
+}
+
+/// Exact wire size in bytes for a payload with `nnz` non-zeros out of `p`.
+pub fn wire_bytes(p: usize, nnz: usize, enc: Encoding) -> usize {
+    const HEADER: usize = 2 + 1 + 1 + 4 + 4 + 4 + 4 + 4; // magic..len fields
+    const QHEADER: usize = 8; // min + scale f32
+    match enc {
+        Encoding::Dense => HEADER + 4 * p,
+        Encoding::Sparse => HEADER + 8 * nnz,
+        Encoding::Auto => {
+            wire_bytes(p, nnz, Encoding::Dense).min(wire_bytes(p, nnz, Encoding::Sparse))
+        }
+        Encoding::AutoQ8 => (HEADER + QHEADER + p).min(HEADER + QHEADER + 5 * nnz),
+    }
+}
+
+/// Encode an update. `Encoding::Auto` picks the smaller representation;
+/// `AutoQ8` additionally quantizes values to 8 bits (lossy).
+pub fn encode_update(
+    client: u32,
+    round: u32,
+    n_samples: u32,
+    params: &[f32],
+    enc: Encoding,
+) -> Vec<u8> {
+    let p = params.len();
+    let nnz = params.iter().filter(|v| **v != 0.0).count();
+    let (tag, body_len) = match enc {
+        Encoding::Dense => (TAG_DENSE, 4 * p),
+        Encoding::Sparse => (TAG_SPARSE, 8 * nnz),
+        Encoding::Auto => {
+            if 8 * nnz < 4 * p {
+                (TAG_SPARSE, 8 * nnz)
+            } else {
+                (TAG_DENSE, 4 * p)
+            }
+        }
+        Encoding::AutoQ8 => {
+            if 5 * nnz < p {
+                (TAG_SPARSE_Q8, 8 + 5 * nnz)
+            } else {
+                (TAG_DENSE_Q8, 8 + p)
+            }
+        }
+    };
+    let mut out = Vec::with_capacity(26 + body_len);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    out.push(tag);
+    out.extend_from_slice(&client.to_le_bytes());
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&n_samples.to_le_bytes());
+    out.extend_from_slice(&(p as u32).to_le_bytes());
+    match tag {
+        TAG_DENSE => {
+            out.extend_from_slice(&(p as u32).to_le_bytes());
+            for &v in params {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        TAG_SPARSE => {
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            for (i, &v) in params.iter().enumerate() {
+                if v != 0.0 {
+                    out.extend_from_slice(&(i as u32).to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        TAG_DENSE_Q8 => {
+            let q = quantize(params).expect("finite params");
+            out.extend_from_slice(&(p as u32).to_le_bytes());
+            out.extend_from_slice(&q.min.to_le_bytes());
+            out.extend_from_slice(&q.scale.to_le_bytes());
+            out.extend_from_slice(&q.codes);
+        }
+        TAG_SPARSE_Q8 => {
+            let values: Vec<f32> = params.iter().copied().filter(|v| *v != 0.0).collect();
+            // quantizing an empty value set: degenerate but legal (all-zero
+            // upload) — emit a zero-range quantizer
+            let q = if values.is_empty() {
+                crate::transport::quantize::Quantized {
+                    min: 0.0,
+                    scale: 0.0,
+                    codes: vec![],
+                }
+            } else {
+                quantize(&values).expect("finite params")
+            };
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            out.extend_from_slice(&q.min.to_le_bytes());
+            out.extend_from_slice(&q.scale.to_le_bytes());
+            let mut k = 0usize;
+            for (i, &v) in params.iter().enumerate() {
+                if v != 0.0 {
+                    out.extend_from_slice(&(i as u32).to_le_bytes());
+                    out.push(q.codes[k]);
+                    k += 1;
+                }
+            }
+        }
+        _ => unreachable!(),
+    }
+    out
+}
+
+fn take<const N: usize>(data: &[u8], at: &mut usize) -> Result<[u8; N]> {
+    let slice = data
+        .get(*at..*at + N)
+        .ok_or_else(|| Error::parse("codec: truncated message"))?;
+    *at += N;
+    Ok(slice.try_into().unwrap())
+}
+
+/// Decode an update message produced by [`encode_update`].
+pub fn decode_update(data: &[u8]) -> Result<WireUpdate> {
+    let mut at = 0usize;
+    let magic = u16::from_le_bytes(take::<2>(data, &mut at)?);
+    if magic != MAGIC {
+        return Err(Error::parse(format!("codec: bad magic {magic:#x}")));
+    }
+    let version = take::<1>(data, &mut at)?[0];
+    if version != VERSION {
+        return Err(Error::parse(format!("codec: unsupported version {version}")));
+    }
+    let tag = take::<1>(data, &mut at)?[0];
+    let client = u32::from_le_bytes(take::<4>(data, &mut at)?);
+    let round = u32::from_le_bytes(take::<4>(data, &mut at)?);
+    let n_samples = u32::from_le_bytes(take::<4>(data, &mut at)?);
+    let p = u32::from_le_bytes(take::<4>(data, &mut at)?) as usize;
+    let count = u32::from_le_bytes(take::<4>(data, &mut at)?) as usize;
+    let mut params = vec![0.0f32; p];
+    match tag {
+        TAG_DENSE => {
+            if count != p {
+                return Err(Error::parse("codec: dense count != p"));
+            }
+            for slot in params.iter_mut() {
+                *slot = f32::from_le_bytes(take::<4>(data, &mut at)?);
+            }
+        }
+        TAG_SPARSE => {
+            for _ in 0..count {
+                let idx = u32::from_le_bytes(take::<4>(data, &mut at)?) as usize;
+                let val = f32::from_le_bytes(take::<4>(data, &mut at)?);
+                if idx >= p {
+                    return Err(Error::parse(format!("codec: index {idx} >= p {p}")));
+                }
+                params[idx] = val;
+            }
+        }
+        TAG_DENSE_Q8 => {
+            if count != p {
+                return Err(Error::parse("codec: dense-q8 count != p"));
+            }
+            let min = f32::from_le_bytes(take::<4>(data, &mut at)?);
+            let scale = f32::from_le_bytes(take::<4>(data, &mut at)?);
+            for slot in params.iter_mut() {
+                let code = take::<1>(data, &mut at)?[0];
+                *slot = min + scale * code as f32;
+            }
+        }
+        TAG_SPARSE_Q8 => {
+            let min = f32::from_le_bytes(take::<4>(data, &mut at)?);
+            let scale = f32::from_le_bytes(take::<4>(data, &mut at)?);
+            for _ in 0..count {
+                let idx = u32::from_le_bytes(take::<4>(data, &mut at)?) as usize;
+                let code = take::<1>(data, &mut at)?[0];
+                if idx >= p {
+                    return Err(Error::parse(format!("codec: index {idx} >= p {p}")));
+                }
+                params[idx] = min + scale * code as f32;
+            }
+        }
+        other => return Err(Error::parse(format!("codec: unknown tag {other}"))),
+    }
+    if at != data.len() {
+        return Err(Error::parse("codec: trailing bytes"));
+    }
+    Ok(WireUpdate {
+        client,
+        round,
+        n_samples,
+        params,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn sample_params(g: &mut Gen, p: usize, density: f32) -> Vec<f32> {
+        (0..p)
+            .map(|_| {
+                if g.f32_in(0.0, 1.0) < density {
+                    g.f32_in(-2.0, 2.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let params: Vec<f32> = (0..100).map(|i| i as f32 * 0.5 - 10.0).collect();
+        let bytes = encode_update(3, 7, 256, &params, Encoding::Dense);
+        let u = decode_update(&bytes).unwrap();
+        assert_eq!(u.client, 3);
+        assert_eq!(u.round, 7);
+        assert_eq!(u.n_samples, 256);
+        assert_eq!(u.params, params);
+        assert_eq!(bytes.len(), wire_bytes(100, 100, Encoding::Dense));
+    }
+
+    #[test]
+    fn sparse_roundtrip_preserves_zeros() {
+        let mut params = vec![0.0f32; 1000];
+        params[13] = 1.5;
+        params[999] = -2.25;
+        let bytes = encode_update(0, 0, 1, &params, Encoding::Sparse);
+        assert_eq!(bytes.len(), wire_bytes(1000, 2, Encoding::Sparse));
+        let u = decode_update(&bytes).unwrap();
+        assert_eq!(u.params, params);
+    }
+
+    #[test]
+    fn auto_picks_smaller() {
+        let dense_heavy: Vec<f32> = (0..100).map(|i| (i + 1) as f32).collect();
+        let b1 = encode_update(0, 0, 1, &dense_heavy, Encoding::Auto);
+        assert_eq!(b1.len(), wire_bytes(100, 100, Encoding::Dense));
+
+        let mut sparse_heavy = vec![0.0f32; 100];
+        sparse_heavy[5] = 1.0;
+        let b2 = encode_update(0, 0, 1, &sparse_heavy, Encoding::Auto);
+        assert_eq!(b2.len(), wire_bytes(100, 1, Encoding::Sparse));
+        assert!(b2.len() < wire_bytes(100, 100, Encoding::Dense));
+    }
+
+    #[test]
+    fn corrupt_messages_rejected() {
+        let params = vec![1.0f32; 10];
+        let mut bytes = encode_update(0, 0, 1, &params, Encoding::Dense);
+        bytes[0] ^= 0xff; // magic
+        assert!(decode_update(&bytes).is_err());
+
+        let mut bytes = encode_update(0, 0, 1, &params, Encoding::Dense);
+        bytes.truncate(bytes.len() - 2);
+        assert!(decode_update(&bytes).is_err());
+
+        let mut bytes = encode_update(0, 0, 1, &params, Encoding::Dense);
+        bytes.push(0);
+        assert!(decode_update(&bytes).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_all_densities() {
+        check("codec roundtrip", 100, |g| {
+            let p = g.usize_in(1, 2000);
+            let density = g.f32_in(0.0, 1.0);
+            let params = sample_params(g, p, density);
+            for enc in [Encoding::Dense, Encoding::Sparse, Encoding::Auto] {
+                let bytes = encode_update(1, 2, 3, &params, enc);
+                let u = decode_update(&bytes).unwrap();
+                assert_eq!(u.params, params, "enc {enc:?} seed {:#x}", g.seed);
+            }
+        });
+    }
+
+    #[test]
+    fn q8_dense_roundtrip_within_half_step() {
+        let params: Vec<f32> = (0..500).map(|i| (i as f32 - 250.0) * 0.01).collect();
+        let bytes = encode_update(1, 2, 3, &params, Encoding::AutoQ8);
+        assert_eq!(bytes.len(), wire_bytes(500, 500, Encoding::AutoQ8));
+        // q8 dense is ~4x smaller than f32 dense
+        assert!(bytes.len() * 3 < wire_bytes(500, 500, Encoding::Dense));
+        let u = decode_update(&bytes).unwrap();
+        let step = (params[499] - params[0]) / 255.0;
+        for (a, b) in params.iter().zip(&u.params) {
+            assert!((a - b).abs() <= step * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn q8_sparse_roundtrip_and_size() {
+        let mut params = vec![0.0f32; 10_000];
+        for i in (0..10_000).step_by(100) {
+            params[i] = (i as f32) * 0.001 + 1.0;
+        }
+        let bytes = encode_update(0, 0, 1, &params, Encoding::AutoQ8);
+        assert_eq!(bytes.len(), wire_bytes(10_000, 100, Encoding::AutoQ8));
+        // sparse-q8 is 5 bytes/entry vs 8 for sparse-f32
+        assert!(bytes.len() < wire_bytes(10_000, 100, Encoding::Sparse));
+        let u = decode_update(&bytes).unwrap();
+        // zeros preserved exactly; values within half a step
+        let vmax = params.iter().cloned().fold(0.0f32, f32::max);
+        let vmin = params.iter().cloned().filter(|v| *v != 0.0).fold(f32::INFINITY, f32::min);
+        let step = (vmax - vmin) / 255.0;
+        for (a, b) in params.iter().zip(&u.params) {
+            if *a == 0.0 {
+                assert_eq!(*b, 0.0);
+            } else {
+                assert!((a - b).abs() <= step * 0.5 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn q8_all_zero_upload_is_legal() {
+        let params = vec![0.0f32; 64];
+        let u = decode_update(&encode_update(0, 0, 1, &params, Encoding::AutoQ8)).unwrap();
+        assert_eq!(u.params, params);
+    }
+
+    #[test]
+    fn prop_auto_never_larger_than_either() {
+        check("auto minimality", 100, |g| {
+            let p = g.usize_in(1, 500);
+            let density = g.f32_in(0.0, 1.0);
+            let params = sample_params(g, p, density);
+            let auto = encode_update(0, 0, 0, &params, Encoding::Auto).len();
+            let dense = encode_update(0, 0, 0, &params, Encoding::Dense).len();
+            let sparse = encode_update(0, 0, 0, &params, Encoding::Sparse).len();
+            assert!(auto <= dense && auto <= sparse);
+        });
+    }
+}

@@ -1,0 +1,136 @@
+//! Communication-cost accounting.
+//!
+//! Two views, kept side by side deliberately:
+//!
+//! * **Unit cost (Eq. 6)** — the paper's abstract metric: one full-model
+//!   client<->server transfer = 1 unit; a round with sampling rate `c` and
+//!   masking rate `gamma` costs `c * M * gamma` units uplink. [`eq6_cost`]
+//!   is the closed form `f(beta, gamma) = gamma/R * sum_t C/exp(beta t)`.
+//! * **Byte cost** — what the codec actually emitted, including headers and
+//!   the dense/sparse crossover. The figure drivers report both, and the
+//!   ledger's unit/byte ratio is itself a sanity check on the codec.
+
+/// Eq. 6 of the paper: mean per-round unit transport cost over `rounds`
+/// rounds of dynamic sampling (initial rate `c0`, decay `beta`) with
+/// masking rate `gamma`. `t` runs 1..=R as in the paper.
+pub fn eq6_cost(c0: f64, beta: f64, gamma: f64, rounds: usize) -> f64 {
+    assert!(rounds > 0);
+    let sum: f64 = (1..=rounds).map(|t| c0 / (beta * t as f64).exp()).sum();
+    gamma / rounds as f64 * sum
+}
+
+/// Running totals for one experiment.
+#[derive(Debug, Clone, Default)]
+pub struct CostLedger {
+    /// Client -> server model uploads, in full-model units (masked upload
+    /// of rate gamma counts gamma units, matching the paper's accounting).
+    pub uplink_units: f64,
+    /// Server -> client model broadcasts, in full-model units.
+    pub downlink_units: f64,
+    /// Exact bytes the codec emitted uplink.
+    pub uplink_bytes: u64,
+    /// Exact bytes broadcast downlink (dense model per selected client).
+    pub downlink_bytes: u64,
+    /// Client<->server messages exchanged.
+    pub messages: u64,
+}
+
+impl CostLedger {
+    pub fn new() -> CostLedger {
+        CostLedger::default()
+    }
+
+    /// Record one client upload: `nnz/p` of a model in units, plus the
+    /// actual encoded byte count.
+    pub fn record_upload(&mut self, p: usize, nnz: usize, bytes: usize) {
+        assert!(nnz <= p);
+        self.uplink_units += nnz as f64 / p as f64;
+        self.uplink_bytes += bytes as u64;
+        self.messages += 1;
+    }
+
+    /// Record one model broadcast to a selected client.
+    pub fn record_download(&mut self, bytes: usize) {
+        self.downlink_units += 1.0;
+        self.downlink_bytes += bytes as u64;
+        self.messages += 1;
+    }
+
+    /// Total units (the paper's headline cost metric counts uploads; we
+    /// keep both directions separable).
+    pub fn total_units(&self) -> f64 {
+        self.uplink_units + self.downlink_units
+    }
+
+    /// Uplink units normalized by round count — comparable to [`eq6_cost`].
+    pub fn mean_uplink_units_per_round(&self, rounds: usize) -> f64 {
+        assert!(rounds > 0);
+        self.uplink_units / rounds as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq6_matches_hand_computation() {
+        // R=2, C=1, beta=0: cost = gamma/2 * (1 + 1) = gamma
+        assert!((eq6_cost(1.0, 0.0, 0.3, 2) - 0.3).abs() < 1e-12);
+        // single round: gamma * C * e^-beta
+        let v = eq6_cost(0.5, 0.1, 0.4, 1);
+        assert!((v - 0.4 * 0.5 * (-0.1f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq6_decreases_with_beta() {
+        let flat = eq6_cost(1.0, 0.01, 0.5, 50);
+        let steep = eq6_cost(1.0, 0.1, 0.5, 50);
+        assert!(steep < flat);
+        assert!(flat < 0.5); // any decay beats static C=1
+    }
+
+    #[test]
+    fn eq6_linear_in_gamma() {
+        let a = eq6_cost(1.0, 0.05, 0.2, 30);
+        let b = eq6_cost(1.0, 0.05, 0.4, 30);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut l = CostLedger::new();
+        l.record_download(4000);
+        l.record_upload(1000, 300, 2500); // gamma = 0.3
+        l.record_upload(1000, 1000, 4026);
+        assert!((l.uplink_units - 1.3).abs() < 1e-12);
+        assert_eq!(l.downlink_units, 1.0);
+        assert_eq!(l.uplink_bytes, 6526);
+        assert_eq!(l.messages, 3);
+        assert!((l.mean_uplink_units_per_round(2) - 0.65).abs() < 1e-12);
+    }
+
+    #[test]
+    fn simulated_run_matches_eq6_closed_form() {
+        // emulate R rounds of dynamic sampling + masking accounting and
+        // compare against the closed form (paper consistency check)
+        let (c0, beta, gamma, rounds, m) = (1.0, 0.1, 0.5, 20usize, 100usize);
+        let mut ledger = CostLedger::new();
+        for t in 1..=rounds {
+            let rate = c0 / (beta * t as f64).exp();
+            let selected = (rate * m as f64).round().max(1.0) as usize;
+            for _ in 0..selected {
+                let p = 10_000;
+                let nnz = (gamma * p as f64) as usize;
+                ledger.record_upload(p, nnz, 8 * nnz + 26);
+            }
+        }
+        let measured = ledger.mean_uplink_units_per_round(rounds) / m as f64;
+        let closed = eq6_cost(c0, beta, gamma, rounds);
+        // rounding of client counts introduces small slack
+        assert!(
+            (measured - closed).abs() / closed < 0.05,
+            "measured {measured} vs closed {closed}"
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Transport substrate: what actually crosses the (simulated) wire.
+//!
+//! * [`codec`] — dense and sparse update encodings with auto-selection;
+//!   masked updates ship as (index, value) pairs, which is where the
+//!   paper's communication saving physically materializes.
+//! * [`quantize`] — optional 8-bit linear quantization layered on either
+//!   encoding (paper §1: the methods "can also be combined with
+//!   cutting-edge compression algorithms").
+//! * [`cost`] — Eq. 6 unit-cost model + the byte-accurate ledger every
+//!   figure driver reports from.
+//! * [`network`] — bandwidth/latency model mapping message bytes to
+//!   virtual transfer time (the paper ignores this; we model it).
+
+pub mod codec;
+pub mod cost;
+pub mod network;
+pub mod quantize;
+
+pub use codec::{decode_update, encode_update, Encoding, WireUpdate};
+pub use cost::{eq6_cost, CostLedger};
+pub use network::NetworkModel;

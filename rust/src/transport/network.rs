@@ -1,0 +1,120 @@
+//! Simulated network model.
+//!
+//! Maps message byte counts to virtual transfer times over a shared-uplink
+//! star topology (clients -> server), the usual cross-device FL shape: the
+//! server's downlink broadcast is per-client parallel, the uplink is
+//! bandwidth-shared. The paper explicitly ignores these effects; modeling
+//! them lets the figure drivers also report virtual round latency and lets
+//! failure-injection tests reason about deadlines.
+
+/// Star-topology network model.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// Per-client link bandwidth, bytes/second.
+    pub client_bw: f64,
+    /// Server aggregate uplink capacity, bytes/second.
+    pub server_bw: f64,
+    /// Per-message fixed latency, seconds.
+    pub latency_s: f64,
+}
+
+impl Default for NetworkModel {
+    /// 20 Mbit/s clients, 1 Gbit/s server, 30 ms RTT-ish latency — a
+    /// plausible mobile-fleet profile.
+    fn default() -> Self {
+        NetworkModel {
+            client_bw: 20e6 / 8.0,
+            server_bw: 1e9 / 8.0,
+            latency_s: 0.03,
+        }
+    }
+}
+
+impl NetworkModel {
+    /// Idealized network: everything instantaneous (the paper's setting).
+    pub fn ideal() -> NetworkModel {
+        NetworkModel {
+            client_bw: f64::INFINITY,
+            server_bw: f64::INFINITY,
+            latency_s: 0.0,
+        }
+    }
+
+    /// Time for one client to receive `bytes` (downlink broadcast leg).
+    pub fn download_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.client_bw
+    }
+
+    /// Time for `uploads` concurrent client uploads of `bytes` each to all
+    /// complete: each client is limited by its own link, and the server
+    /// uplink is shared fairly across the concurrent transfers.
+    pub fn upload_round_time(&self, bytes_each: &[usize]) -> f64 {
+        if bytes_each.is_empty() {
+            return 0.0;
+        }
+        let total: usize = bytes_each.iter().sum();
+        let max_each = *bytes_each.iter().max().unwrap();
+        let client_limited = max_each as f64 / self.client_bw;
+        let server_limited = total as f64 / self.server_bw;
+        self.latency_s + client_limited.max(server_limited)
+    }
+
+    /// Full round trip for one round: broadcast + slowest upload.
+    pub fn round_time(&self, download_bytes: usize, upload_bytes: &[usize]) -> f64 {
+        self.download_time(download_bytes) + self.upload_round_time(upload_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_network_is_free() {
+        let n = NetworkModel::ideal();
+        assert_eq!(n.download_time(1 << 30), 0.0);
+        assert_eq!(n.upload_round_time(&[1 << 30; 100]), 0.0);
+    }
+
+    #[test]
+    fn client_link_dominates_small_cohorts() {
+        let n = NetworkModel {
+            client_bw: 1e6,
+            server_bw: 1e9,
+            latency_s: 0.0,
+        };
+        // one 1 MB upload: 1 second on the client link
+        let t = n.upload_round_time(&[1_000_000]);
+        assert!((t - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn server_link_dominates_large_cohorts() {
+        let n = NetworkModel {
+            client_bw: 1e9,
+            server_bw: 1e6,
+            latency_s: 0.0,
+        };
+        // 100 x 10 KB = 1 MB through a 1 MB/s server pipe
+        let t = n.upload_round_time(&vec![10_000; 100]);
+        assert!((t - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn masked_uploads_are_faster() {
+        let n = NetworkModel::default();
+        let dense = n.upload_round_time(&vec![4 * 200_000; 10]);
+        let masked = n.upload_round_time(&vec![4 * 20_000; 10]);
+        assert!(masked < dense);
+    }
+
+    #[test]
+    fn latency_adds_once_per_leg() {
+        let n = NetworkModel {
+            client_bw: f64::INFINITY,
+            server_bw: f64::INFINITY,
+            latency_s: 0.5,
+        };
+        assert!((n.round_time(1000, &[1000, 1000]) - 1.0).abs() < 1e-9);
+    }
+}

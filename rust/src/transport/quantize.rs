@@ -1,0 +1,107 @@
+//! 8-bit linear quantization (compression extension).
+//!
+//! The paper notes its methods "can also be combined with cutting-edge
+//! compression algorithms for furthering communication efficiency" (§1).
+//! This module provides the simplest respectable such algorithm — per-tensor
+//! linear u8 quantization with an f32 (min, scale) header — and the ablation
+//! bench stacks it under masking to measure the combined saving.
+
+use crate::util::error::{Error, Result};
+
+/// Quantized tensor: u8 codes + dequantization parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Quantized {
+    pub min: f32,
+    pub scale: f32,
+    pub codes: Vec<u8>,
+}
+
+impl Quantized {
+    /// Wire size in bytes.
+    pub fn bytes(&self) -> usize {
+        4 + 4 + self.codes.len()
+    }
+}
+
+/// Quantize to 256 levels over [min, max]. Zero-range inputs get scale 0.
+pub fn quantize(values: &[f32]) -> Result<Quantized> {
+    if values.is_empty() {
+        return Err(Error::invalid("cannot quantize empty tensor"));
+    }
+    if values.iter().any(|v| !v.is_finite()) {
+        return Err(Error::invalid("cannot quantize non-finite values"));
+    }
+    let min = values.iter().copied().fold(f32::INFINITY, f32::min);
+    let max = values.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let range = max - min;
+    let scale = if range > 0.0 { range / 255.0 } else { 0.0 };
+    let codes = values
+        .iter()
+        .map(|&v| {
+            if scale == 0.0 {
+                0u8
+            } else {
+                (((v - min) / scale).round() as i64).clamp(0, 255) as u8
+            }
+        })
+        .collect();
+    Ok(Quantized { min, scale, codes })
+}
+
+/// Inverse of [`quantize`].
+pub fn dequantize(q: &Quantized) -> Vec<f32> {
+    q.codes
+        .iter()
+        .map(|&c| q.min + q.scale * c as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        check("quantize error bound", 100, |g| {
+            let n = g.usize_in(1, 3000);
+            let vals = g.f32_vec(n, -3.0, 3.0);
+            let q = quantize(&vals).unwrap();
+            let back = dequantize(&q);
+            let half_step = q.scale * 0.5 + 1e-6;
+            for (a, b) in vals.iter().zip(&back) {
+                assert!((a - b).abs() <= half_step, "err {} > {half_step}", (a - b).abs());
+            }
+        });
+    }
+
+    #[test]
+    fn constant_tensor_is_exact() {
+        let vals = vec![1.25f32; 100];
+        let q = quantize(&vals).unwrap();
+        assert_eq!(q.scale, 0.0);
+        assert_eq!(dequantize(&q), vals);
+    }
+
+    #[test]
+    fn compression_ratio_is_4x_minus_header() {
+        let vals = vec![0.5f32; 10_000];
+        let q = quantize(&vals).unwrap();
+        assert_eq!(q.bytes(), 8 + 10_000);
+        assert!(q.bytes() * 3 < 4 * 10_000);
+    }
+
+    #[test]
+    fn rejects_empty_and_nonfinite() {
+        assert!(quantize(&[]).is_err());
+        assert!(quantize(&[f32::NAN]).is_err());
+        assert!(quantize(&[f32::INFINITY, 0.0]).is_err());
+    }
+
+    #[test]
+    fn extremes_map_to_extreme_codes() {
+        let q = quantize(&[-1.0, 0.0, 1.0]).unwrap();
+        assert_eq!(q.codes[0], 0);
+        assert_eq!(q.codes[2], 255);
+    }
+}

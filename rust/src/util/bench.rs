@@ -1,0 +1,143 @@
+//! Micro-benchmark timer (no `criterion` in the offline environment).
+//!
+//! Used by the `rust/benches/*.rs` targets (built with `harness = false`).
+//! Each benchmark warms up, then runs timed iterations until a wall-clock
+//! budget is spent, and reports median / p10 / p90 per-iteration time plus
+//! derived throughput. Output is stable, one line per benchmark, so bench
+//! logs diff cleanly across optimization iterations (EXPERIMENTS.md §Perf).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+}
+
+impl Measurement {
+    /// ns per iteration at the median.
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_secs_f64() * 1e9
+    }
+
+    /// Render one stable report line; `work_items` lets callers derive a
+    /// throughput column (e.g. parameters aggregated per second).
+    pub fn report(&self, work_items: Option<(f64, &str)>) -> String {
+        let thr = match work_items {
+            Some((n, unit)) => {
+                let per_sec = n / self.median.as_secs_f64();
+                format!("  {:>12.3e} {unit}/s", per_sec)
+            }
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10} iters  median {:>12?}  p10 {:>12?}  p90 {:>12?}{}",
+            self.name, self.iters, self.median, self.p10, self.p90, thr
+        )
+    }
+}
+
+/// Benchmark runner with a per-bench time budget.
+pub struct Bench {
+    budget: Duration,
+    warmup: Duration,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // Overridable for quick smoke runs: FEDMASK_BENCH_MS=50 cargo bench
+        let ms = std::env::var("FEDMASK_BENCH_MS")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(800);
+        Bench {
+            budget: Duration::from_millis(ms),
+            warmup: Duration::from_millis(ms / 4),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        Bench::default()
+    }
+
+    /// Time `f` repeatedly; the closure's return value is black-boxed so the
+    /// optimizer cannot elide the work.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Timed samples.
+        let mut samples: Vec<Duration> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget || samples.len() < 5 {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples.push(s.elapsed());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        samples.sort();
+        let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            median: pick(0.5),
+            p10: pick(0.1),
+            p90: pick(0.9),
+        };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Print all accumulated measurements.
+    pub fn report_all(&self) {
+        for m in &self.results {
+            println!("{}", m.report(None));
+        }
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("FEDMASK_BENCH_MS", "20");
+        let mut b = Bench::new();
+        let m = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.median_ns() > 0.0);
+        assert!(m.iters >= 5);
+    }
+
+    #[test]
+    fn report_contains_name_and_throughput() {
+        std::env::set_var("FEDMASK_BENCH_MS", "10");
+        let mut b = Bench::new();
+        b.run("fmt", || 1 + 1);
+        let line = b.results()[0].report(Some((1e6, "items")));
+        assert!(line.contains("fmt"));
+        assert!(line.contains("items/s"));
+    }
+}

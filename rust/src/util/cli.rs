@@ -1,0 +1,197 @@
+//! Tiny CLI argument parser (no `clap` in the offline environment).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments. Unknown flags are an error, listing the accepted set — the
+//! same fail-fast behaviour a derive-based parser would give.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+/// Parsed command line: positionals in order, options by name.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// Declarative option spec used for validation + help text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl OptSpec {
+    pub const fn value(name: &'static str, help: &'static str) -> Self {
+        OptSpec {
+            name,
+            takes_value: true,
+            help,
+        }
+    }
+
+    pub const fn flag(name: &'static str, help: &'static str) -> Self {
+        OptSpec {
+            name,
+            takes_value: false,
+            help,
+        }
+    }
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against `specs`.
+    pub fn parse<I, S>(argv: I, specs: &[OptSpec]) -> Result<Args>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().map(Into::into).peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (name, inline_val) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = specs.iter().find(|s| s.name == name).ok_or_else(|| {
+                    let known: Vec<_> = specs.iter().map(|s| format!("--{}", s.name)).collect();
+                    Error::invalid(format!(
+                        "unknown option --{name}; accepted: {}",
+                        known.join(", ")
+                    ))
+                })?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => iter.next().ok_or_else(|| {
+                            Error::invalid(format!("option --{name} requires a value"))
+                        })?,
+                    };
+                    args.options.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(Error::invalid(format!("flag --{name} takes no value")));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Typed accessor with a default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|_| Error::invalid(format!("--{name}: cannot parse '{raw}'"))),
+        }
+    }
+
+    /// Comma-separated list accessor (`--betas 0.01,0.1`).
+    pub fn get_list_or<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .map_err(|_| Error::invalid(format!("--{name}: cannot parse '{s}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn render_help(cmd: &str, summary: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("{cmd} — {summary}\n\noptions:\n");
+    for s in specs {
+        let arg = if s.takes_value {
+            format!("--{} <v>", s.name)
+        } else {
+            format!("--{}", s.name)
+        };
+        out.push_str(&format!("  {arg:24} {}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPECS: &[OptSpec] = &[
+        OptSpec::value("rounds", "number of rounds"),
+        OptSpec::value("out", "output CSV"),
+        OptSpec::flag("verbose", "chatty"),
+    ];
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(
+            vec!["fig3", "--rounds=50", "--out", "x.csv", "--verbose", "tail"],
+            SPECS,
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["fig3", "tail"]);
+        assert_eq!(a.get("rounds"), Some("50"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_lists_accepted() {
+        let err = Args::parse(vec!["--bogus"], SPECS).unwrap_err().to_string();
+        assert!(err.contains("--bogus"));
+        assert!(err.contains("--rounds"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["--rounds"], SPECS).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(vec!["--rounds", "50"], SPECS).unwrap();
+        assert_eq!(a.get_or("rounds", 10usize).unwrap(), 50);
+        assert_eq!(a.get_or("missing", 10usize).unwrap_or(10), 10);
+        let bad = Args::parse(vec!["--rounds", "abc"], SPECS).unwrap();
+        assert!(bad.get_or("rounds", 10usize).is_err());
+    }
+
+    #[test]
+    fn list_accessor() {
+        let specs = [OptSpec::value("betas", "decay list")];
+        let a = Args::parse(vec!["--betas", "0.01,0.1"], &specs).unwrap();
+        assert_eq!(a.get_list_or("betas", &[0.5f64]).unwrap(), vec![0.01, 0.1]);
+        let b = Args::parse(Vec::<String>::new(), &specs).unwrap();
+        assert_eq!(b.get_list_or("betas", &[0.5f64]).unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(Args::parse(vec!["--verbose=yes"], SPECS).is_err());
+    }
+}

@@ -1,0 +1,91 @@
+//! Crate-wide error type.
+//!
+//! Most fallible paths are IO (artifact loading), parse (JSON / config /
+//! dataset formats), XLA (PJRT compile/execute), or validation (config and
+//! shape checks). A single enum keeps `?` ergonomic across module
+//! boundaries without pulling in `anyhow` on the hot path.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error enum.
+#[derive(Debug)]
+pub enum Error {
+    /// Filesystem / IO failure (artifact or dataset access).
+    Io(std::io::Error),
+    /// JSON / config / dataset format parse failure.
+    Parse(String),
+    /// PJRT compile or execute failure (wraps the `xla` crate error).
+    Xla(String),
+    /// Configuration or shape validation failure.
+    Invalid(String),
+    /// An engine worker thread died or a channel closed unexpectedly.
+    Engine(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Invalid(m) => write!(f, "invalid: {m}"),
+            Error::Engine(m) => write!(f, "engine error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Shorthand for a validation error.
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::Invalid(msg.into())
+    }
+
+    /// Shorthand for a parse error.
+    pub fn parse(msg: impl Into<String>) -> Self {
+        Error::Parse(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_kind_and_message() {
+        let e = Error::invalid("gamma must be in (0, 1]");
+        assert!(e.to_string().contains("invalid"));
+        assert!(e.to_string().contains("gamma"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing artifact");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("missing artifact"));
+    }
+}

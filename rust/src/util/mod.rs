@@ -1,0 +1,11 @@
+//! Cross-cutting substrates built from scratch for the offline environment:
+//! a JSON parser/writer ([`json`]), a CLI argument parser ([`cli`]), a tiny
+//! property-testing harness ([`prop`]), a micro-benchmark timer ([`bench`]),
+//! and the crate error type ([`error`]).
+
+pub mod bench;
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod logging;
+pub mod prop;

@@ -1,0 +1,113 @@
+//! Tiny property-testing harness (no `proptest` in the offline environment).
+//!
+//! `check` runs a property over N seeded random cases; on failure it reports
+//! the failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! use fedmask::util::prop::{check, Gen};
+//! check("sum is commutative", 200, |g: &mut Gen| {
+//!     let (a, b) = (g.f32_in(-1.0, 1.0), g.f32_in(-1.0, 1.0));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::sim::rng::Rng;
+
+/// Random value source handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Seed of this case, for replay.
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            seed,
+        }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi, "empty range");
+        lo + (self.rng.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of standard-normal f32 values.
+    pub fn normal_vec(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.next_normal()).collect()
+    }
+
+    /// Vector of uniform f32 in [lo, hi).
+    pub fn f32_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+}
+
+/// Run `cases` seeded property evaluations. Panics (with the seed) on the
+/// first failing case. Base seed is fixed for reproducibility; override
+/// with `FEDMASK_PROP_SEED` to explore.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: u32, mut property: F) {
+    let base = std::env::var("FEDMASK_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xfed_5eed);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed on case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_are_respected() {
+        check("ranges", 500, |g| {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..=2.0).contains(&f));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failure_reports_seed() {
+        check("always fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut a = Gen::new(42);
+        let mut b = Gen::new(42);
+        assert_eq!(a.normal_vec(16), b.normal_vec(16));
+    }
+}

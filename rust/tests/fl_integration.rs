@@ -1,0 +1,158 @@
+//! End-to-end federated-loop integration tests over the real artifacts.
+//!
+//! Small geometries (4–6 clients, 2–4 rounds) keep these fast while still
+//! exercising the full path: partition -> broadcast -> local train (PJRT)
+//! -> mask (Pallas kernel) -> encode -> aggregate -> evaluate.
+
+use std::sync::Arc;
+
+use fedmask::config::experiment::ExperimentConfig;
+use fedmask::fl::masking::MaskPolicy;
+use fedmask::fl::sampling::SamplingSchedule;
+use fedmask::fl::server::Server;
+use fedmask::runtime::manifest::Manifest;
+use fedmask::runtime::pool::EnginePool;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping fl integration test (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn tiny_cfg(label: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+    cfg.label = label.into();
+    cfg.clients = 4;
+    cfg.rounds = 3;
+    cfg.n_train = 1_024;
+    cfg.n_test = 512;
+    cfg.eval_max_chunks = 1;
+    cfg.workers = 2;
+    cfg.seed = 7;
+    cfg
+}
+
+#[test]
+fn federated_training_improves_accuracy_and_accounts_cost() {
+    let Some(manifest) = manifest() else { return };
+    let cfg = tiny_cfg("e2e-static");
+    let rounds = cfg.rounds;
+    let clients = cfg.clients;
+    let outcome = Server::new(cfg, &manifest).unwrap().run().unwrap();
+
+    let rec = &outcome.recorder;
+    assert_eq!(rec.rounds.len(), rounds);
+    // accuracy after training beats the 10-class prior comfortably
+    let final_acc = rec.final_accuracy();
+    assert!(final_acc > 0.3, "final accuracy too low: {final_acc}");
+    // every round aggregated all clients (static C = 1.0)
+    assert!(rec.rounds.iter().all(|r| r.clients == clients));
+    // unmasked uploads: exactly clients * rounds full-model units
+    let units = outcome.ledger.uplink_units;
+    assert!(
+        (units - (clients * rounds) as f64).abs() < 1e-9,
+        "uplink units {units}"
+    );
+    assert_eq!(outcome.ledger.messages as usize, 2 * clients * rounds);
+    assert!(outcome.final_params.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn dynamic_sampling_costs_less_than_static() {
+    let Some(manifest) = manifest() else { return };
+    let pool = Arc::new(EnginePool::new(&manifest, &["lenet"], 2).unwrap());
+
+    let mut st = tiny_cfg("static");
+    st.rounds = 4;
+    let static_out = Server::with_pool(st, &manifest, Arc::clone(&pool))
+        .unwrap()
+        .run()
+        .unwrap();
+
+    let mut dy = tiny_cfg("dynamic");
+    dy.rounds = 4;
+    dy.sampling = SamplingSchedule::DynamicExp { c0: 1.0, beta: 0.5 };
+    dy.min_clients = 2;
+    let dynamic_out = Server::with_pool(dy, &manifest, pool).unwrap().run().unwrap();
+
+    assert!(
+        dynamic_out.ledger.uplink_units < static_out.ledger.uplink_units,
+        "dynamic {} should cost less than static {}",
+        dynamic_out.ledger.uplink_units,
+        static_out.ledger.uplink_units
+    );
+    // and the sampled client counts decay but respect the floor of 2
+    let counts: Vec<usize> = dynamic_out.recorder.rounds.iter().map(|r| r.clients).collect();
+    assert!(counts.windows(2).all(|w| w[1] <= w[0]));
+    assert!(counts.iter().all(|&c| c >= 2));
+}
+
+#[test]
+fn selective_masking_cuts_uplink_bytes() {
+    let Some(manifest) = manifest() else { return };
+    let pool = Arc::new(EnginePool::new(&manifest, &["lenet"], 2).unwrap());
+
+    let mut dense = tiny_cfg("dense");
+    dense.rounds = 2;
+    let dense_out = Server::with_pool(dense, &manifest, Arc::clone(&pool))
+        .unwrap()
+        .run()
+        .unwrap();
+
+    let mut masked = tiny_cfg("masked");
+    masked.rounds = 2;
+    masked.masking = MaskPolicy::selective(0.2);
+    let masked_out = Server::with_pool(masked, &manifest, pool).unwrap().run().unwrap();
+
+    assert!(
+        (masked_out.ledger.uplink_bytes as f64) < 0.5 * dense_out.ledger.uplink_bytes as f64,
+        "masked bytes {} vs dense {}",
+        masked_out.ledger.uplink_bytes,
+        dense_out.ledger.uplink_bytes
+    );
+    // unit accounting ~ gamma on maskable params (biases stay dense)
+    let mm = manifest.model("lenet").unwrap();
+    let maskable = mm.maskable_params() as f64 / mm.p as f64;
+    let expected_unit = 0.2 * maskable + (1.0 - maskable);
+    let per_upload = masked_out.ledger.uplink_units / (2.0 * 4.0);
+    assert!(
+        (per_upload - expected_unit).abs() < 0.02,
+        "per-upload units {per_upload} vs expected {expected_unit}"
+    );
+}
+
+#[test]
+fn runs_are_deterministic_across_pool_widths() {
+    let Some(manifest) = manifest() else { return };
+    let run = |workers: usize| {
+        let mut cfg = tiny_cfg("det");
+        cfg.rounds = 2;
+        cfg.workers = workers;
+        cfg.masking = MaskPolicy::selective(0.5);
+        Server::new(cfg, &manifest).unwrap().run().unwrap()
+    };
+    let a = run(1);
+    let b = run(3);
+    assert_eq!(a.final_params, b.final_params, "pool width must not change results");
+    assert_eq!(a.ledger.uplink_bytes, b.ledger.uplink_bytes);
+}
+
+#[test]
+fn availability_failures_shrink_cohorts_but_training_continues() {
+    let Some(manifest) = manifest() else { return };
+    let mut cfg = tiny_cfg("flaky");
+    cfg.clients = 6;
+    cfg.rounds = 3;
+    cfg.ack_prob = 0.5;
+    let outcome = Server::new(cfg, &manifest).unwrap().run().unwrap();
+    // some rounds must have aggregated fewer than all clients
+    assert!(outcome.recorder.rounds.iter().any(|r| r.clients < 6));
+    // but every round aggregated at least one and produced finite params
+    assert!(outcome.recorder.rounds.iter().all(|r| r.clients >= 1));
+    assert!(outcome.final_params.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,174 @@
+//! Cross-module property tests (seeded randomized cases via util::prop).
+//!
+//! These pin the coordinator invariants the paper's results depend on:
+//! sampling monotonicity and cost accounting, masking exactness, codec
+//! faithfulness, aggregation conservation, and — when artifacts are
+//! present — agreement between the L1 Pallas mask kernel and the exact
+//! rust oracle.
+
+use fedmask::fl::aggregate::{weighted_mean, Contribution};
+use fedmask::fl::masking::{self, MaskScope};
+use fedmask::fl::sampling::SamplingSchedule;
+use fedmask::runtime::manifest::{LayerInfo, Manifest};
+use fedmask::transport::codec::{decode_update, encode_update, Encoding};
+use fedmask::transport::cost::eq6_cost;
+use fedmask::util::prop::{check, Gen};
+
+fn layer(offset: usize, size: usize, masked: bool) -> LayerInfo {
+    LayerInfo {
+        name: format!("l{offset}"),
+        shape: vec![size],
+        offset,
+        size,
+        masked,
+    }
+}
+
+#[test]
+fn prop_eq6_equals_roundwise_simulation() {
+    check("eq6 closed form vs simulation", 100, |g| {
+        let c0 = g.f64_in(0.1, 1.0);
+        let beta = g.f64_in(0.0, 0.5);
+        let gamma = g.f64_in(0.05, 1.0);
+        let rounds = g.usize_in(1, 80);
+        let closed = eq6_cost(c0, beta, gamma, rounds);
+        let mut acc = 0.0;
+        for t in 1..=rounds {
+            acc += gamma * c0 / (beta * t as f64).exp();
+        }
+        let sim = acc / rounds as f64;
+        assert!((closed - sim).abs() < 1e-10);
+    });
+}
+
+#[test]
+fn prop_dynamic_sampling_total_cost_below_static() {
+    check("dynamic cheaper than static", 100, |g| {
+        let c0 = g.f64_in(0.1, 1.0);
+        let beta = g.f64_in(0.01, 0.5);
+        let rounds = g.usize_in(2, 100);
+        let dynamic = SamplingSchedule::DynamicExp { c0, beta };
+        let dyn_cost: f64 = (1..=rounds).map(|t| dynamic.rate(t)).sum();
+        let static_cost = c0 * rounds as f64;
+        assert!(dyn_cost < static_cost);
+    });
+}
+
+#[test]
+fn prop_masked_vector_roundtrips_and_is_cheaper() {
+    check("masked wire roundtrip + saving", 60, |g| {
+        let n = g.usize_in(64, 4000);
+        let gamma = g.f32_in(0.05, 0.45);
+        let wn = g.normal_vec(n);
+        let wo = g.normal_vec(n);
+        let layers = vec![layer(0, n, true)];
+        let masked = masking::selective_mask_rust(&wn, &wo, gamma, &layers, MaskScope::PerLayer);
+        let dense_bytes = encode_update(0, 0, 1, &wn, Encoding::Dense).len();
+        let sparse = encode_update(0, 0, 1, &masked, Encoding::Auto);
+        assert!(sparse.len() < dense_bytes, "gamma<0.5 must ship sparse");
+        let back = decode_update(&sparse).unwrap();
+        assert_eq!(back.params, masked);
+    });
+}
+
+#[test]
+fn prop_aggregation_conserves_weighted_sum() {
+    check("aggregation conservation", 60, |g| {
+        let p = g.usize_in(1, 500);
+        let k = g.usize_in(1, 10);
+        let vecs: Vec<Vec<f32>> = (0..k).map(|_| g.normal_vec(p)).collect();
+        let weights: Vec<u32> = (0..k).map(|_| g.usize_in(1, 1000) as u32).collect();
+        let contribs: Vec<Contribution> = vecs
+            .iter()
+            .zip(&weights)
+            .map(|(v, &w)| Contribution { params: v, n_samples: w })
+            .collect();
+        let out = weighted_mean(&contribs).unwrap();
+        let total: f64 = weights.iter().map(|&w| w as f64).sum();
+        // check a few random coordinates against the direct formula
+        for _ in 0..5.min(p) {
+            let j = g.usize_in(0, p - 1);
+            let want: f64 = vecs
+                .iter()
+                .zip(&weights)
+                .map(|(v, &w)| v[j] as f64 * w as f64 / total)
+                .sum();
+            assert!((out[j] as f64 - want).abs() < 1e-5, "coord {j}");
+        }
+    });
+}
+
+#[test]
+fn prop_selective_mask_idempotent() {
+    check("masking idempotence", 40, |g| {
+        let n = g.usize_in(16, 1000);
+        let gamma = g.f32_in(0.1, 0.9);
+        let wn = g.normal_vec(n);
+        let wo = g.normal_vec(n);
+        let layers = vec![layer(0, n, true)];
+        let once = masking::selective_mask_rust(&wn, &wo, gamma, &layers, MaskScope::PerLayer);
+        // masking the masked vector with the same reference keeps exactly
+        // the survivors (their |delta| ranks only grow vs zeroed entries
+        // whose delta is |wo|... not guaranteed; instead assert:
+        // re-masking with gamma=1 is identity)
+        let again = masking::selective_mask_rust(&once, &wo, 1.0, &layers, MaskScope::PerLayer);
+        assert_eq!(once, again);
+    });
+}
+
+#[test]
+fn prop_hlo_mask_kernel_matches_rust_oracle() {
+    // Needs artifacts; skip silently if absent.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(manifest) = Manifest::load(&dir) else {
+        eprintln!("skipping kernel-vs-oracle property (run `make artifacts`)");
+        return;
+    };
+    let engine = fedmask::runtime::engine::Engine::load(&manifest, &["lenet"]).unwrap();
+    let mm = engine.model("lenet").unwrap().clone();
+    check("pallas kernel == rust oracle", 8, |g: &mut Gen| {
+        let gamma = g.f32_in(0.05, 0.95);
+        let wn = g.normal_vec(mm.p);
+        let wo = g.normal_vec(mm.p);
+        let hlo = engine.mask("lenet", &wn, &wo, gamma).unwrap();
+        let oracle =
+            masking::selective_mask_rust(&wn, &wo, gamma, &mm.layers, MaskScope::PerLayer);
+        // compare kept sets per layer; bisection ties can differ by <=1
+        // entry per layer at f32 resolution
+        for l in &mm.layers {
+            let seg = l.offset..l.offset + l.size;
+            let kept_hlo = hlo[seg.clone()].iter().filter(|v| **v != 0.0).count();
+            let kept_rust = oracle[seg.clone()].iter().filter(|v| **v != 0.0).count();
+            assert!(
+                (kept_hlo as isize - kept_rust as isize).abs() <= 2,
+                "layer {} kept {kept_hlo} vs {kept_rust} (gamma {gamma}, seed {:#x})",
+                l.name,
+                g.seed
+            );
+            let disagree = hlo[seg.clone()]
+                .iter()
+                .zip(&oracle[seg])
+                .filter(|(a, b)| (**a != 0.0) != (**b != 0.0))
+                .count();
+            assert!(
+                disagree <= 2,
+                "layer {}: {disagree} membership disagreements",
+                l.name
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_random_mask_rate_concentrates() {
+    check("random mask rate", 30, |g| {
+        let n = g.usize_in(5_000, 40_000);
+        let gamma = g.f32_in(0.1, 0.9);
+        let w = vec![1.0f32; n];
+        let layers = vec![layer(0, n, true)];
+        let mut rng = fedmask::sim::rng::Rng::new(g.seed);
+        let masked = masking::random_mask_rust(&w, gamma, &layers, &mut rng);
+        let kept = masked.iter().filter(|v| **v != 0.0).count() as f64 / n as f64;
+        assert!((kept - gamma as f64).abs() < 0.03, "kept {kept} vs gamma {gamma}");
+    });
+}

@@ -1,0 +1,199 @@
+//! Integration tests: the PJRT engine against the real AOT artifacts.
+//!
+//! These require `make artifacts` to have run (they are skipped with a clear
+//! message otherwise, so `cargo test` stays usable before the first build).
+
+use fedmask::runtime::engine::Engine;
+use fedmask::runtime::manifest::Manifest;
+use fedmask::runtime::pool::EnginePool;
+use fedmask::runtime::tensor::{Batches, XData};
+use fedmask::sim::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping runtime integration test (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+/// Synthetic learnable image chunk: 10 class templates + noise.
+fn image_chunk(mm: &fedmask::runtime::manifest::ModelManifest, nb: usize, seed: u64) -> Batches {
+    let mut rng = Rng::new(seed);
+    let elem: usize = mm.x_elem_len();
+    let templates: Vec<Vec<f32>> = (0..10)
+        .map(|c| {
+            let mut r = Rng::new(1000 + c);
+            (0..elem).map(|_| r.next_normal()).collect()
+        })
+        .collect();
+    let n = nb * mm.batch;
+    let mut xs = Vec::with_capacity(n * elem);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.next_below(10) as usize;
+        ys.push(c as i32);
+        for j in 0..elem {
+            xs.push(templates[c][j] + 0.3 * rng.next_normal());
+        }
+    }
+    Batches::new(
+        nb,
+        mm.batch,
+        mm.x_elem_shape.clone(),
+        mm.y_elem_shape.clone(),
+        XData::F32(xs),
+        ys,
+    )
+    .unwrap()
+}
+
+/// Synthetic LM chunk over a small vocab slice.
+fn lm_chunk(mm: &fedmask::runtime::manifest::ModelManifest, nb: usize, seed: u64) -> Batches {
+    let mut rng = Rng::new(seed);
+    let seq = mm.x_elem_shape[0];
+    let n = nb * mm.batch;
+    let mut xs = Vec::with_capacity(n * seq);
+    let mut ys = Vec::with_capacity(n * seq);
+    for _ in 0..n {
+        let mut tok = rng.next_below(50) as i32;
+        for _ in 0..seq {
+            xs.push(tok);
+            // deterministic-ish successor structure makes it learnable
+            let next = ((tok as u64 * 7 + 3) % 50) as i32;
+            ys.push(next);
+            tok = next;
+        }
+    }
+    Batches::new(
+        nb,
+        mm.batch,
+        mm.x_elem_shape.clone(),
+        mm.y_elem_shape.clone(),
+        XData::I32(xs),
+        ys,
+    )
+    .unwrap()
+}
+
+#[test]
+fn lenet_init_train_eval_mask_roundtrip() {
+    let Some(manifest) = manifest() else { return };
+    let engine = Engine::load(&manifest, &["lenet"]).unwrap();
+    let mm = engine.model("lenet").unwrap().clone();
+
+    // init: deterministic, right length, finite
+    let p0 = engine.init("lenet", 42).unwrap();
+    let p1 = engine.init("lenet", 42).unwrap();
+    let p2 = engine.init("lenet", 7).unwrap();
+    assert_eq!(p0.len(), mm.p);
+    assert_eq!(p0, p1);
+    assert_ne!(p0, p2);
+    assert!(p0.iter().all(|v| v.is_finite()));
+
+    // train: loss decreases over epochs on learnable data
+    let chunk = image_chunk(&mm, mm.nb_train, 5);
+    let (mut params, first_loss) = engine.train_epoch("lenet", &p0, &chunk, 0.05).unwrap();
+    let mut last_loss = first_loss;
+    for _ in 0..4 {
+        let (np, loss) = engine.train_epoch("lenet", &params, &chunk, 0.05).unwrap();
+        params = np;
+        last_loss = loss;
+    }
+    assert!(
+        last_loss < first_loss,
+        "loss should fall: {first_loss} -> {last_loss}"
+    );
+
+    // eval: counts match geometry, accuracy improved over init
+    let echunk = image_chunk(&mm, mm.nb_eval, 99);
+    let before = engine.eval_chunk("lenet", &p0, &echunk).unwrap();
+    let after = engine.eval_chunk("lenet", &params, &echunk).unwrap();
+    assert_eq!(before.count as usize, mm.eval_chunk_samples());
+    assert!(after.accuracy() > before.accuracy());
+
+    // mask: keep-rate per maskable layer, biases untouched
+    let gamma = 0.3f32;
+    let masked = engine.mask("lenet", &params, &p0, gamma).unwrap();
+    assert_eq!(masked.len(), mm.p);
+    for l in &mm.layers {
+        let seg = &masked[l.offset..l.offset + l.size];
+        let orig = &params[l.offset..l.offset + l.size];
+        if l.masked {
+            let kept = seg.iter().filter(|v| **v != 0.0).count();
+            let k = (gamma * l.size as f32).round() as isize;
+            assert!(
+                (kept as isize - k).abs() <= (l.size as isize / 50).max(2),
+                "layer {} kept {kept} want ~{k}",
+                l.name
+            );
+            // kept entries are w_new verbatim
+            for (s, o) in seg.iter().zip(orig) {
+                assert!(*s == 0.0 || s == o);
+            }
+        } else {
+            assert_eq!(seg, orig, "unmasked layer {} must pass through", l.name);
+        }
+    }
+}
+
+#[test]
+fn gru_lm_trains_and_perplexity_drops() {
+    let Some(manifest) = manifest() else { return };
+    let engine = Engine::load(&manifest, &["gru"]).unwrap();
+    let mm = engine.model("gru").unwrap().clone();
+
+    let p0 = engine.init("gru", 0).unwrap();
+    let chunk = lm_chunk(&mm, mm.nb_train, 3);
+    let echunk = lm_chunk(&mm, mm.nb_eval, 11);
+
+    let before = engine.eval_chunk("gru", &p0, &echunk).unwrap();
+    let mut params = p0;
+    for _ in 0..3 {
+        let (np, _) = engine.train_epoch("gru", &params, &chunk, 0.5).unwrap();
+        params = np;
+    }
+    let after = engine.eval_chunk("gru", &params, &echunk).unwrap();
+    assert!(
+        after.perplexity() < before.perplexity(),
+        "ppl should fall: {} -> {}",
+        before.perplexity(),
+        after.perplexity()
+    );
+    // initial ppl should be near uniform over vocab
+    let vocab = mm.vocab().unwrap() as f64;
+    assert!(before.perplexity() > vocab * 0.3);
+}
+
+#[test]
+fn pool_parallel_training_matches_sequential() {
+    let Some(manifest) = manifest() else { return };
+    let pool = EnginePool::new(&manifest, &["lenet"], 2).unwrap();
+    let engine = Engine::load(&manifest, &["lenet"]).unwrap();
+    let mm = engine.model("lenet").unwrap().clone();
+
+    let p0 = engine.init("lenet", 1).unwrap();
+    let chunks: Vec<Batches> = (0..4).map(|i| image_chunk(&mm, mm.nb_train, 100 + i)).collect();
+
+    // sequential reference
+    let seq: Vec<Vec<f32>> = chunks
+        .iter()
+        .map(|c| engine.train_epoch("lenet", &p0, c, 0.05).unwrap().0)
+        .collect();
+
+    // pooled
+    let jobs: Vec<_> = chunks
+        .iter()
+        .map(|c| {
+            let p = p0.clone();
+            let c = c.clone();
+            move |e: &Engine| e.train_epoch("lenet", &p, &c, 0.05).unwrap().0
+        })
+        .collect();
+    let par = pool.map(jobs).unwrap();
+
+    assert_eq!(seq, par, "pool must be bit-identical to sequential");
+}

@@ -23,13 +23,19 @@ def selective_mask_threshold_ref(w_new: jnp.ndarray, w_old: jnp.ndarray, gamma) 
     """Exact keep-threshold tau for selective masking (Eq. 4 of the paper).
 
     Returns the value tau such that keeping entries with |w_new - w_old| >= tau
-    keeps (at least) ``round(gamma * P)`` entries; ties at tau may keep more.
+    keeps (at least) ``clip(round(gamma * P), 1, P)`` entries — the keep-count
+    convention shared with the Pallas kernel and the rust oracle
+    (``fl/masking.rs`` ``keep_count``); ties at tau may keep more.
     """
     p = w_new.shape[0]
     d = jnp.abs(w_new - w_old)
-    k = jnp.round(gamma * p).astype(jnp.int32)
+    # gamma <= 0 keeps nothing (k == 0, tau = +inf) — same as the rust
+    # keep_count; positive rates clamp into [1, p].
+    k = jnp.where(
+        jnp.asarray(gamma) > 0, jnp.clip(jnp.round(gamma * p), 1, p), 0
+    ).astype(jnp.int32)
     sorted_desc = jnp.sort(d)[::-1]
-    # k-th largest value; k == 0 keeps nothing (tau = +inf).
+    # k-th largest value
     tau = jnp.where(k >= 1, sorted_desc[jnp.clip(k - 1, 0, p - 1)], jnp.inf)
     return tau
 

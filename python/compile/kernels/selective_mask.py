@@ -113,7 +113,13 @@ def selective_mask(
     )(wn, wo)
     dmax = jnp.max(partial_max)
 
-    k = jnp.round(jnp.asarray(gamma, jnp.float32) * p)
+    # Shared keep-count convention with the rust oracle (fl/masking.rs
+    # ``keep_count``): round(gamma * p) clamped to [1, p] for positive
+    # rates — a non-empty segment with a positive rate never drops
+    # everything (gamma -> 0), float round-off never overruns the segment
+    # (gamma -> 1) — and gamma <= 0 keeps nothing.
+    g = jnp.asarray(gamma, jnp.float32)
+    k = jnp.where(g > 0, jnp.clip(jnp.round(g * p), 1.0, float(p)), 0.0)
 
     count_call = pl.pallas_call(
         functools.partial(_count_kernel, valid_len=p, block=block),
@@ -135,10 +141,9 @@ def selective_mask(
     hi0 = dmax * (1.0 + 1e-6) + 1e-30
     lo, hi = lax.fori_loop(0, iters, body, (jnp.float32(0.0), hi0))
     del hi
-    # k == 0 (gamma == 0): count >= 0 always holds, lo converges to ~dmax and
-    # keeps only the max-|delta| tie set — acceptable for a degenerate rate
-    # the coordinator never requests (config validation enforces gamma > 0).
-    tau = lo
+    # k == 0 (gamma <= 0): tau above dmax keeps nothing, matching the rust
+    # keep_count boundary (config validation rejects the rate anyway).
+    tau = jnp.where(k >= 1.0, lo, hi0)
 
     masked = pl.pallas_call(
         _mask_kernel,

@@ -1,16 +1,47 @@
 //! Aggregation hot-path bench: weighted FedAvg over flat parameter vectors
 //! at each model's true P, across cohort sizes (paper Eq. 2 — the L3
-//! operation executed once per round).
+//! operation executed once per round), plus the streaming-vs-barrier
+//! comparison over real encoded wire payloads: decode + fold as payloads
+//! "arrive" (O(p) state) against decode-everything-then-barrier
+//! (O(k*p) buffering), across cohort size k and masking rate gamma.
 //!
 //! Run: cargo bench --bench aggregation   (FEDMASK_BENCH_MS tunes budget)
 
-use fedmask::fl::aggregate::{uniform_mean, weighted_mean, Contribution};
+use fedmask::fl::aggregate::{
+    uniform_mean, weighted_mean, Aggregator, Contribution, StreamingFedAvg,
+};
 use fedmask::sim::rng::Rng;
+use fedmask::transport::codec::{decode_update, encode_update, Encoding, WireUpdate};
 use fedmask::util::bench::Bench;
 
 fn vectors(p: usize, k: usize, seed: u64) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
     (0..k).map(|_| (0..p).map(|_| rng.next_normal()).collect()).collect()
+}
+
+/// Masked-style vectors: a `gamma` fraction of coordinates non-zero.
+fn sparse_vectors(p: usize, k: usize, gamma: f32, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..k)
+        .map(|_| {
+            (0..p)
+                .map(|_| {
+                    if rng.next_f32() < gamma {
+                        rng.next_normal()
+                    } else {
+                        0.0
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn contribs_of(vecs: &[Vec<f32>]) -> Vec<Contribution<'_>> {
+    vecs.iter()
+        .enumerate()
+        .map(|(client, v)| Contribution { client, params: v, n_samples: 200 })
+        .collect()
 }
 
 fn main() {
@@ -19,10 +50,7 @@ fn main() {
     for (model, p) in [("lenet", 20_522usize), ("gru", 154_768), ("vggmini", 51_666)] {
         for clients in [4usize, 16, 64] {
             let vecs = vectors(p, clients, 7);
-            let contribs: Vec<Contribution> = vecs
-                .iter()
-                .map(|v| Contribution { params: v, n_samples: 200 })
-                .collect();
+            let contribs = contribs_of(&vecs);
             let m = b.run(&format!("weighted_mean/{model}/m={clients}"), || {
                 weighted_mean(&contribs).unwrap()
             });
@@ -30,12 +58,79 @@ fn main() {
             println!("{}", m.report(Some((items, "param"))));
         }
     }
+
+    // Streaming vs barrier over the real wire: the streaming side decodes
+    // and folds one payload at a time and never holds more than one decoded
+    // update; the barrier side decodes the whole cohort first (the seed
+    // design), paying O(k*p) buffering before any aggregation starts.
+    println!("== streaming vs barrier (decode + aggregate, vggmini P) ==");
+    let p = 51_666usize;
+    for clients in [8usize, 32, 128] {
+        for gamma in [0.1f32, 0.5, 1.0] {
+            let vecs = sparse_vectors(p, clients, gamma, 11);
+            let payloads: Vec<Vec<u8>> = vecs
+                .iter()
+                .enumerate()
+                .map(|(c, v)| encode_update(c as u32, 1, 200, v, Encoding::Auto))
+                .collect();
+            let tag = format!("k={clients}/gamma={gamma}");
+
+            let m = b.run(&format!("stream_fold/{tag}"), || {
+                let mut agg = StreamingFedAvg::new(p);
+                for payload in &payloads {
+                    let u = decode_update(payload).unwrap();
+                    agg.fold(Contribution {
+                        client: u.client as usize,
+                        params: &u.params,
+                        n_samples: u.n_samples,
+                    })
+                    .unwrap();
+                }
+                Box::new(agg).finish().unwrap()
+            });
+            println!("{}", m.report(Some(((p * clients) as f64, "param"))));
+
+            let m = b.run(&format!("barrier_fold/{tag}"), || {
+                let decoded: Vec<WireUpdate> =
+                    payloads.iter().map(|payload| decode_update(payload).unwrap()).collect();
+                let contribs: Vec<Contribution> = decoded
+                    .iter()
+                    .map(|u| Contribution {
+                        client: u.client as usize,
+                        params: &u.params,
+                        n_samples: u.n_samples,
+                    })
+                    .collect();
+                weighted_mean(&contribs).unwrap()
+            });
+            println!("{}", m.report(Some(((p * clients) as f64, "param"))));
+
+            // Peak aggregation-state memory: the O(p) claim, measured.
+            let mut agg = StreamingFedAvg::new(p);
+            for payload in &payloads {
+                let u = decode_update(payload).unwrap();
+                agg.fold(Contribution {
+                    client: u.client as usize,
+                    params: &u.params,
+                    n_samples: u.n_samples,
+                })
+                .unwrap();
+            }
+            let streaming_state = agg.state_bytes() + 4 * p; // accumulator + one decoded update
+            let barrier_state = 4 * p * clients; // k decoded updates buffered
+            assert!(
+                streaming_state < barrier_state || clients <= 5,
+                "streaming state must undercut the barrier buffer for real cohorts"
+            );
+            println!(
+                "  state bytes: streaming {streaming_state} (O(p), k-independent) vs barrier {barrier_state} (O(k*p))"
+            );
+        }
+    }
+
     // rule ablation: uniform vs weighted at one size
     let vecs = vectors(51_666, 16, 9);
-    let contribs: Vec<Contribution> = vecs
-        .iter()
-        .map(|v| Contribution { params: v, n_samples: 200 })
-        .collect();
+    let contribs = contribs_of(&vecs);
     let m = b.run("uniform_mean/vggmini/m=16", || uniform_mean(&contribs).unwrap());
     println!("{}", m.report(Some(((51_666 * 16) as f64, "param"))));
 }

@@ -24,12 +24,15 @@ pub enum NetworkKind {
     Simulated,
 }
 
-/// Server-side aggregation rule.
+/// Server-side aggregation rule (constructed per round via
+/// [`crate::fl::aggregate::make_aggregator`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Aggregator {
-    /// Sample-weighted FedAvg (paper Eq. 2; default).
+pub enum AggregatorKind {
+    /// Sample-weighted FedAvg (paper Eq. 2; default) — streamed with O(p)
+    /// server memory.
     FedAvg,
-    /// Attentive aggregation (Ji et al. [11]) with softmax temperature.
+    /// Attentive aggregation (Ji et al. [11]) with softmax temperature —
+    /// buffers the cohort (O(k*p)), inherent to the rule.
     Attentive { temp: f64 },
 }
 
@@ -74,8 +77,15 @@ pub struct ExperimentConfig {
     pub network: NetworkKind,
     /// Wire encoding for uploads.
     pub encoding: Encoding,
+    /// Delta-encode the downlink broadcast against the previous round's
+    /// global model through the same codec (sparse when masked cohorts
+    /// leave most coordinates untouched). Off by default: the reconstructed
+    /// broadcast `w_old + (w_new - w_old)` differs from `w_new` by f32
+    /// rounding, so this trades bitwise parity with the dense broadcast for
+    /// downlink savings.
+    pub downlink_delta: bool,
     /// Server aggregation rule.
-    pub aggregator: Aggregator,
+    pub aggregator: AggregatorKind,
     /// Engine pool width.
     pub workers: usize,
 }
@@ -116,7 +126,8 @@ impl ExperimentConfig {
             straggler_prob: 0.0,
             network: NetworkKind::Ideal,
             encoding: Encoding::Auto,
-            aggregator: Aggregator::FedAvg,
+            downlink_delta: false,
+            aggregator: AggregatorKind::FedAvg,
             workers: default_workers(),
         })
     }
@@ -234,11 +245,12 @@ impl ExperimentConfig {
                     Encoding::AutoQ8 => "auto-q8",
                 }),
             ),
+            ("downlink_delta", Json::Bool(self.downlink_delta)),
             (
                 "aggregator",
                 Json::str(match self.aggregator {
-                    Aggregator::FedAvg => "fedavg".to_string(),
-                    Aggregator::Attentive { temp } => format!("attentive-{temp}"),
+                    AggregatorKind::FedAvg => "fedavg".to_string(),
+                    AggregatorKind::Attentive { temp } => format!("attentive-{temp}"),
                 }),
             ),
             ("workers", Json::num(self.workers as f64)),
@@ -316,10 +328,14 @@ impl ExperimentConfig {
             Some("auto-q8") => Encoding::AutoQ8,
             Some(other) => return Err(Error::invalid(format!("bad encoding '{other}'"))),
         };
+        cfg.downlink_delta = match root.opt("downlink_delta") {
+            Some(v) => v.as_bool()?,
+            None => false,
+        };
         cfg.aggregator = match root.opt("aggregator").map(|v| v.as_str()).transpose()? {
-            None | Some("fedavg") => Aggregator::FedAvg,
-            Some(s) if s == "attentive" => Aggregator::Attentive { temp: 1.0 },
-            Some(s) if s.starts_with("attentive-") => Aggregator::Attentive {
+            None | Some("fedavg") => AggregatorKind::FedAvg,
+            Some(s) if s == "attentive" => AggregatorKind::Attentive { temp: 1.0 },
+            Some(s) if s.starts_with("attentive-") => AggregatorKind::Attentive {
                 temp: s[10..]
                     .parse()
                     .map_err(|_| Error::invalid(format!("bad aggregator '{s}'")))?,
@@ -377,6 +393,8 @@ mod tests {
         cfg.partition = Scheme::NonIidShards { shards_per_client: 2 };
         cfg.rounds = 50;
         cfg.network = NetworkKind::Simulated;
+        cfg.downlink_delta = true;
+        cfg.aggregator = AggregatorKind::Attentive { temp: 0.5 };
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.label, cfg.label);
         assert_eq!(back.sampling, cfg.sampling);
@@ -385,6 +403,8 @@ mod tests {
         assert_eq!(back.partition, cfg.partition);
         assert_eq!(back.rounds, 50);
         assert_eq!(back.network, NetworkKind::Simulated);
+        assert!(back.downlink_delta);
+        assert_eq!(back.aggregator, AggregatorKind::Attentive { temp: 0.5 });
     }
 
     #[test]

@@ -129,6 +129,7 @@ pub fn append_rounds(table: &mut Table, outcome: &ServerOutcome) {
             crate::metrics::csv::fmt(r.test_perplexity),
             crate::metrics::csv::fmt(r.uplink_units),
             r.uplink_bytes.to_string(),
+            r.downlink_bytes.to_string(),
             crate::metrics::csv::fmt(r.virtual_time_s),
         ]);
     }
@@ -147,6 +148,7 @@ pub fn rounds_header() -> Table {
         "test_perplexity",
         "uplink_units",
         "uplink_bytes",
+        "downlink_bytes",
         "virtual_time_s",
     ])
 }

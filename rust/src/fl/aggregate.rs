@@ -1,4 +1,4 @@
-//! Weighted federated averaging (paper §3.1).
+//! Weighted federated averaging (paper §3.1), as a **streaming** operation.
 //!
 //! The aggregation rule is FedAvg's sample-weighted mean,
 //! `Theta_{t+1} = sum_i (n_i / n) Theta_t^i` — Eq. 2 of the paper modulo its
@@ -8,44 +8,238 @@
 //! received (zeros included), which is the paper-literal semantics of
 //! Alg. 2/4.
 //!
-//! The inner loop is the aggregation hot path (P-length fused
-//! multiply-adds); the criterion bench `aggregation` tracks it.
+//! Since the transport refactor the server no longer barriers on the full
+//! cohort: decoded [`crate::transport::codec::WireUpdate`] payloads are
+//! folded into an [`Aggregator`] as they arrive, in whatever order the
+//! engine pool completes them. Two implementations:
+//!
+//! * [`StreamingFedAvg`] — O(p) server memory (one fixed-point accumulator
+//!   per parameter, no per-client buffering). The weighted numerator
+//!   `sum_i n_i * v_ij` accumulates in 128-bit fixed point (scale 2^-64),
+//!   so folds are integer additions — associative and commutative — and the
+//!   result is **bit-identical for every arrival order**. The fixed-point
+//!   grid is exact while `|sum_i n_i * v_ij| < 2^63` per coordinate, far
+//!   beyond any realistic cohort; the per-fold rounding error is below
+//!   2^-65, invisible at f32 output resolution.
+//! * [`BufferingAttentive`] — attentive aggregation (Ji et al. [11]) needs
+//!   the whole cohort to form its softmax weights, so it buffers decoded
+//!   updates (O(k*p), inherent to the rule) and canonicalizes by client id
+//!   at `finish`, which restores arrival-order independence.
+//!
+//! The inner fold is the aggregation hot path (P-length multiply-adds); the
+//! criterion bench `aggregation` tracks it, including streaming-vs-barrier.
 
+use crate::runtime::manifest::LayerInfo;
 use crate::util::error::{Error, Result};
 
-/// One client's contribution to a round.
+/// One client's contribution to a round (a decoded, reconstructed update).
 #[derive(Debug, Clone)]
 pub struct Contribution<'a> {
+    /// Originating client id (from the wire header; canonical sort key for
+    /// buffering aggregators).
+    pub client: usize,
     pub params: &'a [f32],
     /// Local training-sample count n_i (the FedAvg weight).
     pub n_samples: u32,
 }
 
-/// Sample-weighted mean of client parameter vectors.
-///
-/// Accumulates in f64 to keep the mean exact to f32 resolution even for
-/// hundreds of clients (matters for bit-reproducibility across pool sizes:
-/// summation order is fixed by client index upstream).
+/// Streaming, order-insensitive aggregation: fold decoded updates as they
+/// arrive, then finish into the next global model.
+pub trait Aggregator {
+    /// Fold one client's update into the running aggregate.
+    fn fold(&mut self, contrib: Contribution<'_>) -> Result<()>;
+
+    /// Number of contributions folded so far.
+    fn folded(&self) -> usize;
+
+    /// Heap bytes currently held by the aggregation state (the benchmark's
+    /// O(p)-vs-O(k*p) memory evidence).
+    fn state_bytes(&self) -> usize;
+
+    /// Consume the aggregator and produce the new global model.
+    fn finish(self: Box<Self>) -> Result<Vec<f32>>;
+}
+
+/// Build the configured aggregator for one round.
+pub fn make_aggregator(
+    kind: crate::config::experiment::AggregatorKind,
+    global: &[f32],
+    layers: &[LayerInfo],
+) -> Box<dyn Aggregator> {
+    match kind {
+        crate::config::experiment::AggregatorKind::FedAvg => {
+            Box::new(StreamingFedAvg::new(global.len()))
+        }
+        crate::config::experiment::AggregatorKind::Attentive { temp } => {
+            Box::new(BufferingAttentive::new(global, layers, temp))
+        }
+    }
+}
+
+/// Fixed-point scale of the streaming FedAvg accumulator: products
+/// `n_i * v_ij` are rounded to multiples of 2^-64 before the (integer,
+/// therefore order-independent) accumulation.
+const FIXED_POINT_SCALE: f64 = 18_446_744_073_709_551_616.0; // 2^64
+
+/// A diverged client's update (NaN/inf) must fail loudly in every
+/// aggregator — the FedAvg float->int cast would silently zero NaN and
+/// the attentive softmax would propagate it into the whole global model.
+fn check_finite(contrib: &Contribution<'_>) -> Result<()> {
+    if contrib.params.iter().any(|v| !v.is_finite()) {
+        return Err(Error::invalid(format!(
+            "non-finite update from client {}",
+            contrib.client
+        )));
+    }
+    Ok(())
+}
+
+/// Sample-weighted FedAvg with O(p) state and arrival-order-independent
+/// accumulation (see the module doc for the fixed-point argument).
+pub struct StreamingFedAvg {
+    /// Per-parameter weighted numerator `sum_i n_i * v_ij`, fixed point.
+    acc: Vec<i128>,
+    total_samples: u64,
+    folded: usize,
+}
+
+impl StreamingFedAvg {
+    pub fn new(p: usize) -> StreamingFedAvg {
+        StreamingFedAvg {
+            acc: vec![0i128; p],
+            total_samples: 0,
+            folded: 0,
+        }
+    }
+}
+
+impl Aggregator for StreamingFedAvg {
+    fn fold(&mut self, contrib: Contribution<'_>) -> Result<()> {
+        if contrib.params.len() != self.acc.len() {
+            return Err(Error::invalid("contribution length mismatch"));
+        }
+        check_finite(&contrib)?;
+        // Weighted products must stay inside the fixed-point grid
+        // (|n_i * v| < 2^62 per coordinate): beyond it the float->int cast
+        // would saturate silently — that magnitude only means a diverged
+        // client, which must fail loudly.
+        const GRID_LIMIT: f64 = 4.611_686_018_427_387_9e18; // 2^62
+        let n = contrib.n_samples as f64;
+        for (slot, &v) in self.acc.iter_mut().zip(contrib.params) {
+            let x = n * v as f64;
+            if x.abs() >= GRID_LIMIT {
+                return Err(Error::invalid(format!(
+                    "update magnitude from client {} exceeds the aggregation range",
+                    contrib.client
+                )));
+            }
+            *slot = slot
+                .checked_add((x * FIXED_POINT_SCALE).round() as i128)
+                .ok_or_else(|| Error::invalid("aggregation accumulator overflow"))?;
+        }
+        self.total_samples += contrib.n_samples as u64;
+        self.folded += 1;
+        Ok(())
+    }
+
+    fn folded(&self) -> usize {
+        self.folded
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.acc.capacity() * std::mem::size_of::<i128>()
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<f32>> {
+        if self.folded == 0 {
+            return Err(Error::invalid("cannot aggregate zero contributions"));
+        }
+        if self.total_samples == 0 {
+            return Err(Error::invalid("total sample count is zero"));
+        }
+        let total = self.total_samples as f64;
+        Ok(self
+            .acc
+            .iter()
+            .map(|&a| ((a as f64 / FIXED_POINT_SCALE) / total) as f32)
+            .collect())
+    }
+}
+
+/// Attentive aggregation as an [`Aggregator`]: buffers decoded updates
+/// (O(k*p) — the rule needs every client's distance before any weight is
+/// known) and sorts by client id at finish so the result does not depend on
+/// arrival order.
+pub struct BufferingAttentive {
+    global: Vec<f32>,
+    layers: Vec<LayerInfo>,
+    temp: f64,
+    buffered: Vec<(usize, u32, Vec<f32>)>,
+}
+
+impl BufferingAttentive {
+    pub fn new(global: &[f32], layers: &[LayerInfo], temp: f64) -> BufferingAttentive {
+        BufferingAttentive {
+            global: global.to_vec(),
+            layers: layers.to_vec(),
+            temp,
+            buffered: Vec::new(),
+        }
+    }
+}
+
+impl Aggregator for BufferingAttentive {
+    fn fold(&mut self, contrib: Contribution<'_>) -> Result<()> {
+        if contrib.params.len() != self.global.len() {
+            return Err(Error::invalid("contribution length mismatch"));
+        }
+        check_finite(&contrib)?;
+        self.buffered
+            .push((contrib.client, contrib.n_samples, contrib.params.to_vec()));
+        Ok(())
+    }
+
+    fn folded(&self) -> usize {
+        self.buffered.len()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.global.capacity() * 4
+            + self
+                .buffered
+                .iter()
+                .map(|(_, _, v)| v.capacity() * 4)
+                .sum::<usize>()
+    }
+
+    fn finish(mut self: Box<Self>) -> Result<Vec<f32>> {
+        self.buffered.sort_by_key(|(client, _, _)| *client);
+        let contribs: Vec<Contribution> = self
+            .buffered
+            .iter()
+            .map(|(client, n_samples, params)| Contribution {
+                client: *client,
+                params,
+                n_samples: *n_samples,
+            })
+            .collect();
+        attentive_mean(&self.global, &contribs, &self.layers, self.temp)
+    }
+}
+
+/// Barrier-style sample-weighted mean: folds `contribs` through
+/// [`StreamingFedAvg`] in the given order and finishes. Because the fold is
+/// order-independent, this is the reference the streamed server path is
+/// asserted bit-identical against.
 pub fn weighted_mean(contribs: &[Contribution]) -> Result<Vec<f32>> {
     if contribs.is_empty() {
         return Err(Error::invalid("cannot aggregate zero contributions"));
     }
-    let p = contribs[0].params.len();
-    if contribs.iter().any(|c| c.params.len() != p) {
-        return Err(Error::invalid("contribution length mismatch"));
-    }
-    let total: u64 = contribs.iter().map(|c| c.n_samples as u64).sum();
-    if total == 0 {
-        return Err(Error::invalid("total sample count is zero"));
-    }
-    let mut acc = vec![0.0f64; p];
+    let mut agg = StreamingFedAvg::new(contribs[0].params.len());
     for c in contribs {
-        let w = c.n_samples as f64 / total as f64;
-        for (slot, &v) in acc.iter_mut().zip(c.params) {
-            *slot += w * v as f64;
-        }
+        agg.fold(c.clone())?;
     }
-    Ok(acc.into_iter().map(|v| v as f32).collect())
+    Box::new(agg).finish()
 }
 
 /// Unweighted mean (Eq. 1) — kept for the uniform-shard fast path and the
@@ -78,7 +272,7 @@ pub fn uniform_mean(contribs: &[Contribution]) -> Result<Vec<f32>> {
 pub fn attentive_mean(
     global: &[f32],
     contribs: &[Contribution],
-    layers: &[crate::runtime::manifest::LayerInfo],
+    layers: &[LayerInfo],
     temp: f64,
 ) -> Result<Vec<f32>> {
     if contribs.is_empty() {
@@ -125,8 +319,8 @@ mod tests {
     use super::*;
     use crate::util::prop::check;
 
-    fn one_layer(size: usize) -> Vec<crate::runtime::manifest::LayerInfo> {
-        vec![crate::runtime::manifest::LayerInfo {
+    fn one_layer(size: usize) -> Vec<LayerInfo> {
+        vec![LayerInfo {
             name: "w".into(),
             shape: vec![size],
             offset: 0,
@@ -135,14 +329,19 @@ mod tests {
         }]
     }
 
+    fn contrib(client: usize, params: &[f32], n_samples: u32) -> Contribution<'_> {
+        Contribution {
+            client,
+            params,
+            n_samples,
+        }
+    }
+
     #[test]
     fn attentive_equal_contribs_is_identity() {
         let global = vec![0.0f32; 8];
         let a = vec![1.0f32; 8];
-        let contribs = vec![
-            Contribution { params: &a, n_samples: 1 },
-            Contribution { params: &a, n_samples: 1 },
-        ];
+        let contribs = vec![contrib(0, &a, 1), contrib(1, &a, 1)];
         let out = attentive_mean(&global, &contribs, &one_layer(8), 1.0).unwrap();
         for v in out {
             assert!((v - 1.0).abs() < 1e-6);
@@ -154,11 +353,7 @@ mod tests {
         let global = vec![0.0f32; 16];
         let near: Vec<f32> = vec![0.1; 16];
         let far: Vec<f32> = vec![10.0; 16];
-        let contribs = vec![
-            Contribution { params: &near, n_samples: 1 },
-            Contribution { params: &near, n_samples: 1 },
-            Contribution { params: &far, n_samples: 1 },
-        ];
+        let contribs = vec![contrib(0, &near, 1), contrib(1, &near, 1), contrib(2, &far, 1)];
         let attn = attentive_mean(&global, &contribs, &one_layer(16), 0.5).unwrap();
         let plain = uniform_mean(&contribs).unwrap();
         assert!(
@@ -174,7 +369,7 @@ mod tests {
         let global = vec![0.0f32; 4];
         assert!(attentive_mean(&global, &[], &one_layer(4), 1.0).is_err());
         let a = vec![1.0f32; 4];
-        let c = vec![Contribution { params: &a, n_samples: 1 }];
+        let c = vec![contrib(0, &a, 1)];
         assert!(attentive_mean(&global, &c, &one_layer(4), 0.0).is_err());
     }
 
@@ -182,11 +377,7 @@ mod tests {
     fn equal_weights_reduce_to_plain_mean() {
         let a = vec![1.0f32, 2.0, 3.0];
         let b = vec![3.0f32, 4.0, 5.0];
-        let out = weighted_mean(&[
-            Contribution { params: &a, n_samples: 10 },
-            Contribution { params: &b, n_samples: 10 },
-        ])
-        .unwrap();
+        let out = weighted_mean(&[contrib(0, &a, 10), contrib(1, &b, 10)]).unwrap();
         assert_eq!(out, vec![2.0, 3.0, 4.0]);
     }
 
@@ -194,11 +385,7 @@ mod tests {
     fn weights_follow_sample_counts() {
         let a = vec![0.0f32];
         let b = vec![4.0f32];
-        let out = weighted_mean(&[
-            Contribution { params: &a, n_samples: 3 },
-            Contribution { params: &b, n_samples: 1 },
-        ])
-        .unwrap();
+        let out = weighted_mean(&[contrib(0, &a, 3), contrib(1, &b, 1)]).unwrap();
         assert!((out[0] - 1.0).abs() < 1e-7);
     }
 
@@ -207,18 +394,32 @@ mod tests {
         assert!(weighted_mean(&[]).is_err());
         let a = vec![1.0f32, 2.0];
         let b = vec![1.0f32];
-        assert!(weighted_mean(&[
-            Contribution { params: &a, n_samples: 1 },
-            Contribution { params: &b, n_samples: 1 },
-        ])
-        .is_err());
-        assert!(weighted_mean(&[Contribution { params: &a, n_samples: 0 }]).is_err());
+        assert!(weighted_mean(&[contrib(0, &a, 1), contrib(1, &b, 1)]).is_err());
+        assert!(weighted_mean(&[contrib(0, &a, 0)]).is_err());
+    }
+
+    #[test]
+    fn diverged_client_fails_loudly_instead_of_zeroing() {
+        let nan = vec![1.0f32, f32::NAN];
+        let inf = vec![f32::INFINITY, 0.0];
+        // finite but beyond the fixed-point grid: saturating would corrupt
+        let huge = vec![1e25f32, 0.0];
+        assert!(weighted_mean(&[contrib(3, &nan, 1)]).is_err());
+        let mut agg = StreamingFedAvg::new(2);
+        assert!(agg.fold(contrib(3, &inf, 1)).is_err());
+        assert_eq!(agg.folded(), 0);
+        let mut agg = StreamingFedAvg::new(2);
+        assert!(agg.fold(contrib(3, &huge, 500)).is_err());
+        // the attentive buffer enforces the same invariant
+        let mut attn = BufferingAttentive::new(&[0.0f32, 0.0], &one_layer(2), 1.0);
+        assert!(attn.fold(contrib(3, &nan, 1)).is_err());
+        assert_eq!(attn.folded(), 0);
     }
 
     #[test]
     fn single_contribution_is_identity() {
         let a = vec![1.5f32, -2.5, 0.0];
-        let out = weighted_mean(&[Contribution { params: &a, n_samples: 7 }]).unwrap();
+        let out = weighted_mean(&[contrib(0, &a, 7)]).unwrap();
         assert_eq!(out, a);
     }
 
@@ -230,10 +431,8 @@ mod tests {
             let vecs: Vec<Vec<f32>> = (0..k).map(|_| g.normal_vec(p)).collect();
             let contribs: Vec<Contribution> = vecs
                 .iter()
-                .map(|v| Contribution {
-                    params: v,
-                    n_samples: 1 + (g.seed % 100) as u32,
-                })
+                .enumerate()
+                .map(|(i, v)| contrib(i, v, 1 + (g.seed % 100) as u32))
                 .collect();
             let out = weighted_mean(&contribs).unwrap();
             for j in 0..p {
@@ -250,10 +449,8 @@ mod tests {
             let p = g.usize_in(1, 200);
             let k = g.usize_in(1, 6);
             let vecs: Vec<Vec<f32>> = (0..k).map(|_| g.normal_vec(p)).collect();
-            let cs: Vec<Contribution> = vecs
-                .iter()
-                .map(|v| Contribution { params: v, n_samples: 42 })
-                .collect();
+            let cs: Vec<Contribution> =
+                vecs.iter().enumerate().map(|(i, v)| contrib(i, v, 42)).collect();
             let a = weighted_mean(&cs).unwrap();
             let b = uniform_mean(&cs).unwrap();
             for (x, y) in a.iter().zip(&b) {
@@ -268,11 +465,100 @@ mod tests {
         // toward zero rather than being skipped
         let a = vec![2.0f32];
         let b = vec![0.0f32]; // masked out at this position
-        let out = weighted_mean(&[
-            Contribution { params: &a, n_samples: 1 },
-            Contribution { params: &b, n_samples: 1 },
-        ])
-        .unwrap();
+        let out = weighted_mean(&[contrib(0, &a, 1), contrib(1, &b, 1)]).unwrap();
         assert_eq!(out[0], 1.0);
+    }
+
+    #[test]
+    fn streaming_fold_is_arrival_order_independent_bitwise() {
+        check("streaming order independence", 60, |g| {
+            let p = g.usize_in(1, 300);
+            let k = g.usize_in(2, 10);
+            let vecs: Vec<Vec<f32>> = (0..k).map(|_| g.normal_vec(p)).collect();
+            let weights: Vec<u32> = (0..k).map(|_| g.usize_in(1, 1000) as u32).collect();
+            let contribs: Vec<Contribution> = vecs
+                .iter()
+                .zip(&weights)
+                .enumerate()
+                .map(|(i, (v, &w))| contrib(i, v, w))
+                .collect();
+            let barrier = weighted_mean(&contribs).unwrap();
+            // shuffled arrival order
+            let mut order: Vec<usize> = (0..k).collect();
+            let mut rng = crate::sim::rng::Rng::new(g.seed ^ 0x0bd3b);
+            rng.shuffle(&mut order);
+            let mut agg = StreamingFedAvg::new(p);
+            for &i in &order {
+                agg.fold(contribs[i].clone()).unwrap();
+            }
+            let streamed = Box::new(agg).finish().unwrap();
+            assert_eq!(streamed, barrier, "arrival order changed the aggregate");
+        });
+    }
+
+    #[test]
+    fn streaming_state_is_o_p_independent_of_cohort_size() {
+        let p = 512;
+        let v = vec![1.0f32; p];
+        let mut state_sizes = Vec::new();
+        for k in [1usize, 8, 64] {
+            let mut agg = StreamingFedAvg::new(p);
+            for i in 0..k {
+                agg.fold(contrib(i, &v, 10)).unwrap();
+            }
+            assert_eq!(agg.folded(), k);
+            state_sizes.push(agg.state_bytes());
+        }
+        assert_eq!(state_sizes[0], state_sizes[1]);
+        assert_eq!(state_sizes[1], state_sizes[2]);
+        // while a buffering aggregator grows linearly in k
+        let layers = one_layer(p);
+        let global = vec![0.0f32; p];
+        let mut small = BufferingAttentive::new(&global, &layers, 1.0);
+        let mut big = BufferingAttentive::new(&global, &layers, 1.0);
+        for i in 0..2 {
+            small.fold(contrib(i, &v, 10)).unwrap();
+        }
+        for i in 0..16 {
+            big.fold(contrib(i, &v, 10)).unwrap();
+        }
+        assert!(big.state_bytes() > small.state_bytes());
+    }
+
+    #[test]
+    fn buffering_attentive_matches_barrier_attentive_any_order() {
+        let p = 32;
+        let layers = one_layer(p);
+        let global = vec![0.0f32; p];
+        let mut g = crate::util::prop::Gen::new(11);
+        let vecs: Vec<Vec<f32>> = (0..5).map(|_| g.normal_vec(p)).collect();
+        let contribs: Vec<Contribution> =
+            vecs.iter().enumerate().map(|(i, v)| contrib(i, v, 7)).collect();
+        let barrier = attentive_mean(&global, &contribs, &layers, 0.8).unwrap();
+        for order in [[4usize, 2, 0, 3, 1], [1, 3, 0, 2, 4]] {
+            let mut agg = BufferingAttentive::new(&global, &layers, 0.8);
+            for &i in &order {
+                agg.fold(contribs[i].clone()).unwrap();
+            }
+            let streamed = Box::new(agg).finish().unwrap();
+            assert_eq!(streamed, barrier, "order {order:?} changed attentive result");
+        }
+    }
+
+    #[test]
+    fn make_aggregator_dispatches_on_kind() {
+        use crate::config::experiment::AggregatorKind;
+        let global = vec![0.0f32; 16];
+        let layers = one_layer(16);
+        let v = vec![2.0f32; 16];
+        let mut fedavg = make_aggregator(AggregatorKind::FedAvg, &global, &layers);
+        fedavg.fold(contrib(0, &v, 5)).unwrap();
+        assert_eq!(fedavg.finish().unwrap(), v);
+        let mut attn = make_aggregator(AggregatorKind::Attentive { temp: 1.0 }, &global, &layers);
+        attn.fold(contrib(0, &v, 5)).unwrap();
+        let out = attn.finish().unwrap();
+        for x in out {
+            assert!((x - 2.0).abs() < 1e-6);
+        }
     }
 }

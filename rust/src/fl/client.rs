@@ -13,9 +13,7 @@ use std::sync::Arc;
 
 use crate::config::experiment::ExperimentConfig;
 use crate::data::{batcher, Dataset};
-use crate::fl::masking::{
-    apply_delta_target, random_mask_rust, selective_mask_rust, MaskEngine, MaskPolicy, MaskTarget,
-};
+use crate::fl::masking::{random_mask_rust, selective_mask_rust, MaskEngine, MaskPolicy};
 use crate::runtime::engine::Engine;
 use crate::sim::rng::Rng;
 use crate::transport::codec::encode_update;
@@ -39,21 +37,26 @@ impl ShardRef {
     }
 }
 
-/// What a client sends back to the server.
+/// What a client sends back to the server: the encoded wire message plus
+/// sideband metadata that never crosses the (simulated) network.
+///
+/// Since the transport refactor the dense parameter vector is gone from the
+/// client->server path — `payload` (an encoded
+/// [`crate::transport::codec::WireUpdate`]: header + masked sparse / dense /
+/// quantized body) is the only carrier of the update, and the server
+/// decodes it before aggregating. The FedAvg weight n_i rides in the wire
+/// header, exactly like a real deployment.
 #[derive(Debug, Clone)]
 pub struct LocalOutcome {
     pub client: usize,
-    /// Upload payload after masking (and mask-target transformation) —
-    /// what the server aggregates.
-    pub params: Vec<f32>,
-    /// FedAvg weight n_i.
-    pub n_samples: u32,
-    /// Mean local training loss over the final epoch.
+    /// Encoded upload; `payload.len()` is the exact uplink byte cost.
+    pub payload: Vec<u8>,
+    /// Mean local training loss over the final epoch (server-side metric,
+    /// not part of the aggregated update).
     pub train_loss: f32,
-    /// Non-zero entries in the wire payload (unit-cost accounting).
+    /// Non-zero entries in the masked vector (unit-cost accounting; for
+    /// unmasked uploads this is the full model size by protocol convention).
     pub nnz: usize,
-    /// Exact encoded upload size.
-    pub upload_bytes: usize,
 }
 
 /// One selected client's work for one round.
@@ -119,9 +122,11 @@ impl ClientJob {
             },
         };
 
-        // Wire accounting happens on the masked (sparse) payload; the
-        // Delta target then restores dropped weights to their broadcast
-        // values server-side (the server knows w_old — it sent it).
+        // The masked (sparse) vector is what crosses the wire. The Delta
+        // mask-target reconstruction (dropped weights revert to their
+        // broadcast values) happens server-side after decode — the server
+        // knows w_old, it sent it. Lossy codecs (q8) need no special-casing
+        // anymore: the server aggregates exactly what it decodes.
         // Unmasked uploads are a full model by definition (incidental exact
         // zeros in trained weights are not a sparsity the protocol exploits).
         let nnz = match self.cfg.masking {
@@ -129,36 +134,19 @@ impl ClientJob {
             _ => masked.iter().filter(|v| **v != 0.0).count(),
         };
         let n_samples = self.shard.n_samples(mm.x_elem_shape.first().copied().unwrap_or(1) + 1) as u32;
-        let wire = encode_update(
+        let payload = encode_update(
             self.client_id as u32,
             self.round as u32,
             n_samples,
             &masked,
             self.cfg.encoding,
         );
-        let upload_bytes = wire.len();
-
-        // Lossy encodings (q8) must aggregate what the server would actually
-        // receive, so decode our own message back when the codec is lossy.
-        let received = match self.cfg.encoding {
-            crate::transport::codec::Encoding::AutoQ8 => {
-                crate::transport::codec::decode_update(&wire)?.params
-            }
-            _ => masked,
-        };
-
-        let final_params = match self.cfg.mask_target {
-            MaskTarget::Weights => received,
-            MaskTarget::Delta => apply_delta_target(&received, &self.global, &mm.layers),
-        };
 
         Ok(LocalOutcome {
             client: self.client_id,
-            params: final_params,
-            n_samples,
+            payload,
             train_loss: last_loss,
             nnz,
-            upload_bytes,
         })
     }
 }

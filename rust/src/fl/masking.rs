@@ -140,9 +140,17 @@ impl MaskPolicy {
 // ----------------------------------------------------------------------
 
 /// Keep-count for a segment of `size` entries at rate `gamma` —
-/// `round(gamma * size)`, the convention shared with the Pallas kernel.
+/// `round(gamma * size)`, the convention shared with the Pallas kernel,
+/// clamped to the segment boundaries: a non-empty segment with any
+/// positive keep rate always keeps at least one entry (gamma -> 0 must
+/// not silently zero a whole layer), and the count never exceeds the
+/// segment size (gamma -> 1 with float round-off must not overrun).
 pub fn keep_count(size: usize, gamma: f32) -> usize {
-    ((gamma as f64) * size as f64).round() as usize
+    if size == 0 || gamma <= 0.0 {
+        return 0;
+    }
+    let k = ((gamma as f64) * size as f64).round() as usize;
+    k.clamp(1, size)
 }
 
 /// Exact selective mask of one flat segment: zero all but the top-k
@@ -399,6 +407,37 @@ mod tests {
         assert!(MaskPolicy::from_config("bogus", 0.5).is_err());
         assert!(MaskPolicy::selective(0.3).label().contains("selective"));
         assert_eq!(MaskPolicy::None.gamma(), 1.0);
+    }
+
+    #[test]
+    fn keep_count_gamma_to_zero_never_empties_a_nonempty_layer() {
+        // the rounded count would be 0 — a layer must still keep one entry
+        assert_eq!(keep_count(1000, 1e-6), 1);
+        assert_eq!(keep_count(3, 0.01), 1);
+        assert_eq!(keep_count(1, 0.001), 1);
+        // exact zero rate (invalid per policy validation) and empty layers
+        // legitimately keep nothing
+        assert_eq!(keep_count(5, 0.0), 0);
+        assert_eq!(keep_count(0, 0.5), 0);
+        // and the mask path honors the floor
+        let layers = layers_of(&[(64, true)]);
+        let mut g = Gen::new(3);
+        let (wn, wo) = gen_pair(&mut g, 64);
+        let out = selective_mask_rust(&wn, &wo, 0.001, &layers, MaskScope::PerLayer);
+        assert_eq!(out.iter().filter(|v| **v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn keep_count_gamma_to_one_never_exceeds_layer_size() {
+        assert_eq!(keep_count(1000, 1.0), 1000);
+        assert_eq!(keep_count(7, 0.999_999), 7);
+        assert_eq!(keep_count(0, 1.0), 0);
+        // mask path: gamma ~ 1 is identity on a non-degenerate layer
+        let layers = layers_of(&[(50, true)]);
+        let mut g = Gen::new(4);
+        let (wn, wo) = gen_pair(&mut g, 50);
+        let out = selective_mask_rust(&wn, &wo, 0.999_999, &layers, MaskScope::PerLayer);
+        assert_eq!(out, wn);
     }
 
     #[test]

@@ -6,11 +6,15 @@
 //! * [`masking`] — upload masking policies: none, **random** (Alg. 2) and
 //!   **selective top-k by |delta|** (Alg. 4), with both the exact rust
 //!   implementation and the L1 Pallas kernel path.
-//! * [`aggregate`] — weighted federated averaging (Eq. 2).
+//! * [`aggregate`] — streaming weighted federated averaging (Eq. 2): the
+//!   [`aggregate::Aggregator`] trait folds decoded wire updates as they
+//!   arrive (O(p) FedAvg; buffering attentive), order-independently.
 //! * [`client`] — simulated on-device training (local epochs + masking +
-//!   upload encoding).
-//! * [`server`] — the round loop: sample, ACK, fan out local training over
-//!   the engine pool, aggregate, account, evaluate.
+//!   upload encoding); returns an encoded `WireUpdate` payload, never a
+//!   dense parameter vector.
+//! * [`server`] — the round loop: sample, ACK, broadcast (optionally
+//!   delta-encoded), fan local training out over the engine pool, decode +
+//!   fold uploads in completion order, account, evaluate.
 
 pub mod aggregate;
 pub mod client;
@@ -18,6 +22,7 @@ pub mod masking;
 pub mod sampling;
 pub mod server;
 
+pub use aggregate::{make_aggregator, Aggregator, Contribution, StreamingFedAvg};
 pub use masking::{MaskEngine, MaskPolicy, MaskScope, MaskTarget};
 pub use sampling::SamplingSchedule;
 pub use server::{Server, ServerOutcome};

@@ -2,21 +2,29 @@
 //!
 //! Per round `t` (1-based): compute the sampling rate, run the ACK
 //! selection loop against the availability model, broadcast the global
-//! model (downlink accounting), fan client jobs out over the engine pool,
-//! aggregate the returned (masked) models with weighted FedAvg, account
-//! uplink cost, advance the virtual clock, and periodically evaluate on
-//! the held-out test set.
+//! model (dense, or delta-encoded through the codec when
+//! `downlink_delta` is set), fan client jobs out over the engine pool,
+//! then **stream** aggregation: each client's encoded `WireUpdate` payload
+//! is decoded, mask-target-reconstructed, and folded into the configured
+//! [`Aggregator`](crate::fl::aggregate::Aggregator) the moment it lands,
+//! in completion order — aggregation overlaps with the slowest clients'
+//! compute instead of barriering on the cohort. Uplink cost, virtual time
+//! and the round record are accounted afterwards in client-id order.
 //!
 //! Determinism: client selection, shard shuffles and masking RNG all derive
-//! from (seed, round, client); aggregation order is fixed by client id, so
-//! the same config reproduces bit-identical runs regardless of pool width.
+//! from (seed, round, client); the streaming FedAvg fold is
+//! order-independent by construction (integer fixed-point accumulation)
+//! and the attentive fold canonicalizes by client id at finish, so the
+//! same config reproduces bit-identical runs regardless of pool width or
+//! arrival order.
 
 use std::sync::Arc;
 
 use crate::config::experiment::{ExperimentConfig, NetworkKind};
 use crate::data::{batcher, loader, partition, Dataset};
-use crate::fl::aggregate::{weighted_mean, Contribution};
-use crate::fl::client::{ClientJob, LocalOutcome, ShardRef};
+use crate::fl::aggregate::{make_aggregator, Contribution};
+use crate::fl::client::{ClientJob, ShardRef};
+use crate::fl::masking::MaskTarget;
 use crate::metrics::recorder::{RoundRecord, RunRecorder};
 use crate::runtime::engine::EvalSums;
 use crate::runtime::manifest::Manifest;
@@ -25,10 +33,24 @@ use crate::runtime::tensor::Batches;
 use crate::sim::availability::{AvailabilityModel, ClientState};
 use crate::sim::clock::VirtualClock;
 use crate::sim::rng::Rng;
-use crate::transport::codec::wire_bytes;
+use crate::transport::codec::{decode_update, encode_update, wire_bytes, Encoding};
 use crate::transport::cost::CostLedger;
 use crate::transport::network::NetworkModel;
 use crate::util::error::{Error, Result};
+
+/// Sentinel "client" id in downlink broadcast headers.
+const BROADCAST_SENDER: u32 = u32::MAX;
+
+/// Per-client downlink cost of one round's broadcast.
+struct BroadcastWire {
+    /// Encoded bytes for a client holding the previous broadcast state.
+    delta_bytes: usize,
+    /// Non-zeros in that message (unit-cost accounting).
+    delta_nnz: usize,
+    /// Encoded bytes for a client that needs the full model (first
+    /// broadcast, or selected after sitting out the previous round).
+    dense_bytes: usize,
+}
 
 /// Result of a completed run.
 #[derive(Debug)]
@@ -46,6 +68,14 @@ pub struct Server {
     shards: Vec<ShardRef>,
     eval_chunks: Arc<Vec<Batches>>,
     params: Arc<Vec<f32>>,
+    /// The model clients received last round — the delta-downlink reference
+    /// (None before the first broadcast or when `downlink_delta` is off).
+    prev_broadcast: Option<Arc<Vec<f32>>>,
+    /// Which clients received the **previous round's** broadcast (rebuilt
+    /// every round — the delta is `w_t - w_{t-1}`, so a client that sat
+    /// out round t-1 holds stale state, cannot apply it, and is billed a
+    /// dense catch-up transfer instead).
+    has_prev_broadcast: Vec<bool>,
     p: usize,
     layers: Vec<crate::runtime::manifest::LayerInfo>,
     ledger: CostLedger,
@@ -116,6 +146,7 @@ impl Server {
             NetworkKind::Simulated => NetworkModel::default(),
         };
         let recorder = RunRecorder::new(cfg.label.clone());
+        let cfg_clients = cfg.clients;
 
         Ok(Server {
             cfg: Arc::new(cfg),
@@ -124,6 +155,8 @@ impl Server {
             shards,
             eval_chunks,
             params: Arc::new(params),
+            prev_broadcast: None,
+            has_prev_broadcast: vec![false; cfg_clients],
             p,
             layers: mm.layers.clone(),
             ledger: CostLedger::new(),
@@ -176,6 +209,69 @@ impl Server {
         (completers, stragglers)
     }
 
+    /// Encode this round's downlink broadcast through the codec. Returns
+    /// the params clients receive plus the wire costs: delta bytes/nnz for
+    /// a client that holds the previous broadcast state, dense bytes for
+    /// one that must be caught up with the full model.
+    ///
+    /// Default: dense broadcast, clients share the global model verbatim.
+    /// With `downlink_delta`: rounds after the first ship
+    /// `w_t - w_{t-1}` through the configured encoding (sparse whenever a
+    /// masked cohort left most coordinates untouched), and clients
+    /// reconstruct `w_{t-1} + delta` — modeled here by decoding our own
+    /// message, so lossy codecs affect the broadcast exactly as they would
+    /// on a real wire. The delta stream is the canonical fleet-wide state:
+    /// catch-up clients receive the same reconstructed params, just billed
+    /// at dense cost.
+    fn encode_broadcast(&mut self, t: usize) -> Result<(Arc<Vec<f32>>, BroadcastWire)> {
+        let dense_bytes = wire_bytes(self.p, self.p, Encoding::Dense);
+        if !self.cfg.downlink_delta {
+            let wire = BroadcastWire {
+                delta_bytes: dense_bytes,
+                delta_nnz: self.p,
+                dense_bytes,
+            };
+            return Ok((Arc::clone(&self.params), wire));
+        }
+        let (received, delta_bytes, delta_nnz) = match self.prev_broadcast.take() {
+            None => {
+                // First broadcast: no client-side reference model yet.
+                let wire =
+                    encode_update(BROADCAST_SENDER, t as u32, 0, &self.params, Encoding::Dense);
+                (decode_update(&wire)?.params, wire.len(), self.p)
+            }
+            Some(prev) => {
+                let delta: Vec<f32> = self
+                    .params
+                    .iter()
+                    .zip(prev.iter())
+                    .map(|(new, old)| new - old)
+                    .collect();
+                let nnz = delta.iter().filter(|v| **v != 0.0).count();
+                let wire =
+                    encode_update(BROADCAST_SENDER, t as u32, 0, &delta, self.cfg.encoding);
+                let decoded = decode_update(&wire)?;
+                let received: Vec<f32> = decoded
+                    .params
+                    .iter()
+                    .zip(prev.iter())
+                    .map(|(d, old)| old + d)
+                    .collect();
+                (received, wire.len(), nnz)
+            }
+        };
+        let received = Arc::new(received);
+        self.prev_broadcast = Some(Arc::clone(&received));
+        Ok((
+            received,
+            BroadcastWire {
+                delta_bytes,
+                delta_nnz,
+                dense_bytes,
+            },
+        ))
+    }
+
     /// Execute one round (1-based `t`). Returns the round record.
     pub fn run_round(&mut self, t: usize) -> Result<RoundRecord> {
         let rate = self.cfg.sampling.rate(t);
@@ -185,13 +281,27 @@ impl Server {
             .num_clients(t, self.cfg.clients, self.cfg.min_clients);
         let (selected, stragglers) = self.select_clients(t, want);
 
-        // Downlink: broadcast the dense global model to every client that
-        // ACKed — stragglers included (their download is spent bandwidth
-        // even though their update misses the deadline).
-        let download_bytes = wire_bytes(self.p, self.p, crate::transport::codec::Encoding::Dense);
-        for _ in selected.iter().chain(&stragglers) {
-            self.ledger.record_download(download_bytes);
+        // Downlink: broadcast the global model to every client that ACKed —
+        // stragglers included (their download is spent bandwidth even
+        // though their update misses the deadline). Under delta encoding,
+        // only clients that hold the previous broadcast state pay delta
+        // bytes; the rest are caught up at dense cost.
+        let (broadcast, wire) = self.encode_broadcast(t)?;
+        let mut slowest_download = 0usize;
+        let mut next_recipients = vec![false; self.cfg.clients];
+        for &c in selected.iter().chain(&stragglers) {
+            let (nnz, bytes) = if self.cfg.downlink_delta && self.has_prev_broadcast[c] {
+                (wire.delta_nnz, wire.delta_bytes)
+            } else {
+                (self.p, wire.dense_bytes)
+            };
+            self.ledger.record_download_sparse(self.p, nnz, bytes);
+            slowest_download = slowest_download.max(bytes);
+            next_recipients[c] = true;
         }
+        // Only this round's recipients hold w_t; everyone else goes stale
+        // and pays dense next time they are sampled.
+        self.has_prev_broadcast = next_recipients;
         if !stragglers.is_empty() {
             log::debug!("round {t}: {} stragglers dropped past deadline", stragglers.len());
         }
@@ -205,39 +315,68 @@ impl Server {
                     round: t,
                     dataset: Arc::clone(&self.dataset),
                     shard: self.shards[cid].clone(),
-                    global: Arc::clone(&self.params),
+                    global: Arc::clone(&broadcast),
                     cfg: Arc::clone(&self.cfg),
                 };
                 move |e: &crate::runtime::engine::Engine| job.run(e)
             })
             .collect();
-        let outcomes: Vec<LocalOutcome> = self
-            .pool
-            .map(jobs)?
-            .into_iter()
-            .collect::<Result<Vec<_>>>()?;
 
-        // Aggregate: sample-weighted FedAvg (Eq. 2) or attentive (Ji [11]).
-        let contribs: Vec<Contribution> = outcomes
-            .iter()
-            .map(|o| Contribution {
-                params: &o.params,
-                n_samples: o.n_samples,
-            })
-            .collect();
-        self.params = Arc::new(match self.cfg.aggregator {
-            crate::config::experiment::Aggregator::FedAvg => weighted_mean(&contribs)?,
-            crate::config::experiment::Aggregator::Attentive { temp } => {
-                let layers = &self.layers;
-                crate::fl::aggregate::attentive_mean(&self.params, &contribs, layers, temp)?
+        // Streaming aggregation: decode and fold each encoded payload in
+        // completion order, while the remaining clients are still training.
+        // Metadata for cost/metric accounting is parked per input index so
+        // the ledger and logs stay in deterministic client-id order.
+        let n_jobs = jobs.len();
+        let mut agg = make_aggregator(self.cfg.aggregator, &broadcast, &self.layers);
+        let mut metas: Vec<Option<(f32, usize, usize)>> = vec![None; n_jobs];
+        for (idx, res) in self.pool.map_unordered(jobs) {
+            let outcome = res?;
+            let update = decode_update(&outcome.payload)?;
+            let expect = selected[idx];
+            if update.client as usize != expect || update.round as usize != t {
+                return Err(Error::invalid(format!(
+                    "wire update (client {}, round {}) does not match job (client {expect}, round {t})",
+                    update.client, update.round
+                )));
             }
-        });
+            if update.params.len() != self.p {
+                return Err(Error::invalid(format!(
+                    "wire update carries {} params, model has {}",
+                    update.params.len(),
+                    self.p
+                )));
+            }
+            // Mask-target reconstruction: the wire carries the masked
+            // vector; under Delta semantics the dropped coordinates revert
+            // to the broadcast values the client trained from.
+            let dense = match self.cfg.mask_target {
+                MaskTarget::Weights => update.params,
+                MaskTarget::Delta => crate::fl::masking::apply_delta_target(
+                    &update.params,
+                    &broadcast,
+                    &self.layers,
+                ),
+            };
+            agg.fold(Contribution {
+                client: expect,
+                params: &dense,
+                n_samples: update.n_samples,
+            })?;
+            metas[idx] = Some((outcome.train_loss, outcome.nnz, outcome.payload.len()));
+        }
+        if agg.folded() < n_jobs {
+            return Err(Error::Engine("worker dropped job (thread died?)".into()));
+        }
+        self.params = Arc::new(agg.finish()?);
 
-        // Uplink accounting + virtual time.
-        let mut upload_sizes = Vec::with_capacity(outcomes.len());
-        for o in &outcomes {
-            self.ledger.record_upload(self.p, o.nnz, o.upload_bytes);
-            upload_sizes.push(o.upload_bytes);
+        // Uplink accounting + virtual time, in client-id (input) order.
+        let mut upload_sizes = Vec::with_capacity(n_jobs);
+        let mut loss_sum = 0.0f64;
+        for meta in &metas {
+            let (train_loss, nnz, bytes) = meta.expect("all jobs accounted");
+            self.ledger.record_upload(self.p, nnz, bytes);
+            upload_sizes.push(bytes);
+            loss_sum += train_loss as f64;
         }
         let compute_s = selected
             .iter()
@@ -246,13 +385,12 @@ impl Server {
                     .compute_time(t as u64, c as u64, self.cfg.local_epochs)
             })
             .fold(0.0f64, f64::max);
-        self.clock.advance(self.network.download_time(download_bytes));
+        self.clock.advance(self.network.download_time(slowest_download));
         self.clock.advance(compute_s);
         self.clock
             .advance(self.network.upload_round_time(&upload_sizes));
 
-        let train_loss = outcomes.iter().map(|o| o.train_loss as f64).sum::<f64>()
-            / outcomes.len() as f64;
+        let train_loss = loss_sum / n_jobs as f64;
 
         // Periodic evaluation.
         let eval = if t % self.cfg.eval_every == 0 || t == self.cfg.rounds {
@@ -271,6 +409,7 @@ impl Server {
             test_perplexity: eval.map(|e| e.perplexity()).unwrap_or(f64::NAN),
             uplink_units: self.ledger.uplink_units,
             uplink_bytes: self.ledger.uplink_bytes,
+            downlink_bytes: self.ledger.downlink_bytes,
             virtual_time_s: self.clock.now(),
         };
         self.recorder.push(rec.clone());

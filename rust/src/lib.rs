@@ -6,10 +6,11 @@
 //!
 //! * **Layer 3 (this crate)** — the federated runtime: client registry,
 //!   per-round sampling scheduler ([`fl::sampling`]), masking policies
-//!   ([`fl::masking`]), weighted FedAvg aggregation ([`fl::aggregate`]),
-//!   sparse transport + byte accounting ([`transport`]), simulated network
-//!   and client availability ([`sim`]), metrics, config, CLI, and the
-//!   paper-figure harness ([`figures`]).
+//!   ([`fl::masking`]), streaming weighted FedAvg aggregation over decoded
+//!   wire payloads ([`fl::aggregate`]), the load-bearing sparse transport
+//!   plane + byte accounting ([`transport`]), simulated network and client
+//!   availability ([`sim`]), metrics, config, CLI, and the paper-figure
+//!   harness ([`figures`]).
 //! * **Layer 2 (build-time JAX)** — the client learners (LeNet / VGG-mini /
 //!   tied-embedding GRU LM) AOT-lowered to HLO text artifacts that
 //!   [`runtime`] loads and executes via PJRT. Python never runs at request

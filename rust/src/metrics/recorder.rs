@@ -23,6 +23,9 @@ pub struct RoundRecord {
     pub uplink_units: f64,
     /// Cumulative uplink bytes (codec-accurate).
     pub uplink_bytes: u64,
+    /// Cumulative downlink bytes (codec-accurate; shrinks under
+    /// delta-encoded broadcasts).
+    pub downlink_bytes: u64,
     /// Virtual wall-clock seconds elapsed.
     pub virtual_time_s: f64,
 }
@@ -83,6 +86,7 @@ impl RunRecorder {
             "test_perplexity",
             "uplink_units",
             "uplink_bytes",
+            "downlink_bytes",
             "virtual_time_s",
         ]);
         for r in &self.rounds {
@@ -97,6 +101,7 @@ impl RunRecorder {
                 fmt(r.test_perplexity),
                 fmt(r.uplink_units),
                 r.uplink_bytes.to_string(),
+                r.downlink_bytes.to_string(),
                 fmt(r.virtual_time_s),
             ]);
         }
@@ -140,6 +145,7 @@ mod tests {
             test_perplexity: f64::NAN,
             uplink_units: units,
             uplink_bytes: (units * 1000.0) as u64,
+            downlink_bytes: (units * 4000.0) as u64,
             virtual_time_s: round as f64,
         }
     }

@@ -114,6 +114,34 @@ impl EnginePool {
             })
             .collect()
     }
+
+    /// Run a batch of jobs and yield `(input index, result)` pairs **in
+    /// completion order** over a single channel, so the caller can start
+    /// consuming results while the slowest jobs are still running (the
+    /// server folds aggregation in here instead of barriering on the
+    /// cohort). The channel closes once every job has reported; if worker
+    /// threads die mid-batch, iteration ends early and the caller sees
+    /// fewer than `jobs.len()` results.
+    pub fn map_unordered<R, F>(&self, jobs: Vec<F>) -> Receiver<(usize, R)>
+    where
+        R: Send + 'static,
+        F: FnOnce(&Engine) -> R + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        for (i, f) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            let job: Job = Box::new(move |engine| {
+                let _ = tx.send((i, f(engine)));
+            });
+            // Send fails only if all workers are gone; the caller observes
+            // the shortfall when the result channel closes early.
+            let _ = self.tx.send(job);
+        }
+        // Drop the seed sender so the channel closes when the last
+        // worker-held clone is done.
+        drop(tx);
+        rx
+    }
 }
 
 impl Drop for EnginePool {

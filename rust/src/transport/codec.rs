@@ -1,4 +1,5 @@
-//! Wire encoding of model updates.
+//! Wire encoding of model updates — the **load-bearing** client->server
+//! (and optionally server->client) data path, not just byte accounting.
 //!
 //! A masked update is mostly zeros; shipping it densely would throw the
 //! paper's saving away. The codec picks the cheaper of:
@@ -9,9 +10,11 @@
 //! Sparse wins whenever nnz < P/2 — exactly the masked regimes the paper
 //! sweeps (gamma <= 0.5 strictly, and layered masking keeps biases dense so
 //! the crossover is measured, not assumed). All integers are little-endian;
-//! the header carries (client id, round, sample count) for the aggregator.
+//! the header carries (client id, round, sample count) for the aggregator —
+//! `ClientJob::run` encodes, `Server::run_round` decodes and folds, and
+//! nothing else ever sees the raw parameter vector in between.
 
-use crate::transport::quantize::quantize;
+use crate::transport::quantize::{quantize, Quantized};
 use crate::util::error::{Error, Result};
 
 /// Magic + version guard ("FM" + v1).
@@ -114,7 +117,13 @@ pub fn encode_update(
             }
         }
         TAG_DENSE_Q8 => {
-            let q = quantize(params).expect("finite params");
+            // quantizing an empty payload: degenerate but legal (p == 0) —
+            // emit a zero-range quantizer
+            let q = if params.is_empty() {
+                Quantized { min: 0.0, scale: 0.0, codes: vec![] }
+            } else {
+                quantize(params).expect("finite params")
+            };
             out.extend_from_slice(&(p as u32).to_le_bytes());
             out.extend_from_slice(&q.min.to_le_bytes());
             out.extend_from_slice(&q.scale.to_le_bytes());
@@ -125,11 +134,7 @@ pub fn encode_update(
             // quantizing an empty value set: degenerate but legal (all-zero
             // upload) — emit a zero-range quantizer
             let q = if values.is_empty() {
-                crate::transport::quantize::Quantized {
-                    min: 0.0,
-                    scale: 0.0,
-                    codes: vec![],
-                }
+                Quantized { min: 0.0, scale: 0.0, codes: vec![] }
             } else {
                 quantize(&values).expect("finite params")
             };

@@ -49,9 +49,21 @@ impl CostLedger {
         self.messages += 1;
     }
 
-    /// Record one model broadcast to a selected client.
+    /// Record one dense model broadcast to a selected client.
     pub fn record_download(&mut self, bytes: usize) {
         self.downlink_units += 1.0;
+        self.downlink_bytes += bytes as u64;
+        self.messages += 1;
+    }
+
+    /// Record one (possibly delta-encoded) broadcast to a selected client:
+    /// `nnz/p` of a model in units plus the actual encoded byte count —
+    /// the downlink mirror of [`CostLedger::record_upload`]. A dense
+    /// broadcast passes `nnz == p` and degenerates to
+    /// [`CostLedger::record_download`].
+    pub fn record_download_sparse(&mut self, p: usize, nnz: usize, bytes: usize) {
+        assert!(nnz <= p);
+        self.downlink_units += nnz as f64 / p as f64;
         self.downlink_bytes += bytes as u64;
         self.messages += 1;
     }
@@ -108,6 +120,17 @@ mod tests {
         assert_eq!(l.uplink_bytes, 6526);
         assert_eq!(l.messages, 3);
         assert!((l.mean_uplink_units_per_round(2) - 0.65).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_download_mirrors_upload_accounting() {
+        let mut l = CostLedger::new();
+        l.record_download_sparse(1000, 1000, 4026); // dense broadcast
+        assert_eq!(l.downlink_units, 1.0);
+        l.record_download_sparse(1000, 250, 2026); // delta broadcast
+        assert!((l.downlink_units - 1.25).abs() < 1e-12);
+        assert_eq!(l.downlink_bytes, 6052);
+        assert_eq!(l.messages, 2);
     }
 
     #[test]

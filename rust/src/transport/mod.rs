@@ -1,4 +1,24 @@
-//! Transport substrate: what actually crosses the (simulated) wire.
+//! Transport plane: what actually crosses the (simulated) wire — and since
+//! the streaming refactor, the **only** path client updates travel.
+//!
+//! Division of labor around one round:
+//!
+//! * **Who encodes** — `fl::client::ClientJob::run` encodes its masked
+//!   update into a [`codec::WireUpdate`] payload (sparse top-k, dense, or
+//!   quantized per the experiment's `encoding`); with `downlink_delta`,
+//!   `fl::server::Server` also encodes the broadcast as a delta against
+//!   the previous round's global model.
+//! * **Who decodes** — the server, once per arriving payload, before
+//!   folding it into the round's `fl::aggregate::Aggregator` (and each
+//!   client conceptually decodes the broadcast, modeled server-side).
+//!   No dense `Vec<f32>` crosses the client->server boundary.
+//! * **Where bytes are accounted** — the server records
+//!   `payload.len()` per upload and per-broadcast bytes in
+//!   [`cost::CostLedger`] (`record_upload` / `record_download_sparse`);
+//!   [`network::NetworkModel`] turns those same byte counts into virtual
+//!   transfer time.
+//!
+//! Modules:
 //!
 //! * [`codec`] — dense and sparse update encodings with auto-selection;
 //!   masked updates ship as (index, value) pairs, which is where the

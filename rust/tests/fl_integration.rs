@@ -7,11 +7,13 @@
 use std::sync::Arc;
 
 use fedmask::config::experiment::ExperimentConfig;
+use fedmask::fl::aggregate::{weighted_mean, Aggregator, Contribution, StreamingFedAvg};
 use fedmask::fl::masking::MaskPolicy;
 use fedmask::fl::sampling::SamplingSchedule;
 use fedmask::fl::server::Server;
 use fedmask::runtime::manifest::Manifest;
 use fedmask::runtime::pool::EnginePool;
+use fedmask::transport::codec::{decode_update, encode_update, Encoding};
 
 fn manifest() -> Option<Manifest> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -124,6 +126,71 @@ fn selective_masking_cuts_uplink_bytes() {
         (per_upload - expected_unit).abs() < 0.02,
         "per-upload units {per_upload} vs expected {expected_unit}"
     );
+}
+
+/// Acceptance: streamed FedAvg over decoded wire payloads is bitwise
+/// identical to the barrier aggregation, for every arrival order. Runs
+/// without artifacts — the whole wire + aggregation plane is pure rust.
+#[test]
+fn streamed_fedavg_from_wire_payloads_is_bitwise_identical_to_barrier() {
+    // Fixed seed: sparse masked-style updates, realistic FedAvg weights.
+    let mut g = fedmask::util::prop::Gen::new(0xfed_2026);
+    let p = 1_203;
+    let k = 5;
+    let mut dense_updates: Vec<Vec<f32>> = Vec::new();
+    let mut weights: Vec<u32> = Vec::new();
+    for _ in 0..k {
+        let density = g.f32_in(0.1, 0.6);
+        dense_updates.push(
+            (0..p)
+                .map(|_| {
+                    if g.f32_in(0.0, 1.0) < density {
+                        g.f32_in(-1.5, 1.5)
+                    } else {
+                        0.0
+                    }
+                })
+                .collect(),
+        );
+        weights.push(g.usize_in(50, 800) as u32);
+    }
+
+    // The wire is the only carrier: encode every update, then aggregate
+    // strictly from decoded payloads.
+    let payloads: Vec<Vec<u8>> = dense_updates
+        .iter()
+        .zip(&weights)
+        .enumerate()
+        .map(|(c, (v, &w))| encode_update(c as u32, 1, w, v, Encoding::Auto))
+        .collect();
+    let decoded: Vec<_> = payloads.iter().map(|b| decode_update(b).unwrap()).collect();
+    for (u, v) in decoded.iter().zip(&dense_updates) {
+        assert_eq!(&u.params, v, "lossless codec must hand back the update");
+    }
+    let contribs: Vec<Contribution> = decoded
+        .iter()
+        .map(|u| Contribution {
+            client: u.client as usize,
+            params: &u.params,
+            n_samples: u.n_samples,
+        })
+        .collect();
+
+    let barrier = weighted_mean(&contribs).unwrap();
+    // every rotation + the reversal: arrival order must not move a bit
+    let mut orders: Vec<Vec<usize>> = (0..k).map(|s| (0..k).map(|i| (i + s) % k).collect()).collect();
+    orders.push((0..k).rev().collect());
+    for order in orders {
+        let mut agg = StreamingFedAvg::new(p);
+        for &i in &order {
+            agg.fold(contribs[i].clone()).unwrap();
+        }
+        let streamed = Box::new(agg).finish().unwrap();
+        assert_eq!(
+            streamed, barrier,
+            "arrival order {order:?} changed the aggregate"
+        );
+    }
 }
 
 #[test]

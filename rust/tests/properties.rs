@@ -6,7 +6,7 @@
 //! present — agreement between the L1 Pallas mask kernel and the exact
 //! rust oracle.
 
-use fedmask::fl::aggregate::{weighted_mean, Contribution};
+use fedmask::fl::aggregate::{weighted_mean, Aggregator, Contribution, StreamingFedAvg};
 use fedmask::fl::masking::{self, MaskScope};
 use fedmask::fl::sampling::SamplingSchedule;
 use fedmask::runtime::manifest::{LayerInfo, Manifest};
@@ -72,6 +72,78 @@ fn prop_masked_vector_roundtrips_and_is_cheaper() {
 }
 
 #[test]
+fn prop_codec_roundtrips_all_encodings_including_degenerate_sizes() {
+    check("codec roundtrip incl. empty/single payloads", 120, |g| {
+        // bias toward the degenerate sizes the wire must survive
+        let p = match g.usize_in(0, 9) {
+            0 => 0,
+            1 => 1,
+            _ => g.usize_in(2, 1500),
+        };
+        let density = g.f32_in(0.0, 1.0);
+        let params: Vec<f32> = (0..p)
+            .map(|_| {
+                if g.f32_in(0.0, 1.0) < density {
+                    g.f32_in(-2.0, 2.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        for enc in [Encoding::Dense, Encoding::Sparse, Encoding::Auto] {
+            let u = decode_update(&encode_update(9, 4, 77, &params, enc)).unwrap();
+            assert_eq!(u.client, 9);
+            assert_eq!(u.round, 4);
+            assert_eq!(u.n_samples, 77);
+            assert_eq!(u.params, params, "enc {enc:?} p {p} seed {:#x}", g.seed);
+        }
+        // q8 is lossy: lengths and headers exact, values within half a
+        // quantization step of a [-2, 2] value range
+        let u = decode_update(&encode_update(9, 4, 77, &params, Encoding::AutoQ8)).unwrap();
+        assert_eq!(u.params.len(), p);
+        let half_step = 0.5 * 4.0 / 255.0 + 1e-6;
+        for (a, b) in params.iter().zip(&u.params) {
+            assert!(
+                (a - b).abs() <= half_step,
+                "q8 p {p} err {} seed {:#x}",
+                (a - b).abs(),
+                g.seed
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_streamed_fold_matches_barrier_in_any_arrival_order() {
+    check("streamed == barrier, any order", 60, |g| {
+        let p = g.usize_in(1, 400);
+        let k = g.usize_in(1, 12);
+        let vecs: Vec<Vec<f32>> = (0..k).map(|_| g.normal_vec(p)).collect();
+        let weights: Vec<u32> = (0..k).map(|_| g.usize_in(1, 1000) as u32).collect();
+        let contribs: Vec<Contribution> = vecs
+            .iter()
+            .zip(&weights)
+            .enumerate()
+            .map(|(client, (v, &w))| Contribution {
+                client,
+                params: v,
+                n_samples: w,
+            })
+            .collect();
+        let barrier = weighted_mean(&contribs).unwrap();
+        let mut order: Vec<usize> = (0..k).collect();
+        let mut rng = fedmask::sim::rng::Rng::new(g.seed ^ 0xa11);
+        rng.shuffle(&mut order);
+        let mut agg = StreamingFedAvg::new(p);
+        for &i in &order {
+            agg.fold(contribs[i].clone()).unwrap();
+        }
+        let streamed = Box::new(agg).finish().unwrap();
+        assert_eq!(streamed, barrier, "order {order:?} seed {:#x}", g.seed);
+    });
+}
+
+#[test]
 fn prop_aggregation_conserves_weighted_sum() {
     check("aggregation conservation", 60, |g| {
         let p = g.usize_in(1, 500);
@@ -81,7 +153,12 @@ fn prop_aggregation_conserves_weighted_sum() {
         let contribs: Vec<Contribution> = vecs
             .iter()
             .zip(&weights)
-            .map(|(v, &w)| Contribution { params: v, n_samples: w })
+            .enumerate()
+            .map(|(client, (v, &w))| Contribution {
+                client,
+                params: v,
+                n_samples: w,
+            })
             .collect();
         let out = weighted_mean(&contribs).unwrap();
         let total: f64 = weights.iter().map(|&w| w as f64).sum();

@@ -197,3 +197,31 @@ fn pool_parallel_training_matches_sequential() {
 
     assert_eq!(seq, par, "pool must be bit-identical to sequential");
 }
+
+#[test]
+fn pool_map_unordered_yields_every_job_with_its_index() {
+    let Some(manifest) = manifest() else { return };
+    let pool = EnginePool::new(&manifest, &["lenet"], 3).unwrap();
+
+    // Stagger job durations so completion order differs from input order;
+    // the index channel must still attribute every result correctly.
+    let jobs: Vec<_> = (0..8u64)
+        .map(|i| {
+            move |_e: &Engine| {
+                std::thread::sleep(std::time::Duration::from_millis((8 - i) * 3));
+                i * 10
+            }
+        })
+        .collect();
+    let mut got: Vec<(usize, u64)> = pool.map_unordered(jobs).iter().collect();
+    assert_eq!(got.len(), 8, "channel must close after the last job");
+    got.sort_unstable();
+    for (slot, (idx, val)) in got.iter().enumerate() {
+        assert_eq!(*idx, slot);
+        assert_eq!(*val, slot as u64 * 10);
+    }
+
+    // Empty batches close immediately instead of hanging the caller.
+    let none: Vec<fn(&Engine) -> u64> = Vec::new();
+    assert_eq!(pool.map_unordered(none).iter().count(), 0);
+}

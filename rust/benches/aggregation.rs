@@ -1,17 +1,24 @@
 //! Aggregation hot-path bench: weighted FedAvg over flat parameter vectors
 //! at each model's true P, across cohort sizes (paper Eq. 2 — the L3
-//! operation executed once per round), plus the streaming-vs-barrier
-//! comparison over real encoded wire payloads: decode + fold as payloads
-//! "arrive" (O(p) state) against decode-everything-then-barrier
-//! (O(k*p) buffering), across cohort size k and masking rate gamma.
+//! operation executed once per round), the streaming-vs-barrier comparison
+//! over real encoded wire payloads, and the headline sparse-native
+//! comparison: decode+fold a masked cohort in O(nnz) (borrowed sparse
+//! views + sparse fold) against the dense baseline (densify every payload,
+//! fold all p coordinates) across gamma in {0.01, 0.1, 0.5} — the
+//! acceptance target is >= 4x at gamma=0.1, gru P.
+//!
+//! Writes BENCH_aggregation.json at the repo root (the perf trajectory).
 //!
 //! Run: cargo bench --bench aggregation   (FEDMASK_BENCH_MS tunes budget)
 
 use fedmask::fl::aggregate::{
-    uniform_mean, weighted_mean, Aggregator, Contribution, StreamingFedAvg,
+    uniform_mean, weighted_mean, Aggregator, Contribution, SparseContribution, StreamingFedAvg,
 };
+use fedmask::runtime::manifest::LayerInfo;
 use fedmask::sim::rng::Rng;
-use fedmask::transport::codec::{decode_update, encode_update, Encoding, WireUpdate};
+use fedmask::transport::codec::{
+    decode_update, decode_update_view, encode_update, BodyView, DecodeScratch, Encoding, WireUpdate,
+};
 use fedmask::util::bench::Bench;
 
 fn vectors(p: usize, k: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -44,6 +51,32 @@ fn contribs_of(vecs: &[Vec<f32>]) -> Vec<Contribution<'_>> {
         .collect()
 }
 
+fn payloads_of(vecs: &[Vec<f32>]) -> Vec<Vec<u8>> {
+    vecs.iter()
+        .enumerate()
+        .map(|(c, v)| encode_update(c as u32, 1, 200, v, Encoding::Auto))
+        .collect()
+}
+
+/// Fold one decoded view into the aggregator, sparse bodies sparsely.
+fn fold_view(agg: &mut StreamingFedAvg, view: &fedmask::transport::codec::WireView<'_>) {
+    let client = view.client as usize;
+    match view.body {
+        BodyView::Dense(params) => agg
+            .fold(Contribution { client, params, n_samples: view.n_samples })
+            .unwrap(),
+        BodyView::Sparse { indices, values } => agg
+            .fold_sparse(SparseContribution {
+                client,
+                p: view.p,
+                indices,
+                values,
+                n_samples: view.n_samples,
+            })
+            .unwrap(),
+    }
+}
+
 fn main() {
     let mut b = Bench::new();
     println!("== aggregation (weighted FedAvg, Eq. 2) ==");
@@ -59,6 +92,97 @@ fn main() {
         }
     }
 
+    // The headline comparison: the sparse-native round path (borrowed view
+    // decode + O(nnz) fold) against the dense baseline every payload used
+    // to pay (densify to a fresh Vec<f32>, fold scanning all p
+    // coordinates). Same payloads, bit-identical results by construction.
+    println!("== sparse-native decode+fold vs dense baseline ==");
+    let clients = 16usize;
+    for (model, p) in [("lenet", 20_522usize), ("gru", 154_768), ("vggmini", 51_666)] {
+        for gamma in [0.01f32, 0.1, 0.5] {
+            let vecs = sparse_vectors(p, clients, gamma, 13);
+            let payloads = payloads_of(&vecs);
+            let tag = format!("{model}/gamma={gamma}");
+
+            let m = b.run(&format!("dense_round/{tag}"), || {
+                let mut agg = StreamingFedAvg::new(p);
+                for payload in &payloads {
+                    let u: WireUpdate = decode_update(payload).unwrap();
+                    let dense = u.to_dense();
+                    agg.fold(Contribution {
+                        client: u.client as usize,
+                        params: &dense,
+                        n_samples: u.n_samples,
+                    })
+                    .unwrap();
+                }
+                Box::new(agg).finish().unwrap()
+            });
+            println!("{}", m.report(Some(((p * clients) as f64, "param"))));
+
+            let mut scratch = DecodeScratch::default();
+            let m = b.run(&format!("sparse_round/{tag}"), || {
+                let mut agg = StreamingFedAvg::new(p);
+                for payload in &payloads {
+                    let view = decode_update_view(payload, &mut scratch).unwrap();
+                    fold_view(&mut agg, &view);
+                }
+                Box::new(agg).finish().unwrap()
+            });
+            println!("{}", m.report(Some(((p * clients) as f64, "param"))));
+        }
+    }
+
+    // Delta mask-target round path: the old server reconstructed every
+    // payload densely (apply_delta_target: an O(p) copy per contribution)
+    // before folding; the delta-baseline aggregator folds O(nnz) and adds
+    // the collapsed baseline term once at finish.
+    println!("== delta-target round path (gru P, gamma=0.1) ==");
+    {
+        let p = 154_768usize;
+        let gamma = 0.1f32;
+        let layers = vec![LayerInfo {
+            name: "w".into(),
+            shape: vec![p],
+            offset: 0,
+            size: p,
+            masked: true,
+        }];
+        let broadcast: Vec<f32> = {
+            let mut rng = Rng::new(29);
+            (0..p).map(|_| rng.next_normal()).collect()
+        };
+        let vecs = sparse_vectors(p, clients, gamma, 17);
+        let payloads = payloads_of(&vecs);
+
+        let m = b.run("dense_delta_round/gru/gamma=0.1", || {
+            let mut agg = StreamingFedAvg::with_delta_baseline(&broadcast, &layers).unwrap();
+            for payload in &payloads {
+                let u = decode_update(payload).unwrap();
+                let dense = u.to_dense();
+                agg.fold(Contribution {
+                    client: u.client as usize,
+                    params: &dense,
+                    n_samples: u.n_samples,
+                })
+                .unwrap();
+            }
+            Box::new(agg).finish().unwrap()
+        });
+        println!("{}", m.report(Some(((p * clients) as f64, "param"))));
+
+        let mut scratch = DecodeScratch::default();
+        let m = b.run("sparse_delta_round/gru/gamma=0.1", || {
+            let mut agg = StreamingFedAvg::with_delta_baseline(&broadcast, &layers).unwrap();
+            for payload in &payloads {
+                let view = decode_update_view(payload, &mut scratch).unwrap();
+                fold_view(&mut agg, &view);
+            }
+            Box::new(agg).finish().unwrap()
+        });
+        println!("{}", m.report(Some(((p * clients) as f64, "param"))));
+    }
+
     // Streaming vs barrier over the real wire: the streaming side decodes
     // and folds one payload at a time and never holds more than one decoded
     // update; the barrier side decodes the whole cohort first (the seed
@@ -68,36 +192,34 @@ fn main() {
     for clients in [8usize, 32, 128] {
         for gamma in [0.1f32, 0.5, 1.0] {
             let vecs = sparse_vectors(p, clients, gamma, 11);
-            let payloads: Vec<Vec<u8>> = vecs
-                .iter()
-                .enumerate()
-                .map(|(c, v)| encode_update(c as u32, 1, 200, v, Encoding::Auto))
-                .collect();
+            let payloads = payloads_of(&vecs);
             let tag = format!("k={clients}/gamma={gamma}");
 
+            let mut scratch = DecodeScratch::default();
             let m = b.run(&format!("stream_fold/{tag}"), || {
                 let mut agg = StreamingFedAvg::new(p);
                 for payload in &payloads {
-                    let u = decode_update(payload).unwrap();
-                    agg.fold(Contribution {
-                        client: u.client as usize,
-                        params: &u.params,
-                        n_samples: u.n_samples,
-                    })
-                    .unwrap();
+                    let view = decode_update_view(payload, &mut scratch).unwrap();
+                    fold_view(&mut agg, &view);
                 }
                 Box::new(agg).finish().unwrap()
             });
             println!("{}", m.report(Some(((p * clients) as f64, "param"))));
 
             let m = b.run(&format!("barrier_fold/{tag}"), || {
-                let decoded: Vec<WireUpdate> =
-                    payloads.iter().map(|payload| decode_update(payload).unwrap()).collect();
+                let decoded: Vec<(WireUpdate, Vec<f32>)> = payloads
+                    .iter()
+                    .map(|payload| {
+                        let u = decode_update(payload).unwrap();
+                        let dense = u.to_dense();
+                        (u, dense)
+                    })
+                    .collect();
                 let contribs: Vec<Contribution> = decoded
                     .iter()
-                    .map(|u| Contribution {
+                    .map(|(u, dense)| Contribution {
                         client: u.client as usize,
-                        params: &u.params,
+                        params: dense,
                         n_samples: u.n_samples,
                     })
                     .collect();
@@ -108,13 +230,8 @@ fn main() {
             // Peak aggregation-state memory: the O(p) claim, measured.
             let mut agg = StreamingFedAvg::new(p);
             for payload in &payloads {
-                let u = decode_update(payload).unwrap();
-                agg.fold(Contribution {
-                    client: u.client as usize,
-                    params: &u.params,
-                    n_samples: u.n_samples,
-                })
-                .unwrap();
+                let view = decode_update_view(payload, &mut scratch).unwrap();
+                fold_view(&mut agg, &view);
             }
             let streaming_state = agg.state_bytes() + 4 * p; // accumulator + one decoded update
             let barrier_state = 4 * p * clients; // k decoded updates buffered
@@ -133,4 +250,7 @@ fn main() {
     let contribs = contribs_of(&vecs);
     let m = b.run("uniform_mean/vggmini/m=16", || uniform_mean(&contribs).unwrap());
     println!("{}", m.report(Some(((51_666 * 16) as f64, "param"))));
+
+    // Perf trajectory: machine-readable baseline for the next PR to diff.
+    b.write_trajectory("BENCH_aggregation.json");
 }

@@ -5,7 +5,9 @@
 //!
 //! Run: cargo bench --bench masking
 
-use fedmask::fl::masking::{random_mask_rust, selective_mask_rust, MaskScope};
+use fedmask::fl::masking::{
+    random_mask_rust, selective_mask_rust, selective_mask_rust_with, MaskScope, MaskScratch,
+};
 use fedmask::runtime::engine::Engine;
 use fedmask::runtime::manifest::{LayerInfo, Manifest};
 use fedmask::sim::rng::Rng;
@@ -26,6 +28,13 @@ fn main() {
         for gamma in [0.1f32, 0.5, 0.9] {
             let m = b.run(&format!("selective_rust/{model}/g={gamma}"), || {
                 selective_mask_rust(&wn, &wo, gamma, &layers, MaskScope::PerLayer)
+            });
+            println!("{}", m.report(Some((p as f64, "param"))));
+            // worker-held scratch arena: the per-call delta/partition
+            // allocations amortized away (the engine-pool configuration)
+            let mut scratch = MaskScratch::default();
+            let m = b.run(&format!("selective_rust_scratch/{model}/g={gamma}"), || {
+                selective_mask_rust_with(&wn, &wo, gamma, &layers, MaskScope::PerLayer, &mut scratch)
             });
             println!("{}", m.report(Some((p as f64, "param"))));
         }

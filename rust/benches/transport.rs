@@ -1,20 +1,64 @@
 //! Transport bench: codec encode/decode at model sizes across densities
 //! (the wire work per upload), plus 8-bit quantization. Establishes that
-//! transport never dominates a round (DESIGN.md §6 L3 target).
+//! transport never dominates a round (DESIGN.md §6 L3 target), and pits
+//! the bulk `chunks_exact` decoder against the seed's per-element cursor
+//! loop (`scalar_decode`, kept here as the baseline) and the owned decode
+//! against the scratch-reusing borrowed view.
+//!
+//! Writes BENCH_transport.json at the repo root (the perf trajectory).
 //!
 //! Run: cargo bench --bench transport
 
 use fedmask::sim::rng::Rng;
-use fedmask::transport::codec::{decode_update, encode_update, Encoding};
+use fedmask::transport::codec::{
+    decode_update, decode_update_view, encode_update, DecodeScratch, Encoding,
+};
 use fedmask::transport::quantize::{dequantize, quantize};
 use fedmask::util::bench::Bench;
+
+/// The seed decoder, preserved as a baseline: per-element cursor reads
+/// (`take::<4>`-style) and unconditional densification. Supports the dense
+/// and sparse f32 tags, which is all the Auto encoding emits.
+fn scalar_decode(data: &[u8]) -> Vec<f32> {
+    fn take<const N: usize>(data: &[u8], at: &mut usize) -> [u8; N] {
+        let s: [u8; N] = data[*at..*at + N].try_into().unwrap();
+        *at += N;
+        s
+    }
+    let mut at = 0usize;
+    let _magic = u16::from_le_bytes(take::<2>(data, &mut at));
+    let _version = take::<1>(data, &mut at)[0];
+    let tag = take::<1>(data, &mut at)[0];
+    let _client = u32::from_le_bytes(take::<4>(data, &mut at));
+    let _round = u32::from_le_bytes(take::<4>(data, &mut at));
+    let _n = u32::from_le_bytes(take::<4>(data, &mut at));
+    let p = u32::from_le_bytes(take::<4>(data, &mut at)) as usize;
+    let count = u32::from_le_bytes(take::<4>(data, &mut at)) as usize;
+    let mut params = vec![0.0f32; p];
+    match tag {
+        0 => {
+            for slot in params.iter_mut() {
+                *slot = f32::from_le_bytes(take::<4>(data, &mut at));
+            }
+        }
+        1 => {
+            for _ in 0..count {
+                let idx = u32::from_le_bytes(take::<4>(data, &mut at)) as usize;
+                let val = f32::from_le_bytes(take::<4>(data, &mut at));
+                params[idx] = val;
+            }
+        }
+        other => panic!("scalar_decode: unsupported tag {other}"),
+    }
+    params
+}
 
 fn main() {
     let mut b = Bench::new();
     let mut rng = Rng::new(11);
-    println!("== wire codec ==");
+    println!("== wire codec (bulk vs scalar, owned vs view) ==");
     for (model, p) in [("lenet", 20_522usize), ("vggmini", 51_666)] {
-        for density in [1.0f32, 0.5, 0.1] {
+        for density in [1.0f32, 0.5, 0.1, 0.01] {
             let params: Vec<f32> = (0..p)
                 .map(|_| if rng.next_f32() < density { rng.next_normal() } else { 0.0 })
                 .collect();
@@ -23,8 +67,20 @@ fn main() {
             });
             println!("{}", m.report(Some((p as f64, "param"))));
             let encoded = encode_update(1, 1, 100, &params, Encoding::Auto);
-            let m = b.run(&format!("decode/{model}/density={density}"), || {
+
+            let m = b.run(&format!("decode_scalar/{model}/density={density}"), || {
+                scalar_decode(&encoded)
+            });
+            println!("{}", m.report(Some((p as f64, "param"))));
+
+            let m = b.run(&format!("decode_owned/{model}/density={density}"), || {
                 decode_update(&encoded).unwrap()
+            });
+            println!("{}", m.report(Some((p as f64, "param"))));
+
+            let mut scratch = DecodeScratch::default();
+            let m = b.run(&format!("decode_view/{model}/density={density}"), || {
+                decode_update_view(&encoded, &mut scratch).unwrap().n_samples
             });
             println!("{}", m.report(Some((p as f64, "param"))));
         }
@@ -36,4 +92,6 @@ fn main() {
     let q = quantize(&params).unwrap();
     let m = b.run("dequantize/vggmini", || dequantize(&q));
     println!("{}", m.report(Some((51_666f64, "param"))));
+
+    b.write_trajectory("BENCH_transport.json");
 }

@@ -1,4 +1,5 @@
-//! Weighted federated averaging (paper §3.1), as a **streaming** operation.
+//! Weighted federated averaging (paper §3.1), as a **streaming, sparse-native**
+//! operation.
 //!
 //! The aggregation rule is FedAvg's sample-weighted mean,
 //! `Theta_{t+1} = sum_i (n_i / n) Theta_t^i` — Eq. 2 of the paper modulo its
@@ -11,28 +12,45 @@
 //! Since the transport refactor the server no longer barriers on the full
 //! cohort: decoded [`crate::transport::codec::WireUpdate`] payloads are
 //! folded into an [`Aggregator`] as they arrive, in whatever order the
-//! engine pool completes them. Two implementations:
+//! engine pool completes them — and since the sparse-native refactor a
+//! sparse wire body folds in **O(nnz)**, never touching the p - nnz
+//! coordinates the client masked away. Per-round server cost is
+//! O(sum_i nnz_i + p): the only O(p) passes are aggregator construction
+//! and `finish`, once each. Two implementations:
 //!
 //! * [`StreamingFedAvg`] — O(p) server memory (one fixed-point accumulator
 //!   per parameter, no per-client buffering). The weighted numerator
 //!   `sum_i n_i * v_ij` accumulates in 128-bit fixed point (scale 2^-64),
 //!   so folds are integer additions — associative and commutative — and the
-//!   result is **bit-identical for every arrival order**. The fixed-point
-//!   grid is exact while `|sum_i n_i * v_ij| < 2^63` per coordinate, far
-//!   beyond any realistic cohort; the per-fold rounding error is below
-//!   2^-65, invisible at f32 output resolution.
+//!   result is **bit-identical for every arrival order** and bit-identical
+//!   between the dense and sparse fold paths (a zero coordinate contributes
+//!   the integer 0; skipping it is the same sum). Under
+//!   [`MaskTarget::Delta`] the aggregator carries the broadcast baseline
+//!   pre-rounded onto the same fixed-point grid
+//!   (`grid[j] = round(b_j * 2^64)`), so a client's unsent masked
+//!   coordinate contributes the exact integer product `n_i * grid[j]` —
+//!   and the whole cohort's baseline mass collapses to
+//!   `(total - sent[j]) * grid[j]`, added once per coordinate at `finish`.
+//!   Integer distributivity is what makes that single `finish`-time
+//!   addition bit-identical to folding each client's baseline term
+//!   separately; it deletes the old per-contribution
+//!   `apply_delta_target` O(p) reconstruction copy entirely.
 //! * [`BufferingAttentive`] — attentive aggregation (Ji et al. [11]) needs
 //!   the whole cohort to form its softmax weights, so it buffers decoded
-//!   updates (O(k*p), inherent to the rule) and canonicalizes by client id
-//!   at `finish`, which restores arrival-order independence.
+//!   updates (O(k*p), inherent to the rule) — sparse bodies are densified
+//!   and mask-target-reconstructed at fold — and canonicalizes by client
+//!   id at `finish`, which restores arrival-order independence.
 //!
-//! The inner fold is the aggregation hot path (P-length multiply-adds); the
-//! criterion bench `aggregation` tracks it, including streaming-vs-barrier.
+//! The inner fold is the aggregation hot path; the criterion bench
+//! `aggregation` tracks it, including streaming-vs-barrier and the
+//! sparse-vs-dense fold across masking rates.
 
+use crate::fl::masking::MaskTarget;
 use crate::runtime::manifest::LayerInfo;
 use crate::util::error::{Error, Result};
 
-/// One client's contribution to a round (a decoded, reconstructed update).
+/// One client's contribution to a round, as a dense vector (the wire body
+/// for dense encodings; tests and the barrier reference also build these).
 #[derive(Debug, Clone)]
 pub struct Contribution<'a> {
     /// Originating client id (from the wire header; canonical sort key for
@@ -43,11 +61,30 @@ pub struct Contribution<'a> {
     pub n_samples: u32,
 }
 
+/// One client's contribution as a sparse wire body: `values[k]` lives at
+/// coordinate `indices[k]` of a p-length vector whose other entries are
+/// zero on the wire. Indices must be strictly increasing and in `[0, p)` —
+/// the codec guarantees this on decode, and every fold re-checks it (a
+/// duplicate index would double-count into the accumulator).
+#[derive(Debug, Clone)]
+pub struct SparseContribution<'a> {
+    pub client: usize,
+    /// Full model dimension the indices address into.
+    pub p: usize,
+    pub indices: &'a [u32],
+    pub values: &'a [f32],
+    pub n_samples: u32,
+}
+
 /// Streaming, order-insensitive aggregation: fold decoded updates as they
 /// arrive, then finish into the next global model.
 pub trait Aggregator {
-    /// Fold one client's update into the running aggregate.
+    /// Fold one client's dense-bodied update into the running aggregate.
     fn fold(&mut self, contrib: Contribution<'_>) -> Result<()>;
+
+    /// Fold one client's sparse-bodied update — O(nnz) for
+    /// [`StreamingFedAvg`], no densification.
+    fn fold_sparse(&mut self, contrib: SparseContribution<'_>) -> Result<()>;
 
     /// Number of contributions folded so far.
     fn folded(&self) -> usize;
@@ -60,20 +97,26 @@ pub trait Aggregator {
     fn finish(self: Box<Self>) -> Result<Vec<f32>>;
 }
 
-/// Build the configured aggregator for one round.
+/// Build the configured aggregator for one round. `mask_target` decides how
+/// a masked-away (zero-on-the-wire) coordinate aggregates: as a literal
+/// zero (`Weights`) or as the broadcast baseline value (`Delta`); the
+/// aggregator owns that reconstruction now, so the server's hot loop never
+/// materializes a dense vector per contribution.
 pub fn make_aggregator(
     kind: crate::config::experiment::AggregatorKind,
+    mask_target: MaskTarget,
     global: &[f32],
     layers: &[LayerInfo],
-) -> Box<dyn Aggregator> {
-    match kind {
-        crate::config::experiment::AggregatorKind::FedAvg => {
-            Box::new(StreamingFedAvg::new(global.len()))
-        }
+) -> Result<Box<dyn Aggregator>> {
+    Ok(match kind {
+        crate::config::experiment::AggregatorKind::FedAvg => match mask_target {
+            MaskTarget::Weights => Box::new(StreamingFedAvg::new(global.len())),
+            MaskTarget::Delta => Box::new(StreamingFedAvg::with_delta_baseline(global, layers)?),
+        },
         crate::config::experiment::AggregatorKind::Attentive { temp } => {
-            Box::new(BufferingAttentive::new(global, layers, temp))
+            Box::new(BufferingAttentive::new(global, layers, temp, mask_target))
         }
-    }
+    })
 }
 
 /// Fixed-point scale of the streaming FedAvg accumulator: products
@@ -81,17 +124,69 @@ pub fn make_aggregator(
 /// therefore order-independent) accumulation.
 const FIXED_POINT_SCALE: f64 = 18_446_744_073_709_551_616.0; // 2^64
 
+/// Weighted products must stay inside the fixed-point grid
+/// (|n_i * v| < 2^62 per coordinate): beyond it the float->int cast
+/// would saturate silently — that magnitude only means a diverged
+/// client, which must fail loudly.
+const GRID_LIMIT: f64 = 4.611_686_018_427_387_9e18; // 2^62
+
 /// A diverged client's update (NaN/inf) must fail loudly in every
 /// aggregator — the FedAvg float->int cast would silently zero NaN and
 /// the attentive softmax would propagate it into the whole global model.
-fn check_finite(contrib: &Contribution<'_>) -> Result<()> {
-    if contrib.params.iter().any(|v| !v.is_finite()) {
-        return Err(Error::invalid(format!(
-            "non-finite update from client {}",
-            contrib.client
-        )));
+fn check_finite(client: usize, values: &[f32]) -> Result<()> {
+    if values.iter().any(|v| !v.is_finite()) {
+        return Err(Error::invalid(format!("non-finite update from client {client}")));
     }
     Ok(())
+}
+
+/// Validate a sparse contribution's shape: index/value arity, strictly
+/// increasing indices (rejects duplicates), all indices inside `[0, p)`.
+fn check_sparse_shape(contrib: &SparseContribution<'_>) -> Result<()> {
+    if contrib.indices.len() != contrib.values.len() {
+        return Err(Error::invalid("sparse contribution index/value length mismatch"));
+    }
+    let mut next_min = 0u64;
+    for &idx in contrib.indices {
+        if (idx as u64) < next_min || idx as usize >= contrib.p {
+            return Err(Error::invalid(format!(
+                "sparse index {idx} from client {} out of range or out of order",
+                contrib.client
+            )));
+        }
+        next_min = idx as u64 + 1;
+    }
+    Ok(())
+}
+
+/// Fold one weighted value onto the fixed-point grid.
+#[inline]
+fn add_product(slot: &mut i128, n: f64, v: f32, client: usize) -> Result<()> {
+    let x = n * v as f64;
+    if x.abs() >= GRID_LIMIT {
+        return Err(Error::invalid(format!(
+            "update magnitude from client {client} exceeds the aggregation range"
+        )));
+    }
+    *slot = slot
+        .checked_add((x * FIXED_POINT_SCALE).round() as i128)
+        .ok_or_else(|| Error::invalid("aggregation accumulator overflow"))?;
+    Ok(())
+}
+
+/// [`MaskTarget::Delta`] baseline state: lets unsent masked coordinates
+/// aggregate as the broadcast value without any per-contribution O(p) work.
+struct DeltaBaseline {
+    /// `round(b_j * 2^64)`: the broadcast pre-rounded onto the accumulator
+    /// grid, so each client's baseline term is the exact integer product
+    /// `n_i * grid[j]` and the cohort's sum distributes to
+    /// `(total - sent[j]) * grid[j]`.
+    grid: Vec<i128>,
+    /// Per masked coordinate, the total sample weight of clients whose wire
+    /// carried a non-zero value there (everyone else reverts to baseline).
+    sent: Vec<u64>,
+    /// Flattened layer table: which coordinates masking applies to.
+    masked: Vec<bool>,
 }
 
 /// Sample-weighted FedAvg with O(p) state and arrival-order-independent
@@ -99,17 +194,54 @@ fn check_finite(contrib: &Contribution<'_>) -> Result<()> {
 pub struct StreamingFedAvg {
     /// Per-parameter weighted numerator `sum_i n_i * v_ij`, fixed point.
     acc: Vec<i128>,
+    /// `Some` under [`MaskTarget::Delta`]; `None` aggregates wire zeros as
+    /// literal zeros ([`MaskTarget::Weights`]).
+    delta: Option<DeltaBaseline>,
     total_samples: u64,
     folded: usize,
 }
 
 impl StreamingFedAvg {
+    /// Paper-literal aggregation: wire zeros are zeros.
     pub fn new(p: usize) -> StreamingFedAvg {
         StreamingFedAvg {
             acc: vec![0i128; p],
+            delta: None,
             total_samples: 0,
             folded: 0,
         }
+    }
+
+    /// [`MaskTarget::Delta`] aggregation: a masked coordinate a client did
+    /// not send reverts to `broadcast[j]` in that client's contribution.
+    /// O(p) once per round here; every fold thereafter is O(nnz).
+    pub fn with_delta_baseline(broadcast: &[f32], layers: &[LayerInfo]) -> Result<StreamingFedAvg> {
+        let p = broadcast.len();
+        let mut grid = Vec::with_capacity(p);
+        for &b in broadcast {
+            if !b.is_finite() || (b as f64).abs() >= GRID_LIMIT {
+                return Err(Error::invalid("broadcast baseline outside the aggregation range"));
+            }
+            grid.push((b as f64 * FIXED_POINT_SCALE).round() as i128);
+        }
+        let mut masked = vec![false; p];
+        for l in layers {
+            if l.offset + l.size > p {
+                return Err(Error::invalid(format!(
+                    "layer '{}' exceeds model dimension {p}",
+                    l.name
+                )));
+            }
+            if l.masked {
+                masked[l.offset..l.offset + l.size].fill(true);
+            }
+        }
+        Ok(StreamingFedAvg {
+            acc: vec![0i128; p],
+            delta: Some(DeltaBaseline { grid, sent: vec![0u64; p], masked }),
+            total_samples: 0,
+            folded: 0,
+        })
     }
 }
 
@@ -118,24 +250,62 @@ impl Aggregator for StreamingFedAvg {
         if contrib.params.len() != self.acc.len() {
             return Err(Error::invalid("contribution length mismatch"));
         }
-        check_finite(&contrib)?;
-        // Weighted products must stay inside the fixed-point grid
-        // (|n_i * v| < 2^62 per coordinate): beyond it the float->int cast
-        // would saturate silently — that magnitude only means a diverged
-        // client, which must fail loudly.
-        const GRID_LIMIT: f64 = 4.611_686_018_427_387_9e18; // 2^62
+        check_finite(contrib.client, contrib.params)?;
         let n = contrib.n_samples as f64;
-        for (slot, &v) in self.acc.iter_mut().zip(contrib.params) {
-            let x = n * v as f64;
-            if x.abs() >= GRID_LIMIT {
-                return Err(Error::invalid(format!(
-                    "update magnitude from client {} exceeds the aggregation range",
-                    contrib.client
-                )));
+        match &mut self.delta {
+            None => {
+                // skipping zeros adds the same integers as folding them:
+                // round(n * 0 * S) == 0
+                for (slot, &v) in self.acc.iter_mut().zip(contrib.params) {
+                    if v != 0.0 {
+                        add_product(slot, n, v, contrib.client)?;
+                    }
+                }
             }
-            *slot = slot
-                .checked_add((x * FIXED_POINT_SCALE).round() as i128)
-                .ok_or_else(|| Error::invalid("aggregation accumulator overflow"))?;
+            Some(d) => {
+                for (j, &v) in contrib.params.iter().enumerate() {
+                    if v != 0.0 {
+                        add_product(&mut self.acc[j], n, v, contrib.client)?;
+                        if d.masked[j] {
+                            d.sent[j] += contrib.n_samples as u64;
+                        }
+                    }
+                }
+            }
+        }
+        self.total_samples += contrib.n_samples as u64;
+        self.folded += 1;
+        Ok(())
+    }
+
+    fn fold_sparse(&mut self, contrib: SparseContribution<'_>) -> Result<()> {
+        if contrib.p != self.acc.len() {
+            return Err(Error::invalid("contribution length mismatch"));
+        }
+        check_sparse_shape(&contrib)?;
+        check_finite(contrib.client, contrib.values)?;
+        let n = contrib.n_samples as f64;
+        match &mut self.delta {
+            None => {
+                for (&idx, &v) in contrib.indices.iter().zip(contrib.values) {
+                    // q8 can dequantize an entry to exactly 0.0; skip it just
+                    // like the dense path so both folds add identical terms
+                    if v != 0.0 {
+                        add_product(&mut self.acc[idx as usize], n, v, contrib.client)?;
+                    }
+                }
+            }
+            Some(d) => {
+                for (&idx, &v) in contrib.indices.iter().zip(contrib.values) {
+                    let j = idx as usize;
+                    if v != 0.0 {
+                        add_product(&mut self.acc[j], n, v, contrib.client)?;
+                        if d.masked[j] {
+                            d.sent[j] += contrib.n_samples as u64;
+                        }
+                    }
+                }
+            }
         }
         self.total_samples += contrib.n_samples as u64;
         self.folded += 1;
@@ -147,7 +317,15 @@ impl Aggregator for StreamingFedAvg {
     }
 
     fn state_bytes(&self) -> usize {
-        self.acc.capacity() * std::mem::size_of::<i128>()
+        let base = self.acc.capacity() * std::mem::size_of::<i128>();
+        match &self.delta {
+            None => base,
+            Some(d) => {
+                base + d.grid.capacity() * std::mem::size_of::<i128>()
+                    + d.sent.capacity() * std::mem::size_of::<u64>()
+                    + d.masked.capacity()
+            }
+        }
     }
 
     fn finish(self: Box<Self>) -> Result<Vec<f32>> {
@@ -158,32 +336,86 @@ impl Aggregator for StreamingFedAvg {
             return Err(Error::invalid("total sample count is zero"));
         }
         let total = self.total_samples as f64;
-        Ok(self
-            .acc
-            .iter()
-            .map(|&a| ((a as f64 / FIXED_POINT_SCALE) / total) as f32)
-            .collect())
+        match &self.delta {
+            None => Ok(self
+                .acc
+                .iter()
+                .map(|&a| ((a as f64 / FIXED_POINT_SCALE) / total) as f32)
+                .collect()),
+            Some(d) => {
+                // the one O(p) pass: fold the cohort's collapsed baseline
+                // mass (total - sent[j]) * grid[j] into each masked slot
+                let mut out = Vec::with_capacity(self.acc.len());
+                for (j, &a) in self.acc.iter().enumerate() {
+                    let num = if d.masked[j] {
+                        let missing = self
+                            .total_samples
+                            .checked_sub(d.sent[j])
+                            .ok_or_else(|| {
+                                Error::invalid("sent weight exceeds total samples (duplicate sparse indices?)")
+                            })? as i128;
+                        a.checked_add(
+                            missing
+                                .checked_mul(d.grid[j])
+                                .ok_or_else(|| Error::invalid("aggregation accumulator overflow"))?,
+                        )
+                        .ok_or_else(|| Error::invalid("aggregation accumulator overflow"))?
+                    } else {
+                        a
+                    };
+                    out.push(((num as f64 / FIXED_POINT_SCALE) / total) as f32);
+                }
+                Ok(out)
+            }
+        }
     }
 }
 
 /// Attentive aggregation as an [`Aggregator`]: buffers decoded updates
 /// (O(k*p) — the rule needs every client's distance before any weight is
-/// known) and sorts by client id at finish so the result does not depend on
+/// known), reconstructing each wire body to its dense mask-target form at
+/// fold, and sorts by client id at finish so the result does not depend on
 /// arrival order.
 pub struct BufferingAttentive {
     global: Vec<f32>,
     layers: Vec<LayerInfo>,
     temp: f64,
+    mask_target: MaskTarget,
     buffered: Vec<(usize, u32, Vec<f32>)>,
 }
 
 impl BufferingAttentive {
-    pub fn new(global: &[f32], layers: &[LayerInfo], temp: f64) -> BufferingAttentive {
+    pub fn new(
+        global: &[f32],
+        layers: &[LayerInfo],
+        temp: f64,
+        mask_target: MaskTarget,
+    ) -> BufferingAttentive {
         BufferingAttentive {
             global: global.to_vec(),
             layers: layers.to_vec(),
             temp,
+            mask_target,
             buffered: Vec::new(),
+        }
+    }
+
+    /// In-place mask-target reconstruction of a wire vector: under `Delta`,
+    /// masked-layer zeros revert to the broadcast value (the dense-vector
+    /// equivalent of [`crate::fl::masking::apply_delta_target`]).
+    fn reconstruct(&self, dense: &mut [f32]) {
+        if self.mask_target == MaskTarget::Weights {
+            return;
+        }
+        for l in &self.layers {
+            if !l.masked {
+                continue;
+            }
+            for i in l.offset..l.offset + l.size {
+                if dense[i] == 0.0 {
+                    dense[i] = self.global[i];
+                }
+            }
         }
     }
 }
@@ -193,9 +425,25 @@ impl Aggregator for BufferingAttentive {
         if contrib.params.len() != self.global.len() {
             return Err(Error::invalid("contribution length mismatch"));
         }
-        check_finite(&contrib)?;
-        self.buffered
-            .push((contrib.client, contrib.n_samples, contrib.params.to_vec()));
+        check_finite(contrib.client, contrib.params)?;
+        let mut dense = contrib.params.to_vec();
+        self.reconstruct(&mut dense);
+        self.buffered.push((contrib.client, contrib.n_samples, dense));
+        Ok(())
+    }
+
+    fn fold_sparse(&mut self, contrib: SparseContribution<'_>) -> Result<()> {
+        if contrib.p != self.global.len() {
+            return Err(Error::invalid("contribution length mismatch"));
+        }
+        check_sparse_shape(&contrib)?;
+        check_finite(contrib.client, contrib.values)?;
+        let mut dense = vec![0.0f32; contrib.p];
+        for (&idx, &v) in contrib.indices.iter().zip(contrib.values) {
+            dense[idx as usize] = v;
+        }
+        self.reconstruct(&mut dense);
+        self.buffered.push((contrib.client, contrib.n_samples, dense));
         Ok(())
     }
 
@@ -337,6 +585,19 @@ mod tests {
         }
     }
 
+    /// Sparse view of a dense vector (the non-zero entries, ascending).
+    fn sparsify(v: &[f32]) -> (Vec<u32>, Vec<f32>) {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &x) in v.iter().enumerate() {
+            if x != 0.0 {
+                idx.push(i as u32);
+                val.push(x);
+            }
+        }
+        (idx, val)
+    }
+
     #[test]
     fn attentive_equal_contribs_is_identity() {
         let global = vec![0.0f32; 8];
@@ -410,10 +671,63 @@ mod tests {
         assert_eq!(agg.folded(), 0);
         let mut agg = StreamingFedAvg::new(2);
         assert!(agg.fold(contrib(3, &huge, 500)).is_err());
+        // the sparse fold enforces the same invariants
+        let mut agg = StreamingFedAvg::new(2);
+        assert!(agg
+            .fold_sparse(SparseContribution {
+                client: 3,
+                p: 2,
+                indices: &[1],
+                values: &[f32::NAN],
+                n_samples: 1,
+            })
+            .is_err());
+        assert_eq!(agg.folded(), 0);
         // the attentive buffer enforces the same invariant
-        let mut attn = BufferingAttentive::new(&[0.0f32, 0.0], &one_layer(2), 1.0);
+        let mut attn =
+            BufferingAttentive::new(&[0.0f32, 0.0], &one_layer(2), 1.0, MaskTarget::Weights);
         assert!(attn.fold(contrib(3, &nan, 1)).is_err());
         assert_eq!(attn.folded(), 0);
+    }
+
+    #[test]
+    fn sparse_fold_rejects_malformed_indices() {
+        // out of range
+        let mut agg = StreamingFedAvg::new(4);
+        let res = agg.fold_sparse(SparseContribution {
+            client: 0,
+            p: 4,
+            indices: &[4],
+            values: &[1.0],
+            n_samples: 1,
+        });
+        assert!(res.is_err());
+        // duplicate: would double-count (and disagree with a buffering
+        // aggregator's last-write-wins scatter) — both impls reject it
+        let dup = |p: usize| SparseContribution {
+            client: 0,
+            p,
+            indices: &[2, 2],
+            values: &[1.0, 1.0],
+            n_samples: 1,
+        };
+        let mut agg = StreamingFedAvg::new(4);
+        assert!(agg.fold_sparse(dup(4)).is_err());
+        assert_eq!(agg.folded(), 0);
+        let mut attn =
+            BufferingAttentive::new(&[0.0f32; 4], &one_layer(4), 1.0, MaskTarget::Weights);
+        assert!(attn.fold_sparse(dup(4)).is_err());
+        // out of order
+        let mut agg = StreamingFedAvg::new(4);
+        assert!(agg
+            .fold_sparse(SparseContribution {
+                client: 0,
+                p: 4,
+                indices: &[3, 1],
+                values: &[1.0, 1.0],
+                n_samples: 1,
+            })
+            .is_err());
     }
 
     #[test]
@@ -470,6 +784,99 @@ mod tests {
     }
 
     #[test]
+    fn sparse_fold_is_bitwise_identical_to_dense_fold() {
+        check("sparse == dense fold (weights)", 60, |g| {
+            let p = g.usize_in(1, 400);
+            let k = g.usize_in(1, 8);
+            let mut dense_agg = StreamingFedAvg::new(p);
+            let mut sparse_agg = StreamingFedAvg::new(p);
+            for i in 0..k {
+                let density = g.f32_in(0.0, 0.8);
+                let v: Vec<f32> = (0..p)
+                    .map(|_| if g.f32_in(0.0, 1.0) < density { g.f32_in(-2.0, 2.0) } else { 0.0 })
+                    .collect();
+                let w = g.usize_in(1, 900) as u32;
+                dense_agg.fold(contrib(i, &v, w)).unwrap();
+                let (idx, val) = sparsify(&v);
+                sparse_agg
+                    .fold_sparse(SparseContribution {
+                        client: i,
+                        p,
+                        indices: &idx,
+                        values: &val,
+                        n_samples: w,
+                    })
+                    .unwrap();
+            }
+            let a = Box::new(dense_agg).finish().unwrap();
+            let b = Box::new(sparse_agg).finish().unwrap();
+            assert_eq!(a, b, "seed {:#x}", g.seed);
+        });
+    }
+
+    #[test]
+    fn delta_baseline_all_zero_upload_reverts_to_broadcast_exactly() {
+        let mut g = crate::util::prop::Gen::new(0xde17a);
+        let p = 64;
+        let broadcast: Vec<f32> = (0..p).map(|_| g.f32_in(-2.0, 2.0)).collect();
+        let layers = one_layer(p);
+        let mut agg = StreamingFedAvg::with_delta_baseline(&broadcast, &layers).unwrap();
+        // a client that masked everything away: empty sparse body
+        agg.fold_sparse(SparseContribution {
+            client: 0,
+            p,
+            indices: &[],
+            values: &[],
+            n_samples: 5,
+        })
+        .unwrap();
+        let out = Box::new(agg).finish().unwrap();
+        assert_eq!(out, broadcast, "unsent coordinates must aggregate as the broadcast");
+    }
+
+    #[test]
+    fn delta_baseline_mixes_sent_and_unsent_weights() {
+        // two clients over one coordinate: client 0 (n=3) sends 4.0,
+        // client 1 (n=1) sends nothing -> (3*4 + 1*b) / 4 with b = 2.0
+        let broadcast = vec![2.0f32];
+        let layers = one_layer(1);
+        let mut agg = StreamingFedAvg::with_delta_baseline(&broadcast, &layers).unwrap();
+        agg.fold_sparse(SparseContribution {
+            client: 0,
+            p: 1,
+            indices: &[0],
+            values: &[4.0],
+            n_samples: 3,
+        })
+        .unwrap();
+        agg.fold_sparse(SparseContribution {
+            client: 1,
+            p: 1,
+            indices: &[],
+            values: &[],
+            n_samples: 1,
+        })
+        .unwrap();
+        let out = Box::new(agg).finish().unwrap();
+        assert!((out[0] - 3.5).abs() < 1e-6, "got {}", out[0]);
+    }
+
+    #[test]
+    fn delta_baseline_ignores_unmasked_layers() {
+        // layer 0 masked, layer 1 not: zeros in the unmasked layer stay
+        // zeros (a true zero, not a masked-away coordinate)
+        let layers = vec![
+            LayerInfo { name: "w".into(), shape: vec![2], offset: 0, size: 2, masked: true },
+            LayerInfo { name: "b".into(), shape: vec![2], offset: 2, size: 2, masked: false },
+        ];
+        let broadcast = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut agg = StreamingFedAvg::with_delta_baseline(&broadcast, &layers).unwrap();
+        agg.fold(contrib(0, &[5.0, 0.0, 0.0, 6.0], 2)).unwrap();
+        let out = Box::new(agg).finish().unwrap();
+        assert_eq!(out, vec![5.0, 2.0, 0.0, 6.0]);
+    }
+
+    #[test]
     fn streaming_fold_is_arrival_order_independent_bitwise() {
         check("streaming order independence", 60, |g| {
             let p = g.usize_in(1, 300);
@@ -511,11 +918,22 @@ mod tests {
         }
         assert_eq!(state_sizes[0], state_sizes[1]);
         assert_eq!(state_sizes[1], state_sizes[2]);
-        // while a buffering aggregator grows linearly in k
+        // the delta baseline adds O(p) state but stays k-independent too
+        let broadcast = vec![0.5f32; p];
         let layers = one_layer(p);
+        let mut delta_sizes = Vec::new();
+        for k in [2usize, 32] {
+            let mut agg = StreamingFedAvg::with_delta_baseline(&broadcast, &layers).unwrap();
+            for i in 0..k {
+                agg.fold(contrib(i, &v, 10)).unwrap();
+            }
+            delta_sizes.push(agg.state_bytes());
+        }
+        assert_eq!(delta_sizes[0], delta_sizes[1]);
+        // while a buffering aggregator grows linearly in k
         let global = vec![0.0f32; p];
-        let mut small = BufferingAttentive::new(&global, &layers, 1.0);
-        let mut big = BufferingAttentive::new(&global, &layers, 1.0);
+        let mut small = BufferingAttentive::new(&global, &layers, 1.0, MaskTarget::Weights);
+        let mut big = BufferingAttentive::new(&global, &layers, 1.0, MaskTarget::Weights);
         for i in 0..2 {
             small.fold(contrib(i, &v, 10)).unwrap();
         }
@@ -536,7 +954,7 @@ mod tests {
             vecs.iter().enumerate().map(|(i, v)| contrib(i, v, 7)).collect();
         let barrier = attentive_mean(&global, &contribs, &layers, 0.8).unwrap();
         for order in [[4usize, 2, 0, 3, 1], [1, 3, 0, 2, 4]] {
-            let mut agg = BufferingAttentive::new(&global, &layers, 0.8);
+            let mut agg = BufferingAttentive::new(&global, &layers, 0.8, MaskTarget::Weights);
             for &i in &order {
                 agg.fold(contribs[i].clone()).unwrap();
             }
@@ -546,19 +964,73 @@ mod tests {
     }
 
     #[test]
-    fn make_aggregator_dispatches_on_kind() {
+    fn attentive_sparse_fold_densifies_and_reconstructs() {
+        let p = 4;
+        let layers = one_layer(p);
+        let global = vec![1.0f32, 2.0, 3.0, 4.0];
+        // Delta target: unsent coordinates revert to the broadcast, so a
+        // sparse body {0: 9.0} must buffer as [9, 2, 3, 4]
+        let mut agg = BufferingAttentive::new(&global, &layers, 1.0, MaskTarget::Delta);
+        agg.fold_sparse(SparseContribution {
+            client: 0,
+            p,
+            indices: &[0],
+            values: &[9.0],
+            n_samples: 1,
+        })
+        .unwrap();
+        let out = Box::new(agg).finish().unwrap();
+        assert_eq!(out, vec![9.0, 2.0, 3.0, 4.0]);
+        // Weights target: unsent coordinates stay zero
+        let mut agg = BufferingAttentive::new(&global, &layers, 1.0, MaskTarget::Weights);
+        agg.fold_sparse(SparseContribution {
+            client: 0,
+            p,
+            indices: &[0],
+            values: &[9.0],
+            n_samples: 1,
+        })
+        .unwrap();
+        let out = Box::new(agg).finish().unwrap();
+        assert_eq!(out, vec![9.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn make_aggregator_dispatches_on_kind_and_target() {
         use crate::config::experiment::AggregatorKind;
         let global = vec![0.0f32; 16];
         let layers = one_layer(16);
         let v = vec![2.0f32; 16];
-        let mut fedavg = make_aggregator(AggregatorKind::FedAvg, &global, &layers);
+        let mut fedavg =
+            make_aggregator(AggregatorKind::FedAvg, MaskTarget::Weights, &global, &layers).unwrap();
         fedavg.fold(contrib(0, &v, 5)).unwrap();
         assert_eq!(fedavg.finish().unwrap(), v);
-        let mut attn = make_aggregator(AggregatorKind::Attentive { temp: 1.0 }, &global, &layers);
+        let mut attn = make_aggregator(
+            AggregatorKind::Attentive { temp: 1.0 },
+            MaskTarget::Weights,
+            &global,
+            &layers,
+        )
+        .unwrap();
         attn.fold(contrib(0, &v, 5)).unwrap();
         let out = attn.finish().unwrap();
         for x in out {
             assert!((x - 2.0).abs() < 1e-6);
         }
+        // delta target wires the broadcast baseline through
+        let broadcast = vec![1.0f32; 16];
+        let mut delta =
+            make_aggregator(AggregatorKind::FedAvg, MaskTarget::Delta, &broadcast, &layers)
+                .unwrap();
+        delta
+            .fold_sparse(SparseContribution {
+                client: 0,
+                p: 16,
+                indices: &[],
+                values: &[],
+                n_samples: 3,
+            })
+            .unwrap();
+        assert_eq!(delta.finish().unwrap(), broadcast);
     }
 }

@@ -13,10 +13,11 @@ use std::sync::Arc;
 
 use crate::config::experiment::ExperimentConfig;
 use crate::data::{batcher, Dataset};
-use crate::fl::masking::{random_mask_rust, selective_mask_rust, MaskEngine, MaskPolicy};
+use crate::fl::masking::{random_mask_rust, selective_mask_rust_with, MaskEngine, MaskPolicy};
 use crate::runtime::engine::Engine;
+use crate::runtime::pool::WorkerScratch;
 use crate::sim::rng::Rng;
-use crate::transport::codec::encode_update;
+use crate::transport::codec::encode_update_with;
 use crate::util::error::{Error, Result};
 
 /// A client's data shard reference.
@@ -78,8 +79,11 @@ impl ClientJob {
             .fork(purpose)
     }
 
-    /// Run the local update on an engine worker.
-    pub fn run(&self, engine: &Engine) -> Result<LocalOutcome> {
+    /// Run the local update on an engine worker. `scratch` is the worker's
+    /// long-lived buffer arena (mask deltas, encode temporaries), so a
+    /// steady-state round allocates nothing per client beyond the payload
+    /// itself.
+    pub fn run(&self, engine: &Engine, scratch: &mut WorkerScratch) -> Result<LocalOutcome> {
         let model = &self.cfg.model;
         let mm = engine.model(model)?.clone();
         let mut params = (*self.global).clone();
@@ -116,9 +120,14 @@ impl ClientJob {
             }
             MaskPolicy::Selective { gamma, engine: me, scope } => match me {
                 MaskEngine::Hlo => engine.mask(model, &params, &self.global, gamma)?,
-                MaskEngine::Rust => {
-                    selective_mask_rust(&params, &self.global, gamma, &mm.layers, scope)
-                }
+                MaskEngine::Rust => selective_mask_rust_with(
+                    &params,
+                    &self.global,
+                    gamma,
+                    &mm.layers,
+                    scope,
+                    &mut scratch.mask,
+                ),
             },
         };
 
@@ -134,7 +143,8 @@ impl ClientJob {
             _ => masked.iter().filter(|v| **v != 0.0).count(),
         };
         let n_samples = self.shard.n_samples(mm.x_elem_shape.first().copied().unwrap_or(1) + 1) as u32;
-        let payload = encode_update(
+        let payload = encode_update_with(
+            &mut scratch.encode,
             self.client_id as u32,
             self.round as u32,
             n_samples,

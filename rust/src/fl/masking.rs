@@ -153,9 +153,26 @@ pub fn keep_count(size: usize, gamma: f32) -> usize {
     k.clamp(1, size)
 }
 
+/// Reusable scratch arena for the exact selective-mask path. One of these
+/// per engine-pool worker means steady-state masking allocates nothing per
+/// client per round: the per-segment |delta| buffer, its partition copy,
+/// and the global-scope gather buffers all reuse their capacity.
+#[derive(Debug, Default)]
+pub struct MaskScratch {
+    /// |w_new - w_old| per segment entry, in segment order.
+    deltas: Vec<f32>,
+    /// Partition workspace for `select_nth_unstable` (kept separate so
+    /// `deltas` stays index-aligned with the segment).
+    part: Vec<f32>,
+    /// Global-scope gather buffers.
+    gather_idx: Vec<usize>,
+    gather_new: Vec<f32>,
+    gather_old: Vec<f32>,
+}
+
 /// Exact selective mask of one flat segment: zero all but the top-k
 /// |w_new - w_old| entries of `w_new[seg]`. O(n) via select_nth_unstable.
-fn selective_mask_segment(w_new: &mut [f32], w_old: &[f32], gamma: f32) {
+fn selective_mask_segment(w_new: &mut [f32], w_old: &[f32], gamma: f32, scratch: &mut MaskScratch) {
     let n = w_new.len();
     let k = keep_count(n, gamma);
     if k >= n {
@@ -165,47 +182,61 @@ fn selective_mask_segment(w_new: &mut [f32], w_old: &[f32], gamma: f32) {
         w_new.fill(0.0);
         return;
     }
-    let mut deltas: Vec<f32> = w_new
-        .iter()
-        .zip(w_old)
-        .map(|(n, o)| (n - o).abs())
-        .collect();
-    // threshold = k-th largest |delta|
-    let mut scratch = deltas.clone();
-    let (_, &mut thresh, _) =
-        scratch.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+    scratch.deltas.clear();
+    scratch
+        .deltas
+        .extend(w_new.iter().zip(w_old).map(|(n, o)| (n - o).abs()));
+    // threshold = k-th largest |delta|; after the descending partition every
+    // strictly-above-threshold element sits in the prefix [0, k-1), so the
+    // tie budget comes straight from the partition — no second O(n) pass.
+    scratch.part.clear();
+    scratch.part.extend_from_slice(&scratch.deltas);
+    let (thresh, mut kept) = {
+        let (above, nth, _) = scratch
+            .part
+            .select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+        let t = *nth;
+        (t, above.iter().filter(|d| **d > t).count())
+    };
     // keep d >= thresh, but cap kept count at k to resolve ties exactly
     // like the sort-based oracle (first-come within equal values).
-    let mut kept = 0usize;
-    for i in 0..n {
-        if deltas[i] > thresh {
-            kept += 1;
-        }
-    }
-    for i in 0..n {
-        let keep = if deltas[i] > thresh {
+    for (w, &d) in w_new.iter_mut().zip(scratch.deltas.iter()) {
+        let keep = if d > thresh {
             true
-        } else if deltas[i] == thresh && kept < k {
+        } else if d == thresh && kept < k {
             kept += 1;
             true
         } else {
             false
         };
         if !keep {
-            w_new[i] = 0.0;
+            *w = 0.0;
         }
-        let _ = &mut deltas;
     }
 }
 
 /// Exact rust selective masking over the layer table (the oracle the HLO
-/// kernel path is property-tested against).
+/// kernel path is property-tested against). Allocates its scratch per call;
+/// hot paths hold a [`MaskScratch`] and use [`selective_mask_rust_with`].
 pub fn selective_mask_rust(
     w_new: &[f32],
     w_old: &[f32],
     gamma: f32,
     layers: &[LayerInfo],
     scope: MaskScope,
+) -> Vec<f32> {
+    selective_mask_rust_with(w_new, w_old, gamma, layers, scope, &mut MaskScratch::default())
+}
+
+/// [`selective_mask_rust`] with a caller-held scratch arena (reused across
+/// segments, clients, and rounds by the engine-pool workers).
+pub fn selective_mask_rust_with(
+    w_new: &[f32],
+    w_old: &[f32],
+    gamma: f32,
+    layers: &[LayerInfo],
+    scope: MaskScope,
+    scratch: &mut MaskScratch,
 ) -> Vec<f32> {
     assert_eq!(w_new.len(), w_old.len());
     let mut out = w_new.to_vec();
@@ -214,23 +245,34 @@ pub fn selective_mask_rust(
             for l in layers {
                 if l.masked {
                     let seg = l.offset..l.offset + l.size;
-                    selective_mask_segment(&mut out[seg.clone()], &w_old[seg], gamma);
+                    selective_mask_segment(&mut out[seg.clone()], &w_old[seg], gamma, scratch);
                 }
             }
         }
         MaskScope::Global => {
-            // gather maskable entries, mask jointly, scatter back
-            let idx: Vec<usize> = layers
-                .iter()
-                .filter(|l| l.masked)
-                .flat_map(|l| l.offset..l.offset + l.size)
-                .collect();
-            let mut gathered_new: Vec<f32> = idx.iter().map(|&i| w_new[i]).collect();
-            let gathered_old: Vec<f32> = idx.iter().map(|&i| w_old[i]).collect();
-            selective_mask_segment(&mut gathered_new, &gathered_old, gamma);
+            // gather maskable entries, mask jointly, scatter back (buffers
+            // taken out of the scratch so it can also serve the segment call)
+            let mut idx = std::mem::take(&mut scratch.gather_idx);
+            let mut gathered_new = std::mem::take(&mut scratch.gather_new);
+            let mut gathered_old = std::mem::take(&mut scratch.gather_old);
+            idx.clear();
+            gathered_new.clear();
+            gathered_old.clear();
+            idx.extend(
+                layers
+                    .iter()
+                    .filter(|l| l.masked)
+                    .flat_map(|l| l.offset..l.offset + l.size),
+            );
+            gathered_new.extend(idx.iter().map(|&i| w_new[i]));
+            gathered_old.extend(idx.iter().map(|&i| w_old[i]));
+            selective_mask_segment(&mut gathered_new, &gathered_old, gamma, scratch);
             for (j, &i) in idx.iter().enumerate() {
                 out[i] = gathered_new[j];
             }
+            scratch.gather_idx = idx;
+            scratch.gather_new = gathered_new;
+            scratch.gather_old = gathered_old;
         }
     }
     out
@@ -438,6 +480,26 @@ mod tests {
         let (wn, wo) = gen_pair(&mut g, 50);
         let out = selective_mask_rust(&wn, &wo, 0.999_999, &layers, MaskScope::PerLayer);
         assert_eq!(out, wn);
+    }
+
+    #[test]
+    fn scratch_reuse_is_identical_to_fresh_scratch() {
+        // one worker-held arena across many (client, round) mask calls must
+        // never change a bit of the output
+        let mut scratch = MaskScratch::default();
+        let mut g = Gen::new(9);
+        for _ in 0..10 {
+            let n = g.usize_in(8, 300);
+            let gamma = g.f32_in(0.05, 0.95);
+            let (wn, wo) = gen_pair(&mut g, n);
+            let layers = layers_of(&[(n / 2, true), (n - n / 2, true)]);
+            for scope in [MaskScope::PerLayer, MaskScope::Global] {
+                let fresh = selective_mask_rust(&wn, &wo, gamma, &layers, scope);
+                let reused =
+                    selective_mask_rust_with(&wn, &wo, gamma, &layers, scope, &mut scratch);
+                assert_eq!(fresh, reused);
+            }
+        }
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //!   implementation and the L1 Pallas kernel path.
 //! * [`aggregate`] — streaming weighted federated averaging (Eq. 2): the
 //!   [`aggregate::Aggregator`] trait folds decoded wire updates as they
-//!   arrive (O(p) FedAvg; buffering attentive), order-independently.
+//!   arrive (O(p) state, O(nnz) per sparse fold for FedAvg; buffering
+//!   attentive), order-independently.
 //! * [`client`] — simulated on-device training (local epochs + masking +
 //!   upload encoding); returns an encoded `WireUpdate` payload, never a
 //!   dense parameter vector.
@@ -22,7 +23,9 @@ pub mod masking;
 pub mod sampling;
 pub mod server;
 
-pub use aggregate::{make_aggregator, Aggregator, Contribution, StreamingFedAvg};
-pub use masking::{MaskEngine, MaskPolicy, MaskScope, MaskTarget};
+pub use aggregate::{
+    make_aggregator, Aggregator, Contribution, SparseContribution, StreamingFedAvg,
+};
+pub use masking::{MaskEngine, MaskPolicy, MaskScope, MaskScratch, MaskTarget};
 pub use sampling::SamplingSchedule;
 pub use server::{Server, ServerOutcome};

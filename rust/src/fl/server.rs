@@ -5,10 +5,16 @@
 //! model (dense, or delta-encoded through the codec when
 //! `downlink_delta` is set), fan client jobs out over the engine pool,
 //! then **stream** aggregation: each client's encoded `WireUpdate` payload
-//! is decoded, mask-target-reconstructed, and folded into the configured
+//! is decoded into a borrowed sparse/dense view (one [`DecodeScratch`]
+//! held across rounds — no decode allocation at steady state) and folded
+//! into the configured
 //! [`Aggregator`](crate::fl::aggregate::Aggregator) the moment it lands,
 //! in completion order — aggregation overlaps with the slowest clients'
-//! compute instead of barriering on the cohort. Uplink cost, virtual time
+//! compute instead of barriering on the cohort. Sparse payloads fold in
+//! O(nnz); mask-target reconstruction is the aggregator's job now (the
+//! delta baseline folds once at finish), so the server's per-round cost is
+//! O(sum_i nnz_i + p) — the only O(p) passes are aggregator construction
+//! and producing the finished global model. Uplink cost, virtual time
 //! and the round record are accounted afterwards in client-id order.
 //!
 //! Determinism: client selection, shard shuffles and masking RNG all derive
@@ -22,9 +28,8 @@ use std::sync::Arc;
 
 use crate::config::experiment::{ExperimentConfig, NetworkKind};
 use crate::data::{batcher, loader, partition, Dataset};
-use crate::fl::aggregate::{make_aggregator, Contribution};
+use crate::fl::aggregate::{make_aggregator, Contribution, SparseContribution};
 use crate::fl::client::{ClientJob, ShardRef};
-use crate::fl::masking::MaskTarget;
 use crate::metrics::recorder::{RoundRecord, RunRecorder};
 use crate::runtime::engine::EvalSums;
 use crate::runtime::manifest::Manifest;
@@ -33,7 +38,9 @@ use crate::runtime::tensor::Batches;
 use crate::sim::availability::{AvailabilityModel, ClientState};
 use crate::sim::clock::VirtualClock;
 use crate::sim::rng::Rng;
-use crate::transport::codec::{decode_update, encode_update, wire_bytes, Encoding};
+use crate::transport::codec::{
+    decode_update, decode_update_view, encode_update, wire_bytes, BodyView, DecodeScratch, Encoding,
+};
 use crate::transport::cost::CostLedger;
 use crate::transport::network::NetworkModel;
 use crate::util::error::{Error, Result};
@@ -83,6 +90,9 @@ pub struct Server {
     availability: AvailabilityModel,
     network: NetworkModel,
     recorder: RunRecorder,
+    /// Reusable decode buffers for the streaming aggregation loop — held
+    /// across rounds so steady-state decoding never allocates.
+    decode_scratch: DecodeScratch,
 }
 
 impl Server {
@@ -164,6 +174,7 @@ impl Server {
             availability,
             network,
             recorder,
+            decode_scratch: DecodeScratch::default(),
         })
     }
 
@@ -238,7 +249,7 @@ impl Server {
                 // First broadcast: no client-side reference model yet.
                 let wire =
                     encode_update(BROADCAST_SENDER, t as u32, 0, &self.params, Encoding::Dense);
-                (decode_update(&wire)?.params, wire.len(), self.p)
+                (decode_update(&wire)?.into_dense(), wire.len(), self.p)
             }
             Some(prev) => {
                 let delta: Vec<f32> = self
@@ -250,9 +261,8 @@ impl Server {
                 let nnz = delta.iter().filter(|v| **v != 0.0).count();
                 let wire =
                     encode_update(BROADCAST_SENDER, t as u32, 0, &delta, self.cfg.encoding);
-                let decoded = decode_update(&wire)?;
+                let decoded = decode_update(&wire)?.into_dense();
                 let received: Vec<f32> = decoded
-                    .params
                     .iter()
                     .zip(prev.iter())
                     .map(|(d, old)| old + d)
@@ -306,7 +316,8 @@ impl Server {
             log::debug!("round {t}: {} stragglers dropped past deadline", stragglers.len());
         }
 
-        // Fan out local training.
+        // Fan out local training. Jobs are scratch-aware: each worker's
+        // long-lived buffers back the masking + encode temporaries.
         let jobs: Vec<_> = selected
             .iter()
             .map(|&cid| {
@@ -318,20 +329,25 @@ impl Server {
                     global: Arc::clone(&broadcast),
                     cfg: Arc::clone(&self.cfg),
                 };
-                move |e: &crate::runtime::engine::Engine| job.run(e)
+                move |e: &crate::runtime::engine::Engine,
+                      s: &mut crate::runtime::pool::WorkerScratch| job.run(e, s)
             })
             .collect();
 
-        // Streaming aggregation: decode and fold each encoded payload in
+        // Streaming aggregation: decode each encoded payload into a
+        // borrowed view (sparse bodies stay sparse) and fold it in
         // completion order, while the remaining clients are still training.
+        // The aggregator owns mask-target reconstruction, so a sparse
+        // payload costs O(nnz) here — no densify, no O(p) copy.
         // Metadata for cost/metric accounting is parked per input index so
         // the ledger and logs stay in deterministic client-id order.
         let n_jobs = jobs.len();
-        let mut agg = make_aggregator(self.cfg.aggregator, &broadcast, &self.layers);
+        let mut agg =
+            make_aggregator(self.cfg.aggregator, self.cfg.mask_target, &broadcast, &self.layers)?;
         let mut metas: Vec<Option<(f32, usize, usize)>> = vec![None; n_jobs];
-        for (idx, res) in self.pool.map_unordered(jobs) {
+        for (idx, res) in self.pool.map_unordered_with(jobs) {
             let outcome = res?;
-            let update = decode_update(&outcome.payload)?;
+            let update = decode_update_view(&outcome.payload, &mut self.decode_scratch)?;
             let expect = selected[idx];
             if update.client as usize != expect || update.round as usize != t {
                 return Err(Error::invalid(format!(
@@ -339,29 +355,26 @@ impl Server {
                     update.client, update.round
                 )));
             }
-            if update.params.len() != self.p {
+            if update.p != self.p {
                 return Err(Error::invalid(format!(
                     "wire update carries {} params, model has {}",
-                    update.params.len(),
-                    self.p
+                    update.p, self.p
                 )));
             }
-            // Mask-target reconstruction: the wire carries the masked
-            // vector; under Delta semantics the dropped coordinates revert
-            // to the broadcast values the client trained from.
-            let dense = match self.cfg.mask_target {
-                MaskTarget::Weights => update.params,
-                MaskTarget::Delta => crate::fl::masking::apply_delta_target(
-                    &update.params,
-                    &broadcast,
-                    &self.layers,
-                ),
-            };
-            agg.fold(Contribution {
-                client: expect,
-                params: &dense,
-                n_samples: update.n_samples,
-            })?;
+            match update.body {
+                BodyView::Dense(params) => agg.fold(Contribution {
+                    client: expect,
+                    params,
+                    n_samples: update.n_samples,
+                })?,
+                BodyView::Sparse { indices, values } => agg.fold_sparse(SparseContribution {
+                    client: expect,
+                    p: update.p,
+                    indices,
+                    values,
+                    n_samples: update.n_samples,
+                })?,
+            }
             metas[idx] = Some((outcome.train_loss, outcome.nnz, outcome.payload.len()));
         }
         if agg.folded() < n_jobs {

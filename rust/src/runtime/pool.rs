@@ -7,6 +7,13 @@
 //! round fans out across workers; results come back over per-job reply
 //! channels.
 //!
+//! Each worker also owns a [`WorkerScratch`] — reusable buffers (masking
+//! arena, wire-encode temporaries) that live as long as the worker thread,
+//! so steady-state rounds stop allocating per client job. Scratch-aware
+//! jobs receive it via [`EnginePool::map_unordered_with`]; the plain
+//! `submit`/`map`/`map_unordered` entry points keep the engine-only
+//! signature for callers that don't need it.
+//!
 //! Compilation cost is paid once per worker at startup; the figure drivers
 //! amortize it over hundreds of rounds.
 
@@ -14,11 +21,23 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::fl::masking::MaskScratch;
 use crate::runtime::engine::Engine;
 use crate::runtime::manifest::Manifest;
+use crate::transport::codec::EncodeScratch;
 use crate::util::error::{Error, Result};
 
-type Job = Box<dyn FnOnce(&Engine) + Send + 'static>;
+/// Per-worker reusable buffers, created once per worker thread and threaded
+/// through every scratch-aware job it runs.
+#[derive(Debug, Default)]
+pub struct WorkerScratch {
+    /// Selective-masking arena (per-segment deltas + partition workspace).
+    pub mask: MaskScratch,
+    /// Wire-encode temporaries (q8 value gather).
+    pub encode: EncodeScratch,
+}
+
+type Job = Box<dyn FnOnce(&Engine, &mut WorkerScratch) + Send + 'static>;
 
 /// A pool of engine-owning worker threads.
 pub struct EnginePool {
@@ -54,6 +73,7 @@ impl EnginePool {
                     }
                 };
                 log::debug!("engine pool worker {wid} ready");
+                let mut scratch = WorkerScratch::default();
                 loop {
                     // Hold the lock only while receiving, not while running.
                     let job = match rx.lock() {
@@ -61,7 +81,7 @@ impl EnginePool {
                         Err(_) => break,
                     };
                     match job {
-                        Ok(job) => job(&engine),
+                        Ok(job) => job(&engine, &mut scratch),
                         Err(_) => break, // sender dropped: shutdown
                     }
                 }
@@ -91,7 +111,7 @@ impl EnginePool {
         F: FnOnce(&Engine) -> R + Send + 'static,
     {
         let (tx, rx) = channel();
-        let job: Job = Box::new(move |engine| {
+        let job: Job = Box::new(move |engine, _scratch| {
             let _ = tx.send(f(engine));
         });
         // Send fails only if all workers are gone; surfaced on recv.
@@ -127,11 +147,27 @@ impl EnginePool {
         R: Send + 'static,
         F: FnOnce(&Engine) -> R + Send + 'static,
     {
+        self.map_unordered_with(
+            jobs.into_iter()
+                .map(|f| move |e: &Engine, _s: &mut WorkerScratch| f(e))
+                .collect(),
+        )
+    }
+
+    /// [`Self::map_unordered`] for scratch-aware jobs: each closure also
+    /// receives its worker's long-lived [`WorkerScratch`], so per-job
+    /// buffers (mask arena, encode temporaries) are reused across the whole
+    /// run instead of allocated per client per round.
+    pub fn map_unordered_with<R, F>(&self, jobs: Vec<F>) -> Receiver<(usize, R)>
+    where
+        R: Send + 'static,
+        F: FnOnce(&Engine, &mut WorkerScratch) -> R + Send + 'static,
+    {
         let (tx, rx) = channel();
         for (i, f) in jobs.into_iter().enumerate() {
             let tx = tx.clone();
-            let job: Job = Box::new(move |engine| {
-                let _ = tx.send((i, f(engine)));
+            let job: Job = Box::new(move |engine, scratch| {
+                let _ = tx.send((i, f(engine, scratch)));
             });
             // Send fails only if all workers are gone; the caller observes
             // the shortfall when the result channel closes early.

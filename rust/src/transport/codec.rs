@@ -13,6 +13,27 @@
 //! the header carries (client id, round, sample count) for the aggregator —
 //! `ClientJob::run` encodes, `Server::run_round` decodes and folds, and
 //! nothing else ever sees the raw parameter vector in between.
+//!
+//! ## Sparse-native decoding
+//!
+//! Since the O(nnz) aggregation refactor the decoder no longer densifies:
+//! a sparse body decodes to its `(indices, values)` pairs
+//! ([`DecodedBody::Sparse`] / [`BodyView::Sparse`]) and flows into the
+//! aggregator's sparse fold untouched, so a masked upload costs
+//! O(nnz) — not O(p) — from the first wire byte to the accumulator. Two
+//! entry points:
+//!
+//! * [`decode_update`] — owned [`WireUpdate`]; allocates per call.
+//! * [`decode_update_view`] — borrows a caller-held [`DecodeScratch`], so a
+//!   server decoding a whole cohort (or many rounds) reuses the same
+//!   buffers and steady-state decoding performs no heap allocation.
+//!
+//! Sparse bodies are validated strictly: indices must be in-range **and
+//! strictly increasing** (the encoder always emits them sorted), which
+//! rejects duplicate and shuffled indices that would otherwise make the
+//! fold order-dependent. Byte-to-float conversion is bulk
+//! (`chunks_exact` over the body slice) rather than per-element cursor
+//! reads.
 
 use crate::transport::quantize::{quantize, Quantized};
 use crate::util::error::{Error, Result};
@@ -25,6 +46,10 @@ const TAG_DENSE: u8 = 0;
 const TAG_SPARSE: u8 = 1;
 const TAG_DENSE_Q8: u8 = 2;
 const TAG_SPARSE_Q8: u8 = 3;
+
+/// Fixed header: magic(2) version(1) tag(1) client(4) round(4)
+/// n_samples(4) p(4) count(4).
+const HEADER_BYTES: usize = 24;
 
 /// Chosen wire representation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,32 +65,130 @@ pub enum Encoding {
     AutoQ8,
 }
 
-/// A decoded update message.
+/// A decoded update body, in whichever shape the wire carried it. Sparse
+/// bodies stay sparse — densification is the *aggregator's* decision (and
+/// with the O(nnz) fold it never happens on the server hot path).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DecodedBody {
+    Dense(Vec<f32>),
+    /// Strictly-increasing indices into `[0, p)` paired with their values.
+    Sparse { indices: Vec<u32>, values: Vec<f32> },
+}
+
+/// A decoded update message (owned).
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireUpdate {
     pub client: u32,
     pub round: u32,
     pub n_samples: u32,
-    pub params: Vec<f32>,
+    /// Full model dimension the body addresses into.
+    pub p: usize,
+    pub body: DecodedBody,
+}
+
+impl WireUpdate {
+    /// Non-zero entries actually carried by the body.
+    pub fn nnz(&self) -> usize {
+        match &self.body {
+            DecodedBody::Dense(v) => v.iter().filter(|x| **x != 0.0).count(),
+            DecodedBody::Sparse { indices, .. } => indices.len(),
+        }
+    }
+
+    /// Materialize the full dense vector (O(p)); test/compat convenience —
+    /// the server hot path never calls this.
+    pub fn to_dense(&self) -> Vec<f32> {
+        match &self.body {
+            DecodedBody::Dense(v) => v.clone(),
+            DecodedBody::Sparse { indices, values } => {
+                let mut out = vec![0.0f32; self.p];
+                for (&i, &v) in indices.iter().zip(values) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+        }
+    }
+
+    /// [`Self::to_dense`], consuming: a dense body is moved out, not cloned.
+    pub fn into_dense(self) -> Vec<f32> {
+        let p = self.p;
+        match self.body {
+            DecodedBody::Dense(v) => v,
+            DecodedBody::Sparse { indices, values } => {
+                let mut out = vec![0.0f32; p];
+                for (i, v) in indices.into_iter().zip(values) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+        }
+    }
+}
+
+/// A decoded update body borrowed from a [`DecodeScratch`].
+#[derive(Debug, Clone, Copy)]
+pub enum BodyView<'a> {
+    Dense(&'a [f32]),
+    Sparse { indices: &'a [u32], values: &'a [f32] },
+}
+
+/// A decoded update message borrowing its body from caller-held scratch.
+#[derive(Debug)]
+pub struct WireView<'a> {
+    pub client: u32,
+    pub round: u32,
+    pub n_samples: u32,
+    pub p: usize,
+    pub body: BodyView<'a>,
+}
+
+/// Reusable decode buffers: hold one of these across payloads (the server
+/// holds one across *rounds*) and steady-state decoding allocates nothing.
+#[derive(Debug, Default)]
+pub struct DecodeScratch {
+    dense: Vec<f32>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+/// Reusable encode temporaries (the q8 sparse value gather). The returned
+/// payload itself is an owned message and is allocated per call — it
+/// outlives the encoder by design.
+#[derive(Debug, Default)]
+pub struct EncodeScratch {
+    vals: Vec<f32>,
 }
 
 /// Exact wire size in bytes for a payload with `nnz` non-zeros out of `p`.
 pub fn wire_bytes(p: usize, nnz: usize, enc: Encoding) -> usize {
-    const HEADER: usize = 2 + 1 + 1 + 4 + 4 + 4 + 4 + 4; // magic..len fields
     const QHEADER: usize = 8; // min + scale f32
     match enc {
-        Encoding::Dense => HEADER + 4 * p,
-        Encoding::Sparse => HEADER + 8 * nnz,
+        Encoding::Dense => HEADER_BYTES + 4 * p,
+        Encoding::Sparse => HEADER_BYTES + 8 * nnz,
         Encoding::Auto => {
             wire_bytes(p, nnz, Encoding::Dense).min(wire_bytes(p, nnz, Encoding::Sparse))
         }
-        Encoding::AutoQ8 => (HEADER + QHEADER + p).min(HEADER + QHEADER + 5 * nnz),
+        Encoding::AutoQ8 => (HEADER_BYTES + QHEADER + p).min(HEADER_BYTES + QHEADER + 5 * nnz),
     }
 }
 
 /// Encode an update. `Encoding::Auto` picks the smaller representation;
 /// `AutoQ8` additionally quantizes values to 8 bits (lossy).
 pub fn encode_update(
+    client: u32,
+    round: u32,
+    n_samples: u32,
+    params: &[f32],
+    enc: Encoding,
+) -> Vec<u8> {
+    encode_update_with(&mut EncodeScratch::default(), client, round, n_samples, params, enc)
+}
+
+/// [`encode_update`] with caller-held scratch, so a worker encoding many
+/// uploads reuses its temporaries instead of allocating per update.
+pub fn encode_update_with(
+    scratch: &mut EncodeScratch,
     client: u32,
     round: u32,
     n_samples: u32,
@@ -92,7 +215,7 @@ pub fn encode_update(
             }
         }
     };
-    let mut out = Vec::with_capacity(26 + body_len);
+    let mut out = Vec::with_capacity(HEADER_BYTES + body_len);
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.push(VERSION);
     out.push(tag);
@@ -103,16 +226,22 @@ pub fn encode_update(
     match tag {
         TAG_DENSE => {
             out.extend_from_slice(&(p as u32).to_le_bytes());
-            for &v in params {
-                out.extend_from_slice(&v.to_le_bytes());
+            let start = out.len();
+            out.resize(start + 4 * p, 0);
+            for (slot, v) in out[start..].chunks_exact_mut(4).zip(params) {
+                slot.copy_from_slice(&v.to_le_bytes());
             }
         }
         TAG_SPARSE => {
             out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            let start = out.len();
+            out.resize(start + 8 * nnz, 0);
+            let mut slots = out[start..].chunks_exact_mut(8);
             for (i, &v) in params.iter().enumerate() {
                 if v != 0.0 {
-                    out.extend_from_slice(&(i as u32).to_le_bytes());
-                    out.extend_from_slice(&v.to_le_bytes());
+                    let slot = slots.next().expect("nnz slots");
+                    slot[..4].copy_from_slice(&(i as u32).to_le_bytes());
+                    slot[4..].copy_from_slice(&v.to_le_bytes());
                 }
             }
         }
@@ -130,22 +259,27 @@ pub fn encode_update(
             out.extend_from_slice(&q.codes);
         }
         TAG_SPARSE_Q8 => {
-            let values: Vec<f32> = params.iter().copied().filter(|v| *v != 0.0).collect();
+            scratch.vals.clear();
+            scratch.vals.extend(params.iter().copied().filter(|v| *v != 0.0));
             // quantizing an empty value set: degenerate but legal (all-zero
             // upload) — emit a zero-range quantizer
-            let q = if values.is_empty() {
+            let q = if scratch.vals.is_empty() {
                 Quantized { min: 0.0, scale: 0.0, codes: vec![] }
             } else {
-                quantize(&values).expect("finite params")
+                quantize(&scratch.vals).expect("finite params")
             };
             out.extend_from_slice(&(nnz as u32).to_le_bytes());
             out.extend_from_slice(&q.min.to_le_bytes());
             out.extend_from_slice(&q.scale.to_le_bytes());
+            let start = out.len();
+            out.resize(start + 5 * nnz, 0);
+            let mut slots = out[start..].chunks_exact_mut(5);
             let mut k = 0usize;
             for (i, &v) in params.iter().enumerate() {
                 if v != 0.0 {
-                    out.extend_from_slice(&(i as u32).to_le_bytes());
-                    out.push(q.codes[k]);
+                    let slot = slots.next().expect("nnz slots");
+                    slot[..4].copy_from_slice(&(i as u32).to_le_bytes());
+                    slot[4] = q.codes[k];
                     k += 1;
                 }
             }
@@ -163,8 +297,28 @@ fn take<const N: usize>(data: &[u8], at: &mut usize) -> Result<[u8; N]> {
     Ok(slice.try_into().unwrap())
 }
 
-/// Decode an update message produced by [`encode_update`].
-pub fn decode_update(data: &[u8]) -> Result<WireUpdate> {
+/// Grab the `len`-byte body slice at `at`, advancing the cursor.
+fn body<'a>(data: &'a [u8], at: &mut usize, len: usize) -> Result<&'a [u8]> {
+    let slice = data
+        .get(*at..*at + len)
+        .ok_or_else(|| Error::parse("codec: truncated message"))?;
+    *at += len;
+    Ok(slice)
+}
+
+struct Header {
+    client: u32,
+    round: u32,
+    n_samples: u32,
+    p: usize,
+    sparse: bool,
+}
+
+/// Shared decode core: parses `data` into `scratch` (dense body into
+/// `scratch.dense`, sparse body into `scratch.indices`/`scratch.values`)
+/// and returns the header. Sparse indices are required to be in-range and
+/// strictly increasing.
+fn decode_into(data: &[u8], scratch: &mut DecodeScratch) -> Result<Header> {
     let mut at = 0usize;
     let magic = u16::from_le_bytes(take::<2>(data, &mut at)?);
     if magic != MAGIC {
@@ -180,25 +334,38 @@ pub fn decode_update(data: &[u8]) -> Result<WireUpdate> {
     let n_samples = u32::from_le_bytes(take::<4>(data, &mut at)?);
     let p = u32::from_le_bytes(take::<4>(data, &mut at)?) as usize;
     let count = u32::from_le_bytes(take::<4>(data, &mut at)?) as usize;
-    let mut params = vec![0.0f32; p];
-    match tag {
+    scratch.dense.clear();
+    scratch.indices.clear();
+    scratch.values.clear();
+    let sparse = match tag {
         TAG_DENSE => {
             if count != p {
                 return Err(Error::parse("codec: dense count != p"));
             }
-            for slot in params.iter_mut() {
-                *slot = f32::from_le_bytes(take::<4>(data, &mut at)?);
-            }
+            let b = body(data, &mut at, 4 * p)?;
+            scratch.dense.reserve(p);
+            scratch
+                .dense
+                .extend(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+            false
         }
         TAG_SPARSE => {
-            for _ in 0..count {
-                let idx = u32::from_le_bytes(take::<4>(data, &mut at)?) as usize;
-                let val = f32::from_le_bytes(take::<4>(data, &mut at)?);
-                if idx >= p {
-                    return Err(Error::parse(format!("codec: index {idx} >= p {p}")));
-                }
-                params[idx] = val;
+            if count > p {
+                return Err(Error::parse("codec: sparse count > p"));
             }
+            let b = body(data, &mut at, 8 * count)?;
+            scratch.indices.reserve(count);
+            scratch.values.reserve(count);
+            let mut next_min = 0u32;
+            for entry in b.chunks_exact(8) {
+                let idx = u32::from_le_bytes(entry[..4].try_into().unwrap());
+                let val = f32::from_le_bytes(entry[4..].try_into().unwrap());
+                check_sparse_index(idx, next_min, p)?;
+                next_min = idx + 1;
+                scratch.indices.push(idx);
+                scratch.values.push(val);
+            }
+            true
         }
         TAG_DENSE_Q8 => {
             if count != p {
@@ -206,33 +373,101 @@ pub fn decode_update(data: &[u8]) -> Result<WireUpdate> {
             }
             let min = f32::from_le_bytes(take::<4>(data, &mut at)?);
             let scale = f32::from_le_bytes(take::<4>(data, &mut at)?);
-            for slot in params.iter_mut() {
-                let code = take::<1>(data, &mut at)?[0];
-                *slot = min + scale * code as f32;
-            }
+            let codes = body(data, &mut at, p)?;
+            scratch.dense.reserve(p);
+            scratch.dense.extend(codes.iter().map(|&c| min + scale * c as f32));
+            false
         }
         TAG_SPARSE_Q8 => {
+            if count > p {
+                return Err(Error::parse("codec: sparse count > p"));
+            }
             let min = f32::from_le_bytes(take::<4>(data, &mut at)?);
             let scale = f32::from_le_bytes(take::<4>(data, &mut at)?);
-            for _ in 0..count {
-                let idx = u32::from_le_bytes(take::<4>(data, &mut at)?) as usize;
-                let code = take::<1>(data, &mut at)?[0];
-                if idx >= p {
-                    return Err(Error::parse(format!("codec: index {idx} >= p {p}")));
-                }
-                params[idx] = min + scale * code as f32;
+            let b = body(data, &mut at, 5 * count)?;
+            scratch.indices.reserve(count);
+            scratch.values.reserve(count);
+            let mut next_min = 0u32;
+            for entry in b.chunks_exact(5) {
+                let idx = u32::from_le_bytes(entry[..4].try_into().unwrap());
+                check_sparse_index(idx, next_min, p)?;
+                next_min = idx + 1;
+                scratch.indices.push(idx);
+                scratch.values.push(min + scale * entry[4] as f32);
             }
+            true
         }
         other => return Err(Error::parse(format!("codec: unknown tag {other}"))),
-    }
+    };
     if at != data.len() {
         return Err(Error::parse("codec: trailing bytes"));
     }
-    Ok(WireUpdate {
+    Ok(Header {
         client,
         round,
         n_samples,
-        params,
+        p,
+        sparse,
+    })
+}
+
+fn check_sparse_index(idx: u32, next_min: u32, p: usize) -> Result<()> {
+    if idx as usize >= p {
+        return Err(Error::parse(format!("codec: index {idx} >= p {p}")));
+    }
+    if idx < next_min {
+        return Err(Error::parse(format!(
+            "codec: sparse index {idx} duplicate or out of order"
+        )));
+    }
+    Ok(())
+}
+
+/// Decode an update message produced by [`encode_update`] into an owned
+/// [`WireUpdate`]. Sparse bodies stay sparse.
+pub fn decode_update(data: &[u8]) -> Result<WireUpdate> {
+    let mut scratch = DecodeScratch::default();
+    let h = decode_into(data, &mut scratch)?;
+    let body = if h.sparse {
+        DecodedBody::Sparse {
+            indices: std::mem::take(&mut scratch.indices),
+            values: std::mem::take(&mut scratch.values),
+        }
+    } else {
+        DecodedBody::Dense(std::mem::take(&mut scratch.dense))
+    };
+    Ok(WireUpdate {
+        client: h.client,
+        round: h.round,
+        n_samples: h.n_samples,
+        p: h.p,
+        body,
+    })
+}
+
+/// Decode an update into caller-held scratch, returning a borrowed view.
+/// The server's aggregation loop uses this: one [`DecodeScratch`] held
+/// across all payloads of all rounds means zero decode allocations at
+/// steady state.
+pub fn decode_update_view<'a>(
+    data: &[u8],
+    scratch: &'a mut DecodeScratch,
+) -> Result<WireView<'a>> {
+    let h = decode_into(data, scratch)?;
+    let body = if h.sparse {
+        BodyView::Sparse {
+            indices: &scratch.indices,
+            values: &scratch.values,
+        }
+    } else {
+        BodyView::Dense(&scratch.dense)
+    };
+    Ok(WireView {
+        client: h.client,
+        round: h.round,
+        n_samples: h.n_samples,
+        p: h.p,
+        body,
     })
 }
 
@@ -261,19 +496,59 @@ mod tests {
         assert_eq!(u.client, 3);
         assert_eq!(u.round, 7);
         assert_eq!(u.n_samples, 256);
-        assert_eq!(u.params, params);
+        assert_eq!(u.p, 100);
+        assert_eq!(u.body, DecodedBody::Dense(params.clone()));
+        assert_eq!(u.to_dense(), params);
         assert_eq!(bytes.len(), wire_bytes(100, 100, Encoding::Dense));
     }
 
     #[test]
-    fn sparse_roundtrip_preserves_zeros() {
+    fn sparse_roundtrip_preserves_zeros_without_densifying() {
         let mut params = vec![0.0f32; 1000];
         params[13] = 1.5;
         params[999] = -2.25;
         let bytes = encode_update(0, 0, 1, &params, Encoding::Sparse);
         assert_eq!(bytes.len(), wire_bytes(1000, 2, Encoding::Sparse));
         let u = decode_update(&bytes).unwrap();
-        assert_eq!(u.params, params);
+        // the body stays sparse: exactly the two carried entries
+        assert_eq!(
+            u.body,
+            DecodedBody::Sparse {
+                indices: vec![13, 999],
+                values: vec![1.5, -2.25],
+            }
+        );
+        assert_eq!(u.nnz(), 2);
+        assert_eq!(u.to_dense(), params);
+    }
+
+    #[test]
+    fn view_decode_reuses_scratch_and_matches_owned() {
+        let mut scratch = DecodeScratch::default();
+        let mut g = Gen::new(0x5c4a);
+        for _ in 0..20 {
+            let p = g.usize_in(1, 500);
+            let density = g.f32_in(0.0, 1.0);
+            let params = sample_params(&mut g, p, density);
+            for enc in [Encoding::Dense, Encoding::Sparse, Encoding::Auto, Encoding::AutoQ8] {
+                let bytes = encode_update(1, 2, 3, &params, enc);
+                let owned = decode_update(&bytes).unwrap();
+                let view = decode_update_view(&bytes, &mut scratch).unwrap();
+                assert_eq!(view.client, owned.client);
+                assert_eq!(view.p, owned.p);
+                match (&view.body, &owned.body) {
+                    (BodyView::Dense(a), DecodedBody::Dense(b)) => assert_eq!(*a, &b[..]),
+                    (
+                        BodyView::Sparse { indices: ia, values: va },
+                        DecodedBody::Sparse { indices: ib, values: vb },
+                    ) => {
+                        assert_eq!(*ia, &ib[..]);
+                        assert_eq!(*va, &vb[..]);
+                    }
+                    (a, b) => panic!("body shape mismatch: {a:?} vs {b:?}"),
+                }
+            }
+        }
     }
 
     #[test]
@@ -305,6 +580,82 @@ mod tests {
         assert!(decode_update(&bytes).is_err());
     }
 
+    /// Sparse payload with entries at indices 3 and 7 (values 1.0, 2.0) out
+    /// of p = 16; entry i starts at byte HEADER_BYTES + 8 * i.
+    fn two_entry_sparse() -> Vec<u8> {
+        let mut params = vec![0.0f32; 16];
+        params[3] = 1.0;
+        params[7] = 2.0;
+        let bytes = encode_update(0, 0, 1, &params, Encoding::Sparse);
+        assert_eq!(bytes.len(), HEADER_BYTES + 16);
+        bytes
+    }
+
+    #[test]
+    fn sparse_body_rejects_out_of_range_index() {
+        let mut bytes = two_entry_sparse();
+        // overwrite second entry's index with p (= 16): one past the end
+        bytes[HEADER_BYTES + 8..HEADER_BYTES + 12].copy_from_slice(&16u32.to_le_bytes());
+        let err = decode_update(&bytes).unwrap_err().to_string();
+        assert!(err.contains("index 16"), "{err}");
+    }
+
+    #[test]
+    fn sparse_body_rejects_duplicate_index() {
+        let mut bytes = two_entry_sparse();
+        // second entry repeats the first entry's index
+        bytes[HEADER_BYTES + 8..HEADER_BYTES + 12].copy_from_slice(&3u32.to_le_bytes());
+        let err = decode_update(&bytes).unwrap_err().to_string();
+        assert!(err.contains("duplicate or out of order"), "{err}");
+    }
+
+    #[test]
+    fn sparse_body_rejects_unsorted_indices() {
+        let mut bytes = two_entry_sparse();
+        // swap the two entries: indices arrive as 7, 3
+        let (a, b) = (HEADER_BYTES, HEADER_BYTES + 8);
+        let mut entry = [0u8; 8];
+        entry.copy_from_slice(&bytes[a..a + 8]);
+        bytes.copy_within(b..b + 8, a);
+        bytes[b..b + 8].copy_from_slice(&entry);
+        let err = decode_update(&bytes).unwrap_err().to_string();
+        assert!(err.contains("duplicate or out of order"), "{err}");
+    }
+
+    #[test]
+    fn sparse_body_rejects_truncated_value() {
+        let mut bytes = two_entry_sparse();
+        // cut the last entry's value in half
+        bytes.truncate(bytes.len() - 2);
+        assert!(decode_update(&bytes).is_err());
+        // and a count that promises more entries than the body carries
+        let mut bytes = two_entry_sparse();
+        bytes[20..24].copy_from_slice(&3u32.to_le_bytes());
+        assert!(decode_update(&bytes).is_err());
+    }
+
+    #[test]
+    fn sparse_q8_body_rejects_malformed_indices() {
+        let mut params = vec![0.0f32; 64];
+        params[10] = 1.0;
+        params[20] = 2.0;
+        let good = encode_update(0, 0, 1, &params, Encoding::AutoQ8);
+        // q8 sparse body: count(4) + min(4) + scale(4), then 5-byte entries
+        let entries = HEADER_BYTES + 8;
+        // duplicate index
+        let mut bytes = good.clone();
+        bytes[entries + 5..entries + 9].copy_from_slice(&10u32.to_le_bytes());
+        assert!(decode_update(&bytes).is_err());
+        // out-of-range index
+        let mut bytes = good.clone();
+        bytes[entries + 5..entries + 9].copy_from_slice(&64u32.to_le_bytes());
+        assert!(decode_update(&bytes).is_err());
+        // truncated value byte
+        let mut bytes = good;
+        bytes.truncate(bytes.len() - 1);
+        assert!(decode_update(&bytes).is_err());
+    }
+
     #[test]
     fn prop_roundtrip_all_densities() {
         check("codec roundtrip", 100, |g| {
@@ -314,7 +665,7 @@ mod tests {
             for enc in [Encoding::Dense, Encoding::Sparse, Encoding::Auto] {
                 let bytes = encode_update(1, 2, 3, &params, enc);
                 let u = decode_update(&bytes).unwrap();
-                assert_eq!(u.params, params, "enc {enc:?} seed {:#x}", g.seed);
+                assert_eq!(u.to_dense(), params, "enc {enc:?} seed {:#x}", g.seed);
             }
         });
     }
@@ -327,8 +678,9 @@ mod tests {
         // q8 dense is ~4x smaller than f32 dense
         assert!(bytes.len() * 3 < wire_bytes(500, 500, Encoding::Dense));
         let u = decode_update(&bytes).unwrap();
+        let dense = u.to_dense();
         let step = (params[499] - params[0]) / 255.0;
-        for (a, b) in params.iter().zip(&u.params) {
+        for (a, b) in params.iter().zip(&dense) {
             assert!((a - b).abs() <= step * 0.5 + 1e-6);
         }
     }
@@ -344,11 +696,12 @@ mod tests {
         // sparse-q8 is 5 bytes/entry vs 8 for sparse-f32
         assert!(bytes.len() < wire_bytes(10_000, 100, Encoding::Sparse));
         let u = decode_update(&bytes).unwrap();
+        let dense = u.to_dense();
         // zeros preserved exactly; values within half a step
         let vmax = params.iter().cloned().fold(0.0f32, f32::max);
         let vmin = params.iter().cloned().filter(|v| *v != 0.0).fold(f32::INFINITY, f32::min);
         let step = (vmax - vmin) / 255.0;
-        for (a, b) in params.iter().zip(&u.params) {
+        for (a, b) in params.iter().zip(&dense) {
             if *a == 0.0 {
                 assert_eq!(*b, 0.0);
             } else {
@@ -361,7 +714,8 @@ mod tests {
     fn q8_all_zero_upload_is_legal() {
         let params = vec![0.0f32; 64];
         let u = decode_update(&encode_update(0, 0, 1, &params, Encoding::AutoQ8)).unwrap();
-        assert_eq!(u.params, params);
+        assert_eq!(u.to_dense(), params);
+        assert_eq!(u.nnz(), 0);
     }
 
     #[test]

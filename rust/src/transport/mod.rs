@@ -8,10 +8,13 @@
 //!   quantized per the experiment's `encoding`); with `downlink_delta`,
 //!   `fl::server::Server` also encodes the broadcast as a delta against
 //!   the previous round's global model.
-//! * **Who decodes** — the server, once per arriving payload, before
-//!   folding it into the round's `fl::aggregate::Aggregator` (and each
-//!   client conceptually decodes the broadcast, modeled server-side).
-//!   No dense `Vec<f32>` crosses the client->server boundary.
+//! * **Who decodes** — the server, once per arriving payload, into a
+//!   borrowed sparse/dense view over a scratch buffer it holds across
+//!   rounds ([`codec::decode_update_view`]), before folding it into the
+//!   round's `fl::aggregate::Aggregator` — sparse bodies are never
+//!   densified (and each client conceptually decodes the broadcast,
+//!   modeled server-side). No dense `Vec<f32>` crosses the
+//!   client->server boundary.
 //! * **Where bytes are accounted** — the server records
 //!   `payload.len()` per upload and per-broadcast bytes in
 //!   [`cost::CostLedger`] (`record_upload` / `record_download_sparse`);
@@ -36,6 +39,9 @@ pub mod cost;
 pub mod network;
 pub mod quantize;
 
-pub use codec::{decode_update, encode_update, Encoding, WireUpdate};
+pub use codec::{
+    decode_update, decode_update_view, encode_update, encode_update_with, BodyView, DecodeScratch,
+    DecodedBody, EncodeScratch, Encoding, WireUpdate, WireView,
+};
 pub use cost::{eq6_cost, CostLedger};
 pub use network::NetworkModel;

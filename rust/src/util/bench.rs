@@ -5,8 +5,15 @@
 //! budget is spent, and reports median / p10 / p90 per-iteration time plus
 //! derived throughput. Output is stable, one line per benchmark, so bench
 //! logs diff cleanly across optimization iterations (EXPERIMENTS.md §Perf).
+//!
+//! Besides the human-readable lines, [`Bench::write_json`] emits the same
+//! measurements machine-readably: each bench target writes a
+//! `BENCH_<name>.json` trajectory file at the repo root so successive PRs
+//! have a perf baseline to diff against.
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
@@ -38,6 +45,18 @@ impl Measurement {
             "{:<44} {:>10} iters  median {:>12?}  p10 {:>12?}  p90 {:>12?}{}",
             self.name, self.iters, self.median, self.p10, self.p90, thr
         )
+    }
+
+    /// Machine-readable form (nanosecond durations; object keys sorted by
+    /// the JSON writer, so emitted files diff cleanly).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("median_ns", Json::num(self.median.as_secs_f64() * 1e9)),
+            ("p10_ns", Json::num(self.p10.as_secs_f64() * 1e9)),
+            ("p90_ns", Json::num(self.p90.as_secs_f64() * 1e9)),
+        ])
     }
 }
 
@@ -110,6 +129,43 @@ impl Bench {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// Write the `BENCH_<file_name>` trajectory at the repo root — the
+    /// committed perf baseline later PRs diff against. Skipped on smoke
+    /// runs (`FEDMASK_BENCH_MS` set) so a quick low-budget pass cannot
+    /// clobber the baseline; `FEDMASK_BENCH_JSON=1` forces the write.
+    pub fn write_trajectory(&self, file_name: &str) {
+        let smoke = std::env::var_os("FEDMASK_BENCH_MS").is_some();
+        let forced = std::env::var_os("FEDMASK_BENCH_JSON").is_some();
+        if smoke && !forced {
+            println!(
+                "(smoke budget: not writing {file_name}; set FEDMASK_BENCH_JSON=1 to force)"
+            );
+            return;
+        }
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join(file_name);
+        match self.write_json(&path) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("could not write {}: {e}", path.display()),
+        }
+    }
+
+    /// Write every accumulated measurement as a JSON trajectory file. The
+    /// budget rides along so a quick `FEDMASK_BENCH_MS=50` smoke file is
+    /// distinguishable from a full run.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let doc = Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("budget_ms", Json::num(self.budget.as_millis() as f64)),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|m| m.to_json()).collect()),
+            ),
+        ]);
+        std::fs::write(path, doc.to_pretty())
+    }
 }
 
 #[cfg(test)]
@@ -139,5 +195,22 @@ mod tests {
         let line = b.results()[0].report(Some((1e6, "items")));
         assert!(line.contains("fmt"));
         assert!(line.contains("items/s"));
+    }
+
+    #[test]
+    fn json_trajectory_roundtrips() {
+        std::env::set_var("FEDMASK_BENCH_MS", "10");
+        let mut b = Bench::new();
+        b.run("alpha", || 1 + 1);
+        b.run("beta", || 2 + 2);
+        let path = std::env::temp_dir().join(format!("fedmask_bench_{}.json", std::process::id()));
+        b.write_json(&path).unwrap();
+        let doc = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "alpha");
+        assert!(results[0].get("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(doc.get("budget_ms").unwrap().as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -7,13 +7,15 @@
 use std::sync::Arc;
 
 use fedmask::config::experiment::ExperimentConfig;
-use fedmask::fl::aggregate::{weighted_mean, Aggregator, Contribution, StreamingFedAvg};
+use fedmask::fl::aggregate::{
+    weighted_mean, Aggregator, Contribution, SparseContribution, StreamingFedAvg,
+};
 use fedmask::fl::masking::MaskPolicy;
 use fedmask::fl::sampling::SamplingSchedule;
 use fedmask::fl::server::Server;
 use fedmask::runtime::manifest::Manifest;
 use fedmask::runtime::pool::EnginePool;
-use fedmask::transport::codec::{decode_update, encode_update, Encoding};
+use fedmask::transport::codec::{decode_update, encode_update, DecodedBody, Encoding};
 
 fn manifest() -> Option<Manifest> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -164,14 +166,16 @@ fn streamed_fedavg_from_wire_payloads_is_bitwise_identical_to_barrier() {
         .map(|(c, (v, &w))| encode_update(c as u32, 1, w, v, Encoding::Auto))
         .collect();
     let decoded: Vec<_> = payloads.iter().map(|b| decode_update(b).unwrap()).collect();
-    for (u, v) in decoded.iter().zip(&dense_updates) {
-        assert_eq!(&u.params, v, "lossless codec must hand back the update");
+    let densified: Vec<Vec<f32>> = decoded.iter().map(|u| u.to_dense()).collect();
+    for (d, v) in densified.iter().zip(&dense_updates) {
+        assert_eq!(d, v, "lossless codec must hand back the update");
     }
     let contribs: Vec<Contribution> = decoded
         .iter()
-        .map(|u| Contribution {
+        .zip(&densified)
+        .map(|(u, d)| Contribution {
             client: u.client as usize,
-            params: &u.params,
+            params: d,
             n_samples: u.n_samples,
         })
         .collect();
@@ -191,6 +195,32 @@ fn streamed_fedavg_from_wire_payloads_is_bitwise_identical_to_barrier() {
             "arrival order {order:?} changed the aggregate"
         );
     }
+
+    // The sparse-native fold (wire bodies folded without densification —
+    // the server's actual hot path) lands on exactly the same bits.
+    let mut agg = StreamingFedAvg::new(p);
+    for u in &decoded {
+        match &u.body {
+            DecodedBody::Sparse { indices, values } => agg
+                .fold_sparse(SparseContribution {
+                    client: u.client as usize,
+                    p,
+                    indices,
+                    values,
+                    n_samples: u.n_samples,
+                })
+                .unwrap(),
+            DecodedBody::Dense(d) => agg
+                .fold(Contribution {
+                    client: u.client as usize,
+                    params: d,
+                    n_samples: u.n_samples,
+                })
+                .unwrap(),
+        }
+    }
+    let sparse_native = Box::new(agg).finish().unwrap();
+    assert_eq!(sparse_native, barrier, "sparse fold changed the aggregate");
 }
 
 #[test]

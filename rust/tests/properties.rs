@@ -6,11 +6,13 @@
 //! present — agreement between the L1 Pallas mask kernel and the exact
 //! rust oracle.
 
-use fedmask::fl::aggregate::{weighted_mean, Aggregator, Contribution, StreamingFedAvg};
-use fedmask::fl::masking::{self, MaskScope};
+use fedmask::fl::aggregate::{
+    weighted_mean, Aggregator, Contribution, SparseContribution, StreamingFedAvg,
+};
+use fedmask::fl::masking::{self, MaskScope, MaskTarget};
 use fedmask::fl::sampling::SamplingSchedule;
 use fedmask::runtime::manifest::{LayerInfo, Manifest};
-use fedmask::transport::codec::{decode_update, encode_update, Encoding};
+use fedmask::transport::codec::{decode_update, encode_update, DecodedBody, Encoding};
 use fedmask::transport::cost::eq6_cost;
 use fedmask::util::prop::{check, Gen};
 
@@ -67,7 +69,7 @@ fn prop_masked_vector_roundtrips_and_is_cheaper() {
         let sparse = encode_update(0, 0, 1, &masked, Encoding::Auto);
         assert!(sparse.len() < dense_bytes, "gamma<0.5 must ship sparse");
         let back = decode_update(&sparse).unwrap();
-        assert_eq!(back.params, masked);
+        assert_eq!(back.to_dense(), masked);
     });
 }
 
@@ -95,14 +97,15 @@ fn prop_codec_roundtrips_all_encodings_including_degenerate_sizes() {
             assert_eq!(u.client, 9);
             assert_eq!(u.round, 4);
             assert_eq!(u.n_samples, 77);
-            assert_eq!(u.params, params, "enc {enc:?} p {p} seed {:#x}", g.seed);
+            assert_eq!(u.to_dense(), params, "enc {enc:?} p {p} seed {:#x}", g.seed);
         }
         // q8 is lossy: lengths and headers exact, values within half a
         // quantization step of a [-2, 2] value range
         let u = decode_update(&encode_update(9, 4, 77, &params, Encoding::AutoQ8)).unwrap();
-        assert_eq!(u.params.len(), p);
+        assert_eq!(u.p, p);
+        let dense = u.to_dense();
         let half_step = 0.5 * 4.0 / 255.0 + 1e-6;
-        for (a, b) in params.iter().zip(&u.params) {
+        for (a, b) in params.iter().zip(&dense) {
             assert!(
                 (a - b).abs() <= half_step,
                 "q8 p {p} err {} seed {:#x}",
@@ -140,6 +143,124 @@ fn prop_streamed_fold_matches_barrier_in_any_arrival_order() {
         }
         let streamed = Box::new(agg).finish().unwrap();
         assert_eq!(streamed, barrier, "order {order:?} seed {:#x}", g.seed);
+    });
+}
+
+/// Tentpole acceptance: for every encoding (incl. lossy q8) and both mask
+/// targets, folding the wire bodies sparsely (O(nnz), no densification) is
+/// **bitwise** identical to folding their densified forms — including
+/// empty (p = 0) and all-zero payloads. Under `Delta` the aggregate must
+/// also agree (to f32 noise) with the explicit reconstruct-then-average
+/// reference the server used to compute per contribution.
+#[test]
+fn prop_sparse_fold_bitwise_equals_dense_fold_for_both_mask_targets() {
+    check("sparse fold == dense fold, both targets", 80, |g| {
+        let p = match g.usize_in(0, 9) {
+            0 => 0,
+            1 => 1,
+            _ => g.usize_in(2, 600),
+        };
+        // two layers: the first masked, the second not (biases stay dense)
+        let split = if p == 0 { 0 } else { g.usize_in(0, p) };
+        let layers = vec![
+            LayerInfo {
+                name: "w".into(),
+                shape: vec![split],
+                offset: 0,
+                size: split,
+                masked: true,
+            },
+            LayerInfo {
+                name: "b".into(),
+                shape: vec![p - split],
+                offset: split,
+                size: p - split,
+                masked: false,
+            },
+        ];
+        let broadcast: Vec<f32> = (0..p).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let k = g.usize_in(1, 6);
+        let clients: Vec<(Vec<f32>, u32)> = (0..k)
+            .map(|_| {
+                // occasionally a fully-masked (all-zero) upload
+                let density = match g.usize_in(0, 4) {
+                    0 => 0.0,
+                    _ => g.f32_in(0.05, 0.7),
+                };
+                let v: Vec<f32> = (0..p)
+                    .map(|_| {
+                        if g.f32_in(0.0, 1.0) < density {
+                            g.f32_in(-1.5, 1.5)
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                (v, g.usize_in(1, 500) as u32)
+            })
+            .collect();
+        for enc in [Encoding::Dense, Encoding::Sparse, Encoding::Auto, Encoding::AutoQ8] {
+            for target in [MaskTarget::Weights, MaskTarget::Delta] {
+                let mut make = || -> StreamingFedAvg {
+                    match target {
+                        MaskTarget::Weights => StreamingFedAvg::new(p),
+                        MaskTarget::Delta => {
+                            StreamingFedAvg::with_delta_baseline(&broadcast, &layers).unwrap()
+                        }
+                    }
+                };
+                let mut dense_agg = make();
+                let mut sparse_agg = make();
+                let mut recons: Vec<Vec<f32>> = Vec::new();
+                for (i, (v, w)) in clients.iter().enumerate() {
+                    let u = decode_update(&encode_update(i as u32, 1, *w, v, enc)).unwrap();
+                    let dense = u.to_dense();
+                    dense_agg
+                        .fold(Contribution { client: i, params: &dense, n_samples: *w })
+                        .unwrap();
+                    match &u.body {
+                        DecodedBody::Dense(d) => sparse_agg
+                            .fold(Contribution { client: i, params: d, n_samples: *w })
+                            .unwrap(),
+                        DecodedBody::Sparse { indices, values } => sparse_agg
+                            .fold_sparse(SparseContribution {
+                                client: i,
+                                p,
+                                indices,
+                                values,
+                                n_samples: *w,
+                            })
+                            .unwrap(),
+                    }
+                    recons.push(match target {
+                        MaskTarget::Weights => dense,
+                        MaskTarget::Delta => {
+                            masking::apply_delta_target(&dense, &broadcast, &layers)
+                        }
+                    });
+                }
+                let a = Box::new(dense_agg).finish().unwrap();
+                let b = Box::new(sparse_agg).finish().unwrap();
+                assert_eq!(a, b, "enc {enc:?} target {target:?} seed {:#x}", g.seed);
+                // semantic reference: reconstruct densely per client, then
+                // plain weighted mean (bit-identity is not expected here —
+                // the baseline term rounds once, not per client)
+                let contribs: Vec<Contribution> = recons
+                    .iter()
+                    .zip(&clients)
+                    .enumerate()
+                    .map(|(i, (r, (_, w)))| Contribution { client: i, params: r, n_samples: *w })
+                    .collect();
+                let reference = weighted_mean(&contribs).unwrap();
+                for (x, y) in a.iter().zip(&reference) {
+                    assert!(
+                        (x - y).abs() <= 1e-5,
+                        "enc {enc:?} target {target:?}: {x} vs reference {y} (seed {:#x})",
+                        g.seed
+                    );
+                }
+            }
+        }
     });
 }
 

@@ -12,6 +12,7 @@ use crate::data::partition::Scheme;
 use crate::fl::masking::{MaskPolicy, MaskTarget};
 use crate::fl::sampling::SamplingSchedule;
 use crate::transport::codec::Encoding;
+use crate::transport::link::TransportKind;
 use crate::util::error::{Error, Result};
 use crate::util::json::{self, Json};
 
@@ -77,6 +78,10 @@ pub struct ExperimentConfig {
     pub network: NetworkKind,
     /// Wire encoding for uploads.
     pub encoding: Encoding,
+    /// Which wire uploads travel: in-process channels (default), framed
+    /// TCP on localhost, or a unix-domain socket. The aggregate is bitwise
+    /// identical on every transport; sockets add real I/O and framing.
+    pub transport: TransportKind,
     /// Delta-encode the downlink broadcast against the previous round's
     /// global model through the same codec (sparse when masked cohorts
     /// leave most coordinates untouched). Off by default: the reconstructed
@@ -126,6 +131,7 @@ impl ExperimentConfig {
             straggler_prob: 0.0,
             network: NetworkKind::Ideal,
             encoding: Encoding::Auto,
+            transport: TransportKind::InProcess,
             downlink_delta: false,
             aggregator: AggregatorKind::FedAvg,
             workers: default_workers(),
@@ -245,6 +251,7 @@ impl ExperimentConfig {
                     Encoding::AutoQ8 => "auto-q8",
                 }),
             ),
+            ("transport", Json::str(self.transport.as_str())),
             ("downlink_delta", Json::Bool(self.downlink_delta)),
             (
                 "aggregator",
@@ -328,6 +335,10 @@ impl ExperimentConfig {
             Some("auto-q8") => Encoding::AutoQ8,
             Some(other) => return Err(Error::invalid(format!("bad encoding '{other}'"))),
         };
+        cfg.transport = match root.opt("transport").map(|v| v.as_str()).transpose()? {
+            None => TransportKind::InProcess,
+            Some(s) => TransportKind::parse(s)?,
+        };
         cfg.downlink_delta = match root.opt("downlink_delta") {
             Some(v) => v.as_bool()?,
             None => false,
@@ -393,6 +404,7 @@ mod tests {
         cfg.partition = Scheme::NonIidShards { shards_per_client: 2 };
         cfg.rounds = 50;
         cfg.network = NetworkKind::Simulated;
+        cfg.transport = TransportKind::Uds;
         cfg.downlink_delta = true;
         cfg.aggregator = AggregatorKind::Attentive { temp: 0.5 };
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
@@ -403,8 +415,23 @@ mod tests {
         assert_eq!(back.partition, cfg.partition);
         assert_eq!(back.rounds, 50);
         assert_eq!(back.network, NetworkKind::Simulated);
+        assert_eq!(back.transport, TransportKind::Uds);
         assert!(back.downlink_delta);
         assert_eq!(back.aggregator, AggregatorKind::Attentive { temp: 0.5 });
+    }
+
+    #[test]
+    fn transport_defaults_to_in_process_and_rejects_junk() {
+        let root = json::parse(r#"{"model": "lenet"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&root).unwrap();
+        assert_eq!(cfg.transport, TransportKind::InProcess);
+        let root = json::parse(r#"{"model": "lenet", "transport": "tcp"}"#).unwrap();
+        assert_eq!(
+            ExperimentConfig::from_json(&root).unwrap().transport,
+            TransportKind::Tcp
+        );
+        let root = json::parse(r#"{"model": "lenet", "transport": "avian"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&root).is_err());
     }
 
     #[test]

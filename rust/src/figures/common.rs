@@ -8,6 +8,7 @@ use crate::fl::server::{Server, ServerOutcome};
 use crate::metrics::csv::Table;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::pool::EnginePool;
+use crate::transport::link::TransportKind;
 use crate::util::cli::{Args, OptSpec};
 use crate::util::error::Result;
 
@@ -19,6 +20,7 @@ pub const FIGURE_OPTS: &[OptSpec] = &[
     OptSpec::value("seed", "experiment seed (default 42)"),
     OptSpec::value("workers", "engine pool width"),
     OptSpec::value("artifacts", "artifacts directory (default ./artifacts)"),
+    OptSpec::value("transport", "upload wire: inproc|tcp|uds (default inproc)"),
     OptSpec::flag("paper-scale", "paper-size datasets (60k MNIST etc.)"),
     OptSpec::flag("quick", "coarser sweeps for a fast smoke run"),
 ];
@@ -31,6 +33,9 @@ pub struct FigureCtx {
     pub clients: Option<usize>,
     pub seed: u64,
     pub workers: Option<usize>,
+    /// Upload transport override (`--transport tcp` reruns a whole sweep
+    /// over real sockets; results are bitwise identical by construction).
+    pub transport: Option<TransportKind>,
     pub paper_scale: bool,
     pub quick: bool,
 }
@@ -55,6 +60,7 @@ impl FigureCtx {
                 .map(|s| s.parse())
                 .transpose()
                 .map_err(|_| crate::Error::invalid("--workers must be an integer"))?,
+            transport: args.get("transport").map(TransportKind::parse).transpose()?,
             paper_scale: args.has_flag("paper-scale"),
             quick: args.has_flag("quick"),
         })
@@ -70,6 +76,9 @@ impl FigureCtx {
         }
         if let Some(w) = self.workers {
             cfg.workers = w;
+        }
+        if let Some(tr) = self.transport {
+            cfg.transport = tr;
         }
         cfg.seed = self.seed;
         if self.paper_scale {

@@ -39,14 +39,19 @@ impl ShardRef {
 }
 
 /// What a client sends back to the server: the encoded wire message plus
-/// sideband metadata that never crosses the (simulated) network.
+/// sideband metadata that never crosses the network.
 ///
 /// Since the transport refactor the dense parameter vector is gone from the
 /// client->server path — `payload` (an encoded
 /// [`crate::transport::codec::WireUpdate`]: header + masked sparse / dense /
 /// quantized body) is the only carrier of the update, and the server
 /// decodes it before aggregating. The FedAvg weight n_i rides in the wire
-/// header, exactly like a real deployment.
+/// header, exactly like a real deployment. The server-side job wrapper
+/// ships `payload` through the round's
+/// [`UploadSink`](crate::transport::link::UploadSink) — an in-process
+/// channel by default, a framed TCP/UDS socket under `--transport tcp|uds`
+/// — so under a socket transport these bytes genuinely cross a kernel
+/// socket before the server sees them.
 #[derive(Debug, Clone)]
 pub struct LocalOutcome {
     pub client: usize,

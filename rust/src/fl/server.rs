@@ -5,12 +5,21 @@
 //! model (dense, or delta-encoded through the codec when
 //! `downlink_delta` is set), fan client jobs out over the engine pool,
 //! then **stream** aggregation: each client's encoded `WireUpdate` payload
-//! is decoded into a borrowed sparse/dense view (one [`DecodeScratch`]
+//! travels through the configured
+//! [`Transport`](crate::transport::link::Transport) — in-process channels
+//! by default, framed TCP/UDS sockets under `--transport tcp|uds` — and is
+//! decoded into a borrowed sparse/dense view (one [`DecodeScratch`]
 //! held across rounds — no decode allocation at steady state) and folded
 //! into the configured
 //! [`Aggregator`](crate::fl::aggregate::Aggregator) the moment it lands,
 //! in completion order — aggregation overlaps with the slowest clients'
-//! compute instead of barriering on the cohort. Sparse payloads fold in
+//! compute instead of barriering on the cohort (except under
+//! `network = "simulated"`, whose delivery-order modeling inherently
+//! buffers the round's uploads before the first fold — see
+//! [`Simulated`](crate::transport::link::Simulated)). Wire updates are matched
+//! to the cohort by their own header (selected client, current round,
+//! model dimension, no duplicates), so out-of-order socket delivery is
+//! fine. Sparse payloads fold in
 //! O(nnz); mask-target reconstruction is the aggregator's job now (the
 //! delta baseline folds once at finish), so the server's per-round cost is
 //! O(sum_i nnz_i + p) — the only O(p) passes are aggregator construction
@@ -25,6 +34,7 @@
 //! arrival order.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::config::experiment::{ExperimentConfig, NetworkKind};
 use crate::data::{batcher, loader, partition, Dataset};
@@ -42,11 +52,40 @@ use crate::transport::codec::{
     decode_update, decode_update_view, encode_update, wire_bytes, BodyView, DecodeScratch, Encoding,
 };
 use crate::transport::cost::CostLedger;
+use crate::transport::link::{InProcess, Simulated, Transport, TransportKind, UploadSink};
 use crate::transport::network::NetworkModel;
+use crate::transport::socket::Loopback;
 use crate::util::error::{Error, Result};
 
 /// Sentinel "client" id in downlink broadcast headers.
 const BROADCAST_SENDER: u32 = u32::MAX;
+
+/// Per-round budget of dropped invalid uploads. Under a socket transport
+/// the listener is an open local port, so a stray peer can deliver a
+/// well-framed message whose *payload* fails decode or cohort validation;
+/// those cost the round nothing (mirroring the framing layer's
+/// per-connection drops) — but a garbage firehose must not stall the
+/// aggregation loop forever.
+const MAX_REJECTED_UPLOADS: usize = 64;
+
+/// Account one rejected (well-framed but invalid) upload, erroring once
+/// the per-round budget is exhausted. On a closed wire (`tolerate` false —
+/// in-process channels carry only our own cohort's payloads) an invalid
+/// upload can only be an internal bug, so it fails the round precisely and
+/// immediately instead of being dropped.
+fn reject_upload(rejected: &mut usize, tolerate: bool, why: impl std::fmt::Display) -> Result<()> {
+    if !tolerate {
+        return Err(Error::invalid(format!("invalid upload: {why}")));
+    }
+    *rejected += 1;
+    log::warn!("transport: dropping invalid upload ({why})");
+    if *rejected > MAX_REJECTED_UPLOADS {
+        return Err(Error::transport(format!(
+            "dropped {rejected} invalid uploads this round; giving up"
+        )));
+    }
+    Ok(())
+}
 
 /// Per-client downlink cost of one round's broadcast.
 struct BroadcastWire {
@@ -93,6 +132,10 @@ pub struct Server {
     /// Reusable decode buffers for the streaming aggregation loop — held
     /// across rounds so steady-state decoding never allocates.
     decode_scratch: DecodeScratch,
+    /// The wire uploads travel: in-process channels, framed TCP/UDS
+    /// sockets, or either wrapped in `NetworkModel`-timed delivery. Held
+    /// for the server's lifetime (socket listeners bind once).
+    transport: Box<dyn Transport>,
 }
 
 impl Server {
@@ -155,6 +198,18 @@ impl Server {
             NetworkKind::Ideal => NetworkModel::ideal(),
             NetworkKind::Simulated => NetworkModel::default(),
         };
+        // Upload carrier: channels by default, real framed sockets on
+        // request; a simulated network additionally re-orders deliveries
+        // by virtual upload time. The aggregate is transport-invariant.
+        let base: Box<dyn Transport> = match cfg.transport {
+            TransportKind::InProcess => Box::new(InProcess::new()),
+            TransportKind::Tcp | TransportKind::Uds => Box::new(Loopback::bind(cfg.transport)?),
+        };
+        let transport: Box<dyn Transport> = match cfg.network {
+            NetworkKind::Ideal => base,
+            NetworkKind::Simulated => Box::new(Simulated::new(base, network.clone())),
+        };
+        log::debug!("[{}] uploads travel via {}", cfg.label, transport.label());
         let recorder = RunRecorder::new(cfg.label.clone());
         let cfg_clients = cfg.clients;
 
@@ -175,6 +230,7 @@ impl Server {
             network,
             recorder,
             decode_scratch: DecodeScratch::default(),
+            transport,
         })
     }
 
@@ -317,7 +373,11 @@ impl Server {
         }
 
         // Fan out local training. Jobs are scratch-aware: each worker's
-        // long-lived buffers back the masking + encode temporaries.
+        // long-lived buffers back the masking + encode temporaries. The
+        // encoded payload leaves through the round's transport sink the
+        // moment it exists; only sideband metadata (loss, nnz, byte count)
+        // returns through the pool channel.
+        let sink = self.transport.sink();
         let jobs: Vec<_> = selected
             .iter()
             .map(|&cid| {
@@ -329,53 +389,124 @@ impl Server {
                     global: Arc::clone(&broadcast),
                     cfg: Arc::clone(&self.cfg),
                 };
+                let sink = Arc::clone(&sink);
                 move |e: &crate::runtime::engine::Engine,
-                      s: &mut crate::runtime::pool::WorkerScratch| job.run(e, s)
+                      s: &mut crate::runtime::pool::WorkerScratch|
+                      -> Result<(f32, usize, usize)> {
+                    let outcome = job.run(e, s)?;
+                    let bytes = outcome.payload.len();
+                    sink.send(outcome.payload)?;
+                    Ok((outcome.train_loss, outcome.nnz, bytes))
+                }
             })
             .collect();
 
-        // Streaming aggregation: decode each encoded payload into a
-        // borrowed view (sparse bodies stay sparse) and fold it in
-        // completion order, while the remaining clients are still training.
-        // The aggregator owns mask-target reconstruction, so a sparse
-        // payload costs O(nnz) here — no densify, no O(p) copy.
+        // Streaming aggregation: each completed job has already pushed its
+        // payload into the transport, so for every metadata arrival we pull
+        // one payload off the wire, decode it into a borrowed view (sparse
+        // bodies stay sparse) and fold it — still overlapping the slowest
+        // clients' compute. Payload and metadata arrival orders may differ
+        // (sockets deliver in connection order, the simulated network in
+        // upload-time order), so each wire update is matched to the cohort
+        // by its own header: it must name a selected client, this round,
+        // the right dimension, and no client may upload twice.
         // Metadata for cost/metric accounting is parked per input index so
         // the ledger and logs stay in deterministic client-id order.
         let n_jobs = jobs.len();
+        self.transport.begin_round(n_jobs);
         let mut agg =
             make_aggregator(self.cfg.aggregator, self.cfg.mask_target, &broadcast, &self.layers)?;
         let mut metas: Vec<Option<(f32, usize, usize)>> = vec![None; n_jobs];
-        for (idx, res) in self.pool.map_unordered_with(jobs) {
-            let outcome = res?;
-            let update = decode_update_view(&outcome.payload, &mut self.decode_scratch)?;
-            let expect = selected[idx];
-            if update.client as usize != expect || update.round as usize != t {
-                return Err(Error::invalid(format!(
-                    "wire update (client {}, round {}) does not match job (client {expect}, round {t})",
-                    update.client, update.round
-                )));
+        let mut uploaded = vec![false; n_jobs];
+        let mut rejected = 0usize;
+        let tolerate_strays = self.transport.accepts_foreign_peers();
+        let results = self.pool.map_unordered_with(jobs);
+        for (idx, res) in &results {
+            let meta = res?;
+            // Pull payloads until one passes decode + cohort validation;
+            // invalid ones are dropped on a bounded budget (fold failures
+            // stay fatal — they can leave the accumulator partially
+            // updated, and our own cohort's payloads are codec-clean).
+            loop {
+                let payload = match self.transport.recv() {
+                    Ok(p) => p,
+                    Err(te) => {
+                        // A missing upload usually means a *later* job died
+                        // before sending (under `Simulated` the first recv
+                        // barriers on the whole cohort): drain the remaining
+                        // job results and surface the concrete job error
+                        // over the generic transport timeout when one
+                        // exists.
+                        while let Ok((_, r)) = results.recv_timeout(Duration::from_secs(5)) {
+                            r?;
+                        }
+                        return Err(te);
+                    }
+                };
+                let update = match decode_update_view(&payload, &mut self.decode_scratch) {
+                    Ok(u) => u,
+                    Err(e) => {
+                        reject_upload(&mut rejected, tolerate_strays, e)?;
+                        continue;
+                    }
+                };
+                if update.round as usize != t {
+                    reject_upload(
+                        &mut rejected,
+                        tolerate_strays,
+                        format_args!(
+                            "client {} names round {}, server is on round {t}",
+                            update.client, update.round
+                        ),
+                    )?;
+                    continue;
+                }
+                let pos = match selected.binary_search(&(update.client as usize)) {
+                    Ok(pos) => pos,
+                    Err(_) => {
+                        reject_upload(
+                            &mut rejected,
+                            tolerate_strays,
+                            format_args!("client {} not in this round's cohort", update.client),
+                        )?;
+                        continue;
+                    }
+                };
+                if uploaded[pos] {
+                    reject_upload(
+                        &mut rejected,
+                        tolerate_strays,
+                        format_args!("duplicate update from client {}", update.client),
+                    )?;
+                    continue;
+                }
+                if update.p != self.p {
+                    reject_upload(
+                        &mut rejected,
+                        tolerate_strays,
+                        format_args!("carries {} params, model has {}", update.p, self.p),
+                    )?;
+                    continue;
+                }
+                uploaded[pos] = true;
+                let client = update.client as usize;
+                match update.body {
+                    BodyView::Dense(params) => agg.fold(Contribution {
+                        client,
+                        params,
+                        n_samples: update.n_samples,
+                    })?,
+                    BodyView::Sparse { indices, values } => agg.fold_sparse(SparseContribution {
+                        client,
+                        p: update.p,
+                        indices,
+                        values,
+                        n_samples: update.n_samples,
+                    })?,
+                }
+                break;
             }
-            if update.p != self.p {
-                return Err(Error::invalid(format!(
-                    "wire update carries {} params, model has {}",
-                    update.p, self.p
-                )));
-            }
-            match update.body {
-                BodyView::Dense(params) => agg.fold(Contribution {
-                    client: expect,
-                    params,
-                    n_samples: update.n_samples,
-                })?,
-                BodyView::Sparse { indices, values } => agg.fold_sparse(SparseContribution {
-                    client: expect,
-                    p: update.p,
-                    indices,
-                    values,
-                    n_samples: update.n_samples,
-                })?,
-            }
-            metas[idx] = Some((outcome.train_loss, outcome.nnz, outcome.payload.len()));
+            metas[idx] = Some(meta);
         }
         if agg.folded() < n_jobs {
             return Err(Error::Engine("worker dropped job (thread died?)".into()));

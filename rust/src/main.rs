@@ -13,6 +13,7 @@ use fedmask::figures;
 use fedmask::fl::server::Server;
 use fedmask::runtime::manifest::Manifest;
 use fedmask::transport::cost::eq6_cost;
+use fedmask::transport::link::TransportKind;
 use fedmask::util::cli::{render_help, Args, OptSpec};
 use fedmask::util::error::Result;
 use fedmask::util::logging;
@@ -21,6 +22,7 @@ const RUN_OPTS: &[OptSpec] = &[
     OptSpec::value("config", "experiment JSON config path"),
     OptSpec::value("out", "write per-round CSV here"),
     OptSpec::value("save-config", "write the resolved config JSON here"),
+    OptSpec::value("transport", "upload wire: inproc|tcp|uds (overrides config)"),
 ];
 
 const EQ6_OPTS: &[OptSpec] = &[
@@ -59,7 +61,10 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let config_path = args
         .get("config")
         .ok_or_else(|| fedmask::Error::invalid("--config is required"))?;
-    let cfg = ExperimentConfig::load(std::path::Path::new(config_path))?;
+    let mut cfg = ExperimentConfig::load(std::path::Path::new(config_path))?;
+    if let Some(spec) = args.get("transport") {
+        cfg.transport = TransportKind::parse(spec)?;
+    }
     if let Some(path) = args.get("save-config") {
         cfg.save(std::path::Path::new(path))?;
     }

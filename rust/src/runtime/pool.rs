@@ -14,6 +14,14 @@
 //! `submit`/`map`/`map_unordered` entry points keep the engine-only
 //! signature for callers that don't need it.
 //!
+//! The pool is transport-agnostic by design: a federated client job
+//! uploads its encoded payload through the round's
+//! [`UploadSink`](crate::transport::link::UploadSink) (an `Arc` captured
+//! by the closure) from the worker thread, and only sideband metadata
+//! rides the pool's own reply channel — which is what lets
+//! `Server::run_round` be generic over in-process, TCP, and UDS wires
+//! without the pool knowing sockets exist.
+//!
 //! Compilation cost is paid once per worker at startup; the figure drivers
 //! amortize it over hundreds of rounds.
 

@@ -1,0 +1,352 @@
+//! The transport abstraction the server aggregates over.
+//!
+//! A [`Transport`] carries encoded update payloads from client workers to
+//! the server's streaming-aggregation loop. Three implementations:
+//!
+//! * [`InProcess`] — an mpsc channel; today's default and the bitwise
+//!   reference every other transport is tested against.
+//! * [`crate::transport::socket::Loopback`] — real framed TCP or
+//!   unix-domain sockets on localhost; same bytes, real I/O.
+//! * [`Simulated`] — wraps either of the above and re-orders deliveries by
+//!   [`NetworkModel::upload_time`], so completion order models link speed
+//!   instead of scheduler luck.
+//!
+//! The split matters for streaming: the *sink* half is `Send + Sync` and is
+//! cloned into every client job (worker threads call
+//! [`UploadSink::send`] the moment the payload is encoded), while the
+//! *receive* half stays with the server loop, which folds payloads into the
+//! round's aggregator in arrival order. Because the fold is
+//! order-independent by construction, every transport produces a bitwise
+//! identical aggregate — the integration suite pins exactly that.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::transport::network::NetworkModel;
+use crate::util::error::{Error, Result};
+
+/// How long the server waits for the next upload before declaring the
+/// round wedged. Generous: it only trips when a client job died without
+/// reporting (job errors surface through the pool first).
+pub const DEFAULT_UPLOAD_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Which wire the transport plane uses (config/CLI surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process channels (default; no socket, bitwise reference).
+    InProcess,
+    /// Framed TCP over localhost.
+    Tcp,
+    /// Framed unix-domain socket.
+    Uds,
+}
+
+impl TransportKind {
+    /// Parse the CLI/JSON spelling.
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s {
+            "inproc" | "in-process" => Ok(TransportKind::InProcess),
+            "tcp" => Ok(TransportKind::Tcp),
+            "uds" | "unix" => Ok(TransportKind::Uds),
+            other => Err(Error::invalid(format!(
+                "bad transport '{other}' (expected inproc|tcp|uds)"
+            ))),
+        }
+    }
+
+    /// Canonical config spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportKind::InProcess => "inproc",
+            TransportKind::Tcp => "tcp",
+            TransportKind::Uds => "uds",
+        }
+    }
+}
+
+/// The client-side half: ships one encoded payload toward the server.
+/// Cloned (as `Arc<dyn UploadSink>`) into every client job; called from
+/// engine-pool worker threads.
+pub trait UploadSink: Send + Sync {
+    fn send(&self, payload: Vec<u8>) -> Result<()>;
+}
+
+/// The server-side transport: hand out sinks to client jobs, then receive
+/// the uploaded payloads back in (transport-determined) completion order.
+pub trait Transport: Send {
+    /// Human-readable name for logs.
+    fn label(&self) -> &'static str;
+
+    /// Whether processes outside this run can inject payloads (an open
+    /// socket endpoint). Decides how the server treats an invalid payload:
+    /// on a shared wire it is dropped as stray-peer noise; on a closed
+    /// wire (in-process channels) it can only be an internal bug and
+    /// fails the round precisely and immediately.
+    fn accepts_foreign_peers(&self) -> bool {
+        false
+    }
+
+    /// Sink for client jobs to upload through.
+    fn sink(&self) -> Arc<dyn UploadSink>;
+
+    /// Announce a round of `expected` uploads. [`Simulated`] needs the
+    /// cohort size to model delivery order; pass-through elsewhere.
+    fn begin_round(&mut self, expected: usize);
+
+    /// Receive the next well-formed payload. Malformed peers never surface
+    /// here (the socket transport drops them with a log line); an `Err`
+    /// means the transport itself failed (closed, timed out).
+    fn recv(&mut self) -> Result<Vec<u8>>;
+}
+
+/// `Sender` wrapped for `Sync`: worker threads share one sink `Arc`.
+struct ChannelSink {
+    tx: Mutex<Sender<Vec<u8>>>,
+}
+
+impl UploadSink for ChannelSink {
+    fn send(&self, payload: Vec<u8>) -> Result<()> {
+        self.tx
+            .lock()
+            .map_err(|_| Error::transport("in-process sink poisoned"))?
+            .send(payload)
+            .map_err(|_| Error::transport("in-process link closed"))
+    }
+}
+
+/// Channel-backed transport: payloads never leave the process. The
+/// default, and the reference the socket paths are asserted bitwise
+/// identical to.
+pub struct InProcess {
+    sink: Arc<ChannelSink>,
+    rx: Receiver<Vec<u8>>,
+    timeout: Duration,
+}
+
+impl Default for InProcess {
+    fn default() -> Self {
+        InProcess::new()
+    }
+}
+
+impl InProcess {
+    pub fn new() -> InProcess {
+        InProcess::with_timeout(DEFAULT_UPLOAD_TIMEOUT)
+    }
+
+    pub fn with_timeout(timeout: Duration) -> InProcess {
+        let (tx, rx) = channel();
+        InProcess {
+            sink: Arc::new(ChannelSink { tx: Mutex::new(tx) }),
+            rx,
+            timeout,
+        }
+    }
+}
+
+impl Transport for InProcess {
+    fn label(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn sink(&self) -> Arc<dyn UploadSink> {
+        let sink: Arc<dyn UploadSink> = Arc::clone(&self.sink);
+        sink
+    }
+
+    fn begin_round(&mut self, _expected: usize) {}
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        recv_deadline(&self.rx, self.timeout)
+    }
+}
+
+/// Shared timeout-aware receive for channel-drained transports.
+pub(crate) fn recv_deadline(rx: &Receiver<Vec<u8>>, timeout: Duration) -> Result<Vec<u8>> {
+    match rx.recv_timeout(timeout) {
+        Ok(p) => Ok(p),
+        Err(RecvTimeoutError::Timeout) => Err(Error::transport(format!(
+            "timed out after {:?} waiting for an upload",
+            timeout
+        ))),
+        Err(RecvTimeoutError::Disconnected) => {
+            Err(Error::transport("upload link closed before the round completed"))
+        }
+    }
+}
+
+/// [`NetworkModel`]-timed delivery over any inner transport.
+///
+/// Real arrival order on a loopback socket reflects scheduler timing, not
+/// link speed. `Simulated` re-orders each round's deliveries by the virtual
+/// completion time `upload_time(payload bytes)` (ties broken by true
+/// arrival order), so a figure sweep over a simulated network sees byte-size
+/// stragglers arrive last, deterministically. Modeling delivery *order*
+/// requires the whole cohort, so the first `recv` of a round barriers on
+/// all `expected` uploads — the aggregate is unchanged either way (the fold
+/// is order-independent); only the arrival sequence is modeled.
+pub struct Simulated {
+    inner: Box<dyn Transport>,
+    network: NetworkModel,
+    /// This round's re-ordered queue, earliest completion last (pop order).
+    queue: Vec<Vec<u8>>,
+    /// Uploads announced but not yet pulled from the inner transport.
+    pending: usize,
+}
+
+impl Simulated {
+    pub fn new(inner: Box<dyn Transport>, network: NetworkModel) -> Simulated {
+        Simulated {
+            inner,
+            network,
+            queue: Vec::new(),
+            pending: 0,
+        }
+    }
+}
+
+impl Transport for Simulated {
+    fn label(&self) -> &'static str {
+        "simulated"
+    }
+
+    fn accepts_foreign_peers(&self) -> bool {
+        self.inner.accepts_foreign_peers()
+    }
+
+    fn sink(&self) -> Arc<dyn UploadSink> {
+        self.inner.sink()
+    }
+
+    fn begin_round(&mut self, expected: usize) {
+        self.inner.begin_round(expected);
+        self.queue.clear();
+        self.pending = expected;
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        if self.queue.is_empty() {
+            if self.pending == 0 {
+                // Pulls beyond the announced cohort pass through in arrival
+                // order: the server re-pulls after rejecting an invalid
+                // payload (a stray peer's message may have consumed one of
+                // the barrier's slots), and the genuine upload it displaced
+                // is still queued in the inner transport.
+                return self.inner.recv();
+            }
+            let mut batch: Vec<(f64, usize, Vec<u8>)> = Vec::with_capacity(self.pending);
+            for seq in 0..self.pending {
+                let payload = self.inner.recv()?;
+                batch.push((self.network.upload_time(payload.len()), seq, payload));
+            }
+            self.pending = 0;
+            batch.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.1.cmp(&b.1))
+            });
+            // pop() delivers earliest virtual completion first
+            batch.reverse();
+            self.queue = batch.into_iter().map(|(_, _, p)| p).collect();
+        }
+        Ok(self.queue.pop().expect("queue refilled above"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_process_ships_payloads_across_threads() {
+        let mut t = InProcess::new();
+        let sink = t.sink();
+        t.begin_round(3);
+        let handles: Vec<_> = (0..3u8)
+            .map(|i| {
+                let sink = Arc::clone(&sink);
+                std::thread::spawn(move || sink.send(vec![i; 4 + i as usize]).unwrap())
+            })
+            .collect();
+        let mut got: Vec<Vec<u8>> = (0..3).map(|_| t.recv().unwrap()).collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        got.sort();
+        assert_eq!(got, vec![vec![0; 4], vec![1; 5], vec![2; 6]]);
+    }
+
+    #[test]
+    fn recv_timeout_is_a_typed_transport_error() {
+        let mut t = InProcess::with_timeout(Duration::from_millis(20));
+        let err = t.recv().unwrap_err();
+        assert!(matches!(err, Error::Transport(_)), "{err}");
+        assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn simulated_orders_deliveries_by_upload_time() {
+        // 1 MB/s client links, no latency: virtual completion time is
+        // proportional to payload size, so the 1-byte upload lands first
+        // regardless of send order.
+        let network = NetworkModel {
+            client_bw: 1e6,
+            server_bw: 1e9,
+            latency_s: 0.0,
+        };
+        let mut t = Simulated::new(Box::new(InProcess::new()), network);
+        let sink = t.sink();
+        t.begin_round(3);
+        sink.send(vec![3u8; 3000]).unwrap();
+        sink.send(vec![1u8; 1]).unwrap();
+        sink.send(vec![2u8; 200]).unwrap();
+        let sizes: Vec<usize> = (0..3).map(|_| t.recv().unwrap().len()).collect();
+        assert_eq!(sizes, vec![1, 200, 3000]);
+    }
+
+    #[test]
+    fn simulated_ideal_network_preserves_arrival_order() {
+        // infinite bandwidth: every upload_time is exactly 0.0, so the
+        // sequence tie-break keeps true arrival order
+        let mut t = Simulated::new(Box::new(InProcess::new()), NetworkModel::ideal());
+        let sink = t.sink();
+        t.begin_round(3);
+        for i in [5u8, 9, 7] {
+            sink.send(vec![i]).unwrap();
+        }
+        let got: Vec<u8> = (0..3).map(|_| t.recv().unwrap()[0]).collect();
+        assert_eq!(got, vec![5, 9, 7]);
+    }
+
+    #[test]
+    fn simulated_recv_beyond_the_cohort_passes_through_to_the_inner_wire() {
+        // no round announced: recv defers to the inner transport, so with
+        // nothing in flight it times out with a typed error...
+        let inner = InProcess::with_timeout(Duration::from_millis(20));
+        let mut t = Simulated::new(Box::new(inner), NetworkModel::ideal());
+        let err = t.recv().unwrap_err();
+        assert!(matches!(err, Error::Transport(_)), "{err}");
+        // ...and a payload beyond the announced cohort (a barrier slot was
+        // consumed by a message the server rejected) still arrives.
+        let sink = t.sink();
+        t.begin_round(1);
+        sink.send(vec![1]).unwrap();
+        sink.send(vec![2, 2]).unwrap();
+        assert_eq!(t.recv().unwrap(), vec![1]);
+        assert_eq!(t.recv().unwrap(), vec![2, 2], "displaced upload must still surface");
+    }
+
+    #[test]
+    fn transport_kind_parses_and_prints() {
+        for (s, k) in [
+            ("inproc", TransportKind::InProcess),
+            ("tcp", TransportKind::Tcp),
+            ("uds", TransportKind::Uds),
+        ] {
+            assert_eq!(TransportKind::parse(s).unwrap(), k);
+            assert_eq!(TransportKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+    }
+}

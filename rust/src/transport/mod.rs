@@ -1,31 +1,72 @@
-//! Transport plane: what actually crosses the (simulated) wire — and since
-//! the streaming refactor, the **only** path client updates travel.
+//! Transport plane: what actually crosses the wire — and since the socket
+//! refactor, *which* wire it crosses is pluggable.
 //!
-//! Division of labor around one round:
+//! ## Three transports, one byte stream
+//!
+//! Client jobs encode their masked update into a [`codec::WireUpdate`]
+//! payload and push it through an [`UploadSink`]; the server's streaming
+//! aggregation loop pulls payloads back out of the matching [`Transport`]
+//! and folds them in completion order. The payload bytes are identical on
+//! every path — only the carrier differs:
+//!
+//! * [`link::InProcess`] (`--transport inproc`, default) — an mpsc
+//!   channel. No socket, no syscalls; the bitwise reference.
+//! * [`socket::Loopback`] (`--transport tcp|uds`) — real framed sockets:
+//!   TCP on an ephemeral 127.0.0.1 port, or a unix-domain socket in the
+//!   temp dir. Every upload is one connection carrying one frame.
+//! * [`link::Simulated`] (`network = "simulated"` wraps either of the
+//!   above) — re-orders each round's deliveries by
+//!   [`NetworkModel::upload_time`], so arrival order models link speed
+//!   rather than thread-scheduler luck.
+//!
+//! Because the aggregation fold is order-independent and integer-exact,
+//! all three produce **bitwise identical** global models — pinned by
+//! `tests/socket_transport.rs`.
+//!
+//! ## Frame format ([`frame`])
+//!
+//! One frame per payload: `magic u16 (0x4c46 "FL") | version u8 (1) |
+//! reserved u8 (0) | length u32 LE | payload`. Declared lengths above the
+//! hard cap ([`frame::MAX_FRAME_BYTES`], 64 MiB) are rejected on the
+//! header, before any body allocation. The reserved byte must be zero
+//! (future flags); incompatible payload changes bump `version`, and
+//! readers reject unknown versions with a typed
+//! [`Error::Transport`](crate::util::error::Error). The reader is an
+//! incremental state machine tolerant of arbitrarily short reads and
+//! pipelined frames; mid-frame disconnects are typed truncation errors,
+//! and a malformed peer is dropped at its connection without disturbing
+//! the rest of the cohort.
+//!
+//! ## Division of labor around one round
 //!
 //! * **Who encodes** — `fl::client::ClientJob::run` encodes its masked
-//!   update into a [`codec::WireUpdate`] payload (sparse top-k, dense, or
-//!   quantized per the experiment's `encoding`); with `downlink_delta`,
-//!   `fl::server::Server` also encodes the broadcast as a delta against
-//!   the previous round's global model.
-//! * **Who decodes** — the server, once per arriving payload, into a
-//!   borrowed sparse/dense view over a scratch buffer it holds across
-//!   rounds ([`codec::decode_update_view`]), before folding it into the
-//!   round's `fl::aggregate::Aggregator` — sparse bodies are never
-//!   densified (and each client conceptually decodes the broadcast,
-//!   modeled server-side). No dense `Vec<f32>` crosses the
-//!   client->server boundary.
-//! * **Where bytes are accounted** — the server records
-//!   `payload.len()` per upload and per-broadcast bytes in
-//!   [`cost::CostLedger`] (`record_upload` / `record_download_sparse`);
+//!   update (sparse top-k, dense, or quantized per the experiment's
+//!   `encoding`); the server-side job wrapper ships the payload through
+//!   the round's sink. With `downlink_delta`, `fl::server::Server` also
+//!   encodes the broadcast as a delta against the previous round's global
+//!   model (the downlink stays modeled in-process; only uploads cross the
+//!   socket today).
+//! * **Who decodes** — the server, once per received payload, into a
+//!   borrowed sparse/dense view over a scratch buffer held across rounds
+//!   ([`codec::decode_update_view`]), before folding into the round's
+//!   `fl::aggregate::Aggregator`. Sparse bodies are never densified. No
+//!   dense `Vec<f32>` crosses the client->server boundary.
+//! * **Where bytes are accounted** — the server records `payload.len()`
+//!   per upload and per-broadcast bytes in [`cost::CostLedger`];
 //!   [`network::NetworkModel`] turns those same byte counts into virtual
-//!   transfer time.
+//!   transfer time. Framing overhead (8 bytes/frame) is transport detail,
+//!   not protocol cost, and is excluded from the ledger.
 //!
 //! Modules:
 //!
 //! * [`codec`] — dense and sparse update encodings with auto-selection;
 //!   masked updates ship as (index, value) pairs, which is where the
 //!   paper's communication saving physically materializes.
+//! * [`frame`] — length-prefixed framing: header layout, size cap,
+//!   incremental reader, adversarial-input rejection.
+//! * [`link`] — the [`Transport`]/[`UploadSink`] abstraction, the
+//!   in-process default, and the [`NetworkModel`]-timed wrapper.
+//! * [`socket`] — the TCP/UDS server + connect-per-upload client.
 //! * [`quantize`] — optional 8-bit linear quantization layered on either
 //!   encoding (paper §1: the methods "can also be combined with
 //!   cutting-edge compression algorithms").
@@ -36,12 +77,18 @@
 
 pub mod codec;
 pub mod cost;
+pub mod frame;
+pub mod link;
 pub mod network;
 pub mod quantize;
+pub mod socket;
 
 pub use codec::{
     decode_update, decode_update_view, encode_update, encode_update_with, BodyView, DecodeScratch,
     DecodedBody, EncodeScratch, Encoding, WireUpdate, WireView,
 };
 pub use cost::{eq6_cost, CostLedger};
+pub use frame::{frame_bytes, pump_frames, write_frame, FrameReader, MAX_FRAME_BYTES};
+pub use link::{InProcess, Simulated, Transport, TransportKind, UploadSink};
 pub use network::NetworkModel;
+pub use socket::{send_payload, Loopback, WireAddr};

@@ -40,9 +40,24 @@ impl NetworkModel {
         }
     }
 
+    /// One message over one client link: latency + serialization. Both
+    /// directions share this today (symmetric client links); asymmetric
+    /// profiles would split it.
+    fn client_link_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.client_bw
+    }
+
     /// Time for one client to receive `bytes` (downlink broadcast leg).
     pub fn download_time(&self, bytes: usize) -> f64 {
-        self.latency_s + bytes as f64 / self.client_bw
+        self.client_link_time(bytes)
+    }
+
+    /// Time for a single client's upload of `bytes`, alone on its link (no
+    /// server-side sharing). The `Simulated` transport orders per-round
+    /// deliveries by this; zero-byte messages are well-defined and cost
+    /// exactly the fixed latency.
+    pub fn upload_time(&self, bytes: usize) -> f64 {
+        self.client_link_time(bytes)
     }
 
     /// Time for `uploads` concurrent client uploads of `bytes` each to all
@@ -74,6 +89,51 @@ mod tests {
         let n = NetworkModel::ideal();
         assert_eq!(n.download_time(1 << 30), 0.0);
         assert_eq!(n.upload_round_time(&[1 << 30; 100]), 0.0);
+    }
+
+    #[test]
+    fn ideal_times_are_exactly_zero_including_zero_bytes() {
+        // infinite bandwidth + zero latency: every leg is exactly 0.0 —
+        // not epsilon, not NaN (0 / inf == 0.0 in IEEE 754)
+        let n = NetworkModel::ideal();
+        assert_eq!(n.download_time(0), 0.0);
+        assert_eq!(n.upload_time(0), 0.0);
+        assert_eq!(n.upload_time(usize::MAX / 2), 0.0);
+        assert_eq!(n.upload_round_time(&[0, 0, 0]), 0.0);
+        assert_eq!(n.round_time(0, &[0]), 0.0);
+        // empty upload set: no leg at all
+        assert_eq!(n.upload_round_time(&[]), 0.0);
+    }
+
+    #[test]
+    fn latency_only_when_bandwidth_is_infinite() {
+        // infinite bandwidth with nonzero latency: every message, including
+        // a zero-byte one, costs exactly the fixed latency
+        let n = NetworkModel {
+            client_bw: f64::INFINITY,
+            server_bw: f64::INFINITY,
+            latency_s: 0.25,
+        };
+        assert_eq!(n.download_time(0), 0.25);
+        assert_eq!(n.upload_time(0), 0.25);
+        assert_eq!(n.upload_time(1 << 20), 0.25);
+        assert_eq!(n.upload_round_time(&[0]), 0.25);
+    }
+
+    #[test]
+    fn zero_byte_messages_are_well_defined_at_finite_bandwidth() {
+        let n = NetworkModel::default();
+        assert_eq!(n.download_time(0), n.latency_s);
+        assert_eq!(n.upload_time(0), n.latency_s);
+        assert_eq!(n.upload_round_time(&[0, 0]), n.latency_s);
+        assert!(n.round_time(0, &[0]).is_finite());
+    }
+
+    #[test]
+    fn upload_time_is_monotone_in_bytes() {
+        let n = NetworkModel::default();
+        assert!(n.upload_time(10) < n.upload_time(11));
+        assert!(n.upload_time(0) < n.upload_time(1));
     }
 
     #[test]

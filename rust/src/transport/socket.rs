@@ -1,0 +1,334 @@
+//! Real socket transport: framed TCP / unix-domain uploads on localhost.
+//!
+//! [`Loopback`] is the server half: it binds a listener, runs an accept
+//! loop on a background thread, and spawns one reader thread per
+//! connection that pumps [`crate::transport::frame`] frames into the
+//! server's receive channel. The client half is [`SocketSink`]: each
+//! upload opens a fresh connection, writes one frame, and closes — the
+//! per-upload connect mirrors a cross-device fleet where clients come and
+//! go, and keeps connection state out of the protocol.
+//!
+//! **Malformed peers cannot take the round down.** A connection that sends
+//! a bad magic, an unsupported version, an over-cap length, or disconnects
+//! mid-frame is dropped with a warning at the reader thread; only complete,
+//! well-framed payloads reach [`Transport::recv`]. Payload *content* is
+//! validated one layer up: the server's aggregation loop drops payloads
+//! that fail codec decode or cohort matching on a bounded per-round
+//! budget, and the queue between reader threads and that loop is bounded
+//! (`UPLOAD_QUEUE_SLOTS` frames), so a flood of framing-valid garbage
+//! backpressures the sender instead of growing frame memory. Connection
+//! *count* is bounded only by the OS (one reader thread per accepted
+//! connection, reaped by `PEER_READ_TIMEOUT` at the latest) — acceptable
+//! for a loopback transport; a non-loopback server needs a connection cap
+//! or reader pool (ROADMAP, with authentication).
+//!
+//! **Trust model.** The listener is an *unauthenticated* local endpoint
+//! (ephemeral 127.0.0.1 port / user-owned socket file): any local process
+//! that can connect can speak the protocol, and a well-formed payload
+//! naming a selected client is indistinguishable from that client's own
+//! upload (the genuine one then drops as a duplicate). That matches the
+//! simulation's threat model — the transport exists to make framing,
+//! partial reads, and backpressure real, not to authenticate clients.
+//! Update authentication (per-client session tokens or MACs in the wire
+//! header) is the documented next step before any non-loopback bind —
+//! tracked in ROADMAP.md.
+//!
+//! The bytes on the wire are exactly the bytes [`InProcess`] would have
+//! carried — the integration suite pins the aggregate bitwise identical
+//! across all three transports.
+//!
+//! [`InProcess`]: crate::transport::link::InProcess
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::transport::frame::{pump_frames, write_frame};
+use crate::transport::link::{recv_deadline, Transport, TransportKind, UploadSink};
+use crate::util::error::{Error, Result};
+
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+
+/// Where a [`Loopback`] server listens / where its clients connect.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireAddr {
+    Tcp(SocketAddr),
+    Uds(PathBuf),
+}
+
+impl std::fmt::Display for WireAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireAddr::Tcp(a) => write!(f, "tcp://{a}"),
+            WireAddr::Uds(p) => write!(f, "uds://{}", p.display()),
+        }
+    }
+}
+
+/// Read timeout on accepted connections: a peer that connects and stalls
+/// forever must not pin a reader thread for the process lifetime.
+const PEER_READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Bound on queued-but-unconsumed uploads. Reader threads block (and the
+/// peer's writes stall — natural backpressure) once this many frames sit
+/// undrained, so a framing-valid flood cannot grow server memory without
+/// limit; per-frame size is separately capped by the frame layer.
+const UPLOAD_QUEUE_SLOTS: usize = 64;
+
+/// Uniquifier for unix socket paths within one process.
+static UDS_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Open one client connection and ship one framed payload.
+pub fn send_payload(addr: &WireAddr, payload: &[u8]) -> Result<()> {
+    match addr {
+        WireAddr::Tcp(a) => {
+            let mut stream = TcpStream::connect(a)
+                .map_err(|e| Error::transport(format!("connect {addr}: {e}")))?;
+            write_frame(&mut stream, payload)?;
+            stream.flush()?;
+        }
+        WireAddr::Uds(path) => {
+            #[cfg(unix)]
+            {
+                let mut stream = UnixStream::connect(path)
+                    .map_err(|e| Error::transport(format!("connect {addr}: {e}")))?;
+                write_frame(&mut stream, payload)?;
+                stream.flush()?;
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(Error::transport(
+                    "unix-domain sockets are unsupported on this platform",
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Client half of [`Loopback`]: connect-per-upload framed sender.
+pub struct SocketSink {
+    addr: WireAddr,
+}
+
+impl UploadSink for SocketSink {
+    fn send(&self, payload: Vec<u8>) -> Result<()> {
+        send_payload(&self.addr, &payload)
+    }
+}
+
+/// Per-connection reader: pump frames into the server channel until EOF,
+/// dropping the connection (with a log line) on the first framing error.
+fn serve_conn<R: std::io::Read>(peer: &str, conn: &mut R, tx: &SyncSender<Vec<u8>>) {
+    let ok = pump_frames(conn, |payload| {
+        // Receiver gone = server shut down mid-drain; nothing to do.
+        let _ = tx.send(payload);
+    });
+    if let Err(e) = ok {
+        log::warn!("transport: dropping malformed peer {peer}: {e}");
+    }
+}
+
+/// Shared accept loop for both listener flavors: `accept` blocks for the
+/// next connection (already read-timeout-armed) or errors; each accepted
+/// stream gets its own reader thread. Exits once the shutdown flag is
+/// observed after a wake-up connection (or an accept error).
+fn spawn_accept_loop<S, A>(
+    mut accept: A,
+    tx: SyncSender<Vec<u8>>,
+    shutdown: Arc<AtomicBool>,
+) -> JoinHandle<()>
+where
+    S: std::io::Read + Send + 'static,
+    A: FnMut() -> std::io::Result<(S, String)> + Send + 'static,
+{
+    std::thread::spawn(move || loop {
+        match accept() {
+            Ok((stream, peer)) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    let mut stream = stream;
+                    serve_conn(&peer, &mut stream, &tx);
+                });
+            }
+            Err(e) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                log::warn!("transport: accept failed: {e}");
+                // Persistent accept errors (e.g. fd exhaustion) must not
+                // busy-spin the loop and flood the log.
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    })
+}
+
+/// Socket-backed [`Transport`]: framed TCP on 127.0.0.1 or a unix-domain
+/// socket in the temp dir. Binding picks an ephemeral port / unique path;
+/// [`Loopback::addr`] is what clients (the [`SocketSink`]) connect to.
+pub struct Loopback {
+    addr: WireAddr,
+    rx: Receiver<Vec<u8>>,
+    accept: Option<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    timeout: Duration,
+    kind_label: &'static str,
+}
+
+impl Loopback {
+    /// Bind the requested socket flavor. `TransportKind::InProcess` is not
+    /// a socket and is rejected.
+    pub fn bind(kind: TransportKind) -> Result<Loopback> {
+        match kind {
+            TransportKind::Tcp => Loopback::bind_tcp(),
+            TransportKind::Uds => Loopback::bind_uds(),
+            TransportKind::InProcess => Err(Error::invalid(
+                "in-process transport has no socket to bind",
+            )),
+        }
+    }
+
+    /// Shared tail of both bind flavors: queue, shutdown flag, accept
+    /// thread, struct assembly.
+    fn from_accept<S, A>(accept: A, addr: WireAddr, kind_label: &'static str) -> Loopback
+    where
+        S: std::io::Read + Send + 'static,
+        A: FnMut() -> std::io::Result<(S, String)> + Send + 'static,
+    {
+        let (tx, rx) = sync_channel(UPLOAD_QUEUE_SLOTS);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accept = spawn_accept_loop(accept, tx, Arc::clone(&shutdown));
+        Loopback {
+            addr,
+            rx,
+            accept: Some(accept),
+            shutdown,
+            timeout: crate::transport::link::DEFAULT_UPLOAD_TIMEOUT,
+            kind_label,
+        }
+    }
+
+    /// Framed TCP on an ephemeral 127.0.0.1 port.
+    pub fn bind_tcp() -> Result<Loopback> {
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| Error::transport(format!("bind tcp listener: {e}")))?;
+        let addr = WireAddr::Tcp(
+            listener
+                .local_addr()
+                .map_err(|e| Error::transport(format!("tcp local addr: {e}")))?,
+        );
+        Ok(Loopback::from_accept(
+            move || {
+                let (stream, peer) = listener.accept()?;
+                let _ = stream.set_read_timeout(Some(PEER_READ_TIMEOUT));
+                Ok((stream, peer.to_string()))
+            },
+            addr,
+            "tcp",
+        ))
+    }
+
+    /// Framed unix-domain socket on a unique temp path.
+    pub fn bind_uds() -> Result<Loopback> {
+        #[cfg(unix)]
+        {
+            let path = std::env::temp_dir().join(format!(
+                "fedmask-{}-{}.sock",
+                std::process::id(),
+                UDS_COUNTER.fetch_add(1, Ordering::SeqCst)
+            ));
+            let _ = std::fs::remove_file(&path);
+            let listener = UnixListener::bind(&path)
+                .map_err(|e| Error::transport(format!("bind uds {}: {e}", path.display())))?;
+            Ok(Loopback::from_accept(
+                move || {
+                    let (stream, _) = listener.accept()?;
+                    let _ = stream.set_read_timeout(Some(PEER_READ_TIMEOUT));
+                    Ok((stream, "uds-peer".to_string()))
+                },
+                WireAddr::Uds(path),
+                "uds",
+            ))
+        }
+        #[cfg(not(unix))]
+        {
+            Err(Error::transport(
+                "unix-domain sockets are unsupported on this platform",
+            ))
+        }
+    }
+
+    /// Where clients connect.
+    pub fn addr(&self) -> &WireAddr {
+        &self.addr
+    }
+
+    /// Override the receive timeout (tests use short ones).
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+}
+
+impl Transport for Loopback {
+    fn label(&self) -> &'static str {
+        self.kind_label
+    }
+
+    fn accepts_foreign_peers(&self) -> bool {
+        // An open local endpoint: any process that can connect can frame a
+        // payload, so invalid ones are dropped as noise, not bugs.
+        true
+    }
+
+    fn sink(&self) -> Arc<dyn UploadSink> {
+        Arc::new(SocketSink {
+            addr: self.addr.clone(),
+        })
+    }
+
+    fn begin_round(&mut self, _expected: usize) {}
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        recv_deadline(&self.rx, self.timeout)
+    }
+}
+
+/// Poke a listening address with a throwaway connection so a blocked
+/// `accept` observes the shutdown flag. Returns whether the poke landed.
+fn wake_listener(addr: &WireAddr) -> bool {
+    match addr {
+        WireAddr::Tcp(a) => TcpStream::connect_timeout(a, Duration::from_millis(200)).is_ok(),
+        #[cfg(unix)]
+        WireAddr::Uds(path) => UnixStream::connect(path).is_ok(),
+        #[cfg(not(unix))]
+        WireAddr::Uds(_) => false,
+    }
+}
+
+impl Drop for Loopback {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Only join the accept loop when the wake-up connection landed —
+        // otherwise accept may never return and the join would hang; the
+        // flagged thread is left to die with the process instead.
+        if wake_listener(&self.addr) {
+            if let Some(h) = self.accept.take() {
+                let _ = h.join();
+            }
+        }
+        if let WireAddr::Uds(path) = &self.addr {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}

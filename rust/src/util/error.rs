@@ -23,6 +23,9 @@ pub enum Error {
     Invalid(String),
     /// An engine worker thread died or a channel closed unexpectedly.
     Engine(String),
+    /// Wire transport failure: malformed frame, oversized declared length,
+    /// mid-frame disconnect, socket setup/teardown, or upload timeout.
+    Transport(String),
 }
 
 impl fmt::Display for Error {
@@ -33,6 +36,7 @@ impl fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Invalid(m) => write!(f, "invalid: {m}"),
             Error::Engine(m) => write!(f, "engine error: {m}"),
+            Error::Transport(m) => write!(f, "transport error: {m}"),
         }
     }
 }
@@ -67,6 +71,11 @@ impl Error {
     /// Shorthand for a parse error.
     pub fn parse(msg: impl Into<String>) -> Self {
         Error::Parse(msg.into())
+    }
+
+    /// Shorthand for a transport error.
+    pub fn transport(msg: impl Into<String>) -> Self {
+        Error::Transport(msg.into())
     }
 }
 

@@ -1,0 +1,350 @@
+//! Loopback socket transport integration tests.
+//!
+//! The acceptance bar: one federated round over real sockets (TCP and
+//! UDS) must be **bitwise identical** to the in-process transport — same
+//! aggregate, same byte accounting — and malformed peers must be rejected
+//! with typed errors without disturbing the cohort.
+//!
+//! Real sockets are not available in every sandbox, so every test here is
+//! gated on `FEDMASK_SOCKET_TESTS=1` (CI sets it; offline sandboxes skip
+//! cleanly). The full-round tests additionally need the PJRT artifacts and
+//! self-skip without them, exactly like `fl_integration.rs`.
+
+use std::time::Duration;
+
+use fedmask::config::experiment::{AggregatorKind, ExperimentConfig};
+use fedmask::fl::aggregate::make_aggregator;
+use fedmask::fl::aggregate::{Contribution, SparseContribution};
+use fedmask::fl::masking::{MaskPolicy, MaskTarget};
+use fedmask::fl::server::Server;
+use fedmask::runtime::manifest::{LayerInfo, Manifest};
+use fedmask::transport::codec::{decode_update, encode_update, DecodedBody, Encoding};
+use fedmask::transport::frame::{frame_bytes, FRAME_HEADER_BYTES, FRAME_MAGIC, FRAME_VERSION};
+use fedmask::transport::link::{Simulated, Transport, TransportKind, UploadSink};
+use fedmask::transport::network::NetworkModel;
+use fedmask::transport::socket::{send_payload, Loopback, WireAddr};
+use fedmask::util::prop::Gen;
+
+/// Socket tests only run when explicitly enabled (stock CI runners have
+/// working localhost TCP + UDS; sealed sandboxes may not).
+fn socket_tests_enabled() -> bool {
+    match std::env::var("FEDMASK_SOCKET_TESTS") {
+        Ok(v) if v == "1" || v == "true" => true,
+        _ => {
+            eprintln!("skipping socket test (set FEDMASK_SOCKET_TESTS=1 to enable)");
+            false
+        }
+    }
+}
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping socket integration test (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn one_layer(size: usize) -> Vec<LayerInfo> {
+    vec![LayerInfo {
+        name: "w".into(),
+        shape: vec![size],
+        offset: 0,
+        size,
+        masked: true,
+    }]
+}
+
+/// Masked-style update: mostly zeros, a few non-zero coordinates.
+fn masked_update(g: &mut Gen, p: usize, density: f32) -> Vec<f32> {
+    (0..p)
+        .map(|_| {
+            if g.f32_in(0.0, 1.0) < density {
+                g.f32_in(-1.5, 1.5)
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Fold a set of encoded payloads (in the given order) into a finished
+/// aggregate under the given mask target.
+fn fold_payloads(
+    payloads: &[Vec<u8>],
+    target: MaskTarget,
+    broadcast: &[f32],
+    layers: &[LayerInfo],
+) -> Vec<f32> {
+    let mut agg = make_aggregator(AggregatorKind::FedAvg, target, broadcast, layers).unwrap();
+    for bytes in payloads {
+        let u = decode_update(bytes).unwrap();
+        match &u.body {
+            DecodedBody::Dense(v) => agg
+                .fold(Contribution {
+                    client: u.client as usize,
+                    params: v,
+                    n_samples: u.n_samples,
+                })
+                .unwrap(),
+            DecodedBody::Sparse { indices, values } => agg
+                .fold_sparse(SparseContribution {
+                    client: u.client as usize,
+                    p: u.p,
+                    indices,
+                    values,
+                    n_samples: u.n_samples,
+                })
+                .unwrap(),
+        }
+    }
+    agg.finish().unwrap()
+}
+
+/// Ship `payloads` through a bound loopback transport from client threads
+/// in deliberately scrambled completion order; return them in arrival
+/// order.
+fn ship_through(server: &mut Loopback, payloads: &[Vec<u8>]) -> Vec<Vec<u8>> {
+    server.set_timeout(Duration::from_secs(30));
+    let addr = server.addr().clone();
+    let handles: Vec<_> = payloads
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let addr = addr.clone();
+            let p = p.clone();
+            let delay = Duration::from_millis(((payloads.len() - i) * 15) as u64);
+            std::thread::spawn(move || {
+                // reverse-staggered: client 0 lands last
+                std::thread::sleep(delay);
+                send_payload(&addr, &p).unwrap();
+            })
+        })
+        .collect();
+    let got: Vec<Vec<u8>> = (0..payloads.len()).map(|_| server.recv().unwrap()).collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    got
+}
+
+/// Payloads that crossed a real socket are bitwise identical to what was
+/// sent, and the aggregate folded from them matches the direct in-process
+/// fold exactly — for both mask targets, over TCP and UDS, with clients
+/// completing out of order.
+#[test]
+fn loopback_payloads_and_aggregate_are_bitwise_identical_to_in_process() {
+    if !socket_tests_enabled() {
+        return;
+    }
+    let mut g = Gen::new(0x50cce7);
+    let p = 409;
+    let k = 6;
+    let broadcast: Vec<f32> = (0..p).map(|_| g.f32_in(-1.0, 1.0)).collect();
+    let layers = one_layer(p);
+    let payloads: Vec<Vec<u8>> = (0..k)
+        .map(|c| {
+            let update = masked_update(&mut g, p, 0.15);
+            let enc = if c % 2 == 0 { Encoding::Auto } else { Encoding::AutoQ8 };
+            encode_update(c as u32, 1, 100 + c as u32, &update, enc)
+        })
+        .collect();
+
+    for kind in [TransportKind::Tcp, TransportKind::Uds] {
+        let mut server = Loopback::bind(kind).unwrap();
+        let received = ship_through(&mut server, &payloads);
+
+        // the wire must hand back exactly the bytes that went in
+        let mut sent_sorted = payloads.clone();
+        sent_sorted.sort();
+        let mut recv_sorted = received.clone();
+        recv_sorted.sort();
+        assert_eq!(recv_sorted, sent_sorted, "{kind:?}: payload bytes changed in flight");
+
+        // and the streamed fold over socket arrivals matches the direct
+        // in-process fold bitwise, under both mask targets
+        for target in [MaskTarget::Delta, MaskTarget::Weights] {
+            let direct = fold_payloads(&payloads, target, &broadcast, &layers);
+            let via_wire = fold_payloads(&received, target, &broadcast, &layers);
+            assert_eq!(via_wire, direct, "{kind:?}/{target:?}: aggregate moved");
+        }
+    }
+}
+
+/// Adversarial peers — bad magic, unsupported version, over-cap length,
+/// truncated body / mid-frame disconnect — are dropped at their own
+/// connection; the cohort's uploads still arrive intact.
+#[test]
+fn server_survives_malformed_peers_while_folding_the_cohort() {
+    if !socket_tests_enabled() {
+        return;
+    }
+    let mut g = Gen::new(0xbadbeef);
+    let p = 211;
+    let k = 4;
+    let payloads: Vec<Vec<u8>> = (0..k)
+        .map(|c| {
+            let update = masked_update(&mut g, p, 0.2);
+            encode_update(c as u32, 3, 50, &update, Encoding::Auto)
+        })
+        .collect();
+
+    let mut server = Loopback::bind(TransportKind::Tcp).unwrap();
+    server.set_timeout(Duration::from_secs(30));
+    let WireAddr::Tcp(addr) = server.addr().clone() else {
+        panic!("tcp bind returned non-tcp addr")
+    };
+
+    // malformed peer 1: garbage magic
+    {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(&[0xde, 0xad, 0xbe, 0xef, 0, 0, 0, 0, 1, 2, 3]).unwrap();
+    }
+    // malformed peer 2: valid header, then disconnect mid-body
+    {
+        use std::io::Write;
+        let mut header = vec![0u8; FRAME_HEADER_BYTES];
+        header[..2].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        header[2] = FRAME_VERSION;
+        header[4..8].copy_from_slice(&1000u32.to_le_bytes());
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(&header).unwrap();
+        s.write_all(&[7u8; 12]).unwrap();
+        // dropped here: 988 promised bytes never arrive
+    }
+    // malformed peer 3: declared length over the cap
+    {
+        use std::io::Write;
+        let mut header = vec![0u8; FRAME_HEADER_BYTES];
+        header[..2].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        header[2] = FRAME_VERSION;
+        header[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(&header).unwrap();
+    }
+    // malformed peer 4: wrong frame version
+    {
+        use std::io::Write;
+        let mut framed = frame_bytes(b"future payload").unwrap();
+        framed[2] = FRAME_VERSION + 9;
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(&framed).unwrap();
+    }
+
+    // the real cohort uploads after/between the attacks
+    let received = ship_through(&mut server, &payloads);
+    let mut sent_sorted = payloads.clone();
+    sent_sorted.sort();
+    let mut recv_sorted = received;
+    recv_sorted.sort();
+    assert_eq!(recv_sorted, sent_sorted, "cohort payloads lost to a malformed peer");
+
+    // and nothing extra ever surfaces: the next recv times out instead of
+    // yielding attacker bytes
+    server.set_timeout(Duration::from_millis(300));
+    assert!(server.recv().is_err(), "malformed peer bytes leaked into the round");
+}
+
+/// `Simulated` over a real socket orders deliveries by virtual upload
+/// time, not by socket arrival order.
+#[test]
+fn simulated_over_loopback_orders_completions_by_upload_time() {
+    if !socket_tests_enabled() {
+        return;
+    }
+    let network = NetworkModel {
+        client_bw: 1e6,
+        server_bw: 1e9,
+        latency_s: 0.01,
+    };
+    let inner = Loopback::bind(TransportKind::Tcp).unwrap();
+    let mut t = Simulated::new(Box::new(inner), network.clone());
+    let sink = t.sink();
+    t.begin_round(3);
+    // send big-to-small so socket arrival order opposes upload-time order
+    for bytes in [9000usize, 2500, 40] {
+        sink.send(vec![1u8; bytes]).unwrap();
+    }
+    let sizes: Vec<usize> = (0..3).map(|_| t.recv().unwrap().len()).collect();
+    assert_eq!(sizes, vec![40, 2500, 9000], "delivery order must follow upload_time");
+    assert!(network.upload_time(40) < network.upload_time(9000));
+}
+
+/// Acceptance: a full federated round over real TCP and UDS sockets —
+/// PJRT training, masking, encode, frame, kernel socket, decode, fold —
+/// produces a `RoundRecord` stream and final aggregate bitwise identical
+/// to the in-process transport, for both mask targets, with a pool wide
+/// enough that clients complete out of order.
+#[test]
+fn full_round_over_sockets_is_bitwise_identical_to_in_process() {
+    if !socket_tests_enabled() {
+        return;
+    }
+    let Some(manifest) = manifest() else { return };
+
+    let run = |transport: TransportKind, target: MaskTarget| {
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.label = format!("wire-{}", transport.as_str());
+        cfg.clients = 4;
+        cfg.rounds = 2;
+        cfg.n_train = 1_024;
+        cfg.n_test = 512;
+        cfg.eval_max_chunks = 1;
+        cfg.workers = 3; // >1 worker: completion order is scheduler-driven
+        cfg.seed = 7;
+        cfg.masking = MaskPolicy::selective(0.3);
+        cfg.mask_target = target;
+        cfg.transport = transport;
+        Server::new(cfg, &manifest).unwrap().run().unwrap()
+    };
+
+    for target in [MaskTarget::Delta, MaskTarget::Weights] {
+        let reference = run(TransportKind::InProcess, target);
+        for kind in [TransportKind::Tcp, TransportKind::Uds] {
+            let socketed = run(kind, target);
+            assert_eq!(
+                socketed.final_params, reference.final_params,
+                "{kind:?}/{target:?}: socket transport moved the aggregate"
+            );
+            assert_eq!(socketed.recorder.rounds.len(), reference.recorder.rounds.len());
+            for (a, b) in socketed.recorder.rounds.iter().zip(&reference.recorder.rounds) {
+                assert_eq!(a.round, b.round);
+                assert_eq!(a.clients, b.clients, "{kind:?}/{target:?}");
+                assert_eq!(a.uplink_bytes, b.uplink_bytes, "{kind:?}/{target:?}");
+                assert_eq!(a.downlink_bytes, b.downlink_bytes, "{kind:?}/{target:?}");
+                assert_eq!(
+                    a.uplink_units.to_bits(),
+                    b.uplink_units.to_bits(),
+                    "{kind:?}/{target:?}"
+                );
+                assert_eq!(
+                    a.train_loss.to_bits(),
+                    b.train_loss.to_bits(),
+                    "{kind:?}/{target:?}"
+                );
+                assert_eq!(
+                    a.test_accuracy.to_bits(),
+                    b.test_accuracy.to_bits(),
+                    "{kind:?}/{target:?}"
+                );
+                assert_eq!(
+                    a.virtual_time_s.to_bits(),
+                    b.virtual_time_s.to_bits(),
+                    "{kind:?}/{target:?}"
+                );
+            }
+            assert_eq!(socketed.ledger.uplink_bytes, reference.ledger.uplink_bytes);
+            assert_eq!(socketed.ledger.messages, reference.ledger.messages);
+        }
+    }
+}
+
+/// The in-process kind has no socket to bind — typed error, not a panic.
+#[test]
+fn binding_the_in_process_kind_is_a_typed_error() {
+    assert!(Loopback::bind(TransportKind::InProcess).is_err());
+}

@@ -51,11 +51,15 @@ fn contribs_of(vecs: &[Vec<f32>]) -> Vec<Contribution<'_>> {
         .collect()
 }
 
-fn payloads_of(vecs: &[Vec<f32>]) -> Vec<Vec<u8>> {
+fn payloads_with(vecs: &[Vec<f32>], enc: Encoding) -> Vec<Vec<u8>> {
     vecs.iter()
         .enumerate()
-        .map(|(c, v)| encode_update(c as u32, 1, 200, v, Encoding::Auto))
+        .map(|(c, v)| encode_update(c as u32, 1, 200, v, enc))
         .collect()
+}
+
+fn payloads_of(vecs: &[Vec<f32>]) -> Vec<Vec<u8>> {
+    payloads_with(vecs, Encoding::Auto)
 }
 
 /// Fold one decoded view into the aggregator, sparse bodies sparsely.
@@ -122,6 +126,30 @@ fn main() {
 
             let mut scratch = DecodeScratch::default();
             let m = b.run(&format!("sparse_round/{tag}"), || {
+                let mut agg = StreamingFedAvg::new(p);
+                for payload in &payloads {
+                    let view = decode_update_view(payload, &mut scratch).unwrap();
+                    fold_view(&mut agg, &view);
+                }
+                Box::new(agg).finish().unwrap()
+            });
+            println!("{}", m.report(Some(((p * clients) as f64, "param"))));
+        }
+    }
+
+    // Per-encoding round folds at the masked density the paper sweeps:
+    // same cohort, every wire tag family — bytes on the wire and the
+    // decode+fold latency the server pays per round.
+    println!("== per-encoding round fold (vggmini P, gamma=0.1) ==");
+    {
+        let p = 51_666usize;
+        let vecs = sparse_vectors(p, clients, 0.1, 23);
+        for &enc in Encoding::ALL {
+            let payloads = payloads_with(&vecs, enc);
+            let total: usize = payloads.iter().map(Vec::len).sum();
+            println!("  {}: {} wire bytes for {} uploads", enc.as_str(), total, clients);
+            let mut scratch = DecodeScratch::default();
+            let m = b.run(&format!("enc_round/{}/gamma=0.1", enc.as_str()), || {
                 let mut agg = StreamingFedAvg::new(p);
                 for payload in &payloads {
                     let view = decode_update_view(payload, &mut scratch).unwrap();

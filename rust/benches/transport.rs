@@ -1,9 +1,11 @@
 //! Transport bench: codec encode/decode at model sizes across densities
-//! (the wire work per upload), plus 8-bit quantization. Establishes that
-//! transport never dominates a round (DESIGN.md §6 L3 target), and pits
-//! the bulk `chunks_exact` decoder against the seed's per-element cursor
-//! loop (`scalar_decode`, kept here as the baseline) and the owned decode
-//! against the scratch-reusing borrowed view.
+//! (the wire work per upload), per-encoding byte + latency measurements
+//! (dense / sparse / delta+varint / q8 / q4), plus raw quantizer
+//! throughput. Establishes that transport never dominates a round
+//! (DESIGN.md §6 L3 target), and pits the bulk `chunks_exact` decoder
+//! against the seed's per-element cursor loop (`scalar_decode`, kept here
+//! as the baseline) and the owned decode against the scratch-reusing
+//! borrowed view.
 //!
 //! Writes BENCH_transport.json at the repo root (the perf trajectory).
 //!
@@ -11,9 +13,9 @@
 
 use fedmask::sim::rng::Rng;
 use fedmask::transport::codec::{
-    decode_update, decode_update_view, encode_update, DecodeScratch, Encoding,
+    decode_update, decode_update_view, encode_update, wire_bytes, DecodeScratch, Encoding,
 };
-use fedmask::transport::quantize::{dequantize, quantize};
+use fedmask::transport::quantize::{dequantize, dequantize4, quantize, quantize4};
 use fedmask::util::bench::Bench;
 
 /// The seed decoder, preserved as a baseline: per-element cursor reads
@@ -66,7 +68,11 @@ fn main() {
                 encode_update(1, 1, 100, &params, Encoding::Auto)
             });
             println!("{}", m.report(Some((p as f64, "param"))));
-            let encoded = encode_update(1, 1, 100, &params, Encoding::Auto);
+            // the scalar baseline predates the entropy-coded tags: feed it
+            // the flat dense/sparse representation it understands
+            let nnz = params.iter().filter(|v| **v != 0.0).count();
+            let flat = if 8 * nnz < 4 * p { Encoding::Sparse } else { Encoding::Dense };
+            let encoded = encode_update(1, 1, 100, &params, flat);
 
             let m = b.run(&format!("decode_scalar/{model}/density={density}"), || {
                 scalar_decode(&encoded)
@@ -85,12 +91,50 @@ fn main() {
             println!("{}", m.report(Some((p as f64, "param"))));
         }
     }
-    println!("== 8-bit quantization (compression extension) ==");
+
+    // Per-encoding wire cost + latency at masked densities: the byte
+    // numbers land in the bench trajectory (iters-invariant, so the
+    // *_bytes measurements are comparable across machines) alongside the
+    // encode/decode latency of each tag family.
+    println!("== per-encoding wire bytes + encode/decode latency ==");
+    let p = 51_666usize; // vggmini P
+    for density in [0.1f32, 0.01] {
+        let params: Vec<f32> = (0..p)
+            .map(|_| if rng.next_f32() < density { rng.next_normal() } else { 0.0 })
+            .collect();
+        let nnz = params.iter().filter(|v| **v != 0.0).count();
+        for &enc in Encoding::ALL {
+            let tag = format!("{}/density={density}", enc.as_str());
+            let encoded = encode_update(1, 1, 100, &params, enc);
+            println!(
+                "  {tag}: {} bytes ({:.2} bytes/nnz, bound {})",
+                encoded.len(),
+                encoded.len() as f64 / nnz.max(1) as f64,
+                wire_bytes(p, nnz, enc),
+            );
+            let m = b.run(&format!("encode_enc/{tag}"), || {
+                encode_update(1, 1, 100, &params, enc)
+            });
+            println!("{}", m.report(Some((p as f64, "param"))));
+            let mut scratch = DecodeScratch::default();
+            let m = b.run(&format!("decode_enc/{tag}"), || {
+                decode_update_view(&encoded, &mut scratch).unwrap().n_samples
+            });
+            println!("{}", m.report(Some((p as f64, "param"))));
+        }
+    }
+
+    println!("== 8-bit / 4-bit quantization (compression extension) ==");
     let params: Vec<f32> = (0..51_666).map(|_| rng.next_normal()).collect();
     let m = b.run("quantize/vggmini", || quantize(&params).unwrap());
     println!("{}", m.report(Some((51_666f64, "param"))));
     let q = quantize(&params).unwrap();
     let m = b.run("dequantize/vggmini", || dequantize(&q));
+    println!("{}", m.report(Some((51_666f64, "param"))));
+    let m = b.run("quantize4/vggmini", || quantize4(&params).unwrap());
+    println!("{}", m.report(Some((51_666f64, "param"))));
+    let q4 = quantize4(&params).unwrap();
+    let m = b.run("dequantize4/vggmini", || dequantize4(&q4));
     println!("{}", m.report(Some((51_666f64, "param"))));
 
     b.write_trajectory("BENCH_transport.json");

@@ -242,15 +242,7 @@ impl ExperimentConfig {
                     NetworkKind::Simulated => "simulated",
                 }),
             ),
-            (
-                "encoding",
-                Json::str(match self.encoding {
-                    Encoding::Auto => "auto",
-                    Encoding::Dense => "dense",
-                    Encoding::Sparse => "sparse",
-                    Encoding::AutoQ8 => "auto-q8",
-                }),
-            ),
+            ("encoding", Json::str(self.encoding.as_str())),
             ("transport", Json::str(self.transport.as_str())),
             ("downlink_delta", Json::Bool(self.downlink_delta)),
             (
@@ -329,11 +321,8 @@ impl ExperimentConfig {
             Some(other) => return Err(Error::invalid(format!("bad network '{other}'"))),
         };
         cfg.encoding = match root.opt("encoding").map(|v| v.as_str()).transpose()? {
-            None | Some("auto") => Encoding::Auto,
-            Some("dense") => Encoding::Dense,
-            Some("sparse") => Encoding::Sparse,
-            Some("auto-q8") => Encoding::AutoQ8,
-            Some(other) => return Err(Error::invalid(format!("bad encoding '{other}'"))),
+            None => Encoding::Auto,
+            Some(s) => Encoding::parse(s)?,
         };
         cfg.transport = match root.opt("transport").map(|v| v.as_str()).transpose()? {
             None => TransportKind::InProcess,
@@ -406,6 +395,7 @@ mod tests {
         cfg.network = NetworkKind::Simulated;
         cfg.transport = TransportKind::Uds;
         cfg.downlink_delta = true;
+        cfg.encoding = Encoding::SparseDelta;
         cfg.aggregator = AggregatorKind::Attentive { temp: 0.5 };
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.label, cfg.label);
@@ -417,7 +407,25 @@ mod tests {
         assert_eq!(back.network, NetworkKind::Simulated);
         assert_eq!(back.transport, TransportKind::Uds);
         assert!(back.downlink_delta);
+        assert_eq!(back.encoding, Encoding::SparseDelta);
         assert_eq!(back.aggregator, AggregatorKind::Attentive { temp: 0.5 });
+    }
+
+    #[test]
+    fn every_encoding_spelling_round_trips_through_json() {
+        for &enc in Encoding::ALL {
+            let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+            cfg.encoding = enc;
+            let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.encoding, enc);
+        }
+        let root = json::parse(r#"{"model": "lenet", "encoding": "auto-q4"}"#).unwrap();
+        assert_eq!(
+            ExperimentConfig::from_json(&root).unwrap().encoding,
+            Encoding::AutoQ4
+        );
+        let root = json::parse(r#"{"model": "lenet", "encoding": "gzip"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&root).is_err());
     }
 
     #[test]

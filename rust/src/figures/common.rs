@@ -8,6 +8,7 @@ use crate::fl::server::{Server, ServerOutcome};
 use crate::metrics::csv::Table;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::pool::EnginePool;
+use crate::transport::codec::Encoding;
 use crate::transport::link::TransportKind;
 use crate::util::cli::{Args, OptSpec};
 use crate::util::error::Result;
@@ -21,6 +22,10 @@ pub const FIGURE_OPTS: &[OptSpec] = &[
     OptSpec::value("workers", "engine pool width"),
     OptSpec::value("artifacts", "artifacts directory (default ./artifacts)"),
     OptSpec::value("transport", "upload wire: inproc|tcp|uds (default inproc)"),
+    OptSpec::value(
+        "encoding",
+        "wire encoding: dense|sparse|sparse-delta|auto|auto-q8|auto-q4 (default auto)",
+    ),
     OptSpec::flag("paper-scale", "paper-size datasets (60k MNIST etc.)"),
     OptSpec::flag("quick", "coarser sweeps for a fast smoke run"),
 ];
@@ -36,6 +41,9 @@ pub struct FigureCtx {
     /// Upload transport override (`--transport tcp` reruns a whole sweep
     /// over real sockets; results are bitwise identical by construction).
     pub transport: Option<TransportKind>,
+    /// Wire-encoding override (`--encoding sparse-delta` reruns a sweep
+    /// under the entropy-coded wire; `auto-q4` adds 4-bit value loss).
+    pub encoding: Option<Encoding>,
     pub paper_scale: bool,
     pub quick: bool,
 }
@@ -61,6 +69,7 @@ impl FigureCtx {
                 .transpose()
                 .map_err(|_| crate::Error::invalid("--workers must be an integer"))?,
             transport: args.get("transport").map(TransportKind::parse).transpose()?,
+            encoding: args.get("encoding").map(Encoding::parse).transpose()?,
             paper_scale: args.has_flag("paper-scale"),
             quick: args.has_flag("quick"),
         })
@@ -79,6 +88,9 @@ impl FigureCtx {
         }
         if let Some(tr) = self.transport {
             cfg.transport = tr;
+        }
+        if let Some(enc) = self.encoding {
+            cfg.encoding = enc;
         }
         cfg.seed = self.seed;
         if self.paper_scale {
@@ -139,6 +151,7 @@ pub fn append_rounds(table: &mut Table, outcome: &ServerOutcome) {
             crate::metrics::csv::fmt(r.uplink_units),
             r.uplink_bytes.to_string(),
             r.downlink_bytes.to_string(),
+            crate::metrics::csv::fmt(r.downlink_recon_err),
             crate::metrics::csv::fmt(r.virtual_time_s),
         ]);
     }
@@ -158,6 +171,7 @@ pub fn rounds_header() -> Table {
         "uplink_units",
         "uplink_bytes",
         "downlink_bytes",
+        "downlink_recon_err",
         "virtual_time_s",
     ])
 }

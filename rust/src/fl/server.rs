@@ -16,7 +16,10 @@
 //! compute instead of barriering on the cohort (except under
 //! `network = "simulated"`, whose delivery-order modeling inherently
 //! buffers the round's uploads before the first fold — see
-//! [`Simulated`](crate::transport::link::Simulated)). Wire updates are matched
+//! [`Simulated`](crate::transport::link::Simulated)). The drain is a
+//! select-style wait over the pool-result channel and the wire
+//! ([`drain_round_uploads`]): a client job that dies surfaces its concrete
+//! error within one poll tick, never after the upload timeout. Wire updates are matched
 //! to the cohort by their own header (selected client, current round,
 //! model dimension, no duplicates), so out-of-order socket delivery is
 //! fine. Sparse payloads fold in
@@ -33,12 +36,13 @@
 //! same config reproduces bit-identical runs regardless of pool width or
 //! arrival order.
 
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::experiment::{ExperimentConfig, NetworkKind};
 use crate::data::{batcher, loader, partition, Dataset};
-use crate::fl::aggregate::{make_aggregator, Contribution, SparseContribution};
+use crate::fl::aggregate::{make_aggregator, Aggregator, Contribution, SparseContribution};
 use crate::fl::client::{ClientJob, ShardRef};
 use crate::metrics::recorder::{RoundRecord, RunRecorder};
 use crate::runtime::engine::EvalSums;
@@ -52,7 +56,9 @@ use crate::transport::codec::{
     decode_update, decode_update_view, encode_update, wire_bytes, BodyView, DecodeScratch, Encoding,
 };
 use crate::transport::cost::CostLedger;
-use crate::transport::link::{InProcess, Simulated, Transport, TransportKind, UploadSink};
+use crate::transport::link::{
+    InProcess, Simulated, Transport, TransportKind, UploadSink, DEFAULT_UPLOAD_TIMEOUT,
+};
 use crate::transport::network::NetworkModel;
 use crate::transport::socket::Loopback;
 use crate::util::error::{Error, Result};
@@ -87,6 +93,197 @@ fn reject_upload(rejected: &mut usize, tolerate: bool, why: impl std::fmt::Displ
     Ok(())
 }
 
+/// Sideband metadata one client job reports through the pool channel:
+/// (train loss, nnz, encoded payload bytes).
+type JobMeta = (f32, usize, usize);
+
+/// How long the drain loop waits on the wire before re-polling the pool's
+/// result channel. Small enough that a dead client's concrete job error
+/// surfaces within a poll tick; large enough that a healthy round spends
+/// its time blocked in the transport, not spinning.
+const DRAIN_POLL: Duration = Duration::from_millis(25);
+
+/// Drain one round's uploads: a select-style wait over the **pool-result
+/// channel** (job metadata / job errors) and the **wire** (encoded
+/// payloads), folding each valid payload into `agg` the moment it lands.
+///
+/// The two streams are independent — a payload can beat its metadata and
+/// vice versa — so the loop alternates: drain every ready pool result
+/// (a failed client job surfaces its concrete error *here, immediately*,
+/// instead of after the full upload timeout — the wire can never deliver
+/// the payload a dead job didn't send), then wait at most [`DRAIN_POLL`]
+/// for the next payload. Wire arrivals are matched to the cohort by their
+/// own header (selected client, current round, model dimension, no
+/// duplicates); invalid ones are dropped on a bounded budget when the
+/// transport `tolerate_strays`, and fail the round precisely otherwise.
+///
+/// `upload_timeout` is an **inactivity** bound, matching the old per-recv
+/// semantics: the window restarts whenever the round makes progress (a
+/// payload folds or a job reports), so a large cohort legitimately
+/// draining for longer than the timeout never trips it — only a round
+/// where nothing happens for the whole window does.
+///
+/// Returns the per-job metadata in input (client-id) order once every job
+/// reported and every upload folded. Free function by design: it needs no
+/// engine, so the dead-client regression tests drive it directly with
+/// hand-built channels and transports.
+#[allow(clippy::too_many_arguments)] // round context; precedent: data/synth.rs
+fn drain_round_uploads(
+    transport: &mut dyn Transport,
+    results: &Receiver<(usize, Result<JobMeta>)>,
+    agg: &mut dyn Aggregator,
+    scratch: &mut DecodeScratch,
+    selected: &[usize],
+    round: usize,
+    p: usize,
+    tolerate_strays: bool,
+    upload_timeout: Duration,
+) -> Result<Vec<JobMeta>> {
+    let n_jobs = selected.len();
+    let mut metas: Vec<Option<JobMeta>> = vec![None; n_jobs];
+    let mut uploaded = vec![false; n_jobs];
+    let mut metas_pending = n_jobs;
+    let mut folds_pending = n_jobs;
+    let mut rejected = 0usize;
+    let mut results_open = true;
+    // Inactivity deadline: pushed forward on every piece of progress.
+    let mut deadline = Instant::now() + upload_timeout;
+
+    while metas_pending > 0 || folds_pending > 0 {
+        // 1) Surface every ready job result without blocking. `res?` is the
+        //    headline path: a client job that died reports its concrete
+        //    error here on the next poll tick.
+        while results_open && metas_pending > 0 {
+            match results.try_recv() {
+                Ok((idx, res)) => {
+                    metas[idx] = Some(res?);
+                    metas_pending -= 1;
+                    deadline = Instant::now() + upload_timeout;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => results_open = false,
+            }
+        }
+        if !results_open && metas_pending > 0 {
+            // Every sender is gone but some job never reported: its worker
+            // thread died (e.g. a panicking client) — fail now; the wire
+            // will never deliver its upload.
+            return Err(Error::Engine("worker dropped job (thread died?)".into()));
+        }
+        if folds_pending == 0 {
+            // All payloads folded; only metadata is outstanding. Block on
+            // the result channel directly (bounded by the round deadline).
+            let window = deadline
+                .checked_duration_since(Instant::now())
+                .filter(|w| !w.is_zero())
+                .ok_or_else(|| {
+                    Error::transport(format!(
+                        "timed out after {upload_timeout:?} waiting for job results"
+                    ))
+                })?;
+            match results.recv_timeout(window.min(DRAIN_POLL)) {
+                Ok((idx, res)) => {
+                    metas[idx] = Some(res?);
+                    metas_pending -= 1;
+                    deadline = Instant::now() + upload_timeout;
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => results_open = false,
+            }
+            continue;
+        }
+
+        // 2) Bounded wait for the next wire payload.
+        let window = deadline
+            .checked_duration_since(Instant::now())
+            .filter(|w| !w.is_zero())
+            .ok_or_else(|| {
+                let missing: Vec<usize> = selected
+                    .iter()
+                    .zip(&uploaded)
+                    .filter(|(_, up)| !**up)
+                    .map(|(c, _)| *c)
+                    .collect();
+                Error::transport(format!(
+                    "timed out after {upload_timeout:?} waiting for uploads from clients {missing:?}"
+                ))
+            })?;
+        let Some(payload) = transport.try_recv_for(window.min(DRAIN_POLL))? else {
+            continue;
+        };
+
+        // 3) Decode + cohort-validate + fold. Invalid payloads are dropped
+        //    on a bounded budget (fold failures stay fatal — they can leave
+        //    the accumulator partially updated, and our own cohort's
+        //    payloads are codec-clean).
+        let update = match decode_update_view(&payload, scratch) {
+            Ok(u) => u,
+            Err(e) => {
+                reject_upload(&mut rejected, tolerate_strays, e)?;
+                continue;
+            }
+        };
+        if update.round as usize != round {
+            reject_upload(
+                &mut rejected,
+                tolerate_strays,
+                format_args!(
+                    "client {} names round {}, server is on round {round}",
+                    update.client, update.round
+                ),
+            )?;
+            continue;
+        }
+        let pos = match selected.binary_search(&(update.client as usize)) {
+            Ok(pos) => pos,
+            Err(_) => {
+                reject_upload(
+                    &mut rejected,
+                    tolerate_strays,
+                    format_args!("client {} not in this round's cohort", update.client),
+                )?;
+                continue;
+            }
+        };
+        if uploaded[pos] {
+            reject_upload(
+                &mut rejected,
+                tolerate_strays,
+                format_args!("duplicate update from client {}", update.client),
+            )?;
+            continue;
+        }
+        if update.p != p {
+            reject_upload(
+                &mut rejected,
+                tolerate_strays,
+                format_args!("carries {} params, model has {}", update.p, p),
+            )?;
+            continue;
+        }
+        uploaded[pos] = true;
+        let client = update.client as usize;
+        match update.body {
+            BodyView::Dense(params) => agg.fold(Contribution {
+                client,
+                params,
+                n_samples: update.n_samples,
+            })?,
+            BodyView::Sparse { indices, values } => agg.fold_sparse(SparseContribution {
+                client,
+                p: update.p,
+                indices,
+                values,
+                n_samples: update.n_samples,
+            })?,
+        }
+        folds_pending -= 1;
+        deadline = Instant::now() + upload_timeout;
+    }
+    debug_assert_eq!(agg.folded(), n_jobs);
+    Ok(metas.into_iter().map(|m| m.expect("all jobs accounted")).collect())
+}
+
 /// Per-client downlink cost of one round's broadcast.
 struct BroadcastWire {
     /// Encoded bytes for a client holding the previous broadcast state.
@@ -96,6 +293,12 @@ struct BroadcastWire {
     /// Encoded bytes for a client that needs the full model (first
     /// broadcast, or selected after sitting out the previous round).
     dense_bytes: usize,
+    /// Max |reconstructed - global| over all coordinates this round — the
+    /// delta-downlink fidelity evidence (0.0 for dense broadcasts). The
+    /// server asserts it against the codec's quantizer half-step; the
+    /// figure sweeps record it per round so flipping the `downlink_delta`
+    /// default is a data-backed decision.
+    recon_err: f64,
 }
 
 /// Result of a completed run.
@@ -297,15 +500,17 @@ impl Server {
                 delta_bytes: dense_bytes,
                 delta_nnz: self.p,
                 dense_bytes,
+                recon_err: 0.0,
             };
             return Ok((Arc::clone(&self.params), wire));
         }
-        let (received, delta_bytes, delta_nnz) = match self.prev_broadcast.take() {
+        let (received, delta_bytes, delta_nnz, recon_err) = match self.prev_broadcast.take() {
             None => {
-                // First broadcast: no client-side reference model yet.
+                // First broadcast: no client-side reference model yet. The
+                // dense f32 wire is bit-exact, so reconstruction error is 0.
                 let wire =
                     encode_update(BROADCAST_SENDER, t as u32, 0, &self.params, Encoding::Dense);
-                (decode_update(&wire)?.into_dense(), wire.len(), self.p)
+                (decode_update(&wire)?.into_dense(), wire.len(), self.p, 0.0f64)
             }
             Some(prev) => {
                 let delta: Vec<f32> = self
@@ -323,7 +528,41 @@ impl Server {
                     .zip(prev.iter())
                     .map(|(d, old)| old + d)
                     .collect();
-                (received, wire.len(), nnz)
+                // Fidelity check: the reconstructed broadcast may differ
+                // from the true global model by (a) the codec's quantizer
+                // half-step (zero for lossless encodings) and (b) f32
+                // rounding of `old + d`. Anything beyond that bound is a
+                // codec-contract violation and must fail loudly rather
+                // than silently training the fleet on a drifted model.
+                let recon_err = received
+                    .iter()
+                    .zip(self.params.iter())
+                    .map(|(r, w)| (r - w).abs() as f64)
+                    .fold(0.0f64, f64::max);
+                let (lo, hi) = delta
+                    .iter()
+                    .fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), &d| {
+                        (lo.min(d), hi.max(d))
+                    });
+                let half_step = if nnz == 0 {
+                    0.0
+                } else {
+                    self.cfg.encoding.lossy_half_step(lo, hi) as f64
+                };
+                let max_abs = self
+                    .params
+                    .iter()
+                    .map(|w| w.abs())
+                    .fold(0.0f32, f32::max) as f64;
+                let bound = half_step + 1e-5 * (1.0 + max_abs);
+                if recon_err > bound {
+                    return Err(Error::invalid(format!(
+                        "round {t}: downlink delta reconstruction error {recon_err:.3e} exceeds \
+                         the quantizer half-step bound {bound:.3e} ({})",
+                        self.cfg.encoding.as_str()
+                    )));
+                }
+                (received, wire.len(), nnz, recon_err)
             }
         };
         let received = Arc::new(received);
@@ -334,6 +573,7 @@ impl Server {
                 delta_bytes,
                 delta_nnz,
                 dense_bytes,
+                recon_err,
             },
         ))
     }
@@ -401,123 +641,38 @@ impl Server {
             })
             .collect();
 
-        // Streaming aggregation: each completed job has already pushed its
-        // payload into the transport, so for every metadata arrival we pull
-        // one payload off the wire, decode it into a borrowed view (sparse
-        // bodies stay sparse) and fold it — still overlapping the slowest
-        // clients' compute. Payload and metadata arrival orders may differ
-        // (sockets deliver in connection order, the simulated network in
-        // upload-time order), so each wire update is matched to the cohort
-        // by its own header: it must name a selected client, this round,
-        // the right dimension, and no client may upload twice.
-        // Metadata for cost/metric accounting is parked per input index so
-        // the ledger and logs stay in deterministic client-id order.
+        // Streaming aggregation: each completed job pushes its payload into
+        // the transport, and `drain_round_uploads` runs a select-style wait
+        // over the pool-result channel and the wire — folding each payload
+        // (borrowed view, sparse bodies stay sparse) the moment it lands
+        // while surfacing any job's concrete error within a poll tick
+        // instead of after the upload timeout. Wire updates are matched to
+        // the cohort by their own header, so out-of-order socket delivery
+        // is fine; metadata is parked per input index so the ledger and
+        // logs stay in deterministic client-id order.
         let n_jobs = jobs.len();
         self.transport.begin_round(n_jobs);
         let mut agg =
             make_aggregator(self.cfg.aggregator, self.cfg.mask_target, &broadcast, &self.layers)?;
-        let mut metas: Vec<Option<(f32, usize, usize)>> = vec![None; n_jobs];
-        let mut uploaded = vec![false; n_jobs];
-        let mut rejected = 0usize;
         let tolerate_strays = self.transport.accepts_foreign_peers();
         let results = self.pool.map_unordered_with(jobs);
-        for (idx, res) in &results {
-            let meta = res?;
-            // Pull payloads until one passes decode + cohort validation;
-            // invalid ones are dropped on a bounded budget (fold failures
-            // stay fatal — they can leave the accumulator partially
-            // updated, and our own cohort's payloads are codec-clean).
-            loop {
-                let payload = match self.transport.recv() {
-                    Ok(p) => p,
-                    Err(te) => {
-                        // A missing upload usually means a *later* job died
-                        // before sending (under `Simulated` the first recv
-                        // barriers on the whole cohort): drain the remaining
-                        // job results and surface the concrete job error
-                        // over the generic transport timeout when one
-                        // exists.
-                        while let Ok((_, r)) = results.recv_timeout(Duration::from_secs(5)) {
-                            r?;
-                        }
-                        return Err(te);
-                    }
-                };
-                let update = match decode_update_view(&payload, &mut self.decode_scratch) {
-                    Ok(u) => u,
-                    Err(e) => {
-                        reject_upload(&mut rejected, tolerate_strays, e)?;
-                        continue;
-                    }
-                };
-                if update.round as usize != t {
-                    reject_upload(
-                        &mut rejected,
-                        tolerate_strays,
-                        format_args!(
-                            "client {} names round {}, server is on round {t}",
-                            update.client, update.round
-                        ),
-                    )?;
-                    continue;
-                }
-                let pos = match selected.binary_search(&(update.client as usize)) {
-                    Ok(pos) => pos,
-                    Err(_) => {
-                        reject_upload(
-                            &mut rejected,
-                            tolerate_strays,
-                            format_args!("client {} not in this round's cohort", update.client),
-                        )?;
-                        continue;
-                    }
-                };
-                if uploaded[pos] {
-                    reject_upload(
-                        &mut rejected,
-                        tolerate_strays,
-                        format_args!("duplicate update from client {}", update.client),
-                    )?;
-                    continue;
-                }
-                if update.p != self.p {
-                    reject_upload(
-                        &mut rejected,
-                        tolerate_strays,
-                        format_args!("carries {} params, model has {}", update.p, self.p),
-                    )?;
-                    continue;
-                }
-                uploaded[pos] = true;
-                let client = update.client as usize;
-                match update.body {
-                    BodyView::Dense(params) => agg.fold(Contribution {
-                        client,
-                        params,
-                        n_samples: update.n_samples,
-                    })?,
-                    BodyView::Sparse { indices, values } => agg.fold_sparse(SparseContribution {
-                        client,
-                        p: update.p,
-                        indices,
-                        values,
-                        n_samples: update.n_samples,
-                    })?,
-                }
-                break;
-            }
-            metas[idx] = Some(meta);
-        }
-        if agg.folded() < n_jobs {
-            return Err(Error::Engine("worker dropped job (thread died?)".into()));
-        }
+        let metas = drain_round_uploads(
+            self.transport.as_mut(),
+            &results,
+            agg.as_mut(),
+            &mut self.decode_scratch,
+            &selected,
+            t,
+            self.p,
+            tolerate_strays,
+            DEFAULT_UPLOAD_TIMEOUT,
+        )?;
         self.params = Arc::new(agg.finish()?);
 
         // Uplink accounting + virtual time, in client-id (input) order.
         let mut upload_sizes = Vec::with_capacity(n_jobs);
         let mut loss_sum = 0.0f64;
-        for meta in &metas {
-            let (train_loss, nnz, bytes) = meta.expect("all jobs accounted");
+        for &(train_loss, nnz, bytes) in &metas {
             self.ledger.record_upload(self.p, nnz, bytes);
             upload_sizes.push(bytes);
             loss_sum += train_loss as f64;
@@ -554,6 +709,7 @@ impl Server {
             uplink_units: self.ledger.uplink_units,
             uplink_bytes: self.ledger.uplink_bytes,
             downlink_bytes: self.ledger.downlink_bytes,
+            downlink_recon_err: wire.recon_err,
             virtual_time_s: self.clock.now(),
         };
         self.recorder.push(rec.clone());
@@ -598,5 +754,282 @@ impl Server {
             final_params: Arc::try_unwrap(self.params).unwrap_or_else(|arc| (*arc).clone()),
             ledger: self.ledger,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine-free tests of the round drain loop: `drain_round_uploads`
+    //! takes only channels, a transport, and an aggregator, so the
+    //! dead-client regression (ROADMAP item (c)) is pinned here without
+    //! PJRT artifacts.
+
+    use super::*;
+    use crate::config::experiment::AggregatorKind;
+    use crate::fl::masking::MaskTarget;
+    use crate::runtime::manifest::LayerInfo;
+    use crate::transport::network::NetworkModel;
+    use std::sync::mpsc::channel;
+
+    const P: usize = 16;
+
+    fn layers() -> Vec<LayerInfo> {
+        vec![LayerInfo {
+            name: "w".into(),
+            shape: vec![P],
+            offset: 0,
+            size: P,
+            masked: true,
+        }]
+    }
+
+    fn payload_for(client: u32, round: u32) -> Vec<u8> {
+        let mut params = vec![0.0f32; P];
+        params[client as usize] = 1.0 + client as f32;
+        encode_update(client, round, 10 + client, &params, Encoding::Auto)
+    }
+
+    fn fresh_agg() -> Box<dyn Aggregator> {
+        let broadcast = vec![0.0f32; P];
+        make_aggregator(AggregatorKind::FedAvg, MaskTarget::Weights, &broadcast, &layers())
+            .unwrap()
+    }
+
+    /// Build a simulated-network transport over in-process channels — the
+    /// configuration whose first recv used to barrier on the whole cohort
+    /// and wait out the 300 s upload timeout when a client died.
+    fn simulated_transport() -> Simulated {
+        Simulated::new(Box::new(InProcess::new()), NetworkModel::default())
+    }
+
+    /// Headline regression: under `network = "simulated"`, a client job
+    /// that dies (here: its worker panics before sending anything) fails
+    /// the round with the pool's error in well under the upload timeout —
+    /// the old drain waited out the full 300 s first.
+    #[test]
+    fn dead_client_fails_the_round_immediately_not_after_the_upload_timeout() {
+        let mut transport = simulated_transport();
+        let sink = transport.sink();
+        let selected = vec![0usize, 1];
+        transport.begin_round(selected.len());
+        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+
+        // client 0 completes normally: payload over the wire + metadata
+        let payload = payload_for(0, 1);
+        let bytes = payload.len();
+        sink.send(payload).unwrap();
+        tx.send((0, Ok((0.5, 1, bytes)))).unwrap();
+
+        // client 1 "panics": its worker thread unwinds, dropping the reply
+        // sender without ever sending a payload or metadata
+        let tx1 = tx.clone();
+        let victim = std::thread::spawn(move || {
+            let _held_until_unwind = tx1;
+            panic!("client 1 panicked mid-round");
+        });
+        assert!(victim.join().is_err());
+        drop(tx);
+
+        let started = Instant::now();
+        let mut agg = fresh_agg();
+        let err = drain_round_uploads(
+            &mut transport,
+            &results,
+            agg.as_mut(),
+            &mut DecodeScratch::default(),
+            &selected,
+            1,
+            P,
+            false,
+            DEFAULT_UPLOAD_TIMEOUT,
+        )
+        .unwrap_err();
+        let elapsed = started.elapsed();
+        assert!(matches!(err, Error::Engine(_)), "{err}");
+        assert!(
+            elapsed < Duration::from_secs(5),
+            "dead client took {elapsed:?} to surface (budget 5 s, old behavior 300 s)"
+        );
+    }
+
+    /// A job that returns a concrete error (rather than dying) surfaces
+    /// that exact error immediately, even though its upload never arrives
+    /// and the simulated network is still barriering on the cohort.
+    #[test]
+    fn failed_job_error_beats_the_wire_timeout_and_names_the_cause() {
+        let mut transport = simulated_transport();
+        let sink = transport.sink();
+        let selected = vec![0usize, 1];
+        transport.begin_round(selected.len());
+        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+
+        let payload = payload_for(0, 1);
+        let bytes = payload.len();
+        sink.send(payload).unwrap();
+        tx.send((0, Ok((0.5, 1, bytes)))).unwrap();
+        tx.send((1, Err(Error::Engine("client 1 exploded".into())))).unwrap();
+
+        let started = Instant::now();
+        let mut agg = fresh_agg();
+        let err = drain_round_uploads(
+            &mut transport,
+            &results,
+            agg.as_mut(),
+            &mut DecodeScratch::default(),
+            &selected,
+            1,
+            P,
+            false,
+            DEFAULT_UPLOAD_TIMEOUT,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("client 1 exploded"), "{err}");
+        assert!(started.elapsed() < Duration::from_secs(5));
+    }
+
+    /// Healthy rounds still work through the polling drain: payloads and
+    /// metadata arriving in scrambled, interleaved order all fold, and the
+    /// metadata comes back in input order.
+    #[test]
+    fn drain_folds_cohort_with_scrambled_arrival_orders() {
+        for use_simulated in [false, true] {
+            let mut transport: Box<dyn Transport> = if use_simulated {
+                Box::new(simulated_transport())
+            } else {
+                Box::new(InProcess::new())
+            };
+            let sink = transport.sink();
+            let selected = vec![0usize, 1, 2];
+            transport.begin_round(selected.len());
+            let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+
+            // metadata for 2 lands before its payload; payload order 1,2,0
+            let payloads: Vec<Vec<u8>> =
+                (0..3).map(|c| payload_for(c as u32, 7)).collect();
+            tx.send((2, Ok((0.2, 1, payloads[2].len())))).unwrap();
+            sink.send(payloads[1].clone()).unwrap();
+            sink.send(payloads[2].clone()).unwrap();
+            tx.send((0, Ok((0.0, 1, payloads[0].len())))).unwrap();
+            sink.send(payloads[0].clone()).unwrap();
+            tx.send((1, Ok((0.1, 1, payloads[1].len())))).unwrap();
+            drop(tx);
+
+            let mut agg = fresh_agg();
+            let metas = drain_round_uploads(
+                transport.as_mut(),
+                &results,
+                agg.as_mut(),
+                &mut DecodeScratch::default(),
+                &selected,
+                7,
+                P,
+                false,
+                Duration::from_secs(30),
+            )
+            .unwrap();
+            assert_eq!(metas.len(), 3);
+            for (i, (loss, nnz, bytes)) in metas.iter().enumerate() {
+                assert_eq!(*loss, 0.1 * i as f32);
+                assert_eq!(*nnz, 1);
+                assert_eq!(*bytes, payloads[i].len());
+            }
+            // the fold saw all three contributions
+            let out = agg.finish().unwrap();
+            let total: u32 = 10 + 11 + 12;
+            for c in 0..3usize {
+                let want = (1.0 + c as f32) * (10 + c as u32) as f32 / total as f32;
+                assert!(
+                    (out[c] - want).abs() < 1e-6,
+                    "coord {c}: {} vs {want} (simulated={use_simulated})",
+                    out[c]
+                );
+            }
+        }
+    }
+
+    /// An upload that never arrives (job reported fine but the payload was
+    /// lost) times out with a typed transport error naming the missing
+    /// clients — using a short timeout to keep the test fast.
+    #[test]
+    fn missing_upload_times_out_with_missing_clients_named() {
+        let mut transport = InProcess::new();
+        let selected = vec![4usize, 9];
+        transport.begin_round(selected.len());
+        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+        tx.send((0, Ok((0.0, 1, 10)))).unwrap();
+        tx.send((1, Ok((0.0, 1, 10)))).unwrap();
+        drop(tx);
+
+        let mut agg = fresh_agg();
+        let err = drain_round_uploads(
+            &mut transport,
+            &results,
+            agg.as_mut(),
+            &mut DecodeScratch::default(),
+            &selected,
+            1,
+            P,
+            false,
+            Duration::from_millis(150),
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Transport(_)), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("timed out") && msg.contains('4') && msg.contains('9'), "{msg}");
+    }
+
+    /// On a closed (in-process) wire an invalid payload fails the round
+    /// precisely; on an open wire it is dropped and the genuine upload
+    /// still folds.
+    #[test]
+    fn stray_payload_policy_follows_the_transport() {
+        // closed wire: wrong-round payload is an internal bug -> error
+        let mut transport = InProcess::new();
+        let sink = transport.sink();
+        let selected = vec![0usize];
+        transport.begin_round(1);
+        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+        let good = payload_for(0, 3);
+        tx.send((0, Ok((0.0, 1, good.len())))).unwrap();
+        sink.send(payload_for(0, 99)).unwrap();
+        let mut agg = fresh_agg();
+        let err = drain_round_uploads(
+            &mut transport,
+            &results,
+            agg.as_mut(),
+            &mut DecodeScratch::default(),
+            &selected,
+            3,
+            P,
+            false,
+            Duration::from_secs(5),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("round"), "{err}");
+
+        // open wire: the stray is dropped, the genuine upload folds
+        let mut transport = InProcess::new();
+        let sink = transport.sink();
+        transport.begin_round(1);
+        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+        tx.send((0, Ok((0.0, 1, good.len())))).unwrap();
+        drop(tx);
+        sink.send(payload_for(0, 99)).unwrap();
+        sink.send(good).unwrap();
+        let mut agg = fresh_agg();
+        let metas = drain_round_uploads(
+            &mut transport,
+            &results,
+            agg.as_mut(),
+            &mut DecodeScratch::default(),
+            &selected,
+            3,
+            P,
+            true,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert_eq!(metas.len(), 1);
+        assert_eq!(agg.folded(), 1);
     }
 }

@@ -12,6 +12,7 @@ use fedmask::config::experiment::ExperimentConfig;
 use fedmask::figures;
 use fedmask::fl::server::Server;
 use fedmask::runtime::manifest::Manifest;
+use fedmask::transport::codec::Encoding;
 use fedmask::transport::cost::eq6_cost;
 use fedmask::transport::link::TransportKind;
 use fedmask::util::cli::{render_help, Args, OptSpec};
@@ -23,6 +24,10 @@ const RUN_OPTS: &[OptSpec] = &[
     OptSpec::value("out", "write per-round CSV here"),
     OptSpec::value("save-config", "write the resolved config JSON here"),
     OptSpec::value("transport", "upload wire: inproc|tcp|uds (overrides config)"),
+    OptSpec::value(
+        "encoding",
+        "wire encoding: dense|sparse|sparse-delta|auto|auto-q8|auto-q4 (overrides config)",
+    ),
 ];
 
 const EQ6_OPTS: &[OptSpec] = &[
@@ -64,6 +69,9 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let mut cfg = ExperimentConfig::load(std::path::Path::new(config_path))?;
     if let Some(spec) = args.get("transport") {
         cfg.transport = TransportKind::parse(spec)?;
+    }
+    if let Some(spec) = args.get("encoding") {
+        cfg.encoding = Encoding::parse(spec)?;
     }
     if let Some(path) = args.get("save-config") {
         cfg.save(std::path::Path::new(path))?;

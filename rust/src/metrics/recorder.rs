@@ -26,6 +26,11 @@ pub struct RoundRecord {
     /// Cumulative downlink bytes (codec-accurate; shrinks under
     /// delta-encoded broadcasts).
     pub downlink_bytes: u64,
+    /// Max |reconstructed - global| of this round's broadcast under
+    /// `downlink_delta` (0.0 for dense broadcasts). The server asserts it
+    /// stays within the codec's quantizer half-step; the figure sweeps
+    /// record it so flipping the delta-downlink default is data-backed.
+    pub downlink_recon_err: f64,
     /// Virtual wall-clock seconds elapsed.
     pub virtual_time_s: f64,
 }
@@ -87,6 +92,7 @@ impl RunRecorder {
             "uplink_units",
             "uplink_bytes",
             "downlink_bytes",
+            "downlink_recon_err",
             "virtual_time_s",
         ]);
         for r in &self.rounds {
@@ -102,6 +108,7 @@ impl RunRecorder {
                 fmt(r.uplink_units),
                 r.uplink_bytes.to_string(),
                 r.downlink_bytes.to_string(),
+                fmt(r.downlink_recon_err),
                 fmt(r.virtual_time_s),
             ]);
         }
@@ -146,6 +153,7 @@ mod tests {
             uplink_units: units,
             uplink_bytes: (units * 1000.0) as u64,
             downlink_bytes: (units * 4000.0) as u64,
+            downlink_recon_err: 0.0,
             virtual_time_s: round as f64,
         }
     }

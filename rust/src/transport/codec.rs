@@ -2,17 +2,36 @@
 //! (and optionally server->client) data path, not just byte accounting.
 //!
 //! A masked update is mostly zeros; shipping it densely would throw the
-//! paper's saving away. The codec picks the cheaper of:
+//! paper's saving away. The codec chooses between:
 //!
 //! * **dense**  — header + P * 4 bytes of f32;
-//! * **sparse** — header + nnz * (4-byte index + 4-byte value).
+//! * **sparse** — header + nnz * (4-byte index + 4-byte value);
+//! * **sparse-delta** — header + nnz varint-coded index deltas + nnz * 4
+//!   value bytes. Because decoded indices are strictly increasing, each
+//!   index is stored as its gap from the previous one in LEB128 varint
+//!   form — for the clustered / low-gamma index sets masking produces,
+//!   most gaps fit one byte, cutting the 4-byte flat index cost toward
+//!   the entropy floor (paper §1's "cutting-edge compression" remark);
+//! * **q8 / q4 value quantization** — 8-bit (one byte per value) or 4-bit
+//!   (two values per byte) linear codes on the shared fixed-point grid
+//!   `min + scale * code` (see [`crate::transport::quantize`]), stacked
+//!   under the dense/sparse choice.
 //!
-//! Sparse wins whenever nnz < P/2 — exactly the masked regimes the paper
-//! sweeps (gamma <= 0.5 strictly, and layered masking keeps biases dense so
-//! the crossover is measured, not assumed). All integers are little-endian;
-//! the header carries (client id, round, sample count) for the aggregator —
-//! `ClientJob::run` encodes, `Server::run_round` decodes and folds, and
-//! nothing else ever sees the raw parameter vector in between.
+//! All integers are little-endian; the header carries (client id, round,
+//! sample count) for the aggregator — `ClientJob::run` encodes,
+//! `Server::run_round` decodes and folds, and nothing else ever sees the
+//! raw parameter vector in between. The complete wire grammar (tag table,
+//! varint canonicality rules, nibble packing) lives in `docs/WIRE.md`.
+//!
+//! ## Size selection
+//!
+//! [`Encoding::Auto`] (lossless) and [`Encoding::AutoQ4`]/[`Encoding::AutoQ8`]
+//! (lossy) pick the cheapest representation **by exact encoded length**,
+//! computed up front from the payload (varint totals included) — never by a
+//! shape-only heuristic — so an auto encoding never emits more bytes than
+//! the best fixed encoding at its loss level. [`wire_bytes`] stays exact
+//! for the fixed-size encodings and returns a documented upper bound for
+//! the payload-dependent ones.
 //!
 //! ## Sparse-native decoding
 //!
@@ -35,7 +54,7 @@
 //! (`chunks_exact` over the body slice) rather than per-element cursor
 //! reads.
 
-use crate::transport::quantize::{quantize, Quantized};
+use crate::transport::quantize::{q4_code, quantize, quantize4, Quantized, Quantized4};
 use crate::util::error::{Error, Result};
 
 /// Magic + version guard ("FM" + v1).
@@ -46,23 +65,173 @@ const TAG_DENSE: u8 = 0;
 const TAG_SPARSE: u8 = 1;
 const TAG_DENSE_Q8: u8 = 2;
 const TAG_SPARSE_Q8: u8 = 3;
+const TAG_SPARSE_DELTA: u8 = 4;
+const TAG_DENSE_Q4: u8 = 5;
+const TAG_SPARSE_DELTA_Q4: u8 = 6;
 
 /// Fixed header: magic(2) version(1) tag(1) client(4) round(4)
 /// n_samples(4) p(4) count(4).
 const HEADER_BYTES: usize = 24;
+
+/// Quantized-body prefix: min f32 + scale f32.
+const QHEADER: usize = 8;
 
 /// Chosen wire representation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Encoding {
     Dense,
     Sparse,
-    /// Pick whichever is smaller for the given payload.
+    /// Entropy-coded sparse: strictly-increasing indices stored as
+    /// delta-then-LEB128-varint, values as f32. Lossless, like `Sparse`,
+    /// but the per-index cost shrinks from a flat 4 bytes to the varint
+    /// length of the gap (1 byte for gaps < 128).
+    SparseDelta,
+    /// Pick the smallest lossless representation (dense / sparse /
+    /// sparse-delta) for the given payload, by exact encoded length.
     Auto,
     /// 8-bit linear quantization stacked on the auto dense/sparse choice
     /// (paper §1: masking "can also be combined with cutting-edge
     /// compression algorithms"). Lossy: values dequantize within half a
     /// quantization step (see [`crate::transport::quantize`]).
     AutoQ8,
+    /// 4-bit linear quantization (two codes per byte, same fixed-point
+    /// grid contract as q8) stacked on the auto dense/sparse-delta choice.
+    /// Lossy: half a (coarser) quantization step.
+    AutoQ4,
+}
+
+impl Encoding {
+    /// Parse the CLI/JSON spelling.
+    pub fn parse(s: &str) -> Result<Encoding> {
+        match s {
+            "dense" => Ok(Encoding::Dense),
+            "sparse" => Ok(Encoding::Sparse),
+            "sparse-delta" => Ok(Encoding::SparseDelta),
+            "auto" => Ok(Encoding::Auto),
+            "auto-q8" => Ok(Encoding::AutoQ8),
+            "auto-q4" => Ok(Encoding::AutoQ4),
+            other => Err(Error::invalid(format!(
+                "bad encoding '{other}' (expected dense|sparse|sparse-delta|auto|auto-q8|auto-q4)"
+            ))),
+        }
+    }
+
+    /// Canonical config spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Encoding::Dense => "dense",
+            Encoding::Sparse => "sparse",
+            Encoding::SparseDelta => "sparse-delta",
+            Encoding::Auto => "auto",
+            Encoding::AutoQ8 => "auto-q8",
+            Encoding::AutoQ4 => "auto-q4",
+        }
+    }
+
+    /// All encodings, for exhaustive tests/benches.
+    pub const ALL: &'static [Encoding] = &[
+        Encoding::Dense,
+        Encoding::Sparse,
+        Encoding::SparseDelta,
+        Encoding::Auto,
+        Encoding::AutoQ8,
+        Encoding::AutoQ4,
+    ];
+
+    /// Half the dequantization step this encoding can introduce on values
+    /// spanning `[lo, hi]` — the per-value error bound of a lossy encoding,
+    /// `0.0` for lossless ones. Callers that reconstruct state from a
+    /// decoded message (the delta downlink) assert their reconstruction
+    /// error against this bound.
+    pub fn lossy_half_step(&self, lo: f32, hi: f32) -> f32 {
+        let range = (hi - lo).max(0.0);
+        match self {
+            Encoding::Dense | Encoding::Sparse | Encoding::SparseDelta | Encoding::Auto => 0.0,
+            Encoding::AutoQ8 => range / 255.0 * 0.5,
+            Encoding::AutoQ4 => range / 15.0 * 0.5,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// LEB128 varints (sparse-delta index coding)
+// ---------------------------------------------------------------------
+
+/// Encoded length of `v` as a LEB128 varint (1..=5 bytes for u32).
+#[inline]
+pub fn varint_len(v: u32) -> usize {
+    match v {
+        0..=0x7f => 1,
+        0x80..=0x3fff => 2,
+        0x4000..=0x1f_ffff => 3,
+        0x20_0000..=0x0fff_ffff => 4,
+        _ => 5,
+    }
+}
+
+/// Append `v` in LEB128 form (7 payload bits per byte, low group first,
+/// high bit = continuation).
+#[inline]
+fn push_varint(out: &mut Vec<u8>, mut v: u32) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Read one canonical LEB128 u32 at `at`, advancing the cursor. Strict:
+/// rejects truncation, encodings longer than 5 bytes, values overflowing
+/// u32, and overlong (non-canonical) forms whose final byte is zero.
+fn read_varint(data: &[u8], at: &mut usize) -> Result<u32> {
+    let mut v = 0u32;
+    for k in 0..5usize {
+        let b = *data
+            .get(*at + k)
+            .ok_or_else(|| Error::parse("codec: truncated varint"))?;
+        let payload = (b & 0x7f) as u32;
+        if k == 4 {
+            if b & 0x80 != 0 {
+                return Err(Error::parse("codec: varint longer than 5 bytes"));
+            }
+            if payload > 0x0f {
+                return Err(Error::parse("codec: varint overflows u32"));
+            }
+        }
+        v |= payload << (7 * k);
+        if b & 0x80 == 0 {
+            if k > 0 && b == 0 {
+                return Err(Error::parse("codec: overlong varint encoding"));
+            }
+            *at += k + 1;
+            return Ok(v);
+        }
+    }
+    unreachable!("loop returns by the fifth byte");
+}
+
+/// One-pass payload census: non-zero count and the exact byte length of
+/// the sparse-delta varint index block — what exact-size auto selection
+/// needs before writing a single byte.
+fn census(params: &[f32]) -> (usize, usize) {
+    let mut nnz = 0usize;
+    let mut delta_bytes = 0usize;
+    let mut prev = 0u32;
+    let mut first = true;
+    for (i, &v) in params.iter().enumerate() {
+        if v != 0.0 {
+            let delta = if first { i as u32 } else { i as u32 - prev };
+            delta_bytes += varint_len(delta);
+            prev = i as u32;
+            first = false;
+            nnz += 1;
+        }
+    }
+    (nnz, delta_bytes)
 }
 
 /// A decoded update body, in whichever shape the wire carried it. Sparse
@@ -160,16 +329,31 @@ pub struct EncodeScratch {
     vals: Vec<f32>,
 }
 
-/// Exact wire size in bytes for a payload with `nnz` non-zeros out of `p`.
+/// Wire size in bytes for a payload with `nnz` non-zeros out of `p`.
+///
+/// Exact — `wire_bytes == encoded.len()` for every payload shape — for
+/// `Dense`, `Sparse`, and `AutoQ8`, whose sizes depend only on `(p, nnz)`.
+/// For the entropy-coded encodings (`SparseDelta`, and `Auto`/`AutoQ4`
+/// which may pick them) the true size additionally depends on *where* the
+/// non-zeros sit (varint gap lengths), which `(p, nnz)` cannot determine;
+/// there this returns a guaranteed **upper bound** (every index delta
+/// priced at the widest varint an index `< p` can need), and the encoder
+/// itself picks the representation by exact encoded length — so
+/// `encoded.len() <= wire_bytes` always holds, with equality for the
+/// fixed-size encodings.
 pub fn wire_bytes(p: usize, nnz: usize, enc: Encoding) -> usize {
-    const QHEADER: usize = 8; // min + scale f32
+    // widest varint any single index delta (<= p - 1) can occupy
+    let vmax = varint_len(p.saturating_sub(1) as u32);
     match enc {
         Encoding::Dense => HEADER_BYTES + 4 * p,
         Encoding::Sparse => HEADER_BYTES + 8 * nnz,
-        Encoding::Auto => {
-            wire_bytes(p, nnz, Encoding::Dense).min(wire_bytes(p, nnz, Encoding::Sparse))
-        }
+        Encoding::SparseDelta => HEADER_BYTES + nnz * (4 + vmax),
+        Encoding::Auto => wire_bytes(p, nnz, Encoding::Dense)
+            .min(wire_bytes(p, nnz, Encoding::Sparse))
+            .min(wire_bytes(p, nnz, Encoding::SparseDelta)),
         Encoding::AutoQ8 => (HEADER_BYTES + QHEADER + p).min(HEADER_BYTES + QHEADER + 5 * nnz),
+        Encoding::AutoQ4 => (HEADER_BYTES + QHEADER + p.div_ceil(2))
+            .min(HEADER_BYTES + QHEADER + nnz * vmax + nnz.div_ceil(2)),
     }
 }
 
@@ -196,22 +380,41 @@ pub fn encode_update_with(
     enc: Encoding,
 ) -> Vec<u8> {
     let p = params.len();
-    let nnz = params.iter().filter(|v| **v != 0.0).count();
+    let (nnz, delta_bytes) = census(params);
+    // Exact body sizes (bytes after the 24-byte header's count field), so
+    // the auto encodings select by true encoded length, not a heuristic.
+    let body_dense = 4 * p;
+    let body_sparse = 8 * nnz;
+    let body_sparse_delta = delta_bytes + 4 * nnz;
     let (tag, body_len) = match enc {
-        Encoding::Dense => (TAG_DENSE, 4 * p),
-        Encoding::Sparse => (TAG_SPARSE, 8 * nnz),
+        Encoding::Dense => (TAG_DENSE, body_dense),
+        Encoding::Sparse => (TAG_SPARSE, body_sparse),
+        Encoding::SparseDelta => (TAG_SPARSE_DELTA, body_sparse_delta),
         Encoding::Auto => {
-            if 8 * nnz < 4 * p {
-                (TAG_SPARSE, 8 * nnz)
+            // ties break toward the earlier (simpler) representation
+            let best = body_dense.min(body_sparse).min(body_sparse_delta);
+            if best == body_dense {
+                (TAG_DENSE, body_dense)
+            } else if best == body_sparse {
+                (TAG_SPARSE, body_sparse)
             } else {
-                (TAG_DENSE, 4 * p)
+                (TAG_SPARSE_DELTA, body_sparse_delta)
             }
         }
         Encoding::AutoQ8 => {
             if 5 * nnz < p {
-                (TAG_SPARSE_Q8, 8 + 5 * nnz)
+                (TAG_SPARSE_Q8, QHEADER + 5 * nnz)
             } else {
-                (TAG_DENSE_Q8, 8 + p)
+                (TAG_DENSE_Q8, QHEADER + p)
+            }
+        }
+        Encoding::AutoQ4 => {
+            let dense_q4 = QHEADER + p.div_ceil(2);
+            let sparse_q4 = QHEADER + delta_bytes + nnz.div_ceil(2);
+            if sparse_q4 < dense_q4 {
+                (TAG_SPARSE_DELTA_Q4, sparse_q4)
+            } else {
+                (TAG_DENSE_Q4, dense_q4)
             }
         }
     };
@@ -284,9 +487,68 @@ pub fn encode_update_with(
                 }
             }
         }
+        TAG_SPARSE_DELTA => {
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            // varint index block: each entry is its gap from the previous
+            // index (the first entry is the index itself)
+            push_delta_block(&mut out, params);
+            // value block: f32s in index order
+            for &v in params {
+                if v != 0.0 {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        TAG_DENSE_Q4 => {
+            // quantizing an empty payload: degenerate but legal (p == 0)
+            let q = if params.is_empty() {
+                Quantized4 { min: 0.0, scale: 0.0, n: 0, packed: vec![] }
+            } else {
+                quantize4(params).expect("finite params")
+            };
+            out.extend_from_slice(&(p as u32).to_le_bytes());
+            out.extend_from_slice(&q.min.to_le_bytes());
+            out.extend_from_slice(&q.scale.to_le_bytes());
+            out.extend_from_slice(&q.packed);
+        }
+        TAG_SPARSE_DELTA_Q4 => {
+            scratch.vals.clear();
+            scratch.vals.extend(params.iter().copied().filter(|v| *v != 0.0));
+            let q = if scratch.vals.is_empty() {
+                Quantized4 { min: 0.0, scale: 0.0, n: 0, packed: vec![] }
+            } else {
+                quantize4(&scratch.vals).expect("finite params")
+            };
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            out.extend_from_slice(&q.min.to_le_bytes());
+            out.extend_from_slice(&q.scale.to_le_bytes());
+            push_delta_block(&mut out, params);
+            out.extend_from_slice(&q.packed);
+        }
         _ => unreachable!(),
     }
+    debug_assert_eq!(
+        out.len(),
+        HEADER_BYTES + body_len,
+        "codec: emitted size disagrees with the selection-time size formula"
+    );
     out
+}
+
+/// Append the varint delta-coded index block for `params`' non-zero
+/// positions: first entry is the index itself, each later entry the
+/// (strictly positive) gap from the previous index.
+fn push_delta_block(out: &mut Vec<u8>, params: &[f32]) {
+    let mut prev = 0u32;
+    let mut first = true;
+    for (i, &v) in params.iter().enumerate() {
+        if v != 0.0 {
+            let delta = if first { i as u32 } else { i as u32 - prev };
+            push_varint(out, delta);
+            prev = i as u32;
+            first = false;
+        }
+    }
 }
 
 fn take<const N: usize>(data: &[u8], at: &mut usize) -> Result<[u8; N]> {
@@ -397,6 +659,60 @@ fn decode_into(data: &[u8], scratch: &mut DecodeScratch) -> Result<Header> {
             }
             true
         }
+        TAG_SPARSE_DELTA => {
+            if count > p {
+                return Err(Error::parse("codec: sparse count > p"));
+            }
+            // Each entry costs at least 1 varint byte + 4 value bytes: a
+            // count the remaining payload cannot possibly hold is rejected
+            // *before* the index buffer is reserved — a hostile header must
+            // never size an allocation (the other sparse tags get this for
+            // free from their fixed-size `body()` bound).
+            if data.len().saturating_sub(at) < count.saturating_mul(5) {
+                return Err(Error::parse("codec: truncated message"));
+            }
+            read_delta_block(data, &mut at, count, p, &mut scratch.indices)?;
+            let b = body(data, &mut at, 4 * count)?;
+            scratch.values.reserve(count);
+            scratch
+                .values
+                .extend(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+            true
+        }
+        TAG_DENSE_Q4 => {
+            if count != p {
+                return Err(Error::parse("codec: dense-q4 count != p"));
+            }
+            let min = f32::from_le_bytes(take::<4>(data, &mut at)?);
+            let scale = f32::from_le_bytes(take::<4>(data, &mut at)?);
+            let codes = body(data, &mut at, p.div_ceil(2))?;
+            check_q4_padding(codes, p)?;
+            scratch.dense.reserve(p);
+            scratch
+                .dense
+                .extend((0..p).map(|k| min + scale * q4_code(codes, k) as f32));
+            false
+        }
+        TAG_SPARSE_DELTA_Q4 => {
+            if count > p {
+                return Err(Error::parse("codec: sparse count > p"));
+            }
+            let min = f32::from_le_bytes(take::<4>(data, &mut at)?);
+            let scale = f32::from_le_bytes(take::<4>(data, &mut at)?);
+            // >= 1 varint byte per entry + ceil(count/2) nibble bytes must
+            // still follow; reject impossible counts before reserving
+            if data.len().saturating_sub(at) < count.saturating_mul(3).div_ceil(2) {
+                return Err(Error::parse("codec: truncated message"));
+            }
+            read_delta_block(data, &mut at, count, p, &mut scratch.indices)?;
+            let codes = body(data, &mut at, count.div_ceil(2))?;
+            check_q4_padding(codes, count)?;
+            scratch.values.reserve(count);
+            scratch
+                .values
+                .extend((0..count).map(|k| min + scale * q4_code(codes, k) as f32));
+            true
+        }
         other => return Err(Error::parse(format!("codec: unknown tag {other}"))),
     };
     if at != data.len() {
@@ -419,6 +735,48 @@ fn check_sparse_index(idx: u32, next_min: u32, p: usize) -> Result<()> {
         return Err(Error::parse(format!(
             "codec: sparse index {idx} duplicate or out of order"
         )));
+    }
+    Ok(())
+}
+
+/// Decode `count` varint index deltas at `at` into absolute indices,
+/// enforcing the sparse invariants as it goes: every varint canonical, a
+/// zero gap after the first entry is non-monotone (a duplicate index),
+/// accumulation must not overflow u32, and every index stays inside
+/// `[0, p)`.
+fn read_delta_block(
+    data: &[u8],
+    at: &mut usize,
+    count: usize,
+    p: usize,
+    indices: &mut Vec<u32>,
+) -> Result<()> {
+    indices.reserve(count);
+    let mut next_min = 0u32;
+    for k in 0..count {
+        let delta = read_varint(data, at)?;
+        let idx = if k == 0 {
+            delta
+        } else {
+            // prev index is next_min - 1; a zero delta lands on prev and is
+            // rejected by the monotonicity check below
+            (next_min - 1).checked_add(delta).ok_or_else(|| {
+                Error::parse("codec: sparse-delta index overflows u32")
+            })?
+        };
+        check_sparse_index(idx, next_min, p)?;
+        next_min = idx + 1;
+        indices.push(idx);
+    }
+    Ok(())
+}
+
+/// An odd-count q4 body carries one unused high nibble in its final byte;
+/// the encoder always leaves it zero, so anything else is a malformed (or
+/// non-canonical) message.
+fn check_q4_padding(codes: &[u8], n: usize) -> Result<()> {
+    if n % 2 == 1 && codes[n / 2] >> 4 != 0 {
+        return Err(Error::parse("codec: q4 padding nibble must be zero"));
     }
     Ok(())
 }
@@ -530,7 +888,7 @@ mod tests {
             let p = g.usize_in(1, 500);
             let density = g.f32_in(0.0, 1.0);
             let params = sample_params(&mut g, p, density);
-            for enc in [Encoding::Dense, Encoding::Sparse, Encoding::Auto, Encoding::AutoQ8] {
+            for &enc in Encoding::ALL {
                 let bytes = encode_update(1, 2, 3, &params, enc);
                 let owned = decode_update(&bytes).unwrap();
                 let view = decode_update_view(&bytes, &mut scratch).unwrap();
@@ -552,16 +910,312 @@ mod tests {
     }
 
     #[test]
-    fn auto_picks_smaller() {
+    fn auto_picks_smallest_lossless_representation() {
+        // every coordinate non-zero: dense (424) beats sparse (824) and
+        // sparse-delta (524: 100 one-byte gaps + 400 value bytes)
         let dense_heavy: Vec<f32> = (0..100).map(|i| (i + 1) as f32).collect();
         let b1 = encode_update(0, 0, 1, &dense_heavy, Encoding::Auto);
         assert_eq!(b1.len(), wire_bytes(100, 100, Encoding::Dense));
 
+        // one non-zero: sparse-delta (24 + 1 varint + 4 value = 29) beats
+        // sparse f32 (32) beats dense (424)
         let mut sparse_heavy = vec![0.0f32; 100];
         sparse_heavy[5] = 1.0;
         let b2 = encode_update(0, 0, 1, &sparse_heavy, Encoding::Auto);
-        assert_eq!(b2.len(), wire_bytes(100, 1, Encoding::Sparse));
+        let sd = encode_update(0, 0, 1, &sparse_heavy, Encoding::SparseDelta);
+        assert_eq!(b2.len(), sd.len());
+        assert_eq!(b2.len(), HEADER_BYTES + 1 + 4);
+        assert!(b2.len() < wire_bytes(100, 1, Encoding::Sparse));
         assert!(b2.len() < wire_bytes(100, 100, Encoding::Dense));
+    }
+
+    #[test]
+    fn sparse_delta_roundtrip_is_lossless_and_small() {
+        let mut params = vec![0.0f32; 100_000];
+        // clustered indices (small gaps, 1-byte varints) and one huge gap
+        for i in [3usize, 4, 7, 130, 131, 99_999] {
+            params[i] = (i as f32) * 0.25 - 8.0;
+        }
+        let bytes = encode_update(2, 9, 31, &params, Encoding::SparseDelta);
+        // gaps: 3, 1, 3, 123, 1 -> one byte each; 99_868 -> three bytes
+        assert_eq!(bytes.len(), HEADER_BYTES + (5 + 3) + 4 * 6);
+        assert!(bytes.len() <= wire_bytes(100_000, 6, Encoding::SparseDelta));
+        assert!(bytes.len() < wire_bytes(100_000, 6, Encoding::Sparse));
+        let u = decode_update(&bytes).unwrap();
+        assert_eq!(u.client, 2);
+        assert_eq!(u.round, 9);
+        assert_eq!(u.n_samples, 31);
+        assert_eq!(
+            u.body,
+            DecodedBody::Sparse {
+                indices: vec![3, 4, 7, 130, 131, 99_999],
+                values: vec![3.0 * 0.25 - 8.0, -7.0, 7.0 * 0.25 - 8.0, 130.0 * 0.25 - 8.0,
+                             131.0 * 0.25 - 8.0, 99_999.0 * 0.25 - 8.0],
+            }
+        );
+        assert_eq!(u.to_dense(), params);
+    }
+
+    #[test]
+    fn q4_dense_and_sparse_roundtrip_within_half_step() {
+        // dense-ish payload: q4 dense arm, ~8x under f32 dense
+        let params: Vec<f32> = (0..501).map(|i| (i as f32 - 250.0) * 0.01).collect();
+        let bytes = encode_update(1, 2, 3, &params, Encoding::AutoQ4);
+        assert_eq!(bytes.len(), HEADER_BYTES + QHEADER + 251);
+        assert!(bytes.len() <= wire_bytes(501, 501, Encoding::AutoQ4));
+        assert!(bytes.len() * 7 < wire_bytes(501, 501, Encoding::Dense));
+        let u = decode_update(&bytes).unwrap();
+        let dense = u.to_dense();
+        let step = (params[500] - params[0]) / 15.0;
+        for (a, b) in params.iter().zip(&dense) {
+            assert!((a - b).abs() <= step * 0.5 + 1e-6);
+        }
+
+        // masked payload: sparse-delta-q4 arm, zeros preserved exactly
+        let mut params = vec![0.0f32; 10_000];
+        for i in (0..10_000).step_by(100) {
+            params[i] = (i as f32) * 0.001 + 1.0;
+        }
+        let bytes = encode_update(0, 0, 1, &params, Encoding::AutoQ4);
+        // 100 entries: gap 0 then 99 gaps of 100 (one byte each), 50 nibble bytes
+        assert_eq!(bytes.len(), HEADER_BYTES + QHEADER + 100 + 50);
+        assert!(bytes.len() <= wire_bytes(10_000, 100, Encoding::AutoQ4));
+        assert!(bytes.len() < wire_bytes(10_000, 100, Encoding::AutoQ8));
+        let u = decode_update(&bytes).unwrap();
+        let dense = u.to_dense();
+        let vmax = params.iter().cloned().fold(0.0f32, f32::max);
+        let vmin = params.iter().cloned().filter(|v| *v != 0.0).fold(f32::INFINITY, f32::min);
+        let step = (vmax - vmin) / 15.0;
+        for (a, b) in params.iter().zip(&dense) {
+            if *a == 0.0 {
+                assert_eq!(*b, 0.0);
+            } else {
+                assert!((a - b).abs() <= step * 0.5 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn q4_all_zero_and_empty_uploads_are_legal() {
+        for p in [0usize, 1, 64, 65] {
+            let params = vec![0.0f32; p];
+            for enc in [Encoding::AutoQ4, Encoding::SparseDelta] {
+                let u = decode_update(&encode_update(0, 0, 1, &params, enc)).unwrap();
+                assert_eq!(u.to_dense(), params, "{enc:?} p {p}");
+                assert_eq!(u.nnz(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn varint_encoding_is_canonical_and_exact() {
+        for (v, len) in [
+            (0u32, 1usize),
+            (1, 1),
+            (127, 1),
+            (128, 2),
+            (16_383, 2),
+            (16_384, 3),
+            (2_097_151, 3),
+            (2_097_152, 4),
+            (268_435_455, 4),
+            (268_435_456, 5),
+            (u32::MAX, 5),
+        ] {
+            let mut buf = Vec::new();
+            push_varint(&mut buf, v);
+            assert_eq!(buf.len(), len, "varint {v}");
+            assert_eq!(varint_len(v), len, "varint_len {v}");
+            let mut at = 0usize;
+            assert_eq!(read_varint(&buf, &mut at).unwrap(), v);
+            assert_eq!(at, len);
+        }
+    }
+
+    #[test]
+    fn malformed_varints_are_typed_errors() {
+        // truncated: continuation bit set, stream ends
+        let mut at = 0;
+        let err = read_varint(&[0x80], &mut at).unwrap_err().to_string();
+        assert!(err.contains("truncated varint"), "{err}");
+        // overlong: 0x80 0x00 encodes 0 in two bytes
+        let mut at = 0;
+        let err = read_varint(&[0x80, 0x00], &mut at).unwrap_err().to_string();
+        assert!(err.contains("overlong"), "{err}");
+        // longer than five bytes
+        let mut at = 0;
+        let err = read_varint(&[0x80, 0x80, 0x80, 0x80, 0x80, 0x01], &mut at)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("longer than 5"), "{err}");
+        // fifth byte pushes past 32 bits
+        let mut at = 0;
+        let err = read_varint(&[0x80, 0x80, 0x80, 0x80, 0x10], &mut at)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overflows u32"), "{err}");
+    }
+
+    /// Sparse-delta payload with entries at indices 3 and 7 out of p = 16:
+    /// header, then the varint block [3, 4], then two f32 values.
+    fn two_entry_sparse_delta() -> Vec<u8> {
+        let mut params = vec![0.0f32; 16];
+        params[3] = 1.0;
+        params[7] = 2.0;
+        let bytes = encode_update(0, 0, 1, &params, Encoding::SparseDelta);
+        assert_eq!(bytes.len(), HEADER_BYTES + 2 + 8);
+        assert_eq!(bytes[HEADER_BYTES..HEADER_BYTES + 2], [3u8, 4]);
+        bytes
+    }
+
+    #[test]
+    fn sparse_delta_body_rejects_zero_gap_as_non_monotone() {
+        let mut bytes = two_entry_sparse_delta();
+        bytes[HEADER_BYTES + 1] = 0; // second gap becomes 0: duplicate index 3
+        let err = decode_update(&bytes).unwrap_err().to_string();
+        assert!(err.contains("duplicate or out of order"), "{err}");
+    }
+
+    #[test]
+    fn sparse_delta_body_rejects_index_past_p() {
+        let mut bytes = two_entry_sparse_delta();
+        bytes[HEADER_BYTES + 1] = 13; // 3 + 13 = 16 == p: one past the end
+        let err = decode_update(&bytes).unwrap_err().to_string();
+        assert!(err.contains("index 16"), "{err}");
+    }
+
+    #[test]
+    fn sparse_delta_body_rejects_overlong_varint_gap() {
+        let mut bytes = two_entry_sparse_delta();
+        // rewrite the second gap (4) as the overlong two-byte form 0x84 0x00;
+        // splicing keeps the value block intact, shifted one byte right
+        // (dropping the returned iterator completes the splice)
+        drop(bytes.splice(HEADER_BYTES + 1..HEADER_BYTES + 2, [0x84u8, 0x00]));
+        let err = decode_update(&bytes).unwrap_err().to_string();
+        assert!(err.contains("overlong"), "{err}");
+    }
+
+    #[test]
+    fn sparse_delta_body_rejects_u32_overflow_and_truncation() {
+        // count promises 2 entries but the body carries varints that
+        // accumulate past u32: first index u32::MAX - 1 (valid varint),
+        // then a gap that overflows the accumulator
+        let mut params = vec![0.0f32; 16];
+        params[3] = 1.0;
+        params[7] = 2.0;
+        let good = encode_update(0, 0, 1, &params, Encoding::SparseDelta);
+        let mut bytes = good[..HEADER_BYTES].to_vec();
+        push_varint(&mut bytes, u32::MAX - 1);
+        push_varint(&mut bytes, 2);
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        bytes.extend_from_slice(&2.0f32.to_le_bytes());
+        let err = decode_update(&bytes).unwrap_err().to_string();
+        // the first index already fails the in-range check (p = 16), which
+        // is the point: nothing panics on the way to the typed error
+        assert!(err.contains("index"), "{err}");
+
+        // truncated mid-varint-block
+        let mut bytes = good.clone();
+        bytes.truncate(HEADER_BYTES + 1);
+        assert!(decode_update(&bytes).is_err());
+        // truncated mid-value-block
+        let mut bytes = good;
+        bytes.truncate(bytes.len() - 2);
+        assert!(decode_update(&bytes).is_err());
+    }
+
+    #[test]
+    fn hostile_delta_count_is_rejected_before_any_allocation() {
+        // A 24-byte message whose header promises u32::MAX delta entries:
+        // the decoder must fail on the impossible count, not reserve a
+        // multi-GB index buffer first (the wire is an open local endpoint).
+        for tag in [4u8, 6] {
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(&MAGIC.to_le_bytes());
+            bytes.push(VERSION);
+            bytes.push(tag);
+            bytes.extend_from_slice(&0u32.to_le_bytes()); // client
+            bytes.extend_from_slice(&1u32.to_le_bytes()); // round
+            bytes.extend_from_slice(&1u32.to_le_bytes()); // n_samples
+            bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // p
+            bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // count
+            if tag == 6 {
+                bytes.extend_from_slice(&0.0f32.to_le_bytes()); // min
+                bytes.extend_from_slice(&0.1f32.to_le_bytes()); // scale
+            }
+            let err = decode_update(&bytes).unwrap_err().to_string();
+            assert!(err.contains("truncated"), "tag {tag}: {err}");
+        }
+    }
+
+    #[test]
+    fn q4_body_rejects_truncated_and_nonzero_padding_nibble() {
+        // odd-count sparse q4 body: 3 entries -> 2 packed bytes, high
+        // nibble of the last byte is padding
+        let mut params = vec![0.0f32; 64];
+        params[1] = 1.0;
+        params[5] = 2.0;
+        params[9] = 3.0;
+        let good = encode_update(0, 0, 1, &params, Encoding::AutoQ4);
+        assert_eq!(good.len(), HEADER_BYTES + QHEADER + 3 + 2);
+        assert!(decode_update(&good).is_ok());
+        // truncated nibble byte
+        let mut bytes = good.clone();
+        bytes.truncate(bytes.len() - 1);
+        assert!(decode_update(&bytes).is_err());
+        // non-zero padding nibble
+        let mut bytes = good;
+        let last = bytes.len() - 1;
+        bytes[last] |= 0xf0;
+        let err = decode_update(&bytes).unwrap_err().to_string();
+        assert!(err.contains("padding nibble"), "{err}");
+
+        // dense q4 with odd p: same padding rule
+        let params = vec![0.5f32; 7];
+        let good = encode_update(0, 0, 1, &params, Encoding::AutoQ4);
+        let mut bytes = good;
+        let last = bytes.len() - 1;
+        bytes[last] |= 0x10;
+        assert!(decode_update(&bytes).is_err());
+    }
+
+    /// Satellite invariant: `wire_bytes` is exact for the fixed-size
+    /// encodings and a true upper bound for the payload-dependent ones,
+    /// across every encoding x payload shape (empty, all-zero, dense,
+    /// sparse, single-element).
+    #[test]
+    fn prop_wire_bytes_matches_or_bounds_encoded_len() {
+        check("wire_bytes vs encoded.len()", 150, |g| {
+            let p = match g.usize_in(0, 9) {
+                0 => 0,
+                1 => 1,
+                _ => g.usize_in(2, 2000),
+            };
+            let density = match g.usize_in(0, 4) {
+                0 => 0.0,
+                _ => g.f32_in(0.0, 1.0),
+            };
+            let params = sample_params(g, p, density);
+            let nnz = params.iter().filter(|v| **v != 0.0).count();
+            for &enc in Encoding::ALL {
+                let encoded = encode_update(1, 2, 3, &params, enc);
+                let predicted = wire_bytes(p, nnz, enc);
+                match enc {
+                    Encoding::Dense | Encoding::Sparse | Encoding::AutoQ8 => assert_eq!(
+                        encoded.len(),
+                        predicted,
+                        "{enc:?} p {p} nnz {nnz} seed {:#x}",
+                        g.seed
+                    ),
+                    Encoding::SparseDelta | Encoding::Auto | Encoding::AutoQ4 => assert!(
+                        encoded.len() <= predicted,
+                        "{enc:?} p {p} nnz {nnz}: {} > bound {predicted} (seed {:#x})",
+                        encoded.len(),
+                        g.seed
+                    ),
+                }
+            }
+        });
     }
 
     #[test]
@@ -662,7 +1316,12 @@ mod tests {
             let p = g.usize_in(1, 2000);
             let density = g.f32_in(0.0, 1.0);
             let params = sample_params(g, p, density);
-            for enc in [Encoding::Dense, Encoding::Sparse, Encoding::Auto] {
+            for enc in [
+                Encoding::Dense,
+                Encoding::Sparse,
+                Encoding::SparseDelta,
+                Encoding::Auto,
+            ] {
                 let bytes = encode_update(1, 2, 3, &params, enc);
                 let u = decode_update(&bytes).unwrap();
                 assert_eq!(u.to_dense(), params, "enc {enc:?} seed {:#x}", g.seed);
@@ -719,7 +1378,7 @@ mod tests {
     }
 
     #[test]
-    fn prop_auto_never_larger_than_either() {
+    fn prop_auto_never_larger_than_any_fixed_encoding() {
         check("auto minimality", 100, |g| {
             let p = g.usize_in(1, 500);
             let density = g.f32_in(0.0, 1.0);
@@ -727,7 +1386,32 @@ mod tests {
             let auto = encode_update(0, 0, 0, &params, Encoding::Auto).len();
             let dense = encode_update(0, 0, 0, &params, Encoding::Dense).len();
             let sparse = encode_update(0, 0, 0, &params, Encoding::Sparse).len();
-            assert!(auto <= dense && auto <= sparse);
+            let sparse_delta = encode_update(0, 0, 0, &params, Encoding::SparseDelta).len();
+            assert!(auto <= dense && auto <= sparse && auto <= sparse_delta);
+            // and the lossy auto picks its smaller arm by actual length too
+            let q4 = encode_update(0, 0, 0, &params, Encoding::AutoQ4).len();
+            let nnz = params.iter().filter(|v| **v != 0.0).count();
+            assert!(q4 <= wire_bytes(p, nnz, Encoding::AutoQ4));
         });
+    }
+
+    #[test]
+    fn encoding_parses_and_prints_round_trip() {
+        for &enc in Encoding::ALL {
+            assert_eq!(Encoding::parse(enc.as_str()).unwrap(), enc);
+        }
+        assert!(Encoding::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn lossy_half_step_matches_quantizer_grids() {
+        assert_eq!(Encoding::Auto.lossy_half_step(-1.0, 1.0), 0.0);
+        assert_eq!(Encoding::SparseDelta.lossy_half_step(-1.0, 1.0), 0.0);
+        let q8 = Encoding::AutoQ8.lossy_half_step(0.0, 255.0);
+        assert!((q8 - 0.5).abs() < 1e-6);
+        let q4 = Encoding::AutoQ4.lossy_half_step(0.0, 15.0);
+        assert!((q4 - 0.5).abs() < 1e-6);
+        // degenerate range is exact
+        assert_eq!(Encoding::AutoQ4.lossy_half_step(2.0, 2.0), 0.0);
     }
 }

@@ -9,6 +9,13 @@
 //! * **Byte cost** — what the codec actually emitted, including headers and
 //!   the dense/sparse crossover. The figure drivers report both, and the
 //!   ledger's unit/byte ratio is itself a sanity check on the codec.
+//!
+//! The ledger records `payload.len()` — the true emitted size — never a
+//! formula. That distinction went live with the entropy-coded encodings
+//! (`sparse-delta`, `auto-q4`), whose sizes depend on where the non-zeros
+//! sit: [`crate::transport::codec::wire_bytes`] is only an upper bound
+//! there, so any accounting that priced uploads from `(p, nnz)` alone
+//! would overstate the cost the paper's figures are meant to measure.
 
 /// Eq. 6 of the paper: mean per-round unit transport cost over `rounds`
 /// rounds of dynamic sampling (initial rate `c0`, decay `beta`) with
@@ -131,6 +138,31 @@ mod tests {
         assert!((l.downlink_units - 1.25).abs() < 1e-12);
         assert_eq!(l.downlink_bytes, 6052);
         assert_eq!(l.messages, 2);
+    }
+
+    #[test]
+    fn ledger_bytes_are_codec_exact_for_entropy_coded_uploads() {
+        use crate::transport::codec::{encode_update, wire_bytes, Encoding};
+        // A masked update whose sparse-delta size beats every flat-index
+        // formula: the ledger must carry the emitted length, and that
+        // length must respect the wire_bytes upper bound.
+        let p = 4096usize;
+        let mut params = vec![0.0f32; p];
+        for i in (0..p).step_by(64) {
+            params[i] = 0.5 + i as f32 * 1e-3;
+        }
+        let nnz = params.iter().filter(|v| **v != 0.0).count();
+        let mut ledger = CostLedger::new();
+        let mut emitted = 0u64;
+        for enc in [Encoding::SparseDelta, Encoding::Auto, Encoding::AutoQ4] {
+            let payload = encode_update(0, 1, 10, &params, enc);
+            assert!(payload.len() <= wire_bytes(p, nnz, enc), "{enc:?}");
+            ledger.record_upload(p, nnz, payload.len());
+            emitted += payload.len() as u64;
+        }
+        assert_eq!(ledger.uplink_bytes, emitted);
+        assert_eq!(ledger.messages, 3);
+        assert!((ledger.uplink_units - 3.0 * nnz as f64 / p as f64).abs() < 1e-12);
     }
 
     #[test]

@@ -287,7 +287,7 @@ mod tests {
             masked_params(&mut g, 33, 1.0),
         ];
         for params in &cases {
-            for enc in [Encoding::Dense, Encoding::Sparse, Encoding::Auto, Encoding::AutoQ8] {
+            for &enc in Encoding::ALL {
                 let payload = encode_update(7, 3, 11, params, enc);
                 let framed = frame_bytes(&payload).unwrap();
                 for split in 0..=framed.len() {
@@ -321,12 +321,7 @@ mod tests {
                     let p = g.usize_in(0, 300);
                     let density = g.f32_in(0.0, 1.0);
                     let params = masked_params(g, p, density);
-                    let enc = *g.choose(&[
-                        Encoding::Dense,
-                        Encoding::Sparse,
-                        Encoding::Auto,
-                        Encoding::AutoQ8,
-                    ]);
+                    let enc = *g.choose(Encoding::ALL);
                     encode_update(c as u32, 1, 2, &params, enc)
                 })
                 .collect();

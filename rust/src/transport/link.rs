@@ -98,6 +98,17 @@ pub trait Transport: Send {
     /// here (the socket transport drops them with a log line); an `Err`
     /// means the transport itself failed (closed, timed out).
     fn recv(&mut self) -> Result<Vec<u8>>;
+
+    /// Bounded-wait receive: wait at most `timeout` for the next payload.
+    /// `Ok(None)` means nothing arrived in the window — *not* an error —
+    /// so a caller can interleave short wire waits with other work (the
+    /// server's round loop polls its worker-result channel between waits,
+    /// which is how a dead client's concrete error surfaces immediately
+    /// instead of after the full upload timeout). `Err` means the
+    /// transport itself failed (link closed). [`Simulated`] accumulates
+    /// its delivery-order cohort across calls, so short polls never lose
+    /// payloads.
+    fn try_recv_for(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>>;
 }
 
 /// `Sender` wrapped for `Sync`: worker threads share one sink `Arc`.
@@ -160,6 +171,10 @@ impl Transport for InProcess {
     fn recv(&mut self) -> Result<Vec<u8>> {
         recv_deadline(&self.rx, self.timeout)
     }
+
+    fn try_recv_for(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        poll_channel(&self.rx, timeout)
+    }
 }
 
 /// Shared timeout-aware receive for channel-drained transports.
@@ -170,6 +185,18 @@ pub(crate) fn recv_deadline(rx: &Receiver<Vec<u8>>, timeout: Duration) -> Result
             "timed out after {:?} waiting for an upload",
             timeout
         ))),
+        Err(RecvTimeoutError::Disconnected) => {
+            Err(Error::transport("upload link closed before the round completed"))
+        }
+    }
+}
+
+/// Shared bounded-wait receive for channel-drained transports: a lapse of
+/// the window is `Ok(None)`, only a closed link is an error.
+pub(crate) fn poll_channel(rx: &Receiver<Vec<u8>>, timeout: Duration) -> Result<Option<Vec<u8>>> {
+    match rx.recv_timeout(timeout) {
+        Ok(p) => Ok(Some(p)),
+        Err(RecvTimeoutError::Timeout) => Ok(None),
         Err(RecvTimeoutError::Disconnected) => {
             Err(Error::transport("upload link closed before the round completed"))
         }
@@ -191,8 +218,13 @@ pub struct Simulated {
     network: NetworkModel,
     /// This round's re-ordered queue, earliest completion last (pop order).
     queue: Vec<Vec<u8>>,
-    /// Uploads announced but not yet pulled from the inner transport.
+    /// Announced cohort size; deliveries re-order once `batch` fills.
     pending: usize,
+    /// Uploads pulled off the inner wire but not yet re-ordered: (virtual
+    /// completion time, true arrival sequence, payload). Kept across
+    /// [`Transport::try_recv_for`] calls so bounded polls accumulate the
+    /// cohort instead of losing partial progress.
+    batch: Vec<(f64, usize, Vec<u8>)>,
 }
 
 impl Simulated {
@@ -202,7 +234,30 @@ impl Simulated {
             network,
             queue: Vec::new(),
             pending: 0,
+            batch: Vec::new(),
         }
+    }
+
+    /// The whole cohort has arrived: order by virtual completion time
+    /// (ties broken by true arrival order) and stage for pop-delivery.
+    fn finalize_batch(&mut self) {
+        self.pending = 0;
+        self.batch.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        // pop() delivers earliest virtual completion first
+        self.batch.reverse();
+        self.queue = std::mem::take(&mut self.batch).into_iter().map(|(_, _, p)| p).collect();
+    }
+
+    /// Stash one inner-wire arrival into the accumulating cohort batch;
+    /// returns true once the batch is complete.
+    fn absorb(&mut self, payload: Vec<u8>) -> bool {
+        let seq = self.batch.len();
+        self.batch.push((self.network.upload_time(payload.len()), seq, payload));
+        self.batch.len() == self.pending
     }
 }
 
@@ -222,35 +277,56 @@ impl Transport for Simulated {
     fn begin_round(&mut self, expected: usize) {
         self.inner.begin_round(expected);
         self.queue.clear();
+        self.batch.clear();
         self.pending = expected;
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        if self.queue.is_empty() {
-            if self.pending == 0 {
-                // Pulls beyond the announced cohort pass through in arrival
-                // order: the server re-pulls after rejecting an invalid
-                // payload (a stray peer's message may have consumed one of
-                // the barrier's slots), and the genuine upload it displaced
-                // is still queued in the inner transport.
-                return self.inner.recv();
-            }
-            let mut batch: Vec<(f64, usize, Vec<u8>)> = Vec::with_capacity(self.pending);
-            for seq in 0..self.pending {
-                let payload = self.inner.recv()?;
-                batch.push((self.network.upload_time(payload.len()), seq, payload));
-            }
-            self.pending = 0;
-            batch.sort_by(|a, b| {
-                a.0.partial_cmp(&b.0)
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(a.1.cmp(&b.1))
-            });
-            // pop() delivers earliest virtual completion first
-            batch.reverse();
-            self.queue = batch.into_iter().map(|(_, _, p)| p).collect();
+        if let Some(p) = self.queue.pop() {
+            return Ok(p);
         }
-        Ok(self.queue.pop().expect("queue refilled above"))
+        if self.pending == 0 {
+            // Pulls beyond the announced cohort pass through in arrival
+            // order: the server re-pulls after rejecting an invalid
+            // payload (a stray peer's message may have consumed one of
+            // the barrier's slots), and the genuine upload it displaced
+            // is still queued in the inner transport.
+            return self.inner.recv();
+        }
+        while self.batch.len() < self.pending {
+            let payload = self.inner.recv()?;
+            self.absorb(payload);
+        }
+        self.finalize_batch();
+        Ok(self.queue.pop().expect("cohort batch just staged"))
+    }
+
+    fn try_recv_for(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        if let Some(p) = self.queue.pop() {
+            return Ok(Some(p));
+        }
+        if self.pending == 0 {
+            return self.inner.try_recv_for(timeout);
+        }
+        // Accumulate cohort arrivals within the window; partial progress
+        // survives in `batch` for the next poll.
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let now = std::time::Instant::now();
+            let Some(window) = deadline.checked_duration_since(now).filter(|w| !w.is_zero())
+            else {
+                return Ok(None);
+            };
+            match self.inner.try_recv_for(window)? {
+                None => return Ok(None),
+                Some(payload) => {
+                    if self.absorb(payload) {
+                        self.finalize_batch();
+                        return Ok(self.queue.pop());
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -335,6 +411,66 @@ mod tests {
         sink.send(vec![2, 2]).unwrap();
         assert_eq!(t.recv().unwrap(), vec![1]);
         assert_eq!(t.recv().unwrap(), vec![2, 2], "displaced upload must still surface");
+    }
+
+    #[test]
+    fn try_recv_for_bounded_wait_returns_none_not_error() {
+        let mut t = InProcess::new();
+        let started = std::time::Instant::now();
+        assert!(t.try_recv_for(Duration::from_millis(10)).unwrap().is_none());
+        assert!(started.elapsed() < Duration::from_secs(5));
+        let sink = t.sink();
+        sink.send(vec![7u8; 3]).unwrap();
+        assert_eq!(
+            t.try_recv_for(Duration::from_millis(10)).unwrap(),
+            Some(vec![7u8; 3])
+        );
+    }
+
+    #[test]
+    fn simulated_short_polls_accumulate_the_cohort_without_losing_payloads() {
+        // 1 MB/s links: delivery order follows payload size once the whole
+        // cohort lands, even when it lands across several bounded polls.
+        let network = NetworkModel {
+            client_bw: 1e6,
+            server_bw: 1e9,
+            latency_s: 0.0,
+        };
+        let mut t = Simulated::new(Box::new(InProcess::new()), network);
+        let sink = t.sink();
+        t.begin_round(3);
+        // nothing sent yet: poll lapses quietly
+        assert!(t.try_recv_for(Duration::from_millis(5)).unwrap().is_none());
+        sink.send(vec![3u8; 3000]).unwrap();
+        // partial cohort: the arrival is absorbed but nothing is deliverable
+        assert!(t.try_recv_for(Duration::from_millis(20)).unwrap().is_none());
+        sink.send(vec![1u8; 1]).unwrap();
+        sink.send(vec![2u8; 200]).unwrap();
+        // cohort complete: deliveries follow virtual upload time
+        let mut sizes = Vec::new();
+        while sizes.len() < 3 {
+            if let Some(p) = t.try_recv_for(Duration::from_millis(50)).unwrap() {
+                sizes.push(p.len());
+            }
+        }
+        assert_eq!(sizes, vec![1, 200, 3000]);
+        // and recv() after the cohort passes through to the inner wire
+        sink.send(vec![9u8]).unwrap();
+        assert_eq!(t.try_recv_for(Duration::from_millis(50)).unwrap(), Some(vec![9u8]));
+    }
+
+    #[test]
+    fn simulated_mixed_recv_and_poll_agree() {
+        // blocking recv() after poll-accumulated partial progress must not
+        // double-count or drop anything
+        let mut t = Simulated::new(Box::new(InProcess::new()), NetworkModel::ideal());
+        let sink = t.sink();
+        t.begin_round(2);
+        sink.send(vec![5u8]).unwrap();
+        assert!(t.try_recv_for(Duration::from_millis(20)).unwrap().is_none());
+        sink.send(vec![6u8]).unwrap();
+        assert_eq!(t.recv().unwrap(), vec![5u8]);
+        assert_eq!(t.recv().unwrap(), vec![6u8]);
     }
 
     #[test]

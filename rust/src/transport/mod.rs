@@ -23,19 +23,30 @@
 //! all three produce **bitwise identical** global models — pinned by
 //! `tests/socket_transport.rs`.
 //!
-//! ## Frame format ([`frame`])
+//! ## Wire format (one page: `docs/WIRE.md`)
 //!
-//! One frame per payload: `magic u16 (0x4c46 "FL") | version u8 (1) |
-//! reserved u8 (0) | length u32 LE | payload`. Declared lengths above the
-//! hard cap ([`frame::MAX_FRAME_BYTES`], 64 MiB) are rejected on the
-//! header, before any body allocation. The reserved byte must be zero
-//! (future flags); incompatible payload changes bump `version`, and
-//! readers reject unknown versions with a typed
+//! Two layers, documented end to end in `docs/WIRE.md` — frame grammar,
+//! every codec tag, varint canonicality rules, and the q4/q8 quantizer
+//! grid contract. In brief:
+//!
+//! **Frame** ([`frame`]): one frame per payload — `magic u16 (0x4c46
+//! "FL") | version u8 (1) | reserved u8 (0) | length u32 LE | payload`.
+//! Declared lengths above the hard cap ([`frame::MAX_FRAME_BYTES`],
+//! 64 MiB) are rejected on the header, before any body allocation. The
+//! reserved byte must be zero (future flags); incompatible payload changes
+//! bump `version`, and readers reject unknown versions with a typed
 //! [`Error::Transport`](crate::util::error::Error). The reader is an
 //! incremental state machine tolerant of arbitrarily short reads and
 //! pipelined frames; mid-frame disconnects are typed truncation errors,
 //! and a malformed peer is dropped at its connection without disturbing
 //! the rest of the cohort.
+//!
+//! **Codec** ([`codec`]): seven body tags behind one 24-byte header —
+//! dense/sparse f32, dense/sparse q8, delta+varint sparse f32,
+//! dense q4, and delta+varint sparse q4. Sparse indices are strictly
+//! increasing (delta-coded tags store LEB128 gaps, validated for
+//! canonical form, monotonicity, and range on decode), and the auto
+//! encodings pick the cheapest representation by exact encoded length.
 //!
 //! ## Division of labor around one round
 //!
@@ -59,16 +70,18 @@
 //!
 //! Modules:
 //!
-//! * [`codec`] — dense and sparse update encodings with auto-selection;
-//!   masked updates ship as (index, value) pairs, which is where the
-//!   paper's communication saving physically materializes.
+//! * [`codec`] — dense, sparse, and entropy-coded (delta+varint) update
+//!   encodings with exact-size auto-selection; masked updates ship as
+//!   (index, value) pairs, which is where the paper's communication
+//!   saving physically materializes.
 //! * [`frame`] — length-prefixed framing: header layout, size cap,
 //!   incremental reader, adversarial-input rejection.
-//! * [`link`] — the [`Transport`]/[`UploadSink`] abstraction, the
-//!   in-process default, and the [`NetworkModel`]-timed wrapper.
+//! * [`link`] — the [`Transport`]/[`UploadSink`] abstraction (blocking
+//!   and bounded-poll receives), the in-process default, and the
+//!   [`NetworkModel`]-timed wrapper.
 //! * [`socket`] — the TCP/UDS server + connect-per-upload client.
-//! * [`quantize`] — optional 8-bit linear quantization layered on either
-//!   encoding (paper §1: the methods "can also be combined with
+//! * [`quantize`] — optional 8-bit and 4-bit linear quantization layered
+//!   on either encoding (paper §1: the methods "can also be combined with
 //!   cutting-edge compression algorithms").
 //! * [`cost`] — Eq. 6 unit-cost model + the byte-accurate ledger every
 //!   figure driver reports from.

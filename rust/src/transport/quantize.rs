@@ -1,10 +1,21 @@
-//! 8-bit linear quantization (compression extension).
+//! 8-bit and 4-bit linear quantization (compression extension).
 //!
 //! The paper notes its methods "can also be combined with cutting-edge
 //! compression algorithms for furthering communication efficiency" (§1).
-//! This module provides the simplest respectable such algorithm — per-tensor
-//! linear u8 quantization with an f32 (min, scale) header — and the ablation
-//! bench stacks it under masking to measure the combined saving.
+//! This module provides the simplest respectable such algorithms —
+//! per-tensor linear quantization with an f32 (min, scale) header — in two
+//! widths sharing one fixed-point-grid contract:
+//!
+//! * **q8** — 256 levels, one byte per value, `scale = range / 255`;
+//! * **q4** — 16 levels, two values per byte (low nibble first),
+//!   `scale = range / 15`.
+//!
+//! Both dequantize as `min + scale * code`, so a decoded value lies within
+//! half a step (`scale / 2`) of the original, zero-range inputs are exact
+//! (`scale == 0`), and any consumer that folds dequantized values gets the
+//! same bits whether the codes arrived dense or sparse. For odd-length q4
+//! tensors the final byte's unused high nibble is zero — decoders treat a
+//! non-zero padding nibble as a malformed message.
 
 use crate::util::error::{Error, Result};
 
@@ -56,6 +67,69 @@ pub fn dequantize(q: &Quantized) -> Vec<f32> {
         .collect()
 }
 
+/// 4-bit quantized tensor: two codes per byte + dequantization parameters.
+/// `n` is the logical value count; `packed.len() == n.div_ceil(2)` and the
+/// unused high nibble of an odd-length tensor's last byte is zero.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Quantized4 {
+    pub min: f32,
+    pub scale: f32,
+    pub n: usize,
+    pub packed: Vec<u8>,
+}
+
+impl Quantized4 {
+    /// Wire size in bytes (header + packed codes).
+    pub fn bytes(&self) -> usize {
+        4 + 4 + self.packed.len()
+    }
+}
+
+/// Extract the `k`-th 4-bit code from a packed nibble buffer (low nibble
+/// of each byte first — the packing [`quantize4`] emits).
+#[inline]
+pub fn q4_code(packed: &[u8], k: usize) -> u8 {
+    (packed[k / 2] >> (4 * (k & 1))) & 0x0f
+}
+
+/// Quantize to 16 levels over [min, max], packed two codes per byte. The
+/// same grid contract as [`quantize`] (zero-range inputs get scale 0 and
+/// are exact), just a coarser step: `scale = range / 15`.
+pub fn quantize4(values: &[f32]) -> Result<Quantized4> {
+    if values.is_empty() {
+        return Err(Error::invalid("cannot quantize empty tensor"));
+    }
+    if values.iter().any(|v| !v.is_finite()) {
+        return Err(Error::invalid("cannot quantize non-finite values"));
+    }
+    let min = values.iter().copied().fold(f32::INFINITY, f32::min);
+    let max = values.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let range = max - min;
+    let scale = if range > 0.0 { range / 15.0 } else { 0.0 };
+    let mut packed = vec![0u8; values.len().div_ceil(2)];
+    for (k, &v) in values.iter().enumerate() {
+        let code = if scale == 0.0 {
+            0u8
+        } else {
+            (((v - min) / scale).round() as i64).clamp(0, 15) as u8
+        };
+        packed[k / 2] |= code << (4 * (k & 1));
+    }
+    Ok(Quantized4 {
+        min,
+        scale,
+        n: values.len(),
+        packed,
+    })
+}
+
+/// Inverse of [`quantize4`].
+pub fn dequantize4(q: &Quantized4) -> Vec<f32> {
+    (0..q.n)
+        .map(|k| q.min + q.scale * q4_code(&q.packed, k) as f32)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +177,58 @@ mod tests {
         let q = quantize(&[-1.0, 0.0, 1.0]).unwrap();
         assert_eq!(q.codes[0], 0);
         assert_eq!(q.codes[2], 255);
+    }
+
+    #[test]
+    fn q4_roundtrip_error_bounded_by_half_step() {
+        check("quantize4 error bound", 100, |g| {
+            let n = g.usize_in(1, 3000);
+            let vals = g.f32_vec(n, -3.0, 3.0);
+            let q = quantize4(&vals).unwrap();
+            let back = dequantize4(&q);
+            assert_eq!(back.len(), n);
+            let half_step = q.scale * 0.5 + 1e-6;
+            for (a, b) in vals.iter().zip(&back) {
+                assert!((a - b).abs() <= half_step, "err {} > {half_step}", (a - b).abs());
+            }
+        });
+    }
+
+    #[test]
+    fn q4_constant_tensor_is_exact() {
+        let vals = vec![-0.75f32; 33];
+        let q = quantize4(&vals).unwrap();
+        assert_eq!(q.scale, 0.0);
+        assert_eq!(dequantize4(&q), vals);
+    }
+
+    #[test]
+    fn q4_packs_two_codes_per_byte_with_zero_padding_nibble() {
+        // even count: exactly n/2 bytes
+        let q = quantize4(&[0.0, 1.0, 0.5, 0.25]).unwrap();
+        assert_eq!(q.packed.len(), 2);
+        // odd count: the last byte's high nibble is the zero pad
+        let q = quantize4(&[0.0, 1.0, 1.0]).unwrap();
+        assert_eq!(q.packed.len(), 2);
+        assert_eq!(q.packed[1] >> 4, 0, "padding nibble must be zero");
+        // extremes hit code 0 and 15
+        let q = quantize4(&[-1.0, 1.0]).unwrap();
+        assert_eq!(q4_code(&q.packed, 0), 0);
+        assert_eq!(q4_code(&q.packed, 1), 15);
+    }
+
+    #[test]
+    fn q4_compression_ratio_is_8x_minus_header() {
+        let vals: Vec<f32> = (0..10_000).map(|i| (i % 7) as f32).collect();
+        let q = quantize4(&vals).unwrap();
+        assert_eq!(q.bytes(), 8 + 5_000);
+        assert!(q.bytes() * 7 < 4 * 10_000);
+    }
+
+    #[test]
+    fn q4_rejects_empty_and_nonfinite() {
+        assert!(quantize4(&[]).is_err());
+        assert!(quantize4(&[f32::NAN]).is_err());
+        assert!(quantize4(&[0.0, f32::NEG_INFINITY]).is_err());
     }
 }

@@ -49,7 +49,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::transport::frame::{pump_frames, write_frame};
-use crate::transport::link::{recv_deadline, Transport, TransportKind, UploadSink};
+use crate::transport::link::{poll_channel, recv_deadline, Transport, TransportKind, UploadSink};
 use crate::util::error::{Error, Result};
 
 #[cfg(unix)]
@@ -301,6 +301,10 @@ impl Transport for Loopback {
 
     fn recv(&mut self) -> Result<Vec<u8>> {
         recv_deadline(&self.rx, self.timeout)
+    }
+
+    fn try_recv_for(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        poll_channel(&self.rx, timeout)
     }
 }
 

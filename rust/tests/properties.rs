@@ -92,26 +92,33 @@ fn prop_codec_roundtrips_all_encodings_including_degenerate_sizes() {
                 }
             })
             .collect();
-        for enc in [Encoding::Dense, Encoding::Sparse, Encoding::Auto] {
+        for enc in [
+            Encoding::Dense,
+            Encoding::Sparse,
+            Encoding::SparseDelta,
+            Encoding::Auto,
+        ] {
             let u = decode_update(&encode_update(9, 4, 77, &params, enc)).unwrap();
             assert_eq!(u.client, 9);
             assert_eq!(u.round, 4);
             assert_eq!(u.n_samples, 77);
             assert_eq!(u.to_dense(), params, "enc {enc:?} p {p} seed {:#x}", g.seed);
         }
-        // q8 is lossy: lengths and headers exact, values within half a
-        // quantization step of a [-2, 2] value range
-        let u = decode_update(&encode_update(9, 4, 77, &params, Encoding::AutoQ8)).unwrap();
-        assert_eq!(u.p, p);
-        let dense = u.to_dense();
-        let half_step = 0.5 * 4.0 / 255.0 + 1e-6;
-        for (a, b) in params.iter().zip(&dense) {
-            assert!(
-                (a - b).abs() <= half_step,
-                "q8 p {p} err {} seed {:#x}",
-                (a - b).abs(),
-                g.seed
-            );
+        // q8/q4 are lossy: lengths and headers exact, values within half a
+        // quantization step of a [-2, 2] value range (16 levels for q4)
+        for (enc, levels) in [(Encoding::AutoQ8, 255.0f32), (Encoding::AutoQ4, 15.0)] {
+            let u = decode_update(&encode_update(9, 4, 77, &params, enc)).unwrap();
+            assert_eq!(u.p, p);
+            let dense = u.to_dense();
+            let half_step = 0.5 * 4.0 / levels + 1e-6;
+            for (a, b) in params.iter().zip(&dense) {
+                assert!(
+                    (a - b).abs() <= half_step,
+                    "{enc:?} p {p} err {} seed {:#x}",
+                    (a - b).abs(),
+                    g.seed
+                );
+            }
         }
     });
 }
@@ -199,7 +206,7 @@ fn prop_sparse_fold_bitwise_equals_dense_fold_for_both_mask_targets() {
                 (v, g.usize_in(1, 500) as u32)
             })
             .collect();
-        for enc in [Encoding::Dense, Encoding::Sparse, Encoding::Auto, Encoding::AutoQ8] {
+        for &enc in Encoding::ALL {
             for target in [MaskTarget::Weights, MaskTarget::Delta] {
                 let mut make = || -> StreamingFedAvg {
                     match target {

@@ -148,7 +148,14 @@ fn loopback_payloads_and_aggregate_are_bitwise_identical_to_in_process() {
     let payloads: Vec<Vec<u8>> = (0..k)
         .map(|c| {
             let update = masked_update(&mut g, p, 0.15);
-            let enc = if c % 2 == 0 { Encoding::Auto } else { Encoding::AutoQ8 };
+            // cycle the encodings so every wire tag family (f32 sparse,
+            // delta+varint, q8, q4) crosses a real socket
+            let enc = [
+                Encoding::Auto,
+                Encoding::AutoQ8,
+                Encoding::SparseDelta,
+                Encoding::AutoQ4,
+            ][c % 4];
             encode_update(c as u32, 1, 100 + c as u32, &update, enc)
         })
         .collect();

@@ -11,11 +11,15 @@
 //!
 //! Run: cargo bench --bench transport
 
+use std::time::Duration;
+
 use fedmask::sim::rng::Rng;
 use fedmask::transport::codec::{
     decode_update, decode_update_view, encode_update, wire_bytes, DecodeScratch, Encoding,
 };
+use fedmask::transport::link::{Transport, TransportKind};
 use fedmask::transport::quantize::{dequantize, dequantize4, quantize, quantize4};
+use fedmask::transport::socket::{ClientConn, Loopback, WireAddr};
 use fedmask::util::bench::Bench;
 
 /// The seed decoder, preserved as a baseline: per-element cursor reads
@@ -122,6 +126,78 @@ fn main() {
             });
             println!("{}", m.report(Some((p as f64, "param"))));
         }
+    }
+
+    // Many-client fan-in over real sockets: 64 persistent authenticated
+    // sessions vs. a fresh connection + handshake per upload — the number
+    // behind the scaling claim that connect-per-upload does not survive
+    // fleet growth. Gated like the socket test suite (sealed sandboxes
+    // have no loopback TCP).
+    if std::env::var("FEDMASK_SOCKET_TESTS").map(|v| v == "1" || v == "true").unwrap_or(false) {
+        println!("== 64-client fan-in: persistent sessions vs session-per-upload ==");
+        let n = 64usize;
+        let p = 2_000usize;
+        let payloads: Vec<Vec<u8>> = (0..n)
+            .map(|c| {
+                let params: Vec<f32> = (0..p)
+                    .map(|_| if rng.next_f32() < 0.1 { rng.next_normal() } else { 0.0 })
+                    .collect();
+                encode_update(c as u32, 1, 100, &params, Encoding::Auto)
+            })
+            .collect();
+        let total_bytes: usize = payloads.iter().map(Vec::len).sum();
+        println!("  {n} uploads, {total_bytes} bytes total per fan-in");
+
+        // Persistent: the run-long sessions the transport actually uses —
+        // register (connect + handshake) once, then every iteration ships
+        // the whole cohort through the live connections and drains it.
+        let mut server = Loopback::bind(TransportKind::Tcp).unwrap();
+        server.set_timeout(Duration::from_secs(30));
+        let ids: Vec<u32> = (0..n as u32).collect();
+        server.register_clients(&ids).unwrap();
+        let sink = server.sink();
+        let m = b.run("fanin64/persistent_sessions", || {
+            for pl in &payloads {
+                sink.send(pl.clone()).unwrap();
+            }
+            for _ in 0..n {
+                server.recv().unwrap();
+            }
+        });
+        println!("{}", m.report(Some((n as f64, "upload"))));
+
+        // Session-per-upload: the pre-refactor shape — every message pays
+        // a connect + hello/welcome handshake + teardown. Reconnecting a
+        // just-closed id can race the server's EOF processing, so the
+        // client retries briefly (as a real reconnecting client would).
+        let mut server2 = Loopback::bind(TransportKind::Tcp).unwrap();
+        server2.set_timeout(Duration::from_secs(30));
+        // open the registration window without holding sessions ourselves:
+        // each upload opens (and tears down) its own
+        server2.allow_clients(&ids).unwrap();
+        let addr = server2.addr().clone();
+        let connect_retry = |addr: &WireAddr, c: u32| -> ClientConn {
+            for _ in 0..500 {
+                match ClientConn::connect(addr, c) {
+                    Ok(conn) => return conn,
+                    Err(_) => std::thread::sleep(Duration::from_micros(200)),
+                }
+            }
+            panic!("could not re-establish a session for client {c}")
+        };
+        let m = b.run("fanin64/session_per_upload", || {
+            for (c, pl) in payloads.iter().enumerate() {
+                let conn = connect_retry(&addr, c as u32);
+                conn.upload(pl).unwrap();
+                drop(conn);
+            }
+            for _ in 0..n {
+                server2.recv().unwrap();
+            }
+        });
+        println!("{}", m.report(Some((n as f64, "upload"))));
+    } else {
+        println!("== 64-client fan-in skipped (set FEDMASK_SOCKET_TESTS=1 to enable) ==");
     }
 
     println!("== 8-bit / 4-bit quantization (compression extension) ==");

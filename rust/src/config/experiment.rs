@@ -181,11 +181,13 @@ impl ExperimentConfig {
     // ------------------------------------------------------------------
 
     pub fn to_json(&self) -> Json {
-        let (samp_kind, samp_param) = match &self.sampling {
-            SamplingSchedule::Static { .. } => ("static", 0.0),
-            SamplingSchedule::DynamicExp { beta, .. } => ("dynamic-exp", *beta),
-            SamplingSchedule::DynamicLinear { slope, .. } => ("dynamic-linear", *slope),
-            SamplingSchedule::DynamicStep { factor, .. } => ("dynamic-step", *factor),
+        let (samp_kind, samp_param, samp_every) = match &self.sampling {
+            SamplingSchedule::Static { .. } => ("static", 0.0, 10),
+            SamplingSchedule::DynamicExp { beta, .. } => ("dynamic-exp", *beta, 10),
+            SamplingSchedule::DynamicLinear { slope, .. } => ("dynamic-linear", *slope, 10),
+            SamplingSchedule::DynamicStep { factor, every, .. } => {
+                ("dynamic-step", *factor, *every)
+            }
         };
         let (mask_kind, gamma) = match &self.masking {
             MaskPolicy::None => ("none", 1.0f32),
@@ -209,6 +211,7 @@ impl ExperimentConfig {
             ("sampling", Json::str(samp_kind)),
             ("sampling_c0", Json::num(self.sampling.c0())),
             ("sampling_param", Json::num(samp_param)),
+            ("sampling_every", Json::num(samp_every as f64)),
             ("min_clients", Json::num(self.min_clients as f64)),
             ("masking", Json::str(mask_kind)),
             ("gamma", Json::num(gamma as f64)),
@@ -285,7 +288,8 @@ impl ExperimentConfig {
             .unwrap_or_else(|| "static".into());
         let c0 = get_f64("sampling_c0", 1.0)?;
         let sp = get_f64("sampling_param", 0.0)?;
-        cfg.sampling = SamplingSchedule::from_config(&samp_kind, c0, sp)?;
+        let se = get_usize("sampling_every", 10)?;
+        cfg.sampling = SamplingSchedule::from_config(&samp_kind, c0, sp, se)?;
         cfg.min_clients = get_usize("min_clients", cfg.sampling.default_min_clients())?;
         let mask_kind = root
             .opt("masking")
@@ -462,6 +466,46 @@ mod tests {
         assert_eq!(cfg.model, "gru");
         assert_eq!(cfg.lr, 0.5);
         assert_eq!(cfg.masking, MaskPolicy::None);
+    }
+
+    #[test]
+    fn step_schedule_period_round_trips_and_is_validated() {
+        // the configurable period survives the JSON round trip (it used
+        // to be silently replaced by 10)
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.sampling = SamplingSchedule::DynamicStep { c0: 1.0, every: 7, factor: 0.5 };
+        cfg.min_clients = 2;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.sampling, cfg.sampling);
+        // explicit key wins over the default
+        let root = json::parse(
+            r#"{"model": "lenet", "sampling": "dynamic-step", "sampling_c0": 1.0,
+                "sampling_param": 0.5, "sampling_every": 4, "min_clients": 2}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&root).unwrap();
+        assert_eq!(
+            cfg.sampling,
+            SamplingSchedule::DynamicStep { c0: 1.0, every: 4, factor: 0.5 }
+        );
+        // missing key keeps the historical default of 10
+        let root = json::parse(
+            r#"{"model": "lenet", "sampling": "dynamic-step", "sampling_c0": 1.0,
+                "sampling_param": 0.5, "min_clients": 2}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&root).unwrap();
+        assert_eq!(
+            cfg.sampling,
+            SamplingSchedule::DynamicStep { c0: 1.0, every: 10, factor: 0.5 }
+        );
+        // a zero period is rejected at parse time
+        let root = json::parse(
+            r#"{"model": "lenet", "sampling": "dynamic-step", "sampling_c0": 1.0,
+                "sampling_param": 0.5, "sampling_every": 0, "min_clients": 2}"#,
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_json(&root).is_err());
     }
 
     #[test]

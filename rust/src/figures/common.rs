@@ -26,6 +26,10 @@ pub const FIGURE_OPTS: &[OptSpec] = &[
         "encoding",
         "wire encoding: dense|sparse|sparse-delta|auto|auto-q8|auto-q4 (default auto)",
     ),
+    OptSpec::flag(
+        "downlink-delta",
+        "ship every sweep's broadcast as an encoded delta over the downlink wire",
+    ),
     OptSpec::flag("paper-scale", "paper-size datasets (60k MNIST etc.)"),
     OptSpec::flag("quick", "coarser sweeps for a fast smoke run"),
 ];
@@ -44,6 +48,11 @@ pub struct FigureCtx {
     /// Wire-encoding override (`--encoding sparse-delta` reruns a sweep
     /// under the entropy-coded wire; `auto-q4` adds 4-bit value loss).
     pub encoding: Option<Encoding>,
+    /// Delta-downlink override (`--downlink-delta` reruns a whole sweep
+    /// with the broadcast shipped as an encoded delta over the wire —
+    /// the per-round `downlink_recon_err` column is the fidelity
+    /// evidence).
+    pub downlink_delta: bool,
     pub paper_scale: bool,
     pub quick: bool,
 }
@@ -70,6 +79,7 @@ impl FigureCtx {
                 .map_err(|_| crate::Error::invalid("--workers must be an integer"))?,
             transport: args.get("transport").map(TransportKind::parse).transpose()?,
             encoding: args.get("encoding").map(Encoding::parse).transpose()?,
+            downlink_delta: args.has_flag("downlink-delta"),
             paper_scale: args.has_flag("paper-scale"),
             quick: args.has_flag("quick"),
         })
@@ -91,6 +101,9 @@ impl FigureCtx {
         }
         if let Some(enc) = self.encoding {
             cfg.encoding = enc;
+        }
+        if self.downlink_delta {
+            cfg.downlink_delta = true;
         }
         cfg.seed = self.seed;
         if self.paper_scale {

@@ -1,15 +1,22 @@
 //! Simulated on-device client (Alg. 2 / Alg. 4, "Run on the k-th client").
 //!
-//! A [`ClientJob`] carries everything one selected client needs for a round:
-//! the broadcast global model, its data shard (via a shared `Arc<Dataset>`),
-//! and the run parameters. [`ClientJob::run`] executes on an engine-pool
-//! worker: local epochs of scanned mini-batch SGD through the train
-//! artifact, then the configured masking, then wire encoding. Everything is
-//! seeded from (experiment seed, round, client id), so a round's outcome is
-//! independent of worker scheduling.
+//! A [`ClientJob`] carries everything one selected client needs for a
+//! round: its data shard (via a shared `Arc<Dataset>`), the run
+//! parameters, and — since the full-duplex session refactor — a handle on
+//! the transport's **downlink half** instead of the broadcast itself.
+//! [`ClientJob::run`] executes on an engine-pool worker: it first
+//! *receives the round's encoded broadcast from the wire*
+//! ([`receive_broadcast`]: decode, and under `downlink_delta` reconstruct
+//! `w_{t-1} + delta` against the reference state it holds), then runs
+//! local epochs of scanned mini-batch SGD through the train artifact, the
+//! configured masking, and wire encoding. Everything is seeded from
+//! (experiment seed, round, client id), so a round's outcome is
+//! independent of worker scheduling — and because every transport delivers
+//! the same broadcast bytes, it is transport-independent too.
 
 use std::ops::Range;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::config::experiment::ExperimentConfig;
 use crate::data::{batcher, Dataset};
@@ -17,8 +24,15 @@ use crate::fl::masking::{random_mask_rust, selective_mask_rust_with, MaskEngine,
 use crate::runtime::engine::Engine;
 use crate::runtime::pool::WorkerScratch;
 use crate::sim::rng::Rng;
-use crate::transport::codec::encode_update_with;
+use crate::transport::codec::{
+    decode_update, encode_update_with, BROADCAST_DELTA, BROADCAST_FULL, BROADCAST_SENDER,
+};
+use crate::transport::link::{DownlinkSource, DEFAULT_UPLOAD_TIMEOUT};
 use crate::util::error::{Error, Result};
+
+/// How long a client job waits for its round broadcast. Mirrors the
+/// upload timeout: it only trips when the server died mid-round.
+pub const DOWNLINK_TIMEOUT: Duration = DEFAULT_UPLOAD_TIMEOUT;
 
 /// A client's data shard reference.
 #[derive(Debug, Clone)]
@@ -38,20 +52,84 @@ impl ShardRef {
     }
 }
 
+/// Receive and materialize one round's broadcast from the downlink wire —
+/// the client half of the delta-downlink protocol, engine-free by design
+/// so the reconstruction contract is unit-testable without PJRT.
+///
+/// Validation before use: the message must come from the server
+/// ([`BROADCAST_SENDER`]), name this `round`, and its semantics flag must
+/// match what the server believes this client holds — [`BROADCAST_DELTA`]
+/// if and only if `reference` is `Some` (the previous broadcast the
+/// client kept). A mismatch means server and client disagree about client
+/// state and training on the result would silently drift, so it fails
+/// loudly instead.
+///
+/// Reconstruction is exactly the server's canonical arithmetic
+/// (`old + d` per coordinate, f32), so every client's materialized model
+/// is bitwise identical to the server's `received` reference — which is
+/// what keeps aggregation transport-invariant even under lossy downlink
+/// encodings.
+pub fn receive_broadcast(
+    downlink: &dyn DownlinkSource,
+    client: u32,
+    round: u32,
+    reference: Option<&[f32]>,
+    timeout: Duration,
+) -> Result<Vec<f32>> {
+    let bytes = downlink.recv(client, timeout)?;
+    let msg = decode_update(&bytes)?;
+    if msg.client != BROADCAST_SENDER {
+        return Err(Error::invalid(format!(
+            "client {client}: broadcast names sender {}, not the server",
+            msg.client
+        )));
+    }
+    if msg.round != round {
+        return Err(Error::invalid(format!(
+            "client {client}: broadcast is for round {}, expected round {round}",
+            msg.round
+        )));
+    }
+    match (msg.n_samples, reference) {
+        (BROADCAST_FULL, None) => Ok(msg.into_dense()),
+        (BROADCAST_DELTA, Some(prev)) => {
+            if msg.p != prev.len() {
+                return Err(Error::invalid(format!(
+                    "client {client}: delta broadcast carries {} params, reference holds {}",
+                    msg.p,
+                    prev.len()
+                )));
+            }
+            let delta = msg.into_dense();
+            Ok(delta.iter().zip(prev.iter()).map(|(d, old)| old + d).collect())
+        }
+        (BROADCAST_FULL, Some(_)) => Err(Error::invalid(format!(
+            "client {client}: received a full broadcast but holds delta reference state \
+             (server/client state disagreement)"
+        ))),
+        (BROADCAST_DELTA, None) => Err(Error::invalid(format!(
+            "client {client}: received a delta broadcast with no reference state to apply it to"
+        ))),
+        (other, _) => Err(Error::invalid(format!(
+            "client {client}: unknown broadcast semantics flag {other}"
+        ))),
+    }
+}
+
 /// What a client sends back to the server: the encoded wire message plus
 /// sideband metadata that never crosses the network.
 ///
-/// Since the transport refactor the dense parameter vector is gone from the
-/// client->server path — `payload` (an encoded
+/// The dense parameter vector is gone from *both* directions of the
+/// client↔server path — `payload` (an encoded
 /// [`crate::transport::codec::WireUpdate`]: header + masked sparse / dense /
-/// quantized body) is the only carrier of the update, and the server
-/// decodes it before aggregating. The FedAvg weight n_i rides in the wire
-/// header, exactly like a real deployment. The server-side job wrapper
-/// ships `payload` through the round's
+/// quantized body) is the only carrier of the update, and the broadcast
+/// the client trained from arrived the same way. The FedAvg weight n_i
+/// rides in the wire header, exactly like a real deployment. The
+/// server-side job wrapper ships `payload` through the round's
 /// [`UploadSink`](crate::transport::link::UploadSink) — an in-process
-/// channel by default, a framed TCP/UDS socket under `--transport tcp|uds`
-/// — so under a socket transport these bytes genuinely cross a kernel
-/// socket before the server sees them.
+/// channel by default, the client's persistent authenticated TCP/UDS
+/// session under `--transport tcp|uds` — so under a socket transport these
+/// bytes genuinely cross a kernel socket before the server sees them.
 #[derive(Debug, Clone)]
 pub struct LocalOutcome {
     pub client: usize,
@@ -71,7 +149,13 @@ pub struct ClientJob {
     pub round: usize,
     pub dataset: Arc<Dataset>,
     pub shard: ShardRef,
-    pub global: Arc<Vec<f32>>,
+    /// Where this round's encoded broadcast arrives (the transport's
+    /// downlink half).
+    pub downlink: Arc<dyn DownlinkSource>,
+    /// The previous broadcast this client holds — the reference a delta
+    /// downlink reconstructs against; `None` means the server owes it a
+    /// full (dense-cost) broadcast this round.
+    pub reference: Option<Arc<Vec<f32>>>,
     pub cfg: Arc<ExperimentConfig>,
 }
 
@@ -87,11 +171,22 @@ impl ClientJob {
     /// Run the local update on an engine worker. `scratch` is the worker's
     /// long-lived buffer arena (mask deltas, encode temporaries), so a
     /// steady-state round allocates nothing per client beyond the payload
-    /// itself.
+    /// and the materialized broadcast.
     pub fn run(&self, engine: &Engine, scratch: &mut WorkerScratch) -> Result<LocalOutcome> {
         let model = &self.cfg.model;
         let mm = engine.model(model)?.clone();
-        let mut params = (*self.global).clone();
+
+        // Downlink: pull this round's encoded broadcast off the wire and
+        // materialize the global model (dense decode, or delta
+        // reconstruction against the held reference).
+        let global = receive_broadcast(
+            self.downlink.as_ref(),
+            self.client_id as u32,
+            self.round as u32,
+            self.reference.as_deref().map(Vec::as_slice),
+            DOWNLINK_TIMEOUT,
+        )?;
+        let mut params = global.clone();
         let mut last_loss = 0.0f32;
 
         // E local epochs; each epoch reshuffles the shard and streams the
@@ -124,10 +219,10 @@ impl ClientJob {
                 random_mask_rust(&params, gamma, &mm.layers, &mut rng)
             }
             MaskPolicy::Selective { gamma, engine: me, scope } => match me {
-                MaskEngine::Hlo => engine.mask(model, &params, &self.global, gamma)?,
+                MaskEngine::Hlo => engine.mask(model, &params, &global, gamma)?,
                 MaskEngine::Rust => selective_mask_rust_with(
                     &params,
-                    &self.global,
+                    &global,
                     gamma,
                     &mm.layers,
                     scope,
@@ -169,6 +264,8 @@ impl ClientJob {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::transport::codec::{encode_update, Encoding};
+    use crate::transport::link::{InProcess, Transport};
 
     #[test]
     fn shard_sample_counts() {
@@ -176,5 +273,69 @@ mod tests {
         assert_eq!(img.n_samples(33), 37);
         let txt = ShardRef::Text(100..430);
         assert_eq!(txt.n_samples(33), 10);
+    }
+
+    fn wired(client: u32, msg: Vec<u8>) -> Arc<dyn DownlinkSource> {
+        let mut t = InProcess::new();
+        t.register_clients(&[client]).unwrap();
+        t.send_downlink(client, Arc::new(msg)).unwrap();
+        t.downlink()
+    }
+
+    const T: Duration = Duration::from_secs(2);
+
+    #[test]
+    fn full_broadcast_decodes_bitwise() {
+        let params = vec![0.5f32, -1.25, 0.0, 3.5];
+        let msg = encode_update(BROADCAST_SENDER, 4, BROADCAST_FULL, &params, Encoding::Dense);
+        let dl = wired(7, msg);
+        let got = receive_broadcast(dl.as_ref(), 7, 4, None, T).unwrap();
+        assert_eq!(got, params, "dense f32 downlink must be bit-exact");
+    }
+
+    #[test]
+    fn delta_broadcast_reconstructs_with_the_servers_arithmetic() {
+        let prev = vec![1.0f32, 2.0, -3.0, 0.25];
+        let delta = vec![0.5f32, 0.0, 1.5, -0.25];
+        for &enc in Encoding::ALL {
+            let msg = encode_update(BROADCAST_SENDER, 9, BROADCAST_DELTA, &delta, enc);
+            let dl = wired(3, msg.clone());
+            let got = receive_broadcast(dl.as_ref(), 3, 9, Some(&prev), T).unwrap();
+            // the canonical reconstruction: decode our own message, add
+            let decoded = decode_update(&msg).unwrap().into_dense();
+            let want: Vec<f32> =
+                decoded.iter().zip(prev.iter()).map(|(d, old)| old + d).collect();
+            assert_eq!(got, want, "{enc:?}");
+        }
+    }
+
+    #[test]
+    fn state_disagreements_fail_loudly() {
+        let prev = vec![1.0f32, 2.0];
+        // full broadcast but the client holds reference state
+        let full = encode_update(BROADCAST_SENDER, 1, BROADCAST_FULL, &prev, Encoding::Dense);
+        let err = receive_broadcast(wired(0, full).as_ref(), 0, 1, Some(&prev), T).unwrap_err();
+        assert!(err.to_string().contains("disagreement"), "{err}");
+        // delta broadcast but the client holds nothing
+        let delta = encode_update(BROADCAST_SENDER, 1, BROADCAST_DELTA, &prev, Encoding::Dense);
+        let err = receive_broadcast(wired(0, delta).as_ref(), 0, 1, None, T).unwrap_err();
+        assert!(err.to_string().contains("no reference"), "{err}");
+        // dimension mismatch between delta and reference
+        let delta3 =
+            encode_update(BROADCAST_SENDER, 1, BROADCAST_DELTA, &[1.0, 2.0, 3.0], Encoding::Dense);
+        let err = receive_broadcast(wired(0, delta3).as_ref(), 0, 1, Some(&prev), T).unwrap_err();
+        assert!(err.to_string().contains("reference holds"), "{err}");
+    }
+
+    #[test]
+    fn wrong_round_and_wrong_sender_are_rejected() {
+        let params = vec![1.0f32];
+        let msg = encode_update(BROADCAST_SENDER, 5, BROADCAST_FULL, &params, Encoding::Dense);
+        let err = receive_broadcast(wired(0, msg).as_ref(), 0, 6, None, T).unwrap_err();
+        assert!(err.to_string().contains("round"), "{err}");
+        // an upload masquerading as a broadcast names a real client id
+        let msg = encode_update(12, 5, BROADCAST_FULL, &params, Encoding::Dense);
+        let err = receive_broadcast(wired(0, msg).as_ref(), 0, 5, None, T).unwrap_err();
+        assert!(err.to_string().contains("sender"), "{err}");
     }
 }

@@ -1,0 +1,1271 @@
+//! The round state machine: **sample → broadcast → collect → finalize**.
+//!
+//! [`RoundDriver`] owns everything one federated round needs from the
+//! communication plane — the [`Transport`] (with its per-client
+//! authenticated sessions), the delta-downlink reference state, the cost
+//! ledger, and the decode scratch — and exposes the round as four
+//! explicitly-typed phases:
+//!
+//! 1. [`RoundDriver::sample`] → [`Cohort`] — the sampling schedule
+//!    (Alg. 1/3) and ACK selection loop: which registered,
+//!    session-holding clients participate, and which ACKed but straggle.
+//! 2. [`RoundDriver::broadcast`] → [`RoundWire`] — encode the round's
+//!    downlink (dense, or `w_t − w_{t-1}` through the codec under
+//!    `downlink_delta`), **push it through the transport's downlink
+//!    half** to every completer (so the broadcast genuinely crosses the
+//!    wire — sockets included), bill every ACKer's download, and assert
+//!    the reconstruction-fidelity bound.
+//! 3. [`RoundDriver::collect`] → [`Collected`] — the streaming drain: a
+//!    select-style wait over the pool-result channel and the wire,
+//!    folding each upload into the aggregator the moment it lands
+//!    ([`drain_round_uploads`]).
+//! 4. [`RoundDriver::finalize`] → [`RoundCost`] — uplink ledger
+//!    accounting in deterministic client-id order.
+//!
+//! The driver is engine-free by construction: no phase touches PJRT, so
+//! the whole cycle — including the delta-downlink reconstruction contract
+//! and the dead-client regressions — is pinned by unit tests that drive
+//! fake clients over real transports. [`crate::fl::server::Server`] is
+//! the only production caller: it owns the engine pool, fans client jobs
+//! out between `broadcast` and `collect`, and consumes the phase outputs
+//! for the clock and the round record.
+//!
+//! Determinism: client selection derives from (seed, round); the
+//! broadcast bytes are a pure function of the global model and config;
+//! the fold is order-independent. The same config therefore reproduces
+//! bit-identical rounds on every transport — the socket suite pins it.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::experiment::{ExperimentConfig, NetworkKind};
+use crate::fl::aggregate::{Aggregator, Contribution, SparseContribution};
+use crate::sim::availability::{AvailabilityModel, ClientState};
+use crate::sim::rng::Rng;
+use crate::transport::codec::{
+    decode_update, decode_update_view, encode_update, wire_bytes, BodyView, DecodeScratch,
+    Encoding, BROADCAST_DELTA, BROADCAST_FULL, BROADCAST_SENDER,
+};
+use crate::transport::cost::CostLedger;
+use crate::transport::link::{
+    DownlinkSource, InProcess, Simulated, Transport, TransportKind, UploadSink,
+    DEFAULT_UPLOAD_TIMEOUT,
+};
+use crate::transport::network::NetworkModel;
+use crate::transport::socket::Loopback;
+use crate::util::error::{Error, Result};
+
+/// Sideband metadata one client job reports through the pool channel:
+/// (train loss, nnz, encoded payload bytes).
+pub type JobMeta = (f32, usize, usize);
+
+/// Per-round budget of dropped invalid uploads. Under a socket transport
+/// the listener is an open local port, so a stray peer could deliver a
+/// well-framed message whose *payload* fails decode or cohort validation
+/// (the session layer already rejects anything that fails token
+/// verification); those cost the round nothing — but a garbage firehose
+/// must not stall the aggregation loop forever.
+const MAX_REJECTED_UPLOADS: usize = 64;
+
+/// How long the drain loop waits on the wire before re-polling the pool's
+/// result channel. Small enough that a dead client's concrete job error
+/// surfaces within a poll tick; large enough that a healthy round spends
+/// its time blocked in the transport, not spinning.
+const DRAIN_POLL: Duration = Duration::from_millis(25);
+
+/// Account one rejected (well-framed but invalid) upload, erroring once
+/// the per-round budget is exhausted. On a closed wire (`tolerate` false —
+/// in-process channels carry only our own cohort's payloads) an invalid
+/// upload can only be an internal bug, so it fails the round precisely and
+/// immediately instead of being dropped.
+fn reject_upload(rejected: &mut usize, tolerate: bool, why: impl std::fmt::Display) -> Result<()> {
+    if !tolerate {
+        return Err(Error::invalid(format!("invalid upload: {why}")));
+    }
+    *rejected += 1;
+    log::warn!("transport: dropping invalid upload ({why})");
+    if *rejected > MAX_REJECTED_UPLOADS {
+        return Err(Error::transport(format!(
+            "dropped {rejected} invalid uploads this round; giving up"
+        )));
+    }
+    Ok(())
+}
+
+/// Drain one round's uploads: a select-style wait over the **pool-result
+/// channel** (job metadata / job errors) and the **wire** (encoded
+/// payloads), folding each valid payload into `agg` the moment it lands.
+///
+/// The two streams are independent — a payload can beat its metadata and
+/// vice versa — so the loop alternates: drain every ready pool result
+/// (a failed client job surfaces its concrete error *here, immediately*,
+/// instead of after the full upload timeout — the wire can never deliver
+/// the payload a dead job didn't send), then wait at most [`DRAIN_POLL`]
+/// for the next payload. Wire arrivals are matched to the cohort by their
+/// own header (selected client, current round, model dimension, no
+/// duplicates); invalid ones are dropped on a bounded budget when the
+/// transport `tolerate_strays`, and fail the round precisely otherwise.
+///
+/// `upload_timeout` is an **inactivity** bound, matching the old per-recv
+/// semantics: the window restarts whenever the round makes progress (a
+/// payload folds or a job reports), so a large cohort legitimately
+/// draining for longer than the timeout never trips it — only a round
+/// where nothing happens for the whole window does.
+///
+/// Returns the per-job metadata in input (client-id) order once every job
+/// reported and every upload folded. Free function by design: it needs no
+/// engine, so the dead-client regression tests drive it directly with
+/// hand-built channels and transports.
+#[allow(clippy::too_many_arguments)] // round context; precedent: data/synth.rs
+fn drain_round_uploads(
+    transport: &mut dyn Transport,
+    results: &Receiver<(usize, Result<JobMeta>)>,
+    agg: &mut dyn Aggregator,
+    scratch: &mut DecodeScratch,
+    selected: &[usize],
+    round: usize,
+    p: usize,
+    tolerate_strays: bool,
+    upload_timeout: Duration,
+) -> Result<Vec<JobMeta>> {
+    let n_jobs = selected.len();
+    let mut metas: Vec<Option<JobMeta>> = vec![None; n_jobs];
+    let mut uploaded = vec![false; n_jobs];
+    let mut metas_pending = n_jobs;
+    let mut folds_pending = n_jobs;
+    let mut rejected = 0usize;
+    let mut results_open = true;
+    // Inactivity deadline: pushed forward on every piece of progress.
+    let mut deadline = Instant::now() + upload_timeout;
+
+    while metas_pending > 0 || folds_pending > 0 {
+        // 1) Surface every ready job result without blocking. `res?` is the
+        //    headline path: a client job that died reports its concrete
+        //    error here on the next poll tick.
+        while results_open && metas_pending > 0 {
+            match results.try_recv() {
+                Ok((idx, res)) => {
+                    metas[idx] = Some(res?);
+                    metas_pending -= 1;
+                    deadline = Instant::now() + upload_timeout;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => results_open = false,
+            }
+        }
+        if !results_open && metas_pending > 0 {
+            // Every sender is gone but some job never reported: its worker
+            // thread died (e.g. a panicking client) — fail now; the wire
+            // will never deliver its upload.
+            return Err(Error::Engine("worker dropped job (thread died?)".into()));
+        }
+        if folds_pending == 0 {
+            // All payloads folded; only metadata is outstanding. Block on
+            // the result channel directly (bounded by the round deadline).
+            let window = deadline
+                .checked_duration_since(Instant::now())
+                .filter(|w| !w.is_zero())
+                .ok_or_else(|| {
+                    Error::transport(format!(
+                        "timed out after {upload_timeout:?} waiting for job results"
+                    ))
+                })?;
+            match results.recv_timeout(window.min(DRAIN_POLL)) {
+                Ok((idx, res)) => {
+                    metas[idx] = Some(res?);
+                    metas_pending -= 1;
+                    deadline = Instant::now() + upload_timeout;
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => results_open = false,
+            }
+            continue;
+        }
+
+        // 2) Bounded wait for the next wire payload.
+        let window = deadline
+            .checked_duration_since(Instant::now())
+            .filter(|w| !w.is_zero())
+            .ok_or_else(|| {
+                let missing: Vec<usize> = selected
+                    .iter()
+                    .zip(&uploaded)
+                    .filter(|(_, up)| !**up)
+                    .map(|(c, _)| *c)
+                    .collect();
+                Error::transport(format!(
+                    "timed out after {upload_timeout:?} waiting for uploads from clients {missing:?}"
+                ))
+            })?;
+        let Some(payload) = transport.try_recv_for(window.min(DRAIN_POLL))? else {
+            continue;
+        };
+
+        // 3) Decode + cohort-validate + fold. Invalid payloads are dropped
+        //    on a bounded budget (fold failures stay fatal — they can leave
+        //    the accumulator partially updated, and our own cohort's
+        //    payloads are codec-clean).
+        let update = match decode_update_view(&payload, scratch) {
+            Ok(u) => u,
+            Err(e) => {
+                reject_upload(&mut rejected, tolerate_strays, e)?;
+                continue;
+            }
+        };
+        if update.round as usize != round {
+            reject_upload(
+                &mut rejected,
+                tolerate_strays,
+                format_args!(
+                    "client {} names round {}, server is on round {round}",
+                    update.client, update.round
+                ),
+            )?;
+            continue;
+        }
+        let pos = match selected.binary_search(&(update.client as usize)) {
+            Ok(pos) => pos,
+            Err(_) => {
+                reject_upload(
+                    &mut rejected,
+                    tolerate_strays,
+                    format_args!("client {} not in this round's cohort", update.client),
+                )?;
+                continue;
+            }
+        };
+        if uploaded[pos] {
+            reject_upload(
+                &mut rejected,
+                tolerate_strays,
+                format_args!("duplicate update from client {}", update.client),
+            )?;
+            continue;
+        }
+        if update.p != p {
+            reject_upload(
+                &mut rejected,
+                tolerate_strays,
+                format_args!("carries {} params, model has {}", update.p, p),
+            )?;
+            continue;
+        }
+        uploaded[pos] = true;
+        let client = update.client as usize;
+        match update.body {
+            BodyView::Dense(params) => agg.fold(Contribution {
+                client,
+                params,
+                n_samples: update.n_samples,
+            })?,
+            BodyView::Sparse { indices, values } => agg.fold_sparse(SparseContribution {
+                client,
+                p: update.p,
+                indices,
+                values,
+                n_samples: update.n_samples,
+            })?,
+        }
+        folds_pending -= 1;
+        deadline = Instant::now() + upload_timeout;
+    }
+    debug_assert_eq!(agg.folded(), n_jobs);
+    Ok(metas.into_iter().map(|m| m.expect("all jobs accounted")).collect())
+}
+
+// ---------------------------------------------------------------------
+// Phase types
+// ---------------------------------------------------------------------
+
+/// Output of the **sample** phase: who participates in round `round`.
+#[derive(Debug, Clone)]
+pub struct Cohort {
+    /// 1-based round this cohort was drawn for.
+    pub round: usize,
+    /// The schedule's sampling rate at this round (for the record).
+    pub rate: f64,
+    /// Clients that ACKed and will complete — sorted, deduplicate-free;
+    /// the aggregation loop binary-searches it.
+    pub selected: Vec<usize>,
+    /// Clients that ACKed (and are billed the broadcast) but miss the
+    /// round deadline; sorted.
+    pub stragglers: Vec<usize>,
+}
+
+/// Output of the **broadcast** phase: the canonical model state clients
+/// received, plus what it cost.
+pub struct RoundWire {
+    /// The model as clients materialize it this round — identical bitwise
+    /// to every client's [`crate::fl::client::receive_broadcast`] result,
+    /// and the reference the aggregator reconstructs mask targets
+    /// against. (Under `downlink_delta` this is the *reconstructed*
+    /// broadcast, which may differ from the true global model within the
+    /// codec's quantizer half-step; dense broadcasts are bit-exact.)
+    pub params: Arc<Vec<f32>>,
+    /// Per selected client (same order as `Cohort::selected`): the
+    /// previous-broadcast reference that client holds — `Some` iff its
+    /// downlink this round is a delta it must reconstruct against.
+    pub references: Vec<Option<Arc<Vec<f32>>>>,
+    /// Max |reconstructed − global| this round (0.0 for dense) — the
+    /// delta-downlink fidelity evidence, asserted against the quantizer
+    /// half-step bound before any client trains on it.
+    pub recon_err: f64,
+    /// Largest single download billed this round (drives the virtual
+    /// clock's downlink term).
+    pub slowest_download: usize,
+}
+
+/// Output of the **collect** phase: every upload folded, every job
+/// accounted.
+pub struct Collected {
+    /// Per-job metadata in input (client-id) order.
+    pub metas: Vec<JobMeta>,
+}
+
+/// Output of the **finalize** phase: the round's uplink accounting.
+pub struct RoundCost {
+    /// Sum of the cohort's training losses (caller divides by cohort size).
+    pub loss_sum: f64,
+    /// Encoded upload bytes per client, in client-id order (drives the
+    /// virtual clock's uplink term).
+    pub upload_sizes: Vec<usize>,
+}
+
+// ---------------------------------------------------------------------
+// The driver
+// ---------------------------------------------------------------------
+
+/// Cross-round communication state + the four-phase round cycle. See the
+/// module docs for the phase walk-through.
+pub struct RoundDriver {
+    cfg: Arc<ExperimentConfig>,
+    p: usize,
+    /// The wire both directions travel: in-process channels, persistent
+    /// authenticated TCP/UDS sessions, or either wrapped in
+    /// `NetworkModel`-timed delivery. Held for the driver's lifetime
+    /// (socket listeners bind once, sessions persist across rounds).
+    transport: Box<dyn Transport>,
+    /// Ids registered (and on sockets: session-holding) at construction.
+    registered: Vec<u32>,
+    /// The model clients received last round — the delta-downlink
+    /// reference (None before the first broadcast or when
+    /// `downlink_delta` is off).
+    prev_broadcast: Option<Arc<Vec<f32>>>,
+    /// Which clients received the **previous round's** broadcast (rebuilt
+    /// every round — the delta is `w_t - w_{t-1}`, so a client that sat
+    /// out round t-1 holds stale state, cannot apply it, and is sent a
+    /// dense catch-up transfer instead).
+    has_prev_broadcast: Vec<bool>,
+    ledger: CostLedger,
+    /// Reusable decode buffers for the streaming aggregation loop — held
+    /// across rounds so steady-state decoding never allocates.
+    decode_scratch: DecodeScratch,
+    upload_timeout: Duration,
+}
+
+impl RoundDriver {
+    /// Build the communication plane for a run: construct the configured
+    /// transport and register every client id `0..cfg.clients` — on the
+    /// socket transports this opens one persistent duplex connection per
+    /// client and runs the token handshake, so by the time this returns
+    /// the whole fleet holds sessions. (Registering the full registry
+    /// eagerly is fine at simulation scale; a multi-host deployment would
+    /// register lazily per cohort — ROADMAP.)
+    pub fn new(cfg: Arc<ExperimentConfig>, p: usize) -> Result<RoundDriver> {
+        let base: Box<dyn Transport> = match cfg.transport {
+            TransportKind::InProcess => Box::new(InProcess::new()),
+            TransportKind::Tcp | TransportKind::Uds => Box::new(Loopback::bind(cfg.transport)?),
+        };
+        let transport: Box<dyn Transport> = match cfg.network {
+            NetworkKind::Ideal => base,
+            NetworkKind::Simulated => Box::new(Simulated::new(base, NetworkModel::default())),
+        };
+        RoundDriver::with_transport(cfg, p, transport)
+    }
+
+    /// Driver over a caller-built transport (tests wire in short-timeout
+    /// or pre-wrapped transports). Registers the full client registry.
+    pub fn with_transport(
+        cfg: Arc<ExperimentConfig>,
+        p: usize,
+        mut transport: Box<dyn Transport>,
+    ) -> Result<RoundDriver> {
+        let registered: Vec<u32> = (0..cfg.clients as u32).collect();
+        transport.register_clients(&registered)?;
+        log::debug!(
+            "[{}] full-duplex rounds travel via {} ({} clients registered)",
+            cfg.label,
+            transport.label(),
+            registered.len()
+        );
+        let clients = cfg.clients;
+        Ok(RoundDriver {
+            cfg,
+            p,
+            transport,
+            registered,
+            prev_broadcast: None,
+            has_prev_broadcast: vec![false; clients],
+            ledger: CostLedger::new(),
+            decode_scratch: DecodeScratch::default(),
+            upload_timeout: DEFAULT_UPLOAD_TIMEOUT,
+        })
+    }
+
+    /// Client ids holding registrations (on sockets: live sessions).
+    pub fn registered(&self) -> &[u32] {
+        &self.registered
+    }
+
+    /// Transport name for logs.
+    pub fn transport_label(&self) -> &'static str {
+        self.transport.label()
+    }
+
+    /// Running cost totals.
+    pub fn ledger(&self) -> &CostLedger {
+        &self.ledger
+    }
+
+    /// Override the collect phase's inactivity timeout (tests).
+    pub fn set_upload_timeout(&mut self, timeout: Duration) {
+        self.upload_timeout = timeout;
+    }
+
+    /// Upload sink client jobs push their encoded payloads through.
+    pub fn sink(&self) -> Arc<dyn UploadSink> {
+        self.transport.sink()
+    }
+
+    /// Downlink handle client jobs receive their broadcast through.
+    pub fn downlink(&self) -> Arc<dyn DownlinkSource> {
+        self.transport.downlink()
+    }
+
+    /// **Phase 1 — sample.** ACK selection loop (Alg. 1/3 lines 9–14):
+    /// compute the schedule's target cohort size for round `t`, then walk
+    /// a seeded permutation of the registry, requesting connections until
+    /// `want` clients ACK. Completers finish the round; stragglers ACKed
+    /// (and therefore receive the broadcast, paying downlink) but miss
+    /// the deadline and are dropped before aggregation. Both lists sorted
+    /// for deterministic aggregation order. Every sampled client is by
+    /// construction a member of the registered, session-holding fleet.
+    pub fn sample(&self, availability: &AvailabilityModel, t: usize) -> Cohort {
+        let rate = self.cfg.sampling.rate(t);
+        let want = self.cfg.sampling.num_clients(t, self.cfg.clients, self.cfg.min_clients);
+        let mut order: Vec<usize> = (0..self.cfg.clients).collect();
+        let mut rng = Rng::new(self.cfg.seed).fork(t as u64).fork(0x5e1);
+        rng.shuffle(&mut order);
+        let mut completers = Vec::with_capacity(want);
+        let mut stragglers = Vec::new();
+        for &c in &order {
+            if completers.len() + stragglers.len() >= want {
+                break;
+            }
+            match availability.state(t as u64, c as u64) {
+                ClientState::Available => completers.push(c),
+                ClientState::Straggler => stragglers.push(c),
+                ClientState::Offline => {}
+            }
+        }
+        if completers.is_empty() {
+            // Degenerate availability: fall back to the first candidate so a
+            // run cannot deadlock (logged; the paper assumes full ACK).
+            log::warn!("round {t}: no client completed; forcing client {}", order[0]);
+            completers.push(order[0]);
+            stragglers.retain(|&c| c != order[0]);
+        }
+        completers.sort_unstable();
+        stragglers.sort_unstable();
+        debug_assert!(completers
+            .iter()
+            .chain(&stragglers)
+            .all(|&c| self.registered.binary_search(&(c as u32)).is_ok()));
+        Cohort {
+            round: t,
+            rate,
+            selected: completers,
+            stragglers,
+        }
+    }
+
+    /// **Phase 2 — broadcast.** Encode this round's downlink and push it
+    /// through the transport to every completer, so the broadcast bytes
+    /// genuinely cross the wire (the send only enqueues; the socket
+    /// transport writes from its own thread, and jobs fanned out after
+    /// this call drain it — no deadlock however small the kernel buffer).
+    ///
+    /// Default: one dense message, clients decode the global model
+    /// verbatim (bit-exact). With `downlink_delta`: rounds after the
+    /// first ship `w_t − w_{t-1}` through the configured encoding to
+    /// every client that holds the previous broadcast, and a dense
+    /// catch-up of the canonical reconstructed state to everyone else;
+    /// clients reconstruct `w_{t-1} + delta`. The server performs the
+    /// identical decode to maintain the canonical fleet state, asserts
+    /// the reconstruction error against the codec's quantizer half-step,
+    /// and hands the result to the aggregator as the round's reference.
+    ///
+    /// Stragglers are *billed* their download (the bytes were spent even
+    /// though their update misses the deadline) but no wire message is
+    /// queued for them — no job of theirs will drain it, and an unread
+    /// frame would corrupt their next active round.
+    pub fn broadcast(&mut self, params: &Arc<Vec<f32>>, cohort: &Cohort) -> Result<RoundWire> {
+        let t = cohort.round;
+        self.transport.begin_round(cohort.selected.len());
+
+        // --- canonical state + the (at most two) distinct messages ---
+        let prev = if self.cfg.downlink_delta { self.prev_broadcast.clone() } else { None };
+        let (received, delta_wire, delta_nnz, recon_err) = match &prev {
+            Some(prev_params) => {
+                let delta: Vec<f32> = params
+                    .iter()
+                    .zip(prev_params.iter())
+                    .map(|(new, old)| new - old)
+                    .collect();
+                let nnz = delta.iter().filter(|v| **v != 0.0).count();
+                let wire = Arc::new(encode_update(
+                    BROADCAST_SENDER,
+                    t as u32,
+                    BROADCAST_DELTA,
+                    &delta,
+                    self.cfg.encoding,
+                ));
+                let decoded = decode_update(&wire)?.into_dense();
+                let received: Vec<f32> = decoded
+                    .iter()
+                    .zip(prev_params.iter())
+                    .map(|(d, old)| old + d)
+                    .collect();
+                // Fidelity check: the reconstructed broadcast may differ
+                // from the true global model by (a) the codec's quantizer
+                // half-step (zero for lossless encodings) and (b) f32
+                // rounding of `old + d`. Anything beyond that bound is a
+                // codec-contract violation and must fail loudly rather
+                // than silently training the fleet on a drifted model.
+                let recon_err = received
+                    .iter()
+                    .zip(params.iter())
+                    .map(|(r, w)| (r - w).abs() as f64)
+                    .fold(0.0f64, f64::max);
+                let (lo, hi) = delta
+                    .iter()
+                    .fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), &d| {
+                        (lo.min(d), hi.max(d))
+                    });
+                let half_step = if nnz == 0 {
+                    0.0
+                } else {
+                    self.cfg.encoding.lossy_half_step(lo, hi) as f64
+                };
+                let max_abs = params.iter().map(|w| w.abs()).fold(0.0f32, f32::max) as f64;
+                let bound = half_step + 1e-5 * (1.0 + max_abs);
+                if recon_err > bound {
+                    return Err(Error::invalid(format!(
+                        "round {t}: downlink delta reconstruction error {recon_err:.3e} exceeds \
+                         the quantizer half-step bound {bound:.3e} ({})",
+                        self.cfg.encoding.as_str()
+                    )));
+                }
+                (Arc::new(received), Some(wire), nnz, recon_err)
+            }
+            // No delta reference (first broadcast, or delta mode off):
+            // the dense f32 wire is bit-exact, so the canonical received
+            // state IS the global model and reconstruction error is 0.
+            None => (Arc::clone(params), None, self.p, 0.0f64),
+        };
+
+        // --- billing (every ACKer) + wire pushes (completers only) ---
+        let dense_bytes = wire_bytes(self.p, self.p, Encoding::Dense);
+        let delta_bytes = delta_wire.as_ref().map_or(dense_bytes, |w| w.len());
+        let mut slowest_download = 0usize;
+        let mut next_recipients = vec![false; self.cfg.clients];
+        for &c in cohort.selected.iter().chain(&cohort.stragglers) {
+            let (nnz, bytes) = if delta_wire.is_some() && self.has_prev_broadcast[c] {
+                (delta_nnz, delta_bytes)
+            } else {
+                (self.p, dense_bytes)
+            };
+            self.ledger.record_download_sparse(self.p, nnz, bytes);
+            slowest_download = slowest_download.max(bytes);
+            next_recipients[c] = true;
+        }
+        let mut full_wire: Option<Arc<Vec<u8>>> = None;
+        let mut references = Vec::with_capacity(cohort.selected.len());
+        for &c in &cohort.selected {
+            if delta_wire.is_some() && self.has_prev_broadcast[c] {
+                // Arc-shared: the cohort-wide fan-out costs one encode,
+                // not one copy per client.
+                let wire = Arc::clone(delta_wire.as_ref().expect("delta wire present"));
+                self.transport.send_downlink(c as u32, wire)?;
+                references.push(Some(Arc::clone(prev.as_ref().expect("delta implies prev"))));
+            } else {
+                // Catch-up / default path: the full canonical state,
+                // dense (bit-exact). Built once, lazily — a steady-state
+                // delta round with no catch-ups never encodes it.
+                let wire = Arc::clone(full_wire.get_or_insert_with(|| {
+                    Arc::new(encode_update(
+                        BROADCAST_SENDER,
+                        t as u32,
+                        BROADCAST_FULL,
+                        &received,
+                        Encoding::Dense,
+                    ))
+                }));
+                debug_assert_eq!(wire.len(), dense_bytes, "dense wire_bytes is exact");
+                self.transport.send_downlink(c as u32, wire)?;
+                references.push(None);
+            }
+        }
+        // Only this round's recipients hold w_t; everyone else goes stale
+        // and pays dense next time they are sampled.
+        self.has_prev_broadcast = next_recipients;
+        if self.cfg.downlink_delta {
+            self.prev_broadcast = Some(Arc::clone(&received));
+        }
+        if !cohort.stragglers.is_empty() {
+            log::debug!(
+                "round {t}: {} stragglers dropped past deadline",
+                cohort.stragglers.len()
+            );
+        }
+        Ok(RoundWire {
+            params: received,
+            references,
+            recon_err,
+            slowest_download,
+        })
+    }
+
+    /// **Phase 3 — collect.** Stream the cohort's uploads off the wire
+    /// into `agg` while surfacing job errors within a poll tick — see
+    /// [`drain_round_uploads`] for the full contract.
+    pub fn collect(
+        &mut self,
+        cohort: &Cohort,
+        agg: &mut dyn Aggregator,
+        results: &Receiver<(usize, Result<JobMeta>)>,
+    ) -> Result<Collected> {
+        let tolerate_strays = self.transport.accepts_foreign_peers();
+        let metas = drain_round_uploads(
+            self.transport.as_mut(),
+            results,
+            agg,
+            &mut self.decode_scratch,
+            &cohort.selected,
+            cohort.round,
+            self.p,
+            tolerate_strays,
+            self.upload_timeout,
+        )?;
+        Ok(Collected { metas })
+    }
+
+    /// **Phase 4 — finalize.** Uplink ledger accounting in deterministic
+    /// client-id order; returns the sums the caller's clock and record
+    /// need.
+    pub fn finalize(&mut self, collected: &Collected) -> RoundCost {
+        let mut upload_sizes = Vec::with_capacity(collected.metas.len());
+        let mut loss_sum = 0.0f64;
+        for &(train_loss, nnz, bytes) in &collected.metas {
+            self.ledger.record_upload(self.p, nnz, bytes);
+            upload_sizes.push(bytes);
+            loss_sum += train_loss as f64;
+        }
+        RoundCost { loss_sum, upload_sizes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine-free tests of the round state machine. Two tiers:
+    //!
+    //! * `drain_round_uploads` regressions (dead client, failed job,
+    //!   scrambled arrivals, missing upload, stray-payload policy) driven
+    //!   with hand-built channels — ROADMAP item (c), unchanged contract.
+    //! * Full **sample → broadcast → collect → finalize** cycles with
+    //!   fake clients on worker threads pulling the broadcast off the
+    //!   real downlink and uploading through the real sink — over
+    //!   in-process and simulated transports, all encodings, both
+    //!   downlink modes; plus the Eq. 3 cohort properties.
+
+    use super::*;
+    use crate::config::experiment::AggregatorKind;
+    use crate::fl::aggregate::make_aggregator;
+    use crate::fl::client::receive_broadcast;
+    use crate::fl::masking::MaskTarget;
+    use crate::fl::sampling::SamplingSchedule;
+    use crate::runtime::manifest::LayerInfo;
+    use crate::util::prop::check;
+    use std::sync::mpsc::channel;
+
+    const P: usize = 16;
+
+    fn layers() -> Vec<LayerInfo> {
+        vec![LayerInfo {
+            name: "w".into(),
+            shape: vec![P],
+            offset: 0,
+            size: P,
+            masked: true,
+        }]
+    }
+
+    fn payload_for(client: u32, round: u32) -> Vec<u8> {
+        let mut params = vec![0.0f32; P];
+        params[client as usize] = 1.0 + client as f32;
+        encode_update(client, round, 10 + client, &params, Encoding::Auto)
+    }
+
+    fn fresh_agg() -> Box<dyn Aggregator> {
+        let broadcast = vec![0.0f32; P];
+        make_aggregator(AggregatorKind::FedAvg, MaskTarget::Weights, &broadcast, &layers())
+            .unwrap()
+    }
+
+    /// Build a simulated-network transport over in-process channels — the
+    /// configuration whose first recv used to barrier on the whole cohort
+    /// and wait out the 300 s upload timeout when a client died.
+    fn simulated_transport() -> Simulated {
+        Simulated::new(Box::new(InProcess::new()), NetworkModel::default())
+    }
+
+    /// Headline regression: under `network = "simulated"`, a client job
+    /// that dies (here: its worker panics before sending anything) fails
+    /// the round with the pool's error in well under the upload timeout —
+    /// the old drain waited out the full 300 s first.
+    #[test]
+    fn dead_client_fails_the_round_immediately_not_after_the_upload_timeout() {
+        let mut transport = simulated_transport();
+        let sink = transport.sink();
+        let selected = vec![0usize, 1];
+        transport.begin_round(selected.len());
+        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+
+        // client 0 completes normally: payload over the wire + metadata
+        let payload = payload_for(0, 1);
+        let bytes = payload.len();
+        sink.send(payload).unwrap();
+        tx.send((0, Ok((0.5, 1, bytes)))).unwrap();
+
+        // client 1 "panics": its worker thread unwinds, dropping the reply
+        // sender without ever sending a payload or metadata
+        let tx1 = tx.clone();
+        let victim = std::thread::spawn(move || {
+            let _held_until_unwind = tx1;
+            panic!("client 1 panicked mid-round");
+        });
+        assert!(victim.join().is_err());
+        drop(tx);
+
+        let started = Instant::now();
+        let mut agg = fresh_agg();
+        let err = drain_round_uploads(
+            &mut transport,
+            &results,
+            agg.as_mut(),
+            &mut DecodeScratch::default(),
+            &selected,
+            1,
+            P,
+            false,
+            DEFAULT_UPLOAD_TIMEOUT,
+        )
+        .unwrap_err();
+        let elapsed = started.elapsed();
+        assert!(matches!(err, Error::Engine(_)), "{err}");
+        assert!(
+            elapsed < Duration::from_secs(5),
+            "dead client took {elapsed:?} to surface (budget 5 s, old behavior 300 s)"
+        );
+    }
+
+    /// A job that returns a concrete error (rather than dying) surfaces
+    /// that exact error immediately, even though its upload never arrives
+    /// and the simulated network is still barriering on the cohort.
+    #[test]
+    fn failed_job_error_beats_the_wire_timeout_and_names_the_cause() {
+        let mut transport = simulated_transport();
+        let sink = transport.sink();
+        let selected = vec![0usize, 1];
+        transport.begin_round(selected.len());
+        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+
+        let payload = payload_for(0, 1);
+        let bytes = payload.len();
+        sink.send(payload).unwrap();
+        tx.send((0, Ok((0.5, 1, bytes)))).unwrap();
+        tx.send((1, Err(Error::Engine("client 1 exploded".into())))).unwrap();
+
+        let started = Instant::now();
+        let mut agg = fresh_agg();
+        let err = drain_round_uploads(
+            &mut transport,
+            &results,
+            agg.as_mut(),
+            &mut DecodeScratch::default(),
+            &selected,
+            1,
+            P,
+            false,
+            DEFAULT_UPLOAD_TIMEOUT,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("client 1 exploded"), "{err}");
+        assert!(started.elapsed() < Duration::from_secs(5));
+    }
+
+    /// Healthy rounds still work through the polling drain: payloads and
+    /// metadata arriving in scrambled, interleaved order all fold, and the
+    /// metadata comes back in input order.
+    #[test]
+    fn drain_folds_cohort_with_scrambled_arrival_orders() {
+        for use_simulated in [false, true] {
+            let mut transport: Box<dyn Transport> = if use_simulated {
+                Box::new(simulated_transport())
+            } else {
+                Box::new(InProcess::new())
+            };
+            let sink = transport.sink();
+            let selected = vec![0usize, 1, 2];
+            transport.begin_round(selected.len());
+            let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+
+            // metadata for 2 lands before its payload; payload order 1,2,0
+            let payloads: Vec<Vec<u8>> =
+                (0..3).map(|c| payload_for(c as u32, 7)).collect();
+            tx.send((2, Ok((0.2, 1, payloads[2].len())))).unwrap();
+            sink.send(payloads[1].clone()).unwrap();
+            sink.send(payloads[2].clone()).unwrap();
+            tx.send((0, Ok((0.0, 1, payloads[0].len())))).unwrap();
+            sink.send(payloads[0].clone()).unwrap();
+            tx.send((1, Ok((0.1, 1, payloads[1].len())))).unwrap();
+            drop(tx);
+
+            let mut agg = fresh_agg();
+            let metas = drain_round_uploads(
+                transport.as_mut(),
+                &results,
+                agg.as_mut(),
+                &mut DecodeScratch::default(),
+                &selected,
+                7,
+                P,
+                false,
+                Duration::from_secs(30),
+            )
+            .unwrap();
+            assert_eq!(metas.len(), 3);
+            for (i, (loss, nnz, bytes)) in metas.iter().enumerate() {
+                assert_eq!(*loss, 0.1 * i as f32);
+                assert_eq!(*nnz, 1);
+                assert_eq!(*bytes, payloads[i].len());
+            }
+            // the fold saw all three contributions
+            let out = agg.finish().unwrap();
+            let total: u32 = 10 + 11 + 12;
+            for c in 0..3usize {
+                let want = (1.0 + c as f32) * (10 + c as u32) as f32 / total as f32;
+                assert!(
+                    (out[c] - want).abs() < 1e-6,
+                    "coord {c}: {} vs {want} (simulated={use_simulated})",
+                    out[c]
+                );
+            }
+        }
+    }
+
+    /// An upload that never arrives (job reported fine but the payload was
+    /// lost) times out with a typed transport error naming the missing
+    /// clients — using a short timeout to keep the test fast.
+    #[test]
+    fn missing_upload_times_out_with_missing_clients_named() {
+        let mut transport = InProcess::new();
+        let selected = vec![4usize, 9];
+        transport.begin_round(selected.len());
+        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+        tx.send((0, Ok((0.0, 1, 10)))).unwrap();
+        tx.send((1, Ok((0.0, 1, 10)))).unwrap();
+        drop(tx);
+
+        let mut agg = fresh_agg();
+        let err = drain_round_uploads(
+            &mut transport,
+            &results,
+            agg.as_mut(),
+            &mut DecodeScratch::default(),
+            &selected,
+            1,
+            P,
+            false,
+            Duration::from_millis(150),
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Transport(_)), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("timed out") && msg.contains('4') && msg.contains('9'), "{msg}");
+    }
+
+    /// On a closed (in-process) wire an invalid payload fails the round
+    /// precisely; on an open wire it is dropped and the genuine upload
+    /// still folds.
+    #[test]
+    fn stray_payload_policy_follows_the_transport() {
+        // closed wire: wrong-round payload is an internal bug -> error
+        let mut transport = InProcess::new();
+        let sink = transport.sink();
+        let selected = vec![0usize];
+        transport.begin_round(1);
+        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+        let good = payload_for(0, 3);
+        tx.send((0, Ok((0.0, 1, good.len())))).unwrap();
+        sink.send(payload_for(0, 99)).unwrap();
+        let mut agg = fresh_agg();
+        let err = drain_round_uploads(
+            &mut transport,
+            &results,
+            agg.as_mut(),
+            &mut DecodeScratch::default(),
+            &selected,
+            3,
+            P,
+            false,
+            Duration::from_secs(5),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("round"), "{err}");
+
+        // open wire: the stray is dropped, the genuine upload folds
+        let mut transport = InProcess::new();
+        let sink = transport.sink();
+        transport.begin_round(1);
+        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+        tx.send((0, Ok((0.0, 1, good.len())))).unwrap();
+        drop(tx);
+        sink.send(payload_for(0, 99)).unwrap();
+        sink.send(good).unwrap();
+        let mut agg = fresh_agg();
+        let metas = drain_round_uploads(
+            &mut transport,
+            &results,
+            agg.as_mut(),
+            &mut DecodeScratch::default(),
+            &selected,
+            3,
+            P,
+            true,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert_eq!(metas.len(), 1);
+        assert_eq!(agg.folded(), 1);
+    }
+
+    // -----------------------------------------------------------------
+    // Full phase-cycle tests with fake clients on the real wire
+    // -----------------------------------------------------------------
+
+    fn driver_cfg(
+        transport: TransportKind,
+        network: NetworkKind,
+        encoding: Encoding,
+        downlink_delta: bool,
+        clients: usize,
+    ) -> Arc<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.clients = clients;
+        cfg.transport = transport;
+        cfg.network = network;
+        cfg.encoding = encoding;
+        cfg.downlink_delta = downlink_delta;
+        Arc::new(cfg)
+    }
+
+    fn always_on(seed: u64) -> AvailabilityModel {
+        AvailabilityModel::new(1.0, 0.0, seed)
+    }
+
+    /// Deterministic fake update for (broadcast, client): a masked-style
+    /// sparse vector derived from the broadcast the client decoded, so
+    /// any broadcast discrepancy across transports changes the aggregate.
+    fn fake_update(global: &[f32], client: usize) -> Vec<f32> {
+        global
+            .iter()
+            .enumerate()
+            .map(|(j, g)| {
+                if j % 4 == client % 4 {
+                    g * 0.5 + (client as f32 + 1.0) * 0.125
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Run one full sample → broadcast → collect → finalize cycle with
+    /// fake clients on threads: each receives its broadcast from the
+    /// transport's downlink half, derives a deterministic update, and
+    /// uploads through the sink. Returns (aggregate, broadcast params,
+    /// cohort size).
+    fn run_fake_round(
+        driver: &mut RoundDriver,
+        params: &Arc<Vec<f32>>,
+        t: usize,
+        target: MaskTarget,
+    ) -> (Vec<f32>, Vec<f32>, usize) {
+        let availability = always_on(7);
+        let cohort = driver.sample(&availability, t);
+        let wire = driver.broadcast(params, &cohort).unwrap();
+        assert_eq!(wire.references.len(), cohort.selected.len());
+
+        let sink = driver.sink();
+        let downlink = driver.downlink();
+        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+        let handles: Vec<_> = cohort
+            .selected
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let sink = Arc::clone(&sink);
+                let downlink = Arc::clone(&downlink);
+                let reference = wire.references[i].clone();
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    let global = receive_broadcast(
+                        downlink.as_ref(),
+                        c as u32,
+                        t as u32,
+                        reference.as_deref().map(Vec::as_slice),
+                        Duration::from_secs(30),
+                    )
+                    .unwrap();
+                    let update = fake_update(&global, c);
+                    let nnz = update.iter().filter(|v| **v != 0.0).count();
+                    let payload = encode_update(
+                        c as u32,
+                        t as u32,
+                        10 + c as u32,
+                        &update,
+                        Encoding::Auto,
+                    );
+                    let bytes = payload.len();
+                    sink.send(payload).unwrap();
+                    tx.send((i, Ok((0.25, nnz, bytes)))).unwrap();
+                })
+            })
+            .collect();
+        drop(tx);
+
+        let mut agg = make_aggregator(
+            AggregatorKind::FedAvg,
+            target,
+            &wire.params,
+            &layers_p(params.len()),
+        )
+        .unwrap();
+        let collected = driver.collect(&cohort, agg.as_mut(), &results).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let cost = driver.finalize(&collected);
+        assert_eq!(cost.upload_sizes.len(), cohort.selected.len());
+        let broadcast = (*wire.params).clone();
+        (agg.finish().unwrap(), broadcast, cohort.selected.len())
+    }
+
+    fn layers_p(p: usize) -> Vec<LayerInfo> {
+        vec![LayerInfo {
+            name: "w".into(),
+            shape: vec![p],
+            offset: 0,
+            size: p,
+            masked: true,
+        }]
+    }
+
+    /// Two consecutive full-duplex rounds (the second exercising the
+    /// delta-downlink reconstruction) are bitwise identical between the
+    /// in-process and simulated transports, for every encoding, both
+    /// downlink modes, both mask targets.
+    #[test]
+    fn fake_rounds_are_bitwise_identical_across_in_process_transports() {
+        let p = 24usize;
+        let params0: Arc<Vec<f32>> =
+            Arc::new((0..p).map(|j| (j as f32 * 0.37).sin()).collect());
+        for &enc in Encoding::ALL {
+            for downlink_delta in [false, true] {
+                for target in [MaskTarget::Delta, MaskTarget::Weights] {
+                    let mut outcomes = Vec::new();
+                    for network in [NetworkKind::Ideal, NetworkKind::Simulated] {
+                        let cfg = driver_cfg(
+                            TransportKind::InProcess,
+                            network,
+                            enc,
+                            downlink_delta,
+                            4,
+                        );
+                        let mut driver = RoundDriver::new(Arc::clone(&cfg), p).unwrap();
+                        driver.set_upload_timeout(Duration::from_secs(30));
+                        let (agg1, bcast1, k1) =
+                            run_fake_round(&mut driver, &params0, 1, target);
+                        assert_eq!(k1, 4, "static C=1 selects everyone");
+                        let params1 = Arc::new(agg1.clone());
+                        let (agg2, bcast2, _) =
+                            run_fake_round(&mut driver, &params1, 2, target);
+                        outcomes.push((agg1, bcast1, agg2, bcast2, driver.ledger().clone()));
+                    }
+                    let (a, b) = (&outcomes[0], &outcomes[1]);
+                    assert_eq!(a.0, b.0, "{enc:?}/{downlink_delta}/{target:?}: round-1 aggregate");
+                    assert_eq!(a.1, b.1, "{enc:?}: round-1 broadcast");
+                    assert_eq!(a.2, b.2, "{enc:?}: round-2 aggregate");
+                    assert_eq!(a.3, b.3, "{enc:?}: round-2 broadcast");
+                    assert_eq!(a.4.downlink_bytes, b.4.downlink_bytes, "{enc:?}: downlink bytes");
+                    assert_eq!(a.4.uplink_bytes, b.4.uplink_bytes, "{enc:?}: uplink bytes");
+                }
+            }
+        }
+    }
+
+    /// The delta downlink actually shrinks the second round's billed
+    /// downlink bytes when the model barely moves (sparse delta), and the
+    /// reconstruction error stays within the lossy bound.
+    #[test]
+    fn delta_downlink_bills_fewer_bytes_for_a_sparse_model_move() {
+        let p = 64usize;
+        let cfg = driver_cfg(
+            TransportKind::InProcess,
+            NetworkKind::Ideal,
+            Encoding::Auto,
+            true,
+            3,
+        );
+        let mut driver = RoundDriver::new(Arc::clone(&cfg), p).unwrap();
+        driver.set_upload_timeout(Duration::from_secs(30));
+        let params0: Arc<Vec<f32>> = Arc::new(vec![1.0; p]);
+        let availability = always_on(7);
+
+        let cohort = driver.sample(&availability, 1);
+        let wire1 = driver.broadcast(&params0, &cohort).unwrap();
+        assert_eq!(wire1.recon_err, 0.0, "first broadcast is dense, exact");
+        let dense_billed = driver.ledger().downlink_bytes;
+        // drain the queued downlinks so round 2's receives are clean
+        let dl = driver.downlink();
+        for &c in &cohort.selected {
+            dl.recv(c as u32, Duration::from_secs(5)).unwrap();
+        }
+
+        // the model moves in only 3 coordinates
+        let mut moved = (*params0).clone();
+        for j in [1usize, 17, 40] {
+            moved[j] += 0.5;
+        }
+        let params1 = Arc::new(moved);
+        let cohort2 = driver.sample(&availability, 2);
+        let wire2 = driver.broadcast(&params1, &cohort2).unwrap();
+        let delta_billed = driver.ledger().downlink_bytes - dense_billed;
+        assert!(
+            delta_billed < dense_billed,
+            "delta round billed {delta_billed} vs dense {dense_billed}"
+        );
+        assert_eq!(wire2.recon_err, 0.0, "lossless delta reconstructs exactly");
+        assert_eq!(&*wire2.params, &*params1);
+        for &c in &cohort2.selected {
+            dl.recv(c as u32, Duration::from_secs(5)).unwrap();
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Sampling-schedule properties under the driver (satellite)
+    // -----------------------------------------------------------------
+
+    /// Dynamic-exp cohort sizes follow Eq. 3: the target count is
+    /// `max(round(M·c0/exp(beta·t)), min_clients, 1)` clamped to M, the
+    /// realized cohort (full availability) matches it exactly, and the
+    /// sequence is monotone non-increasing within that clamping.
+    #[test]
+    fn prop_dynamic_exp_cohorts_follow_eq3_and_stay_registered() {
+        check("driver cohorts follow Eq. 3", 25, |g| {
+            let m = g.usize_in(4, 40);
+            let c0 = g.f64_in(0.3, 1.0);
+            let beta = g.f64_in(0.01, 0.5);
+            let min_clients = g.usize_in(1, 2);
+            let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+            cfg.clients = m;
+            cfg.sampling = SamplingSchedule::DynamicExp { c0, beta };
+            cfg.min_clients = min_clients;
+            let cfg = Arc::new(cfg);
+            let driver = RoundDriver::new(Arc::clone(&cfg), P).unwrap();
+            let availability = always_on(g.seed);
+
+            let mut prev_want = usize::MAX;
+            for t in 1..=30 {
+                let cohort = driver.sample(&availability, t);
+                // Eq. 3 rate, then the Alg. 3 floor/cap
+                let rate = c0 / (beta * t as f64).exp();
+                assert!((cohort.rate - rate).abs() < 1e-12);
+                let want = ((rate * m as f64).round() as usize)
+                    .max(1)
+                    .max(min_clients)
+                    .min(m);
+                assert_eq!(
+                    cohort.selected.len(),
+                    want,
+                    "t={t} m={m} c0={c0} beta={beta}"
+                );
+                assert!(want <= prev_want, "cohort target must not grow");
+                prev_want = want;
+                // every sampled client is registered (and on sockets would
+                // hold a session token): the cohort is a subset of the
+                // driver's registry
+                assert!(cohort.stragglers.is_empty());
+                for &c in &cohort.selected {
+                    assert!(
+                        driver.registered().binary_search(&(c as u32)).is_ok(),
+                        "client {c} sampled but not registered"
+                    );
+                }
+                // sorted + duplicate-free (binary-search contract)
+                assert!(cohort.selected.windows(2).all(|w| w[0] < w[1]));
+            }
+        });
+    }
+
+    /// Stragglers are billed the broadcast but receive no wire message
+    /// (an unread frame would corrupt their next active round), and
+    /// references line up with who holds previous state.
+    #[test]
+    fn stragglers_are_billed_but_not_wired() {
+        let p = 8usize;
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.clients = 6;
+        cfg.straggler_prob = 0.5;
+        let cfg = Arc::new(cfg);
+        let mut driver = RoundDriver::new(Arc::clone(&cfg), p).unwrap();
+        // force a mixed cohort by sampling under a straggler-heavy model
+        let availability = AvailabilityModel::new(1.0, 0.5, 123);
+        let (cohort, t) = (1..50)
+            .map(|t| (driver.sample(&availability, t), t))
+            .find(|(c, _)| !c.stragglers.is_empty() && !c.selected.is_empty())
+            .expect("some round has both completers and stragglers");
+        let params: Arc<Vec<f32>> = Arc::new(vec![0.5; p]);
+        let wire = driver.broadcast(&params, &cohort).unwrap();
+        let billed = driver.ledger().messages;
+        assert_eq!(
+            billed as usize,
+            cohort.selected.len() + cohort.stragglers.len(),
+            "every ACKer pays downlink"
+        );
+        // only completers have wire messages waiting
+        let dl = driver.downlink();
+        for &c in &cohort.selected {
+            dl.recv(c as u32, Duration::from_secs(5)).unwrap();
+        }
+        for &c in &cohort.stragglers {
+            assert!(
+                dl.recv(c as u32, Duration::from_millis(30)).is_err(),
+                "straggler {c} must not have a queued wire message (round {t})"
+            );
+        }
+        assert_eq!(wire.slowest_download, wire_bytes(p, p, Encoding::Dense));
+    }
+}

@@ -10,15 +10,21 @@
 //!   [`aggregate::Aggregator`] trait folds decoded wire updates as they
 //!   arrive (O(p) state, O(nnz) per sparse fold for FedAvg; buffering
 //!   attentive), order-independently.
-//! * [`client`] — simulated on-device training (local epochs + masking +
-//!   upload encoding); returns an encoded `WireUpdate` payload, never a
-//!   dense parameter vector.
-//! * [`server`] — the round loop: sample, ACK, broadcast (optionally
-//!   delta-encoded), fan local training out over the engine pool, decode +
-//!   fold uploads in completion order, account, evaluate.
+//! * [`client`] — simulated on-device training: receives the round's
+//!   encoded broadcast from the transport's downlink half (decoding /
+//!   delta-reconstructing it), runs local epochs + masking, and uploads
+//!   an encoded `WireUpdate` payload — no dense parameter vector crosses
+//!   the client↔server boundary in either direction.
+//! * [`driver`] — the engine-free round state machine (sample →
+//!   broadcast → collect → finalize): transport + per-client sessions,
+//!   downlink encoding and pushes, the streaming upload drain, and the
+//!   cost ledger, as separately testable phases.
+//! * [`server`] — the simulation shell around the driver: data, the
+//!   engine pool, job fan-out, evaluation, the virtual clock, records.
 
 pub mod aggregate;
 pub mod client;
+pub mod driver;
 pub mod masking;
 pub mod sampling;
 pub mod server;
@@ -26,6 +32,8 @@ pub mod server;
 pub use aggregate::{
     make_aggregator, Aggregator, Contribution, SparseContribution, StreamingFedAvg,
 };
+pub use client::receive_broadcast;
+pub use driver::{Cohort, Collected, RoundCost, RoundDriver, RoundWire};
 pub use masking::{MaskEngine, MaskPolicy, MaskScope, MaskScratch, MaskTarget};
 pub use sampling::SamplingSchedule;
 pub use server::{Server, ServerOutcome};

@@ -26,15 +26,18 @@ pub enum SamplingSchedule {
 
 impl SamplingSchedule {
     /// Parse from config strings: `static`, `dynamic-exp`, `dynamic-linear`,
-    /// `dynamic-step`.
-    pub fn from_config(kind: &str, c0: f64, param: f64) -> Result<SamplingSchedule> {
+    /// `dynamic-step`. `every` is the step schedule's decay period in
+    /// rounds (config key `sampling_every`, default 10) — the other
+    /// schedules have no period and ignore it. Validated ≥ 1 like every
+    /// other schedule parameter.
+    pub fn from_config(kind: &str, c0: f64, param: f64, every: usize) -> Result<SamplingSchedule> {
         let s = match kind {
             "static" => SamplingSchedule::Static { c0 },
             "dynamic-exp" => SamplingSchedule::DynamicExp { c0, beta: param },
             "dynamic-linear" => SamplingSchedule::DynamicLinear { c0, slope: param },
             "dynamic-step" => SamplingSchedule::DynamicStep {
                 c0,
-                every: 10,
+                every,
                 factor: param,
             },
             other => {
@@ -192,12 +195,33 @@ mod tests {
 
     #[test]
     fn config_parsing_and_validation() {
-        assert!(SamplingSchedule::from_config("static", 0.5, 0.0).is_ok());
-        assert!(SamplingSchedule::from_config("dynamic-exp", 1.0, 0.1).is_ok());
-        assert!(SamplingSchedule::from_config("bogus", 1.0, 0.1).is_err());
-        assert!(SamplingSchedule::from_config("static", 0.0, 0.0).is_err());
-        assert!(SamplingSchedule::from_config("static", 1.5, 0.0).is_err());
-        assert!(SamplingSchedule::from_config("dynamic-exp", 1.0, -0.1).is_err());
+        assert!(SamplingSchedule::from_config("static", 0.5, 0.0, 10).is_ok());
+        assert!(SamplingSchedule::from_config("dynamic-exp", 1.0, 0.1, 10).is_ok());
+        assert!(SamplingSchedule::from_config("bogus", 1.0, 0.1, 10).is_err());
+        assert!(SamplingSchedule::from_config("static", 0.0, 0.0, 10).is_err());
+        assert!(SamplingSchedule::from_config("static", 1.5, 0.0, 10).is_err());
+        assert!(SamplingSchedule::from_config("dynamic-exp", 1.0, -0.1, 10).is_err());
+    }
+
+    #[test]
+    fn step_period_is_threaded_through_config_not_hardcoded() {
+        // regression: `every` used to be silently pinned to 10, so the
+        // config's period had no effect
+        let s = SamplingSchedule::from_config("dynamic-step", 1.0, 0.5, 3).unwrap();
+        assert_eq!(
+            s,
+            SamplingSchedule::DynamicStep { c0: 1.0, every: 3, factor: 0.5 }
+        );
+        assert_eq!(s.rate(2), 1.0);
+        assert_eq!(s.rate(3), 0.5);
+        assert_eq!(s.rate(6), 0.25);
+        // the period is validated like every other parameter
+        assert!(SamplingSchedule::from_config("dynamic-step", 1.0, 0.5, 0).is_err());
+        // non-step schedules have no period and ignore the knob
+        assert_eq!(
+            SamplingSchedule::from_config("dynamic-exp", 1.0, 0.1, 0).unwrap(),
+            SamplingSchedule::DynamicExp { c0: 1.0, beta: 0.1 }
+        );
     }
 
     #[test]

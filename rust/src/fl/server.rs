@@ -1,305 +1,54 @@
 //! The federated server: Alg. 1 (static) / Alg. 3 (dynamic), end to end.
 //!
-//! Per round `t` (1-based): compute the sampling rate, run the ACK
-//! selection loop against the availability model, broadcast the global
-//! model (dense, or delta-encoded through the codec when
-//! `downlink_delta` is set), fan client jobs out over the engine pool,
-//! then **stream** aggregation: each client's encoded `WireUpdate` payload
-//! travels through the configured
-//! [`Transport`](crate::transport::link::Transport) — in-process channels
-//! by default, framed TCP/UDS sockets under `--transport tcp|uds` — and is
-//! decoded into a borrowed sparse/dense view (one [`DecodeScratch`]
-//! held across rounds — no decode allocation at steady state) and folded
-//! into the configured
-//! [`Aggregator`](crate::fl::aggregate::Aggregator) the moment it lands,
-//! in completion order — aggregation overlaps with the slowest clients'
-//! compute instead of barriering on the cohort (except under
-//! `network = "simulated"`, whose delivery-order modeling inherently
-//! buffers the round's uploads before the first fold — see
-//! [`Simulated`](crate::transport::link::Simulated)). The drain is a
-//! select-style wait over the pool-result channel and the wire
-//! ([`drain_round_uploads`]): a client job that dies surfaces its concrete
-//! error within one poll tick, never after the upload timeout. Wire updates are matched
-//! to the cohort by their own header (selected client, current round,
-//! model dimension, no duplicates), so out-of-order socket delivery is
-//! fine. Sparse payloads fold in
-//! O(nnz); mask-target reconstruction is the aggregator's job now (the
-//! delta baseline folds once at finish), so the server's per-round cost is
-//! O(sum_i nnz_i + p) — the only O(p) passes are aggregator construction
-//! and producing the finished global model. Uplink cost, virtual time
-//! and the round record are accounted afterwards in client-id order.
+//! Since the full-duplex session refactor the server is deliberately
+//! thin: the communication plane — transport construction, per-client
+//! session registration, the four-phase round cycle (sample → broadcast →
+//! collect → finalize), downlink reference state, and the cost ledger —
+//! lives in [`RoundDriver`](crate::fl::driver::RoundDriver), which is
+//! engine-free and unit-tested on its own. What remains here is the
+//! *simulation* half: data loading and partitioning, the engine pool,
+//! fanning [`ClientJob`]s out between the broadcast and collect phases,
+//! periodic evaluation, the virtual clock, and the round record.
+//!
+//! Per round `t` (1-based): the driver samples the cohort against the
+//! availability model, encodes and **pushes the broadcast through the
+//! transport's downlink half** (in-process mailboxes by default, the
+//! persistent authenticated TCP/UDS sessions under `--transport
+//! tcp|uds`), the server fans client jobs out over the engine pool (each
+//! job *receives its broadcast from the wire*, trains, masks, encodes,
+//! and uploads through the same session), and the driver's collect phase
+//! streams the uploads into the configured
+//! [`Aggregator`](crate::fl::aggregate::Aggregator) in completion order —
+//! a select-style wait that surfaces a dead client's concrete job error
+//! within one poll tick. Sparse payloads fold in O(nnz); the server's
+//! per-round cost is O(sum_i nnz_i + p).
 //!
 //! Determinism: client selection, shard shuffles and masking RNG all derive
-//! from (seed, round, client); the streaming FedAvg fold is
+//! from (seed, round, client); the broadcast bytes are a pure function of
+//! the global model and config; the streaming FedAvg fold is
 //! order-independent by construction (integer fixed-point accumulation)
 //! and the attentive fold canonicalizes by client id at finish, so the
-//! same config reproduces bit-identical runs regardless of pool width or
-//! arrival order.
+//! same config reproduces bit-identical runs regardless of pool width,
+//! arrival order, or transport.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
 use crate::config::experiment::{ExperimentConfig, NetworkKind};
 use crate::data::{batcher, loader, partition, Dataset};
-use crate::fl::aggregate::{make_aggregator, Aggregator, Contribution, SparseContribution};
+use crate::fl::aggregate::make_aggregator;
 use crate::fl::client::{ClientJob, ShardRef};
+use crate::fl::driver::RoundDriver;
 use crate::metrics::recorder::{RoundRecord, RunRecorder};
 use crate::runtime::engine::EvalSums;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::pool::EnginePool;
 use crate::runtime::tensor::Batches;
-use crate::sim::availability::{AvailabilityModel, ClientState};
+use crate::sim::availability::AvailabilityModel;
 use crate::sim::clock::VirtualClock;
 use crate::sim::rng::Rng;
-use crate::transport::codec::{
-    decode_update, decode_update_view, encode_update, wire_bytes, BodyView, DecodeScratch, Encoding,
-};
 use crate::transport::cost::CostLedger;
-use crate::transport::link::{
-    InProcess, Simulated, Transport, TransportKind, UploadSink, DEFAULT_UPLOAD_TIMEOUT,
-};
 use crate::transport::network::NetworkModel;
-use crate::transport::socket::Loopback;
 use crate::util::error::{Error, Result};
-
-/// Sentinel "client" id in downlink broadcast headers.
-const BROADCAST_SENDER: u32 = u32::MAX;
-
-/// Per-round budget of dropped invalid uploads. Under a socket transport
-/// the listener is an open local port, so a stray peer can deliver a
-/// well-framed message whose *payload* fails decode or cohort validation;
-/// those cost the round nothing (mirroring the framing layer's
-/// per-connection drops) — but a garbage firehose must not stall the
-/// aggregation loop forever.
-const MAX_REJECTED_UPLOADS: usize = 64;
-
-/// Account one rejected (well-framed but invalid) upload, erroring once
-/// the per-round budget is exhausted. On a closed wire (`tolerate` false —
-/// in-process channels carry only our own cohort's payloads) an invalid
-/// upload can only be an internal bug, so it fails the round precisely and
-/// immediately instead of being dropped.
-fn reject_upload(rejected: &mut usize, tolerate: bool, why: impl std::fmt::Display) -> Result<()> {
-    if !tolerate {
-        return Err(Error::invalid(format!("invalid upload: {why}")));
-    }
-    *rejected += 1;
-    log::warn!("transport: dropping invalid upload ({why})");
-    if *rejected > MAX_REJECTED_UPLOADS {
-        return Err(Error::transport(format!(
-            "dropped {rejected} invalid uploads this round; giving up"
-        )));
-    }
-    Ok(())
-}
-
-/// Sideband metadata one client job reports through the pool channel:
-/// (train loss, nnz, encoded payload bytes).
-type JobMeta = (f32, usize, usize);
-
-/// How long the drain loop waits on the wire before re-polling the pool's
-/// result channel. Small enough that a dead client's concrete job error
-/// surfaces within a poll tick; large enough that a healthy round spends
-/// its time blocked in the transport, not spinning.
-const DRAIN_POLL: Duration = Duration::from_millis(25);
-
-/// Drain one round's uploads: a select-style wait over the **pool-result
-/// channel** (job metadata / job errors) and the **wire** (encoded
-/// payloads), folding each valid payload into `agg` the moment it lands.
-///
-/// The two streams are independent — a payload can beat its metadata and
-/// vice versa — so the loop alternates: drain every ready pool result
-/// (a failed client job surfaces its concrete error *here, immediately*,
-/// instead of after the full upload timeout — the wire can never deliver
-/// the payload a dead job didn't send), then wait at most [`DRAIN_POLL`]
-/// for the next payload. Wire arrivals are matched to the cohort by their
-/// own header (selected client, current round, model dimension, no
-/// duplicates); invalid ones are dropped on a bounded budget when the
-/// transport `tolerate_strays`, and fail the round precisely otherwise.
-///
-/// `upload_timeout` is an **inactivity** bound, matching the old per-recv
-/// semantics: the window restarts whenever the round makes progress (a
-/// payload folds or a job reports), so a large cohort legitimately
-/// draining for longer than the timeout never trips it — only a round
-/// where nothing happens for the whole window does.
-///
-/// Returns the per-job metadata in input (client-id) order once every job
-/// reported and every upload folded. Free function by design: it needs no
-/// engine, so the dead-client regression tests drive it directly with
-/// hand-built channels and transports.
-#[allow(clippy::too_many_arguments)] // round context; precedent: data/synth.rs
-fn drain_round_uploads(
-    transport: &mut dyn Transport,
-    results: &Receiver<(usize, Result<JobMeta>)>,
-    agg: &mut dyn Aggregator,
-    scratch: &mut DecodeScratch,
-    selected: &[usize],
-    round: usize,
-    p: usize,
-    tolerate_strays: bool,
-    upload_timeout: Duration,
-) -> Result<Vec<JobMeta>> {
-    let n_jobs = selected.len();
-    let mut metas: Vec<Option<JobMeta>> = vec![None; n_jobs];
-    let mut uploaded = vec![false; n_jobs];
-    let mut metas_pending = n_jobs;
-    let mut folds_pending = n_jobs;
-    let mut rejected = 0usize;
-    let mut results_open = true;
-    // Inactivity deadline: pushed forward on every piece of progress.
-    let mut deadline = Instant::now() + upload_timeout;
-
-    while metas_pending > 0 || folds_pending > 0 {
-        // 1) Surface every ready job result without blocking. `res?` is the
-        //    headline path: a client job that died reports its concrete
-        //    error here on the next poll tick.
-        while results_open && metas_pending > 0 {
-            match results.try_recv() {
-                Ok((idx, res)) => {
-                    metas[idx] = Some(res?);
-                    metas_pending -= 1;
-                    deadline = Instant::now() + upload_timeout;
-                }
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => results_open = false,
-            }
-        }
-        if !results_open && metas_pending > 0 {
-            // Every sender is gone but some job never reported: its worker
-            // thread died (e.g. a panicking client) — fail now; the wire
-            // will never deliver its upload.
-            return Err(Error::Engine("worker dropped job (thread died?)".into()));
-        }
-        if folds_pending == 0 {
-            // All payloads folded; only metadata is outstanding. Block on
-            // the result channel directly (bounded by the round deadline).
-            let window = deadline
-                .checked_duration_since(Instant::now())
-                .filter(|w| !w.is_zero())
-                .ok_or_else(|| {
-                    Error::transport(format!(
-                        "timed out after {upload_timeout:?} waiting for job results"
-                    ))
-                })?;
-            match results.recv_timeout(window.min(DRAIN_POLL)) {
-                Ok((idx, res)) => {
-                    metas[idx] = Some(res?);
-                    metas_pending -= 1;
-                    deadline = Instant::now() + upload_timeout;
-                }
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => results_open = false,
-            }
-            continue;
-        }
-
-        // 2) Bounded wait for the next wire payload.
-        let window = deadline
-            .checked_duration_since(Instant::now())
-            .filter(|w| !w.is_zero())
-            .ok_or_else(|| {
-                let missing: Vec<usize> = selected
-                    .iter()
-                    .zip(&uploaded)
-                    .filter(|(_, up)| !**up)
-                    .map(|(c, _)| *c)
-                    .collect();
-                Error::transport(format!(
-                    "timed out after {upload_timeout:?} waiting for uploads from clients {missing:?}"
-                ))
-            })?;
-        let Some(payload) = transport.try_recv_for(window.min(DRAIN_POLL))? else {
-            continue;
-        };
-
-        // 3) Decode + cohort-validate + fold. Invalid payloads are dropped
-        //    on a bounded budget (fold failures stay fatal — they can leave
-        //    the accumulator partially updated, and our own cohort's
-        //    payloads are codec-clean).
-        let update = match decode_update_view(&payload, scratch) {
-            Ok(u) => u,
-            Err(e) => {
-                reject_upload(&mut rejected, tolerate_strays, e)?;
-                continue;
-            }
-        };
-        if update.round as usize != round {
-            reject_upload(
-                &mut rejected,
-                tolerate_strays,
-                format_args!(
-                    "client {} names round {}, server is on round {round}",
-                    update.client, update.round
-                ),
-            )?;
-            continue;
-        }
-        let pos = match selected.binary_search(&(update.client as usize)) {
-            Ok(pos) => pos,
-            Err(_) => {
-                reject_upload(
-                    &mut rejected,
-                    tolerate_strays,
-                    format_args!("client {} not in this round's cohort", update.client),
-                )?;
-                continue;
-            }
-        };
-        if uploaded[pos] {
-            reject_upload(
-                &mut rejected,
-                tolerate_strays,
-                format_args!("duplicate update from client {}", update.client),
-            )?;
-            continue;
-        }
-        if update.p != p {
-            reject_upload(
-                &mut rejected,
-                tolerate_strays,
-                format_args!("carries {} params, model has {}", update.p, p),
-            )?;
-            continue;
-        }
-        uploaded[pos] = true;
-        let client = update.client as usize;
-        match update.body {
-            BodyView::Dense(params) => agg.fold(Contribution {
-                client,
-                params,
-                n_samples: update.n_samples,
-            })?,
-            BodyView::Sparse { indices, values } => agg.fold_sparse(SparseContribution {
-                client,
-                p: update.p,
-                indices,
-                values,
-                n_samples: update.n_samples,
-            })?,
-        }
-        folds_pending -= 1;
-        deadline = Instant::now() + upload_timeout;
-    }
-    debug_assert_eq!(agg.folded(), n_jobs);
-    Ok(metas.into_iter().map(|m| m.expect("all jobs accounted")).collect())
-}
-
-/// Per-client downlink cost of one round's broadcast.
-struct BroadcastWire {
-    /// Encoded bytes for a client holding the previous broadcast state.
-    delta_bytes: usize,
-    /// Non-zeros in that message (unit-cost accounting).
-    delta_nnz: usize,
-    /// Encoded bytes for a client that needs the full model (first
-    /// broadcast, or selected after sitting out the previous round).
-    dense_bytes: usize,
-    /// Max |reconstructed - global| over all coordinates this round — the
-    /// delta-downlink fidelity evidence (0.0 for dense broadcasts). The
-    /// server asserts it against the codec's quantizer half-step; the
-    /// figure sweeps record it per round so flipping the `downlink_delta`
-    /// default is a data-backed decision.
-    recon_err: f64,
-}
 
 /// Result of a completed run.
 #[derive(Debug)]
@@ -317,28 +66,15 @@ pub struct Server {
     shards: Vec<ShardRef>,
     eval_chunks: Arc<Vec<Batches>>,
     params: Arc<Vec<f32>>,
-    /// The model clients received last round — the delta-downlink reference
-    /// (None before the first broadcast or when `downlink_delta` is off).
-    prev_broadcast: Option<Arc<Vec<f32>>>,
-    /// Which clients received the **previous round's** broadcast (rebuilt
-    /// every round — the delta is `w_t - w_{t-1}`, so a client that sat
-    /// out round t-1 holds stale state, cannot apply it, and is billed a
-    /// dense catch-up transfer instead).
-    has_prev_broadcast: Vec<bool>,
     p: usize,
     layers: Vec<crate::runtime::manifest::LayerInfo>,
-    ledger: CostLedger,
+    /// The communication plane: transport + sessions + downlink state +
+    /// ledger, cycled through its four phases every round.
+    driver: RoundDriver,
     clock: VirtualClock,
     availability: AvailabilityModel,
     network: NetworkModel,
     recorder: RunRecorder,
-    /// Reusable decode buffers for the streaming aggregation loop — held
-    /// across rounds so steady-state decoding never allocates.
-    decode_scratch: DecodeScratch,
-    /// The wire uploads travel: in-process channels, framed TCP/UDS
-    /// sockets, or either wrapped in `NetworkModel`-timed delivery. Held
-    /// for the server's lifetime (socket listeners bind once).
-    transport: Box<dyn Transport>,
 }
 
 impl Server {
@@ -401,39 +137,26 @@ impl Server {
             NetworkKind::Ideal => NetworkModel::ideal(),
             NetworkKind::Simulated => NetworkModel::default(),
         };
-        // Upload carrier: channels by default, real framed sockets on
-        // request; a simulated network additionally re-orders deliveries
-        // by virtual upload time. The aggregate is transport-invariant.
-        let base: Box<dyn Transport> = match cfg.transport {
-            TransportKind::InProcess => Box::new(InProcess::new()),
-            TransportKind::Tcp | TransportKind::Uds => Box::new(Loopback::bind(cfg.transport)?),
-        };
-        let transport: Box<dyn Transport> = match cfg.network {
-            NetworkKind::Ideal => base,
-            NetworkKind::Simulated => Box::new(Simulated::new(base, network.clone())),
-        };
-        log::debug!("[{}] uploads travel via {}", cfg.label, transport.label());
         let recorder = RunRecorder::new(cfg.label.clone());
-        let cfg_clients = cfg.clients;
+        let cfg = Arc::new(cfg);
+        // The communication plane: builds the configured transport and
+        // opens every client's session (socket handshakes included).
+        let driver = RoundDriver::new(Arc::clone(&cfg), p)?;
 
         Ok(Server {
-            cfg: Arc::new(cfg),
+            cfg,
             pool,
             dataset,
             shards,
             eval_chunks,
             params: Arc::new(params),
-            prev_broadcast: None,
-            has_prev_broadcast: vec![false; cfg_clients],
             p,
             layers: mm.layers.clone(),
-            ledger: CostLedger::new(),
+            driver,
             clock: VirtualClock::new(),
             availability,
             network,
             recorder,
-            decode_scratch: DecodeScratch::default(),
-            transport,
         })
     }
 
@@ -445,188 +168,37 @@ impl Server {
         &self.params
     }
 
-    /// ACK selection loop (Alg. 1/3 lines 9–14): walk a seeded permutation
-    /// of the registry, requesting connections until `want` clients ACK.
-    /// Returns `(completers, stragglers)` — stragglers ACKed (and therefore
-    /// receive the broadcast, paying downlink) but miss the round deadline
-    /// and are dropped before aggregation. Both lists sorted for
-    /// deterministic aggregation order.
-    fn select_clients(&self, round: usize, want: usize) -> (Vec<usize>, Vec<usize>) {
-        let mut order: Vec<usize> = (0..self.cfg.clients).collect();
-        let mut rng = Rng::new(self.cfg.seed).fork(round as u64).fork(0x5e1);
-        rng.shuffle(&mut order);
-        let mut completers = Vec::with_capacity(want);
-        let mut stragglers = Vec::new();
-        for &c in &order {
-            if completers.len() + stragglers.len() >= want {
-                break;
-            }
-            match self.availability.state(round as u64, c as u64) {
-                ClientState::Available => completers.push(c),
-                ClientState::Straggler => stragglers.push(c),
-                ClientState::Offline => {}
-            }
-        }
-        if completers.is_empty() {
-            // Degenerate availability: fall back to the first candidate so a
-            // run cannot deadlock (logged; the paper assumes full ACK).
-            log::warn!("round {round}: no client completed; forcing client {}", order[0]);
-            completers.push(order[0]);
-            stragglers.retain(|&c| c != order[0]);
-        }
-        completers.sort_unstable();
-        stragglers.sort_unstable();
-        (completers, stragglers)
-    }
-
-    /// Encode this round's downlink broadcast through the codec. Returns
-    /// the params clients receive plus the wire costs: delta bytes/nnz for
-    /// a client that holds the previous broadcast state, dense bytes for
-    /// one that must be caught up with the full model.
-    ///
-    /// Default: dense broadcast, clients share the global model verbatim.
-    /// With `downlink_delta`: rounds after the first ship
-    /// `w_t - w_{t-1}` through the configured encoding (sparse whenever a
-    /// masked cohort left most coordinates untouched), and clients
-    /// reconstruct `w_{t-1} + delta` — modeled here by decoding our own
-    /// message, so lossy codecs affect the broadcast exactly as they would
-    /// on a real wire. The delta stream is the canonical fleet-wide state:
-    /// catch-up clients receive the same reconstructed params, just billed
-    /// at dense cost.
-    fn encode_broadcast(&mut self, t: usize) -> Result<(Arc<Vec<f32>>, BroadcastWire)> {
-        let dense_bytes = wire_bytes(self.p, self.p, Encoding::Dense);
-        if !self.cfg.downlink_delta {
-            let wire = BroadcastWire {
-                delta_bytes: dense_bytes,
-                delta_nnz: self.p,
-                dense_bytes,
-                recon_err: 0.0,
-            };
-            return Ok((Arc::clone(&self.params), wire));
-        }
-        let (received, delta_bytes, delta_nnz, recon_err) = match self.prev_broadcast.take() {
-            None => {
-                // First broadcast: no client-side reference model yet. The
-                // dense f32 wire is bit-exact, so reconstruction error is 0.
-                let wire =
-                    encode_update(BROADCAST_SENDER, t as u32, 0, &self.params, Encoding::Dense);
-                (decode_update(&wire)?.into_dense(), wire.len(), self.p, 0.0f64)
-            }
-            Some(prev) => {
-                let delta: Vec<f32> = self
-                    .params
-                    .iter()
-                    .zip(prev.iter())
-                    .map(|(new, old)| new - old)
-                    .collect();
-                let nnz = delta.iter().filter(|v| **v != 0.0).count();
-                let wire =
-                    encode_update(BROADCAST_SENDER, t as u32, 0, &delta, self.cfg.encoding);
-                let decoded = decode_update(&wire)?.into_dense();
-                let received: Vec<f32> = decoded
-                    .iter()
-                    .zip(prev.iter())
-                    .map(|(d, old)| old + d)
-                    .collect();
-                // Fidelity check: the reconstructed broadcast may differ
-                // from the true global model by (a) the codec's quantizer
-                // half-step (zero for lossless encodings) and (b) f32
-                // rounding of `old + d`. Anything beyond that bound is a
-                // codec-contract violation and must fail loudly rather
-                // than silently training the fleet on a drifted model.
-                let recon_err = received
-                    .iter()
-                    .zip(self.params.iter())
-                    .map(|(r, w)| (r - w).abs() as f64)
-                    .fold(0.0f64, f64::max);
-                let (lo, hi) = delta
-                    .iter()
-                    .fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), &d| {
-                        (lo.min(d), hi.max(d))
-                    });
-                let half_step = if nnz == 0 {
-                    0.0
-                } else {
-                    self.cfg.encoding.lossy_half_step(lo, hi) as f64
-                };
-                let max_abs = self
-                    .params
-                    .iter()
-                    .map(|w| w.abs())
-                    .fold(0.0f32, f32::max) as f64;
-                let bound = half_step + 1e-5 * (1.0 + max_abs);
-                if recon_err > bound {
-                    return Err(Error::invalid(format!(
-                        "round {t}: downlink delta reconstruction error {recon_err:.3e} exceeds \
-                         the quantizer half-step bound {bound:.3e} ({})",
-                        self.cfg.encoding.as_str()
-                    )));
-                }
-                (received, wire.len(), nnz, recon_err)
-            }
-        };
-        let received = Arc::new(received);
-        self.prev_broadcast = Some(Arc::clone(&received));
-        Ok((
-            received,
-            BroadcastWire {
-                delta_bytes,
-                delta_nnz,
-                dense_bytes,
-                recon_err,
-            },
-        ))
-    }
-
     /// Execute one round (1-based `t`). Returns the round record.
     pub fn run_round(&mut self, t: usize) -> Result<RoundRecord> {
-        let rate = self.cfg.sampling.rate(t);
-        let want = self
-            .cfg
-            .sampling
-            .num_clients(t, self.cfg.clients, self.cfg.min_clients);
-        let (selected, stragglers) = self.select_clients(t, want);
+        // Phase 1 — sample the cohort from the registered fleet.
+        let cohort = self.driver.sample(&self.availability, t);
 
-        // Downlink: broadcast the global model to every client that ACKed —
-        // stragglers included (their download is spent bandwidth even
-        // though their update misses the deadline). Under delta encoding,
-        // only clients that hold the previous broadcast state pay delta
-        // bytes; the rest are caught up at dense cost.
-        let (broadcast, wire) = self.encode_broadcast(t)?;
-        let mut slowest_download = 0usize;
-        let mut next_recipients = vec![false; self.cfg.clients];
-        for &c in selected.iter().chain(&stragglers) {
-            let (nnz, bytes) = if self.cfg.downlink_delta && self.has_prev_broadcast[c] {
-                (wire.delta_nnz, wire.delta_bytes)
-            } else {
-                (self.p, wire.dense_bytes)
-            };
-            self.ledger.record_download_sparse(self.p, nnz, bytes);
-            slowest_download = slowest_download.max(bytes);
-            next_recipients[c] = true;
-        }
-        // Only this round's recipients hold w_t; everyone else goes stale
-        // and pays dense next time they are sampled.
-        self.has_prev_broadcast = next_recipients;
-        if !stragglers.is_empty() {
-            log::debug!("round {t}: {} stragglers dropped past deadline", stragglers.len());
-        }
+        // Phase 2 — encode the downlink and push it through the wire to
+        // every completer (stragglers are billed, not wired).
+        let wire = self.driver.broadcast(&self.params, &cohort)?;
 
         // Fan out local training. Jobs are scratch-aware: each worker's
-        // long-lived buffers back the masking + encode temporaries. The
-        // encoded payload leaves through the round's transport sink the
-        // moment it exists; only sideband metadata (loss, nnz, byte count)
-        // returns through the pool channel.
-        let sink = self.transport.sink();
-        let jobs: Vec<_> = selected
+        // long-lived buffers back the masking + encode temporaries. Each
+        // job *receives the round's broadcast from the transport's
+        // downlink half* (decoding / delta-reconstructing it itself —
+        // bitwise the driver's canonical state), and its encoded payload
+        // leaves through the round's upload sink the moment it exists;
+        // only sideband metadata (loss, nnz, byte count) returns through
+        // the pool channel.
+        let sink = self.driver.sink();
+        let downlink = self.driver.downlink();
+        let jobs: Vec<_> = cohort
+            .selected
             .iter()
-            .map(|&cid| {
+            .enumerate()
+            .map(|(i, &cid)| {
                 let job = ClientJob {
                     client_id: cid,
                     round: t,
                     dataset: Arc::clone(&self.dataset),
                     shard: self.shards[cid].clone(),
-                    global: Arc::clone(&broadcast),
+                    downlink: Arc::clone(&downlink),
+                    reference: wire.references[i].clone(),
                     cfg: Arc::clone(&self.cfg),
                 };
                 let sink = Arc::clone(&sink);
@@ -641,55 +213,35 @@ impl Server {
             })
             .collect();
 
-        // Streaming aggregation: each completed job pushes its payload into
-        // the transport, and `drain_round_uploads` runs a select-style wait
-        // over the pool-result channel and the wire — folding each payload
-        // (borrowed view, sparse bodies stay sparse) the moment it lands
-        // while surfacing any job's concrete error within a poll tick
-        // instead of after the upload timeout. Wire updates are matched to
-        // the cohort by their own header, so out-of-order socket delivery
-        // is fine; metadata is parked per input index so the ledger and
-        // logs stay in deterministic client-id order.
+        // Phase 3 — collect: stream the uploads into the aggregator in
+        // completion order while surfacing any job's concrete error
+        // within a poll tick.
         let n_jobs = jobs.len();
-        self.transport.begin_round(n_jobs);
         let mut agg =
-            make_aggregator(self.cfg.aggregator, self.cfg.mask_target, &broadcast, &self.layers)?;
-        let tolerate_strays = self.transport.accepts_foreign_peers();
+            make_aggregator(self.cfg.aggregator, self.cfg.mask_target, &wire.params, &self.layers)?;
         let results = self.pool.map_unordered_with(jobs);
-        let metas = drain_round_uploads(
-            self.transport.as_mut(),
-            &results,
-            agg.as_mut(),
-            &mut self.decode_scratch,
-            &selected,
-            t,
-            self.p,
-            tolerate_strays,
-            DEFAULT_UPLOAD_TIMEOUT,
-        )?;
+        let collected = self.driver.collect(&cohort, agg.as_mut(), &results)?;
         self.params = Arc::new(agg.finish()?);
 
-        // Uplink accounting + virtual time, in client-id (input) order.
-        let mut upload_sizes = Vec::with_capacity(n_jobs);
-        let mut loss_sum = 0.0f64;
-        for &(train_loss, nnz, bytes) in &metas {
-            self.ledger.record_upload(self.p, nnz, bytes);
-            upload_sizes.push(bytes);
-            loss_sum += train_loss as f64;
-        }
-        let compute_s = selected
+        // Phase 4 — finalize: uplink accounting in client-id order.
+        let cost = self.driver.finalize(&collected);
+
+        // Virtual time: slowest download, slowest compute, the round's
+        // uploads.
+        let compute_s = cohort
+            .selected
             .iter()
             .map(|&c| {
                 self.availability
                     .compute_time(t as u64, c as u64, self.cfg.local_epochs)
             })
             .fold(0.0f64, f64::max);
-        self.clock.advance(self.network.download_time(slowest_download));
+        self.clock.advance(self.network.download_time(wire.slowest_download));
         self.clock.advance(compute_s);
         self.clock
-            .advance(self.network.upload_round_time(&upload_sizes));
+            .advance(self.network.upload_round_time(&cost.upload_sizes));
 
-        let train_loss = loss_sum / n_jobs as f64;
+        let train_loss = cost.loss_sum / n_jobs as f64;
 
         // Periodic evaluation.
         let eval = if t % self.cfg.eval_every == 0 || t == self.cfg.rounds {
@@ -698,17 +250,18 @@ impl Server {
             None
         };
 
+        let ledger = self.driver.ledger();
         let rec = RoundRecord {
             round: t,
-            sample_rate: rate,
-            clients: selected.len(),
+            sample_rate: cohort.rate,
+            clients: cohort.selected.len(),
             train_loss,
             test_loss: eval.map(|e| e.mean_loss()).unwrap_or(f64::NAN),
             test_accuracy: eval.map(|e| e.accuracy()).unwrap_or(f64::NAN),
             test_perplexity: eval.map(|e| e.perplexity()).unwrap_or(f64::NAN),
-            uplink_units: self.ledger.uplink_units,
-            uplink_bytes: self.ledger.uplink_bytes,
-            downlink_bytes: self.ledger.downlink_bytes,
+            uplink_units: ledger.uplink_units,
+            uplink_bytes: ledger.uplink_bytes,
+            downlink_bytes: ledger.downlink_bytes,
             downlink_recon_err: wire.recon_err,
             virtual_time_s: self.clock.now(),
         };
@@ -752,284 +305,7 @@ impl Server {
         Ok(ServerOutcome {
             recorder: self.recorder,
             final_params: Arc::try_unwrap(self.params).unwrap_or_else(|arc| (*arc).clone()),
-            ledger: self.ledger,
+            ledger: self.driver.ledger().clone(),
         })
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    //! Engine-free tests of the round drain loop: `drain_round_uploads`
-    //! takes only channels, a transport, and an aggregator, so the
-    //! dead-client regression (ROADMAP item (c)) is pinned here without
-    //! PJRT artifacts.
-
-    use super::*;
-    use crate::config::experiment::AggregatorKind;
-    use crate::fl::masking::MaskTarget;
-    use crate::runtime::manifest::LayerInfo;
-    use crate::transport::network::NetworkModel;
-    use std::sync::mpsc::channel;
-
-    const P: usize = 16;
-
-    fn layers() -> Vec<LayerInfo> {
-        vec![LayerInfo {
-            name: "w".into(),
-            shape: vec![P],
-            offset: 0,
-            size: P,
-            masked: true,
-        }]
-    }
-
-    fn payload_for(client: u32, round: u32) -> Vec<u8> {
-        let mut params = vec![0.0f32; P];
-        params[client as usize] = 1.0 + client as f32;
-        encode_update(client, round, 10 + client, &params, Encoding::Auto)
-    }
-
-    fn fresh_agg() -> Box<dyn Aggregator> {
-        let broadcast = vec![0.0f32; P];
-        make_aggregator(AggregatorKind::FedAvg, MaskTarget::Weights, &broadcast, &layers())
-            .unwrap()
-    }
-
-    /// Build a simulated-network transport over in-process channels — the
-    /// configuration whose first recv used to barrier on the whole cohort
-    /// and wait out the 300 s upload timeout when a client died.
-    fn simulated_transport() -> Simulated {
-        Simulated::new(Box::new(InProcess::new()), NetworkModel::default())
-    }
-
-    /// Headline regression: under `network = "simulated"`, a client job
-    /// that dies (here: its worker panics before sending anything) fails
-    /// the round with the pool's error in well under the upload timeout —
-    /// the old drain waited out the full 300 s first.
-    #[test]
-    fn dead_client_fails_the_round_immediately_not_after_the_upload_timeout() {
-        let mut transport = simulated_transport();
-        let sink = transport.sink();
-        let selected = vec![0usize, 1];
-        transport.begin_round(selected.len());
-        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
-
-        // client 0 completes normally: payload over the wire + metadata
-        let payload = payload_for(0, 1);
-        let bytes = payload.len();
-        sink.send(payload).unwrap();
-        tx.send((0, Ok((0.5, 1, bytes)))).unwrap();
-
-        // client 1 "panics": its worker thread unwinds, dropping the reply
-        // sender without ever sending a payload or metadata
-        let tx1 = tx.clone();
-        let victim = std::thread::spawn(move || {
-            let _held_until_unwind = tx1;
-            panic!("client 1 panicked mid-round");
-        });
-        assert!(victim.join().is_err());
-        drop(tx);
-
-        let started = Instant::now();
-        let mut agg = fresh_agg();
-        let err = drain_round_uploads(
-            &mut transport,
-            &results,
-            agg.as_mut(),
-            &mut DecodeScratch::default(),
-            &selected,
-            1,
-            P,
-            false,
-            DEFAULT_UPLOAD_TIMEOUT,
-        )
-        .unwrap_err();
-        let elapsed = started.elapsed();
-        assert!(matches!(err, Error::Engine(_)), "{err}");
-        assert!(
-            elapsed < Duration::from_secs(5),
-            "dead client took {elapsed:?} to surface (budget 5 s, old behavior 300 s)"
-        );
-    }
-
-    /// A job that returns a concrete error (rather than dying) surfaces
-    /// that exact error immediately, even though its upload never arrives
-    /// and the simulated network is still barriering on the cohort.
-    #[test]
-    fn failed_job_error_beats_the_wire_timeout_and_names_the_cause() {
-        let mut transport = simulated_transport();
-        let sink = transport.sink();
-        let selected = vec![0usize, 1];
-        transport.begin_round(selected.len());
-        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
-
-        let payload = payload_for(0, 1);
-        let bytes = payload.len();
-        sink.send(payload).unwrap();
-        tx.send((0, Ok((0.5, 1, bytes)))).unwrap();
-        tx.send((1, Err(Error::Engine("client 1 exploded".into())))).unwrap();
-
-        let started = Instant::now();
-        let mut agg = fresh_agg();
-        let err = drain_round_uploads(
-            &mut transport,
-            &results,
-            agg.as_mut(),
-            &mut DecodeScratch::default(),
-            &selected,
-            1,
-            P,
-            false,
-            DEFAULT_UPLOAD_TIMEOUT,
-        )
-        .unwrap_err();
-        assert!(err.to_string().contains("client 1 exploded"), "{err}");
-        assert!(started.elapsed() < Duration::from_secs(5));
-    }
-
-    /// Healthy rounds still work through the polling drain: payloads and
-    /// metadata arriving in scrambled, interleaved order all fold, and the
-    /// metadata comes back in input order.
-    #[test]
-    fn drain_folds_cohort_with_scrambled_arrival_orders() {
-        for use_simulated in [false, true] {
-            let mut transport: Box<dyn Transport> = if use_simulated {
-                Box::new(simulated_transport())
-            } else {
-                Box::new(InProcess::new())
-            };
-            let sink = transport.sink();
-            let selected = vec![0usize, 1, 2];
-            transport.begin_round(selected.len());
-            let (tx, results) = channel::<(usize, Result<JobMeta>)>();
-
-            // metadata for 2 lands before its payload; payload order 1,2,0
-            let payloads: Vec<Vec<u8>> =
-                (0..3).map(|c| payload_for(c as u32, 7)).collect();
-            tx.send((2, Ok((0.2, 1, payloads[2].len())))).unwrap();
-            sink.send(payloads[1].clone()).unwrap();
-            sink.send(payloads[2].clone()).unwrap();
-            tx.send((0, Ok((0.0, 1, payloads[0].len())))).unwrap();
-            sink.send(payloads[0].clone()).unwrap();
-            tx.send((1, Ok((0.1, 1, payloads[1].len())))).unwrap();
-            drop(tx);
-
-            let mut agg = fresh_agg();
-            let metas = drain_round_uploads(
-                transport.as_mut(),
-                &results,
-                agg.as_mut(),
-                &mut DecodeScratch::default(),
-                &selected,
-                7,
-                P,
-                false,
-                Duration::from_secs(30),
-            )
-            .unwrap();
-            assert_eq!(metas.len(), 3);
-            for (i, (loss, nnz, bytes)) in metas.iter().enumerate() {
-                assert_eq!(*loss, 0.1 * i as f32);
-                assert_eq!(*nnz, 1);
-                assert_eq!(*bytes, payloads[i].len());
-            }
-            // the fold saw all three contributions
-            let out = agg.finish().unwrap();
-            let total: u32 = 10 + 11 + 12;
-            for c in 0..3usize {
-                let want = (1.0 + c as f32) * (10 + c as u32) as f32 / total as f32;
-                assert!(
-                    (out[c] - want).abs() < 1e-6,
-                    "coord {c}: {} vs {want} (simulated={use_simulated})",
-                    out[c]
-                );
-            }
-        }
-    }
-
-    /// An upload that never arrives (job reported fine but the payload was
-    /// lost) times out with a typed transport error naming the missing
-    /// clients — using a short timeout to keep the test fast.
-    #[test]
-    fn missing_upload_times_out_with_missing_clients_named() {
-        let mut transport = InProcess::new();
-        let selected = vec![4usize, 9];
-        transport.begin_round(selected.len());
-        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
-        tx.send((0, Ok((0.0, 1, 10)))).unwrap();
-        tx.send((1, Ok((0.0, 1, 10)))).unwrap();
-        drop(tx);
-
-        let mut agg = fresh_agg();
-        let err = drain_round_uploads(
-            &mut transport,
-            &results,
-            agg.as_mut(),
-            &mut DecodeScratch::default(),
-            &selected,
-            1,
-            P,
-            false,
-            Duration::from_millis(150),
-        )
-        .unwrap_err();
-        assert!(matches!(err, Error::Transport(_)), "{err}");
-        let msg = err.to_string();
-        assert!(msg.contains("timed out") && msg.contains('4') && msg.contains('9'), "{msg}");
-    }
-
-    /// On a closed (in-process) wire an invalid payload fails the round
-    /// precisely; on an open wire it is dropped and the genuine upload
-    /// still folds.
-    #[test]
-    fn stray_payload_policy_follows_the_transport() {
-        // closed wire: wrong-round payload is an internal bug -> error
-        let mut transport = InProcess::new();
-        let sink = transport.sink();
-        let selected = vec![0usize];
-        transport.begin_round(1);
-        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
-        let good = payload_for(0, 3);
-        tx.send((0, Ok((0.0, 1, good.len())))).unwrap();
-        sink.send(payload_for(0, 99)).unwrap();
-        let mut agg = fresh_agg();
-        let err = drain_round_uploads(
-            &mut transport,
-            &results,
-            agg.as_mut(),
-            &mut DecodeScratch::default(),
-            &selected,
-            3,
-            P,
-            false,
-            Duration::from_secs(5),
-        )
-        .unwrap_err();
-        assert!(err.to_string().contains("round"), "{err}");
-
-        // open wire: the stray is dropped, the genuine upload folds
-        let mut transport = InProcess::new();
-        let sink = transport.sink();
-        transport.begin_round(1);
-        let (tx, results) = channel::<(usize, Result<JobMeta>)>();
-        tx.send((0, Ok((0.0, 1, good.len())))).unwrap();
-        drop(tx);
-        sink.send(payload_for(0, 99)).unwrap();
-        sink.send(good).unwrap();
-        let mut agg = fresh_agg();
-        let metas = drain_round_uploads(
-            &mut transport,
-            &results,
-            agg.as_mut(),
-            &mut DecodeScratch::default(),
-            &selected,
-            3,
-            P,
-            true,
-            Duration::from_secs(5),
-        )
-        .unwrap();
-        assert_eq!(metas.len(), 1);
-        assert_eq!(agg.folded(), 1);
     }
 }

@@ -28,6 +28,10 @@ const RUN_OPTS: &[OptSpec] = &[
         "encoding",
         "wire encoding: dense|sparse|sparse-delta|auto|auto-q8|auto-q4 (overrides config)",
     ),
+    OptSpec::flag(
+        "downlink-delta",
+        "ship the broadcast as an encoded delta over the downlink wire (overrides config)",
+    ),
 ];
 
 const EQ6_OPTS: &[OptSpec] = &[
@@ -72,6 +76,9 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     }
     if let Some(spec) = args.get("encoding") {
         cfg.encoding = Encoding::parse(spec)?;
+    }
+    if args.has_flag("downlink-delta") {
+        cfg.downlink_delta = true;
     }
     if let Some(path) = args.get("save-config") {
         cfg.save(std::path::Path::new(path))?;

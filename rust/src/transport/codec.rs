@@ -73,6 +73,33 @@ const TAG_SPARSE_DELTA_Q4: u8 = 6;
 /// n_samples(4) p(4) count(4).
 const HEADER_BYTES: usize = 24;
 
+/// Sentinel "client" id in downlink broadcast headers: the server itself.
+pub const BROADCAST_SENDER: u32 = u32::MAX;
+
+/// Broadcast semantics flag, carried in the (otherwise unused) `n_samples`
+/// header field of a downlink message: the payload is the full model —
+/// decode and use directly.
+pub const BROADCAST_FULL: u32 = 0;
+
+/// Broadcast semantics flag: the payload is `w_t - w_{t-1}` — the client
+/// reconstructs `w_{t-1} + delta` against the broadcast it already holds.
+/// Note this is *semantics*, not layout: a delta may still ship under any
+/// codec tag (Auto picks by size), so the receiver cannot infer it from
+/// the tag and must be told — which also lets it fail loudly when server
+/// and client disagree about what state the client holds.
+pub const BROADCAST_DELTA: u32 = 1;
+
+/// Read the client id a message *claims* to be from — bytes 4..8 of the
+/// fixed header — without decoding anything else. The session layer uses
+/// this to verify an upload's claimed sender against its connection's
+/// authenticated session **before** any payload decode; `None` means the
+/// message is too short to even carry the header field.
+pub fn peek_client(payload: &[u8]) -> Option<u32> {
+    payload
+        .get(4..8)
+        .map(|b| u32::from_le_bytes(b.try_into().expect("4-byte slice")))
+}
+
 /// Quantized-body prefix: min f32 + scale f32.
 const QHEADER: usize = 8;
 
@@ -380,7 +407,17 @@ pub fn encode_update_with(
     enc: Encoding,
 ) -> Vec<u8> {
     let p = params.len();
-    let (nnz, delta_bytes) = census(params);
+    // Only the delta-coded encodings need the varint census; the flat
+    // sparse/q8 choices need just the non-zero count, and a fixed dense
+    // encode needs neither — so the (frequent) dense downlink broadcast
+    // stays a straight header + memcpy with no per-element varint pass.
+    let (nnz, delta_bytes) = match enc {
+        Encoding::Dense => (0, 0),
+        Encoding::Sparse | Encoding::AutoQ8 => {
+            (params.iter().filter(|v| **v != 0.0).count(), 0)
+        }
+        Encoding::SparseDelta | Encoding::Auto | Encoding::AutoQ4 => census(params),
+    };
     // Exact body sizes (bytes after the 24-byte header's count field), so
     // the auto encodings select by true encoded length, not a heuristic.
     let body_dense = 4 * p;

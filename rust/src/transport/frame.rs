@@ -1,27 +1,47 @@
-//! Length-prefixed frame layer for the socket transport.
+//! Length-prefixed, session-aware frame layer for the socket transport.
 //!
 //! The codec ([`crate::transport::codec`]) defines *what* an update looks
 //! like; a stream socket only hands back byte runs of arbitrary length, so
-//! this module defines *where one message ends and the next begins*. One
-//! frame carries one opaque payload (for us: one encoded
-//! [`crate::transport::codec::WireUpdate`]).
+//! this module defines *where one message ends and the next begins* — and,
+//! since the full-duplex session refactor, *who* is speaking and *which
+//! direction* a frame travels. One frame carries one opaque payload (for
+//! us: one encoded [`crate::transport::codec::WireUpdate`], or the 4-byte
+//! client id of a registration hello).
 //!
-//! ## Wire format (all integers little-endian)
+//! ## Wire format v2 (all integers little-endian)
 //!
 //! ```text
 //! offset  size  field
 //! 0       2     magic   0x4c46 ("FL")
-//! 2       1     version 1
-//! 3       1     reserved, must be 0 (future flags; nonzero is rejected)
-//! 4       4     payload length in bytes (u32)
-//! 8       len   payload
+//! 2       1     version 2
+//! 3       1     kind    0 hello | 1 welcome | 2 upload | 3 broadcast
+//! 4       8     session token (u64); 0 = "no session" (hello only)
+//! 12      4     payload length in bytes (u32)
+//! 16      len   payload
 //! ```
 //!
-//! Versioning rules: the header layout through the length field is frozen
-//! for all versions; an incompatible payload change bumps `version` and old
-//! readers reject it with a typed error. The reserved byte must be written
-//! as zero and is rejected when nonzero, so it can become a flags field
-//! later without silently misreading old peers.
+//! v1 (8-byte header, no kind/token) is gone: the wire is now a duplex
+//! *session*, and an unauthenticated upload is a protocol error rather
+//! than a valid message, so old peers are rejected on the version byte
+//! with a typed error. The frame kinds:
+//!
+//! * **hello** (client→server) — registration: payload is the claimant's
+//!   client id (4 bytes LE), token must be 0 (there is no session yet).
+//! * **welcome** (server→client) — the handshake reply: the header token
+//!   is the issued per-client session token; empty payload.
+//! * **upload** (client→server) — one encoded update; the header token
+//!   must match the connection's session and the payload's claimed client
+//!   id must match the session's (verified *before* any codec decode —
+//!   see [`crate::transport::session`]).
+//! * **broadcast** (server→client) — the round's encoded downlink; the
+//!   header token echoes the recipient's session token so a client can
+//!   reject a frame that was not addressed to its session.
+//!
+//! Versioning rules: the layout through the magic/version bytes is frozen
+//! for all versions; an incompatible change bumps `version` and old
+//! readers reject it with a typed error. Unknown `kind` values are
+//! rejected the same way, so the field can grow without silently
+//! misreading old peers.
 //!
 //! A declared length above the hard cap ([`MAX_FRAME_BYTES`], or the custom
 //! cap of [`FrameReader::with_cap`]) is rejected **before any allocation**:
@@ -31,11 +51,13 @@
 //!
 //! [`FrameReader`] is a push-style state machine: feed it whatever chunk
 //! the socket produced — a single byte, half a header, three frames at
-//! once — and it hands back completed payloads without ever over-consuming
-//! into the next frame. [`pump_frames`] wraps it around any [`Read`] and is
-//! what the socket server's per-connection threads run; a connection that
-//! closes mid-frame is a typed truncation error, while EOF on a frame
-//! boundary is a clean end of stream.
+//! once — and it hands back completed frames without ever over-consuming
+//! into the next one. [`FrameStream`] is the pull-style counterpart the
+//! duplex connections run: it wraps any [`Read`], yields one frame per
+//! call, and keeps bytes read past a frame boundary for the next call.
+//! [`pump_frames`] drains a whole stream through a callback. A connection
+//! that closes mid-frame is a typed truncation error, while EOF on a
+//! frame boundary is a clean end of stream.
 
 use std::io::{Read, Write};
 
@@ -44,11 +66,11 @@ use crate::util::error::{Error, Result};
 /// Frame magic: "FL" as a little-endian u16 (bytes `46 4c` on the wire).
 pub const FRAME_MAGIC: u16 = 0x4c46;
 
-/// Current frame version.
-pub const FRAME_VERSION: u8 = 1;
+/// Current frame version (2: session kind + token in the header).
+pub const FRAME_VERSION: u8 = 2;
 
-/// Fixed frame header size: magic(2) version(1) reserved(1) length(4).
-pub const FRAME_HEADER_BYTES: usize = 8;
+/// Fixed frame header size: magic(2) version(1) kind(1) token(8) length(4).
+pub const FRAME_HEADER_BYTES: usize = 16;
 
 /// Hard cap on a frame payload (64 MiB). Our largest real message is a
 /// dense f32 model (a few MB); anything near the cap is a malformed or
@@ -56,10 +78,49 @@ pub const FRAME_HEADER_BYTES: usize = 8;
 /// allocating a byte for the body.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
+/// The "no session" token: the only value a hello may carry, and never a
+/// value the server issues.
+pub const NO_TOKEN: u64 = 0;
+
+/// What a frame *is* — the four message types of the duplex session
+/// protocol. The discriminants are the wire byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Client→server registration request (payload: client id, u32 LE).
+    Hello = 0,
+    /// Server→client handshake reply (token in header, empty payload).
+    Welcome = 1,
+    /// Client→server encoded update (token-authenticated).
+    Upload = 2,
+    /// Server→client encoded round broadcast.
+    Broadcast = 3,
+}
+
+impl FrameKind {
+    fn from_wire(b: u8) -> Result<FrameKind> {
+        match b {
+            0 => Ok(FrameKind::Hello),
+            1 => Ok(FrameKind::Welcome),
+            2 => Ok(FrameKind::Upload),
+            3 => Ok(FrameKind::Broadcast),
+            other => Err(Error::transport(format!("frame: unknown kind {other:#04x}"))),
+        }
+    }
+}
+
+/// One completed frame: kind + session token from the header, plus the
+/// owned payload bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub token: u64,
+    pub payload: Vec<u8>,
+}
+
 /// Incremental frame decoder tolerant of arbitrarily short reads.
 ///
 /// `feed` consumes bytes from the caller's chunk and returns how many it
-/// used plus a completed payload when one finishes. It never consumes past
+/// used plus a completed frame when one finishes. It never consumes past
 /// the end of a frame, so pipelined frames in one chunk survive: call it in
 /// a loop, advancing by the consumed count.
 #[derive(Debug)]
@@ -68,8 +129,9 @@ pub struct FrameReader {
     /// Partial header bytes accumulated so far (valid up to `have`).
     header: [u8; FRAME_HEADER_BYTES],
     have: usize,
-    /// Body length once the header parsed; `None` while reading the header.
-    need: Option<usize>,
+    /// Parsed (kind, token, body length) once the header completed;
+    /// `None` while reading the header.
+    need: Option<(FrameKind, u64, usize)>,
     body: Vec<u8>,
 }
 
@@ -103,11 +165,11 @@ impl FrameReader {
         self.have > 0 || self.need.is_some()
     }
 
-    /// Consume bytes from `chunk`. Returns `(consumed, Some(payload))` when
+    /// Consume bytes from `chunk`. Returns `(consumed, Some(frame))` when
     /// a frame completes, `(consumed, None)` when more input is needed.
     /// After a completed frame the reader is reset and ready for the next
     /// header; unconsumed chunk bytes belong to the caller.
-    pub fn feed(&mut self, chunk: &[u8]) -> Result<(usize, Option<Vec<u8>>)> {
+    pub fn feed(&mut self, chunk: &[u8]) -> Result<(usize, Option<Frame>)> {
         let mut used = 0usize;
         if self.need.is_none() {
             let take = (FRAME_HEADER_BYTES - self.have).min(chunk.len());
@@ -127,13 +189,9 @@ impl FrameReader {
                     "frame: unsupported version {version} (expected {FRAME_VERSION})"
                 )));
             }
-            if self.header[3] != 0 {
-                return Err(Error::transport(format!(
-                    "frame: nonzero reserved byte {:#04x}",
-                    self.header[3]
-                )));
-            }
-            let len = u32::from_le_bytes(self.header[4..8].try_into().unwrap()) as usize;
+            let kind = FrameKind::from_wire(self.header[3])?;
+            let token = u64::from_le_bytes(self.header[4..12].try_into().unwrap());
+            let len = u32::from_le_bytes(self.header[12..16].try_into().unwrap()) as usize;
             if len > self.max_len {
                 return Err(Error::transport(format!(
                     "frame: declared length {len} exceeds cap {}",
@@ -141,18 +199,25 @@ impl FrameReader {
                 )));
             }
             // Safe to reserve: len is bounded by the cap.
-            self.need = Some(len);
+            self.need = Some((kind, token, len));
             self.body.clear();
             self.body.reserve(len);
         }
-        let need = self.need.expect("header parsed");
+        let (kind, token, need) = self.need.expect("header parsed");
         let take = (need - self.body.len()).min(chunk.len() - used);
         self.body.extend_from_slice(&chunk[used..used + take]);
         used += take;
         if self.body.len() == need {
             self.need = None;
             self.have = 0;
-            return Ok((used, Some(std::mem::take(&mut self.body))));
+            return Ok((
+                used,
+                Some(Frame {
+                    kind,
+                    token,
+                    payload: std::mem::take(&mut self.body),
+                }),
+            ));
         }
         Ok((used, None))
     }
@@ -160,7 +225,7 @@ impl FrameReader {
 
 /// Write one frame (header + payload) to `w`. Fails without writing when
 /// the payload exceeds [`MAX_FRAME_BYTES`].
-pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+pub fn write_frame<W: Write>(w: &mut W, kind: FrameKind, token: u64, payload: &[u8]) -> Result<()> {
     if payload.len() > MAX_FRAME_BYTES {
         return Err(Error::transport(format!(
             "frame: payload {} exceeds cap {MAX_FRAME_BYTES}",
@@ -170,51 +235,104 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     let mut header = [0u8; FRAME_HEADER_BYTES];
     header[..2].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
     header[2] = FRAME_VERSION;
-    header[3] = 0;
-    header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    header[3] = kind as u8;
+    header[4..12].copy_from_slice(&token.to_le_bytes());
+    header[12..16].copy_from_slice(&(payload.len() as u32).to_le_bytes());
     w.write_all(&header)?;
     w.write_all(payload)?;
     Ok(())
 }
 
 /// One frame as an owned byte vector (tests and in-memory paths).
-pub fn frame_bytes(payload: &[u8]) -> Result<Vec<u8>> {
+pub fn frame_bytes(kind: FrameKind, token: u64, payload: &[u8]) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + payload.len());
-    write_frame(&mut out, payload)?;
+    write_frame(&mut out, kind, token, payload)?;
     Ok(out)
 }
 
-/// Drain `r` frame by frame, handing each completed payload to `deliver`,
+/// Pull-style frame source over any [`Read`] — what each side of a
+/// persistent duplex connection runs. One [`FrameStream::next`] call
+/// yields one frame; bytes read past the frame boundary (pipelined
+/// frames) are kept for the next call, so interleaving `next` with writes
+/// on the same connection never loses input.
+#[derive(Debug, Default)]
+pub struct FrameStream {
+    reader: FrameReader,
+    /// Bytes read off the stream but not yet fed (valid in `start..end`).
+    buf: Vec<u8>,
+    start: usize,
+    end: usize,
+}
+
+impl FrameStream {
+    pub fn new() -> FrameStream {
+        FrameStream {
+            reader: FrameReader::new(),
+            buf: vec![0u8; 16 * 1024],
+            start: 0,
+            end: 0,
+        }
+    }
+
+    /// Read until one frame completes. `Ok(None)` is a clean EOF (the
+    /// peer closed on a frame boundary with no bytes pending); EOF
+    /// mid-frame is a typed truncation error; a read timeout (the caller
+    /// armed `set_read_timeout`) is a typed transport error naming it.
+    pub fn next<R: Read>(&mut self, r: &mut R) -> Result<Option<Frame>> {
+        if self.buf.is_empty() {
+            self.buf = vec![0u8; 16 * 1024];
+        }
+        loop {
+            while self.start < self.end {
+                let (used, frame) = self.reader.feed(&self.buf[self.start..self.end])?;
+                self.start += used;
+                if let Some(f) = frame {
+                    return Ok(Some(f));
+                }
+            }
+            let n = match r.read(&mut self.buf) {
+                Ok(n) => n,
+                // EINTR (a signal landed mid-read) is not a peer failure:
+                // retry instead of dropping a healthy connection.
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Err(Error::transport("frame: timed out waiting for a frame"))
+                }
+                Err(e) => return Err(e.into()),
+            };
+            if n == 0 {
+                return if self.reader.mid_frame() {
+                    Err(Error::transport("frame: connection closed mid-frame"))
+                } else {
+                    Ok(None)
+                };
+            }
+            self.start = 0;
+            self.end = n;
+        }
+    }
+
+    /// Like [`FrameStream::next`] but a clean EOF is an error too — for
+    /// callers that are owed a reply (handshake, downlink receive).
+    pub fn expect_next<R: Read>(&mut self, r: &mut R) -> Result<Frame> {
+        self.next(r)?
+            .ok_or_else(|| Error::transport("frame: connection closed before a frame arrived"))
+    }
+}
+
+/// Drain `r` frame by frame, handing each completed frame to `deliver`,
 /// until EOF. Tolerates arbitrarily short reads and multiple frames per
 /// read. EOF on a frame boundary returns `Ok(())`; EOF mid-frame is a
 /// typed truncation error; a malformed header aborts immediately.
-pub fn pump_frames<R: Read>(r: &mut R, mut deliver: impl FnMut(Vec<u8>)) -> Result<()> {
-    let mut reader = FrameReader::new();
-    let mut buf = [0u8; 16 * 1024];
-    loop {
-        let n = match r.read(&mut buf) {
-            Ok(n) => n,
-            // EINTR (a signal landed mid-read) is not a peer failure:
-            // retry instead of dropping a healthy connection.
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e.into()),
-        };
-        if n == 0 {
-            return if reader.mid_frame() {
-                Err(Error::transport("frame: connection closed mid-frame"))
-            } else {
-                Ok(())
-            };
-        }
-        let mut at = 0usize;
-        while at < n {
-            let (used, frame) = reader.feed(&buf[at..n])?;
-            at += used;
-            if let Some(payload) = frame {
-                deliver(payload);
-            }
-        }
+pub fn pump_frames<R: Read>(r: &mut R, mut deliver: impl FnMut(Frame)) -> Result<()> {
+    let mut stream = FrameStream::new();
+    while let Some(frame) = stream.next(r)? {
+        deliver(frame);
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -252,8 +370,8 @@ mod tests {
             .collect()
     }
 
-    /// Decode a whole stream via FrameReader fed in `splits`-sized pieces.
-    fn feed_in_pieces(stream: &[u8], piece: usize) -> Result<Vec<Vec<u8>>> {
+    /// Decode a whole stream via FrameReader fed in `piece`-sized chunks.
+    fn feed_in_pieces(stream: &[u8], piece: usize) -> Result<Vec<Frame>> {
         let mut reader = FrameReader::new();
         let mut out = Vec::new();
         for chunk in stream.chunks(piece.max(1)) {
@@ -276,9 +394,9 @@ mod tests {
     fn roundtrip_split_at_every_byte_boundary() {
         // Every codec encoding, including empty and all-zero payloads; the
         // framed stream is split at every possible byte boundary and the
-        // recovered payload must be bitwise identical to the direct codec
-        // path (satellite: header splits covered because the boundary sweep
-        // includes offsets 0..=8).
+        // recovered frame (kind, token, payload) must be identical to what
+        // was written. The boundary sweep includes every header offset
+        // 0..=16, so partial kind/token/length reads are all covered.
         let mut g = Gen::new(0xf4a3e);
         let cases: Vec<Vec<f32>> = vec![
             vec![],                       // empty model (p = 0)
@@ -286,10 +404,11 @@ mod tests {
             masked_params(&mut g, 64, 0.2),
             masked_params(&mut g, 33, 1.0),
         ];
+        let token = 0x1122_3344_5566_7788u64;
         for params in &cases {
             for &enc in Encoding::ALL {
                 let payload = encode_update(7, 3, 11, params, enc);
-                let framed = frame_bytes(&payload).unwrap();
+                let framed = frame_bytes(FrameKind::Upload, token, &payload).unwrap();
                 for split in 0..=framed.len() {
                     let mut reader = FrameReader::new();
                     let mut got = None;
@@ -304,9 +423,14 @@ mod tests {
                         }
                     }
                     let got = got.unwrap_or_else(|| panic!("no frame at split {split}"));
-                    assert_eq!(&got, &payload, "enc {enc:?} split {split}");
+                    assert_eq!(got.kind, FrameKind::Upload, "enc {enc:?} split {split}");
+                    assert_eq!(got.token, token, "enc {enc:?} split {split}");
+                    assert_eq!(&got.payload, &payload, "enc {enc:?} split {split}");
                     // decoded update identical to the direct codec path
-                    assert_eq!(decode_update(&got).unwrap(), decode_update(&payload).unwrap());
+                    assert_eq!(
+                        decode_update(&got.payload).unwrap(),
+                        decode_update(&payload).unwrap()
+                    );
                 }
             }
         }
@@ -316,55 +440,73 @@ mod tests {
     fn prop_roundtrip_random_piece_sizes() {
         check("frame roundtrip, random splits", 60, |g| {
             let k = g.usize_in(1, 5);
-            let payloads: Vec<Vec<u8>> = (0..k)
+            let kinds = [
+                FrameKind::Hello,
+                FrameKind::Welcome,
+                FrameKind::Upload,
+                FrameKind::Broadcast,
+            ];
+            let frames: Vec<Frame> = (0..k)
                 .map(|c| {
                     let p = g.usize_in(0, 300);
                     let density = g.f32_in(0.0, 1.0);
                     let params = masked_params(g, p, density);
                     let enc = *g.choose(Encoding::ALL);
-                    encode_update(c as u32, 1, 2, &params, enc)
+                    Frame {
+                        kind: kinds[g.usize_in(0, kinds.len() - 1)],
+                        token: g.usize_in(0, u32::MAX as usize) as u64,
+                        payload: encode_update(c as u32, 1, 2, &params, enc),
+                    }
                 })
                 .collect();
             let mut stream = Vec::new();
-            for p in &payloads {
-                write_frame(&mut stream, p).unwrap();
+            for f in &frames {
+                write_frame(&mut stream, f.kind, f.token, &f.payload).unwrap();
             }
             // random body offsets: pieces of random size, incl. size 1
             let piece = g.usize_in(1, stream.len().max(1));
             let got = feed_in_pieces(&stream, piece).unwrap();
-            assert_eq!(got, payloads, "piece {piece} seed {:#x}", g.seed);
+            assert_eq!(got, frames, "piece {piece} seed {:#x}", g.seed);
             // and the byte-at-a-time pump over a Read
             let mut r = ShortReader { data: &stream, at: 0, chunk: 1 };
             let mut pumped = Vec::new();
             pump_frames(&mut r, |f| pumped.push(f)).unwrap();
-            assert_eq!(pumped, payloads);
+            assert_eq!(pumped, frames);
         });
     }
 
     #[test]
     fn zero_length_payload_is_a_valid_frame() {
-        let framed = frame_bytes(&[]).unwrap();
+        // the welcome frame is exactly this: header-only, token payload-free
+        let framed = frame_bytes(FrameKind::Welcome, 99, &[]).unwrap();
         assert_eq!(framed.len(), FRAME_HEADER_BYTES);
         let mut reader = FrameReader::new();
         let (used, frame) = reader.feed(&framed).unwrap();
         assert_eq!(used, FRAME_HEADER_BYTES);
-        assert_eq!(frame, Some(vec![]));
+        let frame = frame.unwrap();
+        assert_eq!(frame.kind, FrameKind::Welcome);
+        assert_eq!(frame.token, 99);
+        assert!(frame.payload.is_empty());
         assert!(!reader.mid_frame());
     }
 
     #[test]
     fn pipelined_frames_in_one_chunk_do_not_bleed() {
-        let a = frame_bytes(b"alpha").unwrap();
-        let b = frame_bytes(b"bee").unwrap();
+        let a = frame_bytes(FrameKind::Upload, 1, b"alpha").unwrap();
+        let b = frame_bytes(FrameKind::Broadcast, 2, b"bee").unwrap();
         let mut stream = a.clone();
         stream.extend_from_slice(&b);
         let got = feed_in_pieces(&stream, stream.len()).unwrap();
-        assert_eq!(got, vec![b"alpha".to_vec(), b"bee".to_vec()]);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].payload, b"alpha");
+        assert_eq!(got[1].kind, FrameKind::Broadcast);
+        assert_eq!(got[1].token, 2);
+        assert_eq!(got[1].payload, b"bee");
     }
 
     #[test]
     fn bad_magic_is_a_typed_error() {
-        let mut framed = frame_bytes(b"x").unwrap();
+        let mut framed = frame_bytes(FrameKind::Upload, 1, b"x").unwrap();
         framed[0] ^= 0xff;
         let err = FrameReader::new().feed(&framed).unwrap_err();
         assert!(matches!(err, Error::Transport(_)), "{err}");
@@ -373,20 +515,23 @@ mod tests {
 
     #[test]
     fn unsupported_version_is_a_typed_error() {
-        let mut framed = frame_bytes(b"x").unwrap();
-        framed[2] = FRAME_VERSION + 1;
-        let err = FrameReader::new().feed(&framed).unwrap_err();
-        assert!(matches!(err, Error::Transport(_)), "{err}");
-        assert!(err.to_string().contains("version"), "{err}");
+        // both the future (v3) and the dead v1 wire are rejected by byte 2
+        for bad in [FRAME_VERSION + 1, 1] {
+            let mut framed = frame_bytes(FrameKind::Upload, 1, b"x").unwrap();
+            framed[2] = bad;
+            let err = FrameReader::new().feed(&framed).unwrap_err();
+            assert!(matches!(err, Error::Transport(_)), "{err}");
+            assert!(err.to_string().contains("version"), "{err}");
+        }
     }
 
     #[test]
-    fn nonzero_reserved_byte_is_a_typed_error() {
-        let mut framed = frame_bytes(b"x").unwrap();
+    fn unknown_kind_is_a_typed_error() {
+        let mut framed = frame_bytes(FrameKind::Upload, 1, b"x").unwrap();
         framed[3] = 0x80;
         let err = FrameReader::new().feed(&framed).unwrap_err();
         assert!(matches!(err, Error::Transport(_)), "{err}");
-        assert!(err.to_string().contains("reserved"), "{err}");
+        assert!(err.to_string().contains("unknown kind"), "{err}");
     }
 
     #[test]
@@ -397,7 +542,8 @@ mod tests {
         let mut header = [0u8; FRAME_HEADER_BYTES];
         header[..2].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
         header[2] = FRAME_VERSION;
-        header[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        header[3] = FrameKind::Upload as u8;
+        header[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
         let err = FrameReader::new().feed(&header).unwrap_err();
         assert!(matches!(err, Error::Transport(_)), "{err}");
         assert!(err.to_string().contains("exceeds cap"), "{err}");
@@ -405,14 +551,15 @@ mod tests {
         let mut small = [0u8; FRAME_HEADER_BYTES];
         small[..2].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
         small[2] = FRAME_VERSION;
-        small[4..8].copy_from_slice(&9u32.to_le_bytes());
+        small[3] = FrameKind::Upload as u8;
+        small[12..16].copy_from_slice(&9u32.to_le_bytes());
         assert!(FrameReader::with_cap(8).feed(&small).is_err());
         assert!(FrameReader::with_cap(9).feed(&small).unwrap().1.is_none());
     }
 
     #[test]
     fn truncated_body_and_mid_frame_disconnect_are_typed_errors() {
-        let framed = frame_bytes(b"hello world").unwrap();
+        let framed = frame_bytes(FrameKind::Upload, 5, b"hello world").unwrap();
         // EOF inside the body
         let mut r = ShortReader { data: &framed[..framed.len() - 3], at: 0, chunk: 4 };
         let err = pump_frames(&mut r, |_| {}).unwrap_err();
@@ -429,6 +576,25 @@ mod tests {
     }
 
     #[test]
+    fn frame_stream_interleaves_with_leftover_bytes() {
+        // two pipelined frames arrive in one read; a FrameStream must hand
+        // them back across two next() calls without losing the leftover
+        let a = frame_bytes(FrameKind::Broadcast, 7, b"round-1").unwrap();
+        let b = frame_bytes(FrameKind::Broadcast, 7, b"round-2").unwrap();
+        let mut stream = a;
+        stream.extend_from_slice(&b);
+        let mut r = ShortReader { data: &stream, at: 0, chunk: stream.len() };
+        let mut fs = FrameStream::new();
+        assert_eq!(fs.next(&mut r).unwrap().unwrap().payload, b"round-1");
+        assert_eq!(fs.next(&mut r).unwrap().unwrap().payload, b"round-2");
+        assert!(fs.next(&mut r).unwrap().is_none(), "clean EOF after the last frame");
+        // expect_next turns the clean EOF into a typed error
+        let mut r = ShortReader { data: &[], at: 0, chunk: 1 };
+        let err = FrameStream::new().expect_next(&mut r).unwrap_err();
+        assert!(err.to_string().contains("closed"), "{err}");
+    }
+
+    #[test]
     fn write_frame_rejects_oversized_payload_without_io() {
         // construct a reader-side cap violation via the writer's own guard:
         // the writer refuses before touching the sink
@@ -442,7 +608,7 @@ mod tests {
             }
         }
         let big = vec![0u8; MAX_FRAME_BYTES + 1];
-        let err = write_frame(&mut NoWrite, &big).unwrap_err();
+        let err = write_frame(&mut NoWrite, FrameKind::Upload, 0, &big).unwrap_err();
         assert!(matches!(err, Error::Transport(_)), "{err}");
     }
 }

@@ -1,26 +1,34 @@
-//! The transport abstraction the server aggregates over.
+//! The transport abstraction the server runs its rounds over.
 //!
-//! A [`Transport`] carries encoded update payloads from client workers to
-//! the server's streaming-aggregation loop. Three implementations:
+//! A [`Transport`] is now a **full-duplex session plane**: it carries the
+//! round's encoded downlink broadcast *to* each registered client and the
+//! encoded update payloads *back* to the server's streaming-aggregation
+//! loop. Three implementations:
 //!
-//! * [`InProcess`] — an mpsc channel; today's default and the bitwise
-//!   reference every other transport is tested against.
-//! * [`crate::transport::socket::Loopback`] — real framed TCP or
-//!   unix-domain sockets on localhost; same bytes, real I/O.
-//! * [`Simulated`] — wraps either of the above and re-orders deliveries by
-//!   [`NetworkModel::upload_time`], so completion order models link speed
-//!   instead of scheduler luck.
+//! * [`InProcess`] — mpsc upload channel + per-client downlink queues;
+//!   today's default and the bitwise reference every other transport is
+//!   tested against.
+//! * [`crate::transport::socket::Loopback`] — one persistent,
+//!   token-authenticated framed TCP/UDS connection per registered client;
+//!   the broadcast and the upload cross the same kernel socket.
+//! * [`Simulated`] — wraps either of the above and re-orders upload
+//!   deliveries by [`NetworkModel::upload_time`], so completion order
+//!   models link speed instead of scheduler luck (the downlink passes
+//!   through untimed — its cost is accounted by the virtual clock, not by
+//!   delivery order).
 //!
-//! The split matters for streaming: the *sink* half is `Send + Sync` and is
-//! cloned into every client job (worker threads call
-//! [`UploadSink::send`] the moment the payload is encoded), while the
-//! *receive* half stays with the server loop, which folds payloads into the
-//! round's aggregator in arrival order. Because the fold is
-//! order-independent by construction, every transport produces a bitwise
-//! identical aggregate — the integration suite pins exactly that.
+//! The split matters for streaming: the *sink* half ([`UploadSink`]) and
+//! the *downlink* half ([`DownlinkSource`]) are `Send + Sync` and are
+//! cloned into every client job (worker threads receive the broadcast and
+//! push the upload the moment it is encoded), while the *receive* half
+//! stays with the server loop, which folds payloads into the round's
+//! aggregator in arrival order. Because the fold is order-independent by
+//! construction, every transport produces a bitwise identical aggregate —
+//! the integration suite pins exactly that.
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::transport::network::NetworkModel;
@@ -65,11 +73,24 @@ impl TransportKind {
     }
 }
 
-/// The client-side half: ships one encoded payload toward the server.
-/// Cloned (as `Arc<dyn UploadSink>`) into every client job; called from
-/// engine-pool worker threads.
+/// The client-side upload half: ships one encoded payload toward the
+/// server. Cloned (as `Arc<dyn UploadSink>`) into every client job; called
+/// from engine-pool worker threads.
 pub trait UploadSink: Send + Sync {
     fn send(&self, payload: Vec<u8>) -> Result<()>;
+}
+
+/// The client-side downlink half: where a client job receives the round's
+/// encoded broadcast. Cloned (as `Arc<dyn DownlinkSource>`) into every
+/// client job; called from engine-pool worker threads before local
+/// training starts.
+pub trait DownlinkSource: Send + Sync {
+    /// Blocking receive of the next broadcast payload addressed to
+    /// `client`, waiting at most `timeout`. The payload is shared
+    /// (`Arc`) because one round's broadcast fans out to the whole
+    /// cohort — the in-process wire hands every client the same
+    /// allocation instead of a per-client deep copy.
+    fn recv(&self, client: u32, timeout: Duration) -> Result<Arc<Vec<u8>>>;
 }
 
 /// The server-side transport: hand out sinks to client jobs, then receive
@@ -87,8 +108,26 @@ pub trait Transport: Send {
         false
     }
 
+    /// Open this run's per-client sessions. On the socket transport this
+    /// establishes one persistent duplex connection per client and runs
+    /// the hello/welcome token handshake; in-process it allocates the
+    /// per-client downlink queues. Must be called once, before any
+    /// [`Transport::send_downlink`] or upload; ids not registered here
+    /// cannot speak on the wire.
+    fn register_clients(&mut self, clients: &[u32]) -> Result<()>;
+
     /// Sink for client jobs to upload through.
     fn sink(&self) -> Arc<dyn UploadSink>;
+
+    /// Push one round's encoded broadcast to a registered client. The
+    /// call only *enqueues* — the socket transport writes from a
+    /// dedicated thread so a full kernel buffer backpressures the wire,
+    /// never the server's round loop. The payload is `Arc`-shared so a
+    /// cohort-wide broadcast costs one allocation, not one per client.
+    fn send_downlink(&mut self, client: u32, payload: Arc<Vec<u8>>) -> Result<()>;
+
+    /// Handle client jobs receive their broadcast through.
+    fn downlink(&self) -> Arc<dyn DownlinkSource>;
 
     /// Announce a round of `expected` uploads. [`Simulated`] needs the
     /// cohort size to model delivery order; pass-through elsewhere.
@@ -126,12 +165,79 @@ impl UploadSink for ChannelSink {
     }
 }
 
+/// Per-client downlink mailboxes for the in-process wire: the server
+/// pushes encoded broadcasts in, client jobs (on worker threads) block
+/// until theirs arrives. A condvar-backed queue map rather than one
+/// channel per client so the `Arc<dyn DownlinkSource>` handle stays a
+/// single shareable object.
+#[derive(Default)]
+struct DownlinkHub {
+    queues: Mutex<HashMap<u32, VecDeque<Arc<Vec<u8>>>>>,
+    ready: Condvar,
+}
+
+impl DownlinkHub {
+    /// Register `client` with an empty mailbox (idempotent).
+    fn register(&self, client: u32) {
+        self.queues.lock().expect("downlink hub poisoned").entry(client).or_default();
+    }
+
+    fn push(&self, client: u32, payload: Arc<Vec<u8>>) -> Result<()> {
+        let mut queues = self.queues.lock().map_err(|_| Error::transport("downlink hub poisoned"))?;
+        match queues.get_mut(&client) {
+            Some(q) => {
+                q.push_back(payload);
+                self.ready.notify_all();
+                Ok(())
+            }
+            None => Err(Error::invalid(format!(
+                "downlink to client {client}, which was never registered"
+            ))),
+        }
+    }
+}
+
+impl DownlinkSource for DownlinkHub {
+    fn recv(&self, client: u32, timeout: Duration) -> Result<Arc<Vec<u8>>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut queues = self.queues.lock().map_err(|_| Error::transport("downlink hub poisoned"))?;
+        loop {
+            match queues.get_mut(&client) {
+                None => {
+                    return Err(Error::invalid(format!(
+                        "client {client} has no downlink mailbox (not registered)"
+                    )))
+                }
+                Some(q) => {
+                    if let Some(p) = q.pop_front() {
+                        return Ok(p);
+                    }
+                }
+            }
+            let window = deadline
+                .checked_duration_since(std::time::Instant::now())
+                .filter(|w| !w.is_zero())
+                .ok_or_else(|| {
+                    Error::transport(format!(
+                        "client {client} timed out after {timeout:?} waiting for the broadcast"
+                    ))
+                })?;
+            let (guard, _) = self
+                .ready
+                .wait_timeout(queues, window)
+                .map_err(|_| Error::transport("downlink hub poisoned"))?;
+            queues = guard;
+        }
+    }
+}
+
 /// Channel-backed transport: payloads never leave the process. The
 /// default, and the reference the socket paths are asserted bitwise
 /// identical to.
 pub struct InProcess {
     sink: Arc<ChannelSink>,
     rx: Receiver<Vec<u8>>,
+    downlink: Arc<DownlinkHub>,
     timeout: Duration,
 }
 
@@ -151,6 +257,7 @@ impl InProcess {
         InProcess {
             sink: Arc::new(ChannelSink { tx: Mutex::new(tx) }),
             rx,
+            downlink: Arc::new(DownlinkHub::default()),
             timeout,
         }
     }
@@ -161,9 +268,25 @@ impl Transport for InProcess {
         "inproc"
     }
 
+    fn register_clients(&mut self, clients: &[u32]) -> Result<()> {
+        for &c in clients {
+            self.downlink.register(c);
+        }
+        Ok(())
+    }
+
     fn sink(&self) -> Arc<dyn UploadSink> {
         let sink: Arc<dyn UploadSink> = Arc::clone(&self.sink);
         sink
+    }
+
+    fn send_downlink(&mut self, client: u32, payload: Arc<Vec<u8>>) -> Result<()> {
+        self.downlink.push(client, payload)
+    }
+
+    fn downlink(&self) -> Arc<dyn DownlinkSource> {
+        let dl: Arc<dyn DownlinkSource> = Arc::clone(&self.downlink);
+        dl
     }
 
     fn begin_round(&mut self, _expected: usize) {}
@@ -270,8 +393,22 @@ impl Transport for Simulated {
         self.inner.accepts_foreign_peers()
     }
 
+    fn register_clients(&mut self, clients: &[u32]) -> Result<()> {
+        self.inner.register_clients(clients)
+    }
+
     fn sink(&self) -> Arc<dyn UploadSink> {
         self.inner.sink()
+    }
+
+    fn send_downlink(&mut self, client: u32, payload: Arc<Vec<u8>>) -> Result<()> {
+        // Downlink delivery order is not modeled (one broadcast per client
+        // per round; the virtual clock prices its bytes) — pass through.
+        self.inner.send_downlink(client, payload)
+    }
+
+    fn downlink(&self) -> Arc<dyn DownlinkSource> {
+        self.inner.downlink()
     }
 
     fn begin_round(&mut self, expected: usize) {
@@ -471,6 +608,60 @@ mod tests {
         sink.send(vec![6u8]).unwrap();
         assert_eq!(t.recv().unwrap(), vec![5u8]);
         assert_eq!(t.recv().unwrap(), vec![6u8]);
+    }
+
+    #[test]
+    fn in_process_downlink_reaches_each_registered_client() {
+        let mut t = InProcess::new();
+        t.register_clients(&[3, 9]).unwrap();
+        t.send_downlink(3, Arc::new(vec![0xa; 4])).unwrap();
+        t.send_downlink(9, Arc::new(vec![0xb; 2])).unwrap();
+        let dl = t.downlink();
+        // worker threads pull their own mailbox, in any order
+        let h = {
+            let dl = Arc::clone(&dl);
+            std::thread::spawn(move || dl.recv(9, Duration::from_secs(5)).unwrap())
+        };
+        assert_eq!(*dl.recv(3, Duration::from_secs(5)).unwrap(), vec![0xa; 4]);
+        assert_eq!(*h.join().unwrap(), vec![0xb; 2]);
+    }
+
+    #[test]
+    fn downlink_to_unregistered_client_is_a_typed_error() {
+        let mut t = InProcess::new();
+        t.register_clients(&[1]).unwrap();
+        let err = t.send_downlink(7, Arc::new(vec![1])).unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)), "{err}");
+        let err = t.downlink().recv(7, Duration::from_millis(10)).unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)), "{err}");
+    }
+
+    #[test]
+    fn downlink_recv_blocks_until_the_broadcast_lands_and_times_out_otherwise() {
+        let mut t = InProcess::new();
+        t.register_clients(&[0]).unwrap();
+        let dl = t.downlink();
+        // nothing queued: a short wait trips the typed timeout
+        let err = dl.recv(0, Duration::from_millis(20)).unwrap_err();
+        assert!(matches!(err, Error::Transport(_)), "{err}");
+        assert!(err.to_string().contains("timed out"), "{err}");
+        // a broadcast pushed from another thread wakes the waiter
+        let h = {
+            let dl = Arc::clone(&dl);
+            std::thread::spawn(move || dl.recv(0, Duration::from_secs(5)).unwrap())
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        t.send_downlink(0, Arc::new(vec![42])).unwrap();
+        assert_eq!(*h.join().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn simulated_delegates_registration_and_downlink_to_the_inner_wire() {
+        let mut t = Simulated::new(Box::new(InProcess::new()), NetworkModel::ideal());
+        t.register_clients(&[2]).unwrap();
+        t.send_downlink(2, Arc::new(vec![9, 9])).unwrap();
+        assert_eq!(*t.downlink().recv(2, Duration::from_secs(1)).unwrap(), vec![9, 9]);
+        assert!(t.send_downlink(4, Arc::new(vec![1])).is_err());
     }
 
     #[test]

@@ -10,12 +10,17 @@
 //! every path — only the carrier differs:
 //!
 //! * [`link::InProcess`] (`--transport inproc`, default) — an mpsc
-//!   channel. No socket, no syscalls; the bitwise reference.
+//!   upload channel plus per-client downlink mailboxes. No socket, no
+//!   syscalls; the bitwise reference.
 //! * [`socket::Loopback`] (`--transport tcp|uds`) — real framed sockets:
 //!   TCP on an ephemeral 127.0.0.1 port, or a unix-domain socket in the
-//!   temp dir. Every upload is one connection carrying one frame.
+//!   temp dir. One **persistent, token-authenticated duplex connection
+//!   per registered client**: the round's encoded broadcast goes down and
+//!   the upload comes back on the same kernel socket, and every upload is
+//!   verified against its session (token + claimed client id) before any
+//!   payload decode ([`session`]).
 //! * [`link::Simulated`] (`network = "simulated"` wraps either of the
-//!   above) — re-orders each round's deliveries by
+//!   above) — re-orders each round's upload deliveries by
 //!   [`NetworkModel::upload_time`], so arrival order models link speed
 //!   rather than thread-scheduler luck.
 //!
@@ -29,17 +34,17 @@
 //! every codec tag, varint canonicality rules, and the q4/q8 quantizer
 //! grid contract. In brief:
 //!
-//! **Frame** ([`frame`]): one frame per payload — `magic u16 (0x4c46
-//! "FL") | version u8 (1) | reserved u8 (0) | length u32 LE | payload`.
-//! Declared lengths above the hard cap ([`frame::MAX_FRAME_BYTES`],
-//! 64 MiB) are rejected on the header, before any body allocation. The
-//! reserved byte must be zero (future flags); incompatible payload changes
-//! bump `version`, and readers reject unknown versions with a typed
-//! [`Error::Transport`](crate::util::error::Error). The reader is an
+//! **Frame** ([`frame`]): one frame per message — `magic u16 (0x4c46
+//! "FL") | version u8 (2) | kind u8 (hello/welcome/upload/broadcast) |
+//! token u64 LE | length u32 LE | payload`. Declared lengths above the
+//! hard cap ([`frame::MAX_FRAME_BYTES`], 64 MiB) are rejected on the
+//! header, before any body allocation. Unknown kinds and versions are
+//! typed errors ([`Error::Transport`](crate::util::error::Error)); the
+//! token authenticates a session ([`session`]). The reader is an
 //! incremental state machine tolerant of arbitrarily short reads and
 //! pipelined frames; mid-frame disconnects are typed truncation errors,
-//! and a malformed peer is dropped at its connection without disturbing
-//! the rest of the cohort.
+//! and a malformed or spoofing peer is dropped at its connection without
+//! disturbing the rest of the cohort.
 //!
 //! **Codec** ([`codec`]): seven body tags behind one 24-byte header —
 //! dense/sparse f32, dense/sparse q8, delta+varint sparse f32,
@@ -53,10 +58,12 @@
 //! * **Who encodes** — `fl::client::ClientJob::run` encodes its masked
 //!   update (sparse top-k, dense, or quantized per the experiment's
 //!   `encoding`); the server-side job wrapper ships the payload through
-//!   the round's sink. With `downlink_delta`, `fl::server::Server` also
-//!   encodes the broadcast as a delta against the previous round's global
-//!   model (the downlink stays modeled in-process; only uploads cross the
-//!   socket today).
+//!   the round's sink. The round's broadcast is encoded once by
+//!   `fl::driver::RoundDriver` (dense, or a delta against the previous
+//!   round's global model under `downlink_delta`) and pushed through the
+//!   transport's downlink half — client jobs decode it from the wire
+//!   before training, so **both directions cross the socket** under
+//!   `--transport tcp|uds`.
 //! * **Who decodes** — the server, once per received payload, into a
 //!   borrowed sparse/dense view over a scratch buffer held across rounds
 //!   ([`codec::decode_update_view`]), before folding into the round's
@@ -76,10 +83,14 @@
 //!   saving physically materializes.
 //! * [`frame`] — length-prefixed framing: header layout, size cap,
 //!   incremental reader, adversarial-input rejection.
-//! * [`link`] — the [`Transport`]/[`UploadSink`] abstraction (blocking
-//!   and bounded-poll receives), the in-process default, and the
+//! * [`link`] — the [`Transport`]/[`UploadSink`]/[`DownlinkSource`]
+//!   abstraction (blocking and bounded-poll receives, per-client
+//!   registration, downlink pushes), the in-process default, and the
 //!   [`NetworkModel`]-timed wrapper.
-//! * [`socket`] — the TCP/UDS server + connect-per-upload client.
+//! * [`session`] — per-client session tokens: the registration
+//!   handshake, and upload verification that runs before any decode.
+//! * [`socket`] — the TCP/UDS server + the persistent per-client duplex
+//!   connection ([`socket::ClientConn`]).
 //! * [`quantize`] — optional 8-bit and 4-bit linear quantization layered
 //!   on either encoding (paper §1: the methods "can also be combined with
 //!   cutting-edge compression algorithms").
@@ -94,14 +105,20 @@ pub mod frame;
 pub mod link;
 pub mod network;
 pub mod quantize;
+pub mod session;
 pub mod socket;
 
 pub use codec::{
-    decode_update, decode_update_view, encode_update, encode_update_with, BodyView, DecodeScratch,
-    DecodedBody, EncodeScratch, Encoding, WireUpdate, WireView,
+    decode_update, decode_update_view, encode_update, encode_update_with, peek_client, BodyView,
+    DecodeScratch, DecodedBody, EncodeScratch, Encoding, WireUpdate, WireView, BROADCAST_DELTA,
+    BROADCAST_FULL, BROADCAST_SENDER,
 };
 pub use cost::{eq6_cost, CostLedger};
-pub use frame::{frame_bytes, pump_frames, write_frame, FrameReader, MAX_FRAME_BYTES};
-pub use link::{InProcess, Simulated, Transport, TransportKind, UploadSink};
+pub use frame::{
+    frame_bytes, write_frame, Frame, FrameKind, FrameReader, FrameStream, MAX_FRAME_BYTES,
+    NO_TOKEN,
+};
+pub use link::{DownlinkSource, InProcess, Simulated, Transport, TransportKind, UploadSink};
 pub use network::NetworkModel;
-pub use socket::{send_payload, Loopback, WireAddr};
+pub use session::{hello_payload, validate_upload, Session, SessionTable, TokenMint};
+pub use socket::{ClientConn, Loopback, WireAddr};

@@ -1,0 +1,302 @@
+//! Per-client session authentication for the socket wire.
+//!
+//! Before this layer the loopback listener was an anonymous drop box: any
+//! local process could frame a well-formed upload naming a selected
+//! client, and the server could not tell it from the genuine article. A
+//! session fixes the *identity* half of the trust model:
+//!
+//! 1. **Registration window** — the server [`SessionTable::allow`]s the
+//!    run's client ids before any connection is made.
+//! 2. **Handshake** — each client opens one persistent duplex connection
+//!    and sends a `hello` frame carrying its client id;
+//!    [`SessionTable::handshake`] verifies the id is registered and not
+//!    already active, mints a random non-zero `u64` token, and the server
+//!    replies `welcome` with the token in the frame header.
+//! 3. **Uploads** — every subsequent `upload` frame must carry the
+//!    session token, and the payload's *claimed* client id (peeked at a
+//!    fixed header offset, no codec decode) must equal the session's —
+//!    [`validate_upload`] runs both checks **before any payload decode**
+//!    and returns a typed [`Error::Auth`] on failure, so a spoofed upload
+//!    is rejected at the connection instead of reaching the aggregator.
+//!
+//! What this deliberately does *not* provide: the token crosses the wire
+//! in the clear, so a peer that can observe loopback traffic (or a MITM
+//! on a future non-loopback bind) can replay it. The tokens bound
+//! *blind* spoofing — the pre-refactor hole — and pin the protocol shape
+//! (registration, per-frame credential, verify-before-decode); upgrading
+//! the credential to a keyed MAC over the payload is the documented next
+//! step before any non-loopback bind (ROADMAP).
+
+use std::collections::HashMap;
+use std::hash::{BuildHasher, Hasher};
+
+use crate::transport::codec::peek_client;
+use crate::transport::frame::{Frame, FrameKind, NO_TOKEN};
+use crate::util::error::{Error, Result};
+
+/// Mints per-session tokens: random non-zero u64s seeded from OS process
+/// entropy (`RandomState`), never from the experiment seed — tokens must
+/// not be predictable from a config file, and they carry no effect on
+/// experiment results (payload bytes and the ledger never see them), so
+/// run determinism is preserved.
+#[derive(Debug, Default)]
+pub struct TokenMint {
+    counter: u64,
+}
+
+impl TokenMint {
+    pub fn new() -> TokenMint {
+        TokenMint::default()
+    }
+
+    /// Next token: never [`NO_TOKEN`], vanishingly unlikely to collide.
+    pub fn issue(&mut self) -> u64 {
+        loop {
+            self.counter = self.counter.wrapping_add(1);
+            let mut h = std::collections::hash_map::RandomState::new().build_hasher();
+            h.write_u64(self.counter);
+            let token = h.finish();
+            if token != NO_TOKEN {
+                return token;
+            }
+        }
+    }
+}
+
+/// One authenticated connection: which client it is, under which token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Session {
+    pub client: u32,
+    pub token: u64,
+}
+
+/// The server's registry of allowed clients and live sessions. Shared
+/// behind a mutex by the accept-loop's per-connection threads.
+#[derive(Debug, Default)]
+pub struct SessionTable {
+    /// Ids registered for this run; hellos naming anyone else are refused.
+    allowed: Vec<u32>,
+    /// client id -> live session token.
+    active: HashMap<u32, u64>,
+    mint: TokenMint,
+}
+
+impl SessionTable {
+    pub fn new() -> SessionTable {
+        SessionTable::default()
+    }
+
+    /// Open the registration window for `clients` (sorted, deduped).
+    pub fn allow(&mut self, clients: &[u32]) {
+        self.allowed.extend_from_slice(clients);
+        self.allowed.sort_unstable();
+        self.allowed.dedup();
+    }
+
+    /// Registered client ids, sorted.
+    pub fn registered(&self) -> &[u32] {
+        &self.allowed
+    }
+
+    /// Validate a `hello` frame and open a session. Rejections (all typed
+    /// [`Error::Auth`]): non-hello kind, a non-zero token (there is no
+    /// session to present yet), a malformed id payload, an unregistered
+    /// id, or an id whose session is already active (first-come holds the
+    /// session; a later claimant is a spoofer or a bug).
+    pub fn handshake(&mut self, frame: &Frame) -> Result<Session> {
+        if frame.kind != FrameKind::Hello {
+            return Err(Error::auth(format!(
+                "expected a hello frame to open a session, got {:?}",
+                frame.kind
+            )));
+        }
+        if frame.token != NO_TOKEN {
+            return Err(Error::auth("hello carries a token but no session exists yet"));
+        }
+        let id: [u8; 4] = frame
+            .payload
+            .as_slice()
+            .try_into()
+            .map_err(|_| Error::auth("hello payload must be exactly a 4-byte client id"))?;
+        let client = u32::from_le_bytes(id);
+        if self.allowed.binary_search(&client).is_err() {
+            return Err(Error::auth(format!("client {client} is not registered for this run")));
+        }
+        if self.active.contains_key(&client) {
+            return Err(Error::auth(format!("client {client} already holds a live session")));
+        }
+        let token = self.mint.issue();
+        self.active.insert(client, token);
+        Ok(Session { client, token })
+    }
+
+    /// Close a session — but only if `session` still owns it (a stale
+    /// closer must not evict a successor's session).
+    pub fn end(&mut self, session: Session) {
+        if self.active.get(&session.client) == Some(&session.token) {
+            self.active.remove(&session.client);
+        }
+    }
+
+    /// Token of a live session, if any (tests / the downlink writer).
+    pub fn token_of(&self, client: u32) -> Option<u64> {
+        self.active.get(&client).copied()
+    }
+}
+
+/// The hello payload for `client` (the 4-byte LE id).
+pub fn hello_payload(client: u32) -> Vec<u8> {
+    client.to_le_bytes().to_vec()
+}
+
+/// Verify one `upload` frame against its connection's session, **before
+/// any codec decode**: the frame kind, the session token, and the
+/// payload's claimed client id (peeked at a fixed offset) must all line
+/// up. Returns a typed [`Error::Auth`] naming the first mismatch.
+pub fn validate_upload(frame: &Frame, session: Session) -> Result<()> {
+    if frame.kind != FrameKind::Upload {
+        return Err(Error::auth(format!(
+            "client {}'s session may only send uploads, got {:?}",
+            session.client, frame.kind
+        )));
+    }
+    if frame.token == NO_TOKEN {
+        return Err(Error::auth(format!(
+            "upload for client {} carries no session token",
+            session.client
+        )));
+    }
+    if frame.token != session.token {
+        return Err(Error::auth(format!(
+            "upload token does not match client {}'s session",
+            session.client
+        )));
+    }
+    match peek_client(&frame.payload) {
+        None => Err(Error::auth("upload payload too short to name a client")),
+        Some(claimed) if claimed != session.client => Err(Error::auth(format!(
+            "upload claims client {claimed} but the session belongs to client {}",
+            session.client
+        ))),
+        Some(_) => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::codec::{encode_update, Encoding};
+
+    fn hello(client: u32) -> Frame {
+        Frame {
+            kind: FrameKind::Hello,
+            token: NO_TOKEN,
+            payload: hello_payload(client),
+        }
+    }
+
+    fn upload(client: u32, token: u64) -> Frame {
+        Frame {
+            kind: FrameKind::Upload,
+            token,
+            payload: encode_update(client, 1, 10, &[1.0, 0.0, 2.0], Encoding::Auto),
+        }
+    }
+
+    #[test]
+    fn handshake_issues_distinct_nonzero_tokens() {
+        let mut table = SessionTable::new();
+        table.allow(&[0, 1, 2]);
+        let a = table.handshake(&hello(0)).unwrap();
+        let b = table.handshake(&hello(1)).unwrap();
+        assert_ne!(a.token, NO_TOKEN);
+        assert_ne!(b.token, NO_TOKEN);
+        assert_ne!(a.token, b.token);
+        assert_eq!(table.token_of(0), Some(a.token));
+        assert_eq!(table.registered(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn unregistered_and_duplicate_hellos_are_auth_errors() {
+        let mut table = SessionTable::new();
+        table.allow(&[3, 4]);
+        let err = table.handshake(&hello(99)).unwrap_err();
+        assert!(matches!(err, Error::Auth(_)), "{err}");
+        assert!(err.to_string().contains("not registered"), "{err}");
+
+        table.handshake(&hello(3)).unwrap();
+        let err = table.handshake(&hello(3)).unwrap_err();
+        assert!(matches!(err, Error::Auth(_)), "{err}");
+        assert!(err.to_string().contains("already holds"), "{err}");
+    }
+
+    #[test]
+    fn malformed_hellos_are_auth_errors() {
+        let mut table = SessionTable::new();
+        table.allow(&[1]);
+        // wrong kind
+        let err = table.handshake(&upload(1, 5)).unwrap_err();
+        assert!(matches!(err, Error::Auth(_)), "{err}");
+        // premature token
+        let mut f = hello(1);
+        f.token = 7;
+        assert!(table.handshake(&f).is_err());
+        // short payload
+        let mut f = hello(1);
+        f.payload = vec![1, 2];
+        assert!(table.handshake(&f).is_err());
+    }
+
+    #[test]
+    fn ending_a_session_frees_the_id_but_only_for_its_owner() {
+        let mut table = SessionTable::new();
+        table.allow(&[8]);
+        let first = table.handshake(&hello(8)).unwrap();
+        table.end(first);
+        let second = table.handshake(&hello(8)).unwrap();
+        // a stale end (the first session's credentials) must not evict
+        // the live successor
+        table.end(first);
+        assert_eq!(table.token_of(8), Some(second.token));
+        table.end(second);
+        assert_eq!(table.token_of(8), None);
+    }
+
+    #[test]
+    fn validate_upload_accepts_the_genuine_article() {
+        let session = Session { client: 5, token: 0xfeed };
+        validate_upload(&upload(5, 0xfeed), session).unwrap();
+    }
+
+    #[test]
+    fn missing_wrong_and_cross_client_tokens_are_rejected_before_decode() {
+        let session = Session { client: 5, token: 0xfeed };
+        // missing token
+        let err = validate_upload(&upload(5, NO_TOKEN), session).unwrap_err();
+        assert!(matches!(err, Error::Auth(_)), "{err}");
+        assert!(err.to_string().contains("no session token"), "{err}");
+        // wrong token
+        let err = validate_upload(&upload(5, 0xbad), session).unwrap_err();
+        assert!(matches!(err, Error::Auth(_)), "{err}");
+        // valid token, payload claims another client
+        let err = validate_upload(&upload(3, 0xfeed), session).unwrap_err();
+        assert!(matches!(err, Error::Auth(_)), "{err}");
+        assert!(err.to_string().contains("claims client 3"), "{err}");
+        // payload too short to even carry the claimed id — note the
+        // payload here is NOT codec-decoded at any point
+        let f = Frame {
+            kind: FrameKind::Upload,
+            token: 0xfeed,
+            payload: vec![1, 2, 3],
+        };
+        let err = validate_upload(&f, session).unwrap_err();
+        assert!(matches!(err, Error::Auth(_)), "{err}");
+        // non-upload kinds cannot ride an upload session
+        let f = Frame {
+            kind: FrameKind::Broadcast,
+            token: 0xfeed,
+            payload: encode_update(5, 1, 10, &[1.0], Encoding::Dense),
+        };
+        assert!(validate_upload(&f, session).is_err());
+    }
+}

@@ -1,55 +1,72 @@
-//! Real socket transport: framed TCP / unix-domain uploads on localhost.
+//! Real socket transport: persistent, token-authenticated duplex TCP /
+//! unix-domain sessions on localhost.
 //!
 //! [`Loopback`] is the server half: it binds a listener, runs an accept
-//! loop on a background thread, and spawns one reader thread per
-//! connection that pumps [`crate::transport::frame`] frames into the
-//! server's receive channel. The client half is [`SocketSink`]: each
-//! upload opens a fresh connection, writes one frame, and closes — the
-//! per-upload connect mirrors a cross-device fleet where clients come and
-//! go, and keeps connection state out of the protocol.
+//! loop on a background thread, and gives every accepted connection its
+//! own session thread. Since the full-duplex refactor a connection is a
+//! **session**, not a drop box:
 //!
-//! **Malformed peers cannot take the round down.** A connection that sends
-//! a bad magic, an unsupported version, an over-cap length, or disconnects
-//! mid-frame is dropped with a warning at the reader thread; only complete,
-//! well-framed payloads reach [`Transport::recv`]. Payload *content* is
-//! validated one layer up: the server's aggregation loop drops payloads
-//! that fail codec decode or cohort matching on a bounded per-round
-//! budget, and the queue between reader threads and that loop is bounded
-//! (`UPLOAD_QUEUE_SLOTS` frames), so a flood of framing-valid garbage
-//! backpressures the sender instead of growing frame memory. Connection
-//! *count* is bounded only by the OS (one reader thread per accepted
-//! connection, reaped by `PEER_READ_TIMEOUT` at the latest) — acceptable
-//! for a loopback transport; a non-loopback server needs a connection cap
-//! or reader pool (ROADMAP, with authentication).
+//! 1. the first frame must be a `hello` naming a registered client id —
+//!    the server mints a per-client token ([`crate::transport::session`])
+//!    and replies `welcome`;
+//! 2. every later `upload` frame is verified against the session (token
+//!    match + the payload's claimed client id, peeked without decoding)
+//!    **before** the payload is forwarded to the aggregation loop;
+//! 3. the server pushes each round's encoded `broadcast` frame down the
+//!    same socket, so the downlink genuinely crosses the kernel —
+//!    [`ClientConn::recv_broadcast`] is where a client job picks it up.
 //!
-//! **Trust model.** The listener is an *unauthenticated* local endpoint
-//! (ephemeral 127.0.0.1 port / user-owned socket file): any local process
-//! that can connect can speak the protocol, and a well-formed payload
-//! naming a selected client is indistinguishable from that client's own
-//! upload (the genuine one then drops as a duplicate). That matches the
-//! simulation's threat model — the transport exists to make framing,
-//! partial reads, and backpressure real, not to authenticate clients.
-//! Update authentication (per-client session tokens or MACs in the wire
-//! header) is the documented next step before any non-loopback bind —
-//! tracked in ROADMAP.md.
+//! The client half is [`ClientConn`]: one persistent connection per
+//! registered client, created by [`Transport::register_clients`] and held
+//! for the run — replacing the old connect-per-upload sender, which both
+//! made every upload anonymous and paid a connect per message.
 //!
-//! The bytes on the wire are exactly the bytes [`InProcess`] would have
-//! carried — the integration suite pins the aggregate bitwise identical
-//! across all three transports.
+//! **Malformed and spoofing peers cannot take the round down.** A
+//! connection that sends a bad magic, an unsupported version, an over-cap
+//! length, or disconnects mid-frame is dropped with a warning at its own
+//! session thread; a hello for an unregistered or already-active client,
+//! or an upload whose token/claimed-id fails verification, is dropped the
+//! same way with a typed [`Error::Auth`] logged — in every case before
+//! any codec decode, and without disturbing the rest of the cohort.
+//! Payload *content* is still validated one layer up (codec decode +
+//! cohort matching, on a bounded per-round budget), and the queue between
+//! session threads and that loop is bounded ([`UPLOAD_QUEUE_SLOTS`]), so
+//! a flood of framing-valid garbage backpressures the sender instead of
+//! growing server memory. Connection *count* is bounded only by the OS —
+//! acceptable for a loopback transport; a non-loopback server needs a
+//! connection cap or reader pool (ROADMAP).
+//!
+//! **Trust model.** The session token bounds *blind* spoofing: a local
+//! process that merely knows the port can no longer forge a selected
+//! client's upload (the pre-refactor hole). It does not bound an observer
+//! — the token crosses the loopback in the clear, so a peer that can read
+//! the traffic could replay it, and registration itself is first-come
+//! within the (brief) `register_clients` window. Upgrading the credential
+//! to a keyed MAC over the payload is the documented next step before any
+//! non-loopback bind — tracked in ROADMAP.md.
+//!
+//! The payload bytes on the wire are exactly the bytes [`InProcess`]
+//! would have carried, in both directions — the integration suite pins
+//! the aggregate bitwise identical across all three transports.
 //!
 //! [`InProcess`]: crate::transport::link::InProcess
 
-use std::io::Write;
+use std::collections::HashMap;
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::transport::frame::{pump_frames, write_frame};
-use crate::transport::link::{poll_channel, recv_deadline, Transport, TransportKind, UploadSink};
+use crate::transport::codec::peek_client;
+use crate::transport::frame::{write_frame, Frame, FrameKind, FrameStream, NO_TOKEN};
+use crate::transport::link::{
+    poll_channel, recv_deadline, DownlinkSource, Transport, TransportKind, UploadSink,
+};
+use crate::transport::session::{hello_payload, validate_upload, Session, SessionTable};
 use crate::util::error::{Error, Result};
 
 #[cfg(unix)]
@@ -71,11 +88,10 @@ impl std::fmt::Display for WireAddr {
     }
 }
 
-/// Read timeout on accepted connections: a peer that connects and stalls
-/// forever must not pin a reader thread for the process lifetime.
-const PEER_READ_TIMEOUT: Duration = Duration::from_secs(120);
+/// How long a connecting client waits for the `welcome` reply.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// Bound on queued-but-unconsumed uploads. Reader threads block (and the
+/// Bound on queued-but-unconsumed uploads. Session threads block (and the
 /// peer's writes stall — natural backpressure) once this many frames sit
 /// undrained, so a framing-valid flood cannot grow server memory without
 /// limit; per-frame size is separately capped by the frame layer.
@@ -84,70 +100,287 @@ const UPLOAD_QUEUE_SLOTS: usize = 64;
 /// Uniquifier for unix socket paths within one process.
 static UDS_COUNTER: AtomicU64 = AtomicU64::new(0);
 
-/// Open one client connection and ship one framed payload.
-pub fn send_payload(addr: &WireAddr, payload: &[u8]) -> Result<()> {
-    match addr {
-        WireAddr::Tcp(a) => {
-            let mut stream = TcpStream::connect(a)
-                .map_err(|e| Error::transport(format!("connect {addr}: {e}")))?;
-            write_frame(&mut stream, payload)?;
-            stream.flush()?;
+/// One duplex byte stream, TCP or unix-domain.
+#[derive(Debug)]
+pub enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn connect(addr: &WireAddr) -> Result<Stream> {
+        match addr {
+            WireAddr::Tcp(a) => Ok(Stream::Tcp(TcpStream::connect(a).map_err(|e| {
+                Error::transport(format!("connect {addr}: {e}"))
+            })?)),
+            WireAddr::Uds(path) => {
+                #[cfg(unix)]
+                {
+                    Ok(Stream::Unix(UnixStream::connect(path).map_err(|e| {
+                        Error::transport(format!("connect {addr}: {e}"))
+                    })?))
+                }
+                #[cfg(not(unix))]
+                {
+                    let _ = path;
+                    Err(Error::transport(
+                        "unix-domain sockets are unsupported on this platform",
+                    ))
+                }
+            }
         }
-        WireAddr::Uds(path) => {
+    }
+
+    fn try_clone(&self) -> Result<Stream> {
+        match self {
+            Stream::Tcp(s) => Ok(Stream::Tcp(
+                s.try_clone().map_err(|e| Error::transport(format!("clone stream: {e}")))?,
+            )),
             #[cfg(unix)]
-            {
-                let mut stream = UnixStream::connect(path)
-                    .map_err(|e| Error::transport(format!("connect {addr}: {e}")))?;
-                write_frame(&mut stream, payload)?;
-                stream.flush()?;
+            Stream::Unix(s) => Ok(Stream::Unix(
+                s.try_clone().map_err(|e| Error::transport(format!("clone stream: {e}")))?,
+            )),
+        }
+    }
+
+    fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(timeout),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(timeout),
+        }
+        .map_err(|e| Error::transport(format!("set read timeout: {e}")))
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// The client half of one persistent duplex session: holds the socket and
+/// the token the server issued at registration. One exists per registered
+/// client for the lifetime of the run; a client job locks it to receive
+/// the round's broadcast and again to push its upload — the same kernel
+/// socket carries both directions.
+pub struct ClientConn {
+    client: u32,
+    token: u64,
+    io: Mutex<(Stream, FrameStream)>,
+}
+
+impl ClientConn {
+    /// Connect and run the registration handshake: `hello(client)` out,
+    /// `welcome(token)` back. Fails (typed) if the server refuses the
+    /// registration — unregistered id, duplicate session — or the reply
+    /// does not arrive within [`HANDSHAKE_TIMEOUT`].
+    pub fn connect(addr: &WireAddr, client: u32) -> Result<ClientConn> {
+        let mut stream = Stream::connect(addr)?;
+        write_frame(&mut stream, FrameKind::Hello, NO_TOKEN, &hello_payload(client))?;
+        stream.flush()?;
+        stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+        let mut frames = FrameStream::new();
+        let welcome = frames.next(&mut stream)?.ok_or_else(|| {
+            Error::auth(format!(
+                "server closed the connection instead of welcoming client {client} \
+                 (registration refused?)"
+            ))
+        })?;
+        if welcome.kind != FrameKind::Welcome {
+            return Err(Error::auth(format!(
+                "client {client} expected a welcome, got {:?}",
+                welcome.kind
+            )));
+        }
+        if welcome.token == NO_TOKEN {
+            return Err(Error::auth(format!("server issued client {client} an empty token")));
+        }
+        Ok(ClientConn {
+            client,
+            token: welcome.token,
+            io: Mutex::new((stream, frames)),
+        })
+    }
+
+    /// The registered client id this session belongs to.
+    pub fn client(&self) -> u32 {
+        self.client
+    }
+
+    /// Ship one encoded update, stamped with the session token.
+    pub fn upload(&self, payload: &[u8]) -> Result<()> {
+        let mut io = self.io.lock().map_err(|_| Error::transport("client conn poisoned"))?;
+        write_frame(&mut io.0, FrameKind::Upload, self.token, payload)?;
+        io.0.flush()?;
+        Ok(())
+    }
+
+    /// Block until the next `broadcast` frame addressed to this session
+    /// arrives (at most `timeout`), and hand back its payload. A frame
+    /// whose token is not this session's is a typed [`Error::Auth`].
+    pub fn recv_broadcast(&self, timeout: Duration) -> Result<Vec<u8>> {
+        let mut io = self.io.lock().map_err(|_| Error::transport("client conn poisoned"))?;
+        io.0.set_read_timeout(Some(timeout))?;
+        let (stream, frames) = &mut *io;
+        let frame = frames.expect_next(stream)?;
+        if frame.kind != FrameKind::Broadcast {
+            return Err(Error::transport(format!(
+                "client {} expected a broadcast, got {:?}",
+                self.client, frame.kind
+            )));
+        }
+        if frame.token != self.token {
+            return Err(Error::auth(format!(
+                "broadcast token does not match client {}'s session",
+                self.client
+            )));
+        }
+        Ok(frame.payload)
+    }
+}
+
+/// Server-side record of one live session: the token it speaks under and
+/// the write half of its socket (for downlink pushes).
+struct Peer {
+    token: u64,
+    writer: Stream,
+}
+
+type Peers = Arc<Mutex<HashMap<u32, Peer>>>;
+
+/// Run one accepted connection as a session: handshake, then verify and
+/// forward uploads until disconnect. Every rejection path logs and drops
+/// *this* connection only.
+fn serve_conn(
+    peer_name: &str,
+    mut stream: Stream,
+    sessions: &Arc<Mutex<SessionTable>>,
+    peers: &Peers,
+    tx: &SyncSender<Vec<u8>>,
+) {
+    let mut frames = FrameStream::new();
+    // --- handshake (bounded: a peer that connects and stalls before
+    // registering must not pin this thread forever) ---
+    let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+    let hello = match frames.next(&mut stream) {
+        Ok(Some(f)) => f,
+        // A clean immediate close (e.g. the shutdown wake-up poke) is not
+        // worth a log line.
+        Ok(None) => return,
+        Err(e) => {
+            log::warn!("transport: dropping malformed peer {peer_name}: {e}");
+            return;
+        }
+    };
+    let session: Session = {
+        let Ok(mut table) = sessions.lock() else { return };
+        match table.handshake(&hello) {
+            Ok(s) => s,
+            Err(e) => {
+                log::warn!("transport: refusing peer {peer_name}: {e}");
+                return;
             }
-            #[cfg(not(unix))]
-            {
-                let _ = path;
-                return Err(Error::transport(
-                    "unix-domain sockets are unsupported on this platform",
-                ));
+        }
+    };
+    let cleanup = |sessions: &Arc<Mutex<SessionTable>>, peers: &Peers| {
+        if let Ok(mut table) = sessions.lock() {
+            table.end(session);
+        }
+        if let Ok(mut map) = peers.lock() {
+            // only evict our own entry — a successor session may have
+            // replaced it already
+            if map.get(&session.client).map(|p| p.token) == Some(session.token) {
+                map.remove(&session.client);
+            }
+        }
+    };
+    let writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            log::warn!("transport: peer {peer_name}: {e}");
+            cleanup(sessions, peers);
+            return;
+        }
+    };
+    if let Ok(mut map) = peers.lock() {
+        map.insert(session.client, Peer { token: session.token, writer });
+    }
+    // The peers entry must exist before the welcome goes out: the moment
+    // the client reads it, registration returns and the server may push a
+    // downlink.
+    if let Err(e) = write_frame(&mut stream, FrameKind::Welcome, session.token, &[])
+        .and_then(|_| stream.flush().map_err(Into::into))
+    {
+        log::warn!("transport: peer {peer_name}: welcome failed: {e}");
+        cleanup(sessions, peers);
+        return;
+    }
+    // --- session loop: verified uploads only. A registered session may
+    // sit idle for many rounds (not every client is sampled every round),
+    // so reads block without a timeout from here on; EOF is the
+    // disconnect signal. ---
+    let _ = stream.set_read_timeout(None);
+    loop {
+        match frames.next(&mut stream) {
+            Ok(Some(frame)) => {
+                if let Err(e) = validate_upload(&frame, session) {
+                    log::warn!(
+                        "transport: rejecting spoofed upload from peer {peer_name} \
+                         (client {}): {e}",
+                        session.client
+                    );
+                    break;
+                }
+                // Receiver gone = server shut down mid-drain; nothing to do.
+                let _ = tx.send(frame.payload);
+            }
+            Ok(None) => break, // clean disconnect
+            Err(e) => {
+                log::warn!("transport: dropping malformed peer {peer_name}: {e}");
+                break;
             }
         }
     }
-    Ok(())
-}
-
-/// Client half of [`Loopback`]: connect-per-upload framed sender.
-pub struct SocketSink {
-    addr: WireAddr,
-}
-
-impl UploadSink for SocketSink {
-    fn send(&self, payload: Vec<u8>) -> Result<()> {
-        send_payload(&self.addr, &payload)
-    }
-}
-
-/// Per-connection reader: pump frames into the server channel until EOF,
-/// dropping the connection (with a log line) on the first framing error.
-fn serve_conn<R: std::io::Read>(peer: &str, conn: &mut R, tx: &SyncSender<Vec<u8>>) {
-    let ok = pump_frames(conn, |payload| {
-        // Receiver gone = server shut down mid-drain; nothing to do.
-        let _ = tx.send(payload);
-    });
-    if let Err(e) = ok {
-        log::warn!("transport: dropping malformed peer {peer}: {e}");
-    }
+    cleanup(sessions, peers);
 }
 
 /// Shared accept loop for both listener flavors: `accept` blocks for the
-/// next connection (already read-timeout-armed) or errors; each accepted
-/// stream gets its own reader thread. Exits once the shutdown flag is
-/// observed after a wake-up connection (or an accept error).
-fn spawn_accept_loop<S, A>(
+/// next connection or errors; each accepted stream gets its own session
+/// thread. Exits once the shutdown flag is observed after a wake-up
+/// connection (or an accept error).
+fn spawn_accept_loop<A>(
     mut accept: A,
+    sessions: Arc<Mutex<SessionTable>>,
+    peers: Peers,
     tx: SyncSender<Vec<u8>>,
     shutdown: Arc<AtomicBool>,
 ) -> JoinHandle<()>
 where
-    S: std::io::Read + Send + 'static,
-    A: FnMut() -> std::io::Result<(S, String)> + Send + 'static,
+    A: FnMut() -> std::io::Result<(Stream, String)> + Send + 'static,
 {
     std::thread::spawn(move || loop {
         match accept() {
@@ -155,11 +388,10 @@ where
                 if shutdown.load(Ordering::SeqCst) {
                     break;
                 }
+                let sessions = Arc::clone(&sessions);
+                let peers = Arc::clone(&peers);
                 let tx = tx.clone();
-                std::thread::spawn(move || {
-                    let mut stream = stream;
-                    serve_conn(&peer, &mut stream, &tx);
-                });
+                std::thread::spawn(move || serve_conn(&peer, stream, &sessions, &peers, &tx));
             }
             Err(e) => {
                 if shutdown.load(Ordering::SeqCst) {
@@ -174,9 +406,97 @@ where
     })
 }
 
+/// Dedicated downlink writer: drains (client, payload) sends and writes
+/// each as a `broadcast` frame on that client's session. A write that
+/// blocks on a full kernel buffer stalls only this thread — the server's
+/// round loop keeps draining uploads, which is what eventually frees the
+/// blocked reader and the buffer (no deadlock by construction).
+///
+/// Failures here are logged, not returned: there is no caller to return
+/// them to. The round still fails *fast*, client-side — a session this
+/// thread cannot write to is one `serve_conn` has torn down, which closed
+/// the socket, so the waiting client job's `recv_broadcast` sees EOF (a
+/// typed error) immediately and the job error surfaces through the pool
+/// within one drain poll tick.
+fn spawn_downlink_writer(peers: Peers, rx: Receiver<(u32, Arc<Vec<u8>>)>) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        for (client, payload) in rx {
+            let target = peers
+                .lock()
+                .ok()
+                .and_then(|map| {
+                    map.get(&client).map(|p| (p.writer.try_clone(), p.token))
+                });
+            match target {
+                Some((Ok(mut writer), token)) => {
+                    if let Err(e) = write_frame(&mut writer, FrameKind::Broadcast, token, &payload)
+                        .and_then(|_| writer.flush().map_err(Into::into))
+                    {
+                        log::warn!("transport: downlink to client {client} failed: {e}");
+                    }
+                }
+                Some((Err(e), _)) => {
+                    log::warn!("transport: downlink to client {client} failed: {e}");
+                }
+                None => {
+                    log::warn!("transport: downlink to client {client} with no live session");
+                }
+            }
+        }
+    })
+}
+
+/// Upload sink over the persistent sessions: routes each payload to its
+/// client's connection by the claimed sender id (bytes the session layer
+/// re-verifies server-side against the connection's token).
+struct SocketSink {
+    conns: Arc<Mutex<HashMap<u32, Arc<ClientConn>>>>,
+}
+
+impl UploadSink for SocketSink {
+    fn send(&self, payload: Vec<u8>) -> Result<()> {
+        let client = peek_client(&payload)
+            .ok_or_else(|| Error::invalid("upload payload too short to name a client"))?;
+        let conn = self
+            .conns
+            .lock()
+            .map_err(|_| Error::transport("socket sink poisoned"))?
+            .get(&client)
+            .cloned()
+            .ok_or_else(|| {
+                Error::invalid(format!("client {client} has no registered session"))
+            })?;
+        conn.upload(&payload)
+    }
+}
+
+/// Downlink handle over the persistent sessions: a client job blocks on
+/// its own connection for the round's broadcast frame.
+struct SocketDownlink {
+    conns: Arc<Mutex<HashMap<u32, Arc<ClientConn>>>>,
+}
+
+impl DownlinkSource for SocketDownlink {
+    fn recv(&self, client: u32, timeout: Duration) -> Result<Arc<Vec<u8>>> {
+        let conn = self
+            .conns
+            .lock()
+            .map_err(|_| Error::transport("socket downlink poisoned"))?
+            .get(&client)
+            .cloned()
+            .ok_or_else(|| {
+                Error::invalid(format!("client {client} has no registered session"))
+            })?;
+        // Bytes come off this client's own wire, so the Arc wraps a fresh
+        // read — sharing happens transport-side only where it is real
+        // (the in-process mailboxes).
+        conn.recv_broadcast(timeout).map(Arc::new)
+    }
+}
+
 /// Socket-backed [`Transport`]: framed TCP on 127.0.0.1 or a unix-domain
 /// socket in the temp dir. Binding picks an ephemeral port / unique path;
-/// [`Loopback::addr`] is what clients (the [`SocketSink`]) connect to.
+/// [`Loopback::addr`] is what clients connect to.
 pub struct Loopback {
     addr: WireAddr,
     rx: Receiver<Vec<u8>>,
@@ -184,6 +504,12 @@ pub struct Loopback {
     shutdown: Arc<AtomicBool>,
     timeout: Duration,
     kind_label: &'static str,
+    sessions: Arc<Mutex<SessionTable>>,
+    peers: Peers,
+    /// Client halves of the persistent sessions, by client id.
+    conns: Arc<Mutex<HashMap<u32, Arc<ClientConn>>>>,
+    dl_tx: Option<Sender<(u32, Arc<Vec<u8>>)>>,
+    dl_writer: Option<JoinHandle<()>>,
 }
 
 impl Loopback {
@@ -199,16 +525,25 @@ impl Loopback {
         }
     }
 
-    /// Shared tail of both bind flavors: queue, shutdown flag, accept
-    /// thread, struct assembly.
-    fn from_accept<S, A>(accept: A, addr: WireAddr, kind_label: &'static str) -> Loopback
+    /// Shared tail of both bind flavors: queues, session table, accept and
+    /// downlink-writer threads, struct assembly.
+    fn from_accept<A>(accept: A, addr: WireAddr, kind_label: &'static str) -> Loopback
     where
-        S: std::io::Read + Send + 'static,
-        A: FnMut() -> std::io::Result<(S, String)> + Send + 'static,
+        A: FnMut() -> std::io::Result<(Stream, String)> + Send + 'static,
     {
         let (tx, rx) = sync_channel(UPLOAD_QUEUE_SLOTS);
         let shutdown = Arc::new(AtomicBool::new(false));
-        let accept = spawn_accept_loop(accept, tx, Arc::clone(&shutdown));
+        let sessions = Arc::new(Mutex::new(SessionTable::new()));
+        let peers: Peers = Arc::new(Mutex::new(HashMap::new()));
+        let accept = spawn_accept_loop(
+            accept,
+            Arc::clone(&sessions),
+            Arc::clone(&peers),
+            tx,
+            Arc::clone(&shutdown),
+        );
+        let (dl_tx, dl_rx) = channel();
+        let dl_writer = spawn_downlink_writer(Arc::clone(&peers), dl_rx);
         Loopback {
             addr,
             rx,
@@ -216,6 +551,11 @@ impl Loopback {
             shutdown,
             timeout: crate::transport::link::DEFAULT_UPLOAD_TIMEOUT,
             kind_label,
+            sessions,
+            peers,
+            conns: Arc::new(Mutex::new(HashMap::new())),
+            dl_tx: Some(dl_tx),
+            dl_writer: Some(dl_writer),
         }
     }
 
@@ -231,8 +571,7 @@ impl Loopback {
         Ok(Loopback::from_accept(
             move || {
                 let (stream, peer) = listener.accept()?;
-                let _ = stream.set_read_timeout(Some(PEER_READ_TIMEOUT));
-                Ok((stream, peer.to_string()))
+                Ok((Stream::Tcp(stream), peer.to_string()))
             },
             addr,
             "tcp",
@@ -254,8 +593,7 @@ impl Loopback {
             Ok(Loopback::from_accept(
                 move || {
                     let (stream, _) = listener.accept()?;
-                    let _ = stream.set_read_timeout(Some(PEER_READ_TIMEOUT));
-                    Ok((stream, "uds-peer".to_string()))
+                    Ok((Stream::Unix(stream), "uds-peer".to_string()))
                 },
                 WireAddr::Uds(path),
                 "uds",
@@ -278,6 +616,26 @@ impl Loopback {
     pub fn set_timeout(&mut self, timeout: Duration) {
         self.timeout = timeout;
     }
+
+    /// A registered client's persistent session, if any — test and bench
+    /// access to the raw connection (e.g. to measure per-upload cost or
+    /// craft a cross-client spoof attempt against the server's verifier).
+    pub fn client_conn(&self, client: u32) -> Option<Arc<ClientConn>> {
+        self.conns.lock().ok()?.get(&client).cloned()
+    }
+
+    /// Open the registration window for `clients` **without** opening
+    /// their connections — for tests and benches that drive raw
+    /// [`ClientConn`]s (e.g. the session-per-upload fan-in measurement).
+    /// Production callers use [`Transport::register_clients`], which both
+    /// allows and connects.
+    pub fn allow_clients(&self, clients: &[u32]) -> Result<()> {
+        self.sessions
+            .lock()
+            .map_err(|_| Error::transport("session table poisoned"))?
+            .allow(clients);
+        Ok(())
+    }
 }
 
 impl Transport for Loopback {
@@ -287,13 +645,57 @@ impl Transport for Loopback {
 
     fn accepts_foreign_peers(&self) -> bool {
         // An open local endpoint: any process that can connect can frame a
-        // payload, so invalid ones are dropped as noise, not bugs.
+        // payload (sessions bound who can *upload*, not who can connect),
+        // so an invalid payload that somehow clears the session layer is
+        // dropped as noise, not treated as an internal bug.
         true
+    }
+
+    fn register_clients(&mut self, clients: &[u32]) -> Result<()> {
+        self.sessions
+            .lock()
+            .map_err(|_| Error::transport("session table poisoned"))?
+            .allow(clients);
+        let mut conns = self
+            .conns
+            .lock()
+            .map_err(|_| Error::transport("socket conns poisoned"))?;
+        for &c in clients {
+            if conns.contains_key(&c) {
+                continue;
+            }
+            conns.insert(c, Arc::new(ClientConn::connect(&self.addr, c)?));
+        }
+        Ok(())
     }
 
     fn sink(&self) -> Arc<dyn UploadSink> {
         Arc::new(SocketSink {
-            addr: self.addr.clone(),
+            conns: Arc::clone(&self.conns),
+        })
+    }
+
+    fn send_downlink(&mut self, client: u32, payload: Arc<Vec<u8>>) -> Result<()> {
+        if !self
+            .conns
+            .lock()
+            .map_err(|_| Error::transport("socket conns poisoned"))?
+            .contains_key(&client)
+        {
+            return Err(Error::invalid(format!(
+                "downlink to client {client}, which was never registered"
+            )));
+        }
+        self.dl_tx
+            .as_ref()
+            .expect("downlink writer alive while the transport is")
+            .send((client, payload))
+            .map_err(|_| Error::transport("downlink writer gone"))
+    }
+
+    fn downlink(&self) -> Arc<dyn DownlinkSource> {
+        Arc::new(SocketDownlink {
+            conns: Arc::clone(&self.conns),
         })
     }
 
@@ -322,10 +724,23 @@ fn wake_listener(addr: &WireAddr) -> bool {
 
 impl Drop for Loopback {
     fn drop(&mut self) {
+        // 1) Close the client halves first: session threads observe EOF
+        //    and exit, and any downlink write blocked on a dead client's
+        //    full buffer fails instead of hanging.
+        if let Ok(mut conns) = self.conns.lock() {
+            conns.clear();
+        }
+        // 2) Retire the downlink writer (its channel closes when the
+        //    sender drops).
+        drop(self.dl_tx.take());
+        if let Some(h) = self.dl_writer.take() {
+            let _ = h.join();
+        }
+        // 3) Stop accepting. Only join the accept loop when the wake-up
+        //    connection landed — otherwise accept may never return and the
+        //    join would hang; the flagged thread is left to die with the
+        //    process instead.
         self.shutdown.store(true, Ordering::SeqCst);
-        // Only join the accept loop when the wake-up connection landed —
-        // otherwise accept may never return and the join would hang; the
-        // flagged thread is left to die with the process instead.
         if wake_listener(&self.addr) {
             if let Some(h) = self.accept.take() {
                 let _ = h.join();

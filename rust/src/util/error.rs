@@ -26,6 +26,11 @@ pub enum Error {
     /// Wire transport failure: malformed frame, oversized declared length,
     /// mid-frame disconnect, socket setup/teardown, or upload timeout.
     Transport(String),
+    /// Session authentication failure: a hello for an unregistered or
+    /// already-active client, a missing/wrong session token on an upload,
+    /// or an upload naming a client other than its session's. Always
+    /// raised *before* any payload decode.
+    Auth(String),
 }
 
 impl fmt::Display for Error {
@@ -37,6 +42,7 @@ impl fmt::Display for Error {
             Error::Invalid(m) => write!(f, "invalid: {m}"),
             Error::Engine(m) => write!(f, "engine error: {m}"),
             Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Auth(m) => write!(f, "auth error: {m}"),
         }
     }
 }
@@ -76,6 +82,11 @@ impl Error {
     /// Shorthand for a transport error.
     pub fn transport(msg: impl Into<String>) -> Self {
         Error::Transport(msg.into())
+    }
+
+    /// Shorthand for a session-authentication error.
+    pub fn auth(msg: impl Into<String>) -> Self {
+        Error::Auth(msg.into())
     }
 }
 

@@ -1,28 +1,39 @@
-//! Loopback socket transport integration tests.
+//! Loopback socket transport integration tests: full-duplex authenticated
+//! sessions.
 //!
 //! The acceptance bar: one federated round over real sockets (TCP and
-//! UDS) must be **bitwise identical** to the in-process transport — same
-//! aggregate, same byte accounting — and malformed peers must be rejected
-//! with typed errors without disturbing the cohort.
+//! UDS) — **downlink broadcast and uploads both on the wire** — must be
+//! bitwise identical to the in-process transport (same aggregate, same
+//! byte accounting, for both mask targets across all six encodings), and
+//! a spoofed upload with a missing/wrong session token must be rejected
+//! before decode with the cohort surviving.
 //!
 //! Real sockets are not available in every sandbox, so every test here is
 //! gated on `FEDMASK_SOCKET_TESTS=1` (CI sets it; offline sandboxes skip
 //! cleanly). The full-round tests additionally need the PJRT artifacts and
-//! self-skip without them, exactly like `fl_integration.rs`.
+//! self-skip without them, exactly like `fl_integration.rs`; the
+//! engine-free `RoundDriver` cycles below need no artifacts at all.
 
+use std::io::Write as _;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::time::Duration;
 
 use fedmask::config::experiment::{AggregatorKind, ExperimentConfig};
-use fedmask::fl::aggregate::make_aggregator;
-use fedmask::fl::aggregate::{Contribution, SparseContribution};
+use fedmask::fl::aggregate::{make_aggregator, Contribution, SparseContribution};
+use fedmask::fl::client::receive_broadcast;
+use fedmask::fl::driver::{JobMeta, RoundDriver};
 use fedmask::fl::masking::{MaskPolicy, MaskTarget};
 use fedmask::fl::server::Server;
 use fedmask::runtime::manifest::{LayerInfo, Manifest};
-use fedmask::transport::codec::{decode_update, encode_update, DecodedBody, Encoding};
-use fedmask::transport::frame::{frame_bytes, FRAME_HEADER_BYTES, FRAME_MAGIC, FRAME_VERSION};
-use fedmask::transport::link::{Simulated, Transport, TransportKind, UploadSink};
+use fedmask::sim::availability::AvailabilityModel;
+use fedmask::transport::codec::{decode_update, encode_update, peek_client, DecodedBody, Encoding};
+use fedmask::transport::frame::{
+    frame_bytes, FrameKind, FRAME_HEADER_BYTES, FRAME_MAGIC, FRAME_VERSION,
+};
+use fedmask::transport::link::{Simulated, Transport, TransportKind};
 use fedmask::transport::network::NetworkModel;
-use fedmask::transport::socket::{send_payload, Loopback, WireAddr};
+use fedmask::transport::socket::{ClientConn, Loopback, WireAddr};
 use fedmask::util::prop::Gen;
 
 /// Socket tests only run when explicitly enabled (stock CI runners have
@@ -104,23 +115,25 @@ fn fold_payloads(
     agg.finish().unwrap()
 }
 
-/// Ship `payloads` through a bound loopback transport from client threads
-/// in deliberately scrambled completion order; return them in arrival
-/// order.
+/// Register the payloads' senders, then ship each payload through its
+/// client's persistent authenticated session from client threads in
+/// deliberately scrambled completion order; return them in arrival order.
 fn ship_through(server: &mut Loopback, payloads: &[Vec<u8>]) -> Vec<Vec<u8>> {
     server.set_timeout(Duration::from_secs(30));
-    let addr = server.addr().clone();
+    let clients: Vec<u32> = payloads.iter().map(|p| peek_client(p).unwrap()).collect();
+    server.register_clients(&clients).unwrap();
+    let sink = server.sink();
     let handles: Vec<_> = payloads
         .iter()
         .enumerate()
         .map(|(i, p)| {
-            let addr = addr.clone();
+            let sink = Arc::clone(&sink);
             let p = p.clone();
             let delay = Duration::from_millis(((payloads.len() - i) * 15) as u64);
             std::thread::spawn(move || {
                 // reverse-staggered: client 0 lands last
                 std::thread::sleep(delay);
-                send_payload(&addr, &p).unwrap();
+                sink.send(p).unwrap();
             })
         })
         .collect();
@@ -131,10 +144,10 @@ fn ship_through(server: &mut Loopback, payloads: &[Vec<u8>]) -> Vec<Vec<u8>> {
     got
 }
 
-/// Payloads that crossed a real socket are bitwise identical to what was
-/// sent, and the aggregate folded from them matches the direct in-process
-/// fold exactly — for both mask targets, over TCP and UDS, with clients
-/// completing out of order.
+/// Payloads that crossed a real socket (through the per-client sessions)
+/// are bitwise identical to what was sent, and the aggregate folded from
+/// them matches the direct in-process fold exactly — for both mask
+/// targets, over TCP and UDS, with clients completing out of order.
 #[test]
 fn loopback_payloads_and_aggregate_are_bitwise_identical_to_in_process() {
     if !socket_tests_enabled() {
@@ -182,8 +195,9 @@ fn loopback_payloads_and_aggregate_are_bitwise_identical_to_in_process() {
 }
 
 /// Adversarial peers — bad magic, unsupported version, over-cap length,
-/// truncated body / mid-frame disconnect — are dropped at their own
-/// connection; the cohort's uploads still arrive intact.
+/// truncated body / mid-frame disconnect, and a session-less upload — are
+/// dropped at their own connection; the cohort's authenticated uploads
+/// still arrive intact.
 #[test]
 fn server_survives_malformed_peers_while_folding_the_cohort() {
     if !socket_tests_enabled() {
@@ -207,17 +221,17 @@ fn server_survives_malformed_peers_while_folding_the_cohort() {
 
     // malformed peer 1: garbage magic
     {
-        use std::io::Write;
         let mut s = std::net::TcpStream::connect(addr).unwrap();
         s.write_all(&[0xde, 0xad, 0xbe, 0xef, 0, 0, 0, 0, 1, 2, 3]).unwrap();
     }
-    // malformed peer 2: valid header, then disconnect mid-body
+    // malformed peer 2: valid upload header, then disconnect mid-body
+    // (never handshook, so even a complete frame would be rejected)
     {
-        use std::io::Write;
         let mut header = vec![0u8; FRAME_HEADER_BYTES];
         header[..2].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
         header[2] = FRAME_VERSION;
-        header[4..8].copy_from_slice(&1000u32.to_le_bytes());
+        header[3] = FrameKind::Upload as u8;
+        header[12..16].copy_from_slice(&1000u32.to_le_bytes());
         let mut s = std::net::TcpStream::connect(addr).unwrap();
         s.write_all(&header).unwrap();
         s.write_all(&[7u8; 12]).unwrap();
@@ -225,21 +239,23 @@ fn server_survives_malformed_peers_while_folding_the_cohort() {
     }
     // malformed peer 3: declared length over the cap
     {
-        use std::io::Write;
         let mut header = vec![0u8; FRAME_HEADER_BYTES];
         header[..2].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
         header[2] = FRAME_VERSION;
-        header[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        header[3] = FrameKind::Upload as u8;
+        header[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
         let mut s = std::net::TcpStream::connect(addr).unwrap();
         s.write_all(&header).unwrap();
     }
-    // malformed peer 4: wrong frame version
+    // malformed peer 4: wrong frame version (the dead v1 wire included)
     {
-        use std::io::Write;
-        let mut framed = frame_bytes(b"future payload").unwrap();
-        framed[2] = FRAME_VERSION + 9;
-        let mut s = std::net::TcpStream::connect(addr).unwrap();
-        s.write_all(&framed).unwrap();
+        for bad_version in [FRAME_VERSION + 9, 1] {
+            let mut framed =
+                frame_bytes(FrameKind::Upload, 0, b"future payload").unwrap();
+            framed[2] = bad_version;
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
+            s.write_all(&framed).unwrap();
+        }
     }
 
     // the real cohort uploads after/between the attacks
@@ -256,6 +272,88 @@ fn server_survives_malformed_peers_while_folding_the_cohort() {
     assert!(server.recv().is_err(), "malformed peer bytes leaked into the round");
 }
 
+/// The headline auth regression: a **well-formed spoofed upload** — valid
+/// frame, valid codec payload naming a cohort client, correct round —
+/// with a missing or wrong session token is rejected before decode and
+/// never reaches the round; the genuine client's upload still folds.
+#[test]
+fn spoofed_uploads_without_a_valid_token_are_rejected_before_the_round() {
+    if !socket_tests_enabled() {
+        return;
+    }
+    let p = 64;
+    let mut g = Gen::new(0x5f00f);
+    let genuine = encode_update(0, 1, 40, &masked_update(&mut g, p, 0.3), Encoding::Auto);
+    let spoof = encode_update(0, 1, 9_999, &vec![9.0f32; p], Encoding::Dense);
+
+    let mut server = Loopback::bind(TransportKind::Tcp).unwrap();
+    server.set_timeout(Duration::from_secs(30));
+    server.register_clients(&[0, 1]).unwrap();
+    let WireAddr::Tcp(addr) = server.addr().clone() else { unreachable!() };
+
+    // attacker 1: no handshake at all, token 0 (the pre-refactor attack —
+    // this exact frame used to be indistinguishable from client 0's own)
+    {
+        let framed = frame_bytes(FrameKind::Upload, 0, &spoof).unwrap();
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(&framed).unwrap();
+    }
+    // attacker 2: no handshake, guessed token
+    {
+        let framed = frame_bytes(FrameKind::Upload, 0xdead_beef_cafe_f00d, &spoof).unwrap();
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(&framed).unwrap();
+    }
+    // attacker 3: tries to *register* as an unregistered id — refused
+    let err = ClientConn::connect(server.addr(), 77).unwrap_err();
+    assert!(err.to_string().contains("refused") || err.to_string().contains("closed"), "{err}");
+    // attacker 4: tries to re-register a live client id — refused
+    // (first-come holds the session)
+    let err = ClientConn::connect(server.addr(), 0).unwrap_err();
+    assert!(err.to_string().contains("refused") || err.to_string().contains("closed"), "{err}");
+
+    // the genuine client 0 upload goes through its authenticated session
+    server.sink().send(genuine.clone()).unwrap();
+    let got = server.recv().unwrap();
+    assert_eq!(got, genuine, "genuine upload must survive the spoof storm");
+
+    // nothing else ever surfaces — all four spoof paths died pre-decode
+    server.set_timeout(Duration::from_millis(300));
+    assert!(server.recv().is_err(), "a spoofed payload leaked into the round");
+}
+
+/// A *valid* session cannot launder another client's upload: client 1's
+/// connection uploading a payload that claims client 0 is rejected at the
+/// session layer (claimed-id check), and the cohort survives.
+#[test]
+fn cross_client_spoof_with_a_valid_session_is_rejected() {
+    if !socket_tests_enabled() {
+        return;
+    }
+    let p = 32;
+    let mut g = Gen::new(0xc105);
+    let genuine = encode_update(0, 2, 17, &masked_update(&mut g, p, 0.4), Encoding::Auto);
+    let cross = encode_update(0, 2, 1_000, &vec![5.0f32; p], Encoding::Dense);
+
+    for kind in [TransportKind::Tcp, TransportKind::Uds] {
+        let mut server = Loopback::bind(kind).unwrap();
+        server.set_timeout(Duration::from_secs(30));
+        server.register_clients(&[0, 1]).unwrap();
+
+        // client 1's own (token-valid) session ships a payload naming
+        // client 0 — the server must kill it on the claimed-id check
+        let conn1 = server.client_conn(1).expect("client 1 registered");
+        conn1.upload(&cross).unwrap();
+
+        // client 0's genuine upload still lands
+        server.sink().send(genuine.clone()).unwrap();
+        assert_eq!(server.recv().unwrap(), genuine, "{kind:?}");
+
+        server.set_timeout(Duration::from_millis(300));
+        assert!(server.recv().is_err(), "{kind:?}: cross-client spoof leaked");
+    }
+}
+
 /// `Simulated` over a real socket orders deliveries by virtual upload
 /// time, not by socket arrival order.
 #[test]
@@ -270,22 +368,164 @@ fn simulated_over_loopback_orders_completions_by_upload_time() {
     };
     let inner = Loopback::bind(TransportKind::Tcp).unwrap();
     let mut t = Simulated::new(Box::new(inner), network.clone());
+    t.register_clients(&[0, 1, 2]).unwrap();
     let sink = t.sink();
     t.begin_round(3);
-    // send big-to-small so socket arrival order opposes upload-time order
-    for bytes in [9000usize, 2500, 40] {
-        sink.send(vec![1u8; bytes]).unwrap();
+    // dense payloads of sharply different sizes; send big-to-small so
+    // socket arrival order opposes upload-time order
+    let sizes_p = [3000usize, 800, 10];
+    let payloads: Vec<Vec<u8>> = sizes_p
+        .iter()
+        .enumerate()
+        .map(|(c, &pp)| encode_update(c as u32, 1, 1, &vec![1.0f32; pp], Encoding::Dense))
+        .collect();
+    for p in &payloads {
+        sink.send(p.clone()).unwrap();
     }
-    let sizes: Vec<usize> = (0..3).map(|_| t.recv().unwrap().len()).collect();
-    assert_eq!(sizes, vec![40, 2500, 9000], "delivery order must follow upload_time");
-    assert!(network.upload_time(40) < network.upload_time(9000));
+    let got: Vec<usize> = (0..3).map(|_| t.recv().unwrap().len()).collect();
+    let mut want: Vec<usize> = payloads.iter().map(Vec::len).collect();
+    want.sort_unstable();
+    assert_eq!(got, want, "delivery order must follow upload_time (ascending size)");
+    assert!(network.upload_time(want[0]) < network.upload_time(want[2]));
 }
 
-/// Acceptance: a full federated round over real TCP and UDS sockets —
-/// PJRT training, masking, encode, frame, kernel socket, decode, fold —
-/// produces a `RoundRecord` stream and final aggregate bitwise identical
-/// to the in-process transport, for both mask targets, with a pool wide
-/// enough that clients complete out of order.
+// ---------------------------------------------------------------------
+// Engine-free full-duplex RoundDriver cycles over real sockets
+// ---------------------------------------------------------------------
+
+fn always_on(seed: u64) -> AvailabilityModel {
+    AvailabilityModel::new(1.0, 0.0, seed)
+}
+
+/// Deterministic fake update derived from the broadcast the client
+/// decoded off the wire — any downlink discrepancy changes the aggregate.
+fn fake_update(global: &[f32], client: usize) -> Vec<f32> {
+    global
+        .iter()
+        .enumerate()
+        .map(|(j, g)| {
+            if j % 4 == client % 4 {
+                g * 0.5 + (client as f32 + 1.0) * 0.125
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Two full sample → broadcast → collect → finalize cycles (the second
+/// exercising the delta-downlink reconstruction) with fake clients on
+/// threads pulling the broadcast off the transport's downlink half and
+/// uploading through their sessions. Returns everything that must be
+/// transport-invariant.
+#[allow(clippy::type_complexity)]
+fn fake_two_rounds(
+    transport: TransportKind,
+    enc: Encoding,
+    target: MaskTarget,
+    p: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, u64, u64, f64) {
+    let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+    cfg.clients = 4;
+    cfg.transport = transport;
+    cfg.encoding = enc;
+    cfg.downlink_delta = true;
+    let cfg = Arc::new(cfg);
+    let mut driver = RoundDriver::new(Arc::clone(&cfg), p).unwrap();
+    driver.set_upload_timeout(Duration::from_secs(30));
+    let layers = one_layer(p);
+
+    let mut run_round = |t: usize, params: &Arc<Vec<f32>>| -> (Vec<f32>, Vec<f32>, f64) {
+        let cohort = driver.sample(&always_on(7), t);
+        assert_eq!(cohort.selected.len(), 4, "static C=1 selects everyone");
+        let wire = driver.broadcast(params, &cohort).unwrap();
+        let sink = driver.sink();
+        let downlink = driver.downlink();
+        let (tx, results) = channel::<(usize, fedmask::Result<JobMeta>)>();
+        let handles: Vec<_> = cohort
+            .selected
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let sink = Arc::clone(&sink);
+                let downlink = Arc::clone(&downlink);
+                let reference = wire.references[i].clone();
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    let global = receive_broadcast(
+                        downlink.as_ref(),
+                        c as u32,
+                        t as u32,
+                        reference.as_deref().map(Vec::as_slice),
+                        Duration::from_secs(30),
+                    )
+                    .unwrap();
+                    let update = fake_update(&global, c);
+                    let nnz = update.iter().filter(|v| **v != 0.0).count();
+                    let payload =
+                        encode_update(c as u32, t as u32, 10 + c as u32, &update, enc);
+                    let bytes = payload.len();
+                    sink.send(payload).unwrap();
+                    tx.send((i, Ok((0.25, nnz, bytes)))).unwrap();
+                })
+            })
+            .collect();
+        drop(tx);
+        let mut agg =
+            make_aggregator(AggregatorKind::FedAvg, target, &wire.params, &layers).unwrap();
+        let collected = driver.collect(&cohort, agg.as_mut(), &results).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        driver.finalize(&collected);
+        (agg.finish().unwrap(), (*wire.params).clone(), wire.recon_err)
+    };
+
+    let params0: Arc<Vec<f32>> = Arc::new((0..p).map(|j| (j as f32 * 0.37).sin()).collect());
+    let (agg1, bcast1, _) = run_round(1, &params0);
+    let params1 = Arc::new(agg1.clone());
+    let (agg2, bcast2, recon2) = run_round(2, &params1);
+    let ledger = driver.ledger();
+    (agg1, bcast1, agg2, bcast2, ledger.downlink_bytes, ledger.uplink_bytes, recon2)
+}
+
+/// Acceptance (engine-free): two full-duplex rounds over persistent TCP
+/// and UDS sessions — broadcast down the wire, uploads back up, delta
+/// downlink on the second round — are **bitwise identical** to the
+/// in-process transport, for every encoding and both mask targets.
+#[test]
+fn full_duplex_driver_rounds_over_sockets_match_in_process_bitwise() {
+    if !socket_tests_enabled() {
+        return;
+    }
+    let p = 32;
+    for &enc in Encoding::ALL {
+        for target in [MaskTarget::Delta, MaskTarget::Weights] {
+            let reference = fake_two_rounds(TransportKind::InProcess, enc, target, p);
+            for kind in [TransportKind::Tcp, TransportKind::Uds] {
+                let got = fake_two_rounds(kind, enc, target, p);
+                assert_eq!(got.0, reference.0, "{enc:?}/{target:?}/{kind:?}: round-1 aggregate");
+                assert_eq!(got.1, reference.1, "{enc:?}/{target:?}/{kind:?}: round-1 broadcast");
+                assert_eq!(got.2, reference.2, "{enc:?}/{target:?}/{kind:?}: round-2 aggregate");
+                assert_eq!(got.3, reference.3, "{enc:?}/{target:?}/{kind:?}: round-2 broadcast");
+                assert_eq!(got.4, reference.4, "{enc:?}/{target:?}/{kind:?}: downlink bytes");
+                assert_eq!(got.5, reference.5, "{enc:?}/{target:?}/{kind:?}: uplink bytes");
+                assert_eq!(
+                    got.6.to_bits(),
+                    reference.6.to_bits(),
+                    "{enc:?}/{target:?}/{kind:?}: recon err"
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance (PJRT): a full federated round over real TCP and UDS
+/// sockets — training, masking, encode, frame, kernel socket in **both
+/// directions**, decode, fold — produces a `RoundRecord` stream and final
+/// aggregate bitwise identical to the in-process transport, for both mask
+/// targets and both downlink modes, with a pool wide enough that clients
+/// complete out of order.
 #[test]
 fn full_round_over_sockets_is_bitwise_identical_to_in_process() {
     if !socket_tests_enabled() {
@@ -293,7 +533,7 @@ fn full_round_over_sockets_is_bitwise_identical_to_in_process() {
     }
     let Some(manifest) = manifest() else { return };
 
-    let run = |transport: TransportKind, target: MaskTarget| {
+    let run = |transport: TransportKind, target: MaskTarget, downlink_delta: bool| {
         let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
         cfg.label = format!("wire-{}", transport.as_str());
         cfg.clients = 4;
@@ -306,46 +546,54 @@ fn full_round_over_sockets_is_bitwise_identical_to_in_process() {
         cfg.masking = MaskPolicy::selective(0.3);
         cfg.mask_target = target;
         cfg.transport = transport;
+        cfg.downlink_delta = downlink_delta;
         Server::new(cfg, &manifest).unwrap().run().unwrap()
     };
 
     for target in [MaskTarget::Delta, MaskTarget::Weights] {
-        let reference = run(TransportKind::InProcess, target);
-        for kind in [TransportKind::Tcp, TransportKind::Uds] {
-            let socketed = run(kind, target);
-            assert_eq!(
-                socketed.final_params, reference.final_params,
-                "{kind:?}/{target:?}: socket transport moved the aggregate"
-            );
-            assert_eq!(socketed.recorder.rounds.len(), reference.recorder.rounds.len());
-            for (a, b) in socketed.recorder.rounds.iter().zip(&reference.recorder.rounds) {
-                assert_eq!(a.round, b.round);
-                assert_eq!(a.clients, b.clients, "{kind:?}/{target:?}");
-                assert_eq!(a.uplink_bytes, b.uplink_bytes, "{kind:?}/{target:?}");
-                assert_eq!(a.downlink_bytes, b.downlink_bytes, "{kind:?}/{target:?}");
+        for downlink_delta in [false, true] {
+            let reference = run(TransportKind::InProcess, target, downlink_delta);
+            for kind in [TransportKind::Tcp, TransportKind::Uds] {
+                let socketed = run(kind, target, downlink_delta);
                 assert_eq!(
-                    a.uplink_units.to_bits(),
-                    b.uplink_units.to_bits(),
-                    "{kind:?}/{target:?}"
+                    socketed.final_params, reference.final_params,
+                    "{kind:?}/{target:?}/dd={downlink_delta}: socket transport moved the aggregate"
                 );
-                assert_eq!(
-                    a.train_loss.to_bits(),
-                    b.train_loss.to_bits(),
-                    "{kind:?}/{target:?}"
-                );
-                assert_eq!(
-                    a.test_accuracy.to_bits(),
-                    b.test_accuracy.to_bits(),
-                    "{kind:?}/{target:?}"
-                );
-                assert_eq!(
-                    a.virtual_time_s.to_bits(),
-                    b.virtual_time_s.to_bits(),
-                    "{kind:?}/{target:?}"
-                );
+                assert_eq!(socketed.recorder.rounds.len(), reference.recorder.rounds.len());
+                for (a, b) in socketed.recorder.rounds.iter().zip(&reference.recorder.rounds) {
+                    assert_eq!(a.round, b.round);
+                    assert_eq!(a.clients, b.clients, "{kind:?}/{target:?}");
+                    assert_eq!(a.uplink_bytes, b.uplink_bytes, "{kind:?}/{target:?}");
+                    assert_eq!(a.downlink_bytes, b.downlink_bytes, "{kind:?}/{target:?}");
+                    assert_eq!(
+                        a.uplink_units.to_bits(),
+                        b.uplink_units.to_bits(),
+                        "{kind:?}/{target:?}"
+                    );
+                    assert_eq!(
+                        a.train_loss.to_bits(),
+                        b.train_loss.to_bits(),
+                        "{kind:?}/{target:?}"
+                    );
+                    assert_eq!(
+                        a.test_accuracy.to_bits(),
+                        b.test_accuracy.to_bits(),
+                        "{kind:?}/{target:?}"
+                    );
+                    assert_eq!(
+                        a.downlink_recon_err.to_bits(),
+                        b.downlink_recon_err.to_bits(),
+                        "{kind:?}/{target:?}/dd={downlink_delta}"
+                    );
+                    assert_eq!(
+                        a.virtual_time_s.to_bits(),
+                        b.virtual_time_s.to_bits(),
+                        "{kind:?}/{target:?}"
+                    );
+                }
+                assert_eq!(socketed.ledger.uplink_bytes, reference.ledger.uplink_bytes);
+                assert_eq!(socketed.ledger.messages, reference.ledger.messages);
             }
-            assert_eq!(socketed.ledger.uplink_bytes, reference.ledger.uplink_bytes);
-            assert_eq!(socketed.ledger.messages, reference.ledger.messages);
         }
     }
 }

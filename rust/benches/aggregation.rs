@@ -273,6 +273,49 @@ fn main() {
         }
     }
 
+    // Sharded tree fold at model-scale P: the server's `agg_shards > 1`
+    // path (shard workers fold their own clients' payloads, root merges
+    // the integer partials bitwise-exactly) against the single-threaded
+    // stream fold, spawn + merge cost included. The transport bench
+    // covers the 1k–10k-client fan-in shape; this pins the model-scale
+    // arithmetic shape.
+    println!("== sharded tree fold vs stream fold (gru P, k=128, gamma=0.1) ==");
+    {
+        let p = 154_768usize;
+        let clients = 128usize;
+        let vecs = sparse_vectors(p, clients, 0.1, 31);
+        let payloads = payloads_of(&vecs);
+        let mut scratch = DecodeScratch::default();
+        let serial = |scratch: &mut DecodeScratch| {
+            let mut agg = StreamingFedAvg::new(p);
+            for payload in &payloads {
+                let view = decode_update_view(payload, scratch).unwrap();
+                fold_view(&mut agg, &view);
+            }
+            Box::new(agg).finish().unwrap()
+        };
+        let sharded = |shards: usize| {
+            let partials: Vec<Box<dyn Aggregator>> = (0..shards)
+                .map(|_| Box::new(StreamingFedAvg::new(p)) as Box<dyn Aggregator>)
+                .collect();
+            let mut tree = fedmask::fl::ShardedAggregator::spawn(partials).unwrap();
+            for (c, payload) in payloads.iter().enumerate() {
+                tree.route(c as u32, payload.clone()).unwrap();
+            }
+            tree.finish().unwrap()
+        };
+        let reference = serial(&mut scratch);
+        for shards in [2usize, 8] {
+            assert_eq!(sharded(shards), reference, "tree merge must be bitwise-exact");
+        }
+        let m = b.run("tree_fold/gru/serial", || serial(&mut scratch));
+        println!("{}", m.report(Some(((p * clients) as f64, "param"))));
+        for shards in [2usize, 8] {
+            let m = b.run(&format!("tree_fold/gru/shards={shards}"), || sharded(shards));
+            println!("{}", m.report(Some(((p * clients) as f64, "param"))));
+        }
+    }
+
     // rule ablation: uniform vs weighted at one size
     let vecs = vectors(51_666, 16, 9);
     let contribs = contribs_of(&vecs);

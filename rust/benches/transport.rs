@@ -1,26 +1,118 @@
 //! Transport bench: codec encode/decode at model sizes across densities
 //! (the wire work per upload), per-encoding byte + latency measurements
-//! (dense / sparse / delta+varint / q8 / q4), plus raw quantizer
-//! throughput. Establishes that transport never dominates a round
-//! (DESIGN.md §6 L3 target), and pits the bulk `chunks_exact` decoder
-//! against the seed's per-element cursor loop (`scalar_decode`, kept here
-//! as the baseline) and the owned decode against the scratch-reusing
-//! borrowed view.
+//! (dense / sparse / delta+varint / q8 / q4), raw quantizer throughput,
+//! the sharded tree fold vs the single-threaded fold at 1k–10k simulated
+//! clients, and — when sockets are enabled — many-client fan-in over the
+//! reactor vs both a session-per-upload shape and a minimal
+//! thread-per-connection baseline server. Establishes that transport
+//! never dominates a round (DESIGN.md §6 L3 target), and pits the bulk
+//! `chunks_exact` decoder against the seed's per-element cursor loop
+//! (`scalar_decode`, kept here as the baseline) and the owned decode
+//! against the scratch-reusing borrowed view.
 //!
 //! Writes BENCH_transport.json at the repo root (the perf trajectory).
 //!
 //! Run: cargo bench --bench transport
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::time::Duration;
 
+use fedmask::fl::aggregate::{Aggregator, Contribution, SparseContribution, StreamingFedAvg};
+use fedmask::fl::ShardedAggregator;
 use fedmask::sim::rng::Rng;
 use fedmask::transport::codec::{
-    decode_update, decode_update_view, encode_update, wire_bytes, DecodeScratch, Encoding,
+    decode_update, decode_update_view, encode_update, peek_client, wire_bytes, BodyView,
+    DecodeScratch, Encoding,
 };
+use fedmask::transport::frame::{write_frame, FrameKind, FrameStream};
 use fedmask::transport::link::{Transport, TransportKind};
 use fedmask::transport::quantize::{dequantize, dequantize4, quantize, quantize4};
 use fedmask::transport::socket::{ClientConn, Loopback, WireAddr};
 use fedmask::util::bench::Bench;
+
+/// Re-establishing a just-closed client id can race the server's EOF
+/// processing (the session is still live until the reactor scans the
+/// close), so fan-in clients retry briefly — as a real reconnecting
+/// client would.
+fn connect_retry(addr: &WireAddr, c: u32) -> ClientConn {
+    for _ in 0..2_000 {
+        match ClientConn::connect(addr, c) {
+            Ok(conn) => return conn,
+            Err(_) => std::thread::sleep(Duration::from_micros(200)),
+        }
+    }
+    panic!("could not establish a session for client {c}")
+}
+
+/// Wave-structured fan-in driver: `workers` client threads stride the id
+/// space, each cycling connect → handshake → upload → disconnect, so at
+/// most `workers` sockets are live at once — a 1k-client fleet fans in
+/// without tripping the default fd rlimit. Returns the running handles;
+/// the caller drains the server concurrently, then joins.
+fn drive_waves(
+    addr: &WireAddr,
+    payloads: &Arc<Vec<Vec<u8>>>,
+    workers: usize,
+) -> Vec<std::thread::JoinHandle<()>> {
+    (0..workers)
+        .map(|w| {
+            let addr = addr.clone();
+            let payloads = Arc::clone(payloads);
+            std::thread::spawn(move || {
+                let mut c = w;
+                while c < payloads.len() {
+                    let conn = connect_retry(&addr, c as u32);
+                    conn.upload(&payloads[c]).unwrap();
+                    drop(conn);
+                    c += workers;
+                }
+            })
+        })
+        .collect()
+}
+
+/// The pre-reactor server shape, kept as an in-bench baseline: blocking
+/// accept loop, one OS thread per accepted connection, hello → welcome →
+/// uploads into a channel. It speaks the real frame grammar (so
+/// `ClientConn` runs against it unchanged) but skips the session table,
+/// token checks, and admission control entirely — every simplification
+/// biases the comparison in its favor, and it still pays a thread spawn
+/// plus stack per connection.
+fn thread_per_conn_server(
+    listener: std::net::TcpListener,
+    uploads: std::sync::mpsc::Sender<Vec<u8>>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        while !stop.load(Ordering::SeqCst) {
+            let Ok((mut stream, _)) = listener.accept() else { break };
+            let uploads = uploads.clone();
+            // detached: each worker exits when its peer disconnects
+            std::thread::spawn(move || {
+                let mut frames = FrameStream::new();
+                match frames.next(&mut stream) {
+                    Ok(Some(f)) if f.kind == FrameKind::Hello => {
+                        if write_frame(&mut stream, FrameKind::Welcome, 1, &[]).is_err() {
+                            return;
+                        }
+                        use std::io::Write as _;
+                        if stream.flush().is_err() {
+                            return;
+                        }
+                    }
+                    _ => return,
+                }
+                while let Ok(Some(f)) = frames.next(&mut stream) {
+                    if f.kind == FrameKind::Upload && uploads.send(f.payload).is_err() {
+                        return;
+                    }
+                }
+            });
+        }
+    })
+}
 
 /// The seed decoder, preserved as a baseline: per-element cursor reads
 /// (`take::<4>`-style) and unconditional densification. Supports the dense
@@ -176,15 +268,6 @@ fn main() {
         // each upload opens (and tears down) its own
         server2.allow_clients(&ids).unwrap();
         let addr = server2.addr().clone();
-        let connect_retry = |addr: &WireAddr, c: u32| -> ClientConn {
-            for _ in 0..500 {
-                match ClientConn::connect(addr, c) {
-                    Ok(conn) => return conn,
-                    Err(_) => std::thread::sleep(Duration::from_micros(200)),
-                }
-            }
-            panic!("could not re-establish a session for client {c}")
-        };
         let m = b.run("fanin64/session_per_upload", || {
             for (c, pl) in payloads.iter().enumerate() {
                 let conn = connect_retry(&addr, c as u32);
@@ -196,8 +279,143 @@ fn main() {
             }
         });
         println!("{}", m.report(Some((n as f64, "upload"))));
+        drop(server);
+        drop(server2);
+
+        // 1k-client fan-in: the reactor vs the thread-per-conn baseline.
+        // The identical wave driver (64 client threads striding the id
+        // space: connect → handshake → upload → disconnect, ≤64 sockets
+        // live at once — fd-limit friendly) runs against both servers;
+        // the main thread drains concurrently so the bounded upload
+        // queue never stalls the reactor. The baseline skips sessions
+        // and admission entirely and is *still* the arm paying a thread
+        // per connection.
+        println!("== 1k-client fan-in: reactor vs thread-per-conn baseline ==");
+        let n_big = 1_000usize;
+        let waves = 64usize;
+        let big_payloads: Arc<Vec<Vec<u8>>> = Arc::new(
+            (0..n_big)
+                .map(|c| {
+                    let params: Vec<f32> = (0..256)
+                        .map(|_| if rng.next_f32() < 0.1 { rng.next_normal() } else { 0.0 })
+                        .collect();
+                    encode_update(c as u32, 1, 100, &params, Encoding::Auto)
+                })
+                .collect(),
+        );
+
+        let mut server = Loopback::bind(TransportKind::Tcp).unwrap();
+        server.set_timeout(Duration::from_secs(60));
+        let ids: Vec<u32> = (0..n_big as u32).collect();
+        server.allow_clients(&ids).unwrap();
+        let addr = server.addr().clone();
+        let m = b.run("fanin1k/reactor", || {
+            let handles = drive_waves(&addr, &big_payloads, waves);
+            for _ in 0..n_big {
+                server.recv().unwrap();
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        println!("{}", m.report(Some((n_big as f64, "upload"))));
+        drop(server);
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let tcp_addr = listener.local_addr().unwrap();
+        let baseline_addr = WireAddr::Tcp(tcp_addr);
+        let (up_tx, up_rx) = channel::<Vec<u8>>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_thread = thread_per_conn_server(listener, up_tx, Arc::clone(&stop));
+        let m = b.run("fanin1k/thread_per_conn", || {
+            let handles = drive_waves(&baseline_addr, &big_payloads, waves);
+            for _ in 0..n_big {
+                up_rx.recv().unwrap();
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        println!("{}", m.report(Some((n_big as f64, "upload"))));
+        stop.store(true, Ordering::SeqCst);
+        // one dummy connect unblocks the baseline's final accept()
+        let _ = std::net::TcpStream::connect(tcp_addr);
+        let _ = accept_thread.join();
     } else {
         println!("== 64-client fan-in skipped (set FEDMASK_SOCKET_TESTS=1 to enable) ==");
+    }
+
+    // Sharded tree aggregation vs the single-threaded fold at fleet-size
+    // fan-in — in memory, no sockets, so this always runs. Each iteration
+    // folds every payload of a 1k/10k-client cohort: the serial arm
+    // decodes inline on one thread (the server's `agg_shards = 1` path);
+    // the sharded arm routes each payload to its shard worker and merges
+    // at the root, with the per-round spawn + join cost included, exactly
+    // as the server pays it. Bitwise equality of the two paths is
+    // asserted once up front.
+    println!("== sharded tree fold vs single fold (simulated 1k–10k fan-in) ==");
+    let p = 1_000usize;
+    for k in [1_000usize, 10_000] {
+        let payloads: Vec<Vec<u8>> = (0..k)
+            .map(|c| {
+                let params: Vec<f32> = (0..p)
+                    .map(|_| if rng.next_f32() < 0.05 { rng.next_normal() } else { 0.0 })
+                    .collect();
+                encode_update(c as u32, 1, 100, &params, Encoding::Auto)
+            })
+            .collect();
+        let serial_fold = |payloads: &[Vec<u8>]| -> Vec<f32> {
+            let mut agg = StreamingFedAvg::new(p);
+            let mut scratch = DecodeScratch::default();
+            for pl in payloads {
+                let u = decode_update_view(pl, &mut scratch).unwrap();
+                match u.body {
+                    BodyView::Dense(d) => agg
+                        .fold(Contribution {
+                            client: u.client as usize,
+                            params: d,
+                            n_samples: u.n_samples,
+                        })
+                        .unwrap(),
+                    BodyView::Sparse { indices, values } => agg
+                        .fold_sparse(SparseContribution {
+                            client: u.client as usize,
+                            p: u.p,
+                            indices,
+                            values,
+                            n_samples: u.n_samples,
+                        })
+                        .unwrap(),
+                }
+            }
+            Box::new(agg).finish().unwrap()
+        };
+        let sharded_fold = |payloads: &[Vec<u8>], shards: usize| -> Vec<f32> {
+            let partials: Vec<Box<dyn Aggregator>> = (0..shards)
+                .map(|_| Box::new(StreamingFedAvg::new(p)) as Box<dyn Aggregator>)
+                .collect();
+            let mut tree = ShardedAggregator::spawn(partials).unwrap();
+            for pl in payloads {
+                tree.route(peek_client(pl).unwrap(), pl.clone()).unwrap();
+            }
+            tree.finish().unwrap()
+        };
+        let reference = serial_fold(&payloads);
+        for shards in [2usize, 8] {
+            assert_eq!(
+                sharded_fold(&payloads, shards),
+                reference,
+                "tree merge must be bitwise-exact ({shards} shards, {k} clients)"
+            );
+        }
+        let m = b.run(&format!("fold/{k}clients/serial"), || serial_fold(&payloads));
+        println!("{}", m.report(Some((k as f64, "upload"))));
+        for shards in [2usize, 8] {
+            let m = b.run(&format!("fold/{k}clients/sharded{shards}"), || {
+                sharded_fold(&payloads, shards)
+            });
+            println!("{}", m.report(Some((k as f64, "upload"))));
+        }
     }
 
     println!("== 8-bit / 4-bit quantization (compression extension) ==");

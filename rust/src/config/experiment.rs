@@ -93,6 +93,20 @@ pub struct ExperimentConfig {
     pub aggregator: AggregatorKind,
     /// Engine pool width.
     pub workers: usize,
+    /// Server drain-loop poll granularity in milliseconds: how long one
+    /// bounded wire wait lasts before the round loop re-checks its worker
+    /// results. Smaller = lower fold latency, more wakeups.
+    pub drain_poll_ms: u64,
+    /// Aggregation shards: 1 (default) folds serially on the round loop;
+    /// > 1 routes undecoded payloads to that many shard-local worker
+    /// folds, merged bitwise-exactly at the root (see `fl::tree`).
+    pub agg_shards: usize,
+    /// Socket-server admission cap: the most simultaneous connections the
+    /// reactor keeps open; over-cap connects are refused by immediate
+    /// close, before any handshake. Sessions persist across rounds, so
+    /// size this to the whole fleet, not one cohort. Ignored by the
+    /// in-process transport.
+    pub max_conns: usize,
 }
 
 impl ExperimentConfig {
@@ -135,6 +149,9 @@ impl ExperimentConfig {
             downlink_delta: false,
             aggregator: AggregatorKind::FedAvg,
             workers: default_workers(),
+            drain_poll_ms: 25,
+            agg_shards: 1,
+            max_conns: 4096,
         })
     }
 
@@ -170,6 +187,15 @@ impl ExperimentConfig {
         }
         if self.workers == 0 {
             return Err(Error::invalid("workers must be >= 1"));
+        }
+        if self.drain_poll_ms == 0 {
+            return Err(Error::invalid("drain_poll_ms must be >= 1"));
+        }
+        if self.agg_shards == 0 {
+            return Err(Error::invalid("agg_shards must be >= 1"));
+        }
+        if self.max_conns == 0 {
+            return Err(Error::invalid("max_conns must be >= 1"));
         }
         self.sampling.validate()?;
         self.masking.validate()?;
@@ -256,6 +282,9 @@ impl ExperimentConfig {
                 }),
             ),
             ("workers", Json::num(self.workers as f64)),
+            ("drain_poll_ms", Json::num(self.drain_poll_ms as f64)),
+            ("agg_shards", Json::num(self.agg_shards as f64)),
+            ("max_conns", Json::num(self.max_conns as f64)),
         ])
     }
 
@@ -347,6 +376,9 @@ impl ExperimentConfig {
             Some(other) => return Err(Error::invalid(format!("bad aggregator '{other}'"))),
         };
         cfg.workers = get_usize("workers", cfg.workers)?;
+        cfg.drain_poll_ms = get_usize("drain_poll_ms", cfg.drain_poll_ms as usize)? as u64;
+        cfg.agg_shards = get_usize("agg_shards", cfg.agg_shards)?;
+        cfg.max_conns = get_usize("max_conns", cfg.max_conns)?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -401,6 +433,9 @@ mod tests {
         cfg.downlink_delta = true;
         cfg.encoding = Encoding::SparseDelta;
         cfg.aggregator = AggregatorKind::Attentive { temp: 0.5 };
+        cfg.drain_poll_ms = 7;
+        cfg.agg_shards = 4;
+        cfg.max_conns = 128;
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.label, cfg.label);
         assert_eq!(back.sampling, cfg.sampling);
@@ -413,6 +448,9 @@ mod tests {
         assert!(back.downlink_delta);
         assert_eq!(back.encoding, Encoding::SparseDelta);
         assert_eq!(back.aggregator, AggregatorKind::Attentive { temp: 0.5 });
+        assert_eq!(back.drain_poll_ms, 7);
+        assert_eq!(back.agg_shards, 4);
+        assert_eq!(back.max_conns, 128);
     }
 
     #[test]
@@ -457,6 +495,15 @@ mod tests {
         let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
         cfg.min_clients = 100;
         assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.drain_poll_ms = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.agg_shards = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.max_conns = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]
@@ -466,6 +513,9 @@ mod tests {
         assert_eq!(cfg.model, "gru");
         assert_eq!(cfg.lr, 0.5);
         assert_eq!(cfg.masking, MaskPolicy::None);
+        assert_eq!(cfg.drain_poll_ms, 25);
+        assert_eq!(cfg.agg_shards, 1);
+        assert_eq!(cfg.max_conns, 4096);
     }
 
     #[test]

@@ -78,7 +78,10 @@ pub struct SparseContribution<'a> {
 
 /// Streaming, order-insensitive aggregation: fold decoded updates as they
 /// arrive, then finish into the next global model.
-pub trait Aggregator {
+///
+/// `Send` because tree aggregation moves shard-local partials onto worker
+/// threads and back; both implementations are plain owned data.
+pub trait Aggregator: Send {
     /// Fold one client's dense-bodied update into the running aggregate.
     fn fold(&mut self, contrib: Contribution<'_>) -> Result<()>;
 
@@ -92,6 +95,25 @@ pub trait Aggregator {
     /// Heap bytes currently held by the aggregation state (the benchmark's
     /// O(p)-vs-O(k*p) memory evidence).
     fn state_bytes(&self) -> usize;
+
+    /// Absorb another partial of the *same* kind and configuration, as if
+    /// every contribution folded into `other` had been folded into `self`.
+    ///
+    /// For [`StreamingFedAvg`] this is exact by construction: the state is
+    /// integer sums (`acc`, `sent`, `total_samples`), and integer addition
+    /// is associative and commutative, so **any** partition of a cohort
+    /// into shard-local partials merges to a bitwise-identical result —
+    /// the invariant tree aggregation rests on (pinned by property tests
+    /// across shard counts, including empty shards). An empty partial
+    /// (zero folds) is a legal operand on either side and merges as the
+    /// identity. Mismatched kinds or configurations (different `p`,
+    /// different delta baseline, different attentive temperature) are
+    /// typed errors.
+    fn merge(&mut self, other: Box<dyn Aggregator>) -> Result<()>;
+
+    /// Downcast hook for [`Aggregator::merge`]: a trait object cannot be
+    /// matched on its concrete type, so `merge` recovers it through `Any`.
+    fn into_any(self: Box<Self>) -> Box<dyn std::any::Any>;
 
     /// Consume the aggregator and produce the new global model.
     fn finish(self: Box<Self>) -> Result<Vec<f32>>;
@@ -328,6 +350,53 @@ impl Aggregator for StreamingFedAvg {
         }
     }
 
+    fn merge(&mut self, other: Box<dyn Aggregator>) -> Result<()> {
+        let other = other
+            .into_any()
+            .downcast::<StreamingFedAvg>()
+            .map_err(|_| Error::invalid("cannot merge aggregator partials of different kinds"))?;
+        if other.acc.len() != self.acc.len() {
+            return Err(Error::invalid("cannot merge partials of different model dimension"));
+        }
+        match (&mut self.delta, &other.delta) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                // the baseline is per-round state shared by every shard:
+                // partials built from different broadcasts are a bug
+                if a.grid != b.grid || a.masked != b.masked {
+                    return Err(Error::invalid(
+                        "cannot merge partials with different delta baselines",
+                    ));
+                }
+                for (s, &o) in a.sent.iter_mut().zip(&b.sent) {
+                    *s = s
+                        .checked_add(o)
+                        .ok_or_else(|| Error::invalid("aggregation sent-weight overflow"))?;
+                }
+            }
+            _ => {
+                return Err(Error::invalid(
+                    "cannot merge a delta-baseline partial with a weights-target partial",
+                ))
+            }
+        }
+        for (s, &o) in self.acc.iter_mut().zip(&other.acc) {
+            *s = s
+                .checked_add(o)
+                .ok_or_else(|| Error::invalid("aggregation accumulator overflow"))?;
+        }
+        self.total_samples = self
+            .total_samples
+            .checked_add(other.total_samples)
+            .ok_or_else(|| Error::invalid("aggregation sample-count overflow"))?;
+        self.folded += other.folded;
+        Ok(())
+    }
+
+    fn into_any(self: Box<Self>) -> Box<dyn std::any::Any> {
+        self
+    }
+
     fn finish(self: Box<Self>) -> Result<Vec<f32>> {
         if self.folded == 0 {
             return Err(Error::invalid("cannot aggregate zero contributions"));
@@ -458,6 +527,29 @@ impl Aggregator for BufferingAttentive {
                 .iter()
                 .map(|(_, _, v)| v.capacity() * 4)
                 .sum::<usize>()
+    }
+
+    fn merge(&mut self, other: Box<dyn Aggregator>) -> Result<()> {
+        let other = other
+            .into_any()
+            .downcast::<BufferingAttentive>()
+            .map_err(|_| Error::invalid("cannot merge aggregator partials of different kinds"))?;
+        if other.global != self.global
+            || other.layers != self.layers
+            || other.temp != self.temp
+            || other.mask_target != self.mask_target
+        {
+            return Err(Error::invalid(
+                "cannot merge attentive partials with different configurations",
+            ));
+        }
+        // finish() sorts by client id, so concatenation order is immaterial
+        self.buffered.extend(other.buffered);
+        Ok(())
+    }
+
+    fn into_any(self: Box<Self>) -> Box<dyn std::any::Any> {
+        self
     }
 
     fn finish(mut self: Box<Self>) -> Result<Vec<f32>> {
@@ -993,6 +1085,146 @@ mod tests {
         .unwrap();
         let out = Box::new(agg).finish().unwrap();
         assert_eq!(out, vec![9.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn prop_sharded_merge_is_bitwise_equal_to_flat_fold_for_both_targets() {
+        use crate::config::experiment::AggregatorKind;
+        // Any partition of a cohort into any shard assignment — including
+        // empty shards and the degenerate single shard — must merge to a
+        // result bitwise-identical to the single-threaded fold. This is
+        // the invariant tree aggregation rests on.
+        check("sharded merge == flat fold", 40, |g| {
+            let p = g.usize_in(1, 300);
+            let k = g.usize_in(1, 12);
+            let layers = one_layer(p);
+            let broadcast = g.normal_vec(p);
+            let updates: Vec<(Vec<f32>, u32)> = (0..k)
+                .map(|_| {
+                    let density = g.f32_in(0.0, 0.9);
+                    let v: Vec<f32> = (0..p)
+                        .map(|_| {
+                            if g.f32_in(0.0, 1.0) < density {
+                                g.f32_in(-2.0, 2.0)
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect();
+                    (v, g.usize_in(1, 900) as u32)
+                })
+                .collect();
+            for target in [MaskTarget::Weights, MaskTarget::Delta] {
+                let mut flat =
+                    make_aggregator(AggregatorKind::FedAvg, target, &broadcast, &layers).unwrap();
+                for (i, (v, w)) in updates.iter().enumerate() {
+                    flat.fold(contrib(i, v, *w)).unwrap();
+                }
+                let reference = flat.finish().unwrap();
+                for shards in [1usize, 2, 8] {
+                    let mut partials: Vec<Box<dyn Aggregator>> = (0..shards)
+                        .map(|_| {
+                            make_aggregator(AggregatorKind::FedAvg, target, &broadcast, &layers)
+                                .unwrap()
+                        })
+                        .collect();
+                    // random shard assignment: some shards may stay empty
+                    for (i, (v, w)) in updates.iter().enumerate() {
+                        let s = g.usize_in(0, shards - 1);
+                        // mix dense and sparse folds across shards
+                        if g.bool() {
+                            partials[s].fold(contrib(i, v, *w)).unwrap();
+                        } else {
+                            let (idx, val) = sparsify(v);
+                            partials[s]
+                                .fold_sparse(SparseContribution {
+                                    client: i,
+                                    p,
+                                    indices: &idx,
+                                    values: &val,
+                                    n_samples: *w,
+                                })
+                                .unwrap();
+                        }
+                    }
+                    let mut root = partials.remove(0);
+                    for partial in partials {
+                        root.merge(partial).unwrap();
+                    }
+                    assert_eq!(root.folded(), k);
+                    let merged = root.finish().unwrap();
+                    assert_eq!(
+                        merged, reference,
+                        "shards {shards} target {target:?} seed {:#x}",
+                        g.seed
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn attentive_merge_concatenates_and_matches_flat() {
+        let p = 24;
+        let layers = one_layer(p);
+        let global = vec![0.25f32; p];
+        let mut g = crate::util::prop::Gen::new(0xa77e);
+        let vecs: Vec<Vec<f32>> = (0..6).map(|_| g.normal_vec(p)).collect();
+        let mut flat = BufferingAttentive::new(&global, &layers, 0.7, MaskTarget::Weights);
+        for (i, v) in vecs.iter().enumerate() {
+            flat.fold(contrib(i, v, 3)).unwrap();
+        }
+        let reference = Box::new(flat).finish().unwrap();
+        // split 6 clients over 3 partials, one left empty
+        let mut parts: Vec<BufferingAttentive> = (0..3)
+            .map(|_| BufferingAttentive::new(&global, &layers, 0.7, MaskTarget::Weights))
+            .collect();
+        for (i, v) in vecs.iter().enumerate() {
+            parts[if i < 3 { 1 } else { 2 }].fold(contrib(i, v, 3)).unwrap();
+        }
+        let mut root: Box<dyn Aggregator> = Box::new(parts.remove(0));
+        for part in parts {
+            root.merge(Box::new(part)).unwrap();
+        }
+        assert_eq!(root.folded(), 6);
+        assert_eq!(root.finish().unwrap(), reference);
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_partials() {
+        use crate::config::experiment::AggregatorKind;
+        let layers = one_layer(4);
+        let global = vec![1.0f32; 4];
+        // different kinds
+        let mut fedavg: Box<dyn Aggregator> = Box::new(StreamingFedAvg::new(4));
+        let attn = BufferingAttentive::new(&global, &layers, 1.0, MaskTarget::Weights);
+        assert!(fedavg.merge(Box::new(attn)).is_err());
+        // different model dimension
+        let mut a: Box<dyn Aggregator> = Box::new(StreamingFedAvg::new(4));
+        assert!(a.merge(Box::new(StreamingFedAvg::new(5))).is_err());
+        // delta-baseline vs weights-target
+        let mut a: Box<dyn Aggregator> = Box::new(StreamingFedAvg::new(4));
+        let d = StreamingFedAvg::with_delta_baseline(&global, &layers).unwrap();
+        assert!(a.merge(Box::new(d)).is_err());
+        // different baselines
+        let mut a: Box<dyn Aggregator> =
+            Box::new(StreamingFedAvg::with_delta_baseline(&global, &layers).unwrap());
+        let other = StreamingFedAvg::with_delta_baseline(&[2.0f32; 4], &layers).unwrap();
+        assert!(a.merge(Box::new(other)).is_err());
+        // different attentive temperature
+        let mut a: Box<dyn Aggregator> =
+            Box::new(BufferingAttentive::new(&global, &layers, 1.0, MaskTarget::Weights));
+        let other = BufferingAttentive::new(&global, &layers, 2.0, MaskTarget::Weights);
+        assert!(a.merge(Box::new(other)).is_err());
+        // a healthy merge with an empty partial is the identity
+        let mut a =
+            make_aggregator(AggregatorKind::FedAvg, MaskTarget::Weights, &global, &layers).unwrap();
+        a.fold(contrib(0, &[1.0, 2.0, 3.0, 4.0], 2)).unwrap();
+        let empty =
+            make_aggregator(AggregatorKind::FedAvg, MaskTarget::Weights, &global, &layers).unwrap();
+        a.merge(empty).unwrap();
+        assert_eq!(a.folded(), 1);
+        assert_eq!(a.finish().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
     }
 
     #[test]

@@ -18,7 +18,11 @@
 //! 3. [`RoundDriver::collect`] → [`Collected`] — the streaming drain: a
 //!    select-style wait over the pool-result channel and the wire,
 //!    folding each upload into the aggregator the moment it lands
-//!    ([`drain_round_uploads`]).
+//!    ([`drain_round_uploads`]). With `agg_shards > 1`,
+//!    [`RoundDriver::collect_sharded`] routes each header-validated
+//!    payload to its client's shard-local fold instead
+//!    ([`crate::fl::tree::ShardedAggregator`]) — bitwise-identical by
+//!    the merge property, parallel in wall-clock.
 //! 4. [`RoundDriver::finalize`] → [`RoundCost`] — uplink ledger
 //!    accounting in deterministic client-id order.
 //!
@@ -41,11 +45,12 @@ use std::time::{Duration, Instant};
 
 use crate::config::experiment::{ExperimentConfig, NetworkKind};
 use crate::fl::aggregate::{Aggregator, Contribution, SparseContribution};
+use crate::fl::tree::ShardedAggregator;
 use crate::sim::availability::{AvailabilityModel, ClientState};
 use crate::sim::rng::Rng;
 use crate::transport::codec::{
-    decode_update, decode_update_view, encode_update, wire_bytes, BodyView, DecodeScratch,
-    Encoding, BROADCAST_DELTA, BROADCAST_FULL, BROADCAST_SENDER,
+    decode_update, decode_update_view, encode_update, peek_header, wire_bytes, BodyView,
+    DecodeScratch, Encoding, BROADCAST_DELTA, BROADCAST_FULL, BROADCAST_SENDER,
 };
 use crate::transport::cost::CostLedger;
 use crate::transport::link::{
@@ -53,7 +58,7 @@ use crate::transport::link::{
     DEFAULT_UPLOAD_TIMEOUT,
 };
 use crate::transport::network::NetworkModel;
-use crate::transport::socket::Loopback;
+use crate::transport::socket::{Loopback, ServerTuning};
 use crate::util::error::{Error, Result};
 
 /// Sideband metadata one client job reports through the pool channel:
@@ -68,11 +73,25 @@ pub type JobMeta = (f32, usize, usize);
 /// must not stall the aggregation loop forever.
 const MAX_REJECTED_UPLOADS: usize = 64;
 
-/// How long the drain loop waits on the wire before re-polling the pool's
-/// result channel. Small enough that a dead client's concrete job error
-/// surfaces within a poll tick; large enough that a healthy round spends
-/// its time blocked in the transport, not spinning.
-const DRAIN_POLL: Duration = Duration::from_millis(25);
+/// Where one round's validated uploads land: the single-threaded fold, or
+/// the sharded tree ([`ShardedAggregator`]) that routes each payload —
+/// still undecoded — to its client's shard worker. Header validation
+/// (round, cohort membership, duplicates, width) is identical on both
+/// paths and happens on the drain loop either way.
+pub(crate) enum RoundFold<'a> {
+    Serial(&'a mut dyn Aggregator),
+    Sharded(&'a mut ShardedAggregator),
+}
+
+impl RoundFold<'_> {
+    /// Uploads accepted so far (folded, or routed to a shard).
+    fn completed(&self) -> usize {
+        match self {
+            RoundFold::Serial(agg) => agg.folded(),
+            RoundFold::Sharded(tree) => tree.routed(),
+        }
+    }
+}
 
 /// Account one rejected (well-framed but invalid) upload, erroring once
 /// the per-round budget is exhausted. On a closed wire (`tolerate` false —
@@ -101,11 +120,14 @@ fn reject_upload(rejected: &mut usize, tolerate: bool, why: impl std::fmt::Displ
 /// vice versa — so the loop alternates: drain every ready pool result
 /// (a failed client job surfaces its concrete error *here, immediately*,
 /// instead of after the full upload timeout — the wire can never deliver
-/// the payload a dead job didn't send), then wait at most [`DRAIN_POLL`]
-/// for the next payload. Wire arrivals are matched to the cohort by their
-/// own header (selected client, current round, model dimension, no
-/// duplicates); invalid ones are dropped on a bounded budget when the
-/// transport `tolerate_strays`, and fail the round precisely otherwise.
+/// the payload a dead job didn't send), then wait at most `drain_poll`
+/// (config: `drain_poll_ms`, default 25) for the next payload. Wire
+/// arrivals are matched to the cohort by their own fixed header — peeked
+/// without decoding the body ([`peek_header`]): selected client, current
+/// round, model dimension, no duplicates; invalid ones are dropped on a
+/// bounded budget when the transport `tolerate_strays`, and fail the
+/// round precisely otherwise. A header-valid payload then folds serially
+/// or is routed, body still encoded, to its shard worker per `fold`.
 ///
 /// `upload_timeout` is an **inactivity** bound, matching the old per-recv
 /// semantics: the window restarts whenever the round makes progress (a
@@ -121,13 +143,14 @@ fn reject_upload(rejected: &mut usize, tolerate: bool, why: impl std::fmt::Displ
 fn drain_round_uploads(
     transport: &mut dyn Transport,
     results: &Receiver<(usize, Result<JobMeta>)>,
-    agg: &mut dyn Aggregator,
+    fold: &mut RoundFold<'_>,
     scratch: &mut DecodeScratch,
     selected: &[usize],
     round: usize,
     p: usize,
     tolerate_strays: bool,
     upload_timeout: Duration,
+    drain_poll: Duration,
 ) -> Result<Vec<JobMeta>> {
     let n_jobs = selected.len();
     let mut metas: Vec<Option<JobMeta>> = vec![None; n_jobs];
@@ -171,7 +194,7 @@ fn drain_round_uploads(
                         "timed out after {upload_timeout:?} waiting for job results"
                     ))
                 })?;
-            match results.recv_timeout(window.min(DRAIN_POLL)) {
+            match results.recv_timeout(window.min(drain_poll)) {
                 Ok((idx, res)) => {
                     metas[idx] = Some(res?);
                     metas_pending -= 1;
@@ -198,39 +221,39 @@ fn drain_round_uploads(
                     "timed out after {upload_timeout:?} waiting for uploads from clients {missing:?}"
                 ))
             })?;
-        let Some(payload) = transport.try_recv_for(window.min(DRAIN_POLL))? else {
+        let Some(payload) = transport.try_recv_for(window.min(drain_poll))? else {
             continue;
         };
 
-        // 3) Decode + cohort-validate + fold. Invalid payloads are dropped
-        //    on a bounded budget (fold failures stay fatal — they can leave
-        //    the accumulator partially updated, and our own cohort's
-        //    payloads are codec-clean).
-        let update = match decode_update_view(&payload, scratch) {
-            Ok(u) => u,
-            Err(e) => {
-                reject_upload(&mut rejected, tolerate_strays, e)?;
-                continue;
-            }
+        // 3) Header-validate + fold/route. Cohort matching reads only the
+        //    fixed header (no body decode), so it is identical — and
+        //    identically cheap — on the serial and sharded paths. Invalid
+        //    payloads are dropped on a bounded budget; fold and route
+        //    failures stay fatal (a fold error can leave the accumulator
+        //    partially updated, and our own cohort's payloads are
+        //    codec-clean).
+        let Some(header) = peek_header(&payload) else {
+            reject_upload(&mut rejected, tolerate_strays, "unparseable update header")?;
+            continue;
         };
-        if update.round as usize != round {
+        if header.round as usize != round {
             reject_upload(
                 &mut rejected,
                 tolerate_strays,
                 format_args!(
                     "client {} names round {}, server is on round {round}",
-                    update.client, update.round
+                    header.client, header.round
                 ),
             )?;
             continue;
         }
-        let pos = match selected.binary_search(&(update.client as usize)) {
+        let pos = match selected.binary_search(&(header.client as usize)) {
             Ok(pos) => pos,
             Err(_) => {
                 reject_upload(
                     &mut rejected,
                     tolerate_strays,
-                    format_args!("client {} not in this round's cohort", update.client),
+                    format_args!("client {} not in this round's cohort", header.client),
                 )?;
                 continue;
             }
@@ -239,38 +262,55 @@ fn drain_round_uploads(
             reject_upload(
                 &mut rejected,
                 tolerate_strays,
-                format_args!("duplicate update from client {}", update.client),
+                format_args!("duplicate update from client {}", header.client),
             )?;
             continue;
         }
-        if update.p != p {
+        if header.p as usize != p {
             reject_upload(
                 &mut rejected,
                 tolerate_strays,
-                format_args!("carries {} params, model has {}", update.p, p),
+                format_args!("carries {} params, model has {}", header.p, p),
             )?;
             continue;
         }
-        uploaded[pos] = true;
-        let client = update.client as usize;
-        match update.body {
-            BodyView::Dense(params) => agg.fold(Contribution {
-                client,
-                params,
-                n_samples: update.n_samples,
-            })?,
-            BodyView::Sparse { indices, values } => agg.fold_sparse(SparseContribution {
-                client,
-                p: update.p,
-                indices,
-                values,
-                n_samples: update.n_samples,
-            })?,
+        match fold {
+            RoundFold::Serial(agg) => {
+                // Serial: decode here, so a corrupt *body* on an open wire
+                // is still a rejectable stray rather than a round failure.
+                let update = match decode_update_view(&payload, scratch) {
+                    Ok(u) => u,
+                    Err(e) => {
+                        reject_upload(&mut rejected, tolerate_strays, e)?;
+                        continue;
+                    }
+                };
+                let client = update.client as usize;
+                match update.body {
+                    BodyView::Dense(params) => agg.fold(Contribution {
+                        client,
+                        params,
+                        n_samples: update.n_samples,
+                    })?,
+                    BodyView::Sparse { indices, values } => agg.fold_sparse(SparseContribution {
+                        client,
+                        p: update.p,
+                        indices,
+                        values,
+                        n_samples: update.n_samples,
+                    })?,
+                }
+            }
+            // Sharded: ship the body encoded; the shard worker decodes on
+            // its own thread. A corrupt body past this point fails the
+            // round (see `fl::tree` on why that trade is deliberate).
+            RoundFold::Sharded(tree) => tree.route(header.client, payload)?,
         }
+        uploaded[pos] = true;
         folds_pending -= 1;
         deadline = Instant::now() + upload_timeout;
     }
-    debug_assert_eq!(agg.folded(), n_jobs);
+    debug_assert_eq!(fold.completed(), n_jobs);
     Ok(metas.into_iter().map(|m| m.expect("all jobs accounted")).collect())
 }
 
@@ -346,8 +386,12 @@ pub struct RoundDriver {
     /// `NetworkModel`-timed delivery. Held for the driver's lifetime
     /// (socket listeners bind once, sessions persist across rounds).
     transport: Box<dyn Transport>,
-    /// Ids registered (and on sockets: session-holding) at construction.
+    /// The full fleet of client ids eligible for this run — the sampling
+    /// universe. Sessions are opened lazily per cohort, not here.
     registered: Vec<u32>,
+    /// Which ids have had `register_clients` run (on sockets: hold a live
+    /// session). Grows monotonically as cohorts touch new clients.
+    connected: Vec<bool>,
     /// The model clients received last round — the delta-downlink
     /// reference (None before the first broadcast or when
     /// `downlink_delta` is off).
@@ -362,20 +406,26 @@ pub struct RoundDriver {
     /// across rounds so steady-state decoding never allocates.
     decode_scratch: DecodeScratch,
     upload_timeout: Duration,
+    /// Drain-loop poll granularity (config `drain_poll_ms`).
+    drain_poll: Duration,
 }
 
 impl RoundDriver {
     /// Build the communication plane for a run: construct the configured
-    /// transport and register every client id `0..cfg.clients` — on the
-    /// socket transports this opens one persistent duplex connection per
-    /// client and runs the token handshake, so by the time this returns
-    /// the whole fleet holds sessions. (Registering the full registry
-    /// eagerly is fine at simulation scale; a multi-host deployment would
-    /// register lazily per cohort — ROADMAP.)
+    /// transport. Client ids `0..cfg.clients` form the sampling universe,
+    /// but **registration is lazy**: a client's session (on sockets: its
+    /// persistent duplex connection + token handshake) is opened the
+    /// first round it is selected, by [`RoundDriver::broadcast`]. Under
+    /// the dynamic schedules most of a large fleet is never sampled, so
+    /// the old eager full-registry connect paid thousands of handshakes
+    /// for sessions no round used.
     pub fn new(cfg: Arc<ExperimentConfig>, p: usize) -> Result<RoundDriver> {
         let base: Box<dyn Transport> = match cfg.transport {
             TransportKind::InProcess => Box::new(InProcess::new()),
-            TransportKind::Tcp | TransportKind::Uds => Box::new(Loopback::bind(cfg.transport)?),
+            TransportKind::Tcp | TransportKind::Uds => {
+                let tuning = ServerTuning { max_conns: cfg.max_conns, ..ServerTuning::default() };
+                Box::new(Loopback::bind_with(cfg.transport, tuning)?)
+            }
         };
         let transport: Box<dyn Transport> = match cfg.network {
             NetworkKind::Ideal => base,
@@ -385,37 +435,46 @@ impl RoundDriver {
     }
 
     /// Driver over a caller-built transport (tests wire in short-timeout
-    /// or pre-wrapped transports). Registers the full client registry.
+    /// or pre-wrapped transports). No sessions are opened yet — see
+    /// [`RoundDriver::new`] on lazy registration.
     pub fn with_transport(
         cfg: Arc<ExperimentConfig>,
         p: usize,
-        mut transport: Box<dyn Transport>,
+        transport: Box<dyn Transport>,
     ) -> Result<RoundDriver> {
         let registered: Vec<u32> = (0..cfg.clients as u32).collect();
-        transport.register_clients(&registered)?;
         log::debug!(
-            "[{}] full-duplex rounds travel via {} ({} clients registered)",
+            "[{}] full-duplex rounds travel via {} ({} clients eligible, sessions lazy)",
             cfg.label,
             transport.label(),
             registered.len()
         );
         let clients = cfg.clients;
+        let drain_poll = Duration::from_millis(cfg.drain_poll_ms);
         Ok(RoundDriver {
             cfg,
             p,
             transport,
             registered,
+            connected: vec![false; clients],
             prev_broadcast: None,
             has_prev_broadcast: vec![false; clients],
             ledger: CostLedger::new(),
             decode_scratch: DecodeScratch::default(),
             upload_timeout: DEFAULT_UPLOAD_TIMEOUT,
+            drain_poll,
         })
     }
 
-    /// Client ids holding registrations (on sockets: live sessions).
+    /// The sampling universe: every client id eligible for this run.
     pub fn registered(&self) -> &[u32] {
         &self.registered
+    }
+
+    /// How many clients hold registrations (on sockets: live sessions) so
+    /// far — grows lazily as cohorts touch new clients.
+    pub fn connected_clients(&self) -> usize {
+        self.connected.iter().filter(|c| **c).count()
     }
 
     /// Transport name for logs.
@@ -450,7 +509,8 @@ impl RoundDriver {
     /// (and therefore receive the broadcast, paying downlink) but miss
     /// the deadline and are dropped before aggregation. Both lists sorted
     /// for deterministic aggregation order. Every sampled client is by
-    /// construction a member of the registered, session-holding fleet.
+    /// construction a member of the eligible fleet; completers that do
+    /// not yet hold a session get one at `broadcast`.
     pub fn sample(&self, availability: &AvailabilityModel, t: usize) -> Cohort {
         let rate = self.cfg.sampling.rate(t);
         let want = self.cfg.sampling.num_clients(t, self.cfg.clients, self.cfg.min_clients);
@@ -512,6 +572,23 @@ impl RoundDriver {
     /// frame would corrupt their next active round.
     pub fn broadcast(&mut self, params: &Arc<Vec<f32>>, cohort: &Cohort) -> Result<RoundWire> {
         let t = cohort.round;
+        // Lazy per-cohort registration: open sessions only for this
+        // round's completers that do not hold one yet (stragglers get no
+        // wire message, so they need no session to be billed). On sockets
+        // this is the connect + token handshake; it is idempotent at the
+        // driver level via `connected`.
+        let to_connect: Vec<u32> = cohort
+            .selected
+            .iter()
+            .map(|&c| c as u32)
+            .filter(|&c| !self.connected[c as usize])
+            .collect();
+        if !to_connect.is_empty() {
+            self.transport.register_clients(&to_connect)?;
+            for &c in &to_connect {
+                self.connected[c as usize] = true;
+            }
+        }
         self.transport.begin_round(cohort.selected.len());
 
         // --- canonical state + the (at most two) distinct messages ---
@@ -650,13 +727,43 @@ impl RoundDriver {
         let metas = drain_round_uploads(
             self.transport.as_mut(),
             results,
-            agg,
+            &mut RoundFold::Serial(agg),
             &mut self.decode_scratch,
             &cohort.selected,
             cohort.round,
             self.p,
             tolerate_strays,
             self.upload_timeout,
+            self.drain_poll,
+        )?;
+        Ok(Collected { metas })
+    }
+
+    /// **Phase 3, sharded.** Same drain contract as
+    /// [`RoundDriver::collect`], but each header-validated payload is
+    /// routed — body still encoded — to its client's shard-local fold in
+    /// `tree`. The caller finishes the round with
+    /// [`ShardedAggregator::finish`], which merges the shard partials
+    /// bitwise-exactly; the result is bit-identical to the serial path
+    /// (pinned by tests here and the merge property tests).
+    pub fn collect_sharded(
+        &mut self,
+        cohort: &Cohort,
+        tree: &mut ShardedAggregator,
+        results: &Receiver<(usize, Result<JobMeta>)>,
+    ) -> Result<Collected> {
+        let tolerate_strays = self.transport.accepts_foreign_peers();
+        let metas = drain_round_uploads(
+            self.transport.as_mut(),
+            results,
+            &mut RoundFold::Sharded(tree),
+            &mut self.decode_scratch,
+            &cohort.selected,
+            cohort.round,
+            self.p,
+            tolerate_strays,
+            self.upload_timeout,
+            self.drain_poll,
         )?;
         Ok(Collected { metas })
     }
@@ -763,13 +870,14 @@ mod tests {
         let err = drain_round_uploads(
             &mut transport,
             &results,
-            agg.as_mut(),
+            &mut RoundFold::Serial(agg.as_mut()),
             &mut DecodeScratch::default(),
             &selected,
             1,
             P,
             false,
             DEFAULT_UPLOAD_TIMEOUT,
+            Duration::from_millis(25),
         )
         .unwrap_err();
         let elapsed = started.elapsed();
@@ -802,13 +910,14 @@ mod tests {
         let err = drain_round_uploads(
             &mut transport,
             &results,
-            agg.as_mut(),
+            &mut RoundFold::Serial(agg.as_mut()),
             &mut DecodeScratch::default(),
             &selected,
             1,
             P,
             false,
             DEFAULT_UPLOAD_TIMEOUT,
+            Duration::from_millis(25),
         )
         .unwrap_err();
         assert!(err.to_string().contains("client 1 exploded"), "{err}");
@@ -846,13 +955,14 @@ mod tests {
             let metas = drain_round_uploads(
                 transport.as_mut(),
                 &results,
-                agg.as_mut(),
+                &mut RoundFold::Serial(agg.as_mut()),
                 &mut DecodeScratch::default(),
                 &selected,
                 7,
                 P,
                 false,
                 Duration::from_secs(30),
+                Duration::from_millis(25),
             )
             .unwrap();
             assert_eq!(metas.len(), 3);
@@ -892,13 +1002,14 @@ mod tests {
         let err = drain_round_uploads(
             &mut transport,
             &results,
-            agg.as_mut(),
+            &mut RoundFold::Serial(agg.as_mut()),
             &mut DecodeScratch::default(),
             &selected,
             1,
             P,
             false,
             Duration::from_millis(150),
+            Duration::from_millis(25),
         )
         .unwrap_err();
         assert!(matches!(err, Error::Transport(_)), "{err}");
@@ -924,13 +1035,14 @@ mod tests {
         let err = drain_round_uploads(
             &mut transport,
             &results,
-            agg.as_mut(),
+            &mut RoundFold::Serial(agg.as_mut()),
             &mut DecodeScratch::default(),
             &selected,
             3,
             P,
             false,
             Duration::from_secs(5),
+            Duration::from_millis(25),
         )
         .unwrap_err();
         assert!(err.to_string().contains("round"), "{err}");
@@ -948,13 +1060,14 @@ mod tests {
         let metas = drain_round_uploads(
             &mut transport,
             &results,
-            agg.as_mut(),
+            &mut RoundFold::Serial(agg.as_mut()),
             &mut DecodeScratch::default(),
             &selected,
             3,
             P,
             true,
             Duration::from_secs(5),
+            Duration::from_millis(25),
         )
         .unwrap();
         assert_eq!(metas.len(), 1);
@@ -1267,5 +1380,159 @@ mod tests {
             );
         }
         assert_eq!(wire.slowest_download, wire_bytes(p, p, Encoding::Dense));
+    }
+
+    // -----------------------------------------------------------------
+    // Lazy registration + sharded collect
+    // -----------------------------------------------------------------
+
+    /// Transport wrapper that records every `register_clients` call — the
+    /// observable for the lazy-registration contract.
+    struct Recording {
+        inner: InProcess,
+        calls: Arc<std::sync::Mutex<Vec<Vec<u32>>>>,
+    }
+
+    impl Transport for Recording {
+        fn label(&self) -> &'static str {
+            self.inner.label()
+        }
+        fn accepts_foreign_peers(&self) -> bool {
+            self.inner.accepts_foreign_peers()
+        }
+        fn register_clients(&mut self, clients: &[u32]) -> Result<()> {
+            self.calls.lock().unwrap().push(clients.to_vec());
+            self.inner.register_clients(clients)
+        }
+        fn sink(&self) -> Arc<dyn UploadSink> {
+            self.inner.sink()
+        }
+        fn send_downlink(&mut self, client: u32, payload: Arc<Vec<u8>>) -> Result<()> {
+            self.inner.send_downlink(client, payload)
+        }
+        fn downlink(&self) -> Arc<dyn DownlinkSource> {
+            self.inner.downlink()
+        }
+        fn begin_round(&mut self, expected: usize) {
+            self.inner.begin_round(expected)
+        }
+        fn recv(&mut self) -> Result<Vec<u8>> {
+            self.inner.recv()
+        }
+        fn try_recv_for(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+            self.inner.try_recv_for(timeout)
+        }
+    }
+
+    /// Registration is lazy and per-cohort: building the driver registers
+    /// nobody, the first broadcast registers exactly its cohort, and a
+    /// later cohort registers only clients not yet connected.
+    #[test]
+    fn registration_is_lazy_per_cohort_and_idempotent() {
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.clients = 8;
+        cfg.sampling = SamplingSchedule::DynamicExp { c0: 0.25, beta: 0.0 };
+        cfg.min_clients = 2;
+        let cfg = Arc::new(cfg);
+        let calls: Arc<std::sync::Mutex<Vec<Vec<u32>>>> =
+            Arc::new(std::sync::Mutex::new(Vec::new()));
+        let transport = Recording {
+            inner: InProcess::new(),
+            calls: Arc::clone(&calls),
+        };
+        let mut driver =
+            RoundDriver::with_transport(Arc::clone(&cfg), P, Box::new(transport)).unwrap();
+        assert_eq!(driver.connected_clients(), 0, "construction opens no sessions");
+        assert!(calls.lock().unwrap().is_empty());
+        assert_eq!(driver.registered().len(), 8, "universe stays the full fleet");
+
+        let availability = always_on(3);
+        let params: Arc<Vec<f32>> = Arc::new(vec![0.5; P]);
+        let cohort1 = driver.sample(&availability, 1);
+        driver.broadcast(&params, &cohort1).unwrap();
+        let c1: Vec<u32> = cohort1.selected.iter().map(|&c| c as u32).collect();
+        assert_eq!(calls.lock().unwrap().as_slice(), std::slice::from_ref(&c1));
+        assert_eq!(driver.connected_clients(), c1.len());
+
+        let cohort2 = driver.sample(&availability, 2);
+        driver.broadcast(&params, &cohort2).unwrap();
+        let fresh: Vec<u32> = cohort2
+            .selected
+            .iter()
+            .map(|&c| c as u32)
+            .filter(|c| !c1.contains(c))
+            .collect();
+        {
+            let calls = calls.lock().unwrap();
+            if fresh.is_empty() {
+                assert_eq!(calls.len(), 1, "repeat cohort must not re-register");
+            } else {
+                assert_eq!(calls.len(), 2);
+                assert_eq!(calls[1], fresh, "only never-connected clients register");
+            }
+        }
+        assert_eq!(driver.connected_clients(), c1.len() + fresh.len());
+    }
+
+    /// The sharded drain produces the bitwise-identical aggregate to the
+    /// serial drain, across shard counts — the driver-level face of the
+    /// tree-merge exactness property.
+    #[test]
+    fn sharded_drain_matches_serial_drain_bitwise() {
+        let k = 6usize;
+        let selected: Vec<usize> = (0..k).collect();
+        let payloads: Vec<Vec<u8>> = (0..k).map(|c| payload_for(c as u32, 5)).collect();
+        let feed = |transport: &mut dyn Transport| {
+            let sink = transport.sink();
+            transport.begin_round(k);
+            let (tx, results) = channel::<(usize, Result<JobMeta>)>();
+            for (i, p) in payloads.iter().enumerate() {
+                sink.send(p.clone()).unwrap();
+                tx.send((i, Ok((0.0, 1, p.len())))).unwrap();
+            }
+            results
+        };
+
+        let mut transport = InProcess::new();
+        let results = feed(&mut transport);
+        let mut agg = fresh_agg();
+        drain_round_uploads(
+            &mut transport,
+            &results,
+            &mut RoundFold::Serial(agg.as_mut()),
+            &mut DecodeScratch::default(),
+            &selected,
+            5,
+            P,
+            false,
+            Duration::from_secs(30),
+            Duration::from_millis(25),
+        )
+        .unwrap();
+        let reference = agg.finish().unwrap();
+
+        for shards in [1usize, 2, 8] {
+            let mut transport = InProcess::new();
+            let results = feed(&mut transport);
+            let partials: Vec<Box<dyn Aggregator>> = (0..shards).map(|_| fresh_agg()).collect();
+            let mut tree = ShardedAggregator::spawn(partials).unwrap();
+            let metas = drain_round_uploads(
+                &mut transport,
+                &results,
+                &mut RoundFold::Sharded(&mut tree),
+                &mut DecodeScratch::default(),
+                &selected,
+                5,
+                P,
+                false,
+                Duration::from_secs(30),
+                Duration::from_millis(25),
+            )
+            .unwrap();
+            assert_eq!(metas.len(), k);
+            assert_eq!(tree.routed(), k);
+            let merged = tree.finish().unwrap();
+            assert_eq!(merged, reference, "shards {shards}");
+        }
     }
 }

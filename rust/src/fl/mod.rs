@@ -19,6 +19,10 @@
 //!   broadcast → collect → finalize): transport + per-client sessions,
 //!   downlink encoding and pushes, the streaming upload drain, and the
 //!   cost ledger, as separately testable phases.
+//! * [`tree`] — parallel tree aggregation: `S` shard-local aggregator
+//!   folds on worker threads, each decoding its own clients' payloads,
+//!   merged bitwise-exactly at the root via [`aggregate::Aggregator::merge`]
+//!   (see `docs/SCALE.md`).
 //! * [`server`] — the simulation shell around the driver: data, the
 //!   engine pool, job fan-out, evaluation, the virtual clock, records.
 
@@ -28,12 +32,14 @@ pub mod driver;
 pub mod masking;
 pub mod sampling;
 pub mod server;
+pub mod tree;
 
 pub use aggregate::{
     make_aggregator, Aggregator, Contribution, SparseContribution, StreamingFedAvg,
 };
 pub use client::receive_broadcast;
 pub use driver::{Cohort, Collected, RoundCost, RoundDriver, RoundWire};
+pub use tree::ShardedAggregator;
 pub use masking::{MaskEngine, MaskPolicy, MaskScope, MaskScratch, MaskTarget};
 pub use sampling::SamplingSchedule;
 pub use server::{Server, ServerOutcome};

@@ -139,8 +139,8 @@ impl Server {
         };
         let recorder = RunRecorder::new(cfg.label.clone());
         let cfg = Arc::new(cfg);
-        // The communication plane: builds the configured transport and
-        // opens every client's session (socket handshakes included).
+        // The communication plane: builds the configured transport.
+        // Sessions open lazily, per cohort, at each round's broadcast.
         let driver = RoundDriver::new(Arc::clone(&cfg), p)?;
 
         Ok(Server {
@@ -215,13 +215,36 @@ impl Server {
 
         // Phase 3 — collect: stream the uploads into the aggregator in
         // completion order while surfacing any job's concrete error
-        // within a poll tick.
+        // within a poll tick. With `agg_shards > 1` the fold itself runs
+        // on shard worker threads (tree aggregation) and the partials
+        // merge bitwise-exactly at finish — same result, parallel decode.
         let n_jobs = jobs.len();
-        let mut agg =
-            make_aggregator(self.cfg.aggregator, self.cfg.mask_target, &wire.params, &self.layers)?;
         let results = self.pool.map_unordered_with(jobs);
-        let collected = self.driver.collect(&cohort, agg.as_mut(), &results)?;
-        self.params = Arc::new(agg.finish()?);
+        let (collected, finished) = if self.cfg.agg_shards > 1 {
+            let partials = (0..self.cfg.agg_shards)
+                .map(|_| {
+                    make_aggregator(
+                        self.cfg.aggregator,
+                        self.cfg.mask_target,
+                        &wire.params,
+                        &self.layers,
+                    )
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mut tree = crate::fl::tree::ShardedAggregator::spawn(partials)?;
+            let collected = self.driver.collect_sharded(&cohort, &mut tree, &results)?;
+            (collected, tree.finish()?)
+        } else {
+            let mut agg = make_aggregator(
+                self.cfg.aggregator,
+                self.cfg.mask_target,
+                &wire.params,
+                &self.layers,
+            )?;
+            let collected = self.driver.collect(&cohort, agg.as_mut(), &results)?;
+            (collected, agg.finish()?)
+        };
+        self.params = Arc::new(finished);
 
         // Phase 4 — finalize: uplink accounting in client-id order.
         let cost = self.driver.finalize(&collected);

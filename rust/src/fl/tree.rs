@@ -1,0 +1,293 @@
+//! Parallel tree aggregation: shard-local folds, one bitwise-exact merge.
+//!
+//! The serial drain decodes and folds every upload on the round loop's
+//! thread — O(sum_i nnz_i) of varint parsing, dequantization, and
+//! fixed-point accumulation that a 10k-client cohort serializes behind one
+//! core. [`ShardedAggregator`] splits that work by client: `S` worker
+//! threads each own a shard-local [`Aggregator`] partial and a private
+//! [`DecodeScratch`], and consume their own clients' *undecoded* payload
+//! bytes from a bounded channel as the round loop routes them
+//! ([`shard_of`] — the same hash that shards sessions, so one client's
+//! state lives in one shard everywhere). At [`ShardedAggregator::finish`]
+//! the partials are merged at the root via [`Aggregator::merge`] and
+//! finished once.
+//!
+//! ## Why the result is exactly the serial one
+//!
+//! `StreamingFedAvg`'s state is integer sums on a fixed-point grid, and
+//! integer addition is associative and commutative — so *any* partition of
+//! the cohort into shard partials, merged in *any* order, produces the
+//! same accumulator bits as the single-threaded fold, and therefore the
+//! same `finish` output bit for bit. Parallelism here is free of the
+//! usual float-reassociation caveat by construction. The property tests
+//! in `fl::aggregate` and `tests/properties.rs` pin this across shard
+//! counts, mask targets, and all wire encodings; `benches/transport.rs`
+//! and `benches/aggregation.rs` measure the speedup at 1k–10k simulated
+//! clients.
+//!
+//! ## Failure semantics
+//!
+//! A worker that hits a decode or fold error stops consuming and returns
+//! the error. The round loop learns of it at the next
+//! [`ShardedAggregator::route`] to that shard (its channel reports
+//! disconnected and the worker is joined for the concrete error) or at
+//! `finish`, whichever comes first — either way the round fails with the
+//! worker's typed error, mirroring the serial path where a fold error
+//! fails `collect` directly. Note one deliberate difference: the serial
+//! drain can *reject* an undecodable stray payload and keep waiting on a
+//! foreign-peer transport, because it decodes before folding. The sharded
+//! drain validates the fixed header on the round loop (round, cohort
+//! membership, duplicates, width — see `fl::driver`) but ships the body
+//! undecoded, so a payload that passes those checks *and* session auth
+//! yet carries a corrupt body fails the round. Reaching that state
+//! requires an authenticated session uploading garbage under its own
+//! name — an internal bug, which should fail loudly.
+
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::thread::JoinHandle;
+
+use crate::fl::aggregate::{Aggregator, Contribution, SparseContribution};
+use crate::transport::codec::{decode_update_view, BodyView, DecodeScratch};
+use crate::transport::session::shard_of;
+use crate::util::error::{Error, Result};
+
+/// Bounded per-shard payload queue: deep enough to absorb a burst of
+/// arrivals, small enough that a stalled worker backpressures the drain
+/// loop instead of buffering the whole cohort in memory.
+const SHARD_QUEUE_SLOTS: usize = 64;
+
+/// Fold one decoded payload view into `agg` — the same dispatch the serial
+/// drain performs, factored out so both paths stay identical.
+pub(crate) fn fold_view(agg: &mut dyn Aggregator, payload: &[u8], scratch: &mut DecodeScratch) -> Result<()> {
+    let view = decode_update_view(payload, scratch)?;
+    match view.body {
+        BodyView::Dense(params) => agg.fold(Contribution {
+            client: view.client as usize,
+            params,
+            n_samples: view.n_samples,
+        }),
+        BodyView::Sparse { indices, values } => agg.fold_sparse(SparseContribution {
+            client: view.client as usize,
+            p: view.p,
+            indices,
+            values,
+            n_samples: view.n_samples,
+        }),
+    }
+}
+
+/// `S` shard-local aggregation folds on worker threads, merged
+/// bitwise-exactly at the root. See the module doc for the exactness
+/// argument and failure semantics.
+pub struct ShardedAggregator {
+    txs: Vec<SyncSender<Vec<u8>>>,
+    workers: Vec<Option<JoinHandle<Result<Box<dyn Aggregator>>>>>,
+    routed: usize,
+}
+
+impl ShardedAggregator {
+    /// Spawn one worker per partial. Build the partials with
+    /// `make_aggregator` — one per shard, all from the same round state —
+    /// so every shard folds under the identical configuration `merge`
+    /// requires.
+    pub fn spawn(partials: Vec<Box<dyn Aggregator>>) -> Result<ShardedAggregator> {
+        if partials.is_empty() {
+            return Err(Error::invalid("tree aggregation needs at least one shard"));
+        }
+        let mut txs = Vec::with_capacity(partials.len());
+        let mut workers = Vec::with_capacity(partials.len());
+        for (i, mut agg) in partials.into_iter().enumerate() {
+            let (tx, rx) = sync_channel::<Vec<u8>>(SHARD_QUEUE_SLOTS);
+            let handle = std::thread::Builder::new()
+                .name(format!("fedmask-agg-{i}"))
+                .spawn(move || -> Result<Box<dyn Aggregator>> {
+                    let mut scratch = DecodeScratch::default();
+                    // recv errors only on disconnect: every tx dropped,
+                    // i.e. finish() (or an aborted round) — clean exit.
+                    while let Ok(payload) = rx.recv() {
+                        fold_view(agg.as_mut(), &payload, &mut scratch)?;
+                    }
+                    Ok(agg)
+                })
+                .map_err(|e| Error::Engine(format!("failed to spawn aggregation shard: {e}")))?;
+            txs.push(tx);
+            workers.push(Some(handle));
+        }
+        Ok(ShardedAggregator { txs, workers, routed: 0 })
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Payloads routed so far (the sharded analog of
+    /// [`Aggregator::folded`] — folds the workers have *accepted*, not
+    /// necessarily completed yet).
+    pub fn routed(&self) -> usize {
+        self.routed
+    }
+
+    /// Ship one validated, undecoded payload to its client's shard. Blocks
+    /// only when that shard's bounded queue is full (backpressure). If the
+    /// shard's worker already failed, joins it and returns its concrete
+    /// error — the round fails with the real cause, not a channel error.
+    pub fn route(&mut self, client: u32, payload: Vec<u8>) -> Result<()> {
+        let s = shard_of(client, self.txs.len());
+        if self.txs[s].send(payload).is_err() {
+            return Err(self.worker_error(s));
+        }
+        self.routed += 1;
+        Ok(())
+    }
+
+    /// The concrete error of a worker whose channel reported disconnect.
+    fn worker_error(&mut self, shard: usize) -> Error {
+        match self.workers[shard].take().map(JoinHandle::join) {
+            Some(Ok(Err(e))) => e,
+            Some(Ok(Ok(_))) => {
+                Error::Engine(format!("aggregation shard {shard} exited before the round ended"))
+            }
+            Some(Err(_)) => Error::Engine(format!("aggregation shard {shard} panicked")),
+            None => Error::Engine(format!("aggregation shard {shard} already failed")),
+        }
+    }
+
+    /// Close the queues, join every worker, merge the partials in shard
+    /// order at the root, and finish. The first worker error (every worker
+    /// is still joined) fails the round.
+    pub fn finish(mut self) -> Result<Vec<f32>> {
+        // dropping the senders disconnects every shard's queue; workers
+        // drain what is buffered, then exit with their partial
+        self.txs.clear();
+        let mut partials: Vec<Box<dyn Aggregator>> = Vec::with_capacity(self.workers.len());
+        let mut first_err: Option<Error> = None;
+        for (i, slot) in self.workers.iter_mut().enumerate() {
+            let Some(handle) = slot.take() else {
+                first_err
+                    .get_or_insert_with(|| Error::Engine(format!("aggregation shard {i} already failed")));
+                continue;
+            };
+            match handle.join() {
+                Ok(Ok(agg)) => partials.push(agg),
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err
+                        .get_or_insert_with(|| Error::Engine(format!("aggregation shard {i} panicked")));
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let mut root = partials.remove(0);
+        for partial in partials {
+            root.merge(partial)?;
+        }
+        root.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::AggregatorKind;
+    use crate::fl::aggregate::make_aggregator;
+    use crate::fl::masking::MaskTarget;
+    use crate::runtime::manifest::LayerInfo;
+    use crate::transport::codec::{encode_update, Encoding};
+    use crate::util::prop::Gen;
+
+    fn one_layer(size: usize) -> Vec<LayerInfo> {
+        vec![LayerInfo {
+            name: "w".into(),
+            shape: vec![size],
+            offset: 0,
+            size,
+            masked: true,
+        }]
+    }
+
+    fn masked_update(g: &mut Gen, p: usize, density: f32) -> Vec<f32> {
+        (0..p)
+            .map(|_| if g.f32_in(0.0, 1.0) < density { g.f32_in(-2.0, 2.0) } else { 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn threaded_sharded_fold_is_bitwise_equal_to_flat_fold() {
+        let mut g = Gen::new(0x7ee5);
+        let p = 96;
+        let layers = one_layer(p);
+        let broadcast = g.normal_vec(p);
+        let payloads: Vec<(u32, Vec<u8>)> = (0..24u32)
+            .map(|c| {
+                let v = masked_update(&mut g, p, 0.3);
+                let enc = *g.choose(Encoding::ALL);
+                (c, encode_update(c, 1, 10 + c, &v, enc))
+            })
+            .collect();
+        for target in [MaskTarget::Weights, MaskTarget::Delta] {
+            let mut flat =
+                make_aggregator(AggregatorKind::FedAvg, target, &broadcast, &layers).unwrap();
+            let mut scratch = DecodeScratch::default();
+            for (_, payload) in &payloads {
+                fold_view(flat.as_mut(), payload, &mut scratch).unwrap();
+            }
+            let reference = flat.finish().unwrap();
+            for shards in [1usize, 2, 8] {
+                let partials: Vec<Box<dyn Aggregator>> = (0..shards)
+                    .map(|_| {
+                        make_aggregator(AggregatorKind::FedAvg, target, &broadcast, &layers)
+                            .unwrap()
+                    })
+                    .collect();
+                let mut tree = ShardedAggregator::spawn(partials).unwrap();
+                assert_eq!(tree.shards(), shards);
+                for (c, payload) in &payloads {
+                    tree.route(*c, payload.clone()).unwrap();
+                }
+                assert_eq!(tree.routed(), payloads.len());
+                let merged = tree.finish().unwrap();
+                assert_eq!(merged, reference, "shards {shards} target {target:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_decode_error_fails_finish_with_the_concrete_cause() {
+        let partials: Vec<Box<dyn Aggregator>> =
+            vec![Box::new(crate::fl::aggregate::StreamingFedAvg::new(4))];
+        let mut tree = ShardedAggregator::spawn(partials).unwrap();
+        tree.route(0, vec![0xde, 0xad, 0xbe, 0xef]).unwrap();
+        let err = tree.finish().unwrap_err();
+        assert!(matches!(err, Error::Parse(_) | Error::Invalid(_)), "{err}");
+    }
+
+    #[test]
+    fn route_after_worker_death_surfaces_the_worker_error() {
+        let partials: Vec<Box<dyn Aggregator>> =
+            vec![Box::new(crate::fl::aggregate::StreamingFedAvg::new(4))];
+        let mut tree = ShardedAggregator::spawn(partials).unwrap();
+        tree.route(0, vec![1, 2, 3]).unwrap();
+        // the worker dies on the garbage; keep routing until the channel
+        // reports it (the queue may accept a few sends first)
+        let good = encode_update(0, 1, 5, &[1.0, 0.0, 0.0, 0.0], Encoding::Auto);
+        let mut surfaced = None;
+        for _ in 0..SHARD_QUEUE_SLOTS + 2 {
+            if let Err(e) = tree.route(0, good.clone()) {
+                surfaced = Some(e);
+                break;
+            }
+        }
+        let err = surfaced.expect("worker death must surface through route");
+        assert!(matches!(err, Error::Parse(_) | Error::Invalid(_)), "{err}");
+    }
+
+    #[test]
+    fn spawn_rejects_zero_shards() {
+        assert!(ShardedAggregator::spawn(Vec::new()).is_err());
+    }
+}

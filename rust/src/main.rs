@@ -32,6 +32,14 @@ const RUN_OPTS: &[OptSpec] = &[
         "downlink-delta",
         "ship the broadcast as an encoded delta over the downlink wire (overrides config)",
     ),
+    OptSpec::value(
+        "agg-shards",
+        "aggregation tree width: 1 = single-threaded fold, N>1 = N shard workers (overrides config)",
+    ),
+    OptSpec::value(
+        "drain-poll-ms",
+        "upload drain poll interval in milliseconds (overrides config)",
+    ),
 ];
 
 const EQ6_OPTS: &[OptSpec] = &[
@@ -80,6 +88,18 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     if args.has_flag("downlink-delta") {
         cfg.downlink_delta = true;
     }
+    if let Some(spec) = args.get("agg-shards") {
+        cfg.agg_shards = spec
+            .parse::<usize>()
+            .map_err(|_| fedmask::Error::invalid(format!("--agg-shards: not a count: {spec}")))?;
+    }
+    if let Some(spec) = args.get("drain-poll-ms") {
+        cfg.drain_poll_ms = spec
+            .parse::<u64>()
+            .map_err(|_| fedmask::Error::invalid(format!("--drain-poll-ms: not a duration: {spec}")))?;
+    }
+    // overrides bypass load-time validation; re-check the merged config
+    cfg.validate()?;
     if let Some(path) = args.get("save-config") {
         cfg.save(std::path::Path::new(path))?;
     }

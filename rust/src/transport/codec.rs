@@ -100,6 +100,41 @@ pub fn peek_client(payload: &[u8]) -> Option<u32> {
         .map(|b| u32::from_le_bytes(b.try_into().expect("4-byte slice")))
 }
 
+/// The fixed-header fields a server can validate *without* decoding the
+/// body: who the message claims to be from, which round it belongs to,
+/// its sample weight, and the model width it was encoded against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeekedHeader {
+    pub client: u32,
+    pub round: u32,
+    pub n_samples: u32,
+    pub p: u32,
+}
+
+/// Read the full fixed header — magic, version, and the four routing
+/// fields — without touching the body. The sharded aggregation path uses
+/// this to run the round's cohort checks (round, membership, duplicate,
+/// width) on the drain thread, then ships the *undecoded* payload to its
+/// shard worker, which decodes and folds in parallel. `None` means the
+/// bytes cannot be one of our messages (too short, wrong magic, or wrong
+/// version) — the body itself is still only validated by the real decode.
+pub fn peek_header(payload: &[u8]) -> Option<PeekedHeader> {
+    if payload.len() < HEADER_BYTES {
+        return None;
+    }
+    let magic = u16::from_le_bytes(payload[0..2].try_into().expect("2-byte slice"));
+    if magic != MAGIC || payload[2] != VERSION {
+        return None;
+    }
+    let word = |at: usize| u32::from_le_bytes(payload[at..at + 4].try_into().expect("4-byte slice"));
+    Some(PeekedHeader {
+        client: word(4),
+        round: word(8),
+        n_samples: word(12),
+        p: word(16),
+    })
+}
+
 /// Quantized-body prefix: min f32 + scale f32.
 const QHEADER: usize = 8;
 
@@ -1438,6 +1473,27 @@ mod tests {
             assert_eq!(Encoding::parse(enc.as_str()).unwrap(), enc);
         }
         assert!(Encoding::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn peek_header_reads_routing_fields_without_decoding() {
+        for &enc in Encoding::ALL {
+            let payload = encode_update(9, 41, 130, &[1.5, 0.0, -2.0], enc);
+            let h = peek_header(&payload).unwrap();
+            assert_eq!(h.client, 9, "{enc:?}");
+            assert_eq!(h.round, 41, "{enc:?}");
+            assert_eq!(h.n_samples, 130, "{enc:?}");
+            assert_eq!(h.p, 3, "{enc:?}");
+            assert_eq!(peek_client(&payload), Some(9));
+        }
+        // too short, wrong magic, wrong version: all None, never a panic
+        assert_eq!(peek_header(&[0u8; 23]), None);
+        let mut bad = encode_update(1, 2, 3, &[1.0], Encoding::Dense);
+        bad[0] ^= 0xff;
+        assert_eq!(peek_header(&bad), None);
+        let mut bad = encode_update(1, 2, 3, &[1.0], Encoding::Dense);
+        bad[2] = VERSION + 1;
+        assert_eq!(peek_header(&bad), None);
     }
 
     #[test]

@@ -14,11 +14,15 @@
 //!   syscalls; the bitwise reference.
 //! * [`socket::Loopback`] (`--transport tcp|uds`) — real framed sockets:
 //!   TCP on an ephemeral 127.0.0.1 port, or a unix-domain socket in the
-//!   temp dir. One **persistent, token-authenticated duplex connection
-//!   per registered client**: the round's encoded broadcast goes down and
-//!   the upload comes back on the same kernel socket, and every upload is
-//!   verified against its session (token + claimed client id) before any
-//!   payload decode ([`session`]).
+//!   temp dir, served by a single-threaded nonblocking **reactor** (no
+//!   thread-per-connection). One **persistent, token-authenticated duplex
+//!   connection per registered client**: the round's encoded broadcast
+//!   goes down and the upload comes back on the same kernel socket, and
+//!   every upload is verified against its session (token + claimed client
+//!   id) before any payload decode ([`session`]). Session and peer state
+//!   is sharded by [`session::shard_of`]; admission is capped and idle
+//!   pre-auth connections reaped per [`socket::ServerTuning`]. See
+//!   `docs/SCALE.md`.
 //! * [`link::Simulated`] (`network = "simulated"` wraps either of the
 //!   above) — re-orders each round's upload deliveries by
 //!   [`NetworkModel::upload_time`], so arrival order models link speed
@@ -88,9 +92,11 @@
 //!   registration, downlink pushes), the in-process default, and the
 //!   [`NetworkModel`]-timed wrapper.
 //! * [`session`] — per-client session tokens: the registration
-//!   handshake, and upload verification that runs before any decode.
-//! * [`socket`] — the TCP/UDS server + the persistent per-client duplex
-//!   connection ([`socket::ClientConn`]).
+//!   handshake, upload verification that runs before any decode, and the
+//!   client-id shard hash ([`session::shard_of`]) with the sharded
+//!   session table ([`session::SessionShards`]).
+//! * [`socket`] — the reactor-driven TCP/UDS server + the persistent
+//!   per-client duplex connection ([`socket::ClientConn`]).
 //! * [`quantize`] — optional 8-bit and 4-bit linear quantization layered
 //!   on either encoding (paper §1: the methods "can also be combined with
 //!   cutting-edge compression algorithms").
@@ -120,5 +126,7 @@ pub use frame::{
 };
 pub use link::{DownlinkSource, InProcess, Simulated, Transport, TransportKind, UploadSink};
 pub use network::NetworkModel;
-pub use session::{hello_payload, validate_upload, Session, SessionTable, TokenMint};
-pub use socket::{ClientConn, Loopback, WireAddr};
+pub use session::{
+    hello_payload, shard_of, validate_upload, Session, SessionShards, SessionTable, TokenMint,
+};
+pub use socket::{ClientConn, Loopback, ServerTuning, WireAddr};

@@ -29,10 +29,24 @@
 
 use std::collections::HashMap;
 use std::hash::{BuildHasher, Hasher};
+use std::sync::Mutex;
 
 use crate::transport::codec::peek_client;
 use crate::transport::frame::{Frame, FrameKind, NO_TOKEN};
 use crate::util::error::{Error, Result};
+
+/// Which of `shards` slots owns `client` — a Fibonacci multiplicative hash
+/// of the id, not `id % shards`, so the common sequentially-numbered fleet
+/// spreads across shards even when `shards` divides the id stride. The
+/// same function routes session lookups, peer-writer lookups, and
+/// tree-aggregation payloads, so one client's state always lives in one
+/// shard everywhere. Deterministic by construction: shard *assignment*
+/// may never affect results (the merge property tests pin that), but a
+/// stable mapping keeps logs and tests reproducible.
+pub fn shard_of(client: u32, shards: usize) -> usize {
+    debug_assert!(shards > 0, "shard count must be positive");
+    ((client as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15) >> 33) as usize % shards.max(1)
+}
 
 /// Mints per-session tokens: random non-zero u64s seeded from OS process
 /// entropy (`RandomState`), never from the experiment seed — tokens must
@@ -141,6 +155,81 @@ impl SessionTable {
     /// Token of a live session, if any (tests / the downlink writer).
     pub fn token_of(&self, client: u32) -> Option<u64> {
         self.active.get(&client).copied()
+    }
+}
+
+/// [`SessionTable`] sharded by client-id hash: `N` independent locks, so
+/// the reactor thread, the downlink writer, and registration calls only
+/// contend when they touch the *same* shard. Each shard is a complete
+/// `SessionTable`; a client's whole lifecycle (allow → handshake → end)
+/// stays inside [`shard_of`]`(client)`'s shard.
+///
+/// Shared-state synchronization note: every method takes `&self` and locks
+/// exactly one shard, so no lock ordering exists to get wrong. A poisoned
+/// shard (a panic while holding the lock) is returned as a typed error
+/// rather than unwound into the caller.
+#[derive(Debug)]
+pub struct SessionShards {
+    shards: Vec<Mutex<SessionTable>>,
+}
+
+impl SessionShards {
+    /// `n` independent shards (clamped to at least 1).
+    pub fn new(n: usize) -> SessionShards {
+        SessionShards {
+            shards: (0..n.max(1)).map(|_| Mutex::new(SessionTable::new())).collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard(&self, client: u32) -> Result<std::sync::MutexGuard<'_, SessionTable>> {
+        self.shards[shard_of(client, self.shards.len())]
+            .lock()
+            .map_err(|_| Error::transport("session shard poisoned"))
+    }
+
+    /// Open the registration window for `clients`, each in its own shard.
+    pub fn allow(&self, clients: &[u32]) -> Result<()> {
+        for &c in clients {
+            self.shard(c)?.allow(&[c]);
+        }
+        Ok(())
+    }
+
+    /// Route a hello to its client's shard and run the handshake there.
+    /// A hello too malformed to even name a client falls to shard 0, whose
+    /// `SessionTable` produces the same typed rejection a flat table would.
+    pub fn handshake(&self, frame: &Frame) -> Result<Session> {
+        let client = frame
+            .payload
+            .as_slice()
+            .try_into()
+            .map(u32::from_le_bytes)
+            .unwrap_or(0);
+        self.shard(client)?.handshake(frame)
+    }
+
+    /// Close `session` in its owner's shard (owner-checked, like
+    /// [`SessionTable::end`]).
+    pub fn end(&self, session: Session) -> Result<()> {
+        self.shard(session.client)?.end(session);
+        Ok(())
+    }
+
+    /// Token of a live session, if any.
+    pub fn token_of(&self, client: u32) -> Result<Option<u64>> {
+        Ok(self.shard(client)?.token_of(client))
+    }
+
+    /// Total registered ids across all shards.
+    pub fn registered_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().map(|t| t.registered().len()).unwrap_or(0))
+            .sum()
     }
 }
 
@@ -260,6 +349,49 @@ mod tests {
         assert_eq!(table.token_of(8), Some(second.token));
         table.end(second);
         assert_eq!(table.token_of(8), None);
+    }
+
+    #[test]
+    fn shard_of_is_stable_in_range_and_spreads_sequential_ids() {
+        for shards in [1usize, 2, 8, 13] {
+            let mut hit = vec![false; shards];
+            for c in 0..256u32 {
+                let s = shard_of(c, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_of(c, shards), "must be deterministic");
+                hit[s] = true;
+            }
+            assert!(hit.iter().all(|&h| h), "sequential ids must reach every one of {shards} shards");
+        }
+    }
+
+    #[test]
+    fn sharded_sessions_behave_like_one_table() {
+        let shards = SessionShards::new(4);
+        assert_eq!(shards.shard_count(), 4);
+        let ids: Vec<u32> = (0..16).collect();
+        shards.allow(&ids).unwrap();
+        assert_eq!(shards.registered_count(), 16);
+        // handshakes route to their shard and mint distinct tokens
+        let a = shards.handshake(&hello(3)).unwrap();
+        let b = shards.handshake(&hello(7)).unwrap();
+        assert_ne!(a.token, NO_TOKEN);
+        assert_ne!(a.token, b.token);
+        assert_eq!(shards.token_of(3).unwrap(), Some(a.token));
+        // the duplicate-hello and unregistered rejections survive sharding
+        assert!(shards.handshake(&hello(3)).is_err());
+        assert!(shards.handshake(&hello(99)).is_err());
+        // a malformed hello (no parseable id) is the same typed rejection
+        let mut bad = hello(3);
+        bad.payload = vec![1, 2];
+        let err = shards.handshake(&bad).unwrap_err();
+        assert!(matches!(err, Error::Auth(_)), "{err}");
+        // end is owner-checked per shard
+        shards.end(a).unwrap();
+        assert_eq!(shards.token_of(3).unwrap(), None);
+        let again = shards.handshake(&hello(3)).unwrap();
+        shards.end(a).unwrap(); // stale closer: must not evict the successor
+        assert_eq!(shards.token_of(3).unwrap(), Some(again.token));
     }
 
     #[test]

@@ -1,10 +1,14 @@
 //! Real socket transport: persistent, token-authenticated duplex TCP /
-//! unix-domain sessions on localhost.
+//! unix-domain sessions on localhost, served by a single-threaded
+//! readiness reactor.
 //!
-//! [`Loopback`] is the server half: it binds a listener, runs an accept
-//! loop on a background thread, and gives every accepted connection its
-//! own session thread. Since the full-duplex refactor a connection is a
-//! **session**, not a drop box:
+//! [`Loopback`] is the server half: it binds a listener and runs **one**
+//! background reactor thread that owns every connection. The pre-reactor
+//! design gave each accepted connection its own blocking session thread —
+//! fine at tens of clients, pathological at thousands (a 10k-client
+//! fan-in means 10k stacks and a scheduler storm). The reactor instead
+//! keeps every socket nonblocking and drives a per-connection
+//! [`FrameReader`] state machine from a level-triggered scan loop:
 //!
 //! 1. the first frame must be a `hello` naming a registered client id —
 //!    the server mints a per-client token ([`crate::transport::session`])
@@ -16,57 +20,66 @@
 //!    same socket, so the downlink genuinely crosses the kernel —
 //!    [`ClientConn::recv_broadcast`] is where a client job picks it up.
 //!
-//! The client half is [`ClientConn`]: one persistent connection per
-//! registered client, created by [`Transport::register_clients`] and held
-//! for the run — replacing the old connect-per-upload sender, which both
-//! made every upload anonymous and paid a connect per message.
+//! Server-side state is sharded by [`shard_of`] — the same Fibonacci hash
+//! that routes aggregation payloads — so session tables and peer maps
+//! ([`SessionShards`], peer shards) never contend on one lock.
+//!
+//! **Admission control.** The reactor accepts at most
+//! [`ServerTuning::max_conns`] live connections; a connection past the
+//! cap is closed before any frame is read, which the connecting client
+//! surfaces as a typed refusal ("registration refused?"). A connection
+//! that completes TCP accept but never sends its `hello` is reaped after
+//! [`ServerTuning::handshake_timeout`] — idle pre-auth sockets cannot
+//! accumulate.
 //!
 //! **Malformed and spoofing peers cannot take the round down.** A
 //! connection that sends a bad magic, an unsupported version, an over-cap
-//! length, or disconnects mid-frame is dropped with a warning at its own
-//! session thread; a hello for an unregistered or already-active client,
-//! or an upload whose token/claimed-id fails verification, is dropped the
-//! same way with a typed [`Error::Auth`] logged — in every case before
-//! any codec decode, and without disturbing the rest of the cohort.
-//! Payload *content* is still validated one layer up (codec decode +
-//! cohort matching, on a bounded per-round budget), and the queue between
-//! session threads and that loop is bounded ([`UPLOAD_QUEUE_SLOTS`]), so
-//! a flood of framing-valid garbage backpressures the sender instead of
-//! growing server memory. Connection *count* is bounded only by the OS —
-//! acceptable for a loopback transport; a non-loopback server needs a
-//! connection cap or reader pool (ROADMAP).
+//! length, or disconnects mid-frame is torn down by the reactor with a
+//! warning; a hello for an unregistered or already-active client, or an
+//! upload whose token/claimed-id fails verification, is dropped the same
+//! way with a typed [`Error::Auth`] logged — in every case before any
+//! codec decode, and without disturbing the rest of the cohort. Payload
+//! *content* is still validated one layer up (codec decode + cohort
+//! matching, on a bounded per-round budget), and the queue between the
+//! reactor and that loop is bounded ([`UPLOAD_QUEUE_SLOTS`]), so a flood
+//! of framing-valid garbage backpressures the wire instead of growing
+//! server memory.
 //!
 //! **Trust model.** The session token bounds *blind* spoofing: a local
 //! process that merely knows the port can no longer forge a selected
 //! client's upload (the pre-refactor hole). It does not bound an observer
 //! — the token crosses the loopback in the clear, so a peer that can read
 //! the traffic could replay it, and registration itself is first-come
-//! within the (brief) `register_clients` window. Upgrading the credential
-//! to a keyed MAC over the payload is the documented next step before any
+//! within the (brief) registration window. Upgrading the credential to a
+//! keyed MAC over the payload is the documented next step before any
 //! non-loopback bind — tracked in ROADMAP.md.
 //!
 //! The payload bytes on the wire are exactly the bytes [`InProcess`]
 //! would have carried, in both directions — the integration suite pins
-//! the aggregate bitwise identical across all three transports.
+//! the aggregate bitwise identical across all three transports. See
+//! `docs/SCALE.md` for the reactor's event loop and the sharding
+//! topology.
 //!
 //! [`InProcess`]: crate::transport::link::InProcess
 
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::transport::codec::peek_client;
-use crate::transport::frame::{write_frame, Frame, FrameKind, FrameStream, NO_TOKEN};
+use crate::transport::frame::{
+    frame_bytes, write_frame, Frame, FrameKind, FrameReader, FrameStream, NO_TOKEN,
+};
 use crate::transport::link::{
     poll_channel, recv_deadline, DownlinkSource, Transport, TransportKind, UploadSink,
 };
-use crate::transport::session::{hello_payload, validate_upload, Session, SessionTable};
+use crate::transport::session::{hello_payload, shard_of, validate_upload, SessionShards};
 use crate::util::error::{Error, Result};
 
 #[cfg(unix)]
@@ -88,17 +101,62 @@ impl std::fmt::Display for WireAddr {
     }
 }
 
-/// How long a connecting client waits for the `welcome` reply.
+/// How long a connecting client waits for the `welcome` reply; also the
+/// default server-side pre-auth reap deadline.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// Bound on queued-but-unconsumed uploads. Session threads block (and the
-/// peer's writes stall — natural backpressure) once this many frames sit
+/// Bound on queued-but-unconsumed uploads. The reactor stalls (and the
+/// peers' writes stall — natural backpressure) once this many frames sit
 /// undrained, so a framing-valid flood cannot grow server memory without
 /// limit; per-frame size is separately capped by the frame layer.
 const UPLOAD_QUEUE_SLOTS: usize = 64;
 
+/// Per-connection read budget per reactor tick: a firehose peer yields to
+/// the rest of the cohort after this many bytes and is revisited next
+/// tick, so one fast writer cannot starve 10k slow ones.
+const CONN_READ_BUDGET: usize = 256 * 1024;
+
+/// Deadline for the nonblocking `welcome` write. The frame is 16 bytes
+/// into an empty kernel buffer — missing this means the peer is gone.
+const WELCOME_WRITE_DEADLINE: Duration = Duration::from_secs(1);
+
+/// Deadline for one nonblocking downlink `broadcast` write. A client that
+/// stops reading for this long has effectively disconnected; the failure
+/// is logged and its job errors out client-side.
+const DOWNLINK_WRITE_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Reactor sleep bounds for the idle backoff: 1 ms while traffic is
+/// recent, doubling to 10 ms when the wire goes quiet.
+const IDLE_SLEEP_MIN: Duration = Duration::from_millis(1);
+const IDLE_SLEEP_MAX: Duration = Duration::from_millis(10);
+
 /// Uniquifier for unix socket paths within one process.
 static UDS_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Server knobs for [`Loopback::bind_with`]: admission cap, pre-auth reap
+/// deadline, and how many ways the session/peer state is sharded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerTuning {
+    /// Maximum live connections; over-cap accepts are closed before any
+    /// frame is read. Size to the fleet — every registered client holds
+    /// one persistent connection.
+    pub max_conns: usize,
+    /// How long an accepted connection may sit without completing its
+    /// `hello` before the reactor reaps it.
+    pub handshake_timeout: Duration,
+    /// Shard count for the session table and peer map.
+    pub session_shards: usize,
+}
+
+impl Default for ServerTuning {
+    fn default() -> ServerTuning {
+        ServerTuning {
+            max_conns: 4096,
+            handshake_timeout: HANDSHAKE_TIMEOUT,
+            session_shards: 8,
+        }
+    }
+}
 
 /// One duplex byte stream, TCP or unix-domain.
 #[derive(Debug)]
@@ -152,6 +210,15 @@ impl Stream {
         }
         .map_err(|e| Error::transport(format!("set read timeout: {e}")))
     }
+
+    fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_nonblocking(nb),
+        }
+        .map_err(|e| Error::transport(format!("set nonblocking: {e}")))
+    }
 }
 
 impl Read for Stream {
@@ -182,6 +249,33 @@ impl Write for Stream {
     }
 }
 
+/// Write all of `bytes` to a **nonblocking** stream, spinning (briefly)
+/// through `WouldBlock` until `deadline`. Server-side write halves are
+/// clones of reactor-owned sockets and share their nonblocking mode, so a
+/// plain `write_all` would error the moment a kernel buffer filled.
+fn nb_write_all(stream: &mut Stream, bytes: &[u8], deadline: Duration) -> Result<()> {
+    let start = Instant::now();
+    let mut at = 0usize;
+    while at < bytes.len() {
+        match stream.write(&bytes[at..]) {
+            Ok(0) => return Err(Error::transport("connection closed mid-write")),
+            Ok(n) => at += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if start.elapsed() >= deadline {
+                    return Err(Error::transport(format!(
+                        "write stalled past {deadline:?} ({at}/{} bytes)",
+                        bytes.len()
+                    )));
+                }
+                std::thread::sleep(Duration::from_micros(500));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::transport(format!("write: {e}"))),
+        }
+    }
+    Ok(())
+}
+
 /// The client half of one persistent duplex session: holds the socket and
 /// the token the server issued at registration. One exists per registered
 /// client for the lifetime of the run; a client job locks it to receive
@@ -196,8 +290,8 @@ pub struct ClientConn {
 impl ClientConn {
     /// Connect and run the registration handshake: `hello(client)` out,
     /// `welcome(token)` back. Fails (typed) if the server refuses the
-    /// registration — unregistered id, duplicate session — or the reply
-    /// does not arrive within [`HANDSHAKE_TIMEOUT`].
+    /// registration — unregistered id, duplicate session, connection cap
+    /// — or the reply does not arrive within [`HANDSHAKE_TIMEOUT`].
     pub fn connect(addr: &WireAddr, client: u32) -> Result<ClientConn> {
         let mut stream = Stream::connect(addr)?;
         write_frame(&mut stream, FrameKind::Hello, NO_TOKEN, &hello_payload(client))?;
@@ -270,168 +364,379 @@ struct Peer {
     writer: Stream,
 }
 
-type Peers = Arc<Mutex<HashMap<u32, Peer>>>;
-
-/// Run one accepted connection as a session: handshake, then verify and
-/// forward uploads until disconnect. Every rejection path logs and drops
-/// *this* connection only.
-fn serve_conn(
-    peer_name: &str,
-    mut stream: Stream,
-    sessions: &Arc<Mutex<SessionTable>>,
-    peers: &Peers,
-    tx: &SyncSender<Vec<u8>>,
-) {
-    let mut frames = FrameStream::new();
-    // --- handshake (bounded: a peer that connects and stalls before
-    // registering must not pin this thread forever) ---
-    let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
-    let hello = match frames.next(&mut stream) {
-        Ok(Some(f)) => f,
-        // A clean immediate close (e.g. the shutdown wake-up poke) is not
-        // worth a log line.
-        Ok(None) => return,
-        Err(e) => {
-            log::warn!("transport: dropping malformed peer {peer_name}: {e}");
-            return;
-        }
-    };
-    let session: Session = {
-        let Ok(mut table) = sessions.lock() else { return };
-        match table.handshake(&hello) {
-            Ok(s) => s,
-            Err(e) => {
-                log::warn!("transport: refusing peer {peer_name}: {e}");
-                return;
-            }
-        }
-    };
-    let cleanup = |sessions: &Arc<Mutex<SessionTable>>, peers: &Peers| {
-        if let Ok(mut table) = sessions.lock() {
-            table.end(session);
-        }
-        if let Ok(mut map) = peers.lock() {
-            // only evict our own entry — a successor session may have
-            // replaced it already
-            if map.get(&session.client).map(|p| p.token) == Some(session.token) {
-                map.remove(&session.client);
-            }
-        }
-    };
-    let writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(e) => {
-            log::warn!("transport: peer {peer_name}: {e}");
-            cleanup(sessions, peers);
-            return;
-        }
-    };
-    if let Ok(mut map) = peers.lock() {
-        map.insert(session.client, Peer { token: session.token, writer });
-    }
-    // The peers entry must exist before the welcome goes out: the moment
-    // the client reads it, registration returns and the server may push a
-    // downlink.
-    if let Err(e) = write_frame(&mut stream, FrameKind::Welcome, session.token, &[])
-        .and_then(|_| stream.flush().map_err(Into::into))
-    {
-        log::warn!("transport: peer {peer_name}: welcome failed: {e}");
-        cleanup(sessions, peers);
-        return;
-    }
-    // --- session loop: verified uploads only. A registered session may
-    // sit idle for many rounds (not every client is sampled every round),
-    // so reads block without a timeout from here on; EOF is the
-    // disconnect signal. ---
-    let _ = stream.set_read_timeout(None);
-    loop {
-        match frames.next(&mut stream) {
-            Ok(Some(frame)) => {
-                if let Err(e) = validate_upload(&frame, session) {
-                    log::warn!(
-                        "transport: rejecting spoofed upload from peer {peer_name} \
-                         (client {}): {e}",
-                        session.client
-                    );
-                    break;
-                }
-                // Receiver gone = server shut down mid-drain; nothing to do.
-                let _ = tx.send(frame.payload);
-            }
-            Ok(None) => break, // clean disconnect
-            Err(e) => {
-                log::warn!("transport: dropping malformed peer {peer_name}: {e}");
-                break;
-            }
-        }
-    }
-    cleanup(sessions, peers);
+/// Peer map sharded by the same client-id hash that routes sessions and
+/// aggregation payloads: the reactor inserting one client's peer never
+/// contends with the downlink writer pushing to another shard.
+struct PeerShards {
+    shards: Vec<Mutex<HashMap<u32, Peer>>>,
 }
 
-/// Shared accept loop for both listener flavors: `accept` blocks for the
-/// next connection or errors; each accepted stream gets its own session
-/// thread. Exits once the shutdown flag is observed after a wake-up
-/// connection (or an accept error).
-fn spawn_accept_loop<A>(
-    mut accept: A,
-    sessions: Arc<Mutex<SessionTable>>,
-    peers: Peers,
-    tx: SyncSender<Vec<u8>>,
-    shutdown: Arc<AtomicBool>,
-) -> JoinHandle<()>
-where
-    A: FnMut() -> std::io::Result<(Stream, String)> + Send + 'static,
-{
-    std::thread::spawn(move || loop {
-        match accept() {
-            Ok((stream, peer)) => {
-                if shutdown.load(Ordering::SeqCst) {
-                    break;
-                }
-                let sessions = Arc::clone(&sessions);
-                let peers = Arc::clone(&peers);
-                let tx = tx.clone();
-                std::thread::spawn(move || serve_conn(&peer, stream, &sessions, &peers, &tx));
-            }
-            Err(e) => {
-                if shutdown.load(Ordering::SeqCst) {
-                    break;
-                }
-                log::warn!("transport: accept failed: {e}");
-                // Persistent accept errors (e.g. fd exhaustion) must not
-                // busy-spin the loop and flood the log.
-                std::thread::sleep(Duration::from_millis(50));
+impl PeerShards {
+    fn new(n: usize) -> PeerShards {
+        PeerShards {
+            shards: (0..n.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, client: u32) -> &Mutex<HashMap<u32, Peer>> {
+        &self.shards[shard_of(client, self.shards.len())]
+    }
+
+    fn insert(&self, client: u32, peer: Peer) {
+        if let Ok(mut map) = self.shard(client).lock() {
+            map.insert(client, peer);
+        }
+    }
+
+    /// Evict `client`'s entry only if it still belongs to `token` — a
+    /// successor session may have replaced it already.
+    fn evict_if(&self, client: u32, token: u64) {
+        if let Ok(mut map) = self.shard(client).lock() {
+            if map.get(&client).map(|p| p.token) == Some(token) {
+                map.remove(&client);
             }
         }
-    })
+    }
+
+    /// Clone `client`'s write half and its session token.
+    fn writer_of(&self, client: u32) -> Option<(Result<Stream>, u64)> {
+        self.shard(client)
+            .lock()
+            .ok()
+            .and_then(|map| map.get(&client).map(|p| (p.writer.try_clone(), p.token)))
+    }
+}
+
+/// Nonblocking listener, TCP or unix-domain.
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(true),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(true),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<(Stream, String)> {
+        match self {
+            Listener::Tcp(l) => {
+                let (stream, peer) = l.accept()?;
+                Ok((Stream::Tcp(stream), peer.to_string()))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (stream, _) = l.accept()?;
+                Ok((Stream::Unix(stream), "uds-peer".to_string()))
+            }
+        }
+    }
+}
+
+/// Where one reactor-owned connection is in its lifecycle.
+enum ConnState {
+    /// Accepted, no `hello` yet; reaped once `opened` is older than the
+    /// handshake timeout.
+    Handshaking { opened: Instant },
+    /// Authenticated: uploads are verified against this session.
+    Established(crate::transport::session::Session),
+}
+
+/// One connection under the reactor: its nonblocking socket, its
+/// incremental frame decoder, and its lifecycle state.
+struct Conn {
+    stream: Stream,
+    reader: FrameReader,
+    state: ConnState,
+    peer: String,
+}
+
+/// What the reactor should do with a connection after servicing it.
+enum Fate {
+    Keep,
+    Close,
+}
+
+/// Deliver one verified upload to the drain loop's bounded queue,
+/// retrying through `Full` so wire backpressure is preserved. Checking
+/// the shutdown flag inside the retry loop is what keeps [`Loopback`]'s
+/// `Drop` deadlock-free: a full queue during teardown (receiver alive but
+/// nobody draining) would otherwise pin the reactor in `send` forever and
+/// hang the join.
+fn deliver_upload(tx: &SyncSender<Vec<u8>>, shutdown: &AtomicBool, payload: Vec<u8>) -> bool {
+    let mut payload = payload;
+    loop {
+        match tx.try_send(payload) {
+            Ok(()) => return true,
+            Err(TrySendError::Full(p)) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return false;
+                }
+                payload = p;
+                std::thread::sleep(IDLE_SLEEP_MIN);
+            }
+            Err(TrySendError::Disconnected(_)) => return false,
+        }
+    }
+}
+
+/// Handle one completed frame on `conn`. Returns the connection's fate;
+/// every rejection path logs and drops *this* connection only.
+fn on_frame(
+    conn: &mut Conn,
+    frame: Frame,
+    sessions: &SessionShards,
+    peers: &PeerShards,
+    tx: &SyncSender<Vec<u8>>,
+    shutdown: &AtomicBool,
+) -> Fate {
+    match conn.state {
+        ConnState::Handshaking { .. } => {
+            let session = match sessions.handshake(&frame) {
+                Ok(s) => s,
+                Err(e) => {
+                    log::warn!("transport: refusing peer {}: {e}", conn.peer);
+                    return Fate::Close;
+                }
+            };
+            let end = |sessions: &SessionShards| {
+                let _ = sessions.end(session);
+            };
+            let writer = match conn.stream.try_clone() {
+                Ok(w) => w,
+                Err(e) => {
+                    log::warn!("transport: peer {}: {e}", conn.peer);
+                    end(sessions);
+                    return Fate::Close;
+                }
+            };
+            // The peers entry must exist before the welcome goes out: the
+            // moment the client reads it, registration returns and the
+            // server may push a downlink.
+            peers.insert(session.client, Peer { token: session.token, writer });
+            let welcome = match frame_bytes(FrameKind::Welcome, session.token, &[]) {
+                Ok(b) => b,
+                Err(e) => {
+                    log::warn!("transport: peer {}: welcome failed: {e}", conn.peer);
+                    peers.evict_if(session.client, session.token);
+                    end(sessions);
+                    return Fate::Close;
+                }
+            };
+            if let Err(e) = nb_write_all(&mut conn.stream, &welcome, WELCOME_WRITE_DEADLINE) {
+                log::warn!("transport: peer {}: welcome failed: {e}", conn.peer);
+                peers.evict_if(session.client, session.token);
+                end(sessions);
+                return Fate::Close;
+            }
+            conn.state = ConnState::Established(session);
+            Fate::Keep
+        }
+        ConnState::Established(session) => {
+            if let Err(e) = validate_upload(&frame, session) {
+                log::warn!(
+                    "transport: rejecting spoofed upload from peer {} (client {}): {e}",
+                    conn.peer,
+                    session.client
+                );
+                return Fate::Close;
+            }
+            if deliver_upload(tx, shutdown, frame.payload) {
+                Fate::Keep
+            } else {
+                // Receiver gone = server shutting down; nothing to do.
+                Fate::Close
+            }
+        }
+    }
+}
+
+/// Service one connection: read until `WouldBlock` (or the per-tick
+/// budget), feeding the frame decoder and handling completed frames.
+fn service_conn(
+    conn: &mut Conn,
+    buf: &mut [u8],
+    sessions: &SessionShards,
+    peers: &PeerShards,
+    tx: &SyncSender<Vec<u8>>,
+    shutdown: &AtomicBool,
+    activity: &mut bool,
+) -> Fate {
+    let mut budget = CONN_READ_BUDGET;
+    loop {
+        match conn.stream.read(buf) {
+            Ok(0) => {
+                if conn.reader.mid_frame() {
+                    log::warn!("transport: peer {} disconnected mid-frame", conn.peer);
+                }
+                return Fate::Close; // EOF: clean disconnect
+            }
+            Ok(n) => {
+                *activity = true;
+                let mut chunk = &buf[..n];
+                while !chunk.is_empty() {
+                    match conn.reader.feed(chunk) {
+                        Ok((used, done)) => {
+                            chunk = &chunk[used..];
+                            if let Some(frame) = done {
+                                if let Fate::Close =
+                                    on_frame(conn, frame, sessions, peers, tx, shutdown)
+                                {
+                                    return Fate::Close;
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            log::warn!(
+                                "transport: dropping malformed peer {}: {e}",
+                                conn.peer
+                            );
+                            return Fate::Close;
+                        }
+                    }
+                }
+                budget = budget.saturating_sub(n);
+                if budget == 0 {
+                    return Fate::Keep; // firehose: revisit next tick
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Fate::Keep,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => {
+                log::warn!("transport: dropping peer {}: {e}", conn.peer);
+                return Fate::Close;
+            }
+        }
+    }
+}
+
+/// End an authenticated connection's session and evict its peer entry.
+fn teardown(conn: Conn, sessions: &SessionShards, peers: &PeerShards) {
+    if let ConnState::Established(session) = conn.state {
+        let _ = sessions.end(session);
+        peers.evict_if(session.client, session.token);
+    }
+}
+
+/// The reactor: one thread, every connection. Per tick it drains pending
+/// accepts (enforcing the admission cap), reads each connection to
+/// `WouldBlock` through its frame decoder, reaps stale pre-auth
+/// connections, and sleeps with a short backoff when the wire is idle.
+/// Exits when the shutdown flag is raised — no wake-up poke needed, the
+/// listener never blocks.
+fn run_reactor(
+    listener: Listener,
+    sessions: Arc<SessionShards>,
+    peers: Arc<PeerShards>,
+    tx: SyncSender<Vec<u8>>,
+    shutdown: Arc<AtomicBool>,
+    tuning: ServerTuning,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut idle = IDLE_SLEEP_MIN;
+    while !shutdown.load(Ordering::SeqCst) {
+        let mut activity = false;
+        // --- admit ---
+        loop {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    activity = true;
+                    if conns.len() >= tuning.max_conns {
+                        log::warn!(
+                            "transport: refusing peer {peer}: connection cap {} reached",
+                            tuning.max_conns
+                        );
+                        continue; // stream drops here: peer sees EOF
+                    }
+                    if let Err(e) = stream.set_nonblocking(true) {
+                        log::warn!("transport: peer {peer}: {e}");
+                        continue;
+                    }
+                    conns.push(Conn {
+                        stream,
+                        reader: FrameReader::new(),
+                        state: ConnState::Handshaking { opened: Instant::now() },
+                        peer,
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log::warn!("transport: accept failed: {e}");
+                    break; // backoff below paces retries (e.g. fd exhaustion)
+                }
+            }
+        }
+        // --- service + reap ---
+        let mut i = 0;
+        while i < conns.len() {
+            let reap = matches!(
+                conns[i].state,
+                ConnState::Handshaking { opened } if opened.elapsed() > tuning.handshake_timeout
+            );
+            if reap {
+                log::warn!(
+                    "transport: reaping peer {} (no hello within {:?})",
+                    conns[i].peer,
+                    tuning.handshake_timeout
+                );
+                teardown(conns.swap_remove(i), &sessions, &peers);
+                continue;
+            }
+            match service_conn(
+                &mut conns[i],
+                &mut buf,
+                &sessions,
+                &peers,
+                &tx,
+                &shutdown,
+                &mut activity,
+            ) {
+                Fate::Keep => i += 1,
+                Fate::Close => teardown(conns.swap_remove(i), &sessions, &peers),
+            }
+        }
+        // --- pace ---
+        if activity {
+            idle = IDLE_SLEEP_MIN;
+        } else {
+            std::thread::sleep(idle);
+            idle = (idle * 2).min(IDLE_SLEEP_MAX);
+        }
+    }
 }
 
 /// Dedicated downlink writer: drains (client, payload) sends and writes
 /// each as a `broadcast` frame on that client's session. A write that
-/// blocks on a full kernel buffer stalls only this thread — the server's
-/// round loop keeps draining uploads, which is what eventually frees the
-/// blocked reader and the buffer (no deadlock by construction).
+/// stalls on a full kernel buffer stalls only this thread (bounded by
+/// [`DOWNLINK_WRITE_DEADLINE`]) — the server's round loop keeps draining
+/// uploads, which is what eventually frees the blocked reader and the
+/// buffer (no deadlock by construction).
 ///
 /// Failures here are logged, not returned: there is no caller to return
 /// them to. The round still fails *fast*, client-side — a session this
-/// thread cannot write to is one `serve_conn` has torn down, which closed
+/// thread cannot write to is one the reactor has torn down, which closed
 /// the socket, so the waiting client job's `recv_broadcast` sees EOF (a
 /// typed error) immediately and the job error surfaces through the pool
 /// within one drain poll tick.
-fn spawn_downlink_writer(peers: Peers, rx: Receiver<(u32, Arc<Vec<u8>>)>) -> JoinHandle<()> {
+fn spawn_downlink_writer(
+    peers: Arc<PeerShards>,
+    rx: Receiver<(u32, Arc<Vec<u8>>)>,
+) -> JoinHandle<()> {
     std::thread::spawn(move || {
         for (client, payload) in rx {
-            let target = peers
-                .lock()
-                .ok()
-                .and_then(|map| {
-                    map.get(&client).map(|p| (p.writer.try_clone(), p.token))
-                });
-            match target {
+            match peers.writer_of(client) {
                 Some((Ok(mut writer), token)) => {
-                    if let Err(e) = write_frame(&mut writer, FrameKind::Broadcast, token, &payload)
-                        .and_then(|_| writer.flush().map_err(Into::into))
-                    {
+                    let res = frame_bytes(FrameKind::Broadcast, token, &payload).and_then(
+                        |bytes| nb_write_all(&mut writer, &bytes, DOWNLINK_WRITE_DEADLINE),
+                    );
+                    if let Err(e) = res {
                         log::warn!("transport: downlink to client {client} failed: {e}");
                     }
                 }
@@ -495,17 +800,17 @@ impl DownlinkSource for SocketDownlink {
 }
 
 /// Socket-backed [`Transport`]: framed TCP on 127.0.0.1 or a unix-domain
-/// socket in the temp dir. Binding picks an ephemeral port / unique path;
-/// [`Loopback::addr`] is what clients connect to.
+/// socket in the temp dir, served by the reactor. Binding picks an
+/// ephemeral port / unique path; [`Loopback::addr`] is what clients
+/// connect to.
 pub struct Loopback {
     addr: WireAddr,
     rx: Receiver<Vec<u8>>,
-    accept: Option<JoinHandle<()>>,
+    reactor: Option<JoinHandle<()>>,
     shutdown: Arc<AtomicBool>,
     timeout: Duration,
     kind_label: &'static str,
-    sessions: Arc<Mutex<SessionTable>>,
-    peers: Peers,
+    sessions: Arc<SessionShards>,
     /// Client halves of the persistent sessions, by client id.
     conns: Arc<Mutex<HashMap<u32, Arc<ClientConn>>>>,
     dl_tx: Option<Sender<(u32, Arc<Vec<u8>>)>>,
@@ -513,54 +818,71 @@ pub struct Loopback {
 }
 
 impl Loopback {
-    /// Bind the requested socket flavor. `TransportKind::InProcess` is not
-    /// a socket and is rejected.
+    /// Bind the requested socket flavor with default [`ServerTuning`].
+    /// `TransportKind::InProcess` is not a socket and is rejected.
     pub fn bind(kind: TransportKind) -> Result<Loopback> {
+        Loopback::bind_with(kind, ServerTuning::default())
+    }
+
+    /// Bind with explicit server tuning (admission cap, handshake reap
+    /// deadline, shard count).
+    pub fn bind_with(kind: TransportKind, tuning: ServerTuning) -> Result<Loopback> {
         match kind {
-            TransportKind::Tcp => Loopback::bind_tcp(),
-            TransportKind::Uds => Loopback::bind_uds(),
+            TransportKind::Tcp => Loopback::bind_tcp_with(tuning),
+            TransportKind::Uds => Loopback::bind_uds_with(tuning),
             TransportKind::InProcess => Err(Error::invalid(
                 "in-process transport has no socket to bind",
             )),
         }
     }
 
-    /// Shared tail of both bind flavors: queues, session table, accept and
-    /// downlink-writer threads, struct assembly.
-    fn from_accept<A>(accept: A, addr: WireAddr, kind_label: &'static str) -> Loopback
-    where
-        A: FnMut() -> std::io::Result<(Stream, String)> + Send + 'static,
-    {
+    /// Shared tail of both bind flavors: queues, sharded session/peer
+    /// state, the reactor and downlink-writer threads, struct assembly.
+    fn from_listener(
+        listener: Listener,
+        addr: WireAddr,
+        kind_label: &'static str,
+        tuning: ServerTuning,
+    ) -> Result<Loopback> {
+        listener
+            .set_nonblocking()
+            .map_err(|e| Error::transport(format!("set listener nonblocking: {e}")))?;
         let (tx, rx) = sync_channel(UPLOAD_QUEUE_SLOTS);
         let shutdown = Arc::new(AtomicBool::new(false));
-        let sessions = Arc::new(Mutex::new(SessionTable::new()));
-        let peers: Peers = Arc::new(Mutex::new(HashMap::new()));
-        let accept = spawn_accept_loop(
-            accept,
-            Arc::clone(&sessions),
-            Arc::clone(&peers),
-            tx,
-            Arc::clone(&shutdown),
-        );
+        let sessions = Arc::new(SessionShards::new(tuning.session_shards));
+        let peers = Arc::new(PeerShards::new(tuning.session_shards));
+        let reactor = {
+            let sessions = Arc::clone(&sessions);
+            let peers = Arc::clone(&peers);
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name("fedmask-reactor".into())
+                .spawn(move || run_reactor(listener, sessions, peers, tx, shutdown, tuning))
+                .map_err(|e| Error::transport(format!("spawn reactor: {e}")))?
+        };
         let (dl_tx, dl_rx) = channel();
-        let dl_writer = spawn_downlink_writer(Arc::clone(&peers), dl_rx);
-        Loopback {
+        let dl_writer = spawn_downlink_writer(peers, dl_rx);
+        Ok(Loopback {
             addr,
             rx,
-            accept: Some(accept),
+            reactor: Some(reactor),
             shutdown,
             timeout: crate::transport::link::DEFAULT_UPLOAD_TIMEOUT,
             kind_label,
             sessions,
-            peers,
             conns: Arc::new(Mutex::new(HashMap::new())),
             dl_tx: Some(dl_tx),
             dl_writer: Some(dl_writer),
-        }
+        })
     }
 
     /// Framed TCP on an ephemeral 127.0.0.1 port.
     pub fn bind_tcp() -> Result<Loopback> {
+        Loopback::bind_tcp_with(ServerTuning::default())
+    }
+
+    /// Framed TCP with explicit tuning.
+    pub fn bind_tcp_with(tuning: ServerTuning) -> Result<Loopback> {
         let listener = TcpListener::bind("127.0.0.1:0")
             .map_err(|e| Error::transport(format!("bind tcp listener: {e}")))?;
         let addr = WireAddr::Tcp(
@@ -568,18 +890,16 @@ impl Loopback {
                 .local_addr()
                 .map_err(|e| Error::transport(format!("tcp local addr: {e}")))?,
         );
-        Ok(Loopback::from_accept(
-            move || {
-                let (stream, peer) = listener.accept()?;
-                Ok((Stream::Tcp(stream), peer.to_string()))
-            },
-            addr,
-            "tcp",
-        ))
+        Loopback::from_listener(Listener::Tcp(listener), addr, "tcp", tuning)
     }
 
     /// Framed unix-domain socket on a unique temp path.
     pub fn bind_uds() -> Result<Loopback> {
+        Loopback::bind_uds_with(ServerTuning::default())
+    }
+
+    /// Framed unix-domain socket with explicit tuning.
+    pub fn bind_uds_with(tuning: ServerTuning) -> Result<Loopback> {
         #[cfg(unix)]
         {
             let path = std::env::temp_dir().join(format!(
@@ -590,17 +910,11 @@ impl Loopback {
             let _ = std::fs::remove_file(&path);
             let listener = UnixListener::bind(&path)
                 .map_err(|e| Error::transport(format!("bind uds {}: {e}", path.display())))?;
-            Ok(Loopback::from_accept(
-                move || {
-                    let (stream, _) = listener.accept()?;
-                    Ok((Stream::Unix(stream), "uds-peer".to_string()))
-                },
-                WireAddr::Uds(path),
-                "uds",
-            ))
+            Loopback::from_listener(Listener::Unix(listener), WireAddr::Uds(path), "uds", tuning)
         }
         #[cfg(not(unix))]
         {
+            let _ = tuning;
             Err(Error::transport(
                 "unix-domain sockets are unsupported on this platform",
             ))
@@ -630,11 +944,7 @@ impl Loopback {
     /// Production callers use [`Transport::register_clients`], which both
     /// allows and connects.
     pub fn allow_clients(&self, clients: &[u32]) -> Result<()> {
-        self.sessions
-            .lock()
-            .map_err(|_| Error::transport("session table poisoned"))?
-            .allow(clients);
-        Ok(())
+        self.sessions.allow(clients)
     }
 }
 
@@ -652,10 +962,7 @@ impl Transport for Loopback {
     }
 
     fn register_clients(&mut self, clients: &[u32]) -> Result<()> {
-        self.sessions
-            .lock()
-            .map_err(|_| Error::transport("session table poisoned"))?
-            .allow(clients);
+        self.sessions.allow(clients)?;
         let mut conns = self
             .conns
             .lock()
@@ -710,23 +1017,11 @@ impl Transport for Loopback {
     }
 }
 
-/// Poke a listening address with a throwaway connection so a blocked
-/// `accept` observes the shutdown flag. Returns whether the poke landed.
-fn wake_listener(addr: &WireAddr) -> bool {
-    match addr {
-        WireAddr::Tcp(a) => TcpStream::connect_timeout(a, Duration::from_millis(200)).is_ok(),
-        #[cfg(unix)]
-        WireAddr::Uds(path) => UnixStream::connect(path).is_ok(),
-        #[cfg(not(unix))]
-        WireAddr::Uds(_) => false,
-    }
-}
-
 impl Drop for Loopback {
     fn drop(&mut self) {
-        // 1) Close the client halves first: session threads observe EOF
-        //    and exit, and any downlink write blocked on a dead client's
-        //    full buffer fails instead of hanging.
+        // 1) Close the client halves first: the reactor observes EOFs and
+        //    tears those sessions down, and any downlink write stalled on
+        //    a dead client's full buffer fails instead of hanging.
         if let Ok(mut conns) = self.conns.lock() {
             conns.clear();
         }
@@ -736,15 +1031,12 @@ impl Drop for Loopback {
         if let Some(h) = self.dl_writer.take() {
             let _ = h.join();
         }
-        // 3) Stop accepting. Only join the accept loop when the wake-up
-        //    connection landed — otherwise accept may never return and the
-        //    join would hang; the flagged thread is left to die with the
-        //    process instead.
+        // 3) Raise the shutdown flag and join the reactor: its listener
+        //    never blocks, so it observes the flag within one idle sleep
+        //    (≤ 10 ms) — no wake-up connection needed.
         self.shutdown.store(true, Ordering::SeqCst);
-        if wake_listener(&self.addr) {
-            if let Some(h) = self.accept.take() {
-                let _ = h.join();
-            }
+        if let Some(h) = self.reactor.take() {
+            let _ = h.join();
         }
         if let WireAddr::Uds(path) = &self.addr {
             let _ = std::fs::remove_file(path);

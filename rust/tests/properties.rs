@@ -6,8 +6,9 @@
 //! present — agreement between the L1 Pallas mask kernel and the exact
 //! rust oracle.
 
+use fedmask::config::experiment::AggregatorKind;
 use fedmask::fl::aggregate::{
-    weighted_mean, Aggregator, Contribution, SparseContribution, StreamingFedAvg,
+    make_aggregator, weighted_mean, Aggregator, Contribution, SparseContribution, StreamingFedAvg,
 };
 use fedmask::fl::masking::{self, MaskScope, MaskTarget};
 use fedmask::fl::sampling::SamplingSchedule;
@@ -263,6 +264,106 @@ fn prop_sparse_fold_bitwise_equals_dense_fold_for_both_mask_targets() {
                     assert!(
                         (x - y).abs() <= 1e-5,
                         "enc {enc:?} target {target:?}: {x} vs reference {y} (seed {:#x})",
+                        g.seed
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Sharded-aggregation acceptance: partition a cohort's wire payloads over
+/// S shard-local partial folds **in any way whatsoever** — including empty
+/// shards and the degenerate single-shard partition — merge the partials
+/// into the first shard's root in shard order, and the finished model is
+/// **bitwise** identical to folding every payload into one flat
+/// aggregator. Exercised for shard counts {1, 2, 8}, both mask targets,
+/// and all six wire encodings (decode happens before the fold, so lossy
+/// q8/q4 bodies must agree bitwise too — both sides fold the same decoded
+/// values). This is the invariant `fl::tree::ShardedAggregator` relies on;
+/// the fold arithmetic is integer fixed-point, so merge order and
+/// partition shape must not matter.
+#[test]
+fn prop_sharded_merge_bitwise_equals_flat_fold_any_partition() {
+    check("sharded merge == flat fold, any partition", 40, |g| {
+        let p = match g.usize_in(0, 9) {
+            0 => 0,
+            1 => 1,
+            _ => g.usize_in(2, 400),
+        };
+        let split = if p == 0 { 0 } else { g.usize_in(0, p) };
+        let layers = vec![layer(0, split, true), {
+            let mut b = layer(split, p - split, false);
+            b.name = "b".into();
+            b
+        }];
+        let broadcast: Vec<f32> = (0..p).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let k = g.usize_in(1, 8);
+        let clients: Vec<(Vec<f32>, u32)> = (0..k)
+            .map(|_| {
+                let density = g.f32_in(0.0, 0.7);
+                let v: Vec<f32> = (0..p)
+                    .map(|_| {
+                        if g.f32_in(0.0, 1.0) < density {
+                            g.f32_in(-1.5, 1.5)
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                (v, g.usize_in(1, 500) as u32)
+            })
+            .collect();
+        for &enc in Encoding::ALL {
+            for target in [MaskTarget::Weights, MaskTarget::Delta] {
+                let make = || -> Box<dyn Aggregator> {
+                    make_aggregator(AggregatorKind::FedAvg, target, &broadcast, &layers).unwrap()
+                };
+                // fold a decoded wire body into any aggregator
+                let fold_into = |agg: &mut dyn Aggregator, i: usize| {
+                    let (v, w) = &clients[i];
+                    let u = decode_update(&encode_update(i as u32, 1, *w, v, enc)).unwrap();
+                    match &u.body {
+                        DecodedBody::Dense(d) => agg
+                            .fold(Contribution { client: i, params: d, n_samples: *w })
+                            .unwrap(),
+                        DecodedBody::Sparse { indices, values } => agg
+                            .fold_sparse(SparseContribution {
+                                client: i,
+                                p,
+                                indices,
+                                values,
+                                n_samples: *w,
+                            })
+                            .unwrap(),
+                    }
+                };
+                let mut flat = make();
+                for i in 0..k {
+                    fold_into(flat.as_mut(), i);
+                }
+                let reference = flat.finish().unwrap();
+                for shards in [1usize, 2, 8] {
+                    // arbitrary partition: each client lands on a random
+                    // shard; with k <= 8 and 8 shards, empty shards are
+                    // the common case, and shards == 1 is the flat fold
+                    // routed through the merge path
+                    let assign: Vec<usize> =
+                        (0..k).map(|_| g.usize_in(0, shards - 1)).collect();
+                    let mut partials: Vec<Box<dyn Aggregator>> =
+                        (0..shards).map(|_| make()).collect();
+                    for i in 0..k {
+                        fold_into(partials[assign[i]].as_mut(), i);
+                    }
+                    let mut root = partials.remove(0);
+                    for partial in partials {
+                        root.merge(partial).unwrap();
+                    }
+                    let merged = root.finish().unwrap();
+                    assert_eq!(
+                        merged, reference,
+                        "shards {shards} assign {assign:?} enc {enc:?} target \
+                         {target:?} seed {:#x}",
                         g.seed
                     );
                 }

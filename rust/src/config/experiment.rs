@@ -9,7 +9,9 @@ use std::path::Path;
 
 use crate::data::loader::DatasetSpec;
 use crate::data::partition::Scheme;
+use crate::fl::chaos::FaultPlan;
 use crate::fl::masking::{MaskPolicy, MaskTarget};
+use crate::sim::availability::AvailabilityModel;
 use crate::fl::sampling::SamplingSchedule;
 use crate::transport::codec::Encoding;
 use crate::transport::link::TransportKind;
@@ -74,6 +76,14 @@ pub struct ExperimentConfig {
     /// Client availability (1.0 = paper's always-on setting).
     pub ack_prob: f64,
     pub straggler_prob: f64,
+    /// Mean local compute time per epoch (virtual seconds).
+    pub compute_mean_s: f64,
+    /// Multiplicative compute-time jitter (±fraction of the mean); under
+    /// the simulated network this heterogeneity also orders deliveries.
+    pub compute_jitter: f64,
+    /// Seed for the availability/compute model; `None` derives it from
+    /// the master seed (`seed ^ 0xacc`, the historical wiring).
+    pub availability_seed: Option<u64>,
     /// Network model for virtual-time accounting.
     pub network: NetworkKind,
     /// Wire encoding for uploads.
@@ -107,6 +117,9 @@ pub struct ExperimentConfig {
     /// size this to the whole fleet, not one cohort. Ignored by the
     /// in-process transport.
     pub max_conns: usize,
+    /// Seeded fault-injection plan (`None` or an inactive plan = clean
+    /// wire). See [`crate::fl::chaos`] and `docs/CHAOS.md`.
+    pub chaos: Option<FaultPlan>,
 }
 
 impl ExperimentConfig {
@@ -143,6 +156,9 @@ impl ExperimentConfig {
             eval_max_chunks: 4,
             ack_prob: 1.0,
             straggler_prob: 0.0,
+            compute_mean_s: 1.0,
+            compute_jitter: 0.0,
+            availability_seed: None,
             network: NetworkKind::Ideal,
             encoding: Encoding::Auto,
             transport: TransportKind::InProcess,
@@ -152,7 +168,21 @@ impl ExperimentConfig {
             drain_poll_ms: 25,
             agg_shards: 1,
             max_conns: 4096,
+            chaos: None,
         })
+    }
+
+    /// The availability/compute model this config describes, on its own
+    /// seed lane so availability draws never collide with sampling or
+    /// data shuffles.
+    pub fn availability(&self) -> AvailabilityModel {
+        AvailabilityModel::with_compute(
+            self.ack_prob,
+            self.straggler_prob,
+            self.compute_mean_s,
+            self.compute_jitter,
+            self.availability_seed.unwrap_or(self.seed ^ 0xacc),
+        )
     }
 
     /// Dataset spec implied by this config.
@@ -184,6 +214,21 @@ impl ExperimentConfig {
         }
         if !(0.0..=1.0).contains(&self.ack_prob) || !(0.0..=1.0).contains(&self.straggler_prob) {
             return Err(Error::invalid("probabilities must be in [0, 1]"));
+        }
+        if !(self.compute_mean_s.is_finite() && self.compute_mean_s >= 0.0) {
+            return Err(Error::invalid(format!(
+                "compute_mean_s {} must be finite and >= 0",
+                self.compute_mean_s
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.compute_jitter) {
+            return Err(Error::invalid(format!(
+                "compute_jitter {} must be in [0, 1]",
+                self.compute_jitter
+            )));
+        }
+        if let Some(plan) = &self.chaos {
+            plan.validate()?;
         }
         if self.workers == 0 {
             return Err(Error::invalid("workers must be >= 1"));
@@ -227,7 +272,7 @@ impl ExperimentConfig {
                 *gamma,
             ),
         };
-        Json::obj(vec![
+        let mut pairs = vec![
             ("label", Json::str(&self.label)),
             ("model", Json::str(&self.model)),
             ("clients", Json::num(self.clients as f64)),
@@ -264,6 +309,8 @@ impl ExperimentConfig {
             ("eval_max_chunks", Json::num(self.eval_max_chunks as f64)),
             ("ack_prob", Json::num(self.ack_prob)),
             ("straggler_prob", Json::num(self.straggler_prob)),
+            ("compute_mean_s", Json::num(self.compute_mean_s)),
+            ("compute_jitter", Json::num(self.compute_jitter)),
             (
                 "network",
                 Json::str(match self.network {
@@ -285,7 +332,14 @@ impl ExperimentConfig {
             ("drain_poll_ms", Json::num(self.drain_poll_ms as f64)),
             ("agg_shards", Json::num(self.agg_shards as f64)),
             ("max_conns", Json::num(self.max_conns as f64)),
-        ])
+        ];
+        if let Some(seed) = self.availability_seed {
+            pairs.push(("availability_seed", Json::num(seed as f64)));
+        }
+        if let Some(plan) = &self.chaos {
+            pairs.push(("chaos", plan.to_json()));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(root: &Json) -> Result<ExperimentConfig> {
@@ -348,6 +402,14 @@ impl ExperimentConfig {
         cfg.eval_max_chunks = get_usize("eval_max_chunks", cfg.eval_max_chunks)?;
         cfg.ack_prob = get_f64("ack_prob", cfg.ack_prob)?;
         cfg.straggler_prob = get_f64("straggler_prob", cfg.straggler_prob)?;
+        cfg.compute_mean_s = get_f64("compute_mean_s", cfg.compute_mean_s)?;
+        cfg.compute_jitter = get_f64("compute_jitter", cfg.compute_jitter)?;
+        if let Some(v) = root.opt("availability_seed") {
+            cfg.availability_seed = Some(v.as_f64()? as u64);
+        }
+        if let Some(v) = root.opt("chaos") {
+            cfg.chaos = Some(FaultPlan::from_json(v)?);
+        }
         cfg.network = match root.opt("network").map(|v| v.as_str()).transpose()? {
             None | Some("ideal") => NetworkKind::Ideal,
             Some("simulated") => NetworkKind::Simulated,
@@ -436,6 +498,17 @@ mod tests {
         cfg.drain_poll_ms = 7;
         cfg.agg_shards = 4;
         cfg.max_conns = 128;
+        cfg.compute_mean_s = 2.5;
+        cfg.compute_jitter = 0.4;
+        cfg.availability_seed = Some(1234);
+        cfg.chaos = Some(FaultPlan {
+            seed: 9,
+            drop_prob: 0.2,
+            dup_prob: 0.1,
+            byzantine_clients: vec![3],
+            reorder: true,
+            ..FaultPlan::default()
+        });
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.label, cfg.label);
         assert_eq!(back.sampling, cfg.sampling);
@@ -451,6 +524,44 @@ mod tests {
         assert_eq!(back.drain_poll_ms, 7);
         assert_eq!(back.agg_shards, 4);
         assert_eq!(back.max_conns, 128);
+        assert_eq!(back.compute_mean_s, 2.5);
+        assert_eq!(back.compute_jitter, 0.4);
+        assert_eq!(back.availability_seed, Some(1234));
+        assert_eq!(back.chaos, cfg.chaos);
+    }
+
+    #[test]
+    fn availability_model_reflects_config_and_seed_override() {
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.ack_prob = 0.8;
+        cfg.compute_jitter = 0.5;
+        let derived = cfg.availability();
+        assert_eq!(derived.ack_prob, 0.8);
+        assert_eq!(derived.compute_jitter, 0.5);
+        // the default lane is seed ^ 0xacc: same config, same draws
+        assert_eq!(derived.state(3, 7), cfg.availability().state(3, 7));
+        // an explicit availability seed changes the lane without touching
+        // the master seed
+        cfg.availability_seed = Some(cfg.seed ^ 0xacc);
+        let pinned = cfg.availability();
+        for r in 0..5 {
+            for c in 0..10 {
+                assert_eq!(pinned.state(r, c), derived.state(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_and_compute_fields_are_validated() {
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.compute_jitter = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.compute_mean_s = f64::NAN;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+        cfg.chaos = Some(FaultPlan { drop_prob: 0.9, dup_prob: 0.9, ..FaultPlan::default() });
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

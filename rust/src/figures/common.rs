@@ -166,6 +166,7 @@ pub fn append_rounds(table: &mut Table, outcome: &ServerOutcome) {
             r.downlink_bytes.to_string(),
             crate::metrics::csv::fmt(r.downlink_recon_err),
             crate::metrics::csv::fmt(r.virtual_time_s),
+            r.faults.events.len().to_string(),
         ]);
     }
 }
@@ -186,5 +187,6 @@ pub fn rounds_header() -> Table {
         "downlink_bytes",
         "downlink_recon_err",
         "virtual_time_s",
+        "faults",
     ])
 }

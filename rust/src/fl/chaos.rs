@@ -1,0 +1,1288 @@
+//! Deterministic chaos harness: seeded fault injection across the
+//! transport stack, with the recovery contract pinned by
+//! `tests/chaos_scenarios.rs` and documented in `docs/CHAOS.md`.
+//!
+//! The paper's simulation assumes every sampled client uploads cleanly;
+//! cross-device reality does not. This module makes failure a first-class,
+//! *reproducible* experiment input:
+//!
+//! * [`FaultPlan`] — a pure, seeded description of what goes wrong. For
+//!   every `(round, client)` pair it derives an [`UploadFate`] and a
+//!   [`DownlinkFate`] from one `Rng::new(seed)` fork chain, so the same
+//!   plan produces the same faults on every transport, every run, with no
+//!   shared mutable state. The round driver consults the *same* pure
+//!   functions to predict delivery counts, which is what keeps the
+//!   `Simulated` transport's cohort barrier exact under injected loss.
+//! * [`ChaosTransport`] — a [`Transport`] wrapper that *executes* the plan:
+//!   drops, duplicates, reorders, truncates/bit-flips, disconnects (uplink
+//!   and downlink independently), delays past the round, and substitutes
+//!   Byzantine payloads (well-formed frames carrying wrong-but-valid codec
+//!   bodies). Every injected fault is recorded in a [`ChaosLog`] and
+//!   surfaces per round as the [`FaultLog`] field of
+//!   [`crate::metrics::recorder::RoundRecord`].
+//! * [`Scenario`] — a named, JSON-loadable composition of chaos plan,
+//!   availability model, and network model, so one file (or one
+//!   `--scenario` flag) fully determines a run. The adversarial
+//!   regressions that used to be bespoke test setup are named scenarios
+//!   here ([`WireAdversary`] drives the raw-socket attacks).
+//!
+//! ## Stacking order
+//!
+//! The driver composes `Simulated(ChaosTransport(base))`: chaos sits
+//! *inside* the virtual-time wrapper so the simulated cohort barrier
+//! counts post-chaos deliveries (a dropped upload never arrives; a
+//! duplicated one arrives twice) and its count is predicted exactly from
+//! the plan. Reordering inside chaos is therefore only observable on the
+//! `Ideal` network — under `Simulated` the virtual clock re-sorts
+//! arrivals, which is the correct physical reading (the wire scrambles,
+//! the model re-times).
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::experiment::NetworkKind;
+use crate::sim::rng::Rng;
+use crate::transport::codec::{encode_update, peek_header, Encoding};
+use crate::transport::frame::{frame_bytes, FrameKind, FRAME_HEADER_BYTES, FRAME_MAGIC, FRAME_VERSION};
+use crate::transport::link::{DownlinkSource, Transport, UploadSink};
+use crate::transport::socket::{ClientConn, Loopback, WireAddr};
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Fork label for the per-(round, client) uplink fate draw.
+const UPLINK_LANE: u64 = 0x0b;
+/// Fork label for the per-(round, client) downlink fate draw.
+const DOWNLINK_LANE: u64 = 0xd0;
+/// Fork label for the corrupt-style draw (truncate vs bit-flip).
+const CORRUPT_LANE: u64 = 0xbad;
+/// Fork label for the per-round reorder shuffle.
+const REORDER_LANE: u64 = 0x5e0;
+
+/// How many uploads the reorder window buffers before shuffling them out.
+const REORDER_WINDOW: usize = 4;
+/// How long the reorder window waits for another arrival before flushing
+/// a partial batch (keeps blocking receives from stalling on stragglers).
+const REORDER_IDLE: Duration = Duration::from_millis(10);
+
+// ---------------------------------------------------------------------
+// Fates: the pure per-(round, client) fault decisions
+// ---------------------------------------------------------------------
+
+/// What happens to one client's upload in one round. Derived purely from
+/// the plan's seed, so the driver can *predict* delivery counts without
+/// observing the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UploadFate {
+    /// The upload crosses the wire untouched.
+    Deliver,
+    /// The upload vanishes (lossy link).
+    Drop,
+    /// The upload arrives after the round has closed — from the round's
+    /// point of view, identical to a drop, but logged distinctly because
+    /// the recovery contract differs (a delayed frame must not corrupt
+    /// the *next* round's cohort barrier).
+    Delay,
+    /// The client's uplink dies mid-round: nothing arrives.
+    DisconnectUplink,
+    /// The upload arrives twice (retransmit storm); it must fold once and
+    /// bill twice.
+    Duplicate,
+    /// The payload is truncated or bit-flipped in flight; it must be
+    /// rejected pre-fold.
+    Corrupt,
+    /// The client is adversarial: a well-formed frame carrying a valid
+    /// codec body with the wrong model width, rejected pre-fold by the
+    /// width check.
+    Byzantine,
+}
+
+/// What happens to one client's broadcast in one round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DownlinkFate {
+    /// The broadcast reaches the client.
+    Deliver,
+    /// The client's downlink dies before the broadcast lands: the client
+    /// never starts the round (and so never uploads).
+    Disconnect,
+}
+
+/// Seeded description of every fault the harness injects. Pure data: two
+/// plans with equal fields produce byte-identical fault schedules.
+///
+/// The upload probabilities are *exclusive* — one uniform draw per
+/// (round, client) is cut into bands, so their sum must be ≤ 1; the
+/// remainder is the clean-delivery probability. `byzantine_clients` is a
+/// deterministic roster checked before any draw (a client on it is
+/// Byzantine every round). `disconnect_downlink_prob` is an independent
+/// draw on the downlink side.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Master chaos seed; every fate forks from it.
+    pub seed: u64,
+    pub drop_prob: f64,
+    pub dup_prob: f64,
+    pub corrupt_prob: f64,
+    pub delay_prob: f64,
+    pub disconnect_uplink_prob: f64,
+    pub disconnect_downlink_prob: f64,
+    pub byzantine_prob: f64,
+    /// Clients that are Byzantine every round, regardless of the draws.
+    pub byzantine_clients: Vec<u32>,
+    /// Buffer and shuffle upload arrivals in seeded windows.
+    pub reorder: bool,
+}
+
+impl FaultPlan {
+    /// Whether the plan injects anything at all (an inactive plan is not
+    /// wrapped around the transport).
+    pub fn is_active(&self) -> bool {
+        self.drop_prob > 0.0
+            || self.dup_prob > 0.0
+            || self.corrupt_prob > 0.0
+            || self.delay_prob > 0.0
+            || self.disconnect_uplink_prob > 0.0
+            || self.disconnect_downlink_prob > 0.0
+            || self.byzantine_prob > 0.0
+            || !self.byzantine_clients.is_empty()
+            || self.reorder
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let probs = [
+            ("chaos drop_prob", self.drop_prob),
+            ("chaos dup_prob", self.dup_prob),
+            ("chaos corrupt_prob", self.corrupt_prob),
+            ("chaos delay_prob", self.delay_prob),
+            ("chaos disconnect_uplink_prob", self.disconnect_uplink_prob),
+            ("chaos disconnect_downlink_prob", self.disconnect_downlink_prob),
+            ("chaos byzantine_prob", self.byzantine_prob),
+        ];
+        for (name, p) in probs {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::invalid(format!("{name} {p} must be in [0, 1]")));
+            }
+        }
+        let sum = self.byzantine_prob
+            + self.drop_prob
+            + self.disconnect_uplink_prob
+            + self.delay_prob
+            + self.corrupt_prob
+            + self.dup_prob;
+        if sum > 1.0 + 1e-9 {
+            return Err(Error::invalid(format!(
+                "chaos upload fault probabilities sum to {sum:.4} > 1 (they are exclusive bands of one draw)"
+            )));
+        }
+        Ok(())
+    }
+
+    /// The fate of `client`'s upload in `round`: one uniform draw cut into
+    /// exclusive bands (byzantine, drop, disconnect, delay, corrupt,
+    /// duplicate, else deliver), after the deterministic Byzantine roster.
+    pub fn upload_fate(&self, round: u32, client: u32) -> UploadFate {
+        if self.byzantine_clients.contains(&client) {
+            return UploadFate::Byzantine;
+        }
+        let mut rng = Rng::new(self.seed).fork(round as u64).fork(client as u64).fork(UPLINK_LANE);
+        let draw = rng.next_f64();
+        let mut edge = self.byzantine_prob;
+        if draw < edge {
+            return UploadFate::Byzantine;
+        }
+        edge += self.drop_prob;
+        if draw < edge {
+            return UploadFate::Drop;
+        }
+        edge += self.disconnect_uplink_prob;
+        if draw < edge {
+            return UploadFate::DisconnectUplink;
+        }
+        edge += self.delay_prob;
+        if draw < edge {
+            return UploadFate::Delay;
+        }
+        edge += self.corrupt_prob;
+        if draw < edge {
+            return UploadFate::Corrupt;
+        }
+        edge += self.dup_prob;
+        if draw < edge {
+            return UploadFate::Duplicate;
+        }
+        UploadFate::Deliver
+    }
+
+    /// The fate of `client`'s broadcast in `round` (independent draw: a
+    /// downlink can die while the uplink would have been fine).
+    pub fn downlink_fate(&self, round: u32, client: u32) -> DownlinkFate {
+        if self.disconnect_downlink_prob <= 0.0 {
+            return DownlinkFate::Deliver;
+        }
+        let mut rng =
+            Rng::new(self.seed).fork(round as u64).fork(client as u64).fork(DOWNLINK_LANE);
+        if rng.next_f64() < self.disconnect_downlink_prob {
+            DownlinkFate::Disconnect
+        } else {
+            DownlinkFate::Deliver
+        }
+    }
+
+    /// How many payloads actually cross the wire for an upload with this
+    /// fate — the number the `Simulated` cohort barrier must count.
+    pub fn deliveries(&self, fate: UploadFate) -> usize {
+        match fate {
+            UploadFate::Drop | UploadFate::Delay | UploadFate::DisconnectUplink => 0,
+            UploadFate::Duplicate => 2,
+            UploadFate::Deliver | UploadFate::Corrupt | UploadFate::Byzantine => 1,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("drop_prob", Json::num(self.drop_prob)),
+            ("dup_prob", Json::num(self.dup_prob)),
+            ("corrupt_prob", Json::num(self.corrupt_prob)),
+            ("delay_prob", Json::num(self.delay_prob)),
+            ("disconnect_uplink_prob", Json::num(self.disconnect_uplink_prob)),
+            ("disconnect_downlink_prob", Json::num(self.disconnect_downlink_prob)),
+            ("byzantine_prob", Json::num(self.byzantine_prob)),
+            (
+                "byzantine_clients",
+                Json::Arr(self.byzantine_clients.iter().map(|&c| Json::num(c as f64)).collect()),
+            ),
+            ("reorder", Json::Bool(self.reorder)),
+        ])
+    }
+
+    pub fn from_json(root: &Json) -> Result<FaultPlan> {
+        let get_f64 = |k: &str| -> Result<f64> {
+            match root.opt(k) {
+                Some(v) => v.as_f64(),
+                None => Ok(0.0),
+            }
+        };
+        let mut plan = FaultPlan {
+            seed: match root.opt("seed") {
+                Some(v) => v.as_f64()? as u64,
+                None => 0,
+            },
+            drop_prob: get_f64("drop_prob")?,
+            dup_prob: get_f64("dup_prob")?,
+            corrupt_prob: get_f64("corrupt_prob")?,
+            delay_prob: get_f64("delay_prob")?,
+            disconnect_uplink_prob: get_f64("disconnect_uplink_prob")?,
+            disconnect_downlink_prob: get_f64("disconnect_downlink_prob")?,
+            byzantine_prob: get_f64("byzantine_prob")?,
+            byzantine_clients: Vec::new(),
+            reorder: match root.opt("reorder") {
+                Some(v) => v.as_bool()?,
+                None => false,
+            },
+        };
+        if let Some(v) = root.opt("byzantine_clients") {
+            plan.byzantine_clients = v.as_usize_vec()?.into_iter().map(|c| c as u32).collect();
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fault log: what was actually injected, per round
+// ---------------------------------------------------------------------
+
+/// The taxonomy of injected faults (see `docs/CHAOS.md` for the recovery
+/// guarantee each one is pinned against).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    DropUpload,
+    DelayUpload,
+    DisconnectUplink,
+    DisconnectDownlink,
+    DuplicateUpload,
+    CorruptUpload,
+    ByzantineUpload,
+}
+
+impl FaultKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::DropUpload => "drop-upload",
+            FaultKind::DelayUpload => "delay-upload",
+            FaultKind::DisconnectUplink => "disconnect-uplink",
+            FaultKind::DisconnectDownlink => "disconnect-downlink",
+            FaultKind::DuplicateUpload => "duplicate-upload",
+            FaultKind::CorruptUpload => "corrupt-upload",
+            FaultKind::ByzantineUpload => "byzantine-upload",
+        }
+    }
+}
+
+/// One injected fault: which round and client, what was done, and how many
+/// payload bytes were involved (suppressed, duplicated, or substituted).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub round: u32,
+    pub client: u32,
+    pub kind: FaultKind,
+    pub bytes: usize,
+}
+
+/// The faults injected in one round, in canonical (client, kind, bytes)
+/// order — so two identically-seeded runs produce byte-identical logs no
+/// matter how threads interleaved the injections.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultLog {
+    pub events: Vec<FaultEvent>,
+}
+
+/// Shared fault accumulator: the sink half injects from worker threads,
+/// the driver drains per round into a [`FaultLog`].
+#[derive(Default)]
+pub struct ChaosLog {
+    events: Mutex<Vec<FaultEvent>>,
+}
+
+impl ChaosLog {
+    fn record(&self, event: FaultEvent) {
+        // a poisoned lock only means a worker panicked mid-push; the log
+        // itself is append-only and still coherent
+        self.events.lock().unwrap_or_else(|e| e.into_inner()).push(event);
+    }
+
+    /// Drain (and canonically order) the events of `round`, leaving other
+    /// rounds' events (e.g. a delayed frame logged late) in place.
+    pub fn take_round(&self, round: u32) -> FaultLog {
+        let mut guard = self.events.lock().unwrap_or_else(|e| e.into_inner());
+        let mut taken = Vec::new();
+        guard.retain(|e| {
+            if e.round == round {
+                taken.push(*e);
+                false
+            } else {
+                true
+            }
+        });
+        taken.sort_by_key(|e| (e.client, e.kind, e.bytes));
+        FaultLog { events: taken }
+    }
+
+    /// Injection-time duplicate accounting for `round`: (redundant
+    /// frames, redundant bytes). Non-destructive — the events stay in
+    /// the log for [`ChaosLog::take_round`]. The drain cannot count
+    /// these reliably (whether it pulls a duplicate's second copy before
+    /// the round completes depends on arrival interleaving), but the
+    /// sink logs every injected copy before the job reports, so by the
+    /// time a round's collect returns this sum is complete — and
+    /// identical across reruns.
+    pub fn round_duplicates(&self, round: u32) -> (u64, u64) {
+        let guard = self.events.lock().unwrap_or_else(|e| e.into_inner());
+        guard
+            .iter()
+            .filter(|e| e.round == round && e.kind == FaultKind::DuplicateUpload)
+            .fold((0u64, 0u64), |(frames, bytes), e| (frames + 1, bytes + e.bytes as u64))
+    }
+}
+
+// ---------------------------------------------------------------------
+// ChaosTransport: the plan, executed on the wire
+// ---------------------------------------------------------------------
+
+/// The upload half: consults the plan once per payload (fate keyed by the
+/// header's round and client, so it needs no driver coordination) and
+/// injects on the way into the inner sink. Runs on engine worker threads.
+struct ChaosSink {
+    inner: Arc<dyn UploadSink>,
+    plan: Arc<FaultPlan>,
+    log: Arc<ChaosLog>,
+}
+
+impl ChaosSink {
+    /// Deterministically mangle a payload so it is *detectably* corrupt:
+    /// either truncate (at least one byte short, codec length checks trip)
+    /// or flip a bit inside the codec magic/version (header unparseable).
+    fn corrupt(&self, round: u32, client: u32, mut payload: Vec<u8>) -> Vec<u8> {
+        let mut rng =
+            Rng::new(self.plan.seed).fork(round as u64).fork(client as u64).fork(CORRUPT_LANE);
+        if payload.len() > 5 && rng.next_f64() < 0.5 {
+            let keep = 4 + rng.next_below((payload.len() - 4) as u64) as usize;
+            payload.truncate(keep);
+        } else {
+            let bit = rng.next_below(24) as usize;
+            payload[bit / 8] ^= 1 << (bit % 8);
+        }
+        payload
+    }
+}
+
+impl UploadSink for ChaosSink {
+    fn send(&self, payload: Vec<u8>) -> Result<()> {
+        let Some(h) = peek_header(&payload) else {
+            // not one of our updates — pass through untouched
+            return self.inner.send(payload);
+        };
+        let bytes = payload.len();
+        let event = |kind: FaultKind, bytes: usize| FaultEvent {
+            round: h.round,
+            client: h.client,
+            kind,
+            bytes,
+        };
+        match self.plan.upload_fate(h.round, h.client) {
+            UploadFate::Deliver => self.inner.send(payload),
+            UploadFate::Drop => {
+                self.log.record(event(FaultKind::DropUpload, bytes));
+                Ok(())
+            }
+            UploadFate::Delay => {
+                // delivery past the round is indistinguishable from loss
+                // for the round itself; swallowing (instead of re-queuing
+                // next round) keeps the next cohort barrier exact
+                self.log.record(event(FaultKind::DelayUpload, bytes));
+                Ok(())
+            }
+            UploadFate::DisconnectUplink => {
+                self.log.record(event(FaultKind::DisconnectUplink, bytes));
+                Ok(())
+            }
+            UploadFate::Duplicate => {
+                self.log.record(event(FaultKind::DuplicateUpload, bytes));
+                self.inner.send(payload.clone())?;
+                self.inner.send(payload)
+            }
+            UploadFate::Corrupt => {
+                let mangled = self.corrupt(h.round, h.client, payload);
+                self.log.record(event(FaultKind::CorruptUpload, mangled.len()));
+                self.inner.send(mangled)
+            }
+            UploadFate::Byzantine => {
+                // well-formed frame, valid codec body, wrong model width:
+                // survives every parse and dies at the pre-fold width check
+                let wrong_p = if h.p == 3 { 5 } else { 3 };
+                let forged = encode_update(
+                    h.client,
+                    h.round,
+                    h.n_samples.max(1),
+                    &vec![0.25f32; wrong_p],
+                    Encoding::Dense,
+                );
+                self.log.record(event(FaultKind::ByzantineUpload, forged.len()));
+                self.inner.send(forged)
+            }
+        }
+    }
+}
+
+/// [`Transport`] wrapper executing a [`FaultPlan`] on any inner wire.
+/// Upload faults happen in the sink (worker-thread side); downlink
+/// disconnects and reordering happen here (server-loop side). All
+/// injections are logged into the shared [`ChaosLog`].
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    plan: Arc<FaultPlan>,
+    log: Arc<ChaosLog>,
+    sink: Arc<ChaosSink>,
+    /// Rounds seen via `begin_round`, used to reseed the reorder shuffle
+    /// per round (so round k's shuffle never depends on round j's traffic).
+    rounds_begun: u64,
+    reorder_rng: Rng,
+    /// Arrivals buffered for the current reorder window.
+    stash: Vec<Vec<u8>>,
+    /// Shuffled arrivals ready to hand to the server loop.
+    released: VecDeque<Vec<u8>>,
+}
+
+impl ChaosTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: Arc<FaultPlan>, log: Arc<ChaosLog>) -> ChaosTransport {
+        let sink = Arc::new(ChaosSink {
+            inner: inner.sink(),
+            plan: Arc::clone(&plan),
+            log: Arc::clone(&log),
+        });
+        let reorder_rng = Rng::new(plan.seed).fork(0).fork(REORDER_LANE);
+        ChaosTransport {
+            inner,
+            plan,
+            log,
+            sink,
+            rounds_begun: 0,
+            reorder_rng,
+            stash: Vec::new(),
+            released: VecDeque::new(),
+        }
+    }
+
+    /// Shuffle the buffered window into the deliverable queue.
+    fn flush_stash(&mut self) {
+        if self.stash.is_empty() {
+            return;
+        }
+        let mut batch = std::mem::take(&mut self.stash);
+        self.reorder_rng.shuffle(&mut batch);
+        self.released.extend(batch);
+    }
+
+    fn absorb(&mut self, payload: Vec<u8>) {
+        self.stash.push(payload);
+        if self.stash.len() >= REORDER_WINDOW {
+            self.flush_stash();
+        }
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn label(&self) -> &'static str {
+        "chaos"
+    }
+
+    /// Chaos *manufactures* invalid payloads (corrupt, Byzantine), so the
+    /// server must treat them as droppable wire noise — exactly the
+    /// shared-wire discipline — rather than fail the round on them.
+    fn accepts_foreign_peers(&self) -> bool {
+        true
+    }
+
+    fn register_clients(&mut self, clients: &[u32]) -> Result<()> {
+        self.inner.register_clients(clients)
+    }
+
+    fn sink(&self) -> Arc<dyn UploadSink> {
+        let sink: Arc<dyn UploadSink> = Arc::clone(&self.sink);
+        sink
+    }
+
+    fn send_downlink(&mut self, client: u32, payload: Arc<Vec<u8>>) -> Result<()> {
+        // broadcast payloads carry the round in the same fixed codec header
+        let round = peek_header(&payload).map(|h| h.round).unwrap_or(0);
+        match self.plan.downlink_fate(round, client) {
+            DownlinkFate::Deliver => self.inner.send_downlink(client, payload),
+            DownlinkFate::Disconnect => {
+                self.log.record(FaultEvent {
+                    round,
+                    client,
+                    kind: FaultKind::DisconnectDownlink,
+                    bytes: payload.len(),
+                });
+                Ok(())
+            }
+        }
+    }
+
+    fn downlink(&self) -> Arc<dyn DownlinkSource> {
+        self.inner.downlink()
+    }
+
+    fn begin_round(&mut self, expected: usize) {
+        self.rounds_begun += 1;
+        self.reorder_rng = Rng::new(self.plan.seed).fork(self.rounds_begun).fork(REORDER_LANE);
+        // anything still buffered belongs to a closed round; release it so
+        // the server's stray-rejection path (not the new barrier) eats it
+        self.flush_stash();
+        self.inner.begin_round(expected);
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        loop {
+            if let Some(p) = self.released.pop_front() {
+                return Ok(p);
+            }
+            if !self.plan.reorder {
+                return self.inner.recv();
+            }
+            match self.inner.try_recv_for(REORDER_IDLE)? {
+                Some(p) => self.absorb(p),
+                None if !self.stash.is_empty() => self.flush_stash(),
+                // idle and nothing buffered: block like the inner wire
+                // would (its timeout error is the round's timeout error)
+                None => {
+                    let p = self.inner.recv()?;
+                    self.absorb(p);
+                }
+            }
+        }
+    }
+
+    fn try_recv_for(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        if let Some(p) = self.released.pop_front() {
+            return Ok(Some(p));
+        }
+        if !self.plan.reorder {
+            return self.inner.try_recv_for(timeout);
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(p) = self.released.pop_front() {
+                return Ok(Some(p));
+            }
+            let Some(window) = deadline
+                .checked_duration_since(Instant::now())
+                .filter(|w| !w.is_zero())
+            else {
+                // window lapsed: release a partial reorder batch rather
+                // than wedge payloads behind an unfilled window
+                self.flush_stash();
+                return Ok(self.released.pop_front());
+            };
+            match self.inner.try_recv_for(window.min(REORDER_IDLE))? {
+                Some(p) => self.absorb(p),
+                None => self.flush_stash(),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scenario: plan + availability + network, named or from a file
+// ---------------------------------------------------------------------
+
+/// One named failure environment: chaos plan, availability model
+/// parameters, network model, and (for socket runs) the raw-wire
+/// adversaries to launch alongside the cohort. JSON-loadable so a
+/// scenario file plus a config fully determines a run; see
+/// [`Scenario::named`] for the built-in registry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub ack_prob: f64,
+    pub straggler_prob: f64,
+    pub compute_mean_s: f64,
+    pub compute_jitter: f64,
+    pub availability_seed: Option<u64>,
+    pub network: NetworkKind,
+    pub chaos: Option<FaultPlan>,
+    pub wire_adversaries: Vec<WireAdversary>,
+}
+
+/// The built-in scenario names, in registry order.
+pub const NAMED_SCENARIOS: &[&str] = &[
+    "clean",
+    "lossy-uplink",
+    "duplicator",
+    "flaky-sessions",
+    "byzantine-one",
+    "chaos-soup",
+    "scrambled-arrivals",
+    "malformed-peers",
+    "spoofed-tokens",
+];
+
+impl Scenario {
+    /// The no-fault baseline every other scenario perturbs.
+    pub fn clean(name: &str) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            ack_prob: 1.0,
+            straggler_prob: 0.0,
+            compute_mean_s: 1.0,
+            compute_jitter: 0.0,
+            availability_seed: None,
+            network: NetworkKind::Ideal,
+            chaos: None,
+            wire_adversaries: Vec::new(),
+        }
+    }
+
+    /// Look up a built-in scenario by name.
+    pub fn named(name: &str) -> Result<Scenario> {
+        use WireAdversary::*;
+        let mut s = Scenario::clean(name);
+        match name {
+            "clean" => {}
+            "lossy-uplink" => {
+                s.chaos = Some(FaultPlan {
+                    seed: 0x10e5,
+                    drop_prob: 0.3,
+                    delay_prob: 0.1,
+                    ..FaultPlan::default()
+                });
+            }
+            "duplicator" => {
+                s.chaos = Some(FaultPlan { seed: 0xd0b1e, dup_prob: 1.0, ..FaultPlan::default() });
+            }
+            "flaky-sessions" => {
+                s.chaos = Some(FaultPlan {
+                    seed: 0xf1a2,
+                    disconnect_uplink_prob: 0.15,
+                    disconnect_downlink_prob: 0.15,
+                    ..FaultPlan::default()
+                });
+            }
+            "byzantine-one" => {
+                s.chaos = Some(FaultPlan {
+                    seed: 0xb42,
+                    byzantine_clients: vec![0],
+                    ..FaultPlan::default()
+                });
+            }
+            "chaos-soup" => {
+                // the acceptance scenario: drops + duplicates + reorder +
+                // one Byzantine peer, all from one seed
+                s.chaos = Some(FaultPlan {
+                    seed: 0x50f3,
+                    drop_prob: 0.25,
+                    dup_prob: 0.25,
+                    reorder: true,
+                    byzantine_clients: vec![2],
+                    ..FaultPlan::default()
+                });
+            }
+            "scrambled-arrivals" => {
+                s.network = NetworkKind::Simulated;
+                s.compute_jitter = 0.8;
+                s.chaos = Some(FaultPlan { seed: 0x5c4a, reorder: true, ..FaultPlan::default() });
+            }
+            "malformed-peers" => {
+                s.wire_adversaries = vec![BadMagic, MidFrameDisconnect, OverCapLength, BadVersion];
+            }
+            "spoofed-tokens" => {
+                s.wire_adversaries =
+                    vec![SpoofToken, RegisterUnknownId, RegisterDuplicateId, CrossClient];
+            }
+            other => {
+                return Err(Error::invalid(format!(
+                    "unknown scenario '{other}' (built-ins: {})",
+                    NAMED_SCENARIOS.join(", ")
+                )))
+            }
+        }
+        Ok(s)
+    }
+
+    /// Resolve a CLI `--scenario` spec: a path to a JSON file if one
+    /// exists there, otherwise a built-in name.
+    pub fn resolve(spec: &str) -> Result<Scenario> {
+        let path = std::path::Path::new(spec);
+        if path.is_file() {
+            let text = std::fs::read_to_string(path)?;
+            return Scenario::from_json(&crate::util::json::parse(&text)?);
+        }
+        Scenario::named(spec)
+    }
+
+    /// Impose this scenario on an experiment config (chaos plan,
+    /// availability parameters, network model). Wire adversaries are not
+    /// config — the test harness launches them against the live socket.
+    pub fn apply(&self, cfg: &mut crate::config::experiment::ExperimentConfig) {
+        cfg.ack_prob = self.ack_prob;
+        cfg.straggler_prob = self.straggler_prob;
+        cfg.compute_mean_s = self.compute_mean_s;
+        cfg.compute_jitter = self.compute_jitter;
+        cfg.availability_seed = self.availability_seed;
+        cfg.network = self.network;
+        cfg.chaos = self.chaos.clone();
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(&self.name)),
+            ("ack_prob", Json::num(self.ack_prob)),
+            ("straggler_prob", Json::num(self.straggler_prob)),
+            ("compute_mean_s", Json::num(self.compute_mean_s)),
+            ("compute_jitter", Json::num(self.compute_jitter)),
+            (
+                "network",
+                Json::str(match self.network {
+                    NetworkKind::Ideal => "ideal",
+                    NetworkKind::Simulated => "simulated",
+                }),
+            ),
+        ];
+        if let Some(seed) = self.availability_seed {
+            pairs.push(("availability_seed", Json::num(seed as f64)));
+        }
+        if let Some(plan) = &self.chaos {
+            pairs.push(("chaos", plan.to_json()));
+        }
+        if !self.wire_adversaries.is_empty() {
+            pairs.push((
+                "wire_adversaries",
+                Json::Arr(self.wire_adversaries.iter().map(|a| Json::str(a.as_str())).collect()),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(root: &Json) -> Result<Scenario> {
+        let mut s = Scenario::clean(root.get("name")?.as_str()?);
+        let get_f64 = |k: &str, d: f64| -> Result<f64> {
+            match root.opt(k) {
+                Some(v) => v.as_f64(),
+                None => Ok(d),
+            }
+        };
+        s.ack_prob = get_f64("ack_prob", s.ack_prob)?;
+        s.straggler_prob = get_f64("straggler_prob", s.straggler_prob)?;
+        s.compute_mean_s = get_f64("compute_mean_s", s.compute_mean_s)?;
+        s.compute_jitter = get_f64("compute_jitter", s.compute_jitter)?;
+        if let Some(v) = root.opt("availability_seed") {
+            s.availability_seed = Some(v.as_f64()? as u64);
+        }
+        s.network = match root.opt("network").map(|v| v.as_str()).transpose()? {
+            None | Some("ideal") => NetworkKind::Ideal,
+            Some("simulated") => NetworkKind::Simulated,
+            Some(other) => return Err(Error::invalid(format!("bad network '{other}'"))),
+        };
+        if let Some(v) = root.opt("chaos") {
+            s.chaos = Some(FaultPlan::from_json(v)?);
+        }
+        if let Some(v) = root.opt("wire_adversaries") {
+            s.wire_adversaries = v
+                .as_arr()?
+                .iter()
+                .map(|a| WireAdversary::parse(a.as_str()?))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        Ok(s)
+    }
+}
+
+// ---------------------------------------------------------------------
+// WireAdversary: the raw-socket attacks, as reusable scenario pieces
+// ---------------------------------------------------------------------
+
+/// One raw-wire attack against a live socket server. These are the
+/// adversaries the one-off socket regressions used to hand-roll; as enum
+/// variants they compose into [`Scenario`]s and run from one launcher.
+/// Every variant must leave the server's round intact — `launch` returns
+/// `Err` only when the server *mishandled* the attack (e.g. admitted a
+/// session it must refuse).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireAdversary {
+    /// Garbage bytes that are not even a frame header.
+    BadMagic,
+    /// A valid upload header promising a body, disconnected mid-body.
+    MidFrameDisconnect,
+    /// A declared frame length over the hard cap (must be rejected before
+    /// any allocation).
+    OverCapLength,
+    /// Well-formed frames claiming unsupported versions (the dead v1 wire
+    /// included).
+    BadVersion,
+    /// Well-formed upload frames with a missing (0) and a guessed session
+    /// token — the pre-auth-refactor spoof.
+    SpoofToken,
+    /// A registration attempt for an id the server never allowed.
+    RegisterUnknownId,
+    /// A re-registration attempt for a live client id (first-come holds
+    /// the session).
+    RegisterDuplicateId,
+    /// An upload through a *valid* session naming another client.
+    CrossClient,
+}
+
+impl WireAdversary {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WireAdversary::BadMagic => "bad-magic",
+            WireAdversary::MidFrameDisconnect => "mid-frame-disconnect",
+            WireAdversary::OverCapLength => "over-cap-length",
+            WireAdversary::BadVersion => "bad-version",
+            WireAdversary::SpoofToken => "spoof-token",
+            WireAdversary::RegisterUnknownId => "register-unknown-id",
+            WireAdversary::RegisterDuplicateId => "register-duplicate-id",
+            WireAdversary::CrossClient => "cross-client",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<WireAdversary> {
+        match s {
+            "bad-magic" => Ok(WireAdversary::BadMagic),
+            "mid-frame-disconnect" => Ok(WireAdversary::MidFrameDisconnect),
+            "over-cap-length" => Ok(WireAdversary::OverCapLength),
+            "bad-version" => Ok(WireAdversary::BadVersion),
+            "spoof-token" => Ok(WireAdversary::SpoofToken),
+            "register-unknown-id" => Ok(WireAdversary::RegisterUnknownId),
+            "register-duplicate-id" => Ok(WireAdversary::RegisterDuplicateId),
+            "cross-client" => Ok(WireAdversary::CrossClient),
+            other => Err(Error::invalid(format!("unknown wire adversary '{other}'"))),
+        }
+    }
+
+    /// Run this attack against a live server. `claims` is the cohort
+    /// client id the attack impersonates, `via` a *different* registered
+    /// client whose valid session the cross-client attack launders
+    /// through, `round`/`p` shape the spoofed payloads. `Ok` means the
+    /// attack was absorbed as the contract requires.
+    pub fn launch(
+        &self,
+        server: &Loopback,
+        claims: u32,
+        via: u32,
+        round: u32,
+        p: usize,
+    ) -> Result<()> {
+        match self {
+            WireAdversary::BadMagic => {
+                raw_write(server.addr(), &[0xde, 0xad, 0xbe, 0xef, 0, 0, 0, 0, 1, 2, 3])
+            }
+            WireAdversary::MidFrameDisconnect => {
+                // valid upload header promising 1000 bytes, 12 delivered,
+                // then the connection drops
+                let mut bytes = upload_header(1000);
+                bytes.extend_from_slice(&[7u8; 12]);
+                raw_write(server.addr(), &bytes)
+            }
+            WireAdversary::OverCapLength => raw_write(server.addr(), &upload_header(u32::MAX)),
+            WireAdversary::BadVersion => {
+                for bad_version in [FRAME_VERSION + 9, 1] {
+                    let mut framed = frame_bytes(FrameKind::Upload, 0, b"future payload")?;
+                    framed[2] = bad_version;
+                    raw_write(server.addr(), &framed)?;
+                }
+                Ok(())
+            }
+            WireAdversary::SpoofToken => {
+                let spoof = encode_update(claims, round, 9_999, &vec![9.0f32; p], Encoding::Dense);
+                for token in [0u64, 0xdead_beef_cafe_f00d] {
+                    raw_write(server.addr(), &frame_bytes(FrameKind::Upload, token, &spoof)?)?;
+                }
+                Ok(())
+            }
+            WireAdversary::RegisterUnknownId => refusal(ClientConn::connect(server.addr(), 77)),
+            WireAdversary::RegisterDuplicateId => {
+                refusal(ClientConn::connect(server.addr(), claims))
+            }
+            WireAdversary::CrossClient => {
+                let cross = encode_update(claims, round, 1_000, &vec![5.0f32; p], Encoding::Dense);
+                let conn = server.client_conn(via).ok_or_else(|| {
+                    Error::transport(format!("client {via} has no live session to launder through"))
+                })?;
+                conn.upload(&cross)
+            }
+        }
+    }
+}
+
+/// A registration attack succeeded iff the server *refused* it.
+fn refusal(attempt: Result<ClientConn>) -> Result<()> {
+    match attempt {
+        Ok(_) => Err(Error::transport("server admitted a session it must refuse")),
+        Err(e) => {
+            let msg = e.to_string();
+            if msg.contains("refused") || msg.contains("closed") {
+                Ok(())
+            } else {
+                Err(e)
+            }
+        }
+    }
+}
+
+/// A frame v2 upload header declaring `len` payload bytes (and nothing
+/// else — the attacks control what, if anything, follows).
+fn upload_header(len: u32) -> Vec<u8> {
+    let mut header = vec![0u8; FRAME_HEADER_BYTES];
+    header[..2].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    header[2] = FRAME_VERSION;
+    header[3] = FrameKind::Upload as u8;
+    header[12..16].copy_from_slice(&len.to_le_bytes());
+    header
+}
+
+/// Open a raw connection to the server's address and write attack bytes,
+/// dropping the connection immediately (the mid-frame disconnect is the
+/// point for several adversaries).
+fn raw_write(addr: &WireAddr, bytes: &[u8]) -> Result<()> {
+    match addr {
+        WireAddr::Tcp(a) => {
+            let mut s = std::net::TcpStream::connect(a)?;
+            s.write_all(bytes)?;
+        }
+        WireAddr::Uds(p) => {
+            let mut s = std::os::unix::net::UnixStream::connect(p)?;
+            s.write_all(bytes)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::link::InProcess;
+
+    fn upload(client: u32, round: u32, p: usize) -> Vec<u8> {
+        let params: Vec<f32> = (0..p).map(|i| i as f32 * 0.5 - 1.0).collect();
+        encode_update(client, round, 10 + client, &params, Encoding::Dense)
+    }
+
+    #[test]
+    fn fates_are_deterministic_and_cover_the_bands() {
+        let plan = FaultPlan {
+            seed: 0xfa7e,
+            drop_prob: 0.2,
+            dup_prob: 0.2,
+            corrupt_prob: 0.2,
+            delay_prob: 0.1,
+            disconnect_uplink_prob: 0.1,
+            byzantine_prob: 0.1,
+            ..FaultPlan::default()
+        };
+        plan.validate().unwrap();
+        let grid: Vec<UploadFate> =
+            (0..40).flat_map(|r| (0..40).map(move |c| (r, c))).map(|(r, c)| plan.upload_fate(r, c)).collect();
+        let again: Vec<UploadFate> =
+            (0..40).flat_map(|r| (0..40).map(move |c| (r, c))).map(|(r, c)| plan.upload_fate(r, c)).collect();
+        assert_eq!(grid, again, "fates must be pure functions of (seed, round, client)");
+        for fate in [
+            UploadFate::Deliver,
+            UploadFate::Drop,
+            UploadFate::Duplicate,
+            UploadFate::Corrupt,
+            UploadFate::Delay,
+            UploadFate::DisconnectUplink,
+            UploadFate::Byzantine,
+        ] {
+            assert!(grid.contains(&fate), "band {fate:?} never drawn over a 1600 grid");
+        }
+        // an inactive plan delivers everything
+        let clean = FaultPlan::default();
+        assert!(!clean.is_active());
+        assert_eq!(clean.upload_fate(3, 7), UploadFate::Deliver);
+        assert_eq!(clean.downlink_fate(3, 7), DownlinkFate::Deliver);
+    }
+
+    #[test]
+    fn byzantine_roster_overrides_every_draw() {
+        let plan = FaultPlan {
+            seed: 1,
+            drop_prob: 1.0,
+            byzantine_clients: vec![4],
+            ..FaultPlan::default()
+        };
+        for r in 0..10 {
+            assert_eq!(plan.upload_fate(r, 4), UploadFate::Byzantine);
+            assert_eq!(plan.upload_fate(r, 5), UploadFate::Drop);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_probabilities() {
+        let mut plan = FaultPlan { drop_prob: 1.5, ..FaultPlan::default() };
+        assert!(plan.validate().is_err());
+        plan.drop_prob = -0.1;
+        assert!(plan.validate().is_err());
+        // exclusive bands: the sum may not exceed one draw
+        let plan = FaultPlan { drop_prob: 0.6, dup_prob: 0.6, ..FaultPlan::default() };
+        let err = plan.validate().unwrap_err();
+        assert!(err.to_string().contains("sum"), "{err}");
+    }
+
+    #[test]
+    fn fault_plan_json_round_trips() {
+        let plan = FaultPlan {
+            seed: 99,
+            drop_prob: 0.25,
+            dup_prob: 0.25,
+            corrupt_prob: 0.1,
+            delay_prob: 0.05,
+            disconnect_uplink_prob: 0.05,
+            disconnect_downlink_prob: 0.2,
+            byzantine_prob: 0.1,
+            byzantine_clients: vec![2, 7],
+            reorder: true,
+        };
+        let back = FaultPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+        // from_json validates
+        let bad = crate::util::json::parse(r#"{"drop_prob": 2.0}"#).unwrap();
+        assert!(FaultPlan::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn chaos_log_drains_per_round_in_canonical_order() {
+        let log = ChaosLog::default();
+        let ev = |round, client, kind| FaultEvent { round, client, kind, bytes: 8 };
+        log.record(ev(2, 5, FaultKind::DropUpload));
+        log.record(ev(1, 9, FaultKind::DuplicateUpload));
+        log.record(ev(1, 3, FaultKind::ByzantineUpload));
+        log.record(ev(1, 3, FaultKind::DropUpload));
+        let round1 = log.take_round(1);
+        assert_eq!(
+            round1.events,
+            vec![
+                ev(1, 3, FaultKind::DropUpload),
+                ev(1, 3, FaultKind::ByzantineUpload),
+                ev(1, 9, FaultKind::DuplicateUpload),
+            ]
+        );
+        // round 2's event survived the drain, and draining twice is empty
+        assert_eq!(log.take_round(1), FaultLog::default());
+        assert_eq!(log.take_round(2).events, vec![ev(2, 5, FaultKind::DropUpload)]);
+    }
+
+    #[test]
+    fn sink_executes_fates_and_logs_them() {
+        // client 1 is Byzantine by roster; everyone else duplicates
+        let plan = Arc::new(FaultPlan {
+            seed: 7,
+            dup_prob: 1.0,
+            byzantine_clients: vec![1],
+            ..FaultPlan::default()
+        });
+        let log = Arc::new(ChaosLog::default());
+        let mut t =
+            ChaosTransport::new(Box::new(InProcess::new()), Arc::clone(&plan), Arc::clone(&log));
+        let sink = t.sink();
+        t.begin_round(5);
+        let p = 6;
+        for c in 0..3u32 {
+            sink.send(upload(c, 1, p)).unwrap();
+        }
+        // 2 dup'd clients deliver twice, the Byzantine one once
+        let got: Vec<Vec<u8>> = (0..5).map(|_| t.recv().unwrap()).collect();
+        let dup0 = got.iter().filter(|g| **g == upload(0, 1, p)).count();
+        let dup2 = got.iter().filter(|g| **g == upload(2, 1, p)).count();
+        assert_eq!((dup0, dup2), (2, 2), "duplicates must cross the wire twice");
+        let forged: Vec<&Vec<u8>> = got
+            .iter()
+            .filter(|g| peek_header(g).map(|h| h.client) == Some(1))
+            .collect();
+        assert_eq!(forged.len(), 1);
+        let h = peek_header(forged[0]).unwrap();
+        assert_ne!(h.p as usize, p, "Byzantine forgery must carry the wrong width");
+        let faults = log.take_round(1);
+        let kinds: Vec<FaultKind> = faults.events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![FaultKind::DuplicateUpload, FaultKind::ByzantineUpload, FaultKind::DuplicateUpload]
+        );
+    }
+
+    #[test]
+    fn corrupt_payloads_are_deterministic_and_detectably_broken() {
+        let plan = Arc::new(FaultPlan { seed: 3, corrupt_prob: 1.0, ..FaultPlan::default() });
+        let log = Arc::new(ChaosLog::default());
+        let collect = |plan: &Arc<FaultPlan>, log: &Arc<ChaosLog>| -> Vec<Vec<u8>> {
+            let mut t =
+                ChaosTransport::new(Box::new(InProcess::new()), Arc::clone(plan), Arc::clone(log));
+            let sink = t.sink();
+            t.begin_round(8);
+            for c in 0..8u32 {
+                sink.send(upload(c, 2, 9)).unwrap();
+            }
+            (0..8).map(|_| t.recv().unwrap()).collect()
+        };
+        let first = collect(&plan, &log);
+        let second = collect(&plan, &log);
+        assert_eq!(first, second, "corruption must be seeded, not random");
+        for (c, mangled) in first.iter().enumerate() {
+            let clean = upload(c as u32, 2, 9);
+            assert_ne!(*mangled, clean, "client {c}: payload not corrupted");
+            // detectably corrupt: header unparseable, short, or flagged by
+            // the driver's expect-mask (fate is Corrupt) — never foldable
+            // as a clean update under a different identity
+            if let Some(h) = peek_header(mangled) {
+                assert_eq!(h.client, c as u32, "corruption must not forge another client");
+            }
+        }
+    }
+
+    #[test]
+    fn reorder_window_shuffles_deterministically_and_loses_nothing() {
+        let plan = Arc::new(FaultPlan { seed: 11, reorder: true, ..FaultPlan::default() });
+        // three rounds of eight: six shuffle windows, so a seed whose every
+        // window happens to be the identity permutation is ~(1/24)^6
+        let run = || -> Vec<Vec<u8>> {
+            let mut t = ChaosTransport::new(
+                Box::new(InProcess::new()),
+                Arc::clone(&plan),
+                Arc::new(ChaosLog::default()),
+            );
+            let sink = t.sink();
+            let mut got = Vec::new();
+            for round in 1..=3u32 {
+                t.begin_round(8);
+                for c in 0..8u32 {
+                    sink.send(upload(c, round, 4)).unwrap();
+                }
+                got.extend((0..8).map(|_| t.recv().unwrap()));
+            }
+            got
+        };
+        let first = run();
+        let second = run();
+        assert_eq!(first, second, "reorder must be seeded");
+        let arrival: Vec<Vec<u8>> =
+            (1..=3u32).flat_map(|r| (0..8u32).map(move |c| upload(c, r, 4))).collect();
+        assert_ne!(first, arrival, "24 uploads over 3 rounds should actually scramble");
+        let mut sorted = first.clone();
+        sorted.sort();
+        let mut sent = arrival.clone();
+        sent.sort();
+        assert_eq!(sorted, sent, "reordering must not lose or alter payloads");
+    }
+
+    #[test]
+    fn downlink_disconnect_swallows_the_broadcast_and_logs_it() {
+        let plan =
+            Arc::new(FaultPlan { seed: 5, disconnect_downlink_prob: 1.0, ..FaultPlan::default() });
+        let log = Arc::new(ChaosLog::default());
+        let mut t =
+            ChaosTransport::new(Box::new(InProcess::new()), Arc::clone(&plan), Arc::clone(&log));
+        t.register_clients(&[0]).unwrap();
+        let broadcast = encode_update(u32::MAX, 7, 0, &[0.5f32; 4], Encoding::Dense);
+        t.send_downlink(0, Arc::new(broadcast.clone())).unwrap();
+        let err = t.downlink().recv(0, Duration::from_millis(30)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        let faults = log.take_round(7);
+        assert_eq!(faults.events.len(), 1);
+        assert_eq!(faults.events[0].kind, FaultKind::DisconnectDownlink);
+        assert_eq!(faults.events[0].bytes, broadcast.len());
+    }
+
+    #[test]
+    fn named_scenarios_resolve_and_round_trip_through_json() {
+        for name in NAMED_SCENARIOS {
+            let s = Scenario::named(name).unwrap();
+            assert_eq!(&s.name, name);
+            if let Some(plan) = &s.chaos {
+                plan.validate().unwrap();
+            }
+            let back = Scenario::from_json(&s.to_json()).unwrap();
+            assert_eq!(back, s, "{name}: JSON round trip changed the scenario");
+        }
+        assert!(Scenario::named("carrier-pigeon").is_err());
+        // the acceptance scenario composes all four headline faults
+        let soup = Scenario::named("chaos-soup").unwrap().chaos.unwrap();
+        assert!(soup.drop_prob > 0.0 && soup.dup_prob > 0.0 && soup.reorder);
+        assert_eq!(soup.byzantine_clients, vec![2]);
+    }
+
+    #[test]
+    fn wire_adversary_spellings_round_trip() {
+        use WireAdversary::*;
+        for adv in [
+            BadMagic,
+            MidFrameDisconnect,
+            OverCapLength,
+            BadVersion,
+            SpoofToken,
+            RegisterUnknownId,
+            RegisterDuplicateId,
+            CrossClient,
+        ] {
+            assert_eq!(WireAdversary::parse(adv.as_str()).unwrap(), adv);
+        }
+        assert!(WireAdversary::parse("ddos").is_err());
+    }
+
+    #[test]
+    fn scenario_file_resolution_prefers_the_file() {
+        let dir = std::env::temp_dir().join(format!("fedmask_scenario_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("my.json");
+        let mut s = Scenario::clean("from-file");
+        s.chaos = Some(FaultPlan { seed: 123, drop_prob: 0.5, ..FaultPlan::default() });
+        std::fs::write(&path, s.to_json().to_pretty()).unwrap();
+        let loaded = Scenario::resolve(path.to_str().unwrap()).unwrap();
+        assert_eq!(loaded, s);
+        // a non-path spec falls back to the registry
+        assert_eq!(Scenario::resolve("clean").unwrap(), Scenario::clean("clean"));
+        assert!(Scenario::resolve("no-such-scenario").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

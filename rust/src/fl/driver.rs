@@ -45,6 +45,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::experiment::{ExperimentConfig, NetworkKind};
 use crate::fl::aggregate::{Aggregator, Contribution, SparseContribution};
+use crate::fl::chaos::{ChaosLog, ChaosTransport, DownlinkFate, FaultLog, FaultPlan, UploadFate};
 use crate::fl::tree::ShardedAggregator;
 use crate::sim::availability::{AvailabilityModel, ClientState};
 use crate::sim::rng::Rng;
@@ -135,10 +136,24 @@ fn reject_upload(rejected: &mut usize, tolerate: bool, why: impl std::fmt::Displ
 /// draining for longer than the timeout never trips it — only a round
 /// where nothing happens for the whole window does.
 ///
+/// What one round's drain produced: the per-job metadata in input
+/// (client-id) order. Duplicate-frame billing deliberately does *not*
+/// live here — whether the drain pulls a duplicate's second copy off
+/// the wire before the round completes depends on arrival interleaving,
+/// so the deterministic count comes from the chaos log instead
+/// ([`ChaosLog::round_duplicates`]).
+struct Drained {
+    metas: Vec<JobMeta>,
+}
+
 /// Returns the per-job metadata in input (client-id) order once every job
-/// reported and every upload folded. Free function by design: it needs no
-/// engine, so the dead-client regression tests drive it directly with
-/// hand-built channels and transports.
+/// reported and every expected upload folded. `expect_upload` (same
+/// indexing as `selected`) marks which jobs' payloads will actually
+/// reach the server — under fault injection a job may run and report
+/// metadata while its upload is dropped, corrupted, or forged; the
+/// drain must not wait for (or fold) those. Free function by design: it
+/// needs no engine, so the dead-client regression tests drive it
+/// directly with hand-built channels and transports.
 #[allow(clippy::too_many_arguments)] // round context; precedent: data/synth.rs
 fn drain_round_uploads(
     transport: &mut dyn Transport,
@@ -146,17 +161,19 @@ fn drain_round_uploads(
     fold: &mut RoundFold<'_>,
     scratch: &mut DecodeScratch,
     selected: &[usize],
+    expect_upload: &[bool],
     round: usize,
     p: usize,
     tolerate_strays: bool,
     upload_timeout: Duration,
     drain_poll: Duration,
-) -> Result<Vec<JobMeta>> {
+) -> Result<Drained> {
     let n_jobs = selected.len();
+    debug_assert_eq!(expect_upload.len(), n_jobs);
     let mut metas: Vec<Option<JobMeta>> = vec![None; n_jobs];
     let mut uploaded = vec![false; n_jobs];
     let mut metas_pending = n_jobs;
-    let mut folds_pending = n_jobs;
+    let mut folds_pending = expect_upload.iter().filter(|e| **e).count();
     let mut rejected = 0usize;
     let mut results_open = true;
     // Inactivity deadline: pushed forward on every piece of progress.
@@ -213,9 +230,10 @@ fn drain_round_uploads(
             .ok_or_else(|| {
                 let missing: Vec<usize> = selected
                     .iter()
+                    .zip(expect_upload)
                     .zip(&uploaded)
-                    .filter(|(_, up)| !**up)
-                    .map(|(c, _)| *c)
+                    .filter(|((_, exp), up)| **exp && !**up)
+                    .map(|((c, _), _)| *c)
                     .collect();
                 Error::transport(format!(
                     "timed out after {upload_timeout:?} waiting for uploads from clients {missing:?}"
@@ -259,6 +277,9 @@ fn drain_round_uploads(
             }
         };
         if uploaded[pos] {
+            // The repeated frame is real uplink traffic, but it is billed
+            // from the chaos log at injection time (`Collected::dup_bytes`)
+            // — here it only has to be kept out of the fold.
             reject_upload(
                 &mut rejected,
                 tolerate_strays,
@@ -271,6 +292,19 @@ fn drain_round_uploads(
                 &mut rejected,
                 tolerate_strays,
                 format_args!("carries {} params, model has {}", header.p, p),
+            )?;
+            continue;
+        }
+        if !expect_upload[pos] {
+            // Fault injection declared this client's upload lost or
+            // mangled; anything that still lands under its id (e.g. a
+            // truncation that kept the fixed header intact) is rejected
+            // *before* the fold — the recovery contract for corrupt and
+            // Byzantine payloads.
+            reject_upload(
+                &mut rejected,
+                tolerate_strays,
+                format_args!("upload from client {} suppressed by fault injection", header.client),
             )?;
             continue;
         }
@@ -310,8 +344,10 @@ fn drain_round_uploads(
         folds_pending -= 1;
         deadline = Instant::now() + upload_timeout;
     }
-    debug_assert_eq!(fold.completed(), n_jobs);
-    Ok(metas.into_iter().map(|m| m.expect("all jobs accounted")).collect())
+    debug_assert_eq!(fold.completed(), expect_upload.iter().filter(|e| **e).count());
+    Ok(Drained {
+        metas: metas.into_iter().map(|m| m.expect("all jobs accounted")).collect(),
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -354,13 +390,47 @@ pub struct RoundWire {
     /// Largest single download billed this round (drives the virtual
     /// clock's downlink term).
     pub slowest_download: usize,
+    /// Per selected client (same order as `Cohort::selected`): should
+    /// the caller spawn this client's training job? `false` only when
+    /// fault injection disconnected the client's downlink mid-broadcast
+    /// — it never received `w_t`, so it has nothing to train on. All
+    /// `true` when the chaos harness is off.
+    pub spawn: Vec<bool>,
 }
 
 /// Output of the **collect** phase: every upload folded, every job
 /// accounted.
 pub struct Collected {
-    /// Per-job metadata in input (client-id) order.
+    /// Per-job metadata in input (client-id) order, spawned jobs only.
     pub metas: Vec<JobMeta>,
+    /// Chaos-injected duplicate frames this round, counted at injection
+    /// time — the client's radio sent them whether or not the drain
+    /// happened to pull the redundant copy before the round completed.
+    /// Billed as redundant traffic (bytes and messages, never units).
+    pub dup_frames: u64,
+    /// Bytes those redundant frames carried.
+    pub dup_bytes: u64,
+}
+
+/// The driver's pre-round reading of the fault plan: because injection
+/// is a pure function of (chaos seed, round, client), the driver can
+/// predict — before any byte moves — which jobs to spawn, how many wire
+/// deliveries the round produces, and which uploads will survive to
+/// fold. The simulated network's cohort barrier and the drain's
+/// completion condition both key off this, keeping rounds deterministic
+/// under injected loss.
+struct ChaosOutlook {
+    /// Per `Cohort::selected` index: spawn this client's job?
+    spawn: Vec<bool>,
+    /// The spawned clients (sorted subset of `Cohort::selected`) — the
+    /// id list the drain validates arrivals against.
+    spawned: Vec<usize>,
+    /// Per `spawned` index: will this client's upload reach the fold
+    /// intact (delivered or duplicated), or is it lost/mangled/forged?
+    expect: Vec<bool>,
+    /// Wire deliveries the transport should expect this round (counts
+    /// duplicates twice, drops zero times).
+    deliveries: usize,
 }
 
 /// Output of the **finalize** phase: the round's uplink accounting.
@@ -402,6 +472,12 @@ pub struct RoundDriver {
     /// dense catch-up transfer instead).
     has_prev_broadcast: Vec<bool>,
     ledger: CostLedger,
+    /// The fault-injection plan and its event log, when the chaos
+    /// harness is configured (`cfg.chaos` with any fault enabled). The
+    /// plan predicts per-round outcomes ([`ChaosOutlook`]); the log is
+    /// shared with the [`ChaosTransport`] layer and drained per round
+    /// into the [`FaultLog`] the round record carries.
+    chaos: Option<(Arc<FaultPlan>, Arc<ChaosLog>)>,
     /// Reusable decode buffers for the streaming aggregation loop — held
     /// across rounds so steady-state decoding never allocates.
     decode_scratch: DecodeScratch,
@@ -427,20 +503,63 @@ impl RoundDriver {
                 Box::new(Loopback::bind_with(cfg.transport, tuning)?)
             }
         };
-        let transport: Box<dyn Transport> = match cfg.network {
-            NetworkKind::Ideal => base,
-            NetworkKind::Simulated => Box::new(Simulated::new(base, NetworkModel::default())),
+        // Fault injection sits directly on the base wire, *inside* the
+        // simulated network: the Simulated layer then times and barriers
+        // on post-chaos deliveries, so its expected-arrival count matches
+        // what actually crosses the (faulty) wire.
+        let chaos = RoundDriver::chaos_parts(&cfg);
+        let wired: Box<dyn Transport> = match &chaos {
+            Some((plan, log)) => {
+                Box::new(ChaosTransport::new(base, Arc::clone(plan), Arc::clone(log)))
+            }
+            None => base,
         };
-        RoundDriver::with_transport(cfg, p, transport)
+        let transport: Box<dyn Transport> = match cfg.network {
+            NetworkKind::Ideal => wired,
+            NetworkKind::Simulated => Box::new(Simulated::with_compute(
+                wired,
+                NetworkModel::default(),
+                cfg.availability(),
+                cfg.local_epochs,
+            )),
+        };
+        RoundDriver::assemble(cfg, p, transport, chaos)
+    }
+
+    /// The configured fault plan, when any fault is actually enabled —
+    /// an all-zero plan is equivalent to no plan and costs nothing.
+    fn chaos_parts(cfg: &ExperimentConfig) -> Option<(Arc<FaultPlan>, Arc<ChaosLog>)> {
+        cfg.chaos
+            .as_ref()
+            .filter(|plan| plan.is_active())
+            .map(|plan| (Arc::new(plan.clone()), Arc::new(ChaosLog::default())))
     }
 
     /// Driver over a caller-built transport (tests wire in short-timeout
-    /// or pre-wrapped transports). No sessions are opened yet — see
-    /// [`RoundDriver::new`] on lazy registration.
+    /// or pre-wrapped transports). If the config carries an active fault
+    /// plan the caller's transport is wrapped in a [`ChaosTransport`];
+    /// no sessions are opened yet — see [`RoundDriver::new`] on lazy
+    /// registration.
     pub fn with_transport(
         cfg: Arc<ExperimentConfig>,
         p: usize,
         transport: Box<dyn Transport>,
+    ) -> Result<RoundDriver> {
+        let chaos = RoundDriver::chaos_parts(&cfg);
+        let transport: Box<dyn Transport> = match &chaos {
+            Some((plan, log)) => {
+                Box::new(ChaosTransport::new(transport, Arc::clone(plan), Arc::clone(log)))
+            }
+            None => transport,
+        };
+        RoundDriver::assemble(cfg, p, transport, chaos)
+    }
+
+    fn assemble(
+        cfg: Arc<ExperimentConfig>,
+        p: usize,
+        transport: Box<dyn Transport>,
+        chaos: Option<(Arc<FaultPlan>, Arc<ChaosLog>)>,
     ) -> Result<RoundDriver> {
         let registered: Vec<u32> = (0..cfg.clients as u32).collect();
         log::debug!(
@@ -460,6 +579,7 @@ impl RoundDriver {
             prev_broadcast: None,
             has_prev_broadcast: vec![false; clients],
             ledger: CostLedger::new(),
+            chaos,
             decode_scratch: DecodeScratch::default(),
             upload_timeout: DEFAULT_UPLOAD_TIMEOUT,
             drain_poll,
@@ -500,6 +620,51 @@ impl RoundDriver {
     /// Downlink handle client jobs receive their broadcast through.
     pub fn downlink(&self) -> Arc<dyn DownlinkSource> {
         self.transport.downlink()
+    }
+
+    /// Pre-compute this round's fault outcomes for `cohort`: which jobs
+    /// to spawn, how many wire deliveries to expect, which uploads will
+    /// survive to fold. Identity (all spawn, all expected) when the
+    /// chaos harness is off. Pure — `broadcast` and `collect` call it
+    /// independently and read the same schedule.
+    fn chaos_outlook(&self, cohort: &Cohort) -> ChaosOutlook {
+        let k = cohort.selected.len();
+        let Some((plan, _)) = &self.chaos else {
+            return ChaosOutlook {
+                spawn: vec![true; k],
+                spawned: cohort.selected.clone(),
+                expect: vec![true; k],
+                deliveries: k,
+            };
+        };
+        let t = cohort.round as u32;
+        let mut spawn = Vec::with_capacity(k);
+        let mut spawned = Vec::with_capacity(k);
+        let mut expect = Vec::with_capacity(k);
+        let mut deliveries = 0usize;
+        for &c in &cohort.selected {
+            if plan.downlink_fate(t, c as u32) == DownlinkFate::Disconnect {
+                // Never received the broadcast: no job, no upload.
+                spawn.push(false);
+                continue;
+            }
+            spawn.push(true);
+            let fate = plan.upload_fate(t, c as u32);
+            deliveries += plan.deliveries(fate);
+            spawned.push(c);
+            expect.push(matches!(fate, UploadFate::Deliver | UploadFate::Duplicate));
+        }
+        ChaosOutlook { spawn, spawned, expect, deliveries }
+    }
+
+    /// Drain the fault events the chaos layer logged for round `t`, in
+    /// canonical (client, kind) order — empty when the harness is off.
+    /// The server folds this into the round record.
+    pub fn take_fault_log(&self, t: usize) -> FaultLog {
+        self.chaos
+            .as_ref()
+            .map(|(_, log)| log.take_round(t as u32))
+            .unwrap_or_default()
     }
 
     /// **Phase 1 — sample.** ACK selection loop (Alg. 1/3 lines 9–14):
@@ -589,7 +754,12 @@ impl RoundDriver {
                 self.connected[c as usize] = true;
             }
         }
-        self.transport.begin_round(cohort.selected.len());
+        // Under fault injection the wire will see a *predictable* number
+        // of deliveries that differs from the cohort size (drops subtract,
+        // duplicates add): the transport's round barrier must count what
+        // actually arrives.
+        let outlook = self.chaos_outlook(cohort);
+        self.transport.begin_round(outlook.deliveries);
 
         // --- canonical state + the (at most two) distinct messages ---
         let prev = if self.cfg.downlink_delta { self.prev_broadcast.clone() } else { None };
@@ -695,7 +865,15 @@ impl RoundDriver {
             }
         }
         // Only this round's recipients hold w_t; everyone else goes stale
-        // and pays dense next time they are sampled.
+        // and pays dense next time they are sampled. A client whose
+        // downlink the fault plan disconnected mid-broadcast paid for the
+        // bytes but never materialized w_t — it must get a dense catch-up
+        // next round, not a delta it cannot apply.
+        for (i, &c) in cohort.selected.iter().enumerate() {
+            if !outlook.spawn[i] {
+                next_recipients[c] = false;
+            }
+        }
         self.has_prev_broadcast = next_recipients;
         if self.cfg.downlink_delta {
             self.prev_broadcast = Some(Arc::clone(&received));
@@ -711,6 +889,7 @@ impl RoundDriver {
             references,
             recon_err,
             slowest_download,
+            spawn: outlook.spawn,
         })
     }
 
@@ -723,20 +902,29 @@ impl RoundDriver {
         agg: &mut dyn Aggregator,
         results: &Receiver<(usize, Result<JobMeta>)>,
     ) -> Result<Collected> {
+        let outlook = self.chaos_outlook(cohort);
+        if !outlook.expect.iter().any(|e| *e) {
+            return Err(Error::transport(format!(
+                "round {}: fault injection left no honest upload to aggregate",
+                cohort.round
+            )));
+        }
         let tolerate_strays = self.transport.accepts_foreign_peers();
-        let metas = drain_round_uploads(
+        let drained = drain_round_uploads(
             self.transport.as_mut(),
             results,
             &mut RoundFold::Serial(agg),
             &mut self.decode_scratch,
-            &cohort.selected,
+            &outlook.spawned,
+            &outlook.expect,
             cohort.round,
             self.p,
             tolerate_strays,
             self.upload_timeout,
             self.drain_poll,
         )?;
-        Ok(Collected { metas })
+        let (dup_frames, dup_bytes) = self.round_duplicates(cohort.round);
+        Ok(Collected { metas: drained.metas, dup_frames, dup_bytes })
     }
 
     /// **Phase 3, sharded.** Same drain contract as
@@ -752,20 +940,40 @@ impl RoundDriver {
         tree: &mut ShardedAggregator,
         results: &Receiver<(usize, Result<JobMeta>)>,
     ) -> Result<Collected> {
+        let outlook = self.chaos_outlook(cohort);
+        if !outlook.expect.iter().any(|e| *e) {
+            return Err(Error::transport(format!(
+                "round {}: fault injection left no honest upload to aggregate",
+                cohort.round
+            )));
+        }
         let tolerate_strays = self.transport.accepts_foreign_peers();
-        let metas = drain_round_uploads(
+        let drained = drain_round_uploads(
             self.transport.as_mut(),
             results,
             &mut RoundFold::Sharded(tree),
             &mut self.decode_scratch,
-            &cohort.selected,
+            &outlook.spawned,
+            &outlook.expect,
             cohort.round,
             self.p,
             tolerate_strays,
             self.upload_timeout,
             self.drain_poll,
         )?;
-        Ok(Collected { metas })
+        let (dup_frames, dup_bytes) = self.round_duplicates(cohort.round);
+        Ok(Collected { metas: drained.metas, dup_frames, dup_bytes })
+    }
+
+    /// Injection-time duplicate accounting for `round`, read off the
+    /// chaos log (see [`ChaosLog::round_duplicates`] for why the drain's
+    /// own observation would be rerun-dependent). `(0, 0)` when the
+    /// harness is off.
+    fn round_duplicates(&self, round: usize) -> (u64, u64) {
+        self.chaos
+            .as_ref()
+            .map(|(_, log)| log.round_duplicates(round as u32))
+            .unwrap_or((0, 0))
     }
 
     /// **Phase 4 — finalize.** Uplink ledger accounting in deterministic
@@ -775,9 +983,15 @@ impl RoundDriver {
         let mut upload_sizes = Vec::with_capacity(collected.metas.len());
         let mut loss_sum = 0.0f64;
         for &(train_loss, nnz, bytes) in &collected.metas {
+            // Every spawned job is billed — including one whose upload the
+            // fault plan then dropped or mangled: the client's radio spent
+            // those bytes whether or not the server could use them.
             self.ledger.record_upload(self.p, nnz, bytes);
             upload_sizes.push(bytes);
             loss_sum += train_loss as f64;
+        }
+        if collected.dup_frames > 0 {
+            self.ledger.record_redundant_upload(collected.dup_frames, collected.dup_bytes);
         }
         RoundCost { loss_sum, upload_sizes }
     }
@@ -873,6 +1087,7 @@ mod tests {
             &mut RoundFold::Serial(agg.as_mut()),
             &mut DecodeScratch::default(),
             &selected,
+            &[true, true],
             1,
             P,
             false,
@@ -913,6 +1128,7 @@ mod tests {
             &mut RoundFold::Serial(agg.as_mut()),
             &mut DecodeScratch::default(),
             &selected,
+            &[true, true],
             1,
             P,
             false,
@@ -958,13 +1174,15 @@ mod tests {
                 &mut RoundFold::Serial(agg.as_mut()),
                 &mut DecodeScratch::default(),
                 &selected,
+                &[true, true, true],
                 7,
                 P,
                 false,
                 Duration::from_secs(30),
                 Duration::from_millis(25),
             )
-            .unwrap();
+            .unwrap()
+            .metas;
             assert_eq!(metas.len(), 3);
             for (i, (loss, nnz, bytes)) in metas.iter().enumerate() {
                 assert_eq!(*loss, 0.1 * i as f32);
@@ -1005,6 +1223,7 @@ mod tests {
             &mut RoundFold::Serial(agg.as_mut()),
             &mut DecodeScratch::default(),
             &selected,
+            &[true, true],
             1,
             P,
             false,
@@ -1038,6 +1257,7 @@ mod tests {
             &mut RoundFold::Serial(agg.as_mut()),
             &mut DecodeScratch::default(),
             &selected,
+            &[true],
             3,
             P,
             false,
@@ -1063,13 +1283,15 @@ mod tests {
             &mut RoundFold::Serial(agg.as_mut()),
             &mut DecodeScratch::default(),
             &selected,
+            &[true],
             3,
             P,
             true,
             Duration::from_secs(5),
             Duration::from_millis(25),
         )
-        .unwrap();
+        .unwrap()
+        .metas;
         assert_eq!(metas.len(), 1);
         assert_eq!(agg.folded(), 1);
     }
@@ -1138,7 +1360,9 @@ mod tests {
             .selected
             .iter()
             .enumerate()
-            .map(|(i, &c)| {
+            .filter(|&(i, _)| wire.spawn[i])
+            .enumerate()
+            .map(|(j, (i, &c))| {
                 let sink = Arc::clone(&sink);
                 let downlink = Arc::clone(&downlink);
                 let reference = wire.references[i].clone();
@@ -1163,7 +1387,7 @@ mod tests {
                     );
                     let bytes = payload.len();
                     sink.send(payload).unwrap();
-                    tx.send((i, Ok((0.25, nnz, bytes)))).unwrap();
+                    tx.send((j, Ok((0.25, nnz, bytes)))).unwrap();
                 })
             })
             .collect();
@@ -1502,6 +1726,7 @@ mod tests {
             &mut RoundFold::Serial(agg.as_mut()),
             &mut DecodeScratch::default(),
             &selected,
+            &vec![true; k],
             5,
             P,
             false,
@@ -1522,13 +1747,15 @@ mod tests {
                 &mut RoundFold::Sharded(&mut tree),
                 &mut DecodeScratch::default(),
                 &selected,
+                &vec![true; k],
                 5,
                 P,
                 false,
                 Duration::from_secs(30),
                 Duration::from_millis(25),
             )
-            .unwrap();
+            .unwrap()
+            .metas;
             assert_eq!(metas.len(), k);
             assert_eq!(tree.routed(), k);
             let merged = tree.finish().unwrap();

@@ -25,8 +25,14 @@
 //!   (see `docs/SCALE.md`).
 //! * [`server`] — the simulation shell around the driver: data, the
 //!   engine pool, job fan-out, evaluation, the virtual clock, records.
+//! * [`chaos`] — the deterministic chaos harness: a seeded
+//!   [`chaos::FaultPlan`] executed by a [`chaos::ChaosTransport`] wrapper
+//!   (drops, duplicates, reordering, corruption, disconnects, Byzantine
+//!   uploads), composed with availability and network models into named,
+//!   JSON-loadable [`chaos::Scenario`]s (see `docs/CHAOS.md`).
 
 pub mod aggregate;
+pub mod chaos;
 pub mod client;
 pub mod driver;
 pub mod masking;
@@ -37,6 +43,7 @@ pub mod tree;
 pub use aggregate::{
     make_aggregator, Aggregator, Contribution, SparseContribution, StreamingFedAvg,
 };
+pub use chaos::{ChaosLog, ChaosTransport, FaultKind, FaultLog, FaultPlan, Scenario, WireAdversary};
 pub use client::receive_broadcast;
 pub use driver::{Cohort, Collected, RoundCost, RoundDriver, RoundWire};
 pub use tree::ShardedAggregator;

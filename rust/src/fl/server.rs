@@ -132,7 +132,7 @@ impl Server {
             .map_err(|_| Error::Engine("init job lost".into()))??;
         let p = params.len();
 
-        let availability = AvailabilityModel::new(cfg.ack_prob, cfg.straggler_prob, cfg.seed ^ 0xacc);
+        let availability = cfg.availability();
         let network = match cfg.network {
             NetworkKind::Ideal => NetworkModel::ideal(),
             NetworkKind::Simulated => NetworkModel::default(),
@@ -187,10 +187,14 @@ impl Server {
         // the pool channel.
         let sink = self.driver.sink();
         let downlink = self.driver.downlink();
+        // `wire.spawn` filters out clients whose downlink the fault plan
+        // disconnected mid-broadcast: they never received w_t, so they
+        // have no round to run. All-true without the chaos harness.
         let jobs: Vec<_> = cohort
             .selected
             .iter()
             .enumerate()
+            .filter(|&(i, _)| wire.spawn[i])
             .map(|(i, &cid)| {
                 let job = ClientJob {
                     client_id: cid,
@@ -254,7 +258,9 @@ impl Server {
         let compute_s = cohort
             .selected
             .iter()
-            .map(|&c| {
+            .enumerate()
+            .filter(|&(i, _)| wire.spawn[i])
+            .map(|(_, &c)| {
                 self.availability
                     .compute_time(t as u64, c as u64, self.cfg.local_epochs)
             })
@@ -287,6 +293,7 @@ impl Server {
             downlink_bytes: ledger.downlink_bytes,
             downlink_recon_err: wire.recon_err,
             virtual_time_s: self.clock.now(),
+            faults: self.driver.take_fault_log(t),
         };
         self.recorder.push(rec.clone());
         Ok(rec)

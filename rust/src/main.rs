@@ -10,6 +10,7 @@
 
 use fedmask::config::experiment::ExperimentConfig;
 use fedmask::figures;
+use fedmask::fl::chaos::{FaultPlan, Scenario};
 use fedmask::fl::server::Server;
 use fedmask::runtime::manifest::Manifest;
 use fedmask::transport::codec::Encoding;
@@ -40,6 +41,31 @@ const RUN_OPTS: &[OptSpec] = &[
         "drain-poll-ms",
         "upload drain poll interval in milliseconds (overrides config)",
     ),
+    OptSpec::value(
+        "scenario",
+        "failure scenario: a JSON file path or a built-in name (clean|lossy-uplink|duplicator|flaky-sessions|byzantine-one|chaos-soup|scrambled-arrivals|malformed-peers|spoofed-tokens); applied before other flags",
+    ),
+    OptSpec::value("ack-prob", "client availability: ACK probability in [0,1] (overrides config)"),
+    OptSpec::value(
+        "straggler-prob",
+        "probability an ACKed client straggles past the deadline (overrides config)",
+    ),
+    OptSpec::value(
+        "compute-jitter",
+        "±fractional compute-time jitter in [0,1]; orders deliveries under the simulated network",
+    ),
+    OptSpec::value("chaos-seed", "fault-injection seed (any --chaos-* flag enables the harness)"),
+    OptSpec::value("chaos-drop", "per-(round,client) upload drop probability"),
+    OptSpec::value("chaos-dup", "per-(round,client) upload duplication probability"),
+    OptSpec::value("chaos-corrupt", "per-(round,client) payload corruption probability"),
+    OptSpec::value("chaos-delay", "per-(round,client) past-the-round delay probability"),
+    OptSpec::value("chaos-disconnect-uplink", "mid-round uplink disconnect probability"),
+    OptSpec::value("chaos-disconnect-downlink", "mid-round downlink disconnect probability"),
+    OptSpec::value(
+        "chaos-byzantine",
+        "comma-separated client ids that upload well-formed wrong payloads every round",
+    ),
+    OptSpec::flag("chaos-reorder", "buffer and shuffle upload arrivals in seeded windows"),
 ];
 
 const EQ6_OPTS: &[OptSpec] = &[
@@ -79,6 +105,11 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         .get("config")
         .ok_or_else(|| fedmask::Error::invalid("--config is required"))?;
     let mut cfg = ExperimentConfig::load(std::path::Path::new(config_path))?;
+    // a scenario rewrites the failure environment wholesale; individual
+    // flags below then override its pieces
+    if let Some(spec) = args.get("scenario") {
+        Scenario::resolve(spec)?.apply(&mut cfg);
+    }
     if let Some(spec) = args.get("transport") {
         cfg.transport = TransportKind::parse(spec)?;
     }
@@ -97,6 +128,66 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         cfg.drain_poll_ms = spec
             .parse::<u64>()
             .map_err(|_| fedmask::Error::invalid(format!("--drain-poll-ms: not a duration: {spec}")))?;
+    }
+    let prob = |flag: &str| -> Result<Option<f64>> {
+        args.get(flag)
+            .map(|spec| {
+                spec.parse::<f64>()
+                    .map_err(|_| fedmask::Error::invalid(format!("--{flag}: not a probability: {spec}")))
+            })
+            .transpose()
+    };
+    if let Some(v) = prob("ack-prob")? {
+        cfg.ack_prob = v;
+    }
+    if let Some(v) = prob("straggler-prob")? {
+        cfg.straggler_prob = v;
+    }
+    if let Some(v) = prob("compute-jitter")? {
+        cfg.compute_jitter = v;
+    }
+    // any --chaos-* flag activates (or extends the scenario's) fault plan
+    {
+        fn plan(cfg: &mut ExperimentConfig) -> &mut FaultPlan {
+            cfg.chaos.get_or_insert_with(FaultPlan::default)
+        }
+        if let Some(spec) = args.get("chaos-seed") {
+            plan(&mut cfg).seed = spec
+                .parse::<u64>()
+                .map_err(|_| fedmask::Error::invalid(format!("--chaos-seed: not a seed: {spec}")))?;
+        }
+        if let Some(v) = prob("chaos-drop")? {
+            plan(&mut cfg).drop_prob = v;
+        }
+        if let Some(v) = prob("chaos-dup")? {
+            plan(&mut cfg).dup_prob = v;
+        }
+        if let Some(v) = prob("chaos-corrupt")? {
+            plan(&mut cfg).corrupt_prob = v;
+        }
+        if let Some(v) = prob("chaos-delay")? {
+            plan(&mut cfg).delay_prob = v;
+        }
+        if let Some(v) = prob("chaos-disconnect-uplink")? {
+            plan(&mut cfg).disconnect_uplink_prob = v;
+        }
+        if let Some(v) = prob("chaos-disconnect-downlink")? {
+            plan(&mut cfg).disconnect_downlink_prob = v;
+        }
+        if let Some(spec) = args.get("chaos-byzantine") {
+            plan(&mut cfg).byzantine_clients = spec
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse::<u32>().map_err(|_| {
+                        fedmask::Error::invalid(format!("--chaos-byzantine: not a client id: {s}"))
+                    })
+                })
+                .collect::<Result<Vec<u32>>>()?;
+        }
+        if args.has_flag("chaos-reorder") {
+            plan(&mut cfg).reorder = true;
+        }
     }
     // overrides bypass load-time validation; re-check the merged config
     cfg.validate()?;

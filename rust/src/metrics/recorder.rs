@@ -2,11 +2,15 @@
 
 use std::path::Path;
 
+use crate::fl::chaos::FaultLog;
 use crate::metrics::csv::{fmt, Table};
 use crate::util::error::Result;
 
 /// Everything the coordinator knows at the end of one federated round.
-#[derive(Debug, Clone, Default)]
+/// `PartialEq` is part of the chaos harness's determinism contract: two
+/// runs with the same seeds must produce equal records, fault log
+/// included.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RoundRecord {
     pub round: usize,
     /// Sampling rate used this round (c in the paper).
@@ -33,6 +37,10 @@ pub struct RoundRecord {
     pub downlink_recon_err: f64,
     /// Virtual wall-clock seconds elapsed.
     pub virtual_time_s: f64,
+    /// Faults the chaos harness injected this round (empty when the
+    /// harness is off) — drops, duplicates, corruptions, disconnects,
+    /// Byzantine uploads, in canonical (client, kind) order.
+    pub faults: FaultLog,
 }
 
 /// Collects round records and renders them as CSV / summaries.
@@ -94,6 +102,7 @@ impl RunRecorder {
             "downlink_bytes",
             "downlink_recon_err",
             "virtual_time_s",
+            "faults",
         ]);
         for r in &self.rounds {
             t.push(vec![
@@ -110,6 +119,7 @@ impl RunRecorder {
                 r.downlink_bytes.to_string(),
                 fmt(r.downlink_recon_err),
                 fmt(r.virtual_time_s),
+                r.faults.events.len().to_string(),
             ]);
         }
         t
@@ -155,6 +165,7 @@ mod tests {
             downlink_bytes: (units * 4000.0) as u64,
             downlink_recon_err: 0.0,
             virtual_time_s: round as f64,
+            faults: FaultLog::default(),
         }
     }
 

@@ -65,6 +65,27 @@ impl AvailabilityModel {
         }
     }
 
+    /// Full constructor: availability *and* compute heterogeneity. The
+    /// config layer builds this one so `compute_jitter` reaches the
+    /// `Simulated` transport's delivery ordering.
+    pub fn with_compute(
+        ack_prob: f64,
+        straggler_prob: f64,
+        compute_mean_s: f64,
+        compute_jitter: f64,
+        seed: u64,
+    ) -> AvailabilityModel {
+        let mut m = AvailabilityModel::new(ack_prob, straggler_prob, seed);
+        assert!(
+            compute_mean_s.is_finite() && compute_mean_s >= 0.0,
+            "compute_mean_s out of range"
+        );
+        assert!((0.0..=1.0).contains(&compute_jitter), "compute_jitter out of range");
+        m.compute_mean_s = compute_mean_s;
+        m.compute_jitter = compute_jitter;
+        m
+    }
+
     fn rng_for(&self, round: u64, client: u64) -> Rng {
         Rng::new(self.seed).fork(round).fork(client)
     }

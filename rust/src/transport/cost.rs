@@ -75,6 +75,16 @@ impl CostLedger {
         self.messages += 1;
     }
 
+    /// Record redundant upload traffic: retransmitted or duplicated
+    /// frames that crossed the wire but folded zero times (the chaos
+    /// harness makes these observable). The bytes and messages are real
+    /// — the client's radio sent them — but they carry no model mass, so
+    /// units are untouched.
+    pub fn record_redundant_upload(&mut self, frames: u64, bytes: u64) {
+        self.uplink_bytes += bytes;
+        self.messages += frames;
+    }
+
     /// Total units (the paper's headline cost metric counts uploads; we
     /// keep both directions separable).
     pub fn total_units(&self) -> f64 {
@@ -127,6 +137,17 @@ mod tests {
         assert_eq!(l.uplink_bytes, 6526);
         assert_eq!(l.messages, 3);
         assert!((l.mean_uplink_units_per_round(2) - 0.65).abs() < 1e-12);
+    }
+
+    #[test]
+    fn redundant_uploads_bill_bytes_and_messages_but_no_units() {
+        let mut l = CostLedger::new();
+        l.record_upload(1000, 300, 2500);
+        // the same frame delivered again by a retransmit storm
+        l.record_redundant_upload(1, 2500);
+        assert_eq!(l.uplink_bytes, 5000, "duplicated frames cost real bytes");
+        assert_eq!(l.messages, 2);
+        assert!((l.uplink_units - 0.3).abs() < 1e-12, "but fold zero model mass");
     }
 
     #[test]

@@ -31,6 +31,8 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use crate::sim::availability::AvailabilityModel;
+use crate::transport::codec::peek_header;
 use crate::transport::network::NetworkModel;
 use crate::util::error::{Error, Result};
 
@@ -348,6 +350,12 @@ pub struct Simulated {
     /// [`Transport::try_recv_for`] calls so bounded polls accumulate the
     /// cohort instead of losing partial progress.
     batch: Vec<(f64, usize, Vec<u8>)>,
+    /// Device heterogeneity: when set, each upload's virtual completion
+    /// time also includes [`AvailabilityModel::compute_time`] for the
+    /// sending client (peeked from the payload header) over this many
+    /// local epochs — so a slow device's upload arrives late even when
+    /// its payload is small.
+    compute: Option<(AvailabilityModel, usize)>,
 }
 
 impl Simulated {
@@ -358,7 +366,23 @@ impl Simulated {
             queue: Vec::new(),
             pending: 0,
             batch: Vec::new(),
+            compute: None,
         }
+    }
+
+    /// Like [`Simulated::new`], but delivery order models local compute
+    /// time too: completion = compute + transfer. With the default model
+    /// (homogeneous compute, zero jitter) the added term is a constant
+    /// shift, so ordering — and thus the aggregate — is unchanged.
+    pub fn with_compute(
+        inner: Box<dyn Transport>,
+        network: NetworkModel,
+        availability: AvailabilityModel,
+        local_epochs: usize,
+    ) -> Simulated {
+        let mut t = Simulated::new(inner, network);
+        t.compute = Some((availability, local_epochs));
+        t
     }
 
     /// The whole cohort has arrived: order by virtual completion time
@@ -379,7 +403,16 @@ impl Simulated {
     /// returns true once the batch is complete.
     fn absorb(&mut self, payload: Vec<u8>) -> bool {
         let seq = self.batch.len();
-        self.batch.push((self.network.upload_time(payload.len()), seq, payload));
+        let mut t = self.network.upload_time(payload.len());
+        if let Some((availability, epochs)) = &self.compute {
+            // the device trains before it uploads: completion time is
+            // compute + transfer (payloads without our header — stray
+            // wire noise — carry transfer time only)
+            if let Some(h) = peek_header(&payload) {
+                t += availability.compute_time(h.round as u64, h.client as u64, *epochs);
+            }
+        }
+        self.batch.push((t, seq, payload));
         self.batch.len() == self.pending
     }
 }
@@ -516,6 +549,38 @@ mod tests {
         sink.send(vec![2u8; 200]).unwrap();
         let sizes: Vec<usize> = (0..3).map(|_| t.recv().unwrap().len()).collect();
         assert_eq!(sizes, vec![1, 200, 3000]);
+    }
+
+    #[test]
+    fn simulated_compute_jitter_orders_equal_size_uploads_by_compute_time() {
+        use crate::transport::codec::{encode_update, Encoding};
+        // equal payload sizes on an ideal network: transfer time ties at
+        // zero, so high compute jitter alone decides delivery order — the
+        // slowest device's upload is pinned to arrive last
+        let availability = AvailabilityModel::with_compute(1.0, 0.0, 10.0, 0.9, 77);
+        let epochs = 2;
+        let mut t = Simulated::with_compute(
+            Box::new(InProcess::new()),
+            NetworkModel::ideal(),
+            availability.clone(),
+            epochs,
+        );
+        let sink = t.sink();
+        t.begin_round(6);
+        for c in 0..6u32 {
+            sink.send(encode_update(c, 1, 10, &[1.0f32; 8], Encoding::Dense)).unwrap();
+        }
+        let arrived: Vec<u32> =
+            (0..6).map(|_| peek_header(&t.recv().unwrap()).unwrap().client).collect();
+        let mut expect: Vec<u32> = (0..6).collect();
+        expect.sort_by(|a, b| {
+            availability
+                .compute_time(1, *a as u64, epochs)
+                .partial_cmp(&availability.compute_time(1, *b as u64, epochs))
+                .unwrap()
+        });
+        assert_eq!(arrived, expect, "equal-size uploads must follow compute time");
+        assert_eq!(arrived.last(), expect.last(), "slowest device must land last");
     }
 
     #[test]

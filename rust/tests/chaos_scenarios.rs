@@ -1,0 +1,666 @@
+//! Chaos harness acceptance: the recovery contract under seeded fault
+//! injection, pinned end-to-end through the real `RoundDriver` phases.
+//!
+//! The contract (see `docs/CHAOS.md`):
+//!
+//! * **Determinism** — two runs with the same experiment seed and the
+//!   same chaos seed produce byte-identical `RoundRecord`s (fault log
+//!   included) and bitwise-equal aggregates, across transports,
+//!   encodings and mask targets.
+//! * **Survivor equivalence** — a chaotic round's aggregate is
+//!   bitwise-equal to a clean run folded over exactly the clients whose
+//!   uploads survived (delivered or duplicated), with duplicates folded
+//!   once.
+//! * **Typed rejection** — corrupt and Byzantine uploads die pre-fold;
+//!   a round with no honest survivor fails with a typed transport error
+//!   instead of hanging or folding garbage.
+//! * **Billing** — every spawned upload is billed (the radio spent the
+//!   bytes whether or not the server could use them); duplicate frames
+//!   bill bytes and messages but never model units.
+//! * **Session reuse** — a downlink disconnect mid-broadcast skips that
+//!   client's round; the same session carries its traffic next round.
+//!
+//! Everything here is engine-free (no PJRT artifacts needed). The
+//! socket arm of the session-reuse test is gated on
+//! `FEDMASK_SOCKET_TESTS=1` like the rest of the socket suite.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fedmask::config::experiment::{AggregatorKind, ExperimentConfig, NetworkKind};
+use fedmask::fl::aggregate::{make_aggregator, Contribution, SparseContribution};
+use fedmask::fl::chaos::{DownlinkFate, FaultKind, FaultPlan, Scenario, UploadFate};
+use fedmask::fl::client::receive_broadcast;
+use fedmask::fl::driver::{JobMeta, RoundDriver};
+use fedmask::fl::masking::MaskTarget;
+use fedmask::metrics::recorder::RoundRecord;
+use fedmask::runtime::manifest::LayerInfo;
+use fedmask::sim::availability::AvailabilityModel;
+use fedmask::transport::codec::{decode_update, encode_update, DecodedBody, Encoding};
+use fedmask::transport::link::TransportKind;
+
+// ---------------------------------------------------------------------
+// Shared fixtures
+// ---------------------------------------------------------------------
+
+fn socket_arm_enabled() -> bool {
+    match std::env::var("FEDMASK_SOCKET_TESTS") {
+        Ok(v) if v == "1" || v == "true" => true,
+        _ => {
+            eprintln!("skipping socket arm (set FEDMASK_SOCKET_TESTS=1 to enable)");
+            false
+        }
+    }
+}
+
+fn always_on(seed: u64) -> AvailabilityModel {
+    AvailabilityModel::new(1.0, 0.0, seed)
+}
+
+fn one_layer(size: usize) -> Vec<LayerInfo> {
+    vec![LayerInfo {
+        name: "w".into(),
+        shape: vec![size],
+        offset: 0,
+        size,
+        masked: true,
+    }]
+}
+
+fn initial_params(p: usize) -> Vec<f32> {
+    (0..p).map(|j| (j as f32 * 0.37).sin()).collect()
+}
+
+/// Deterministic fake update derived from the broadcast the client
+/// decoded off the wire — same shape as the socket suite's, so any
+/// downlink discrepancy changes the aggregate.
+fn fake_update(global: &[f32], client: usize) -> Vec<f32> {
+    global
+        .iter()
+        .enumerate()
+        .map(|(j, g)| {
+            if j % 4 == client % 4 {
+                g * 0.5 + (client as f32 + 1.0) * 0.125
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// The canonical upload a (client, round) pair produces from `global`.
+fn canonical_payload(global: &[f32], client: usize, t: usize, enc: Encoding) -> Vec<u8> {
+    let update = fake_update(global, client);
+    encode_update(client as u32, t as u32, 10 + client as u32, &update, enc)
+}
+
+/// Fold encoded payloads into a finished aggregate — the clean-run
+/// reference the chaotic driver runs are compared against bitwise (the
+/// streaming fold is order-independent, so arrival order is irrelevant).
+fn fold_payloads(
+    payloads: &[Vec<u8>],
+    target: MaskTarget,
+    broadcast: &[f32],
+    layers: &[LayerInfo],
+) -> Vec<f32> {
+    let mut agg = make_aggregator(AggregatorKind::FedAvg, target, broadcast, layers).unwrap();
+    for bytes in payloads {
+        let u = decode_update(bytes).unwrap();
+        match &u.body {
+            DecodedBody::Dense(v) => agg
+                .fold(Contribution {
+                    client: u.client as usize,
+                    params: v,
+                    n_samples: u.n_samples,
+                })
+                .unwrap(),
+            DecodedBody::Sparse { indices, values } => agg
+                .fold_sparse(SparseContribution {
+                    client: u.client as usize,
+                    p: u.p,
+                    indices,
+                    values,
+                    n_samples: u.n_samples,
+                })
+                .unwrap(),
+        }
+    }
+    agg.finish().unwrap()
+}
+
+/// Clean-run aggregate over exactly `survivors`, folding each once.
+fn clean_fold(
+    global: &[f32],
+    survivors: &[usize],
+    t: usize,
+    enc: Encoding,
+    target: MaskTarget,
+    layers: &[LayerInfo],
+) -> Vec<f32> {
+    let payloads: Vec<Vec<u8>> =
+        survivors.iter().map(|&c| canonical_payload(global, c, t, enc)).collect();
+    fold_payloads(&payloads, target, global, layers)
+}
+
+/// Which clients' uploads survive round `t` under `plan`: downlink
+/// delivered (so the job ran) and upload fate Deliver or Duplicate
+/// (duplicates fold exactly once). Pure plan arithmetic — no transport.
+fn surviving_clients(plan: &FaultPlan, t: usize, clients: usize) -> Vec<usize> {
+    (0..clients)
+        .filter(|&c| {
+            plan.downlink_fate(t as u32, c as u32) == DownlinkFate::Deliver
+                && matches!(
+                    plan.upload_fate(t as u32, c as u32),
+                    UploadFate::Deliver | UploadFate::Duplicate
+                )
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// The chaotic-round harness: real driver phases, fake clients on threads
+// ---------------------------------------------------------------------
+
+/// Everything a chaotic run produces that the contract pins.
+#[derive(Debug, PartialEq)]
+struct ChaosOutcome {
+    records: Vec<RoundRecord>,
+    aggregates: Vec<Vec<f32>>,
+}
+
+/// Drive `rounds` full sample → broadcast → collect → finalize cycles
+/// under whatever `cfg.chaos` injects, with fake clients on threads
+/// pulling the broadcast off the downlink and uploading through the
+/// (chaos-wrapped) sink. Jobs are spawned only where `wire.spawn` says
+/// the client received the broadcast. Metric fields a real server would
+/// fill from evaluation are pinned to 0.0 (not NaN — the records must
+/// compare equal).
+fn run_chaos_rounds(
+    cfg: ExperimentConfig,
+    rounds: usize,
+    target: MaskTarget,
+    p: usize,
+) -> ChaosOutcome {
+    let enc = cfg.encoding;
+    let cfg = Arc::new(cfg);
+    let mut driver = RoundDriver::new(Arc::clone(&cfg), p).unwrap();
+    driver.set_upload_timeout(Duration::from_secs(30));
+    let layers = one_layer(p);
+    let mut records = Vec::new();
+    let mut aggregates: Vec<Vec<f32>> = Vec::new();
+    let mut params: Arc<Vec<f32>> = Arc::new(initial_params(p));
+
+    for t in 1..=rounds {
+        let cohort = driver.sample(&always_on(7), t);
+        assert_eq!(cohort.selected.len(), cfg.clients, "static C=1 selects everyone");
+        let wire = driver.broadcast(&params, &cohort).unwrap();
+        let sink = driver.sink();
+        let downlink = driver.downlink();
+        let (tx, results) = channel::<(usize, fedmask::Result<JobMeta>)>();
+        // spawn only downlink-reached clients; the drain indexes its metas
+        // by dense job position, hence the re-enumeration to `j`
+        let handles: Vec<_> = cohort
+            .selected
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| wire.spawn[i])
+            .enumerate()
+            .map(|(j, (i, &c))| {
+                let sink = Arc::clone(&sink);
+                let downlink = Arc::clone(&downlink);
+                let reference = wire.references[i].clone();
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    let global = receive_broadcast(
+                        downlink.as_ref(),
+                        c as u32,
+                        t as u32,
+                        reference.as_deref().map(Vec::as_slice),
+                        Duration::from_secs(30),
+                    )
+                    .unwrap();
+                    let update = fake_update(&global, c);
+                    let nnz = update.iter().filter(|v| **v != 0.0).count();
+                    let payload = encode_update(c as u32, t as u32, 10 + c as u32, &update, enc);
+                    let bytes = payload.len();
+                    // the chaos sink decides this upload's fate; Ok either way
+                    sink.send(payload).unwrap();
+                    tx.send((j, Ok((0.25, nnz, bytes)))).unwrap();
+                })
+            })
+            .collect();
+        drop(tx);
+        let mut agg =
+            make_aggregator(AggregatorKind::FedAvg, target, &wire.params, &layers).unwrap();
+        let collected = driver.collect(&cohort, agg.as_mut(), &results).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let cost = driver.finalize(&collected);
+        let aggregate = agg.finish().unwrap();
+        let ledger = driver.ledger();
+        records.push(RoundRecord {
+            round: t,
+            sample_rate: cohort.rate,
+            clients: cohort.selected.len(),
+            train_loss: cost.loss_sum / collected.metas.len().max(1) as f64,
+            test_loss: 0.0,
+            test_accuracy: 0.0,
+            test_perplexity: 0.0,
+            uplink_units: ledger.uplink_units,
+            uplink_bytes: ledger.uplink_bytes,
+            downlink_bytes: ledger.downlink_bytes,
+            downlink_recon_err: wire.recon_err,
+            virtual_time_s: 0.0,
+            faults: driver.take_fault_log(t),
+        });
+        params = Arc::new(aggregate.clone());
+        aggregates.push(aggregate);
+    }
+    ChaosOutcome { records, aggregates }
+}
+
+fn base_cfg(clients: usize, enc: Encoding) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::defaults("lenet").unwrap();
+    cfg.clients = clients;
+    cfg.encoding = enc;
+    cfg
+}
+
+// ---------------------------------------------------------------------
+// Seed searches: pure plan arithmetic, no transport. The fate of every
+// (round, client) is a pure function of the chaos seed, so a seed with
+// the coverage a test needs can be found without running anything.
+// ---------------------------------------------------------------------
+
+fn soup_plan(seed: u64) -> FaultPlan {
+    FaultPlan {
+        seed,
+        drop_prob: 0.25,
+        dup_prob: 0.25,
+        byzantine_clients: vec![2],
+        reorder: true,
+        ..FaultPlan::default()
+    }
+}
+
+/// A chaos-soup seed where both rounds exercise the whole menu: among
+/// the honest clients, at least one drop, at least one duplicate, and
+/// at least one survivor (implied by the duplicate) per round.
+fn find_soup_seed(clients: usize) -> u64 {
+    'seed: for seed in 0..10_000u64 {
+        let plan = soup_plan(seed);
+        for t in 1..=2u32 {
+            let fates: Vec<UploadFate> = (0..clients as u32)
+                .filter(|c| !plan.byzantine_clients.contains(c))
+                .map(|c| plan.upload_fate(t, c))
+                .collect();
+            let drops = fates.iter().filter(|f| matches!(f, UploadFate::Drop)).count();
+            let dups = fates.iter().filter(|f| matches!(f, UploadFate::Duplicate)).count();
+            if drops == 0 || dups == 0 {
+                continue 'seed;
+            }
+        }
+        return seed;
+    }
+    panic!("no chaos-soup seed with full fault coverage in 10k candidates");
+}
+
+/// A corrupt-plan seed where round 1 has at least one corrupted and at
+/// least one cleanly delivered upload.
+fn find_corrupt_seed(plan_of: impl Fn(u64) -> FaultPlan, clients: usize) -> u64 {
+    for seed in 0..10_000u64 {
+        let plan = plan_of(seed);
+        let fates: Vec<UploadFate> =
+            (0..clients as u32).map(|c| plan.upload_fate(1, c)).collect();
+        let corrupt = fates.iter().filter(|f| matches!(f, UploadFate::Corrupt)).count();
+        let clean = fates.iter().filter(|f| matches!(f, UploadFate::Deliver)).count();
+        if corrupt >= 1 && clean >= 1 {
+            return seed;
+        }
+    }
+    panic!("no corrupt seed in 10k candidates");
+}
+
+fn flaky_plan(seed: u64) -> FaultPlan {
+    FaultPlan { seed, disconnect_downlink_prob: 0.4, ..FaultPlan::default() }
+}
+
+/// A flaky-downlink seed where round 1 disconnects some but not all of
+/// the cohort, and at least one round-1 casualty is back (downlink
+/// delivered) in round 2 — the session-reuse witness.
+fn find_flaky_seed(clients: usize) -> u64 {
+    for seed in 0..10_000u64 {
+        let plan = flaky_plan(seed);
+        let down1: Vec<u32> = (0..clients as u32)
+            .filter(|&c| plan.downlink_fate(1, c) == DownlinkFate::Disconnect)
+            .collect();
+        if down1.is_empty() || down1.len() == clients {
+            continue;
+        }
+        if down1.iter().any(|&c| plan.downlink_fate(2, c) == DownlinkFate::Deliver) {
+            return seed;
+        }
+    }
+    panic!("no flaky-downlink seed in 10k candidates");
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: chaos-soup determinism + survivor equivalence
+// ---------------------------------------------------------------------
+
+/// The PR's acceptance bar. One plan mixing drops, duplicates, seeded
+/// reordering and a Byzantine peer, run **twice** per configuration:
+/// the two runs' `RoundRecord`s (fault log included) are byte-identical
+/// and the aggregates bitwise-equal — across the in-process and
+/// simulated transports, both mask targets, and two encodings. And the
+/// chaotic aggregate equals a clean run folded over exactly the
+/// surviving cohort, round-chained.
+#[test]
+fn chaos_soup_is_deterministic_and_folds_like_a_clean_run_on_survivors() {
+    let p = 24;
+    let clients = 6;
+    let seed = find_soup_seed(clients);
+    let plan = soup_plan(seed);
+    let layers = one_layer(p);
+
+    for network in [NetworkKind::Ideal, NetworkKind::Simulated] {
+        for enc in [Encoding::Auto, Encoding::AutoQ8] {
+            for target in [MaskTarget::Delta, MaskTarget::Weights] {
+                let ctx = format!("{network:?}/{enc:?}/{target:?} seed {seed}");
+                let cfg = || {
+                    let mut cfg = base_cfg(clients, enc);
+                    cfg.network = network;
+                    cfg.chaos = Some(plan.clone());
+                    cfg
+                };
+                let a = run_chaos_rounds(cfg(), 2, target, p);
+                let b = run_chaos_rounds(cfg(), 2, target, p);
+                assert_eq!(a.records, b.records, "{ctx}: records diverged between reruns");
+                assert_eq!(a.aggregates, b.aggregates, "{ctx}: aggregates diverged");
+
+                // survivor equivalence, chained: round 2 folds from the
+                // round-1 chaotic aggregate
+                let mut global = initial_params(p);
+                for t in 1..=2usize {
+                    let survivors = surviving_clients(&plan, t, clients);
+                    assert!(!survivors.is_empty(), "{ctx}: seed search guarantees a survivor");
+                    assert!(!survivors.contains(&2), "{ctx}: the Byzantine peer never folds");
+                    let expected = clean_fold(&global, &survivors, t, enc, target, &layers);
+                    assert_eq!(
+                        a.aggregates[t - 1],
+                        expected,
+                        "{ctx}: round-{t} aggregate != clean fold over survivors {survivors:?}"
+                    );
+                    global = expected;
+                }
+
+                // the fault log names every injection the plan predicted
+                for (t, rec) in a.records.iter().enumerate() {
+                    let t = t + 1;
+                    let kinds: Vec<FaultKind> =
+                        rec.faults.events.iter().map(|e| e.kind).collect();
+                    assert!(kinds.contains(&FaultKind::DropUpload), "{ctx}: round {t} drop");
+                    assert!(
+                        kinds.contains(&FaultKind::DuplicateUpload),
+                        "{ctx}: round {t} duplicate"
+                    );
+                    assert!(
+                        rec.faults
+                            .events
+                            .iter()
+                            .any(|e| e.kind == FaultKind::ByzantineUpload && e.client == 2),
+                        "{ctx}: round {t} Byzantine injection logged"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Billing: duplicates fold once, bill twice
+// ---------------------------------------------------------------------
+
+/// Every upload duplicated: the aggregate equals the clean single-copy
+/// fold (duplicates fold exactly once), model units are billed once per
+/// client, but the byte ledger carries both copies.
+#[test]
+fn duplicate_uploads_fold_once_and_bill_bytes_twice() {
+    let p = 24;
+    let clients = 4;
+    let enc = Encoding::Auto;
+    let mut cfg = base_cfg(clients, enc);
+    cfg.chaos = Some(FaultPlan { seed: 0xd0b1e, dup_prob: 1.0, ..FaultPlan::default() });
+    let layers = one_layer(p);
+
+    let out = run_chaos_rounds(cfg, 1, MaskTarget::Delta, p);
+
+    let global = initial_params(p);
+    let all: Vec<usize> = (0..clients).collect();
+    let expected = clean_fold(&global, &all, 1, enc, MaskTarget::Delta, &layers);
+    assert_eq!(out.aggregates[0], expected, "duplicates must fold exactly once");
+
+    // byte accounting: each payload billed once as the job's upload and
+    // once as redundant duplicate traffic; units accrue only once
+    let payloads: Vec<Vec<u8>> =
+        all.iter().map(|&c| canonical_payload(&global, c, 1, enc)).collect();
+    let once: u64 = payloads.iter().map(|p| p.len() as u64).sum();
+    let rec = &out.records[0];
+    assert_eq!(rec.uplink_bytes, 2 * once, "duplicate frames must be billed as bytes");
+    let expected_units: f64 = all
+        .iter()
+        .map(|&c| {
+            let nnz = fake_update(&global, c).iter().filter(|v| **v != 0.0).count();
+            nnz as f64 / p as f64
+        })
+        .sum();
+    assert!(
+        (rec.uplink_units - expected_units).abs() < 1e-12,
+        "duplicate frames must never accrue model units: {} vs {expected_units}",
+        rec.uplink_units
+    );
+
+    // one DuplicateUpload event per client, in canonical order
+    let dup_clients: Vec<u32> = rec
+        .faults
+        .events
+        .iter()
+        .filter(|e| e.kind == FaultKind::DuplicateUpload)
+        .map(|e| e.client)
+        .collect();
+    assert_eq!(dup_clients, vec![0, 1, 2, 3]);
+}
+
+// ---------------------------------------------------------------------
+// Typed failure: no honest survivor
+// ---------------------------------------------------------------------
+
+/// When the plan leaves nothing to aggregate, `collect` fails fast with
+/// a typed transport error — before draining, so the round can't hang
+/// waiting for uploads that will never arrive.
+#[test]
+fn a_round_with_no_honest_survivor_fails_with_a_typed_error() {
+    let p = 16;
+    let mut cfg = base_cfg(2, Encoding::Auto);
+    cfg.chaos = Some(FaultPlan { seed: 1, drop_prob: 1.0, ..FaultPlan::default() });
+    let cfg = Arc::new(cfg);
+    let mut driver = RoundDriver::new(Arc::clone(&cfg), p).unwrap();
+    let cohort = driver.sample(&always_on(7), 1);
+    let params: Arc<Vec<f32>> = Arc::new(initial_params(p));
+    let wire = driver.broadcast(&params, &cohort).unwrap();
+    let layers = one_layer(p);
+    let mut agg =
+        make_aggregator(AggregatorKind::FedAvg, MaskTarget::Delta, &wire.params, &layers).unwrap();
+    let (_tx, results) = channel::<(usize, fedmask::Result<JobMeta>)>();
+    let err = driver.collect(&cohort, agg.as_mut(), &results).unwrap_err();
+    assert!(matches!(err, fedmask::Error::Transport(_)), "{err}");
+    assert!(err.to_string().contains("no honest upload"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Pre-fold rejection: Byzantine and corrupt uploads
+// ---------------------------------------------------------------------
+
+/// Three of four clients are Byzantine every round: their well-formed,
+/// wrong-width frames die at the pre-fold width check and the round
+/// completes on the lone honest upload.
+#[test]
+fn byzantine_uploads_are_rejected_pre_fold_leaving_the_honest_survivor() {
+    let p = 24;
+    let enc = Encoding::Auto;
+    let mut cfg = base_cfg(4, enc);
+    cfg.chaos = Some(FaultPlan {
+        seed: 0xb42,
+        byzantine_clients: vec![1, 2, 3],
+        ..FaultPlan::default()
+    });
+    let layers = one_layer(p);
+
+    let out = run_chaos_rounds(cfg, 1, MaskTarget::Delta, p);
+
+    let global = initial_params(p);
+    let expected = clean_fold(&global, &[0], 1, enc, MaskTarget::Delta, &layers);
+    assert_eq!(out.aggregates[0], expected, "only the honest client may fold");
+
+    let byz: Vec<u32> = out.records[0]
+        .faults
+        .events
+        .iter()
+        .filter(|e| e.kind == FaultKind::ByzantineUpload)
+        .map(|e| e.client)
+        .collect();
+    assert_eq!(byz, vec![1, 2, 3], "every forged upload is logged");
+}
+
+/// Corrupted payloads (truncated or bit-flipped in flight) are rejected
+/// before any body decode reaches the fold; the surviving uploads
+/// aggregate exactly as a clean run over the survivors would.
+#[test]
+fn corrupt_payloads_are_rejected_pre_fold_and_logged() {
+    let p = 24;
+    let clients = 6;
+    let enc = Encoding::Auto;
+    let plan_of = |seed| FaultPlan { seed, corrupt_prob: 0.5, ..FaultPlan::default() };
+    let seed = find_corrupt_seed(plan_of, clients);
+    let plan = plan_of(seed);
+    let mut cfg = base_cfg(clients, enc);
+    cfg.chaos = Some(plan.clone());
+    let layers = one_layer(p);
+
+    let out = run_chaos_rounds(cfg, 1, MaskTarget::Delta, p);
+
+    let global = initial_params(p);
+    let survivors = surviving_clients(&plan, 1, clients);
+    let expected = clean_fold(&global, &survivors, 1, enc, MaskTarget::Delta, &layers);
+    assert_eq!(
+        out.aggregates[0], expected,
+        "seed {seed}: mangled payloads must not contaminate the fold"
+    );
+
+    let predicted: Vec<u32> = (0..clients as u32)
+        .filter(|&c| plan.upload_fate(1, c) == UploadFate::Corrupt)
+        .collect();
+    let logged: Vec<u32> = out.records[0]
+        .faults
+        .events
+        .iter()
+        .filter(|e| e.kind == FaultKind::CorruptUpload)
+        .map(|e| e.client)
+        .collect();
+    assert_eq!(logged, predicted, "seed {seed}: every corruption is logged");
+}
+
+// ---------------------------------------------------------------------
+// Session reuse across a downlink disconnect
+// ---------------------------------------------------------------------
+
+/// A client whose downlink dies mid-broadcast skips the round (no job,
+/// no upload, no fold) — and its session carries traffic again the next
+/// round. The socket arm pins the part that matters operationally: the
+/// persistent authenticated TCP session survives the swallowed
+/// broadcast and produces an outcome byte-identical to in-process.
+#[test]
+fn downlink_disconnect_skips_the_round_and_the_session_is_reusable() {
+    let p = 24;
+    let clients = 4;
+    let enc = Encoding::Auto;
+    let seed = find_flaky_seed(clients);
+    let plan = flaky_plan(seed);
+    let layers = one_layer(p);
+    let cfg = |transport: TransportKind| {
+        let mut cfg = base_cfg(clients, enc);
+        cfg.transport = transport;
+        cfg.chaos = Some(plan.clone());
+        cfg
+    };
+
+    let out = run_chaos_rounds(cfg(TransportKind::InProcess), 2, MaskTarget::Delta, p);
+
+    // round-chained survivor equivalence: round 1 folds the reached
+    // cohort, round 2 folds from round 1's aggregate — with at least one
+    // round-1 casualty back in (the seed search guarantees it)
+    let down1 = surviving_clients(&plan, 1, clients);
+    let down2 = surviving_clients(&plan, 2, clients);
+    let casualties: Vec<usize> = (0..clients).filter(|c| !down1.contains(c)).collect();
+    assert!(!casualties.is_empty() && down1.len() < clients, "seed {seed}: search contract");
+    assert!(
+        casualties.iter().any(|c| down2.contains(c)),
+        "seed {seed}: a round-1 casualty must return in round 2"
+    );
+    let r1 = clean_fold(&initial_params(p), &down1, 1, enc, MaskTarget::Delta, &layers);
+    assert_eq!(out.aggregates[0], r1, "seed {seed}: round 1 folds the reached cohort");
+    let r2 = clean_fold(&r1, &down2, 2, enc, MaskTarget::Delta, &layers);
+    assert_eq!(out.aggregates[1], r2, "seed {seed}: the returned client folds in round 2");
+
+    // the disconnects are logged, and only in round 1's record
+    let logged: Vec<u32> = out.records[0]
+        .faults
+        .events
+        .iter()
+        .filter(|e| e.kind == FaultKind::DisconnectDownlink)
+        .map(|e| e.client)
+        .collect();
+    let expected: Vec<u32> = casualties.iter().map(|&c| c as u32).collect();
+    assert_eq!(logged, expected, "seed {seed}");
+
+    // socket arm: same plan over persistent TCP sessions, byte-identical
+    if socket_arm_enabled() {
+        let tcp = run_chaos_rounds(cfg(TransportKind::Tcp), 2, MaskTarget::Delta, p);
+        assert_eq!(tcp, out, "seed {seed}: TCP sessions must match in-process bitwise");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scenario layer: named registry drives the same machinery
+// ---------------------------------------------------------------------
+
+/// The `scrambled-arrivals` scenario (simulated network + seeded
+/// reordering) perturbs only arrival order: the aggregate is the clean
+/// full-cohort fold, and two runs are byte-identical.
+#[test]
+fn scrambled_arrivals_scenario_reorders_without_moving_the_aggregate() {
+    let p = 24;
+    let clients = 6;
+    let enc = Encoding::Auto;
+    let scenario = Scenario::named("scrambled-arrivals").unwrap();
+    let cfg = || {
+        let mut cfg = base_cfg(clients, enc);
+        scenario.apply(&mut cfg);
+        cfg
+    };
+    assert_eq!(cfg().network, NetworkKind::Simulated, "the scenario simulates the network");
+    assert!(cfg().chaos.as_ref().is_some_and(|c| c.reorder), "the scenario reorders");
+
+    let a = run_chaos_rounds(cfg(), 1, MaskTarget::Delta, p);
+    let b = run_chaos_rounds(cfg(), 1, MaskTarget::Delta, p);
+    assert_eq!(a, b, "scenario runs must be reproducible");
+
+    let layers = one_layer(p);
+    let all: Vec<usize> = (0..clients).collect();
+    let expected =
+        clean_fold(&initial_params(p), &all, 1, enc, MaskTarget::Delta, &layers);
+    assert_eq!(a.aggregates[0], expected, "reordering must never change the fold");
+    assert!(a.records[0].faults.events.is_empty(), "reordering alone injects no faults");
+}

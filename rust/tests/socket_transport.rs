@@ -14,13 +14,14 @@
 //! self-skip without them, exactly like `fl_integration.rs`; the
 //! engine-free `RoundDriver` cycles below need no artifacts at all.
 
-use std::io::{Read as _, Write as _};
+use std::io::Read as _;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
 use fedmask::config::experiment::{AggregatorKind, ExperimentConfig};
 use fedmask::fl::aggregate::{make_aggregator, Contribution, SparseContribution};
+use fedmask::fl::chaos::Scenario;
 use fedmask::fl::client::receive_broadcast;
 use fedmask::fl::driver::{JobMeta, RoundDriver};
 use fedmask::fl::masking::{MaskPolicy, MaskTarget};
@@ -28,9 +29,6 @@ use fedmask::fl::server::Server;
 use fedmask::runtime::manifest::{LayerInfo, Manifest};
 use fedmask::sim::availability::AvailabilityModel;
 use fedmask::transport::codec::{decode_update, encode_update, peek_client, DecodedBody, Encoding};
-use fedmask::transport::frame::{
-    frame_bytes, FrameKind, FRAME_HEADER_BYTES, FRAME_MAGIC, FRAME_VERSION,
-};
 use fedmask::transport::link::{Simulated, Transport, TransportKind};
 use fedmask::transport::network::NetworkModel;
 use fedmask::transport::socket::{ClientConn, Loopback, ServerTuning, WireAddr};
@@ -194,12 +192,14 @@ fn loopback_payloads_and_aggregate_are_bitwise_identical_to_in_process() {
     }
 }
 
-/// Adversarial peers — bad magic, unsupported version, over-cap length,
-/// truncated body / mid-frame disconnect, and a session-less upload — are
-/// dropped at their own connection; the cohort's authenticated uploads
-/// still arrive intact.
+/// Adversarial peers — bad magic, mid-frame disconnect, over-cap length,
+/// unsupported versions — are dropped at their own connection while the
+/// cohort's authenticated uploads arrive intact. The attacks themselves
+/// live in the `malformed-peers` scenario registry
+/// (`fl::chaos::WireAdversary`), so `fedmask run --scenario
+/// malformed-peers` and this test exercise byte-identical adversaries.
 #[test]
-fn server_survives_malformed_peers_while_folding_the_cohort() {
+fn malformed_peers_scenario_is_absorbed_while_the_cohort_folds() {
     if !socket_tests_enabled() {
         return;
     }
@@ -213,52 +213,16 @@ fn server_survives_malformed_peers_while_folding_the_cohort() {
         })
         .collect();
 
+    let scenario = Scenario::named("malformed-peers").unwrap();
+    assert!(!scenario.wire_adversaries.is_empty(), "registry lost its adversaries");
+
     let mut server = Loopback::bind(TransportKind::Tcp).unwrap();
     server.set_timeout(Duration::from_secs(30));
-    let WireAddr::Tcp(addr) = server.addr().clone() else {
-        panic!("tcp bind returned non-tcp addr")
-    };
-
-    // malformed peer 1: garbage magic
-    {
-        let mut s = std::net::TcpStream::connect(addr).unwrap();
-        s.write_all(&[0xde, 0xad, 0xbe, 0xef, 0, 0, 0, 0, 1, 2, 3]).unwrap();
-    }
-    // malformed peer 2: valid upload header, then disconnect mid-body
-    // (never handshook, so even a complete frame would be rejected)
-    {
-        let mut header = vec![0u8; FRAME_HEADER_BYTES];
-        header[..2].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
-        header[2] = FRAME_VERSION;
-        header[3] = FrameKind::Upload as u8;
-        header[12..16].copy_from_slice(&1000u32.to_le_bytes());
-        let mut s = std::net::TcpStream::connect(addr).unwrap();
-        s.write_all(&header).unwrap();
-        s.write_all(&[7u8; 12]).unwrap();
-        // dropped here: 988 promised bytes never arrive
-    }
-    // malformed peer 3: declared length over the cap
-    {
-        let mut header = vec![0u8; FRAME_HEADER_BYTES];
-        header[..2].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
-        header[2] = FRAME_VERSION;
-        header[3] = FrameKind::Upload as u8;
-        header[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
-        let mut s = std::net::TcpStream::connect(addr).unwrap();
-        s.write_all(&header).unwrap();
-    }
-    // malformed peer 4: wrong frame version (the dead v1 wire included)
-    {
-        for bad_version in [FRAME_VERSION + 9, 1] {
-            let mut framed =
-                frame_bytes(FrameKind::Upload, 0, b"future payload").unwrap();
-            framed[2] = bad_version;
-            let mut s = std::net::TcpStream::connect(addr).unwrap();
-            s.write_all(&framed).unwrap();
-        }
+    for adv in &scenario.wire_adversaries {
+        adv.launch(&server, 0, 1, 3, p).unwrap();
     }
 
-    // the real cohort uploads after/between the attacks
+    // the real cohort uploads after the attacks
     let received = ship_through(&mut server, &payloads);
     let mut sent_sorted = payloads.clone();
     sent_sorted.sort();
@@ -272,85 +236,43 @@ fn server_survives_malformed_peers_while_folding_the_cohort() {
     assert!(server.recv().is_err(), "malformed peer bytes leaked into the round");
 }
 
-/// The headline auth regression: a **well-formed spoofed upload** — valid
-/// frame, valid codec payload naming a cohort client, correct round —
-/// with a missing or wrong session token is rejected before decode and
-/// never reaches the round; the genuine client's upload still folds.
+/// The auth regressions, registry-driven: every `spoofed-tokens`
+/// adversary — the token-less and guessed-token upload spoofs (the
+/// pre-auth-refactor attack), a registration for an unknown id, a
+/// re-registration of a live id, and a cross-client upload laundered
+/// through a *valid* session — is rejected before the round, on both
+/// socket families, with the genuine client's upload still folding.
 #[test]
-fn spoofed_uploads_without_a_valid_token_are_rejected_before_the_round() {
+fn spoofed_tokens_scenario_is_rejected_before_the_round() {
     if !socket_tests_enabled() {
         return;
     }
     let p = 64;
+    let round = 2u32;
     let mut g = Gen::new(0x5f00f);
-    let genuine = encode_update(0, 1, 40, &masked_update(&mut g, p, 0.3), Encoding::Auto);
-    let spoof = encode_update(0, 1, 9_999, &vec![9.0f32; p], Encoding::Dense);
+    let genuine = encode_update(0, round, 40, &masked_update(&mut g, p, 0.3), Encoding::Auto);
 
-    let mut server = Loopback::bind(TransportKind::Tcp).unwrap();
-    server.set_timeout(Duration::from_secs(30));
-    server.register_clients(&[0, 1]).unwrap();
-    let WireAddr::Tcp(addr) = server.addr().clone() else { unreachable!() };
-
-    // attacker 1: no handshake at all, token 0 (the pre-refactor attack —
-    // this exact frame used to be indistinguishable from client 0's own)
-    {
-        let framed = frame_bytes(FrameKind::Upload, 0, &spoof).unwrap();
-        let mut s = std::net::TcpStream::connect(addr).unwrap();
-        s.write_all(&framed).unwrap();
-    }
-    // attacker 2: no handshake, guessed token
-    {
-        let framed = frame_bytes(FrameKind::Upload, 0xdead_beef_cafe_f00d, &spoof).unwrap();
-        let mut s = std::net::TcpStream::connect(addr).unwrap();
-        s.write_all(&framed).unwrap();
-    }
-    // attacker 3: tries to *register* as an unregistered id — refused
-    let err = ClientConn::connect(server.addr(), 77).unwrap_err();
-    assert!(err.to_string().contains("refused") || err.to_string().contains("closed"), "{err}");
-    // attacker 4: tries to re-register a live client id — refused
-    // (first-come holds the session)
-    let err = ClientConn::connect(server.addr(), 0).unwrap_err();
-    assert!(err.to_string().contains("refused") || err.to_string().contains("closed"), "{err}");
-
-    // the genuine client 0 upload goes through its authenticated session
-    server.sink().send(genuine.clone()).unwrap();
-    let got = server.recv().unwrap();
-    assert_eq!(got, genuine, "genuine upload must survive the spoof storm");
-
-    // nothing else ever surfaces — all four spoof paths died pre-decode
-    server.set_timeout(Duration::from_millis(300));
-    assert!(server.recv().is_err(), "a spoofed payload leaked into the round");
-}
-
-/// A *valid* session cannot launder another client's upload: client 1's
-/// connection uploading a payload that claims client 0 is rejected at the
-/// session layer (claimed-id check), and the cohort survives.
-#[test]
-fn cross_client_spoof_with_a_valid_session_is_rejected() {
-    if !socket_tests_enabled() {
-        return;
-    }
-    let p = 32;
-    let mut g = Gen::new(0xc105);
-    let genuine = encode_update(0, 2, 17, &masked_update(&mut g, p, 0.4), Encoding::Auto);
-    let cross = encode_update(0, 2, 1_000, &vec![5.0f32; p], Encoding::Dense);
+    let scenario = Scenario::named("spoofed-tokens").unwrap();
+    assert!(!scenario.wire_adversaries.is_empty(), "registry lost its adversaries");
 
     for kind in [TransportKind::Tcp, TransportKind::Uds] {
         let mut server = Loopback::bind(kind).unwrap();
         server.set_timeout(Duration::from_secs(30));
         server.register_clients(&[0, 1]).unwrap();
 
-        // client 1's own (token-valid) session ships a payload naming
-        // client 0 — the server must kill it on the claimed-id check
-        let conn1 = server.client_conn(1).expect("client 1 registered");
-        conn1.upload(&cross).unwrap();
+        // every adversary impersonates client 0; the cross-client attack
+        // launders through client 1's live session
+        for adv in &scenario.wire_adversaries {
+            adv.launch(&server, 0, 1, round, p).unwrap();
+        }
 
-        // client 0's genuine upload still lands
+        // the genuine client 0 upload goes through its own session
         server.sink().send(genuine.clone()).unwrap();
-        assert_eq!(server.recv().unwrap(), genuine, "{kind:?}");
+        assert_eq!(server.recv().unwrap(), genuine, "{kind:?}: genuine upload must survive");
 
+        // nothing else ever surfaces — every spoof path died pre-decode
         server.set_timeout(Duration::from_millis(300));
-        assert!(server.recv().is_err(), "{kind:?}: cross-client spoof leaked");
+        assert!(server.recv().is_err(), "{kind:?}: a spoofed payload leaked into the round");
     }
 }
 

@@ -300,7 +300,7 @@ fn main() {
                 .collect();
             let mut tree = fedmask::fl::ShardedAggregator::spawn(partials).unwrap();
             for (c, payload) in payloads.iter().enumerate() {
-                tree.route(c as u32, payload.clone()).unwrap();
+                tree.route(c as u32, payload.clone(), None).unwrap();
             }
             tree.finish().unwrap()
         };

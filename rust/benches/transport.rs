@@ -23,12 +23,13 @@ use fedmask::fl::aggregate::{Aggregator, Contribution, SparseContribution, Strea
 use fedmask::fl::ShardedAggregator;
 use fedmask::sim::rng::Rng;
 use fedmask::transport::codec::{
-    decode_update, decode_update_view, encode_update, peek_client, wire_bytes, BodyView,
-    DecodeScratch, Encoding,
+    decode_update, decode_update_cached, decode_update_view, encode_update, encode_update_cached,
+    peek_client, wire_bytes, BodyView, DecodeScratch, Encoding,
 };
 use fedmask::transport::frame::{write_frame, FrameKind, FrameStream};
 use fedmask::transport::link::{Transport, TransportKind};
 use fedmask::transport::quantize::{dequantize, dequantize4, quantize, quantize4};
+use fedmask::transport::session::IndexCache;
 use fedmask::transport::socket::{ClientConn, Loopback, WireAddr};
 use fedmask::util::bench::Bench;
 
@@ -220,6 +221,96 @@ fn main() {
         }
     }
 
+    // Wire v3 steady state: a slowly-churning top-k mask re-sends nearly
+    // its whole index set under the stateless SparseDelta arm every
+    // round, while the cross-round cache (SparseCached) pays only the
+    // churn. 2% churn per round at 10% density is the steady-state shape
+    // dynamic sparse training settles into; the assert pins the
+    // acceptance criterion — steady-state cached uploads strictly below
+    // the stateless ones — so a codec regression fails the bench run
+    // itself, not just the trajectory diff.
+    println!("== wire v3: cross-round index cache vs stateless delta (2% churn) ==");
+    {
+        let p = 51_666usize;
+        let k = p / 10;
+        let rounds = 8usize;
+        let churn = k / 50; // 2% of the support per round
+        let mut support: Vec<u32> = {
+            let mut s: Vec<u32> = (0..p as u32).collect();
+            rng.shuffle(&mut s);
+            s.truncate(k);
+            s.sort_unstable();
+            s
+        };
+        let mut cache: Option<IndexCache> = None;
+        let (mut cached_total, mut stateless_total) = (0usize, 0usize);
+        let mut steady_payload: Option<(Vec<u8>, IndexCache)> = None;
+        for r in 1..=rounds as u32 {
+            if cache.is_some() {
+                // churn: drop `churn` members, admit `churn` outsiders
+                for _ in 0..churn {
+                    let drop_at = (rng.next_f32() * support.len() as f32) as usize % support.len();
+                    support.remove(drop_at);
+                }
+                let mut added = 0usize;
+                while added < churn {
+                    let cand = (rng.next_f32() * p as f32) as u32 % p as u32;
+                    if let Err(slot) = support.binary_search(&cand) {
+                        support.insert(slot, cand);
+                        added += 1;
+                    }
+                }
+            }
+            let mut params = vec![0.0f32; p];
+            for &i in &support {
+                params[i as usize] = 0.5 + rng.next_f32();
+            }
+            let stateless = encode_update(1, r, 100, &params, Encoding::SparseDelta);
+            let cached = encode_update_cached(1, r, 100, &params, Encoding::SparseCached, cache.as_ref());
+            let a = decode_update(&stateless).unwrap().into_dense();
+            let b2 = decode_update_cached(&cached, cache.as_ref()).unwrap().into_dense();
+            assert_eq!(a, b2, "round {r}: cached decode must match stateless bitwise");
+            if cache.is_some() {
+                // steady-state rounds only: round 1 is the full send both ways
+                cached_total += cached.len();
+                stateless_total += stateless.len();
+            }
+            let next = match &cache {
+                Some(c) => c.advance(support.clone()),
+                None => IndexCache::first(support.clone()),
+            };
+            if r == rounds as u32 {
+                steady_payload = Some((cached, cache.clone().unwrap()));
+            }
+            cache = Some(next);
+        }
+        let per_round = (cached_total / (rounds - 1), stateless_total / (rounds - 1));
+        println!(
+            "  steady-state upload: cached {} B/round vs stateless {} B/round ({:.1}% of stateless)",
+            per_round.0,
+            per_round.1,
+            100.0 * per_round.0 as f64 / per_round.1 as f64
+        );
+        assert!(
+            cached_total < stateless_total,
+            "steady-state SparseCached ({cached_total} B) must beat stateless SparseDelta \
+             ({stateless_total} B) on a slowly-churning mask"
+        );
+        // decode latency of the stateful arm at steady state
+        let (payload, decode_cache) = steady_payload.expect("rounds >= 2");
+        let mut scratch = DecodeScratch::default();
+        let m = b.run("decode_enc/sparse-cached/steady-state", || {
+            fedmask::transport::codec::decode_update_view_cached(
+                &payload,
+                &mut scratch,
+                Some(&decode_cache),
+            )
+            .unwrap()
+            .n_samples
+        });
+        println!("{}", m.report(Some((p as f64, "param"))));
+    }
+
     // Many-client fan-in over real sockets: 64 persistent authenticated
     // sessions vs. a fresh connection + handshake per upload — the number
     // behind the scaling claim that connect-per-upload does not survive
@@ -396,7 +487,7 @@ fn main() {
                 .collect();
             let mut tree = ShardedAggregator::spawn(partials).unwrap();
             for pl in payloads {
-                tree.route(peek_client(pl).unwrap(), pl.clone()).unwrap();
+                tree.route(peek_client(pl).unwrap(), pl.clone(), None).unwrap();
             }
             tree.finish().unwrap()
         };

@@ -25,9 +25,10 @@ use crate::runtime::engine::Engine;
 use crate::runtime::pool::WorkerScratch;
 use crate::sim::rng::Rng;
 use crate::transport::codec::{
-    decode_update, encode_update_with, BROADCAST_DELTA, BROADCAST_FULL, BROADCAST_SENDER,
+    decode_update, encode_update_cached_with, BROADCAST_DELTA, BROADCAST_FULL, BROADCAST_SENDER,
 };
 use crate::transport::link::{DownlinkSource, DEFAULT_UPLOAD_TIMEOUT};
+use crate::transport::session::IndexCache;
 use crate::util::error::{Error, Result};
 
 /// How long a client job waits for its round broadcast. Mirrors the
@@ -156,6 +157,13 @@ pub struct ClientJob {
     /// downlink reconstructs against; `None` means the server owes it a
     /// full (dense-cost) broadcast this round.
     pub reference: Option<Arc<Vec<f32>>>,
+    /// The session's cross-round index cache (wire v3): the support of
+    /// this client's last accepted upload, to encode a `SparseCached`
+    /// set-delta against. The same `Arc` the server decodes with — handed
+    /// over at broadcast by the round driver. `None` (always, for
+    /// encodings that never use the cache) forces a stateless full-index
+    /// send.
+    pub index_cache: Option<Arc<IndexCache>>,
     pub cfg: Arc<ExperimentConfig>,
 }
 
@@ -243,13 +251,14 @@ impl ClientJob {
             _ => masked.iter().filter(|v| **v != 0.0).count(),
         };
         let n_samples = self.shard.n_samples(mm.x_elem_shape.first().copied().unwrap_or(1) + 1) as u32;
-        let payload = encode_update_with(
+        let payload = encode_update_cached_with(
             &mut scratch.encode,
             self.client_id as u32,
             self.round as u32,
             n_samples,
             &masked,
             self.cfg.encoding,
+            self.index_cache.as_deref(),
         );
 
         Ok(LocalOutcome {

@@ -50,8 +50,8 @@ use crate::fl::tree::ShardedAggregator;
 use crate::sim::availability::{AvailabilityModel, ClientState};
 use crate::sim::rng::Rng;
 use crate::transport::codec::{
-    decode_update, decode_update_view, encode_update, peek_header, wire_bytes, BodyView,
-    DecodeScratch, Encoding, BROADCAST_DELTA, BROADCAST_FULL, BROADCAST_SENDER,
+    decode_update, decode_update_view_cached, encode_update, peek_header, wire_bytes, BodyView,
+    DecodeScratch, Encoding, WireView, BROADCAST_DELTA, BROADCAST_FULL, BROADCAST_SENDER,
 };
 use crate::transport::cost::CostLedger;
 use crate::transport::link::{
@@ -59,6 +59,7 @@ use crate::transport::link::{
     DEFAULT_UPLOAD_TIMEOUT,
 };
 use crate::transport::network::NetworkModel;
+use crate::transport::session::IndexCache;
 use crate::transport::socket::{Loopback, ServerTuning};
 use crate::util::error::{Error, Result};
 
@@ -144,6 +145,28 @@ fn reject_upload(rejected: &mut usize, tolerate: bool, why: impl std::fmt::Displ
 /// ([`ChaosLog::round_duplicates`]).
 struct Drained {
     metas: Vec<JobMeta>,
+    /// Per `selected` index: the sorted non-zero support of that client's
+    /// *accepted* upload — the set the session's index cache advances to.
+    /// Populated only when the drain ran with `caches` (the index-cache
+    /// lifecycle is on); `None` for uploads that never folded, which is
+    /// exactly what invalidates the client's cache.
+    supports: Vec<Option<Vec<u32>>>,
+}
+
+/// Sorted non-zero support of a decoded upload — what a client's index
+/// cache advances to after its fold is accepted. Sparse bodies carry it
+/// verbatim; dense bodies are scanned (a stateless dense upload still
+/// seeds the next round's cache).
+fn support_of_view(view: &WireView<'_>) -> Vec<u32> {
+    match view.body {
+        BodyView::Sparse { indices, .. } => indices.to_vec(),
+        BodyView::Dense(params) => params
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| **v != 0.0)
+            .map(|(i, _)| i as u32)
+            .collect(),
+    }
 }
 
 /// Returns the per-job metadata in input (client-id) order once every job
@@ -151,9 +174,13 @@ struct Drained {
 /// indexing as `selected`) marks which jobs' payloads will actually
 /// reach the server — under fault injection a job may run and report
 /// metadata while its upload is dropped, corrupted, or forged; the
-/// drain must not wait for (or fold) those. Free function by design: it
-/// needs no engine, so the dead-client regression tests drive it
-/// directly with hand-built channels and transports.
+/// drain must not wait for (or fold) those. `caches` (same indexing
+/// again) carries each session's cross-round index cache when the
+/// configured encoding uses one: uploads decode against their client's
+/// cache, and the accepted supports come back in [`Drained::supports`]
+/// for the driver's post-round cache refresh; `None` disables both. Free
+/// function by design: it needs no engine, so the dead-client regression
+/// tests drive it directly with hand-built channels and transports.
 #[allow(clippy::too_many_arguments)] // round context; precedent: data/synth.rs
 fn drain_round_uploads(
     transport: &mut dyn Transport,
@@ -162,6 +189,7 @@ fn drain_round_uploads(
     scratch: &mut DecodeScratch,
     selected: &[usize],
     expect_upload: &[bool],
+    caches: Option<&[Option<Arc<IndexCache>>]>,
     round: usize,
     p: usize,
     tolerate_strays: bool,
@@ -170,7 +198,9 @@ fn drain_round_uploads(
 ) -> Result<Drained> {
     let n_jobs = selected.len();
     debug_assert_eq!(expect_upload.len(), n_jobs);
+    debug_assert!(caches.map_or(true, |c| c.len() == n_jobs));
     let mut metas: Vec<Option<JobMeta>> = vec![None; n_jobs];
+    let mut supports: Vec<Option<Vec<u32>>> = vec![None; n_jobs];
     let mut uploaded = vec![false; n_jobs];
     let mut metas_pending = n_jobs;
     let mut folds_pending = expect_upload.iter().filter(|e| **e).count();
@@ -308,17 +338,21 @@ fn drain_round_uploads(
             )?;
             continue;
         }
+        let cache = caches.and_then(|cs| cs[pos].clone());
         match fold {
             RoundFold::Serial(agg) => {
                 // Serial: decode here, so a corrupt *body* on an open wire
                 // is still a rejectable stray rather than a round failure.
-                let update = match decode_update_view(&payload, scratch) {
+                let update = match decode_update_view_cached(&payload, scratch, cache.as_deref()) {
                     Ok(u) => u,
                     Err(e) => {
                         reject_upload(&mut rejected, tolerate_strays, e)?;
                         continue;
                     }
                 };
+                if caches.is_some() {
+                    supports[pos] = Some(support_of_view(&update));
+                }
                 let client = update.client as usize;
                 match update.body {
                     BodyView::Dense(params) => agg.fold(Contribution {
@@ -335,10 +369,20 @@ fn drain_round_uploads(
                     })?,
                 }
             }
-            // Sharded: ship the body encoded; the shard worker decodes on
-            // its own thread. A corrupt body past this point fails the
-            // round (see `fl::tree` on why that trade is deliberate).
-            RoundFold::Sharded(tree) => tree.route(header.client, payload)?,
+            // Sharded: ship the body encoded (plus the session's cache);
+            // the shard worker decodes on its own thread. A corrupt body
+            // past this point fails the round (see `fl::tree` on why that
+            // trade is deliberate) — including the extra drain-loop decode
+            // below, which only exists to learn the accepted support for
+            // the cache refresh without a result channel back from the
+            // workers, and follows the same fatal-error policy.
+            RoundFold::Sharded(tree) => {
+                if caches.is_some() {
+                    let update = decode_update_view_cached(&payload, scratch, cache.as_deref())?;
+                    supports[pos] = Some(support_of_view(&update));
+                }
+                tree.route(header.client, payload, cache)?;
+            }
         }
         uploaded[pos] = true;
         folds_pending -= 1;
@@ -347,6 +391,7 @@ fn drain_round_uploads(
     debug_assert_eq!(fold.completed(), expect_upload.iter().filter(|e| **e).count());
     Ok(Drained {
         metas: metas.into_iter().map(|m| m.expect("all jobs accounted")).collect(),
+        supports,
     })
 }
 
@@ -396,6 +441,13 @@ pub struct RoundWire {
     /// — it never received `w_t`, so it has nothing to train on. All
     /// `true` when the chaos harness is off.
     pub spawn: Vec<bool>,
+    /// Per selected client (same order as `Cohort::selected`): the
+    /// session's cross-round index cache to encode this round's upload
+    /// against — the identical `Arc` the server will decode with, so the
+    /// two ends cannot disagree. `None` (and all-`None` whenever the
+    /// configured encoding does not use the cache) means a stateless
+    /// full-index send.
+    pub index_caches: Vec<Option<Arc<IndexCache>>>,
 }
 
 /// Output of the **collect** phase: every upload folded, every job
@@ -471,6 +523,15 @@ pub struct RoundDriver {
     /// out round t-1 holds stale state, cannot apply it, and is sent a
     /// dense catch-up transfer instead).
     has_prev_broadcast: Vec<bool>,
+    /// Per-client cross-round index cache (wire v3 `SparseCached`): the
+    /// support of each client's last **accepted** upload, epoch-stamped.
+    /// Snapshotted into [`RoundWire::index_caches`] at broadcast so the
+    /// client encodes and the server decodes against the same `Arc`;
+    /// advanced by [`RoundDriver::refresh_index_caches`] only when the
+    /// round's upload folded, and dropped on any skip, drop, disconnect,
+    /// or mangle — the invalidation rule that makes a desynced delta
+    /// impossible. All `None` unless `cfg.encoding.uses_index_cache()`.
+    index_caches: Vec<Option<Arc<IndexCache>>>,
     ledger: CostLedger,
     /// The fault-injection plan and its event log, when the chaos
     /// harness is configured (`cfg.chaos` with any fault enabled). The
@@ -578,6 +639,7 @@ impl RoundDriver {
             connected: vec![false; clients],
             prev_broadcast: None,
             has_prev_broadcast: vec![false; clients],
+            index_caches: vec![None; clients],
             ledger: CostLedger::new(),
             chaos,
             decode_scratch: DecodeScratch::default(),
@@ -884,13 +946,58 @@ impl RoundDriver {
                 cohort.stragglers.len()
             );
         }
+        // Snapshot the cohort's index caches for this round: the client
+        // job encodes its upload against exactly this Arc, and collect's
+        // drain decodes against it — taken before any upload can move, so
+        // both ends of the session see one consistent epoch.
+        let cache_on = self.cfg.encoding.uses_index_cache();
+        let index_caches = cohort
+            .selected
+            .iter()
+            .map(|&c| if cache_on { self.index_caches[c].clone() } else { None })
+            .collect();
         Ok(RoundWire {
             params: received,
             references,
             recon_err,
             slowest_download,
             spawn: outlook.spawn,
+            index_caches,
         })
+    }
+
+    /// The cohort's cache slice in `spawned` order for the drain, or
+    /// `None` when the configured encoding never touches the cache.
+    fn drain_caches(&self, spawned: &[usize]) -> Option<Vec<Option<Arc<IndexCache>>>> {
+        if !self.cfg.encoding.uses_index_cache() {
+            return None;
+        }
+        Some(spawned.iter().map(|&c| self.index_caches[c].clone()).collect())
+    }
+
+    /// Post-collect cache refresh: every client's cache is dropped unless
+    /// its upload folded this round, in which case it advances to the
+    /// accepted support (a first-generation cache if the client had
+    /// none). A client that sat the round out, straggled, or lost its
+    /// upload to a fault therefore sends a full index set next time —
+    /// invalidation is the default, staying in sync is the exception
+    /// that must be earned by an accepted fold. No-op when the encoding
+    /// does not use the cache.
+    fn refresh_index_caches(&mut self, spawned: &[usize], mut supports: Vec<Option<Vec<u32>>>) {
+        if !self.cfg.encoding.uses_index_cache() {
+            return;
+        }
+        let mut next: Vec<Option<Arc<IndexCache>>> = vec![None; self.cfg.clients];
+        for (i, &c) in spawned.iter().enumerate() {
+            if let Some(support) = supports[i].take() {
+                let cache = match self.index_caches[c].as_deref() {
+                    Some(prev) => prev.advance(support),
+                    None => IndexCache::first(support),
+                };
+                next[c] = Some(Arc::new(cache));
+            }
+        }
+        self.index_caches = next;
     }
 
     /// **Phase 3 — collect.** Stream the cohort's uploads off the wire
@@ -910,6 +1017,7 @@ impl RoundDriver {
             )));
         }
         let tolerate_strays = self.transport.accepts_foreign_peers();
+        let caches = self.drain_caches(&outlook.spawned);
         let drained = drain_round_uploads(
             self.transport.as_mut(),
             results,
@@ -917,12 +1025,14 @@ impl RoundDriver {
             &mut self.decode_scratch,
             &outlook.spawned,
             &outlook.expect,
+            caches.as_deref(),
             cohort.round,
             self.p,
             tolerate_strays,
             self.upload_timeout,
             self.drain_poll,
         )?;
+        self.refresh_index_caches(&outlook.spawned, drained.supports);
         let (dup_frames, dup_bytes) = self.round_duplicates(cohort.round);
         Ok(Collected { metas: drained.metas, dup_frames, dup_bytes })
     }
@@ -948,6 +1058,7 @@ impl RoundDriver {
             )));
         }
         let tolerate_strays = self.transport.accepts_foreign_peers();
+        let caches = self.drain_caches(&outlook.spawned);
         let drained = drain_round_uploads(
             self.transport.as_mut(),
             results,
@@ -955,12 +1066,14 @@ impl RoundDriver {
             &mut self.decode_scratch,
             &outlook.spawned,
             &outlook.expect,
+            caches.as_deref(),
             cohort.round,
             self.p,
             tolerate_strays,
             self.upload_timeout,
             self.drain_poll,
         )?;
+        self.refresh_index_caches(&outlook.spawned, drained.supports);
         let (dup_frames, dup_bytes) = self.round_duplicates(cohort.round);
         Ok(Collected { metas: drained.metas, dup_frames, dup_bytes })
     }
@@ -1013,6 +1126,7 @@ mod tests {
     use super::*;
     use crate::config::experiment::AggregatorKind;
     use crate::fl::aggregate::make_aggregator;
+    use crate::transport::codec::encode_update_cached;
     use crate::fl::client::receive_broadcast;
     use crate::fl::masking::MaskTarget;
     use crate::fl::sampling::SamplingSchedule;
@@ -1088,6 +1202,7 @@ mod tests {
             &mut DecodeScratch::default(),
             &selected,
             &[true, true],
+            None,
             1,
             P,
             false,
@@ -1129,6 +1244,7 @@ mod tests {
             &mut DecodeScratch::default(),
             &selected,
             &[true, true],
+            None,
             1,
             P,
             false,
@@ -1175,6 +1291,7 @@ mod tests {
                 &mut DecodeScratch::default(),
                 &selected,
                 &[true, true, true],
+                None,
                 7,
                 P,
                 false,
@@ -1224,6 +1341,7 @@ mod tests {
             &mut DecodeScratch::default(),
             &selected,
             &[true, true],
+            None,
             1,
             P,
             false,
@@ -1258,6 +1376,7 @@ mod tests {
             &mut DecodeScratch::default(),
             &selected,
             &[true],
+            None,
             3,
             P,
             false,
@@ -1284,6 +1403,7 @@ mod tests {
             &mut DecodeScratch::default(),
             &selected,
             &[true],
+            None,
             3,
             P,
             true,
@@ -1366,6 +1486,10 @@ mod tests {
                 let sink = Arc::clone(&sink);
                 let downlink = Arc::clone(&downlink);
                 let reference = wire.references[i].clone();
+                // The round's cache snapshot, exactly as a real ClientJob
+                // receives it — None unless the configured encoding uses
+                // the cache and last round's upload was accepted.
+                let cache = wire.index_caches[i].clone();
                 let tx = tx.clone();
                 std::thread::spawn(move || {
                     let global = receive_broadcast(
@@ -1378,12 +1502,13 @@ mod tests {
                     .unwrap();
                     let update = fake_update(&global, c);
                     let nnz = update.iter().filter(|v| **v != 0.0).count();
-                    let payload = encode_update(
+                    let payload = encode_update_cached(
                         c as u32,
                         t as u32,
                         10 + c as u32,
                         &update,
                         Encoding::Auto,
+                        cache.as_deref(),
                     );
                     let bytes = payload.len();
                     sink.send(payload).unwrap();
@@ -1698,6 +1823,55 @@ mod tests {
         assert_eq!(driver.connected_clients(), c1.len() + fresh.len());
     }
 
+    /// The index-cache lifecycle under real rounds: the first accepted
+    /// fold seeds an epoch-1 cache over the decoded support, each further
+    /// accepted fold advances the epoch, and a stateless encoding
+    /// maintains no caches at all.
+    #[test]
+    fn index_cache_lifecycle_advances_only_on_accepted_folds() {
+        let p = 24usize;
+        let params0: Arc<Vec<f32>> =
+            Arc::new((0..p).map(|j| (j as f32 * 0.11).cos()).collect());
+        let cfg = driver_cfg(
+            TransportKind::InProcess,
+            NetworkKind::Ideal,
+            Encoding::SparseCached,
+            false,
+            3,
+        );
+        let mut driver = RoundDriver::new(Arc::clone(&cfg), p).unwrap();
+        driver.set_upload_timeout(Duration::from_secs(30));
+        assert!(driver.index_caches.iter().all(Option::is_none), "no cache before any fold");
+
+        let (agg1, _, _) = run_fake_round(&mut driver, &params0, 1, MaskTarget::Weights);
+        let epochs: Vec<u32> =
+            driver.index_caches.iter().map(|c| c.as_ref().expect("accepted fold").epoch).collect();
+        assert_eq!(epochs, vec![1; 3], "first accepted fold seeds epoch-1 caches");
+
+        let params1 = Arc::new(agg1);
+        run_fake_round(&mut driver, &params1, 2, MaskTarget::Weights);
+        for (c, cache) in driver.index_caches.iter().enumerate() {
+            let cache = cache.as_ref().expect("accepted fold");
+            assert_eq!(cache.epoch, 2, "accepted fold advances the epoch");
+            // fake_update's support is the client's residue class mod 4
+            let want: Vec<u32> = (0..p as u32).filter(|j| j % 4 == (c as u32) % 4).collect();
+            assert_eq!(cache.indices, want, "cache holds the accepted support");
+        }
+
+        // a stateless encoding never populates the cache table
+        let cfg = driver_cfg(
+            TransportKind::InProcess,
+            NetworkKind::Ideal,
+            Encoding::SparseDelta,
+            false,
+            3,
+        );
+        let mut driver = RoundDriver::new(Arc::clone(&cfg), p).unwrap();
+        driver.set_upload_timeout(Duration::from_secs(30));
+        run_fake_round(&mut driver, &params0, 1, MaskTarget::Weights);
+        assert!(driver.index_caches.iter().all(Option::is_none));
+    }
+
     /// The sharded drain produces the bitwise-identical aggregate to the
     /// serial drain, across shard counts — the driver-level face of the
     /// tree-merge exactness property.
@@ -1727,6 +1901,7 @@ mod tests {
             &mut DecodeScratch::default(),
             &selected,
             &vec![true; k],
+            None,
             5,
             P,
             false,
@@ -1748,6 +1923,7 @@ mod tests {
                 &mut DecodeScratch::default(),
                 &selected,
                 &vec![true; k],
+                None,
                 5,
                 P,
                 false,

@@ -203,6 +203,7 @@ impl Server {
                     shard: self.shards[cid].clone(),
                     downlink: Arc::clone(&downlink),
                     reference: wire.references[i].clone(),
+                    index_cache: wire.index_caches[i].clone(),
                     cfg: Arc::clone(&self.cfg),
                 };
                 let sink = Arc::clone(&sink);

@@ -44,11 +44,12 @@
 //! name — an internal bug, which should fail loudly.
 
 use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::fl::aggregate::{Aggregator, Contribution, SparseContribution};
-use crate::transport::codec::{decode_update_view, BodyView, DecodeScratch};
-use crate::transport::session::shard_of;
+use crate::transport::codec::{decode_update_view_cached, BodyView, DecodeScratch};
+use crate::transport::session::{shard_of, IndexCache};
 use crate::util::error::{Error, Result};
 
 /// Bounded per-shard payload queue: deep enough to absorb a burst of
@@ -57,9 +58,16 @@ use crate::util::error::{Error, Result};
 const SHARD_QUEUE_SLOTS: usize = 64;
 
 /// Fold one decoded payload view into `agg` — the same dispatch the serial
-/// drain performs, factored out so both paths stay identical.
-pub(crate) fn fold_view(agg: &mut dyn Aggregator, payload: &[u8], scratch: &mut DecodeScratch) -> Result<()> {
-    let view = decode_update_view(payload, scratch)?;
+/// drain performs, factored out so both paths stay identical. `cache` is
+/// the uploading session's cross-round index cache (wire v3
+/// `SparseCached` decodes against it; stateless payloads ignore it).
+pub(crate) fn fold_view(
+    agg: &mut dyn Aggregator,
+    payload: &[u8],
+    scratch: &mut DecodeScratch,
+    cache: Option<&IndexCache>,
+) -> Result<()> {
+    let view = decode_update_view_cached(payload, scratch, cache)?;
     match view.body {
         BodyView::Dense(params) => agg.fold(Contribution {
             client: view.client as usize,
@@ -80,7 +88,7 @@ pub(crate) fn fold_view(agg: &mut dyn Aggregator, payload: &[u8], scratch: &mut 
 /// bitwise-exactly at the root. See the module doc for the exactness
 /// argument and failure semantics.
 pub struct ShardedAggregator {
-    txs: Vec<SyncSender<Vec<u8>>>,
+    txs: Vec<SyncSender<(Vec<u8>, Option<Arc<IndexCache>>)>>,
     workers: Vec<Option<JoinHandle<Result<Box<dyn Aggregator>>>>>,
     routed: usize,
 }
@@ -97,15 +105,16 @@ impl ShardedAggregator {
         let mut txs = Vec::with_capacity(partials.len());
         let mut workers = Vec::with_capacity(partials.len());
         for (i, mut agg) in partials.into_iter().enumerate() {
-            let (tx, rx) = sync_channel::<Vec<u8>>(SHARD_QUEUE_SLOTS);
+            let (tx, rx) =
+                sync_channel::<(Vec<u8>, Option<Arc<IndexCache>>)>(SHARD_QUEUE_SLOTS);
             let handle = std::thread::Builder::new()
                 .name(format!("fedmask-agg-{i}"))
                 .spawn(move || -> Result<Box<dyn Aggregator>> {
                     let mut scratch = DecodeScratch::default();
                     // recv errors only on disconnect: every tx dropped,
                     // i.e. finish() (or an aborted round) — clean exit.
-                    while let Ok(payload) = rx.recv() {
-                        fold_view(agg.as_mut(), &payload, &mut scratch)?;
+                    while let Ok((payload, cache)) = rx.recv() {
+                        fold_view(agg.as_mut(), &payload, &mut scratch, cache.as_deref())?;
                     }
                     Ok(agg)
                 })
@@ -128,13 +137,20 @@ impl ShardedAggregator {
         self.routed
     }
 
-    /// Ship one validated, undecoded payload to its client's shard. Blocks
-    /// only when that shard's bounded queue is full (backpressure). If the
+    /// Ship one validated, undecoded payload — plus the uploading
+    /// session's index cache, which its shard worker decodes any
+    /// `SparseCached` body against — to its client's shard. Blocks only
+    /// when that shard's bounded queue is full (backpressure). If the
     /// shard's worker already failed, joins it and returns its concrete
     /// error — the round fails with the real cause, not a channel error.
-    pub fn route(&mut self, client: u32, payload: Vec<u8>) -> Result<()> {
+    pub fn route(
+        &mut self,
+        client: u32,
+        payload: Vec<u8>,
+        cache: Option<Arc<IndexCache>>,
+    ) -> Result<()> {
         let s = shard_of(client, self.txs.len());
-        if self.txs[s].send(payload).is_err() {
+        if self.txs[s].send((payload, cache)).is_err() {
             return Err(self.worker_error(s));
         }
         self.routed += 1;
@@ -234,7 +250,7 @@ mod tests {
                 make_aggregator(AggregatorKind::FedAvg, target, &broadcast, &layers).unwrap();
             let mut scratch = DecodeScratch::default();
             for (_, payload) in &payloads {
-                fold_view(flat.as_mut(), payload, &mut scratch).unwrap();
+                fold_view(flat.as_mut(), payload, &mut scratch, None).unwrap();
             }
             let reference = flat.finish().unwrap();
             for shards in [1usize, 2, 8] {
@@ -247,7 +263,7 @@ mod tests {
                 let mut tree = ShardedAggregator::spawn(partials).unwrap();
                 assert_eq!(tree.shards(), shards);
                 for (c, payload) in &payloads {
-                    tree.route(*c, payload.clone()).unwrap();
+                    tree.route(*c, payload.clone(), None).unwrap();
                 }
                 assert_eq!(tree.routed(), payloads.len());
                 let merged = tree.finish().unwrap();
@@ -261,7 +277,7 @@ mod tests {
         let partials: Vec<Box<dyn Aggregator>> =
             vec![Box::new(crate::fl::aggregate::StreamingFedAvg::new(4))];
         let mut tree = ShardedAggregator::spawn(partials).unwrap();
-        tree.route(0, vec![0xde, 0xad, 0xbe, 0xef]).unwrap();
+        tree.route(0, vec![0xde, 0xad, 0xbe, 0xef], None).unwrap();
         let err = tree.finish().unwrap_err();
         assert!(matches!(err, Error::Parse(_) | Error::Invalid(_)), "{err}");
     }
@@ -271,13 +287,13 @@ mod tests {
         let partials: Vec<Box<dyn Aggregator>> =
             vec![Box::new(crate::fl::aggregate::StreamingFedAvg::new(4))];
         let mut tree = ShardedAggregator::spawn(partials).unwrap();
-        tree.route(0, vec![1, 2, 3]).unwrap();
+        tree.route(0, vec![1, 2, 3], None).unwrap();
         // the worker dies on the garbage; keep routing until the channel
         // reports it (the queue may accept a few sends first)
         let good = encode_update(0, 1, 5, &[1.0, 0.0, 0.0, 0.0], Encoding::Auto);
         let mut surfaced = None;
         for _ in 0..SHARD_QUEUE_SLOTS + 2 {
-            if let Err(e) = tree.route(0, good.clone()) {
+            if let Err(e) = tree.route(0, good.clone(), None) {
                 surfaced = Some(e);
                 break;
             }

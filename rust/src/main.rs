@@ -27,7 +27,8 @@ const RUN_OPTS: &[OptSpec] = &[
     OptSpec::value("transport", "upload wire: inproc|tcp|uds (overrides config)"),
     OptSpec::value(
         "encoding",
-        "wire encoding: dense|sparse|sparse-delta|auto|auto-q8|auto-q4 (overrides config)",
+        "wire encoding: dense|sparse|sparse-delta|auto|auto-q8|auto-q4|sparse-cached|grouped-q8 \
+         (overrides config)",
     ),
     OptSpec::flag(
         "downlink-delta",

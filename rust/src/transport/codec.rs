@@ -15,7 +15,16 @@
 //! * **q8 / q4 value quantization** — 8-bit (one byte per value) or 4-bit
 //!   (two values per byte) linear codes on the shared fixed-point grid
 //!   `min + scale * code` (see [`crate::transport::quantize`]), stacked
-//!   under the dense/sparse choice.
+//!   under the dense/sparse choice;
+//! * **wire v3 arms** (tags 7–10) — cross-round *cached* index coding
+//!   (tag 7 ships only the added/removed indices against the session's
+//!   [`IndexCache`], keyed by its epoch), per-group q8 quantizer grids
+//!   (tags 8/9, [`GQ8_GROUP`]-wide groups for outlier robustness), and a
+//!   Rice/Golomb entropy-coded q8 value stream (tag 10). The cached arm
+//!   is stateful — encode and decode must agree on the cache epoch, and
+//!   the round driver invalidates the cache on any drop, disconnect, or
+//!   round skip so a desynced delta is a typed parse error, never a
+//!   silent corruption.
 //!
 //! All integers are little-endian; the header carries (client id, round,
 //! sample count) for the aggregator — `ClientJob::run` encodes,
@@ -54,20 +63,35 @@
 //! (`chunks_exact` over the body slice) rather than per-element cursor
 //! reads.
 
-use crate::transport::quantize::{q4_code, quantize, quantize4, Quantized, Quantized4};
+use crate::transport::quantize::{
+    q4_code, quantize, quantize4, rice_decode, rice_encode, rice_plan, Quantized, Quantized4,
+    RICE_MAX_K,
+};
+use crate::transport::session::IndexCache;
 use crate::util::error::{Error, Result};
 
 /// Magic + version guard ("FM" + v1).
 const MAGIC: u16 = 0x464d;
 const VERSION: u8 = 1;
 
-const TAG_DENSE: u8 = 0;
-const TAG_SPARSE: u8 = 1;
-const TAG_DENSE_Q8: u8 = 2;
-const TAG_SPARSE_Q8: u8 = 3;
-const TAG_SPARSE_DELTA: u8 = 4;
-const TAG_DENSE_Q4: u8 = 5;
-const TAG_SPARSE_DELTA_Q4: u8 = 6;
+pub const TAG_DENSE: u8 = 0;
+pub const TAG_SPARSE: u8 = 1;
+pub const TAG_DENSE_Q8: u8 = 2;
+pub const TAG_SPARSE_Q8: u8 = 3;
+pub const TAG_SPARSE_DELTA: u8 = 4;
+pub const TAG_DENSE_Q4: u8 = 5;
+pub const TAG_SPARSE_DELTA_Q4: u8 = 6;
+// --- wire v3 tags: cross-round caching + entropy-coded values ---
+pub const TAG_SPARSE_CACHED: u8 = 7;
+pub const TAG_DENSE_GQ8: u8 = 8;
+pub const TAG_SPARSE_GQ8: u8 = 9;
+pub const TAG_SPARSE_RICE8: u8 = 10;
+
+/// Grouped-quantizer group width (tags 8/9): each run of this many
+/// positions (dense) or carried values (sparse) gets its own
+/// `(min, scale)` grid, so one outlier coordinate only coarsens its own
+/// group instead of the whole tensor.
+pub const GQ8_GROUP: usize = 256;
 
 /// Fixed header: magic(2) version(1) tag(1) client(4) round(4)
 /// n_samples(4) p(4) count(4).
@@ -160,6 +184,20 @@ pub enum Encoding {
     /// grid contract as q8) stacked on the auto dense/sparse-delta choice.
     /// Lossy: half a (coarser) quantization step.
     AutoQ4,
+    /// Cross-round index caching (wire v3): when the caller supplies the
+    /// session's [`IndexCache`] (the previous round's accepted index set)
+    /// and the set-delta encoding is strictly smaller, emit only the
+    /// added/removed indices against that set (tag 7, keyed by the cache
+    /// epoch); otherwise — no cache, first round, or a churned mask that
+    /// makes the delta dearer — fall back to the stateless `SparseDelta`
+    /// form. Lossless either way.
+    SparseCached,
+    /// 8-bit quantization with a per-group `(min, scale)` grid every
+    /// [`GQ8_GROUP`] values (wire v3): a single outlier no longer widens
+    /// the whole tensor's quantization step, at 8 header bytes per group.
+    /// Picks its dense/sparse arm by exact encoded length. Lossy: half of
+    /// the *group's* step, bounded by half the global q8 step.
+    GroupedQ8,
 }
 
 impl Encoding {
@@ -172,8 +210,11 @@ impl Encoding {
             "auto" => Ok(Encoding::Auto),
             "auto-q8" => Ok(Encoding::AutoQ8),
             "auto-q4" => Ok(Encoding::AutoQ4),
+            "sparse-cached" => Ok(Encoding::SparseCached),
+            "grouped-q8" => Ok(Encoding::GroupedQ8),
             other => Err(Error::invalid(format!(
-                "bad encoding '{other}' (expected dense|sparse|sparse-delta|auto|auto-q8|auto-q4)"
+                "bad encoding '{other}' (expected dense|sparse|sparse-delta|auto|auto-q8|auto-q4|\
+                 sparse-cached|grouped-q8)"
             ))),
         }
     }
@@ -187,6 +228,8 @@ impl Encoding {
             Encoding::Auto => "auto",
             Encoding::AutoQ8 => "auto-q8",
             Encoding::AutoQ4 => "auto-q4",
+            Encoding::SparseCached => "sparse-cached",
+            Encoding::GroupedQ8 => "grouped-q8",
         }
     }
 
@@ -198,18 +241,35 @@ impl Encoding {
         Encoding::Auto,
         Encoding::AutoQ8,
         Encoding::AutoQ4,
+        Encoding::SparseCached,
+        Encoding::GroupedQ8,
     ];
+
+    /// Does this encoding (or the driver on its behalf) maintain the
+    /// per-session cross-round [`IndexCache`]? `SparseCached` by
+    /// definition; `Auto` because its exact-length census also prices the
+    /// cached arm whenever a cache is supplied.
+    pub fn uses_index_cache(&self) -> bool {
+        matches!(self, Encoding::SparseCached | Encoding::Auto)
+    }
 
     /// Half the dequantization step this encoding can introduce on values
     /// spanning `[lo, hi]` — the per-value error bound of a lossy encoding,
     /// `0.0` for lossless ones. Callers that reconstruct state from a
     /// decoded message (the delta downlink) assert their reconstruction
-    /// error against this bound.
+    /// error against this bound. For `GroupedQ8` the true per-value bound
+    /// is half the *group's* step; each group spans a sub-range of
+    /// `[lo, hi]`, so the global q8 half-step reported here is a valid
+    /// (loose) upper bound.
     pub fn lossy_half_step(&self, lo: f32, hi: f32) -> f32 {
         let range = (hi - lo).max(0.0);
         match self {
-            Encoding::Dense | Encoding::Sparse | Encoding::SparseDelta | Encoding::Auto => 0.0,
-            Encoding::AutoQ8 => range / 255.0 * 0.5,
+            Encoding::Dense
+            | Encoding::Sparse
+            | Encoding::SparseDelta
+            | Encoding::Auto
+            | Encoding::SparseCached => 0.0,
+            Encoding::AutoQ8 | Encoding::GroupedQ8 => range / 255.0 * 0.5,
             Encoding::AutoQ4 => range / 15.0 * 0.5,
         }
     }
@@ -381,28 +441,37 @@ pub struct DecodeScratch {
     dense: Vec<f32>,
     indices: Vec<u32>,
     values: Vec<f32>,
+    /// Set-delta blocks of a `SparseCached` body (tag 7).
+    removed: Vec<u32>,
+    added: Vec<u32>,
+    /// Entropy-decoded q8 codes (tag 10).
+    codes: Vec<u8>,
 }
 
-/// Reusable encode temporaries (the q8 sparse value gather). The returned
-/// payload itself is an owned message and is allocated per call — it
-/// outlives the encoder by design.
+/// Reusable encode temporaries (the q8 sparse value gather and the
+/// cached-arm set-delta lists). The returned payload itself is an owned
+/// message and is allocated per call — it outlives the encoder by design.
 #[derive(Debug, Default)]
 pub struct EncodeScratch {
     vals: Vec<f32>,
+    removed: Vec<u32>,
+    added: Vec<u32>,
 }
 
 /// Wire size in bytes for a payload with `nnz` non-zeros out of `p`.
 ///
 /// Exact — `wire_bytes == encoded.len()` for every payload shape — for
-/// `Dense`, `Sparse`, and `AutoQ8`, whose sizes depend only on `(p, nnz)`.
-/// For the entropy-coded encodings (`SparseDelta`, and `Auto`/`AutoQ4`
-/// which may pick them) the true size additionally depends on *where* the
-/// non-zeros sit (varint gap lengths), which `(p, nnz)` cannot determine;
-/// there this returns a guaranteed **upper bound** (every index delta
-/// priced at the widest varint an index `< p` can need), and the encoder
-/// itself picks the representation by exact encoded length — so
-/// `encoded.len() <= wire_bytes` always holds, with equality for the
-/// fixed-size encodings.
+/// `Dense` and `Sparse`, whose sizes depend only on `(p, nnz)`. For the
+/// payload-dependent encodings — `SparseDelta`/`Auto`/`AutoQ4` (varint
+/// gap lengths depend on where the non-zeros sit), `AutoQ8` (its Rice
+/// arm's length depends on the code distribution), `SparseCached` (the
+/// set-delta depends on the previous round's cache), and `GroupedQ8`
+/// (varint gaps again) — this returns a guaranteed **upper bound** (every
+/// index delta priced at the widest varint an index `< p` can need, the
+/// entropy-coded and cached arms priced at the stateless alternative
+/// they never exceed), and the encoder itself picks the representation by
+/// exact encoded length — so `encoded.len() <= wire_bytes` always holds,
+/// with equality for the fixed-size encodings.
 pub fn wire_bytes(p: usize, nnz: usize, enc: Encoding) -> usize {
     // widest varint any single index delta (<= p - 1) can occupy
     let vmax = varint_len(p.saturating_sub(1) as u32);
@@ -410,12 +479,18 @@ pub fn wire_bytes(p: usize, nnz: usize, enc: Encoding) -> usize {
         Encoding::Dense => HEADER_BYTES + 4 * p,
         Encoding::Sparse => HEADER_BYTES + 8 * nnz,
         Encoding::SparseDelta => HEADER_BYTES + nnz * (4 + vmax),
+        // the cached arm is only ever chosen when strictly smaller than
+        // the stateless sparse-delta form it falls back to
+        Encoding::SparseCached => wire_bytes(p, nnz, Encoding::SparseDelta),
         Encoding::Auto => wire_bytes(p, nnz, Encoding::Dense)
             .min(wire_bytes(p, nnz, Encoding::Sparse))
             .min(wire_bytes(p, nnz, Encoding::SparseDelta)),
+        // the Rice arm is only chosen when strictly smaller than these
         Encoding::AutoQ8 => (HEADER_BYTES + QHEADER + p).min(HEADER_BYTES + QHEADER + 5 * nnz),
         Encoding::AutoQ4 => (HEADER_BYTES + QHEADER + p.div_ceil(2))
             .min(HEADER_BYTES + QHEADER + nnz * vmax + nnz.div_ceil(2)),
+        Encoding::GroupedQ8 => (HEADER_BYTES + 8 * p.div_ceil(GQ8_GROUP) + p)
+            .min(HEADER_BYTES + 8 * nnz.div_ceil(GQ8_GROUP) + nnz * vmax + nnz),
     }
 }
 
@@ -428,7 +503,31 @@ pub fn encode_update(
     params: &[f32],
     enc: Encoding,
 ) -> Vec<u8> {
-    encode_update_with(&mut EncodeScratch::default(), client, round, n_samples, params, enc)
+    encode_update_cached(client, round, n_samples, params, enc, None)
+}
+
+/// [`encode_update`] with the session's cross-round [`IndexCache`]: when
+/// `cache` is `Some` and the encoding censuses the cached arm
+/// (`SparseCached`, `Auto`), the set-delta against the previous round's
+/// accepted index set competes by exact encoded length; `None` always
+/// produces a stateless payload.
+pub fn encode_update_cached(
+    client: u32,
+    round: u32,
+    n_samples: u32,
+    params: &[f32],
+    enc: Encoding,
+    cache: Option<&IndexCache>,
+) -> Vec<u8> {
+    encode_update_cached_with(
+        &mut EncodeScratch::default(),
+        client,
+        round,
+        n_samples,
+        params,
+        enc,
+        cache,
+    )
 }
 
 /// [`encode_update`] with caller-held scratch, so a worker encoding many
@@ -441,43 +540,99 @@ pub fn encode_update_with(
     params: &[f32],
     enc: Encoding,
 ) -> Vec<u8> {
+    encode_update_cached_with(scratch, client, round, n_samples, params, enc, None)
+}
+
+/// [`encode_update_cached`] with caller-held scratch — the full-featured
+/// encoder every other entry point delegates to.
+pub fn encode_update_cached_with(
+    scratch: &mut EncodeScratch,
+    client: u32,
+    round: u32,
+    n_samples: u32,
+    params: &[f32],
+    enc: Encoding,
+    cache: Option<&IndexCache>,
+) -> Vec<u8> {
     let p = params.len();
-    // Only the delta-coded encodings need the varint census; the flat
-    // sparse/q8 choices need just the non-zero count, and a fixed dense
+    // Only the payload-dependent encodings need the varint census; the
+    // flat sparse choice needs just the non-zero count, and a fixed dense
     // encode needs neither — so the (frequent) dense downlink broadcast
     // stays a straight header + memcpy with no per-element varint pass.
     let (nnz, delta_bytes) = match enc {
         Encoding::Dense => (0, 0),
-        Encoding::Sparse | Encoding::AutoQ8 => {
-            (params.iter().filter(|v| **v != 0.0).count(), 0)
-        }
-        Encoding::SparseDelta | Encoding::Auto | Encoding::AutoQ4 => census(params),
+        Encoding::Sparse => (params.iter().filter(|v| **v != 0.0).count(), 0),
+        Encoding::SparseDelta
+        | Encoding::Auto
+        | Encoding::AutoQ8
+        | Encoding::AutoQ4
+        | Encoding::SparseCached
+        | Encoding::GroupedQ8 => census(params),
     };
     // Exact body sizes (bytes after the 24-byte header's count field), so
     // the auto encodings select by true encoded length, not a heuristic.
     let body_dense = 4 * p;
     let body_sparse = 8 * nnz;
     let body_sparse_delta = delta_bytes + 4 * nnz;
+    // Selection-time artifacts the write arms consume: the sparse-value
+    // quantizer (+ Rice parameter) priced by the q8 census, and the cache
+    // epoch the chosen cached arm echoes. Computed once, never twice.
+    let mut sparse_q: Option<(Quantized, u8)> = None;
+    let mut cached_epoch: Option<u32> = None;
+    // Exact byte length of the tag-7 set-delta body against `cache`,
+    // filling `scratch.removed` / `scratch.added` as a side effect.
+    let cached_body = |scratch: &mut EncodeScratch, c: &IndexCache| {
+        set_delta(&c.indices, params, &mut scratch.removed, &mut scratch.added);
+        12 + delta_block_len(&scratch.removed) + delta_block_len(&scratch.added) + 4 * nnz
+    };
     let (tag, body_len) = match enc {
         Encoding::Dense => (TAG_DENSE, body_dense),
         Encoding::Sparse => (TAG_SPARSE, body_sparse),
         Encoding::SparseDelta => (TAG_SPARSE_DELTA, body_sparse_delta),
         Encoding::Auto => {
-            // ties break toward the earlier (simpler) representation
-            let best = body_dense.min(body_sparse).min(body_sparse_delta);
-            if best == body_dense {
-                (TAG_DENSE, body_dense)
-            } else if best == body_sparse {
-                (TAG_SPARSE, body_sparse)
-            } else {
-                (TAG_SPARSE_DELTA, body_sparse_delta)
+            // ties break toward the earlier (simpler) representation; the
+            // stateful cached arm competes last and must win strictly
+            let mut best = (TAG_DENSE, body_dense);
+            if body_sparse < best.1 {
+                best = (TAG_SPARSE, body_sparse);
             }
+            if body_sparse_delta < best.1 {
+                best = (TAG_SPARSE_DELTA, body_sparse_delta);
+            }
+            if let Some(c) = cache {
+                let len = cached_body(scratch, c);
+                if len < best.1 {
+                    cached_epoch = Some(c.epoch);
+                    best = (TAG_SPARSE_CACHED, len);
+                }
+            }
+            best
         }
         Encoding::AutoQ8 => {
-            if 5 * nnz < p {
-                (TAG_SPARSE_Q8, QHEADER + 5 * nnz)
+            // price all three q8 arms from one quantization pass over the
+            // non-zero values; ties break dense < sparse < rice
+            scratch.vals.clear();
+            scratch.vals.extend(params.iter().copied().filter(|v| *v != 0.0));
+            // quantizing an empty value set: degenerate but legal (all-zero
+            // upload) — a zero-range quantizer
+            let q = if scratch.vals.is_empty() {
+                Quantized { min: 0.0, scale: 0.0, codes: vec![] }
             } else {
-                (TAG_DENSE_Q8, QHEADER + p)
+                quantize(&scratch.vals).expect("finite params")
+            };
+            let (k, rice_len) = rice_plan(&q.codes);
+            let dense_q8 = QHEADER + p;
+            let sparse_q8 = QHEADER + 5 * nnz;
+            let rice = QHEADER + 1 + delta_bytes + rice_len;
+            let best = dense_q8.min(sparse_q8).min(rice);
+            if best == dense_q8 {
+                (TAG_DENSE_Q8, dense_q8)
+            } else if best == sparse_q8 {
+                sparse_q = Some((q, k));
+                (TAG_SPARSE_Q8, sparse_q8)
+            } else {
+                sparse_q = Some((q, k));
+                (TAG_SPARSE_RICE8, rice)
             }
         }
         Encoding::AutoQ4 => {
@@ -487,6 +642,30 @@ pub fn encode_update_with(
                 (TAG_SPARSE_DELTA_Q4, sparse_q4)
             } else {
                 (TAG_DENSE_Q4, dense_q4)
+            }
+        }
+        Encoding::SparseCached => match cache {
+            Some(c) => {
+                let len = cached_body(scratch, c);
+                if len < body_sparse_delta {
+                    cached_epoch = Some(c.epoch);
+                    (TAG_SPARSE_CACHED, len)
+                } else {
+                    // churned past the break-even point: the stateless form
+                    // is at least as small, and resets nothing
+                    (TAG_SPARSE_DELTA, body_sparse_delta)
+                }
+            }
+            // no cache (first round, or invalidated): full stateless send
+            None => (TAG_SPARSE_DELTA, body_sparse_delta),
+        },
+        Encoding::GroupedQ8 => {
+            let dense_gq8 = 8 * p.div_ceil(GQ8_GROUP) + p;
+            let sparse_gq8 = 8 * nnz.div_ceil(GQ8_GROUP) + delta_bytes + nnz;
+            if sparse_gq8 < dense_gq8 {
+                (TAG_SPARSE_GQ8, sparse_gq8)
+            } else {
+                (TAG_DENSE_GQ8, dense_gq8)
             }
         }
     };
@@ -534,15 +713,7 @@ pub fn encode_update_with(
             out.extend_from_slice(&q.codes);
         }
         TAG_SPARSE_Q8 => {
-            scratch.vals.clear();
-            scratch.vals.extend(params.iter().copied().filter(|v| *v != 0.0));
-            // quantizing an empty value set: degenerate but legal (all-zero
-            // upload) — emit a zero-range quantizer
-            let q = if scratch.vals.is_empty() {
-                Quantized { min: 0.0, scale: 0.0, codes: vec![] }
-            } else {
-                quantize(&scratch.vals).expect("finite params")
-            };
+            let (q, _) = sparse_q.take().expect("quantizer precomputed at selection");
             out.extend_from_slice(&(nnz as u32).to_le_bytes());
             out.extend_from_slice(&q.min.to_le_bytes());
             out.extend_from_slice(&q.scale.to_le_bytes());
@@ -597,6 +768,61 @@ pub fn encode_update_with(
             push_delta_block(&mut out, params);
             out.extend_from_slice(&q.packed);
         }
+        TAG_SPARSE_CACHED => {
+            // count = the *resulting* support size, so cohort accounting
+            // (nnz budgets, wire_bytes bounds) never needs the cache
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            out.extend_from_slice(
+                &cached_epoch.expect("cache checked at selection").to_le_bytes(),
+            );
+            out.extend_from_slice(&(scratch.removed.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(scratch.added.len() as u32).to_le_bytes());
+            push_index_delta_block(&mut out, &scratch.removed);
+            push_index_delta_block(&mut out, &scratch.added);
+            // value block: f32s in (resulting) index order
+            for &v in params {
+                if v != 0.0 {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        TAG_DENSE_GQ8 => {
+            out.extend_from_slice(&(p as u32).to_le_bytes());
+            // all group heads first (random-access decode), then all codes
+            let mut codes = Vec::with_capacity(p);
+            for chunk in params.chunks(GQ8_GROUP) {
+                let q = quantize(chunk).expect("finite params");
+                out.extend_from_slice(&q.min.to_le_bytes());
+                out.extend_from_slice(&q.scale.to_le_bytes());
+                codes.extend_from_slice(&q.codes);
+            }
+            out.extend_from_slice(&codes);
+        }
+        TAG_SPARSE_GQ8 => {
+            scratch.vals.clear();
+            scratch.vals.extend(params.iter().copied().filter(|v| *v != 0.0));
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            // groups are runs of carried values in index order, so the
+            // group of the k-th value is k / GQ8_GROUP — no per-group map
+            let mut codes = Vec::with_capacity(nnz);
+            for chunk in scratch.vals.chunks(GQ8_GROUP) {
+                let q = quantize(chunk).expect("finite params");
+                out.extend_from_slice(&q.min.to_le_bytes());
+                out.extend_from_slice(&q.scale.to_le_bytes());
+                codes.extend_from_slice(&q.codes);
+            }
+            push_delta_block(&mut out, params);
+            out.extend_from_slice(&codes);
+        }
+        TAG_SPARSE_RICE8 => {
+            let (q, k) = sparse_q.take().expect("quantizer precomputed at selection");
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            out.extend_from_slice(&q.min.to_le_bytes());
+            out.extend_from_slice(&q.scale.to_le_bytes());
+            out.push(k);
+            push_delta_block(&mut out, params);
+            rice_encode(&q.codes, k, &mut out);
+        }
         _ => unreachable!(),
     }
     debug_assert_eq!(
@@ -621,6 +847,58 @@ fn push_delta_block(out: &mut Vec<u8>, params: &[f32]) {
             first = false;
         }
     }
+}
+
+/// [`push_delta_block`] over an explicit (strictly increasing) index list
+/// rather than a dense payload's non-zero positions — the tag-7 removed /
+/// added blocks.
+fn push_index_delta_block(out: &mut Vec<u8>, indices: &[u32]) {
+    let mut prev = 0u32;
+    let mut first = true;
+    for &i in indices {
+        push_varint(out, if first { i } else { i - prev });
+        prev = i;
+        first = false;
+    }
+}
+
+/// Exact byte length [`push_index_delta_block`] will emit for `indices`.
+fn delta_block_len(indices: &[u32]) -> usize {
+    let mut prev = 0u32;
+    let mut first = true;
+    let mut n = 0usize;
+    for &i in indices {
+        n += varint_len(if first { i } else { i - prev });
+        prev = i;
+        first = false;
+    }
+    n
+}
+
+/// Two-pointer set difference of the cached index set against `params`'
+/// non-zero support: `removed` = cached positions now zero, `added` = new
+/// non-zero positions absent from the cache. Both outputs come out sorted
+/// and disjoint — the canonical tag-7 set-delta.
+fn set_delta(cached: &[u32], params: &[f32], removed: &mut Vec<u32>, added: &mut Vec<u32>) {
+    removed.clear();
+    added.clear();
+    let mut ci = 0usize;
+    for (i, &v) in params.iter().enumerate() {
+        if v == 0.0 {
+            continue;
+        }
+        let idx = i as u32;
+        while ci < cached.len() && cached[ci] < idx {
+            removed.push(cached[ci]);
+            ci += 1;
+        }
+        if ci < cached.len() && cached[ci] == idx {
+            ci += 1; // retained: carried by neither block
+        } else {
+            added.push(idx);
+        }
+    }
+    removed.extend_from_slice(&cached[ci..]);
 }
 
 fn take<const N: usize>(data: &[u8], at: &mut usize) -> Result<[u8; N]> {
@@ -651,8 +929,16 @@ struct Header {
 /// Shared decode core: parses `data` into `scratch` (dense body into
 /// `scratch.dense`, sparse body into `scratch.indices`/`scratch.values`)
 /// and returns the header. Sparse indices are required to be in-range and
-/// strictly increasing.
-fn decode_into(data: &[u8], scratch: &mut DecodeScratch) -> Result<Header> {
+/// strictly increasing. `cache` is the session's cross-round index set: a
+/// tag-7 (`SparseCached`) body is decoded against it — and is a typed
+/// parse error when it is absent or its epoch disagrees. The cache is
+/// read-only here by construction: a rejected decode can never leave it
+/// partially mutated, because nothing in this path writes to it at all.
+fn decode_into(
+    data: &[u8],
+    scratch: &mut DecodeScratch,
+    cache: Option<&IndexCache>,
+) -> Result<Header> {
     let mut at = 0usize;
     let magic = u16::from_le_bytes(take::<2>(data, &mut at)?);
     if magic != MAGIC {
@@ -785,6 +1071,134 @@ fn decode_into(data: &[u8], scratch: &mut DecodeScratch) -> Result<Header> {
                 .extend((0..count).map(|k| min + scale * q4_code(codes, k) as f32));
             true
         }
+        TAG_SPARSE_CACHED => {
+            let cache = cache.ok_or_else(|| {
+                Error::parse("codec: sparse-cached payload but no index cache for this session")
+            })?;
+            if count > p {
+                return Err(Error::parse("codec: sparse count > p"));
+            }
+            let epoch = u32::from_le_bytes(take::<4>(data, &mut at)?);
+            if epoch != cache.epoch {
+                return Err(Error::parse(format!(
+                    "codec: cache epoch mismatch (payload {epoch}, session {})",
+                    cache.epoch
+                )));
+            }
+            let n_removed = u32::from_le_bytes(take::<4>(data, &mut at)?) as usize;
+            let n_added = u32::from_le_bytes(take::<4>(data, &mut at)?) as usize;
+            if n_removed > cache.indices.len() {
+                return Err(Error::parse(
+                    "codec: more removed indices than the cached set holds",
+                ));
+            }
+            if cache.indices.len() - n_removed + n_added != count {
+                return Err(Error::parse(
+                    "codec: cached set-delta does not produce the declared count",
+                ));
+            }
+            // each removed/added entry costs >= 1 varint byte and each
+            // resulting entry 4 value bytes: reject impossible counts
+            // before anything reserves
+            if data.len().saturating_sub(at)
+                < n_removed
+                    .saturating_add(n_added)
+                    .saturating_add(count.saturating_mul(4))
+            {
+                return Err(Error::parse("codec: truncated message"));
+            }
+            scratch.removed.clear();
+            scratch.added.clear();
+            read_delta_block(data, &mut at, n_removed, p, &mut scratch.removed)?;
+            read_delta_block(data, &mut at, n_added, p, &mut scratch.added)?;
+            merge_cached_indices(
+                &cache.indices,
+                &scratch.removed,
+                &scratch.added,
+                &mut scratch.indices,
+            )?;
+            let b = body(data, &mut at, 4 * count)?;
+            scratch.values.reserve(count);
+            scratch
+                .values
+                .extend(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+            true
+        }
+        TAG_DENSE_GQ8 => {
+            if count != p {
+                return Err(Error::parse("codec: dense-gq8 count != p"));
+            }
+            let n_groups = p.div_ceil(GQ8_GROUP);
+            let heads = body(data, &mut at, 8 * n_groups)?;
+            let codes = body(data, &mut at, p)?;
+            scratch.dense.reserve(p);
+            for (g, chunk) in codes.chunks(GQ8_GROUP).enumerate() {
+                let h = &heads[8 * g..8 * g + 8];
+                let min = f32::from_le_bytes(h[..4].try_into().unwrap());
+                let scale = f32::from_le_bytes(h[4..8].try_into().unwrap());
+                scratch.dense.extend(chunk.iter().map(|&c| min + scale * c as f32));
+            }
+            false
+        }
+        TAG_SPARSE_GQ8 => {
+            if count > p {
+                return Err(Error::parse("codec: sparse count > p"));
+            }
+            let n_groups = count.div_ceil(GQ8_GROUP);
+            // >= 8 bytes per group head, 1 varint byte + 1 code byte per
+            // entry; reject impossible counts before reserving
+            if data.len().saturating_sub(at)
+                < n_groups
+                    .saturating_mul(8)
+                    .saturating_add(count.saturating_mul(2))
+            {
+                return Err(Error::parse("codec: truncated message"));
+            }
+            let heads = body(data, &mut at, 8 * n_groups)?;
+            read_delta_block(data, &mut at, count, p, &mut scratch.indices)?;
+            let codes = body(data, &mut at, count)?;
+            scratch.values.reserve(count);
+            for (g, chunk) in codes.chunks(GQ8_GROUP).enumerate() {
+                let h = &heads[8 * g..8 * g + 8];
+                let min = f32::from_le_bytes(h[..4].try_into().unwrap());
+                let scale = f32::from_le_bytes(h[4..8].try_into().unwrap());
+                scratch.values.extend(chunk.iter().map(|&c| min + scale * c as f32));
+            }
+            true
+        }
+        TAG_SPARSE_RICE8 => {
+            if count > p {
+                return Err(Error::parse("codec: sparse count > p"));
+            }
+            let min = f32::from_le_bytes(take::<4>(data, &mut at)?);
+            let scale = f32::from_le_bytes(take::<4>(data, &mut at)?);
+            let k = take::<1>(data, &mut at)?[0];
+            if k > RICE_MAX_K {
+                return Err(Error::parse(format!(
+                    "codec: rice parameter {k} exceeds {RICE_MAX_K}"
+                )));
+            }
+            // >= 1 varint byte per entry + (1 + k) coded bits per entry;
+            // reject impossible counts before reserving
+            if data.len().saturating_sub(at)
+                < count.saturating_add(count.saturating_mul(1 + k as usize).div_ceil(8))
+            {
+                return Err(Error::parse("codec: truncated message"));
+            }
+            read_delta_block(data, &mut at, count, p, &mut scratch.indices)?;
+            // the Rice stream is everything that remains: rice_decode
+            // consumes the slice exactly, rejecting truncation, overlong
+            // streams, and non-zero padding bits
+            scratch.codes.clear();
+            scratch.codes.reserve(count);
+            rice_decode(&data[at..], count, k, &mut scratch.codes)?;
+            at = data.len();
+            scratch.values.reserve(count);
+            scratch
+                .values
+                .extend(scratch.codes.iter().map(|&c| min + scale * c as f32));
+            true
+        }
         other => return Err(Error::parse(format!("codec: unknown tag {other}"))),
     };
     if at != data.len() {
@@ -843,6 +1257,52 @@ fn read_delta_block(
     Ok(())
 }
 
+/// Apply a tag-7 set-delta to the session's cached index set:
+/// `out = (cached \ removed) ∪ added`, strictly increasing. Strict on the
+/// delta's shape: every removed index must be present in the cached set,
+/// no added index may already be in it, and an index that is both removed
+/// and re-added is non-canonical (the encoder ships it as retained) — all
+/// typed parse errors. `cached` itself is never written.
+fn merge_cached_indices(
+    cached: &[u32],
+    removed: &[u32],
+    added: &[u32],
+    out: &mut Vec<u32>,
+) -> Result<()> {
+    out.clear();
+    out.reserve(cached.len() - removed.len() + added.len());
+    let mut ri = 0usize;
+    let mut ai = 0usize;
+    for &c in cached {
+        // emit additions sorting before this cached index first, so the
+        // equality probes below are exact
+        while ai < added.len() && added[ai] < c {
+            out.push(added[ai]);
+            ai += 1;
+        }
+        if ri < removed.len() && removed[ri] == c {
+            ri += 1;
+            if ai < added.len() && added[ai] == c {
+                return Err(Error::parse(
+                    "codec: index both removed and re-added (non-canonical set-delta)",
+                ));
+            }
+            continue;
+        }
+        if ai < added.len() && added[ai] == c {
+            return Err(Error::parse("codec: added index collides with cached set"));
+        }
+        out.push(c);
+    }
+    // both lists are sorted, so any removal not consumed above names an
+    // index the cached set does not hold
+    if ri != removed.len() {
+        return Err(Error::parse("codec: removed index not in cached set"));
+    }
+    out.extend_from_slice(&added[ai..]);
+    Ok(())
+}
+
 /// An odd-count q4 body carries one unused high nibble in its final byte;
 /// the encoder always leaves it zero, so anything else is a malformed (or
 /// non-canonical) message.
@@ -854,10 +1314,18 @@ fn check_q4_padding(codes: &[u8], n: usize) -> Result<()> {
 }
 
 /// Decode an update message produced by [`encode_update`] into an owned
-/// [`WireUpdate`]. Sparse bodies stay sparse.
+/// [`WireUpdate`]. Sparse bodies stay sparse. Stateless: a tag-7
+/// (`SparseCached`) payload is a typed parse error here — use
+/// [`decode_update_cached`] with the session's cache.
 pub fn decode_update(data: &[u8]) -> Result<WireUpdate> {
+    decode_update_cached(data, None)
+}
+
+/// [`decode_update`] with the session's cross-round [`IndexCache`] (pass
+/// `None` for a session without one — equivalent to [`decode_update`]).
+pub fn decode_update_cached(data: &[u8], cache: Option<&IndexCache>) -> Result<WireUpdate> {
     let mut scratch = DecodeScratch::default();
-    let h = decode_into(data, &mut scratch)?;
+    let h = decode_into(data, &mut scratch, cache)?;
     let body = if h.sparse {
         DecodedBody::Sparse {
             indices: std::mem::take(&mut scratch.indices),
@@ -883,7 +1351,19 @@ pub fn decode_update_view<'a>(
     data: &[u8],
     scratch: &'a mut DecodeScratch,
 ) -> Result<WireView<'a>> {
-    let h = decode_into(data, scratch)?;
+    decode_update_view_cached(data, scratch, None)
+}
+
+/// [`decode_update_view`] with the session's cross-round [`IndexCache`].
+/// The cache is read-only: a rejected decode leaves it bitwise-identical
+/// (the caller only ever *replaces* its session's cache after an accepted
+/// fold, never mutates it through this path).
+pub fn decode_update_view_cached<'a>(
+    data: &[u8],
+    scratch: &'a mut DecodeScratch,
+    cache: Option<&IndexCache>,
+) -> Result<WireView<'a>> {
+    let h = decode_into(data, scratch, cache)?;
     let body = if h.sparse {
         BodyView::Sparse {
             indices: &scratch.indices,
@@ -1198,10 +1678,10 @@ mod tests {
 
     #[test]
     fn hostile_delta_count_is_rejected_before_any_allocation() {
-        // A 24-byte message whose header promises u32::MAX delta entries:
-        // the decoder must fail on the impossible count, not reserve a
-        // multi-GB index buffer first (the wire is an open local endpoint).
-        for tag in [4u8, 6] {
+        // A header that promises u32::MAX delta entries: the decoder must
+        // fail on the impossible count, not reserve a multi-GB index
+        // buffer first (the wire is an open local endpoint).
+        let hostile_header = |tag: u8| {
             let mut bytes = Vec::new();
             bytes.extend_from_slice(&MAGIC.to_le_bytes());
             bytes.push(VERSION);
@@ -1211,6 +1691,10 @@ mod tests {
             bytes.extend_from_slice(&1u32.to_le_bytes()); // n_samples
             bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // p
             bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // count
+            bytes
+        };
+        for tag in [4u8, 6] {
+            let mut bytes = hostile_header(tag);
             if tag == 6 {
                 bytes.extend_from_slice(&0.0f32.to_le_bytes()); // min
                 bytes.extend_from_slice(&0.1f32.to_le_bytes()); // scale
@@ -1218,6 +1702,29 @@ mod tests {
             let err = decode_update(&bytes).unwrap_err().to_string();
             assert!(err.contains("truncated"), "tag {tag}: {err}");
         }
+        // tag 9 (sparse grouped-q8): guard fires straight after the count
+        let err = decode_update(&hostile_header(9)).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "tag 9: {err}");
+        // tag 10 (sparse rice8): min + scale + k prefix, then the guard
+        let mut bytes = hostile_header(10);
+        bytes.extend_from_slice(&0.0f32.to_le_bytes());
+        bytes.extend_from_slice(&0.1f32.to_le_bytes());
+        bytes.push(0); // k
+        let err = decode_update(&bytes).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "tag 10: {err}");
+        // tag 7 (sparse cached): a hostile added-count against an empty
+        // cached set must hit the size guard, not an allocation — epoch 1
+        // matches, n_removed 0, n_added u32::MAX so the count arithmetic
+        // stays consistent up to the guard
+        let cache = IndexCache::first(vec![]);
+        let mut bytes = hostile_header(7);
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // epoch
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // n_removed
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // n_added
+        let err = decode_update_cached(&bytes, Some(&cache))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("truncated"), "tag 7: {err}");
     }
 
     #[test]
@@ -1273,13 +1780,20 @@ mod tests {
                 let encoded = encode_update(1, 2, 3, &params, enc);
                 let predicted = wire_bytes(p, nnz, enc);
                 match enc {
-                    Encoding::Dense | Encoding::Sparse | Encoding::AutoQ8 => assert_eq!(
+                    Encoding::Dense | Encoding::Sparse => assert_eq!(
                         encoded.len(),
                         predicted,
                         "{enc:?} p {p} nnz {nnz} seed {:#x}",
                         g.seed
                     ),
-                    Encoding::SparseDelta | Encoding::Auto | Encoding::AutoQ4 => assert!(
+                    // AutoQ8 joined the upper-bound class in wire v3: its
+                    // Rice arm can beat both fixed-size q8 arms
+                    Encoding::SparseDelta
+                    | Encoding::Auto
+                    | Encoding::AutoQ8
+                    | Encoding::AutoQ4
+                    | Encoding::SparseCached
+                    | Encoding::GroupedQ8 => assert!(
                         encoded.len() <= predicted,
                         "{enc:?} p {p} nnz {nnz}: {} > bound {predicted} (seed {:#x})",
                         encoded.len(),
@@ -1423,8 +1937,9 @@ mod tests {
             params[i] = (i as f32) * 0.001 + 1.0;
         }
         let bytes = encode_update(0, 0, 1, &params, Encoding::AutoQ8);
-        assert_eq!(bytes.len(), wire_bytes(10_000, 100, Encoding::AutoQ8));
-        // sparse-q8 is 5 bytes/entry vs 8 for sparse-f32
+        // wire_bytes is an upper bound for AutoQ8 since wire v3: the Rice
+        // arm beats the flat 5-bytes-per-entry sparse-q8 form here
+        assert!(bytes.len() <= wire_bytes(10_000, 100, Encoding::AutoQ8));
         assert!(bytes.len() < wire_bytes(10_000, 100, Encoding::Sparse));
         let u = decode_update(&bytes).unwrap();
         let dense = u.to_dense();
@@ -1500,11 +2015,231 @@ mod tests {
     fn lossy_half_step_matches_quantizer_grids() {
         assert_eq!(Encoding::Auto.lossy_half_step(-1.0, 1.0), 0.0);
         assert_eq!(Encoding::SparseDelta.lossy_half_step(-1.0, 1.0), 0.0);
+        // the cached arm is lossless: same f32 values, cheaper indices
+        assert_eq!(Encoding::SparseCached.lossy_half_step(-1.0, 1.0), 0.0);
         let q8 = Encoding::AutoQ8.lossy_half_step(0.0, 255.0);
         assert!((q8 - 0.5).abs() < 1e-6);
+        // grouped q8 reports the global grid's half-step (a valid upper
+        // bound on every group's step)
+        let gq8 = Encoding::GroupedQ8.lossy_half_step(0.0, 255.0);
+        assert!((gq8 - 0.5).abs() < 1e-6);
         let q4 = Encoding::AutoQ4.lossy_half_step(0.0, 15.0);
         assert!((q4 - 0.5).abs() < 1e-6);
         // degenerate range is exact
         assert_eq!(Encoding::AutoQ4.lossy_half_step(2.0, 2.0), 0.0);
+    }
+
+    fn support_of(params: &[f32]) -> Vec<u32> {
+        params
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| **v != 0.0)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+
+    #[test]
+    fn sparse_cached_roundtrip_matches_stateless_and_shrinks() {
+        let p = 4096usize;
+        // round 1: every 8th coordinate carried
+        let mut prev = vec![0.0f32; p];
+        for i in (0..2048).step_by(8) {
+            prev[i] = i as f32 * 0.01 + 1.0;
+        }
+        let cache = IndexCache::first(support_of(&prev));
+        // round 2: small churn — 3 indices leave, 3 join, values move
+        let mut params = prev.clone();
+        params[0] = 0.0;
+        params[8] = 0.0;
+        params[16] = 0.0;
+        params[3000] = -1.5;
+        params[3001] = 2.5;
+        params[4095] = 0.25;
+        for v in params.iter_mut().filter(|v| **v != 0.0) {
+            *v += 0.125;
+        }
+        let cached = encode_update_cached(7, 2, 64, &params, Encoding::SparseCached, Some(&cache));
+        let stateless = encode_update(7, 2, 64, &params, Encoding::SparseDelta);
+        assert_eq!(cached[3], TAG_SPARSE_CACHED);
+        assert!(
+            cached.len() < stateless.len(),
+            "cached {} !< stateless {}",
+            cached.len(),
+            stateless.len()
+        );
+        assert!(cached.len() <= wire_bytes(p, support_of(&params).len(), Encoding::SparseCached));
+        // the stateful decode is bitwise-equal to the stateless decode
+        let a = decode_update_cached(&cached, Some(&cache)).unwrap();
+        let b = decode_update(&stateless).unwrap();
+        assert_eq!(a.body, b.body);
+        assert_eq!((a.client, a.round, a.n_samples, a.p), (7, 2, 64, p));
+        // without the cache (or with a desynced epoch) the same bytes are
+        // a typed parse error, never a silent wrong decode
+        let err = decode_update(&cached).unwrap_err().to_string();
+        assert!(err.contains("no index cache"), "{err}");
+        let stale = IndexCache { epoch: cache.epoch + 1, indices: cache.indices.clone() };
+        let err = decode_update_cached(&cached, Some(&stale)).unwrap_err().to_string();
+        assert!(err.contains("epoch mismatch"), "{err}");
+    }
+
+    #[test]
+    fn sparse_cached_without_cache_falls_back_to_stateless() {
+        let mut params = vec![0.0f32; 1000];
+        for i in (0..1000).step_by(7) {
+            params[i] = i as f32 + 0.5;
+        }
+        // no cache: byte-identical to the stateless sparse-delta encode
+        let bytes = encode_update(1, 1, 10, &params, Encoding::SparseCached);
+        let sd = encode_update(1, 1, 10, &params, Encoding::SparseDelta);
+        assert_eq!(bytes, sd);
+        // a fully-churned cache (disjoint support) makes the set-delta
+        // dearer than starting over: same stateless fallback
+        let churned = IndexCache::first((0..143).map(|i| i * 7 + 1).collect());
+        let bytes = encode_update_cached(1, 1, 10, &params, Encoding::SparseCached, Some(&churned));
+        assert_eq!(bytes, sd);
+    }
+
+    #[test]
+    fn auto_censuses_cached_arm_by_exact_length() {
+        let p = 4096usize;
+        let mut params = vec![0.0f32; p];
+        for i in (0..p).step_by(16) {
+            params[i] = (i as f32).sin() + 1.5;
+        }
+        // zero churn: the cached arm (12 bytes of set-delta header, no
+        // index bytes at all) beats every stateless arm
+        let cache = IndexCache::first(support_of(&params));
+        let auto = encode_update_cached(0, 1, 1, &params, Encoding::Auto, Some(&cache));
+        assert_eq!(auto[3], TAG_SPARSE_CACHED);
+        for &enc in &[Encoding::Dense, Encoding::Sparse, Encoding::SparseDelta] {
+            assert!(auto.len() < encode_update(0, 1, 1, &params, enc).len(), "{enc:?}");
+        }
+        assert_eq!(
+            decode_update_cached(&auto, Some(&cache)).unwrap().body,
+            decode_update(&encode_update(0, 1, 1, &params, Encoding::SparseDelta))
+                .unwrap()
+                .body
+        );
+        // without a cache, Auto is unchanged from its stateless census
+        let stateless = encode_update(0, 1, 1, &params, Encoding::Auto);
+        assert_ne!(stateless[3], TAG_SPARSE_CACHED);
+    }
+
+    #[test]
+    fn grouped_q8_limits_outlier_damage_to_its_group() {
+        // two groups; one huge outlier in group 0 must not coarsen group 1
+        let mut params: Vec<f32> = (0..512).map(|i| (i % 256) as f32 / 255.0).collect();
+        params[0] = 1000.0;
+        let bytes = encode_update(2, 3, 4, &params, Encoding::GroupedQ8);
+        assert_eq!(bytes[3], TAG_DENSE_GQ8);
+        assert!(bytes.len() <= wire_bytes(512, 512, Encoding::GroupedQ8));
+        let dense = decode_update(&bytes).unwrap().to_dense();
+        // group 1 keeps its own tight grid: half of (1.0 / 255), not half
+        // of (1000 / 255) as the global q8 grid would force
+        let local_half = 1.0 / 255.0 * 0.5 + 1e-5;
+        for (a, b) in params[256..].iter().zip(&dense[256..]) {
+            assert!((a - b).abs() <= local_half, "{a} vs {b}");
+        }
+        // group 0 is still bounded by its own (outlier-widened) step
+        let outlier_half = 1000.0 / 255.0 * 0.5 + 1e-3;
+        for (a, b) in params[..256].iter().zip(&dense[..256]) {
+            assert!((a - b).abs() <= outlier_half, "{a} vs {b}");
+        }
+        // sparse arm: masked payload, zeros preserved exactly
+        let mut masked = vec![0.0f32; 10_000];
+        for i in (0..10_000).step_by(40) {
+            masked[i] = (i as f32) * 1e-3 + 1.0;
+        }
+        let bytes = encode_update(2, 3, 4, &masked, Encoding::GroupedQ8);
+        assert_eq!(bytes[3], TAG_SPARSE_GQ8);
+        let dense = decode_update(&bytes).unwrap().to_dense();
+        for (a, b) in masked.iter().zip(&dense) {
+            if *a == 0.0 {
+                assert_eq!(*b, 0.0);
+            } else {
+                assert!((a - b).abs() <= 10.0 / 255.0 * 0.5 + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_q8_rice_arm_wins_on_skewed_codes() {
+        // values cluster at 1.0 with a few at 2.0: the q8 codes are almost
+        // all zero, which Rice coding crushes far below 1 byte per value
+        let mut params = vec![0.0f32; 10_000];
+        for i in (0..10_000).step_by(50) {
+            params[i] = if i % 1000 == 0 { 2.0 } else { 1.0 };
+        }
+        let bytes = encode_update(5, 6, 7, &params, Encoding::AutoQ8);
+        assert_eq!(bytes[3], TAG_SPARSE_RICE8);
+        let nnz = support_of(&params).len();
+        assert!(
+            bytes.len() < wire_bytes(10_000, nnz, Encoding::AutoQ8),
+            "rice {} !< flat bound {}",
+            bytes.len(),
+            wire_bytes(10_000, nnz, Encoding::AutoQ8)
+        );
+        // the Rice stream decodes to exactly the same q8 grid values the
+        // flat sparse-q8 arm would have produced — bitwise
+        let vals: Vec<f32> = params.iter().copied().filter(|v| *v != 0.0).collect();
+        let q = quantize(&vals).unwrap();
+        let expect: Vec<f32> = q.codes.iter().map(|&c| q.min + q.scale * c as f32).collect();
+        match decode_update(&bytes).unwrap().body {
+            DecodedBody::Sparse { indices, values } => {
+                assert_eq!(indices, support_of(&params));
+                assert_eq!(values, expect);
+            }
+            other => panic!("expected sparse body, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sparse_cached_decode_is_strict_about_the_set_delta() {
+        // cached set {3, 7}; a payload claiming to remove 5 (absent) or
+        // add 7 (present) must be a typed error
+        let cache = IndexCache::first(vec![3, 7]);
+        let p = 16u32;
+        let build = |n_removed: u32, n_added: u32, count: u32, blocks: &[u8], values: usize| {
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(&MAGIC.to_le_bytes());
+            bytes.push(VERSION);
+            bytes.push(TAG_SPARSE_CACHED);
+            bytes.extend_from_slice(&0u32.to_le_bytes()); // client
+            bytes.extend_from_slice(&1u32.to_le_bytes()); // round
+            bytes.extend_from_slice(&1u32.to_le_bytes()); // n_samples
+            bytes.extend_from_slice(&p.to_le_bytes());
+            bytes.extend_from_slice(&count.to_le_bytes());
+            bytes.extend_from_slice(&1u32.to_le_bytes()); // epoch
+            bytes.extend_from_slice(&n_removed.to_le_bytes());
+            bytes.extend_from_slice(&n_added.to_le_bytes());
+            bytes.extend_from_slice(blocks);
+            for _ in 0..values {
+                bytes.extend_from_slice(&1.0f32.to_le_bytes());
+            }
+            bytes
+        };
+        // removed index 5 not in {3, 7}
+        let bytes = build(1, 0, 1, &[5], 1);
+        let err = decode_update_cached(&bytes, Some(&cache)).unwrap_err().to_string();
+        assert!(err.contains("not in cached set"), "{err}");
+        // added index 7 collides with the cached set
+        let bytes = build(0, 1, 3, &[7], 3);
+        let err = decode_update_cached(&bytes, Some(&cache)).unwrap_err().to_string();
+        assert!(err.contains("collides"), "{err}");
+        // removing and re-adding 3 is non-canonical
+        let bytes = build(1, 1, 2, &[3, 3], 2);
+        let err = decode_update_cached(&bytes, Some(&cache)).unwrap_err().to_string();
+        assert!(err.contains("non-canonical"), "{err}");
+        // count that disagrees with |cached| - removed + added
+        let bytes = build(0, 0, 5, &[], 5);
+        let err = decode_update_cached(&bytes, Some(&cache)).unwrap_err().to_string();
+        assert!(err.contains("declared count"), "{err}");
+        // and the well-formed zero-churn delta decodes to the cached set
+        let bytes = build(0, 0, 2, &[], 2);
+        let u = decode_update_cached(&bytes, Some(&cache)).unwrap();
+        assert_eq!(
+            u.body,
+            DecodedBody::Sparse { indices: vec![3, 7], values: vec![1.0, 1.0] }
+        );
     }
 }

@@ -130,6 +130,140 @@ pub fn dequantize4(q: &Quantized4) -> Vec<f32> {
         .collect()
 }
 
+// ----------------------------------------------------------------------
+// Rice-Golomb coding over q8 codes (the wire's entropy-coded value arm)
+// ----------------------------------------------------------------------
+//
+// Masked-update q8 code distributions are far from uniform (most codes
+// cluster near the grid midpoint mapped from zero-ish deltas), so a
+// Rice code — the power-of-two Golomb family — beats the flat byte per
+// code: each code `c` is written as `c >> k` in unary (that many 1 bits
+// then a terminating 0) followed by the `k` low bits verbatim, LSB-first
+// within each byte, zero-padded to a byte boundary. The parameter `k` is
+// chosen exactly (by total bit count over `k ∈ 0..=8`) per message;
+// `k = 8` degenerates to one `0` marker bit plus the raw byte, so the
+// coded stream is never catastrophically larger than the flat one.
+//
+// The decoder is strict in the same way the varint index block is: a
+// stream that ends inside a code, a unary run longer than the largest
+// representable quotient (`255 >> k`), a non-zero padding bit, or bytes
+// left over after the padding are all typed parse errors.
+
+/// Maximum Rice parameter: at `k = 8` every code is `0` + 8 raw bits.
+pub const RICE_MAX_K: u8 = 8;
+
+/// Exact bit count of the Rice-coded stream for `codes` at parameter `k`.
+fn rice_bits(hist: &[usize; 256], k: u8) -> usize {
+    hist.iter()
+        .enumerate()
+        .map(|(c, &n)| n * ((c >> k) + 1 + k as usize))
+        .sum()
+}
+
+/// The exact-optimal Rice parameter for `codes` and the byte length of
+/// the resulting stream: every `k ∈ 0..=8` is priced from one histogram
+/// pass, ties break toward the smaller `k`.
+pub fn rice_plan(codes: &[u8]) -> (u8, usize) {
+    let mut hist = [0usize; 256];
+    for &c in codes {
+        hist[c as usize] += 1;
+    }
+    let mut best = (0u8, rice_bits(&hist, 0));
+    for k in 1..=RICE_MAX_K {
+        let bits = rice_bits(&hist, k);
+        if bits < best.1 {
+            best = (k, bits);
+        }
+    }
+    (best.0, best.1.div_ceil(8))
+}
+
+/// Append the Rice-coded stream for `codes` at parameter `k` to `out`,
+/// zero-padded to a byte boundary. Bits fill each byte LSB-first.
+pub fn rice_encode(codes: &[u8], k: u8, out: &mut Vec<u8>) {
+    debug_assert!(k <= RICE_MAX_K);
+    let mut acc = 0u32;
+    let mut nbits = 0u32;
+    let mut push_bit = |bit: u32, acc: &mut u32, nbits: &mut u32, out: &mut Vec<u8>| {
+        *acc |= bit << *nbits;
+        *nbits += 1;
+        if *nbits == 8 {
+            out.push(*acc as u8);
+            *acc = 0;
+            *nbits = 0;
+        }
+    };
+    for &c in codes {
+        let q = c >> k;
+        for _ in 0..q {
+            push_bit(1, &mut acc, &mut nbits, out);
+        }
+        push_bit(0, &mut acc, &mut nbits, out);
+        for b in 0..k {
+            push_bit(((c >> b) & 1) as u32, &mut acc, &mut nbits, out);
+        }
+    }
+    if nbits > 0 {
+        out.push(acc as u8);
+    }
+}
+
+/// Decode exactly `n` Rice codes at parameter `k` from `data`, appending
+/// them to `out`. Strict: `data` must be exactly the coded stream — a
+/// truncated stream, a unary quotient above the representable maximum,
+/// a non-zero padding bit, or whole leftover bytes are all errors.
+pub fn rice_decode(data: &[u8], n: usize, k: u8, out: &mut Vec<u8>) -> Result<()> {
+    if k > RICE_MAX_K {
+        return Err(Error::parse(format!("rice parameter {k} exceeds {RICE_MAX_K}")));
+    }
+    let total_bits = data.len() * 8;
+    let mut pos = 0usize;
+    let max_q = (255u32 >> k) as usize;
+    for i in 0..n {
+        let mut q = 0usize;
+        loop {
+            if pos >= total_bits {
+                return Err(Error::parse(format!("rice stream truncated in code {i}")));
+            }
+            let bit = (data[pos / 8] >> (pos % 8)) & 1;
+            pos += 1;
+            if bit == 0 {
+                break;
+            }
+            q += 1;
+            if q > max_q {
+                return Err(Error::parse(format!(
+                    "rice quotient exceeds maximum {max_q} in code {i}"
+                )));
+            }
+        }
+        let mut rem = 0u32;
+        for b in 0..k {
+            if pos >= total_bits {
+                return Err(Error::parse(format!("rice stream truncated in code {i}")));
+            }
+            rem |= ((((data[pos / 8] >> (pos % 8)) & 1) as u32) << b) as u32;
+            pos += 1;
+        }
+        out.push((((q as u32) << k) | rem) as u8);
+    }
+    // the stream must end exactly here: whole leftover bytes mean an
+    // overlong stream, and the final byte's padding bits must be zero
+    if total_bits - pos >= 8 {
+        return Err(Error::parse(format!(
+            "rice stream overlong: {} unread bytes after {n} codes",
+            (total_bits - pos) / 8
+        )));
+    }
+    while pos < total_bits {
+        if (data[pos / 8] >> (pos % 8)) & 1 != 0 {
+            return Err(Error::parse("rice stream has non-zero padding bits"));
+        }
+        pos += 1;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,5 +364,90 @@ mod tests {
         assert!(quantize4(&[]).is_err());
         assert!(quantize4(&[f32::NAN]).is_err());
         assert!(quantize4(&[0.0, f32::NEG_INFINITY]).is_err());
+    }
+
+    #[test]
+    fn rice_roundtrips_any_codes_at_planned_length() {
+        check("rice roundtrip + exact length", 120, |g| {
+            let n = g.usize_in(0, 2000);
+            // skew toward small codes (the masked-update shape) half the
+            // time, uniform the other half — both must round-trip
+            let skew = g.usize_in(0, 1) == 0;
+            let codes: Vec<u8> = (0..n)
+                .map(|_| {
+                    let c = g.usize_in(0, 255) as u8;
+                    if skew {
+                        c & 0x0f
+                    } else {
+                        c
+                    }
+                })
+                .collect();
+            let (k, len) = rice_plan(&codes);
+            let mut stream = Vec::new();
+            rice_encode(&codes, k, &mut stream);
+            assert_eq!(stream.len(), len, "planned length must be exact (k={k})");
+            let mut back = Vec::new();
+            rice_decode(&stream, n, k, &mut back).unwrap();
+            assert_eq!(back, codes, "k={k} n={n} seed {:#x}", g.seed);
+        });
+    }
+
+    #[test]
+    fn rice_never_beats_itself_at_worse_k() {
+        let codes: Vec<u8> = (0..512).map(|i| (i % 7) as u8).collect();
+        let (k, len) = rice_plan(&codes);
+        for other in 0..=RICE_MAX_K {
+            let mut s = Vec::new();
+            rice_encode(&codes, other, &mut s);
+            assert!(s.len() >= len, "k={other} undercuts planned k={k}");
+        }
+    }
+
+    #[test]
+    fn rice_decode_rejects_malformed_streams() {
+        let codes: Vec<u8> = vec![3, 0, 17, 250, 9, 9, 64];
+        let (k, _) = rice_plan(&codes);
+        let mut stream = Vec::new();
+        rice_encode(&codes, k, &mut stream);
+        let mut out = Vec::new();
+        // truncated: lop off the final byte
+        assert!(rice_decode(&stream[..stream.len() - 1], codes.len(), k, &mut out).is_err());
+        // overlong: a whole extra byte survives past the padding window
+        let mut long = stream.clone();
+        long.push(0);
+        out.clear();
+        assert!(rice_decode(&long, codes.len(), k, &mut out).is_err());
+        // non-zero padding bits in the final byte
+        let mut dirty = stream.clone();
+        *dirty.last_mut().unwrap() |= 0x80;
+        out.clear();
+        if rice_decode(&dirty, codes.len(), k, &mut out).is_ok() {
+            // 0x80 may have been a real data bit; force a padded layout
+            let mut s2 = Vec::new();
+            rice_encode(&[1u8], 0, &mut s2); // 2 bits -> 6 padding bits
+            assert_eq!(s2.len(), 1);
+            s2[0] |= 0x80;
+            out.clear();
+            assert!(rice_decode(&s2, 1, 0, &mut out).is_err());
+        }
+        // unary run past the representable quotient: all-ones byte at k=4
+        out.clear();
+        assert!(rice_decode(&[0xff, 0xff, 0xff, 0xff], 1, 4, &mut out).is_err());
+        // k out of range
+        out.clear();
+        assert!(rice_decode(&stream, codes.len(), RICE_MAX_K + 1, &mut out).is_err());
+    }
+
+    #[test]
+    fn rice_empty_stream_is_zero_bytes() {
+        let (k, len) = rice_plan(&[]);
+        assert_eq!((k, len), (0, 0));
+        let mut s = Vec::new();
+        rice_encode(&[], k, &mut s);
+        assert!(s.is_empty());
+        let mut out = Vec::new();
+        rice_decode(&s, 0, k, &mut out).unwrap();
+        assert!(out.is_empty());
     }
 }

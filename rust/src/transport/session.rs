@@ -84,6 +84,44 @@ pub struct Session {
     pub token: u64,
 }
 
+/// Cross-round index cache: the previous round's **accepted** top-k index
+/// set for one client session, as both ends remember it. The codec's
+/// `SparseCached` arm (WIRE.md §3b) encodes only the set-delta against
+/// `indices`, keyed by `epoch` — the epoch is echoed in the payload and a
+/// mismatch is a typed parse error, so a desynced cache can never decode
+/// to the wrong index set, only to a rejection.
+///
+/// Lifecycle (owned by the round driver, mirrored to the client at
+/// broadcast): the epoch advances only when a round's upload was accepted
+/// into the fold; any drop, disconnect, duplicate rejection, or round
+/// skip leaves the client without a cache next round, forcing a full
+/// (stateless) index send. The cache is immutable once built and shared
+/// by `Arc`, so a rejected decode cannot partially mutate it even in
+/// principle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexCache {
+    /// Cache generation, 1-based; echoed verbatim in `SparseCached`
+    /// payloads and matched exactly on decode.
+    pub epoch: u32,
+    /// The cached index set, strictly increasing.
+    pub indices: Vec<u32>,
+}
+
+impl IndexCache {
+    /// A first-generation cache over `indices` (must be strictly
+    /// increasing — callers hand in decoded sparse supports, which are).
+    pub fn first(indices: Vec<u32>) -> IndexCache {
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]));
+        IndexCache { epoch: 1, indices }
+    }
+
+    /// The successor cache: next epoch, new accepted index set.
+    pub fn advance(&self, indices: Vec<u32>) -> IndexCache {
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]));
+        IndexCache { epoch: self.epoch.wrapping_add(1).max(1), indices }
+    }
+}
+
 /// The server's registry of allowed clients and live sessions. Shared
 /// behind a mutex by the accept-loop's per-connection threads.
 #[derive(Debug, Default)]

@@ -37,7 +37,10 @@ use fedmask::fl::masking::MaskTarget;
 use fedmask::metrics::recorder::RoundRecord;
 use fedmask::runtime::manifest::LayerInfo;
 use fedmask::sim::availability::AvailabilityModel;
-use fedmask::transport::codec::{decode_update, encode_update, DecodedBody, Encoding};
+use fedmask::transport::codec::{
+    decode_update, encode_update, encode_update_cached, DecodedBody, Encoding, TAG_SPARSE_CACHED,
+    TAG_SPARSE_DELTA,
+};
 use fedmask::transport::link::TransportKind;
 
 // ---------------------------------------------------------------------
@@ -167,6 +170,12 @@ fn surviving_clients(plan: &FaultPlan, t: usize, clients: usize) -> Vec<usize> {
 struct ChaosOutcome {
     records: Vec<RoundRecord>,
     aggregates: Vec<Vec<f32>>,
+    /// Per round, the wire tag each spawned client *encoded* (before the
+    /// chaos layer decided the upload's fate), sorted by client id. This
+    /// is what pins the cache-recovery contract: a client whose previous
+    /// upload was lost must fall back to a stateless full-index send
+    /// (`TAG_SPARSE_DELTA`), never emit a desynced `TAG_SPARSE_CACHED`.
+    tags: Vec<Vec<(usize, u8)>>,
 }
 
 /// Drive `rounds` full sample → broadcast → collect → finalize cycles
@@ -189,6 +198,7 @@ fn run_chaos_rounds(
     let layers = one_layer(p);
     let mut records = Vec::new();
     let mut aggregates: Vec<Vec<f32>> = Vec::new();
+    let mut tags: Vec<Vec<(usize, u8)>> = Vec::new();
     let mut params: Arc<Vec<f32>> = Arc::new(initial_params(p));
 
     for t in 1..=rounds {
@@ -198,6 +208,7 @@ fn run_chaos_rounds(
         let sink = driver.sink();
         let downlink = driver.downlink();
         let (tx, results) = channel::<(usize, fedmask::Result<JobMeta>)>();
+        let (tag_tx, tag_rx) = channel::<(usize, u8)>();
         // spawn only downlink-reached clients; the drain indexes its metas
         // by dense job position, hence the re-enumeration to `j`
         let handles: Vec<_> = cohort
@@ -210,7 +221,11 @@ fn run_chaos_rounds(
                 let sink = Arc::clone(&sink);
                 let downlink = Arc::clone(&downlink);
                 let reference = wire.references[i].clone();
+                // same Arc the server will decode with, handed over at
+                // broadcast time — None forces a stateless full-index send
+                let cache = wire.index_caches[i].clone();
                 let tx = tx.clone();
+                let tag_tx = tag_tx.clone();
                 std::thread::spawn(move || {
                     let global = receive_broadcast(
                         downlink.as_ref(),
@@ -222,8 +237,16 @@ fn run_chaos_rounds(
                     .unwrap();
                     let update = fake_update(&global, c);
                     let nnz = update.iter().filter(|v| **v != 0.0).count();
-                    let payload = encode_update(c as u32, t as u32, 10 + c as u32, &update, enc);
+                    let payload = encode_update_cached(
+                        c as u32,
+                        t as u32,
+                        10 + c as u32,
+                        &update,
+                        enc,
+                        cache.as_deref(),
+                    );
                     let bytes = payload.len();
+                    tag_tx.send((c, payload[3])).unwrap();
                     // the chaos sink decides this upload's fate; Ok either way
                     sink.send(payload).unwrap();
                     tx.send((j, Ok((0.25, nnz, bytes)))).unwrap();
@@ -231,12 +254,16 @@ fn run_chaos_rounds(
             })
             .collect();
         drop(tx);
+        drop(tag_tx);
         let mut agg =
             make_aggregator(AggregatorKind::FedAvg, target, &wire.params, &layers).unwrap();
         let collected = driver.collect(&cohort, agg.as_mut(), &results).unwrap();
         for h in handles {
             h.join().unwrap();
         }
+        let mut round_tags: Vec<(usize, u8)> = tag_rx.iter().collect();
+        round_tags.sort_unstable();
+        tags.push(round_tags);
         let cost = driver.finalize(&collected);
         let aggregate = agg.finish().unwrap();
         let ledger = driver.ledger();
@@ -258,7 +285,7 @@ fn run_chaos_rounds(
         params = Arc::new(aggregate.clone());
         aggregates.push(aggregate);
     }
-    ChaosOutcome { records, aggregates }
+    ChaosOutcome { records, aggregates, tags }
 }
 
 fn base_cfg(clients: usize, enc: Encoding) -> ExperimentConfig {
@@ -415,6 +442,94 @@ fn chaos_soup_is_deterministic_and_folds_like_a_clean_run_on_survivors() {
                     );
                 }
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire v3: chaos-soup with cross-round index caching enabled
+// ---------------------------------------------------------------------
+
+/// The same chaos-soup, with `SparseCached` switched on. Three pins:
+/// reruns stay byte-identical (the cache lifecycle is part of the
+/// deterministic state machine); survivor aggregates are bitwise-equal
+/// to a clean **stateless** fold (the cached arm is lossless, so
+/// statefulness must never leak into values); and the recovery rule —
+/// round 1 is all full-index sends, and in round 2 exactly the clients
+/// whose round-1 upload folded hold a cache and send the set-delta,
+/// while a dropped, corrupted or Byzantine round-1 upload forces that
+/// session back to a stateless full-index send, never a desynced delta.
+#[test]
+fn chaos_soup_with_sparse_cached_recovers_to_full_index_sends() {
+    // p large enough that the zero-churn cached body beats the stateless
+    // delta (the 12-byte epoch/count overhead must undercut the nnz
+    // index bytes), so a live cache demonstrably flips the tag
+    let p = 96;
+    let clients = 6;
+    let seed = find_soup_seed(clients);
+    let plan = soup_plan(seed);
+    let layers = one_layer(p);
+
+    for network in [NetworkKind::Ideal, NetworkKind::Simulated] {
+        for target in [MaskTarget::Delta, MaskTarget::Weights] {
+            let ctx = format!("{network:?}/{target:?} seed {seed}");
+            let cfg = || {
+                let mut cfg = base_cfg(clients, Encoding::SparseCached);
+                cfg.network = network;
+                cfg.chaos = Some(plan.clone());
+                cfg
+            };
+            let a = run_chaos_rounds(cfg(), 2, target, p);
+            let b = run_chaos_rounds(cfg(), 2, target, p);
+            assert_eq!(a, b, "{ctx}: outcomes (records/aggregates/tags) diverged");
+
+            // survivor equivalence against a clean *stateless* fold,
+            // round-chained — the reference never sees a cache
+            let mut global = initial_params(p);
+            for t in 1..=2usize {
+                let survivors = surviving_clients(&plan, t, clients);
+                let expected =
+                    clean_fold(&global, &survivors, t, Encoding::SparseDelta, target, &layers);
+                assert_eq!(
+                    a.aggregates[t - 1],
+                    expected,
+                    "{ctx}: round-{t} cached aggregate != clean stateless fold over {survivors:?}"
+                );
+                global = expected;
+            }
+
+            // round 1: nobody holds a cache yet — every upload is a
+            // stateless full-index send
+            for &(c, tag) in &a.tags[0] {
+                assert_eq!(tag, TAG_SPARSE_DELTA, "{ctx}: client {c} sent a delta with no cache");
+            }
+            // round 2: exactly the round-1 survivors hold a live cache
+            // (the fake masks don't churn, so their set-delta is empty and
+            // strictly cheaper); everyone else was invalidated
+            let survivors1 = surviving_clients(&plan, 1, clients);
+            for &(c, tag) in &a.tags[1] {
+                let want = if survivors1.contains(&c) {
+                    TAG_SPARSE_CACHED
+                } else {
+                    TAG_SPARSE_DELTA
+                };
+                assert_eq!(
+                    tag,
+                    want,
+                    "{ctx}: client {c} round-2 tag (round-1 survivor: {})",
+                    survivors1.contains(&c)
+                );
+            }
+            // the seed search guarantees both witnesses exist: at least
+            // one cached send and at least one forced full send
+            assert!(
+                a.tags[1].iter().any(|&(_, t)| t == TAG_SPARSE_CACHED),
+                "{ctx}: no client exercised the cached arm"
+            );
+            assert!(
+                a.tags[1].iter().any(|&(_, t)| t == TAG_SPARSE_DELTA),
+                "{ctx}: no dropped client fell back to a full send"
+            );
         }
     }
 }

@@ -1,0 +1,369 @@
+//! Wire v3 codec torture suite: the cross-round index cache and the
+//! entropy-coded value arms, pinned at the codec + fold level.
+//!
+//! Two contracts (see `docs/WIRE.md` §3b/§4):
+//!
+//! * **Cache coherence** — over multiple rounds of evolving masks
+//!   (churn 0%, churn 100%, k growing and shrinking), a stateful
+//!   `SparseCached` decode is bitwise-equal to the stateless
+//!   `SparseDelta` decode of the same update, and the folded aggregate
+//!   is bitwise-identical across both mask targets and shard counts
+//!   {1, 8}.
+//! * **Strict rejection** — a desynced or malformed payload is a typed
+//!   parse error, never a wrong decode: stale/future cache epochs,
+//!   removed indices the cached set does not hold, added indices that
+//!   collide with it, truncated/overlong Rice streams and non-zero
+//!   padding bits all die before anything folds, and the session cache
+//!   is bit-identical before and after every rejected decode.
+//!
+//! Everything here is engine-free. The end-to-end cache *lifecycle*
+//! (invalidation on drop/disconnect/skip) is pinned by the driver unit
+//! tests and `tests/chaos_scenarios.rs`; this suite owns the wire
+//! format itself.
+
+use std::sync::Arc;
+
+use fedmask::config::experiment::AggregatorKind;
+use fedmask::fl::aggregate::{make_aggregator, Contribution, SparseContribution};
+use fedmask::fl::masking::MaskTarget;
+use fedmask::fl::tree::ShardedAggregator;
+use fedmask::runtime::manifest::LayerInfo;
+use fedmask::transport::codec::{
+    decode_update, decode_update_cached, encode_update, encode_update_cached, DecodedBody,
+    Encoding, WireUpdate, TAG_SPARSE_CACHED, TAG_SPARSE_DELTA, TAG_SPARSE_RICE8,
+};
+use fedmask::transport::session::IndexCache;
+use fedmask::Error;
+
+const P: usize = 64;
+
+fn one_layer(size: usize) -> Vec<LayerInfo> {
+    vec![LayerInfo {
+        name: "w".into(),
+        shape: vec![size],
+        offset: 0,
+        size,
+        masked: true,
+    }]
+}
+
+fn broadcast(p: usize) -> Vec<f32> {
+    (0..p).map(|j| (j as f32 * 0.29).cos()).collect()
+}
+
+/// Dense update carrying a deterministic, provably non-zero value at
+/// each support index (so the encoder's census sees exactly `support`).
+fn update_on(support: &[u32], p: usize, round: u32) -> Vec<f32> {
+    let mut v = vec![0.0f32; p];
+    for &j in support {
+        v[j as usize] = 1.0 + j as f32 * 0.01 + round as f32 * 0.1;
+    }
+    v
+}
+
+fn sparse_of(u: &WireUpdate) -> (Vec<u32>, Vec<f32>) {
+    match &u.body {
+        DecodedBody::Sparse { indices, values } => (indices.clone(), values.clone()),
+        DecodedBody::Dense(_) => panic!("expected a sparse body"),
+    }
+}
+
+/// Serial reference fold: decode every payload (with its session cache)
+/// and stream it into one aggregator.
+fn fold_serial(
+    payloads: &[(Vec<u8>, Option<IndexCache>)],
+    target: MaskTarget,
+    global: &[f32],
+    layers: &[LayerInfo],
+) -> Vec<f32> {
+    let mut agg = make_aggregator(AggregatorKind::FedAvg, target, global, layers).unwrap();
+    for (bytes, cache) in payloads {
+        let u = decode_update_cached(bytes, cache.as_ref()).unwrap();
+        match &u.body {
+            DecodedBody::Dense(v) => agg
+                .fold(Contribution {
+                    client: u.client as usize,
+                    params: v,
+                    n_samples: u.n_samples,
+                })
+                .unwrap(),
+            DecodedBody::Sparse { indices, values } => agg
+                .fold_sparse(SparseContribution {
+                    client: u.client as usize,
+                    p: u.p,
+                    indices,
+                    values,
+                    n_samples: u.n_samples,
+                })
+                .unwrap(),
+        }
+    }
+    agg.finish().unwrap()
+}
+
+/// The same fold routed through the shard tree — each payload decodes on
+/// a worker thread against the cache shipped alongside it.
+fn fold_sharded(
+    payloads: &[(Vec<u8>, Option<IndexCache>)],
+    shards: usize,
+    target: MaskTarget,
+    global: &[f32],
+    layers: &[LayerInfo],
+) -> Vec<f32> {
+    let partials = (0..shards)
+        .map(|_| make_aggregator(AggregatorKind::FedAvg, target, global, layers))
+        .collect::<fedmask::Result<Vec<_>>>()
+        .unwrap();
+    let mut tree = ShardedAggregator::spawn(partials).unwrap();
+    for (bytes, cache) in payloads {
+        let client = fedmask::transport::codec::peek_client(bytes).unwrap();
+        tree.route(client, bytes.clone(), cache.clone().map(Arc::new)).unwrap();
+    }
+    tree.finish().unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Cache coherence: stateful == stateless, five-plus rounds of churn
+// ---------------------------------------------------------------------
+
+/// The per-client mask schedule the property walks: identical support
+/// (churn 0%), a disjoint residue class (churn 100%), k doubling, k
+/// collapsing to 3, then partial churn at the small k.
+fn support_schedule(c: u32) -> Vec<Vec<u32>> {
+    let p = P as u32;
+    vec![
+        (0..p).filter(|j| j % 4 == c % 4).collect(),
+        (0..p).filter(|j| j % 4 == c % 4).collect(),
+        (0..p).filter(|j| j % 4 == (c + 1) % 4).collect(),
+        (0..p).filter(|j| j % 2 == c % 2).collect(),
+        vec![c, c + 8, c + 16],
+        vec![c, c + 8, c + 17, c + 40],
+    ]
+}
+
+/// Six rounds, five clients, every churn regime: the stateful decode is
+/// bitwise the stateless one, per payload and through the fold, for both
+/// mask targets and shard counts {1, 8}. Caches advance every round here
+/// (every fold "accepted"); rejection-driven invalidation is the chaos
+/// suite's job.
+#[test]
+fn cached_decode_is_bitwise_equal_to_stateless_across_churn_regimes() {
+    let clients: Vec<u32> = (0..5).collect();
+    let layers = one_layer(P);
+    let global = broadcast(P);
+    let mut caches: Vec<Option<IndexCache>> = vec![None; clients.len()];
+
+    for r in 0..6usize {
+        let round = (r + 1) as u32;
+        let mut payloads: Vec<(Vec<u8>, Option<IndexCache>)> = Vec::new();
+        let mut stateless_payloads: Vec<(Vec<u8>, Option<IndexCache>)> = Vec::new();
+        for (i, &c) in clients.iter().enumerate() {
+            let support = &support_schedule(c)[r];
+            let update = update_on(support, P, round);
+            let stateless =
+                encode_update(c, round, 10 + c, &update, Encoding::SparseDelta);
+            let cached = encode_update_cached(
+                c,
+                round,
+                10 + c,
+                &update,
+                Encoding::SparseCached,
+                caches[i].as_ref(),
+            );
+
+            // tag economics where they are pinned: no cache means a full
+            // index send; a zero-churn round at k=16 must go stateful
+            // (12-byte epoch/count overhead < 16 index bytes)
+            if r == 0 {
+                assert_eq!(cached[3], TAG_SPARSE_DELTA, "round 1 must be stateless");
+            }
+            if r == 1 {
+                assert_eq!(cached[3], TAG_SPARSE_CACHED, "zero churn at k=16 must cache");
+            }
+
+            // per-payload bitwise equality, sparse view and densified
+            let a = decode_update(&stateless).unwrap();
+            let b = decode_update_cached(&cached, caches[i].as_ref()).unwrap();
+            assert_eq!(
+                sparse_of(&a),
+                sparse_of(&b),
+                "client {c} round {round}: stateful decode != stateless"
+            );
+            assert_eq!(a.clone().into_dense(), b.into_dense());
+
+            payloads.push((cached, caches[i].clone()));
+            stateless_payloads.push((stateless, None));
+            caches[i] = Some(match &caches[i] {
+                Some(prev) => prev.advance(support.clone()),
+                None => IndexCache::first(support.clone()),
+            });
+        }
+
+        // fold equality: serial stateless reference vs serial cached vs
+        // the shard tree at 1 and 8 shards
+        for target in [MaskTarget::Delta, MaskTarget::Weights] {
+            let reference = fold_serial(&stateless_payloads, target, &global, &layers);
+            assert_eq!(
+                reference,
+                fold_serial(&payloads, target, &global, &layers),
+                "{target:?} round {round}: serial cached fold diverged"
+            );
+            for shards in [1usize, 8] {
+                assert_eq!(
+                    reference,
+                    fold_sharded(&payloads, shards, target, &global, &layers),
+                    "{target:?} round {round}: {shards}-shard cached fold diverged"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rejection corpus: every desync is a typed parse error, cache untouched
+// ---------------------------------------------------------------------
+
+/// A canonical tag-7 payload: zero churn against a 16-index first-epoch
+/// cache (large enough that the cached arm wins the length census).
+fn cached_fixture() -> (Vec<u8>, IndexCache) {
+    let support: Vec<u32> = (0..P as u32).filter(|j| j % 4 == 0).collect();
+    let cache = IndexCache::first(support.clone());
+    let update = update_on(&support, P, 2);
+    let payload = encode_update_cached(7, 2, 42, &update, Encoding::SparseCached, Some(&cache));
+    assert_eq!(payload[3], TAG_SPARSE_CACHED, "fixture must exercise the cached arm");
+    (payload, cache)
+}
+
+/// Assert `payload` dies with a typed parse error under `cache`, that
+/// the cache is bit-identical afterwards, and that the same cache still
+/// decodes the known-good payload (no poisoned state anywhere).
+fn assert_rejected(payload: &[u8], cache: &IndexCache, good: &[u8], what: &str) {
+    let before = cache.clone();
+    let err = decode_update_cached(payload, Some(cache))
+        .expect_err(&format!("{what}: malformed payload must not decode"));
+    assert!(matches!(err, Error::Parse(_)), "{what}: want a parse error, got {err}");
+    assert_eq!(*cache, before, "{what}: rejected decode mutated the cache");
+    decode_update_cached(good, Some(cache))
+        .unwrap_or_else(|e| panic!("{what}: cache poisoned for later decodes: {e}"));
+}
+
+#[test]
+fn tag7_without_a_session_cache_is_rejected() {
+    let (payload, cache) = cached_fixture();
+    let err = decode_update(&payload).expect_err("stateless decode of tag 7 must fail");
+    assert!(matches!(err, Error::Parse(_)), "want a parse error, got {err}");
+    // with the cache it still decodes — the payload itself is fine
+    decode_update_cached(&payload, Some(&cache)).unwrap();
+}
+
+#[test]
+fn stale_and_future_cache_epochs_are_rejected() {
+    let (payload, cache) = cached_fixture();
+    // stale payload: the session advanced past the epoch it names
+    let advanced = cache.advance(cache.indices.clone());
+    let update = update_on(&cache.indices, P, 3);
+    let good_for_advanced =
+        encode_update_cached(7, 3, 42, &update, Encoding::SparseCached, Some(&advanced));
+    assert_rejected(&payload, &advanced, &good_for_advanced, "stale epoch");
+    // future payload: epoch bytes (body offset 0 = byte 24) forged ahead
+    // of the session's
+    let mut forged = payload.clone();
+    forged[24..28].copy_from_slice(&5u32.to_le_bytes());
+    assert_rejected(&forged, &cache, &payload, "future epoch");
+}
+
+#[test]
+fn removed_index_not_in_cached_set_is_rejected() {
+    // encode against a cache holding index 0, so the delta removes 0 …
+    let enc_cache = IndexCache::first((0..P as u32).filter(|j| j % 4 == 0).collect());
+    let support: Vec<u32> = enc_cache.indices[1..].to_vec();
+    let update = update_on(&support, P, 2);
+    let payload =
+        encode_update_cached(7, 2, 42, &update, Encoding::SparseCached, Some(&enc_cache));
+    assert_eq!(payload[3], TAG_SPARSE_CACHED);
+    // … and decode against a same-shape cache that never held 0
+    let mut indices = enc_cache.indices.clone();
+    indices[0] = 2;
+    let desynced = IndexCache { epoch: enc_cache.epoch, indices };
+    let good = {
+        let u = update_on(&desynced.indices[1..].to_vec(), P, 2);
+        encode_update_cached(7, 2, 42, &u, Encoding::SparseCached, Some(&desynced))
+    };
+    assert_rejected(&payload, &desynced, &good, "removed index not in cached set");
+}
+
+#[test]
+fn added_index_colliding_with_cached_set_is_rejected() {
+    // encode against a cache without index 2, so the delta adds 2 …
+    let enc_cache = IndexCache::first((0..P as u32).filter(|j| j % 4 == 0).collect());
+    let mut support = enc_cache.indices.clone();
+    support.insert(1, 2);
+    let update = update_on(&support, P, 2);
+    let payload =
+        encode_update_cached(7, 2, 42, &update, Encoding::SparseCached, Some(&enc_cache));
+    assert_eq!(payload[3], TAG_SPARSE_CACHED);
+    // … and decode against a cache that already holds 2
+    let mut indices = enc_cache.indices.clone();
+    indices[0] = 2;
+    let desynced = IndexCache { epoch: enc_cache.epoch, indices };
+    let good = {
+        let u = update_on(&desynced.indices, P, 2);
+        encode_update_cached(7, 2, 42, &u, Encoding::SparseCached, Some(&desynced))
+    };
+    assert_rejected(&payload, &desynced, &good, "added index collides with cached set");
+}
+
+#[test]
+fn truncated_and_overlong_cached_payloads_are_rejected() {
+    let (payload, cache) = cached_fixture();
+    let mut truncated = payload.clone();
+    truncated.pop();
+    assert_rejected(&truncated, &cache, &payload, "truncated cached payload");
+    let mut overlong = payload.clone();
+    overlong.push(0);
+    assert_rejected(&overlong, &cache, &payload, "overlong cached payload");
+}
+
+// ---------------------------------------------------------------------
+// Rice stream strictness (tag 10, AutoQ8's entropy-coded arm)
+// ---------------------------------------------------------------------
+
+/// An `AutoQ8` payload whose length census picks the Rice arm: 9 equal
+/// values over p=64 quantize to all-zero codes, so k=0 and the coded
+/// stream is 9 bits — two bytes, seven of them padding.
+fn rice_fixture() -> Vec<u8> {
+    let support: Vec<u32> = (0..9u32).map(|i| i * 4).collect();
+    let mut update = vec![0.0f32; P];
+    for &j in &support {
+        update[j as usize] = 0.5;
+    }
+    let payload = encode_update(7, 2, 42, &update, Encoding::AutoQ8);
+    assert_eq!(payload[3], TAG_SPARSE_RICE8, "fixture must exercise the Rice arm");
+    decode_update(&payload).unwrap();
+    payload
+}
+
+fn assert_rice_rejected(mutated: &[u8], what: &str) {
+    let err =
+        decode_update(mutated).expect_err(&format!("{what}: malformed payload must not decode"));
+    assert!(matches!(err, Error::Parse(_)), "{what}: want a parse error, got {err}");
+}
+
+#[test]
+fn rice_stream_mutations_are_rejected() {
+    let payload = rice_fixture();
+
+    let mut truncated = payload.clone();
+    truncated.pop();
+    assert_rice_rejected(&truncated, "truncated rice stream");
+
+    let mut overlong = payload.clone();
+    overlong.push(0);
+    assert_rice_rejected(&overlong, "overlong rice stream");
+
+    // bits are packed LSB-first, so bit 7 of the final byte is padding
+    // for any coded stream whose length is not a multiple of 8 bits
+    let mut padded = payload.clone();
+    *padded.last_mut().unwrap() |= 0x80;
+    assert_rice_rejected(&padded, "non-zero rice padding");
+}

@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Median-diff gate over the BENCH_*.json perf trajectories.
+
+Usage: bench_diff.py BASELINE.json FRESH.json [--threshold 1.5]
+
+Compares per-arm `median_ns` between a committed baseline and a fresh
+run of the same bench binary (schema: src/util/bench.rs `write_json` —
+{"schema": 1, "budget_ms": ..., "results": [{"name", "iters",
+"median_ns", "p10_ns", "p90_ns"}]}). Arms present in only one file are
+reported but never gate (new arms land without a baseline; retired arms
+leave one behind). Exits non-zero iff any shared arm's fresh median
+exceeds threshold x its baseline median.
+
+The default threshold is deliberately loose (1.5x): shared CI runners
+are noisy and the p10/p90 spread in the trajectory files regularly
+brackets +/-20%. This gate exists to catch order-of-magnitude cliffs
+(an accidental O(n^2), a lost fast path), not single-digit drift — the
+committed trajectory itself is the fine-grained record.
+
+Stdlib only; no third-party dependencies.
+"""
+
+import argparse
+import json
+import sys
+
+
+def medians(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != 1:
+        sys.exit(f"{path}: unknown bench schema {doc.get('schema')!r}")
+    return {m["name"]: float(m["median_ns"]) for m in doc["results"]}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--threshold", type=float, default=1.5)
+    args = ap.parse_args()
+
+    base = medians(args.baseline)
+    fresh = medians(args.fresh)
+    shared = sorted(base.keys() & fresh.keys())
+    regressions = []
+    for name in shared:
+        ratio = fresh[name] / base[name] if base[name] > 0 else float("inf")
+        marker = "REGRESSION" if ratio > args.threshold else "ok"
+        print(f"{marker:>10}  {ratio:6.2f}x  {name}")
+        if ratio > args.threshold:
+            regressions.append(name)
+    for name in sorted(fresh.keys() - base.keys()):
+        print(f"{'new arm':>10}  {'-':>7}  {name}")
+    for name in sorted(base.keys() - fresh.keys()):
+        print(f"{'retired':>10}  {'-':>7}  {name}")
+
+    if regressions:
+        print(
+            f"\n{len(regressions)} arm(s) regressed past "
+            f"{args.threshold}x: {', '.join(regressions)}",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"\n{len(shared)} shared arm(s) within {args.threshold}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

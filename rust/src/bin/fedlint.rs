@@ -1,0 +1,155 @@
+//! `fedlint` — run the project-invariant static-analysis pass over this
+//! repo's own sources and docs.
+//!
+//! ```text
+//! fedlint [--root <repo-root>] [--deny-all] [--json <path>]
+//! ```
+//!
+//! Prints one `file:line: [rule] message` per finding. With `--deny-all`
+//! (what CI runs) any finding is exit code 1; without it findings are
+//! advisory and the exit code stays 0. `--json` additionally writes a
+//! machine-readable summary. Rules, rationale, and the allowlist syntax
+//! are documented in `rust/docs/LINTS.md`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use fedmask::lint::{self, SourceTree};
+use fedmask::util::json::Json;
+
+fn usage() -> &'static str {
+    concat!(
+        "fedlint — project-invariant static analysis (see rust/docs/LINTS.md)\n\n",
+        "usage: fedlint [--root <repo-root>] [--deny-all] [--json <path>]\n\n",
+        "  --root <path>   repo root to scan (default: auto-detect from cwd)\n",
+        "  --deny-all      exit 1 on any finding (the CI gate)\n",
+        "  --json <path>   write a machine-readable summary\n\n",
+        "suppress a finding with a line comment on (or above) the line:\n",
+        "  // fed", "lint: allow(<rule>) -- <reason>\n",
+    )
+}
+
+/// The repo root is the directory holding `rust/src`: the cwd when run
+/// from the checkout root, its parent when run from `rust/` (where
+/// `cargo run --bin fedlint` puts you).
+fn detect_root() -> Option<PathBuf> {
+    let cwd = std::env::current_dir().ok()?;
+    if cwd.join("rust/src").is_dir() {
+        return Some(cwd);
+    }
+    if cwd.join("src").is_dir() {
+        if let Some(parent) = cwd.parent() {
+            if parent.join("rust/src").is_dir() {
+                return Some(parent.to_path_buf());
+            }
+        }
+    }
+    None
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut root: Option<PathBuf> = None;
+    let mut deny_all = false;
+    let mut json_path: Option<PathBuf> = None;
+    let mut it = argv.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--root" => match it.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--root needs a path\n\n{}", usage());
+                    return ExitCode::from(2);
+                }
+            },
+            "--deny-all" => deny_all = true,
+            "--json" => match it.next() {
+                Some(p) => json_path = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--json needs a path\n\n{}", usage());
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                print!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown argument '{other}'\n\n{}", usage());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let Some(root) = root.or_else(detect_root) else {
+        eprintln!(
+            "fedlint: cannot find a repo root (no rust/src here or one level up); pass --root"
+        );
+        return ExitCode::from(2);
+    };
+
+    let tree = match SourceTree::load(&root) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("fedlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let diags = lint::run(&tree);
+
+    for d in &diags {
+        println!("{}:{}: [{}] {}", d.file, d.line, d.rule, d.message);
+    }
+    println!(
+        "fedlint: {} file(s) scanned, {} finding(s)",
+        tree.files.len(),
+        diags.len()
+    );
+
+    if let Some(path) = &json_path {
+        if let Err(e) = write_summary(path, &tree, &diags) {
+            eprintln!("fedlint: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    if deny_all && !diags.is_empty() {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn write_summary(
+    path: &Path,
+    tree: &SourceTree,
+    diags: &[lint::Diagnostic],
+) -> std::io::Result<()> {
+    let mut rules: Vec<(&str, Json)> = Vec::new();
+    for rule in lint::RULES {
+        let n = diags.iter().filter(|d| d.rule == *rule).count();
+        rules.push((rule, Json::num(n as f64)));
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("files_scanned", Json::num(tree.files.len() as f64)),
+        ("findings", Json::num(diags.len() as f64)),
+        ("rules", Json::obj(rules)),
+        (
+            "diagnostics",
+            Json::Arr(
+                diags
+                    .iter()
+                    .map(|d| {
+                        Json::obj(vec![
+                            ("file", Json::str(&d.file)),
+                            ("line", Json::num(d.line as f64)),
+                            ("rule", Json::str(d.rule)),
+                            ("message", Json::str(&d.message)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(path, doc.to_string() + "\n")
+}

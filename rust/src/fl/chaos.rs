@@ -412,7 +412,11 @@ impl ChaosSink {
             payload.truncate(keep);
         } else {
             let bit = rng.next_below(24) as usize;
-            payload[bit / 8] ^= 1 << (bit % 8);
+            // peek_header succeeded upstream, so >= 24 header bytes exist;
+            // get_mut keeps the ingestion path index-free regardless
+            if let Some(b) = payload.get_mut(bit / 8) {
+                *b ^= 1 << (bit % 8);
+            }
         }
         payload
     }

@@ -26,6 +26,7 @@ pub mod config;
 pub mod data;
 pub mod figures;
 pub mod fl;
+pub mod lint;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

@@ -1,0 +1,193 @@
+//! Rule `config-drift`: every `ExperimentConfig` field keeps its whole
+//! surface in step.
+//!
+//! A config knob reaches users through up to four doors: the struct
+//! field, its JSON key (hand-rolled serde in `config/experiment.rs` —
+//! one mention encoding, one decoding), a CLI override flag, and a doc
+//! mention where the knob changes wire or scale behavior. Past PRs have
+//! drifted here in both directions (a field with no CLI override, a doc
+//! describing a knob by a stale name), so the registry below is explicit
+//! and exhaustive: a new field that is not classified is a diagnostic,
+//! as is a classified field that no longer exists.
+
+use super::source::{is_ident, match_brace, Diagnostic, SourceFile, SourceTree};
+
+pub const RULE: &str = "config-drift";
+
+const EXPERIMENT_RS: &str = "rust/src/config/experiment.rs";
+/// Files that may define an override flag for a field.
+const CLI_FILES: &[&str] = &["src/main.rs", "figures/common.rs"];
+
+/// One field's declared surface: the JSON key is always the field name;
+/// `cli` is the override flag (quoted somewhere in the CLI opt tables);
+/// `doc` is the doc page that must mention the field by name.
+pub struct Entry {
+    pub field: &'static str,
+    pub cli: Option<&'static str>,
+    pub doc: Option<&'static str>,
+}
+
+const fn entry(field: &'static str, cli: Option<&'static str>, doc: Option<&'static str>) -> Entry {
+    Entry { field, cli, doc }
+}
+
+/// The registry. Keep in step with `ExperimentConfig` and `docs/LINTS.md`.
+pub const TABLE: &[Entry] = &[
+    entry("label", None, None),
+    entry("model", None, None),
+    entry("clients", Some("clients"), None),
+    entry("rounds", Some("rounds"), None),
+    entry("local_epochs", None, None),
+    entry("lr", None, None),
+    entry("sampling", None, None),
+    entry("min_clients", None, None),
+    entry("masking", None, None),
+    entry("mask_target", None, None),
+    entry("partition", None, None),
+    entry("n_train", None, None),
+    entry("n_test", None, None),
+    entry("seed", Some("seed"), None),
+    entry("eval_every", None, None),
+    entry("eval_max_chunks", None, None),
+    entry("ack_prob", Some("ack-prob"), None),
+    entry("straggler_prob", Some("straggler-prob"), None),
+    entry("compute_mean_s", None, None),
+    entry("compute_jitter", Some("compute-jitter"), None),
+    entry("availability_seed", None, None),
+    entry("network", None, None),
+    entry("encoding", Some("encoding"), Some("WIRE.md")),
+    entry("transport", Some("transport"), None),
+    entry("downlink_delta", Some("downlink-delta"), Some("WIRE.md")),
+    entry("aggregator", None, None),
+    entry("workers", Some("workers"), None),
+    entry("drain_poll_ms", Some("drain-poll-ms"), Some("SCALE.md")),
+    entry("agg_shards", Some("agg-shards"), Some("SCALE.md")),
+    entry("max_conns", Some("max-conns"), Some("SCALE.md")),
+    entry("chaos", Some("chaos-seed"), None),
+];
+
+pub fn check(tree: &SourceTree) -> Vec<Diagnostic> {
+    check_with(tree, TABLE)
+}
+
+pub fn check_with(tree: &SourceTree, table: &[Entry]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let Some(exp) = tree.file("config/experiment.rs") else {
+        out.push(Diagnostic {
+            file: EXPERIMENT_RS.to_string(),
+            line: 1,
+            rule: RULE,
+            message: "config-drift scope file missing from the tree".to_string(),
+        });
+        return out;
+    };
+    let Some(fields) = struct_fields(exp, "ExperimentConfig") else {
+        out.push(exp.diag_line(RULE, 1, "struct ExperimentConfig not found".to_string()));
+        return out;
+    };
+
+    for (field, offset) in &fields {
+        let Some(e) = table.iter().find(|e| e.field == field.as_str()) else {
+            out.push(exp.diag(
+                RULE,
+                *offset,
+                format!(
+                    "unclassified config field `{field}` — add it to lint::config_drift::TABLE"
+                ),
+            ));
+            continue;
+        };
+        // serde: the hand-rolled codec quotes the key once to encode and
+        // once to decode; fewer mentions means one side lost the field
+        let key = format!("\"{field}\"");
+        let mentions = exp.raw.matches(&key).count();
+        if mentions < 2 {
+            out.push(exp.diag(
+                RULE,
+                *offset,
+                format!(
+                    "serde key {key} appears {mentions}x in experiment.rs — need encode and decode"
+                ),
+            ));
+        }
+        if let Some(flag) = e.cli {
+            let quoted = format!("\"{flag}\"");
+            let in_cli = CLI_FILES
+                .iter()
+                .filter_map(|s| tree.file(s))
+                .any(|f| f.raw.contains(&quoted));
+            if !in_cli {
+                out.push(exp.diag(
+                    RULE,
+                    *offset,
+                    format!(
+                        "config field `{field}` declares CLI flag --{flag}, \
+                         but no opt table quotes {quoted}"
+                    ),
+                ));
+            }
+        }
+        if let Some(doc) = e.doc {
+            let mentioned = tree.file(doc).is_some_and(|f| f.raw.contains(field.as_str()));
+            if !mentioned {
+                out.push(exp.diag(
+                    RULE,
+                    *offset,
+                    format!("config field `{field}` must be mentioned by name in docs/{doc}"),
+                ));
+            }
+        }
+    }
+
+    for e in table {
+        if !fields.iter().any(|(f, _)| f == e.field) {
+            out.push(exp.diag_line(
+                RULE,
+                1,
+                format!(
+                    "stale entry: lint::config_drift::TABLE lists `{}` \
+                     but ExperimentConfig has no such field",
+                    e.field
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// `(field name, byte offset)` for each `pub name: Type,` line of the
+/// struct's block, parsed from masked source.
+fn struct_fields(file: &SourceFile, name: &str) -> Option<Vec<(String, usize)>> {
+    let needle = format!("struct {name}");
+    let at = file.masked.find(&needle)?;
+    let open = at + file.masked.get(at..)?.find('{')?;
+    let close = match_brace(file.masked.as_bytes(), open)?;
+    let body = file.masked.get(open + 1..close)?;
+    let b = body.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = body.get(from..).and_then(|s| s.find("pub ")) {
+        let field_at = from + rel;
+        from = field_at + 4;
+        if field_at > 0 && b.get(field_at - 1).is_some_and(|&p| is_ident(p)) {
+            continue;
+        }
+        let mut i = field_at + 4;
+        while b.get(i).is_some_and(|&c| c == b' ') {
+            i += 1;
+        }
+        let start = i;
+        while b.get(i).is_some_and(|&c| is_ident(c)) {
+            i += 1;
+        }
+        // a field is `pub ident:` — methods (`pub fn`) and nested items
+        // fall out on the colon test
+        if i > start && b.get(i).copied() == Some(b':') {
+            let field = body.get(start..i)?.to_string();
+            if field != "crate" {
+                out.push((field, open + 1 + field_at));
+            }
+        }
+    }
+    Some(out)
+}

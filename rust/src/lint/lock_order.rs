@@ -1,0 +1,296 @@
+//! Rule `lock-order`: the socket reactor's mutex acquisition graph must
+//! stay acyclic.
+//!
+//! `transport/socket.rs` is the one concurrent hot path in the repo: the
+//! reactor thread, the drain loop, the downlink writer, and the client
+//! handles all share state behind `Mutex`es (`io` per connection, the
+//! session shards, the `conns` registry). Two threads taking the same
+//! pair of locks in opposite orders is a deadlock that no test reliably
+//! reproduces — exactly the class a static pass should own. This rule
+//! extracts every `.lock()` call, classifies the guard as *held* (bound
+//! by `let` / `if let` / `while let`, so it lives to the end of its
+//! block) or *temporary* (a chained call like
+//! `.lock().map_err(..)?.get(..)`, dropped at the end of the statement),
+//! records an edge A→B whenever B is acquired inside A's hold extent,
+//! and reports any cycle in the resulting graph. The reactor today
+//! never holds two locks at once, which is the strongest order of all —
+//! this rule keeps it that way.
+
+use std::collections::BTreeMap;
+
+use super::source::{is_ident, Diagnostic, SourceFile, SourceTree};
+
+pub const RULE: &str = "lock-order";
+
+const SOCKET_RS: &str = "rust/src/transport/socket.rs";
+
+/// One lock acquisition: which mutex (last path segment of the receiver),
+/// where, in which fn, and — when held — how far the guard lives.
+struct Acquire {
+    name: String,
+    offset: usize,
+    fn_name: String,
+    hold_until: Option<usize>,
+}
+
+pub fn check(tree: &SourceTree) -> Vec<Diagnostic> {
+    let Some(file) = tree.file("transport/socket.rs") else {
+        return vec![Diagnostic {
+            file: SOCKET_RS.to_string(),
+            line: 1,
+            rule: RULE,
+            message: "lock-order scope file missing from the tree".to_string(),
+        }];
+    };
+    let mut acquires: Vec<Acquire> = Vec::new();
+    for f in file.fns().iter().filter(|f| !f.in_test) {
+        collect(file, &f.name, f.body_start, f.body_end, &mut acquires);
+    }
+
+    // edge A -> B: B acquired while A's guard is held (same fn body, so
+    // nested fns — which get their own spans — don't leak extents)
+    let mut edges: BTreeMap<(String, String), (usize, String)> = BTreeMap::new();
+    for a in &acquires {
+        let Some(until) = a.hold_until else { continue };
+        for b in &acquires {
+            if b.offset > a.offset && b.offset < until && b.fn_name == a.fn_name {
+                edges
+                    .entry((a.name.clone(), b.name.clone()))
+                    .or_insert((b.offset, b.fn_name.clone()));
+            }
+        }
+    }
+
+    // report every edge that closes a cycle (DFS back edge), at the
+    // acquisition that completes the cycle
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (from, to) in edges.keys() {
+        adj.entry(from.as_str()).or_default().push(to.as_str());
+    }
+    let mut out = Vec::new();
+    for ((from, to), (offset, fn_name)) in &edges {
+        if reaches(&adj, to, from) {
+            out.push(file.diag(
+                RULE,
+                *offset,
+                format!(
+                    "cyclic lock order: `{to}` acquired while holding `{from}` (fn `{fn_name}`), \
+                     and another path acquires `{from}` while holding `{to}`"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Is `goal` reachable from `start` along held-while-acquiring edges?
+fn reaches(adj: &BTreeMap<&str, Vec<&str>>, start: &str, goal: &str) -> bool {
+    let mut stack = vec![start];
+    let mut seen = vec![start];
+    while let Some(n) = stack.pop() {
+        if n == goal {
+            return true;
+        }
+        for &next in adj.get(n).into_iter().flatten() {
+            if !seen.contains(&next) {
+                seen.push(next);
+                stack.push(next);
+            }
+        }
+    }
+    false
+}
+
+fn collect(file: &SourceFile, fn_name: &str, start: usize, end: usize, out: &mut Vec<Acquire>) {
+    let m = file.masked.as_bytes();
+    let body = file.masked.get(start..=end).unwrap_or("");
+    let mut from = 0usize;
+    while let Some(rel) = body.find_at(from, ".lock()") {
+        let at = start + rel;
+        from = rel + 7;
+        let Some(name) = receiver_name(m, at) else {
+            continue;
+        };
+        let after = skip_adapters(m, at + 7);
+        let hold_until = if m.get(after).copied() == Some(b'.') {
+            // the guard is consumed by a further chained call and dropped
+            // at the end of this statement — a temporary
+            None
+        } else {
+            match statement_kind(m, at, start) {
+                StmtKind::Let => Some(block_end(m, after, end)),
+                StmtKind::CondLet => next_block_end(m, after, end),
+                StmtKind::Other => None,
+            }
+        };
+        out.push(Acquire {
+            name,
+            offset: at,
+            fn_name: fn_name.to_string(),
+            hold_until,
+        });
+    }
+}
+
+/// `str::find` from a byte offset; tiny shim so the scan above reads
+/// linearly.
+trait FindAt {
+    fn find_at(&self, from: usize, needle: &str) -> Option<usize>;
+}
+
+impl FindAt for str {
+    fn find_at(&self, from: usize, needle: &str) -> Option<usize> {
+        self.get(from..)?.find(needle).map(|r| from + r)
+    }
+}
+
+/// Last path segment of the receiver expression before `.lock()`:
+/// `self.io.lock()` → `io`; `self.shard(client).lock()` → `shard`.
+/// Whitespace between chain segments (rustfmt's multi-line chains) is
+/// skipped.
+fn receiver_name(m: &[u8], dot: usize) -> Option<String> {
+    let mut k = dot;
+    while k > 0 && matches!(m.get(k - 1), Some(b' ' | b'\n')) {
+        k -= 1;
+    }
+    if k == 0 {
+        return None;
+    }
+    if m.get(k - 1).copied() == Some(b')') {
+        // a call: skip the balanced argument list, then read the callee
+        let mut depth = 0usize;
+        let mut j = k - 1;
+        loop {
+            match m.get(j).copied() {
+                Some(b')') => depth += 1,
+                Some(b'(') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j = j.checked_sub(1)?;
+        }
+        k = j;
+    }
+    let end = k;
+    let mut s = k;
+    while s > 0 && m.get(s - 1).is_some_and(|&c| is_ident(c)) {
+        s -= 1;
+    }
+    if s == end {
+        return None;
+    }
+    std::str::from_utf8(m.get(s..end)?).ok().map(str::to_string)
+}
+
+/// Step past the adapter chain that unwraps a `LockResult` without
+/// keeping a second handle: `?`, `.unwrap()`, `.expect(..)`,
+/// `.map_err(..)`, `.unwrap_or_else(..)`, `.ok()`. Returns the offset of
+/// the first byte after the chain (whitespace skipped).
+fn skip_adapters(m: &[u8], mut i: usize) -> usize {
+    loop {
+        while matches!(m.get(i), Some(b' ' | b'\n')) {
+            i += 1;
+        }
+        if m.get(i).copied() == Some(b'?') {
+            i += 1;
+            continue;
+        }
+        let mut matched = false;
+        for adapter in [".unwrap", ".expect", ".map_err", ".unwrap_or_else", ".ok"] {
+            let end = i + adapter.len();
+            if m.get(i..end).is_some_and(|s| s == adapter.as_bytes())
+                && m.get(end).copied() == Some(b'(')
+            {
+                // skip the balanced argument list
+                let mut depth = 0usize;
+                let mut j = end;
+                while let Some(&c) = m.get(j) {
+                    match c {
+                        b'(' => depth += 1,
+                        b')' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                i = j + 1;
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            return i;
+        }
+    }
+}
+
+enum StmtKind {
+    Let,
+    CondLet,
+    Other,
+}
+
+/// Classify the statement containing the `.lock()` at `at` by scanning
+/// back to the previous `;`, `{`, or `}` and reading its first tokens.
+fn statement_kind(m: &[u8], at: usize, floor: usize) -> StmtKind {
+    let mut s = at;
+    while s > floor && !matches!(m.get(s - 1), Some(b';' | b'{' | b'}')) {
+        s -= 1;
+    }
+    let head: String = m
+        .get(s..at)
+        .unwrap_or(&[])
+        .iter()
+        .map(|&c| c as char)
+        .collect();
+    let head = head.trim_start();
+    if head.starts_with("if let ") || head.starts_with("while let ") {
+        StmtKind::CondLet
+    } else if head.starts_with("let ") {
+        StmtKind::Let
+    } else {
+        StmtKind::Other
+    }
+}
+
+/// End of the innermost block enclosing `from`: the first `}` that
+/// closes a brace we never saw open. The guard of a `let` lives to here.
+fn block_end(m: &[u8], from: usize, limit: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = from;
+    while i <= limit {
+        match m.get(i).copied() {
+            Some(b'{') => depth += 1,
+            Some(b'}') => {
+                if depth == 0 {
+                    return i;
+                }
+                depth -= 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    limit
+}
+
+/// End of the block a conditional binding guards: the match of the next
+/// `{` after the condition.
+fn next_block_end(m: &[u8], from: usize, limit: usize) -> Option<usize> {
+    let mut i = from;
+    while i <= limit {
+        if m.get(i).copied() == Some(b'{') {
+            return Some(super::source::match_brace(m, i).unwrap_or(limit));
+        }
+        i += 1;
+    }
+    None
+}

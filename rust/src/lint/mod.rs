@@ -1,0 +1,72 @@
+//! fedlint — a project-invariant static-analysis pass over this repo's
+//! own sources and docs.
+//!
+//! Rustc and clippy check what any Rust program must satisfy; fedlint
+//! checks what *this* program promised. Each rule pins an invariant a
+//! previous PR established in prose (`docs/WIRE.md`, `docs/SCALE.md`)
+//! or in review discipline, so the promise breaks a build instead of
+//! silently rotting:
+//!
+//! * [`wire_spec`] — the constants in `transport/{frame,codec}.rs` and
+//!   the grammar tables in `docs/WIRE.md` describe the same wire format.
+//! * [`pre_decode`] — no codec decode on a frame payload before
+//!   `validate_upload` has vouched for the session.
+//! * [`panic_free`] — the untrusted-input paths (frame reader, codec
+//!   decode, chaos ingestion) contain no panicking constructs.
+//! * [`config_drift`] — every `ExperimentConfig` field keeps its serde
+//!   key, CLI flag, and doc mention in step.
+//! * [`lock_order`] — the socket reactor's lock acquisition graph stays
+//!   acyclic.
+//!
+//! A finding is suppressed only by an inline annotation in a line
+//! comment — the `fedlint:` marker followed by `allow(<rule>) -- <reason>`
+//! (exact syntax in `docs/LINTS.md`). The annotation covers its own line
+//! and the next; the reason is mandatory and a malformed annotation is
+//! itself a diagnostic ([`source::ALLOWLIST_RULE`]) that nothing can
+//! suppress.
+//!
+//! The pass is pure std and runs without the `xla` feature:
+//! `cargo run --bin fedlint --no-default-features -- --deny-all`.
+
+pub mod config_drift;
+pub mod lock_order;
+pub mod panic_free;
+pub mod pre_decode;
+pub mod source;
+pub mod wire_spec;
+
+pub use source::{Diagnostic, SourceTree};
+
+/// Every rule fedlint knows, including the meta-rule that validates the
+/// allowlist annotations themselves.
+pub const RULES: &[&str] = &[
+    source::ALLOWLIST_RULE,
+    wire_spec::RULE,
+    pre_decode::RULE,
+    panic_free::RULE,
+    config_drift::RULE,
+    lock_order::RULE,
+];
+
+/// Run every rule over `tree`, then apply allowlist suppression and sort.
+pub fn run(tree: &SourceTree) -> Vec<Diagnostic> {
+    let mut diags = source::check_annotations(tree);
+    diags.extend(wire_spec::check(tree));
+    diags.extend(pre_decode::check(tree));
+    diags.extend(panic_free::check(tree));
+    diags.extend(config_drift::check(tree));
+    diags.extend(lock_order::check(tree));
+    apply_allowlist(tree, diags)
+}
+
+/// Drop diagnostics covered by a well-formed allowlist annotation and
+/// return the rest sorted by (file, line, rule). [`source::ALLOWLIST_RULE`]
+/// findings are never suppressible — a broken annotation must not hide
+/// itself.
+pub fn apply_allowlist(tree: &SourceTree, mut diags: Vec<Diagnostic>) -> Vec<Diagnostic> {
+    diags.retain(|d| d.rule == source::ALLOWLIST_RULE || !tree.is_allowed(d));
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    diags
+}

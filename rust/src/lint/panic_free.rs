@@ -1,0 +1,186 @@
+//! Rule `panic-free`: the code paths that touch untrusted bytes must not
+//! contain panicking constructs.
+//!
+//! A panic on the wire path is a remote denial of service: one malformed
+//! peer takes down the reactor thread servicing everyone else. The frame
+//! reader, the codec decode path, the quantizer decode helpers, and the
+//! chaos harness's ingestion path (which feeds deliberately corrupted
+//! bytes through the same code) must therefore reject with typed errors,
+//! never panic. This rule forbids, inside the scoped functions:
+//!
+//! * `.unwrap()`, `.expect(...)` (the `_or` family is fine — it does not
+//!   panic),
+//! * `panic!`, `unreachable!`, `todo!`, `unimplemented!`,
+//! * direct slice/array indexing `x[i]` — use `.get()`, pattern
+//!   matching, or iterators; a genuinely bounds-proven index can carry
+//!   an allowlist annotation with the proof as the reason.
+//!
+//! The scope is a fixed table ([`SCOPE`]) rather than an attribute so
+//! that renaming or deleting a scoped fn is itself a diagnostic — the
+//! protection cannot silently rot away with a refactor. Encode-side
+//! helpers (which run on our own trusted tensors) and `#[cfg(test)]`
+//! code are deliberately out of scope.
+
+use super::source::{is_ident, Diagnostic, SourceFile, SourceTree};
+
+pub const RULE: &str = "panic-free";
+
+/// `(file suffix, scoped fn names)`; `None` scopes every non-test fn in
+/// the file.
+pub type Scope = &'static [(&'static str, Option<&'static [&'static str]>)];
+
+/// The untrusted-input surface. Keep in step with `docs/LINTS.md`.
+pub const SCOPE: Scope = &[
+    // frame reader/writer: first code to touch peer bytes
+    ("rust/src/transport/frame.rs", None),
+    // codec decode path (encode side runs on trusted local tensors)
+    (
+        "rust/src/transport/codec.rs",
+        Some(&[
+            "peek_client",
+            "peek_header",
+            "decode_update",
+            "decode_update_cached",
+            "decode_update_view",
+            "decode_update_view_cached",
+            "decode_into",
+            "take",
+            "take1",
+            "le_f32",
+            "le_u32",
+            "body",
+            "read_varint",
+            "read_delta_block",
+            "merge_cached_indices",
+            "check_q4_padding",
+            "check_sparse_index",
+        ]),
+    ),
+    // quantizer decode helpers (dequantize feeds on wire-supplied codes)
+    (
+        "rust/src/transport/quantize.rs",
+        Some(&["rice_decode", "q4_code", "dequantize", "dequantize4"]),
+    ),
+    // chaos ingestion: the path that must survive the faults it injects
+    (
+        "rust/src/fl/chaos.rs",
+        Some(&[
+            "send",
+            "send_downlink",
+            "recv",
+            "try_recv_for",
+            "absorb",
+            "flush_stash",
+            "corrupt",
+        ]),
+    ),
+];
+
+const MACRO_TOKENS: &[&str] = &["panic!", "unreachable!", "todo!", "unimplemented!"];
+
+pub fn check(tree: &SourceTree) -> Vec<Diagnostic> {
+    check_with(tree, SCOPE)
+}
+
+pub fn check_with(tree: &SourceTree, scope: Scope) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (suffix, fns) in scope {
+        let Some(file) = tree.file(suffix) else {
+            out.push(Diagnostic {
+                file: (*suffix).to_string(),
+                line: 1,
+                rule: RULE,
+                message: "panic-free scope file missing from the tree — \
+                          update lint::panic_free::SCOPE"
+                    .to_string(),
+            });
+            continue;
+        };
+        match fns {
+            None => {
+                for f in file.fns().iter().filter(|f| !f.in_test) {
+                    scan_fn(file, &f.name, f.body_start, f.body_end, &mut out);
+                }
+            }
+            Some(names) => {
+                for name in *names {
+                    let mut found = false;
+                    for f in file.fns().iter().filter(|f| !f.in_test && f.name == *name) {
+                        found = true;
+                        scan_fn(file, &f.name, f.body_start, f.body_end, &mut out);
+                    }
+                    if !found {
+                        out.push(file.diag_line(
+                            RULE,
+                            1,
+                            format!(
+                                "scoped fn `{name}` not found — update lint::panic_free::SCOPE"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn scan_fn(file: &SourceFile, name: &str, start: usize, end: usize, out: &mut Vec<Diagnostic>) {
+    let body = file.masked.get(start..=end).unwrap_or("");
+    let b = body.as_bytes();
+
+    // method-style panics: exact `.unwrap()` (so `.unwrap_or(..)` passes)
+    // and `.expect(` (so `.expect_err(` in result-shape tests passes)
+    for (token, label) in [(".unwrap()", ".unwrap()"), (".expect(", ".expect(..)")] {
+        let mut from = 0usize;
+        while let Some(rel) = body.get(from..).and_then(|s| s.find(token)) {
+            let at = from + rel;
+            from = at + token.len();
+            out.push(file.diag(
+                RULE,
+                start + at,
+                format!("`{label}` in panic-free fn `{name}` — return a typed error instead"),
+            ));
+        }
+    }
+
+    for token in MACRO_TOKENS {
+        let mut from = 0usize;
+        while let Some(rel) = body.get(from..).and_then(|s| s.find(token)) {
+            let at = from + rel;
+            from = at + token.len();
+            // word boundary on the left so an ident like `my_panic!` does
+            // not count; a path-qualified `std::panic!` still does
+            let before_ok = b.get(at.wrapping_sub(1)).is_none_or(|&p| !is_ident(p));
+            if before_ok {
+                out.push(file.diag(
+                    RULE,
+                    start + at,
+                    format!(
+                        "`{token}` in panic-free fn `{name}` — reject with a typed error instead"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // direct indexing: a `[` is an index expression exactly when it is
+    // postfix — glued to an expression tail. `vec![`, `#[attr]`,
+    // `let [a, b] =`, `: [u8; 4]`, `= [0; n]` all have a non-expression
+    // byte immediately before the bracket and pass.
+    for (k, &c) in b.iter().enumerate() {
+        if c != b'[' {
+            continue;
+        }
+        let prev = k.checked_sub(1).and_then(|p| b.get(p)).copied().unwrap_or(0);
+        if is_ident(prev) || prev == b')' || prev == b']' || prev == b'?' {
+            out.push(file.diag(
+                RULE,
+                start + k,
+                format!(
+                    "direct indexing in panic-free fn `{name}` — use .get(), patterns, or iterators"
+                ),
+            ));
+        }
+    }
+}

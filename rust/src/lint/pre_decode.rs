@@ -1,0 +1,100 @@
+//! Rule `pre-decode`: in any function that handles wire frames, a codec
+//! decode must be dominated by the session check.
+//!
+//! WIRE.md §1b promises that an upload payload "never reaches the
+//! aggregation loop" before `validate_upload` has matched the frame
+//! token and the claimed client id against the session. The codec is
+//! hardened, but hardened is not licensed: decoding an unvouched
+//! payload spends budget on an unauthenticated peer and widens the
+//! attack surface a PR at a time. This rule makes the discipline
+//! mechanical: inside any fn whose signature mentions the [`Frame`]
+//! type, every `decode_update*` / `decode_into` call must be textually
+//! preceded by a `validate_upload(` call in the same body. (Textual
+//! order approximates dominance; a guard in a dead branch is a code
+//! smell this rule is allowed to miss — the reviewer is not.)
+//!
+//! [`Frame`]: ../../transport/frame/struct.Frame.html
+
+use super::source::{is_ident, Diagnostic, SourceTree};
+
+pub const RULE: &str = "pre-decode";
+
+/// Calls that materialize an untrusted payload's body.
+const DECODE_PREFIX: &str = "decode_update";
+const DECODE_INTO: &str = "decode_into(";
+/// The session check that must come first.
+const GUARD: &str = "validate_upload(";
+
+pub fn check(tree: &SourceTree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for file in &tree.files {
+        if !file.path.ends_with(".rs") {
+            continue;
+        }
+        let m = file.masked.as_bytes();
+        for f in file.fns() {
+            if f.in_test {
+                continue;
+            }
+            let sig = file.masked.get(f.sig_start..f.body_start).unwrap_or("");
+            if !contains_word(sig, "Frame") {
+                continue;
+            }
+            let body = file.masked.get(f.body_start..=f.body_end).unwrap_or("");
+            let guard_at = body.find(GUARD).map(|r| f.body_start + r);
+            for off in decode_calls(body, m, f.body_start) {
+                if guard_at.is_none_or(|g| g > off) {
+                    out.push(file.diag(
+                        RULE,
+                        off,
+                        format!(
+                            "fn `{}` handles a Frame but decodes the payload without a \
+                             preceding validate_upload() (WIRE.md §1b pre-decode discipline)",
+                            f.name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Whole-word occurrence test (so `FrameKind` does not count as `Frame`).
+fn contains_word(hay: &str, word: &str) -> bool {
+    let b = hay.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = hay.get(from..).and_then(|s| s.find(word)) {
+        let at = from + rel;
+        from = at + word.len();
+        let before = at == 0 || b.get(at.wrapping_sub(1)).is_none_or(|&p| !is_ident(p));
+        let after = b.get(at + word.len()).is_none_or(|&n| !is_ident(n));
+        if before && after {
+            return true;
+        }
+    }
+    false
+}
+
+/// File offsets of decode-call tokens inside `body` (which starts at
+/// file offset `base`). `decode_update` is a prefix match so the
+/// `_cached` / `_view` variants all count; both tokens require a word
+/// boundary on the left so a local `redecode_update` cannot hide one.
+fn decode_calls(body: &str, file_masked: &[u8], base: usize) -> Vec<usize> {
+    let mut offs = Vec::new();
+    for token in [DECODE_PREFIX, DECODE_INTO] {
+        let mut from = 0usize;
+        while let Some(rel) = body.get(from..).and_then(|s| s.find(token)) {
+            let at = from + rel;
+            from = at + token.len();
+            let abs = base + at;
+            let before_ok = file_masked.get(abs.wrapping_sub(1)).is_none_or(|&p| !is_ident(p));
+            if before_ok {
+                offs.push(abs);
+            }
+        }
+    }
+    offs.sort_unstable();
+    offs.dedup();
+    offs
+}

@@ -1,0 +1,615 @@
+//! Lexical groundwork for the fedlint rules: source loading, comment and
+//! string masking, function spans, test-module spans, line lookup, and the
+//! inline allowlist annotations.
+//!
+//! The masking pass is the load-bearing trick: `masked` is a byte-for-byte
+//! copy of the file where every comment, string literal, and char literal
+//! is blanked to spaces (newlines kept, so offsets and line numbers agree
+//! with the original). Rules scan `masked` for code tokens — a `.unwrap()`
+//! inside a doc comment or an error-message string can never fire — and
+//! scan `raw` only for things that *live* in comments or strings (the
+//! allowlist annotations, quoted CLI flag names, serde keys).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+
+/// The meta-rule name for malformed allowlist annotations.
+pub const ALLOWLIST_RULE: &str = "allowlist-syntax";
+
+/// One finding: where, which rule, and what is wrong.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Root-relative path, `/`-separated (e.g. `rust/src/transport/frame.rs`).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// One parsed inline allowlist annotation (`allow(<rule>) -- <reason>`
+/// in a line comment after the `fedlint:` marker; full syntax in
+/// `docs/LINTS.md`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    /// 1-based line the annotation sits on. A trailing annotation covers
+    /// its own line; a standalone comment line covers the next line.
+    pub line: usize,
+    pub rule: String,
+    pub has_reason: bool,
+}
+
+/// One function found by the span scanner.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    /// Byte offset of the `fn` keyword.
+    pub sig_start: usize,
+    /// Byte offset of the body's opening `{`.
+    pub body_start: usize,
+    /// Byte offset of the body's closing `}` (inclusive end of the fn).
+    pub body_end: usize,
+    /// True when the fn lives inside a `#[cfg(test)] mod` block.
+    pub in_test: bool,
+}
+
+/// One loaded file plus everything the rules need to scan it.
+#[derive(Debug)]
+pub struct SourceFile {
+    pub path: String,
+    pub raw: String,
+    pub masked: String,
+    line_starts: Vec<usize>,
+    fns: Vec<FnSpan>,
+    pub allows: Vec<Allow>,
+}
+
+impl SourceFile {
+    fn load_rust(path: String, raw: String) -> SourceFile {
+        let masked = mask_rust(&raw);
+        let line_starts = line_starts(&raw);
+        let test_spans = test_spans(&masked);
+        let fns = fn_spans(&masked, &test_spans);
+        let allows = parse_allows(&raw);
+        SourceFile {
+            path,
+            raw,
+            masked,
+            line_starts,
+            fns,
+            allows,
+        }
+    }
+
+    fn load_doc(path: String, raw: String) -> SourceFile {
+        let masked = raw.clone();
+        let line_starts = line_starts(&raw);
+        SourceFile {
+            path,
+            raw,
+            masked,
+            line_starts,
+            fns: Vec::new(),
+            allows: Vec::new(),
+        }
+    }
+
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, offset: usize) -> usize {
+        self.line_starts.partition_point(|&s| s <= offset)
+    }
+
+    /// 1-based line of the first raw-text occurrence of `needle`.
+    pub fn find_line(&self, needle: &str) -> Option<usize> {
+        self.raw.find(needle).map(|off| self.line_of(off))
+    }
+
+    pub fn fns(&self) -> &[FnSpan] {
+        &self.fns
+    }
+
+    /// Build a diagnostic anchored at a byte offset in this file.
+    pub fn diag(&self, rule: &'static str, offset: usize, message: String) -> Diagnostic {
+        Diagnostic {
+            file: self.path.clone(),
+            line: self.line_of(offset),
+            rule,
+            message,
+        }
+    }
+
+    /// Build a diagnostic anchored at a 1-based line in this file.
+    pub fn diag_line(&self, rule: &'static str, line: usize, message: String) -> Diagnostic {
+        Diagnostic {
+            file: self.path.clone(),
+            line,
+            rule,
+            message,
+        }
+    }
+}
+
+/// Every source and doc file fedlint scans, loaded from a repo root.
+#[derive(Debug)]
+pub struct SourceTree {
+    pub root: PathBuf,
+    pub files: Vec<SourceFile>,
+}
+
+impl SourceTree {
+    /// Load `rust/src/**/*.rs` and `rust/docs/**/*.md` under `root`.
+    /// `rust/tests/` is deliberately not scanned: that is where the lint
+    /// fixture corpus (seeded violations) lives.
+    pub fn load(root: &Path) -> Result<SourceTree> {
+        let src = root.join("rust/src");
+        if !src.is_dir() {
+            return Err(Error::invalid(format!(
+                "{} does not look like a repo root (no rust/src)",
+                root.display()
+            )));
+        }
+        let mut paths = Vec::new();
+        walk(&src, "rs", &mut paths)?;
+        let docs = root.join("rust/docs");
+        if docs.is_dir() {
+            walk(&docs, "md", &mut paths)?;
+        }
+        let mut files = Vec::new();
+        for p in paths {
+            let raw = fs::read_to_string(&p)?;
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+                files.push(SourceFile::load_rust(rel, raw));
+            } else {
+                files.push(SourceFile::load_doc(rel, raw));
+            }
+        }
+        Ok(SourceTree {
+            root: root.to_path_buf(),
+            files,
+        })
+    }
+
+    /// Look a file up by path suffix (e.g. `transport/frame.rs`).
+    pub fn file(&self, suffix: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path.ends_with(suffix))
+    }
+
+    /// True when `d` is covered by a well-formed allowlist annotation for
+    /// its rule. A malformed annotation (unknown rule, missing reason)
+    /// never suppresses — it fires [`ALLOWLIST_RULE`] instead.
+    pub fn is_allowed(&self, d: &Diagnostic) -> bool {
+        let Some(file) = self.files.iter().find(|f| f.path == d.file) else {
+            return false;
+        };
+        file.allows.iter().any(|a| {
+            a.rule == d.rule
+                && a.has_reason
+                && super::RULES.contains(&a.rule.as_str())
+                && (a.line == d.line || a.line + 1 == d.line)
+        })
+    }
+}
+
+/// The meta-rule: every annotation must name a known rule and carry a
+/// ` -- <reason>` tail. A broken annotation is a diagnostic of its own
+/// (and never suppresses anything).
+pub fn check_annotations(tree: &SourceTree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for file in &tree.files {
+        for a in &file.allows {
+            if !super::RULES.contains(&a.rule.as_str()) {
+                out.push(file.diag_line(
+                    ALLOWLIST_RULE,
+                    a.line,
+                    format!("allow() names unknown rule '{}'", a.rule),
+                ));
+            }
+            if !a.has_reason {
+                out.push(file.diag_line(
+                    ALLOWLIST_RULE,
+                    a.line,
+                    format!("allow({}) missing ` -- <reason>`", a.rule),
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn walk(dir: &Path, ext: &str, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries = Vec::new();
+    for e in fs::read_dir(dir)? {
+        entries.push(e?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, ext, out)?;
+        } else if p.extension().and_then(|s| s.to_str()) == Some(ext) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn line_starts(raw: &str) -> Vec<usize> {
+    let mut starts = vec![0usize];
+    for (i, b) in raw.bytes().enumerate() {
+        if b == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+pub(crate) fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank comments, string literals, and char literals to spaces, keeping
+/// newlines (and therefore offsets and line numbers) intact.
+fn mask_rust(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = b.to_vec();
+    let mut i = 0usize;
+    let blank = |out: &mut [u8], k: usize| {
+        if let Some(c) = out.get_mut(k) {
+            if *c != b'\n' {
+                *c = b' ';
+            }
+        }
+    };
+    while i < b.len() {
+        let c = b[i];
+        let next = b.get(i + 1).copied().unwrap_or(0);
+        // identifier prefix guard: `r`/`b` only start a literal when not
+        // part of a longer identifier (e.g. `for r in ...`)
+        let prev_ident = i > 0 && b.get(i - 1).is_some_and(|&p| is_ident(p));
+        if c == b'/' && next == b'/' {
+            while i < b.len() && b[i] != b'\n' {
+                blank(&mut out, i);
+                i += 1;
+            }
+        } else if c == b'/' && next == b'*' {
+            let mut depth = 1usize;
+            blank(&mut out, i);
+            blank(&mut out, i + 1);
+            i += 2;
+            while i < b.len() && depth > 0 {
+                let n2 = b.get(i + 1).copied().unwrap_or(0);
+                if b[i] == b'/' && n2 == b'*' {
+                    depth += 1;
+                    blank(&mut out, i);
+                    blank(&mut out, i + 1);
+                    i += 2;
+                } else if b[i] == b'*' && n2 == b'/' {
+                    depth -= 1;
+                    blank(&mut out, i);
+                    blank(&mut out, i + 1);
+                    i += 2;
+                } else {
+                    blank(&mut out, i);
+                    i += 1;
+                }
+            }
+        } else if c == b'"' {
+            i = mask_string(b, &mut out, i);
+        } else if (c == b'r' || c == b'b') && !prev_ident {
+            // r"...", r#"..."#, b"...", br"...", b'x'
+            let mut j = i + 1;
+            if c == b'b' && b.get(j).copied() == Some(b'r') {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            // only the r-forms (r"..", r#".."#, br#".."#) take hashes
+            while (c == b'r' || j > i + 1) && b.get(j).copied() == Some(b'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if b.get(j).copied() == Some(b'"') && (c == b'r' || j > i + 1 || hashes == 0) {
+                if c == b'b' && j == i + 1 && hashes == 0 {
+                    // b"..." — plain string with escapes
+                    i = mask_string(b, &mut out, j);
+                } else if c == b'r' || j > i + 1 {
+                    // raw string: no escapes, terminated by `"` + hashes
+                    let mut k = j + 1;
+                    'raw: while k < b.len() {
+                        if b[k] == b'"' {
+                            let mut h = 0usize;
+                            while h < hashes && b.get(k + 1 + h).copied() == Some(b'#') {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                for m in j..=k + hashes {
+                                    blank(&mut out, m);
+                                }
+                                i = k + hashes + 1;
+                                break 'raw;
+                            }
+                        }
+                        blank(&mut out, k);
+                        k += 1;
+                    }
+                    if k >= b.len() {
+                        i = k;
+                    }
+                } else {
+                    i += 1;
+                }
+            } else if c == b'b' && b.get(i + 1).copied() == Some(b'\'') {
+                i = mask_char(b, &mut out, i + 1);
+            } else {
+                i += 1;
+            }
+        } else if c == b'\'' {
+            i = mask_char(b, &mut out, i);
+        } else {
+            i += 1;
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Blank a `"`-delimited string starting at `open`; returns the offset
+/// after the closing quote.
+fn mask_string(b: &[u8], out: &mut [u8], open: usize) -> usize {
+    let blank = |out: &mut [u8], k: usize| {
+        if let Some(c) = out.get_mut(k) {
+            if *c != b'\n' {
+                *c = b' ';
+            }
+        }
+    };
+    blank(out, open);
+    let mut i = open + 1;
+    while i < b.len() {
+        if b[i] == b'\\' {
+            blank(out, i);
+            blank(out, i + 1);
+            i += 2;
+        } else if b[i] == b'"' {
+            blank(out, i);
+            return i + 1;
+        } else {
+            blank(out, i);
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Blank a char literal at `quote` if it is one (returns the offset past
+/// it); a lifetime is left untouched (returns `quote + 1`).
+fn mask_char(b: &[u8], out: &mut [u8], quote: usize) -> usize {
+    let blank = |out: &mut [u8], k: usize| {
+        if let Some(c) = out.get_mut(k) {
+            if *c != b'\n' {
+                *c = b' ';
+            }
+        }
+    };
+    let next = b.get(quote + 1).copied().unwrap_or(0);
+    if next == b'\\' {
+        // escaped char literal: blank to the closing quote
+        let mut i = quote + 2;
+        // the escape body itself ('\n', '\u{1f600}', '\'')
+        while i < b.len() && b[i] != b'\'' {
+            i += 1;
+        }
+        for k in quote..=i.min(b.len().saturating_sub(1)) {
+            blank(out, k);
+        }
+        return i + 1;
+    }
+    if b.get(quote + 2).copied() == Some(b'\'') && next != b'\'' {
+        // simple one-byte char literal 'x'
+        for k in quote..=quote + 2 {
+            blank(out, k);
+        }
+        return quote + 3;
+    }
+    if next >= 0x80 {
+        // multi-byte char literal: the closing quote sits within 5 bytes
+        for len in 2..=5usize {
+            if b.get(quote + len).copied() == Some(b'\'') {
+                for k in quote..=quote + len {
+                    blank(out, k);
+                }
+                return quote + len + 1;
+            }
+        }
+    }
+    // lifetime ('a, 'static, '_) — leave it in the code channel
+    quote + 1
+}
+
+/// Offset of the `}` matching the `{` at `open` in masked text.
+pub(crate) fn match_brace(masked: &[u8], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, &c) in masked.iter().enumerate().skip(open) {
+        match c {
+            b'{' => depth += 1,
+            b'}' => match depth {
+                0 => return None,
+                1 => return Some(k),
+                _ => depth -= 1,
+            },
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Byte ranges of `#[cfg(test)] mod` blocks in masked text.
+fn test_spans(masked: &str) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let needle = "#[cfg(test)]";
+    let bytes = masked.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = masked.get(from..).and_then(|s| s.find(needle)) {
+        let at = from + rel;
+        from = at + needle.len();
+        // the attribute must introduce a `mod` item (not a test fn inside
+        // an already-recorded block — those are covered by their mod)
+        let after = masked.get(from..from + 64).unwrap_or("").trim_start();
+        let is_mod = after.starts_with("mod ") || after.starts_with("pub mod ");
+        if !is_mod {
+            continue;
+        }
+        if let Some(open_rel) = masked.get(from..).and_then(|s| s.find('{')) {
+            let open = from + open_rel;
+            if let Some(close) = match_brace(bytes, open) {
+                spans.push((at, close + 1));
+                from = close + 1;
+            }
+        }
+    }
+    spans
+}
+
+/// Every `fn name(...) { ... }` in masked text (fns without bodies are
+/// skipped). Nested fns each get their own span.
+fn fn_spans(masked: &str, test_spans: &[(usize, usize)]) -> Vec<FnSpan> {
+    let b = masked.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = masked.get(from..).and_then(|s| s.find("fn")) {
+        let at = from + rel;
+        from = at + 2;
+        let before_ok = at == 0 || b.get(at.wrapping_sub(1)).is_none_or(|&p| !is_ident(p));
+        let after_ok = b.get(at + 2).is_none_or(|&n| !is_ident(n));
+        if !before_ok || !after_ok {
+            continue;
+        }
+        // name
+        let mut i = at + 2;
+        while b.get(i).is_some_and(|&c| c == b' ' || c == b'\n') {
+            i += 1;
+        }
+        let name_start = i;
+        while b.get(i).is_some_and(|&c| is_ident(c)) {
+            i += 1;
+        }
+        if i == name_start {
+            continue; // `fn(...)` pointer type, `Fn` trait, etc.
+        }
+        let name = masked.get(name_start..i).unwrap_or("").to_string();
+        // first `{` or `;` at paren/bracket depth 0 ends the signature;
+        // brackets matter because return types like `Result<[u8; N]>`
+        // put a `;` outside any parens
+        let mut depth = 0usize;
+        let mut body_start = None;
+        while let Some(&c) = b.get(i) {
+            match c {
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth = depth.saturating_sub(1),
+                b'{' if depth == 0 => {
+                    body_start = Some(i);
+                    break;
+                }
+                b';' if depth == 0 => break,
+                _ => {}
+            }
+            i += 1;
+        }
+        let Some(body_start) = body_start else {
+            continue;
+        };
+        let Some(body_end) = match_brace(b, body_start) else {
+            continue;
+        };
+        let in_test = test_spans.iter().any(|&(s, e)| at >= s && at < e);
+        out.push(FnSpan {
+            name,
+            sig_start: at,
+            body_start,
+            body_end,
+            in_test,
+        });
+        from = body_start + 1;
+    }
+    out
+}
+
+/// Parse every allowlist annotation in raw text. The needle is assembled
+/// at runtime so this file's own string literals never read as one.
+fn parse_allows(raw: &str) -> Vec<Allow> {
+    let needle = concat!("fed", "lint: allow(");
+    let mut out = Vec::new();
+    for (k, line) in raw.lines().enumerate() {
+        let Some(i) = line.find(needle) else {
+            continue;
+        };
+        // annotations live in line comments
+        if !line.get(..i).is_some_and(|head| head.contains("//")) {
+            continue;
+        }
+        let rest = line.get(i + needle.len()..).unwrap_or("");
+        let Some(close) = rest.find(')') else {
+            out.push(Allow {
+                line: k + 1,
+                rule: rest.trim().to_string(),
+                has_reason: false,
+            });
+            continue;
+        };
+        let rule = rest.get(..close).unwrap_or("").trim().to_string();
+        let tail = rest.get(close + 1..).unwrap_or("").trim_start();
+        let has_reason = tail
+            .strip_prefix("--")
+            .is_some_and(|r| !r.trim().is_empty());
+        out.push(Allow {
+            line: k + 1,
+            rule,
+            has_reason,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_blanks_comments_strings_and_chars() {
+        let src = "let a = \"x.unwrap()\"; // y.unwrap()\nlet c = 'h'; let l: &'static str = s;\n";
+        let m = mask_rust(src);
+        assert_eq!(m.len(), src.len());
+        assert!(!m.contains("unwrap"));
+        assert!(!m.contains('h'));
+        assert!(m.contains("'static")); // lifetimes stay in the code channel
+        assert_eq!(m.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn fn_spans_find_bodies_and_skip_test_mods() {
+        let src = "fn a() { b(); }\n#[cfg(test)]\nmod tests {\n    fn t() { x(); }\n}\nfn c() {}\n";
+        let masked = mask_rust(src);
+        let spans = test_spans(&masked);
+        assert_eq!(spans.len(), 1);
+        let fns = fn_spans(&masked, &spans);
+        let names: Vec<_> = fns.iter().map(|f| (f.name.as_str(), f.in_test)).collect();
+        assert_eq!(names, vec![("a", false), ("t", true), ("c", false)]);
+    }
+
+    #[test]
+    fn allow_parsing_requires_reason() {
+        let ann = concat!("// fed", "lint: allow(panic-free) -- bounded by construction\n");
+        let bad = concat!("let x = 1; // fed", "lint: allow(panic-free)\n");
+        let allows = parse_allows(&format!("{ann}{bad}"));
+        assert_eq!(allows.len(), 2);
+        assert!(allows[0].has_reason);
+        assert!(!allows[1].has_reason);
+        assert_eq!(allows[1].line, 2);
+    }
+}

@@ -1,0 +1,450 @@
+//! Rule `wire-spec`: the wire constants in `transport/frame.rs` and
+//! `transport/codec.rs` and the grammar tables in `docs/WIRE.md` must
+//! describe the same format.
+//!
+//! The doc is the contract other sessions read before touching the wire;
+//! the constants are what the code actually emits and rejects. This rule
+//! makes every drift between them — a renumbered tag, a widened header,
+//! a raised frame cap, a stale table row — a build failure with a
+//! file:line pointing at whichever side is wrong.
+
+use std::collections::BTreeMap;
+
+use super::source::{is_ident, match_brace, Diagnostic, SourceFile, SourceTree};
+
+pub const RULE: &str = "wire-spec";
+
+const FRAME_RS: &str = "rust/src/transport/frame.rs";
+const CODEC_RS: &str = "rust/src/transport/codec.rs";
+const WIRE_MD: &str = "rust/docs/WIRE.md";
+
+pub fn check(tree: &SourceTree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let (Some(frame), Some(codec), Some(doc)) = (
+        tree.file("transport/frame.rs"),
+        tree.file("transport/codec.rs"),
+        tree.file("docs/WIRE.md"),
+    ) else {
+        for (have, path) in [
+            (tree.file("transport/frame.rs").is_some(), FRAME_RS),
+            (tree.file("transport/codec.rs").is_some(), CODEC_RS),
+            (tree.file("docs/WIRE.md").is_some(), WIRE_MD),
+        ] {
+            if !have {
+                out.push(Diagnostic {
+                    file: path.to_string(),
+                    line: 1,
+                    rule: RULE,
+                    message: "wire-spec scope file missing from the tree".to_string(),
+                });
+            }
+        }
+        return out;
+    };
+
+    let fr = consts_of(frame);
+    let co = consts_of(codec);
+    let tables = tables_of(doc);
+
+    check_frame(frame, &fr, doc, &tables, &mut out);
+    check_codec_header(codec, &co, doc, &tables, &mut out);
+    check_tags(codec, &co, doc, &tables, &mut out);
+    out
+}
+
+/// One `const NAME: T = VALUE;` (or enum discriminant) pulled from
+/// masked source: name, parsed value when the expression is a literal
+/// (decimal, hex, or `A << B`), and the byte offset for line anchoring.
+struct Const {
+    name: String,
+    value: Option<u64>,
+    offset: usize,
+}
+
+fn consts_of(file: &SourceFile) -> Vec<Const> {
+    let m = file.masked.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = file.masked.get(from..).and_then(|s| s.find("const ")) {
+        let at = from + rel;
+        from = at + 6;
+        if at > 0 && m.get(at - 1).is_some_and(|&p| is_ident(p)) {
+            continue;
+        }
+        let mut i = at + 6;
+        while m.get(i).is_some_and(|&c| c == b' ') {
+            i += 1;
+        }
+        let start = i;
+        while m.get(i).is_some_and(|&c| is_ident(c)) {
+            i += 1;
+        }
+        let name = file.masked.get(start..i).unwrap_or("").to_string();
+        if name.is_empty() || name == "fn" {
+            continue;
+        }
+        let Some(eq) = file.masked.get(i..).and_then(|s| s.find('=')).map(|r| i + r) else {
+            continue;
+        };
+        let Some(semi) = file.masked.get(eq..).and_then(|s| s.find(';')).map(|r| eq + r) else {
+            continue;
+        };
+        let value = parse_value(file.masked.get(eq + 1..semi).unwrap_or(""));
+        out.push(Const { name, value, offset: at });
+    }
+    out
+}
+
+/// Discriminants of `enum <name> { A = 0, B = 1, ... }` in masked source.
+fn enum_variants(file: &SourceFile, enum_name: &str) -> Option<Vec<(String, u64)>> {
+    let needle = format!("enum {enum_name}");
+    let at = file.masked.find(&needle)?;
+    let open = at + file.masked.get(at..)?.find('{')?;
+    let close = match_brace(file.masked.as_bytes(), open)?;
+    let body = file.masked.get(open + 1..close)?;
+    let mut out = Vec::new();
+    for entry in body.split(',') {
+        let Some((name, value)) = entry.split_once('=') else {
+            continue;
+        };
+        let name = name.trim();
+        if name.is_empty() || !name.bytes().all(is_ident) {
+            continue;
+        }
+        if let Some(v) = parse_value(value) {
+            out.push((name.to_string(), v));
+        }
+    }
+    Some(out)
+}
+
+/// Parse a literal const expression: decimal, `0x` hex (type suffixes and
+/// `_` separators tolerated), or a single `A << B` shift. Anything else
+/// (e.g. `u32::MAX`, `Duration::from_secs(10)`) is None — not a wire
+/// constant this rule can or should pin.
+fn parse_value(expr: &str) -> Option<u64> {
+    let expr = expr.trim();
+    if let Some((a, b)) = expr.split_once("<<") {
+        return parse_value(a)?.checked_shl(u32::try_from(parse_value(b)?).ok()?);
+    }
+    let expr = expr.replace('_', "");
+    let expr = expr.trim();
+    if let Some(hex) = expr.strip_prefix("0x") {
+        let digits: String = hex.chars().take_while(char::is_ascii_hexdigit).collect();
+        return (!digits.is_empty()).then(|| u64::from_str_radix(&digits, 16).ok())?;
+    }
+    let digits: String = expr.chars().take_while(char::is_ascii_digit).collect();
+    (!digits.is_empty()).then(|| digits.parse().ok())?
+}
+
+struct Row {
+    line: usize,
+    cells: Vec<String>,
+}
+
+struct Table {
+    heading: String,
+    heading_line: usize,
+    line: usize,
+    rows: Vec<Row>,
+}
+
+/// Markdown tables of a doc file, each tagged with the `#` heading in
+/// force where it starts. `\|` inside a cell is an escaped pipe, not a
+/// column break.
+fn tables_of(doc: &SourceFile) -> Vec<Table> {
+    let mut out: Vec<Table> = Vec::new();
+    let mut heading = String::new();
+    let mut heading_line = 0usize;
+    let mut cur: Option<Table> = None;
+    for (k, line) in doc.raw.lines().enumerate() {
+        let t = line.trim();
+        if t.starts_with('#') {
+            heading = t.trim_start_matches('#').trim().to_string();
+            heading_line = k + 1;
+        }
+        if t.starts_with('|') {
+            let mut cells: Vec<String> = Vec::new();
+            for part in t.trim_matches('|').split('|') {
+                if let Some(prev) = cells.last_mut() {
+                    if prev.ends_with('\\') {
+                        prev.pop();
+                        prev.push('|');
+                        prev.push_str(part);
+                        continue;
+                    }
+                }
+                cells.push(part.to_string());
+            }
+            let cells: Vec<String> = cells.into_iter().map(|c| c.trim().to_string()).collect();
+            let separator = cells
+                .iter()
+                .all(|c| !c.is_empty() && c.bytes().all(|b| b == b'-' || b == b':'));
+            if separator {
+                continue;
+            }
+            cur.get_or_insert_with(|| Table {
+                heading: heading.clone(),
+                heading_line,
+                line: k + 1,
+                rows: Vec::new(),
+            })
+            .rows
+            .push(Row { line: k + 1, cells });
+        } else if let Some(done) = cur.take() {
+            out.push(done);
+        }
+    }
+    if let Some(done) = cur.take() {
+        out.push(done);
+    }
+    out
+}
+
+fn value_of<'a>(
+    consts: &'a [Const],
+    file: &SourceFile,
+    name: &str,
+    out: &mut Vec<Diagnostic>,
+) -> Option<(&'a Const, u64)> {
+    let Some(c) = consts.iter().find(|c| c.name == name) else {
+        out.push(file.diag_line(RULE, 1, format!("expected wire constant `{name}` not found")));
+        return None;
+    };
+    let Some(v) = c.value else {
+        out.push(file.diag(
+            RULE,
+            c.offset,
+            format!("wire constant `{name}` has a value this rule cannot parse"),
+        ));
+        return None;
+    };
+    Some((c, v))
+}
+
+/// The field-name column (3rd cell) keys both header tables.
+fn field_row<'a>(table: &'a Table, field: &str) -> Option<&'a Row> {
+    table.rows.iter().find(|r| r.cells.get(2).is_some_and(|c| c == field))
+}
+
+/// Largest `offset + size` over rows whose first two cells are numeric —
+/// the byte one past the fixed header (the payload row's `n` size cell
+/// drops out naturally).
+fn header_end(table: &Table) -> Option<u64> {
+    table
+        .rows
+        .iter()
+        .filter_map(|r| {
+            let off: u64 = r.cells.first()?.parse().ok()?;
+            let size: u64 = r.cells.get(1)?.parse().ok()?;
+            Some(off + size)
+        })
+        .max()
+}
+
+fn check_frame(
+    frame: &SourceFile,
+    fr: &[Const],
+    doc: &SourceFile,
+    tables: &[Table],
+    out: &mut Vec<Diagnostic>,
+) {
+    let magic = value_of(fr, frame, "FRAME_MAGIC", out);
+    let version = value_of(fr, frame, "FRAME_VERSION", out);
+    let header = value_of(fr, frame, "FRAME_HEADER_BYTES", out);
+    let max = value_of(fr, frame, "MAX_FRAME_BYTES", out);
+    let kinds = enum_variants(frame, "FrameKind");
+    if kinds.is_none() {
+        out.push(frame.diag_line(
+            RULE,
+            1,
+            "expected `enum FrameKind` with explicit discriminants".to_string(),
+        ));
+    }
+
+    let Some(table) = tables.iter().find(|t| t.heading.contains("Frame layer")) else {
+        out.push(doc.diag_line(
+            RULE,
+            1,
+            "WIRE.md has no table under a `Frame layer` heading".to_string(),
+        ));
+        return;
+    };
+    let mut want_cell = |field: &str, needle: String, what: &str| match field_row(table, field) {
+        Some(row) => {
+            if !row.cells.get(3).is_some_and(|c| c.contains(&needle)) {
+                out.push(doc.diag_line(
+                    RULE,
+                    row.line,
+                    format!("frame `{field}` row does not mention `{needle}` ({what})"),
+                ));
+            }
+        }
+        None => out.push(doc.diag_line(
+            RULE,
+            table.line,
+            format!("frame table has no `{field}` row"),
+        )),
+    };
+    if let Some((_, v)) = magic {
+        want_cell("magic", format!("0x{v:04x}"), "frame.rs FRAME_MAGIC");
+    }
+    if let Some((_, v)) = version {
+        want_cell("version", format!("`{v}`"), "frame.rs FRAME_VERSION");
+    }
+    if let Some((_, v)) = max {
+        want_cell("length", format!("{} MiB", v >> 20), "frame.rs MAX_FRAME_BYTES");
+    }
+    if let Some(kinds) = &kinds {
+        for (name, disc) in kinds {
+            want_cell("kind", format!("`{disc}` {}", name.to_lowercase()), "frame.rs FrameKind");
+        }
+    }
+    if let Some((_, v)) = header {
+        match field_row(table, "payload") {
+            Some(row) => {
+                if row.cells.first().map(String::as_str) != Some(v.to_string().as_str()) {
+                    out.push(doc.diag_line(
+                        RULE,
+                        row.line,
+                        format!("frame payload offset disagrees with FRAME_HEADER_BYTES = {v}"),
+                    ));
+                }
+            }
+            None => out.push(doc.diag_line(
+                RULE,
+                table.line,
+                "frame table has no `payload` row".to_string(),
+            )),
+        }
+        if header_end(table) != Some(v) {
+            out.push(doc.diag_line(
+                RULE,
+                table.line,
+                format!(
+                    "frame table fixed fields do not span exactly FRAME_HEADER_BYTES = {v} bytes"
+                ),
+            ));
+        }
+    }
+}
+
+fn check_codec_header(
+    codec: &SourceFile,
+    co: &[Const],
+    doc: &SourceFile,
+    tables: &[Table],
+    out: &mut Vec<Diagnostic>,
+) {
+    let magic = value_of(co, codec, "MAGIC", out);
+    let version = value_of(co, codec, "VERSION", out);
+    let header = value_of(co, codec, "HEADER_BYTES", out);
+
+    let Some(table) = tables.iter().find(|t| t.heading.contains("Codec header")) else {
+        out.push(doc.diag_line(
+            RULE,
+            1,
+            "WIRE.md has no table under a `Codec header` heading".to_string(),
+        ));
+        return;
+    };
+    let mut want_cell = |field: &str, needle: String, what: &str| match field_row(table, field) {
+        Some(row) => {
+            if !row.cells.get(3).is_some_and(|c| c.contains(&needle)) {
+                out.push(doc.diag_line(
+                    RULE,
+                    row.line,
+                    format!("codec `{field}` row does not mention `{needle}` ({what})"),
+                ));
+            }
+        }
+        None => out.push(doc.diag_line(
+            RULE,
+            table.line,
+            format!("codec header table has no `{field}` row"),
+        )),
+    };
+    if let Some((_, v)) = magic {
+        want_cell("magic", format!("0x{v:04x}"), "codec.rs MAGIC");
+    }
+    if let Some((_, v)) = version {
+        want_cell("version", format!("`{v}`"), "codec.rs VERSION");
+    }
+    if let Some((_, v)) = header {
+        if !table.heading.contains(&format!("({v} bytes")) {
+            out.push(doc.diag_line(
+                RULE,
+                table.heading_line,
+                format!("codec header heading does not state `({v} bytes` (codec.rs HEADER_BYTES)"),
+            ));
+        }
+        if header_end(table) != Some(v) {
+            out.push(doc.diag_line(
+                RULE,
+                table.line,
+                format!("codec header rows do not span exactly HEADER_BYTES = {v} bytes"),
+            ));
+        }
+    }
+}
+
+/// The body-tag registry must match 1:1: every `TAG_*` constant is a row
+/// in a `Body tags` table and every row's tag number has a constant.
+fn check_tags(
+    codec: &SourceFile,
+    co: &[Const],
+    doc: &SourceFile,
+    tables: &[Table],
+    out: &mut Vec<Diagnostic>,
+) {
+    let mut documented: BTreeMap<u64, usize> = BTreeMap::new();
+    for table in tables.iter().filter(|t| t.heading.contains("Body tags")) {
+        for row in &table.rows {
+            if let Some(tag) = row.cells.first().and_then(|c| c.parse::<u64>().ok()) {
+                documented.entry(tag).or_insert(row.line);
+            }
+        }
+    }
+    if documented.is_empty() {
+        out.push(doc.diag_line(
+            RULE,
+            1,
+            "WIRE.md has no `Body tags` table with numeric tag rows".to_string(),
+        ));
+        return;
+    }
+    let mut declared: BTreeMap<u64, &Const> = BTreeMap::new();
+    for c in co.iter().filter(|c| c.name.starts_with("TAG_")) {
+        match c.value {
+            Some(v) => {
+                declared.insert(v, c);
+            }
+            None => out.push(codec.diag(
+                RULE,
+                c.offset,
+                format!("tag constant `{}` has a value this rule cannot parse", c.name),
+            )),
+        }
+    }
+    for (tag, c) in &declared {
+        if !documented.contains_key(tag) {
+            out.push(codec.diag(
+                RULE,
+                c.offset,
+                format!("`{}` (= {tag}) is not documented in any WIRE.md body-tag table", c.name),
+            ));
+        }
+    }
+    for (tag, line) in &documented {
+        if !declared.contains_key(tag) {
+            out.push(doc.diag_line(
+                RULE,
+                *line,
+                format!(
+                    "stale entry: WIRE.md documents body tag {tag} \
+                     but codec.rs declares no TAG_ constant for it"
+                ),
+            ));
+        }
+    }
+}

@@ -43,6 +43,10 @@ const RUN_OPTS: &[OptSpec] = &[
         "upload drain poll interval in milliseconds (overrides config)",
     ),
     OptSpec::value(
+        "max-conns",
+        "socket reactor admission cap: max concurrent connections (overrides config)",
+    ),
+    OptSpec::value(
         "scenario",
         "failure scenario: a JSON file path or a built-in name (clean|lossy-uplink|duplicator|flaky-sessions|byzantine-one|chaos-soup|scrambled-arrivals|malformed-peers|spoofed-tokens); applied before other flags",
     ),
@@ -129,6 +133,11 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         cfg.drain_poll_ms = spec
             .parse::<u64>()
             .map_err(|_| fedmask::Error::invalid(format!("--drain-poll-ms: not a duration: {spec}")))?;
+    }
+    if let Some(spec) = args.get("max-conns") {
+        cfg.max_conns = spec
+            .parse::<usize>()
+            .map_err(|_| fedmask::Error::invalid(format!("--max-conns: not a count: {spec}")))?;
     }
     let prob = |flag: &str| -> Result<Option<f64>> {
         args.get(flag)

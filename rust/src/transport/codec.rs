@@ -119,9 +119,8 @@ pub const BROADCAST_DELTA: u32 = 1;
 /// authenticated session **before** any payload decode; `None` means the
 /// message is too short to even carry the header field.
 pub fn peek_client(payload: &[u8]) -> Option<u32> {
-    payload
-        .get(4..8)
-        .map(|b| u32::from_le_bytes(b.try_into().expect("4-byte slice")))
+    let b: [u8; 4] = payload.get(4..8)?.try_into().ok()?;
+    Some(u32::from_le_bytes(b))
 }
 
 /// The fixed-header fields a server can validate *without* decoding the
@@ -146,16 +145,19 @@ pub fn peek_header(payload: &[u8]) -> Option<PeekedHeader> {
     if payload.len() < HEADER_BYTES {
         return None;
     }
-    let magic = u16::from_le_bytes(payload[0..2].try_into().expect("2-byte slice"));
-    if magic != MAGIC || payload[2] != VERSION {
+    let word = |at: usize| -> Option<u32> {
+        let b: [u8; 4] = payload.get(at..at + 4)?.try_into().ok()?;
+        Some(u32::from_le_bytes(b))
+    };
+    let m: [u8; 2] = payload.get(0..2)?.try_into().ok()?;
+    if u16::from_le_bytes(m) != MAGIC || payload.get(2) != Some(&VERSION) {
         return None;
     }
-    let word = |at: usize| u32::from_le_bytes(payload[at..at + 4].try_into().expect("4-byte slice"));
     Some(PeekedHeader {
-        client: word(4),
-        round: word(8),
-        n_samples: word(12),
-        p: word(16),
+        client: word(4)?,
+        round: word(8)?,
+        n_samples: word(12)?,
+        p: word(16)?,
     })
 }
 
@@ -333,7 +335,10 @@ fn read_varint(data: &[u8], at: &mut usize) -> Result<u32> {
             return Ok(v);
         }
     }
-    unreachable!("loop returns by the fifth byte");
+    // The k == 4 arm above either returned the value or errored, so the
+    // loop cannot fall through — but a typed error keeps the decode path
+    // free of panicking constructs even if that invariant ever shifts.
+    Err(Error::parse("codec: varint longer than 5 bytes"))
 }
 
 /// One-pass payload census: non-zero count and the exact byte length of
@@ -906,7 +911,34 @@ fn take<const N: usize>(data: &[u8], at: &mut usize) -> Result<[u8; N]> {
         .get(*at..*at + N)
         .ok_or_else(|| Error::parse("codec: truncated message"))?;
     *at += N;
-    Ok(slice.try_into().unwrap())
+    slice
+        .try_into()
+        .map_err(|_| Error::parse("codec: truncated message"))
+}
+
+/// One byte at `at`, advancing the cursor.
+fn take1(data: &[u8], at: &mut usize) -> Result<u8> {
+    let [b] = take::<1>(data, at)?;
+    Ok(b)
+}
+
+/// `f32` from a little-endian chunk (zero-padded if short; every caller
+/// passes exact 4-byte chunks from `chunks_exact` / `split_at`).
+fn le_f32(c: &[u8]) -> f32 {
+    let mut b = [0u8; 4];
+    for (d, s) in b.iter_mut().zip(c) {
+        *d = *s;
+    }
+    f32::from_le_bytes(b)
+}
+
+/// `u32` from a little-endian chunk (zero-padded if short).
+fn le_u32(c: &[u8]) -> u32 {
+    let mut b = [0u8; 4];
+    for (d, s) in b.iter_mut().zip(c) {
+        *d = *s;
+    }
+    u32::from_le_bytes(b)
 }
 
 /// Grab the `len`-byte body slice at `at`, advancing the cursor.
@@ -944,11 +976,11 @@ fn decode_into(
     if magic != MAGIC {
         return Err(Error::parse(format!("codec: bad magic {magic:#x}")));
     }
-    let version = take::<1>(data, &mut at)?[0];
+    let version = take1(data, &mut at)?;
     if version != VERSION {
         return Err(Error::parse(format!("codec: unsupported version {version}")));
     }
-    let tag = take::<1>(data, &mut at)?[0];
+    let tag = take1(data, &mut at)?;
     let client = u32::from_le_bytes(take::<4>(data, &mut at)?);
     let round = u32::from_le_bytes(take::<4>(data, &mut at)?);
     let n_samples = u32::from_le_bytes(take::<4>(data, &mut at)?);
@@ -964,9 +996,7 @@ fn decode_into(
             }
             let b = body(data, &mut at, 4 * p)?;
             scratch.dense.reserve(p);
-            scratch
-                .dense
-                .extend(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+            scratch.dense.extend(b.chunks_exact(4).map(le_f32));
             false
         }
         TAG_SPARSE => {
@@ -978,8 +1008,9 @@ fn decode_into(
             scratch.values.reserve(count);
             let mut next_min = 0u32;
             for entry in b.chunks_exact(8) {
-                let idx = u32::from_le_bytes(entry[..4].try_into().unwrap());
-                let val = f32::from_le_bytes(entry[4..].try_into().unwrap());
+                let (iw, vw) = entry.split_at(4);
+                let idx = le_u32(iw);
+                let val = le_f32(vw);
                 check_sparse_index(idx, next_min, p)?;
                 next_min = idx + 1;
                 scratch.indices.push(idx);
@@ -1009,11 +1040,13 @@ fn decode_into(
             scratch.values.reserve(count);
             let mut next_min = 0u32;
             for entry in b.chunks_exact(5) {
-                let idx = u32::from_le_bytes(entry[..4].try_into().unwrap());
+                let (iw, code) = entry.split_at(4);
+                let idx = le_u32(iw);
                 check_sparse_index(idx, next_min, p)?;
                 next_min = idx + 1;
                 scratch.indices.push(idx);
-                scratch.values.push(min + scale * entry[4] as f32);
+                let c = code.first().copied().unwrap_or(0);
+                scratch.values.push(min + scale * c as f32);
             }
             true
         }
@@ -1032,9 +1065,7 @@ fn decode_into(
             read_delta_block(data, &mut at, count, p, &mut scratch.indices)?;
             let b = body(data, &mut at, 4 * count)?;
             scratch.values.reserve(count);
-            scratch
-                .values
-                .extend(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+            scratch.values.extend(b.chunks_exact(4).map(le_f32));
             true
         }
         TAG_DENSE_Q4 => {
@@ -1119,9 +1150,7 @@ fn decode_into(
             )?;
             let b = body(data, &mut at, 4 * count)?;
             scratch.values.reserve(count);
-            scratch
-                .values
-                .extend(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())));
+            scratch.values.extend(b.chunks_exact(4).map(le_f32));
             true
         }
         TAG_DENSE_GQ8 => {
@@ -1132,10 +1161,12 @@ fn decode_into(
             let heads = body(data, &mut at, 8 * n_groups)?;
             let codes = body(data, &mut at, p)?;
             scratch.dense.reserve(p);
-            for (g, chunk) in codes.chunks(GQ8_GROUP).enumerate() {
-                let h = &heads[8 * g..8 * g + 8];
-                let min = f32::from_le_bytes(h[..4].try_into().unwrap());
-                let scale = f32::from_le_bytes(h[4..8].try_into().unwrap());
+            // `heads` holds exactly `n_groups` 8-byte quantizer heads and
+            // `codes.chunks` yields exactly `n_groups` chunks: zip pairs
+            // each group with its head with no arithmetic indexing.
+            for (h, chunk) in heads.chunks_exact(8).zip(codes.chunks(GQ8_GROUP)) {
+                let (lo, hi) = h.split_at(4);
+                let (min, scale) = (le_f32(lo), le_f32(hi));
                 scratch.dense.extend(chunk.iter().map(|&c| min + scale * c as f32));
             }
             false
@@ -1158,10 +1189,9 @@ fn decode_into(
             read_delta_block(data, &mut at, count, p, &mut scratch.indices)?;
             let codes = body(data, &mut at, count)?;
             scratch.values.reserve(count);
-            for (g, chunk) in codes.chunks(GQ8_GROUP).enumerate() {
-                let h = &heads[8 * g..8 * g + 8];
-                let min = f32::from_le_bytes(h[..4].try_into().unwrap());
-                let scale = f32::from_le_bytes(h[4..8].try_into().unwrap());
+            for (h, chunk) in heads.chunks_exact(8).zip(codes.chunks(GQ8_GROUP)) {
+                let (lo, hi) = h.split_at(4);
+                let (min, scale) = (le_f32(lo), le_f32(hi));
                 scratch.values.extend(chunk.iter().map(|&c| min + scale * c as f32));
             }
             true
@@ -1172,7 +1202,7 @@ fn decode_into(
             }
             let min = f32::from_le_bytes(take::<4>(data, &mut at)?);
             let scale = f32::from_le_bytes(take::<4>(data, &mut at)?);
-            let k = take::<1>(data, &mut at)?[0];
+            let k = take1(data, &mut at)?;
             if k > RICE_MAX_K {
                 return Err(Error::parse(format!(
                     "codec: rice parameter {k} exceeds {RICE_MAX_K}"
@@ -1191,7 +1221,7 @@ fn decode_into(
             // streams, and non-zero padding bits
             scratch.codes.clear();
             scratch.codes.reserve(count);
-            rice_decode(&data[at..], count, k, &mut scratch.codes)?;
+            rice_decode(data.get(at..).unwrap_or(&[]), count, k, &mut scratch.codes)?;
             at = data.len();
             scratch.values.reserve(count);
             scratch
@@ -1270,36 +1300,34 @@ fn merge_cached_indices(
     out: &mut Vec<u32>,
 ) -> Result<()> {
     out.clear();
-    out.reserve(cached.len() - removed.len() + added.len());
-    let mut ri = 0usize;
-    let mut ai = 0usize;
+    out.reserve(cached.len().saturating_sub(removed.len()) + added.len());
+    let mut remit = removed.iter().copied().peekable();
+    let mut addit = added.iter().copied().peekable();
     for &c in cached {
         // emit additions sorting before this cached index first, so the
         // equality probes below are exact
-        while ai < added.len() && added[ai] < c {
-            out.push(added[ai]);
-            ai += 1;
+        while let Some(a) = addit.next_if(|&a| a < c) {
+            out.push(a);
         }
-        if ri < removed.len() && removed[ri] == c {
-            ri += 1;
-            if ai < added.len() && added[ai] == c {
+        if remit.next_if(|&r| r == c).is_some() {
+            if addit.next_if(|&a| a == c).is_some() {
                 return Err(Error::parse(
                     "codec: index both removed and re-added (non-canonical set-delta)",
                 ));
             }
             continue;
         }
-        if ai < added.len() && added[ai] == c {
+        if addit.next_if(|&a| a == c).is_some() {
             return Err(Error::parse("codec: added index collides with cached set"));
         }
         out.push(c);
     }
     // both lists are sorted, so any removal not consumed above names an
     // index the cached set does not hold
-    if ri != removed.len() {
+    if remit.next().is_some() {
         return Err(Error::parse("codec: removed index not in cached set"));
     }
-    out.extend_from_slice(&added[ai..]);
+    out.extend(addit);
     Ok(())
 }
 
@@ -1307,7 +1335,9 @@ fn merge_cached_indices(
 /// the encoder always leaves it zero, so anything else is a malformed (or
 /// non-canonical) message.
 fn check_q4_padding(codes: &[u8], n: usize) -> Result<()> {
-    if n % 2 == 1 && codes[n / 2] >> 4 != 0 {
+    // for odd n the final byte (index n/2) is the last one of the body,
+    // whose length the caller already bounded to ceil(n/2)
+    if n % 2 == 1 && codes.last().is_some_and(|&b| b >> 4 != 0) {
         return Err(Error::parse("codec: q4 padding nibble must be zero"));
     }
     Ok(())

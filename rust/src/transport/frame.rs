@@ -173,25 +173,26 @@ impl FrameReader {
         let mut used = 0usize;
         if self.need.is_none() {
             let take = (FRAME_HEADER_BYTES - self.have).min(chunk.len());
+            // fedlint: allow(panic-free) -- take = min(header space left, chunk len) bounds both ranges
             self.header[self.have..self.have + take].copy_from_slice(&chunk[..take]);
             self.have += take;
             used += take;
             if self.have < FRAME_HEADER_BYTES {
                 return Ok((used, None));
             }
-            let magic = u16::from_le_bytes([self.header[0], self.header[1]]);
+            let [m0, m1, version, kind_b, tok @ .., l0, l1, l2, l3] = self.header;
+            let magic = u16::from_le_bytes([m0, m1]);
             if magic != FRAME_MAGIC {
                 return Err(Error::transport(format!("frame: bad magic {magic:#06x}")));
             }
-            let version = self.header[2];
             if version != FRAME_VERSION {
                 return Err(Error::transport(format!(
                     "frame: unsupported version {version} (expected {FRAME_VERSION})"
                 )));
             }
-            let kind = FrameKind::from_wire(self.header[3])?;
-            let token = u64::from_le_bytes(self.header[4..12].try_into().unwrap());
-            let len = u32::from_le_bytes(self.header[12..16].try_into().unwrap()) as usize;
+            let kind = FrameKind::from_wire(kind_b)?;
+            let token = u64::from_le_bytes(tok);
+            let len = u32::from_le_bytes([l0, l1, l2, l3]) as usize;
             if len > self.max_len {
                 return Err(Error::transport(format!(
                     "frame: declared length {len} exceeds cap {}",
@@ -203,10 +204,15 @@ impl FrameReader {
             self.body.clear();
             self.body.reserve(len);
         }
-        let (kind, token, need) = self.need.expect("header parsed");
+        let (kind, token, need) = match self.need {
+            Some(t) => t,
+            None => return Ok((used, None)),
+        };
         let take = (need - self.body.len()).min(chunk.len() - used);
-        self.body.extend_from_slice(&chunk[used..used + take]);
-        used += take;
+        if let Some(src) = chunk.get(used..used + take) {
+            self.body.extend_from_slice(src);
+            used += take;
+        }
         if self.body.len() == need {
             self.need = None;
             self.have = 0;
@@ -233,11 +239,15 @@ pub fn write_frame<W: Write>(w: &mut W, kind: FrameKind, token: u64, payload: &[
         )));
     }
     let mut header = [0u8; FRAME_HEADER_BYTES];
-    header[..2].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
-    header[2] = FRAME_VERSION;
-    header[3] = kind as u8;
-    header[4..12].copy_from_slice(&token.to_le_bytes());
-    header[12..16].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    {
+        // `Write for &mut [u8]` fills from the front; the four fields sum
+        // to exactly FRAME_HEADER_BYTES, so none of these can fail.
+        let mut h: &mut [u8] = &mut header;
+        h.write_all(&FRAME_MAGIC.to_le_bytes())?;
+        h.write_all(&[FRAME_VERSION, kind as u8])?;
+        h.write_all(&token.to_le_bytes())?;
+        h.write_all(&(payload.len() as u32).to_le_bytes())?;
+    }
     w.write_all(&header)?;
     w.write_all(payload)?;
     Ok(())
@@ -284,7 +294,8 @@ impl FrameStream {
         }
         loop {
             while self.start < self.end {
-                let (used, frame) = self.reader.feed(&self.buf[self.start..self.end])?;
+                let pending = self.buf.get(self.start..self.end).unwrap_or(&[]);
+                let (used, frame) = self.reader.feed(pending)?;
                 self.start += used;
                 if let Some(f) = frame {
                     return Ok(Some(f));

@@ -89,6 +89,7 @@ impl Quantized4 {
 /// of each byte first — the packing [`quantize4`] emits).
 #[inline]
 pub fn q4_code(packed: &[u8], k: usize) -> u8 {
+    // fedlint: allow(panic-free) -- callers bound k < n with packed.len() == ceil(n/2) checked at decode entry
     (packed[k / 2] >> (4 * (k & 1))) & 0x0f
 }
 
@@ -219,13 +220,16 @@ pub fn rice_decode(data: &[u8], n: usize, k: u8, out: &mut Vec<u8>) -> Result<()
     let total_bits = data.len() * 8;
     let mut pos = 0usize;
     let max_q = (255u32 >> k) as usize;
+    // every use is guarded by `pos < total_bits`, so the fallback byte is
+    // unreachable — it exists to keep this path free of indexing
+    let bit_at = |pos: usize| (data.get(pos / 8).copied().unwrap_or(0) >> (pos % 8)) & 1;
     for i in 0..n {
         let mut q = 0usize;
         loop {
             if pos >= total_bits {
                 return Err(Error::parse(format!("rice stream truncated in code {i}")));
             }
-            let bit = (data[pos / 8] >> (pos % 8)) & 1;
+            let bit = bit_at(pos);
             pos += 1;
             if bit == 0 {
                 break;
@@ -242,7 +246,7 @@ pub fn rice_decode(data: &[u8], n: usize, k: u8, out: &mut Vec<u8>) -> Result<()
             if pos >= total_bits {
                 return Err(Error::parse(format!("rice stream truncated in code {i}")));
             }
-            rem |= ((((data[pos / 8] >> (pos % 8)) & 1) as u32) << b) as u32;
+            rem |= ((bit_at(pos) as u32) << b) as u32;
             pos += 1;
         }
         out.push((((q as u32) << k) | rem) as u8);
@@ -256,7 +260,7 @@ pub fn rice_decode(data: &[u8], n: usize, k: u8, out: &mut Vec<u8>) -> Result<()
         )));
     }
     while pos < total_bits {
-        if (data[pos / 8] >> (pos % 8)) & 1 != 0 {
+        if bit_at(pos) != 0 {
             return Err(Error::parse("rice stream has non-zero padding bits"));
         }
         pos += 1;

@@ -62,6 +62,7 @@ impl From<std::io::Error> for Error {
     }
 }
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

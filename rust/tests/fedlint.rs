@@ -1,0 +1,304 @@
+//! fedlint golden tests: each rule is run against a miniature fixture
+//! repo under `tests/fedlint_fixtures/<rule>/` whose seeded violations
+//! must produce exactly the expected diagnostics (and whose allowlisted
+//! lines must stay suppressed), plus a self-scan asserting the full pass
+//! is clean on this repository itself.
+
+use std::path::Path;
+
+use fedmask::lint::{
+    self, config_drift, lock_order, panic_free, pre_decode, source, wire_spec, Diagnostic,
+    SourceTree,
+};
+
+fn fixture(rule: &str) -> SourceTree {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fedlint_fixtures")
+        .join(rule);
+    SourceTree::load(&root).expect("fixture tree loads")
+}
+
+/// 1-based line of the first occurrence of `needle` in the fixture file
+/// with path suffix `suffix`.
+fn line(tree: &SourceTree, suffix: &str, needle: &str) -> usize {
+    tree.file(suffix)
+        .unwrap_or_else(|| panic!("fixture has no file ending {suffix}"))
+        .find_line(needle)
+        .unwrap_or_else(|| panic!("{suffix} does not contain {needle:?}"))
+}
+
+fn diag(file: &str, line: usize, rule: &'static str, message: impl Into<String>) -> Diagnostic {
+    Diagnostic {
+        file: file.to_string(),
+        line,
+        rule,
+        message: message.into(),
+    }
+}
+
+#[test]
+fn wire_spec_fires_on_drift_in_both_directions() {
+    let tree = fixture("wire_spec");
+    let diags = lint::apply_allowlist(&tree, wire_spec::check(&tree));
+    let wire = "rust/docs/WIRE.md";
+    let codec = "rust/src/transport/codec.rs";
+    assert_eq!(
+        diags,
+        vec![
+            diag(
+                wire,
+                line(&tree, wire, "`0x4c47`"),
+                wire_spec::RULE,
+                "frame `magic` row does not mention `0x4c46` (frame.rs FRAME_MAGIC)",
+            ),
+            diag(
+                wire,
+                line(&tree, wire, "`0` hello"),
+                wire_spec::RULE,
+                "frame `kind` row does not mention ``1` welcome` (frame.rs FrameKind)",
+            ),
+            diag(
+                wire,
+                line(&tree, wire, "| runes"),
+                wire_spec::RULE,
+                "stale entry: WIRE.md documents body tag 5 \
+                 but codec.rs declares no TAG_ constant for it",
+            ),
+            diag(
+                codec,
+                line(&tree, codec, "TAG_GHOST"),
+                wire_spec::RULE,
+                "`TAG_GHOST` (= 9) is not documented in any WIRE.md body-tag table",
+            ),
+        ]
+    );
+}
+
+#[test]
+fn pre_decode_requires_a_preceding_guard() {
+    let tree = fixture("pre_decode");
+    let raw = pre_decode::check(&tree);
+    // three undisciplined decodes fire, including the annotated one...
+    assert_eq!(raw.len(), 3);
+    // ...and the annotation suppresses exactly its own
+    let handler = "rust/src/handler.rs";
+    let msg = |name: &str| {
+        format!(
+            "fn `{name}` handles a Frame but decodes the payload without a \
+             preceding validate_upload() (WIRE.md §1b pre-decode discipline)"
+        )
+    };
+    assert_eq!(
+        lint::apply_allowlist(&tree, raw),
+        vec![
+            diag(
+                handler,
+                line(&tree, handler, "decode_update(frame.body())"),
+                pre_decode::RULE,
+                msg("unguarded"),
+            ),
+            diag(
+                handler,
+                line(&tree, handler, "decode_update(frame.bytes())"),
+                pre_decode::RULE,
+                msg("guarded_late"),
+            ),
+        ]
+    );
+}
+
+#[test]
+fn panic_free_flags_every_token_class() {
+    let tree = fixture("panic_free");
+    let scope: panic_free::Scope = &[("danger.rs", Some(&["splat", "tidy", "vouched", "ghost"]))];
+    let raw = panic_free::check_with(&tree, scope);
+    // splat's four violations + vouched's annotated index + missing ghost
+    assert_eq!(raw.len(), 6);
+    let danger = "rust/src/danger.rs";
+    assert_eq!(
+        lint::apply_allowlist(&tree, raw),
+        vec![
+            diag(
+                danger,
+                1,
+                panic_free::RULE,
+                "scoped fn `ghost` not found — update lint::panic_free::SCOPE",
+            ),
+            diag(
+                danger,
+                line(&tree, danger, "v.first().unwrap()"),
+                panic_free::RULE,
+                "`.unwrap()` in panic-free fn `splat` — return a typed error instead",
+            ),
+            diag(
+                danger,
+                line(&tree, danger, ".expect("),
+                panic_free::RULE,
+                "`.expect(..)` in panic-free fn `splat` — return a typed error instead",
+            ),
+            diag(
+                danger,
+                line(&tree, danger, "v[2]"),
+                panic_free::RULE,
+                "direct indexing in panic-free fn `splat` — use .get(), patterns, or iterators",
+            ),
+            diag(
+                danger,
+                line(&tree, danger, "panic!("),
+                panic_free::RULE,
+                "`panic!` in panic-free fn `splat` — reject with a typed error instead",
+            ),
+        ]
+    );
+}
+
+#[test]
+fn config_drift_checks_every_door_of_the_surface() {
+    let tree = fixture("config_drift");
+    let table: &[config_drift::Entry] = &[
+        config_drift::Entry {
+            field: "clients",
+            cli: Some("clients"),
+            doc: Some("WIRE.md"),
+        },
+        config_drift::Entry {
+            field: "rounds",
+            cli: None,
+            doc: Some("WIRE.md"),
+        },
+        config_drift::Entry {
+            field: "lr",
+            cli: Some("lr-override"),
+            doc: None,
+        },
+        config_drift::Entry {
+            field: "retired_knob",
+            cli: None,
+            doc: None,
+        },
+    ];
+    let exp = "rust/src/config/experiment.rs";
+    assert_eq!(
+        lint::apply_allowlist(&tree, config_drift::check_with(&tree, table)),
+        vec![
+            diag(
+                exp,
+                1,
+                config_drift::RULE,
+                "stale entry: lint::config_drift::TABLE lists `retired_knob` \
+                 but ExperimentConfig has no such field",
+            ),
+            diag(
+                exp,
+                line(&tree, exp, "pub rounds"),
+                config_drift::RULE,
+                "serde key \"rounds\" appears 1x in experiment.rs — need encode and decode",
+            ),
+            diag(
+                exp,
+                line(&tree, exp, "pub rounds"),
+                config_drift::RULE,
+                "config field `rounds` must be mentioned by name in docs/WIRE.md",
+            ),
+            diag(
+                exp,
+                line(&tree, exp, "pub lr"),
+                config_drift::RULE,
+                "config field `lr` declares CLI flag --lr-override, \
+                 but no opt table quotes \"lr-override\"",
+            ),
+            diag(
+                exp,
+                line(&tree, exp, "pub mystery_knob"),
+                config_drift::RULE,
+                "unclassified config field `mystery_knob` — add it to lint::config_drift::TABLE",
+            ),
+        ]
+    );
+}
+
+#[test]
+fn lock_order_reports_the_cycle_and_spares_temporaries() {
+    let tree = fixture("lock_order");
+    let sock = "rust/src/transport/socket.rs";
+    assert_eq!(
+        lint::apply_allowlist(&tree, lock_order::check(&tree)),
+        vec![
+            diag(
+                sock,
+                line(&tree, sock, "let gb = self.b.lock()"),
+                lock_order::RULE,
+                "cyclic lock order: `b` acquired while holding `a` (fn `ab`), \
+                 and another path acquires `a` while holding `b`",
+            ),
+            diag(
+                sock,
+                line(&tree, sock, "let ga2 = self.a.lock()"),
+                lock_order::RULE,
+                "cyclic lock order: `a` acquired while holding `b` (fn `ba`), \
+                 and another path acquires `b` while holding `a`",
+            ),
+        ]
+    );
+}
+
+#[test]
+fn malformed_annotations_fire_and_never_suppress() {
+    let tree = fixture("allowlist");
+    let annot = "rust/src/annot.rs";
+    let mut raw = source::check_annotations(&tree);
+    let scope: panic_free::Scope = &[("annot.rs", None)];
+    raw.extend(panic_free::check_with(&tree, scope));
+    let index_line = line(&tree, annot, "v[0]");
+    assert_eq!(
+        lint::apply_allowlist(&tree, raw),
+        vec![
+            diag(
+                annot,
+                line(&tree, annot, "let x = 1;"),
+                source::ALLOWLIST_RULE,
+                "allow(panic-free) missing ` -- <reason>`",
+            ),
+            diag(
+                annot,
+                line(&tree, annot, "let y = 2;"),
+                source::ALLOWLIST_RULE,
+                "allow() names unknown rule 'not-a-rule'",
+            ),
+            diag(
+                annot,
+                index_line - 1,
+                source::ALLOWLIST_RULE,
+                "allow(panic-free) missing ` -- <reason>`",
+            ),
+            // the reasonless annotation above it does NOT suppress this
+            diag(
+                annot,
+                index_line,
+                panic_free::RULE,
+                "direct indexing in panic-free fn `g` — use .get(), patterns, or iterators",
+            ),
+        ]
+    );
+}
+
+/// The acceptance gate: the full pass over this repository itself is
+/// clean. Any new finding must be fixed or allowlisted with a reason.
+#[test]
+fn repository_passes_its_own_lint() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .to_path_buf();
+    let tree = SourceTree::load(&root).expect("repo tree loads");
+    let diags = lint::run(&tree);
+    let rendered: Vec<String> = diags
+        .iter()
+        .map(|d| format!("{}:{}: [{}] {}", d.file, d.line, d.rule, d.message))
+        .collect();
+    assert!(
+        diags.is_empty(),
+        "fedlint findings on the repository itself:\n{}",
+        rendered.join("\n")
+    );
+}

@@ -1,0 +1,13 @@
+// allowlist fixture: one annotation without a reason, one naming an
+// unknown rule. Neither may suppress anything.
+
+pub fn f() -> u32 {
+    let x = 1; // fedlint: allow(panic-free)
+    let y = 2; // fedlint: allow(not-a-rule) -- the rule does not exist
+    x + y
+}
+
+pub fn g(v: &[u8]) -> u8 {
+    // fedlint: allow(panic-free)
+    v[0]
+}

@@ -1,0 +1,39 @@
+// config_drift fixture: `rounds` loses its decode arm and its doc
+// mention, `lr` declares a CLI flag no opt table quotes, and
+// `mystery_knob` is not classified in the test's registry.
+
+pub struct ExperimentConfig {
+    pub clients: usize,
+    pub rounds: usize,
+    pub lr: f32,
+    pub mystery_knob: f32,
+}
+
+impl ExperimentConfig {
+    pub fn encode(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("clients", self.clients.to_string()),
+            ("rounds", self.rounds.to_string()),
+            ("lr", self.lr.to_string()),
+            ("mystery_knob", self.mystery_knob.to_string()),
+        ]
+    }
+
+    pub fn decode(kv: &[(&str, &str)]) -> ExperimentConfig {
+        let mut c = ExperimentConfig {
+            clients: 0,
+            rounds: 0,
+            lr: 0.0,
+            mystery_knob: 0.0,
+        };
+        for (k, v) in kv {
+            match *k {
+                "clients" => c.clients = v.parse().unwrap_or(0),
+                "lr" => c.lr = v.parse().unwrap_or(0.0),
+                "mystery_knob" => c.mystery_knob = v.parse().unwrap_or(0.0),
+                _ => {}
+            }
+        }
+        c
+    }
+}

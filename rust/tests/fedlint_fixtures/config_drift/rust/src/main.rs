@@ -1,0 +1,7 @@
+// config_drift fixture CLI: quotes one flag only — the clients override.
+// The lr override flag is deliberately absent.
+
+fn main() {
+    let opts = [("clients", "number of simulated clients")];
+    let _ = opts;
+}

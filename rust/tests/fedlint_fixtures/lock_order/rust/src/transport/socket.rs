@@ -1,0 +1,28 @@
+// lock_order fixture: `ab` and `ba` take the two mutexes in opposite
+// orders (the cycle this rule exists to catch); `peek` only ever holds
+// one guard as a chained temporary and must stay clean.
+
+use std::sync::Mutex;
+
+pub struct S {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+impl S {
+    pub fn ab(&self) -> u32 {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        *ga + *gb
+    }
+
+    pub fn ba(&self) -> u32 {
+        let gb2 = self.b.lock().unwrap();
+        let ga2 = self.a.lock().unwrap();
+        *ga2 + *gb2
+    }
+
+    pub fn peek(&self) -> u32 {
+        *self.a.lock().unwrap() + *self.b.lock().unwrap()
+    }
+}

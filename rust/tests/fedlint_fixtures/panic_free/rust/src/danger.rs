@@ -1,0 +1,35 @@
+// panic_free fixture: one fn per outcome. The test scopes this file with
+// an extra name ("ghost") to prove the missing-fn diagnostic fires.
+
+pub fn splat(v: &[u8]) -> u8 {
+    let first = v.first().unwrap();
+    let second = v.get(1).expect("second byte");
+    let third = v[2];
+    if *first > 9 {
+        panic!("too big");
+    }
+    *first + *second + third
+}
+
+pub fn tidy(v: &[u8]) -> u8 {
+    let arr: [u8; 2] = [0, 1];
+    let head = v.first().copied().unwrap_or(0);
+    head + arr.iter().sum::<u8>()
+}
+
+pub fn vouched(v: &[u8]) -> u8 {
+    // fedlint: allow(panic-free) -- fixture: caller checks v is non-empty
+    v[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_tokens_here_do_not_count() {
+        let v = vec![3u8];
+        let _ = v[0];
+        v.first().unwrap();
+    }
+}

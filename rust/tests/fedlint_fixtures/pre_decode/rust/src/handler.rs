@@ -1,0 +1,35 @@
+// pre_decode fixture: Frame-handling fns in every guard configuration.
+
+pub fn guarded(frame: &Frame) -> Result<Vec<f32>> {
+    validate_upload(frame)?;
+    decode_update(frame.payload())
+}
+
+pub fn unguarded(frame: &Frame) -> Result<Vec<f32>> {
+    decode_update(frame.body())
+}
+
+pub fn guarded_late(frame: &Frame) -> Result<Vec<f32>> {
+    let out = decode_update(frame.bytes());
+    validate_upload(frame)?;
+    out
+}
+
+pub fn vouched_elsewhere(frame: &Frame) -> Result<Vec<f32>> {
+    // fedlint: allow(pre-decode) -- fixture: loopback frame, payload is ours
+    decode_update(frame.loopback())
+}
+
+pub fn not_a_frame(kind: FrameKind, bytes: &[u8]) -> Result<Vec<f32>> {
+    let _ = kind;
+    decode_update(bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw_decode(frame: &Frame) -> Result<Vec<f32>> {
+        decode_update(frame.payload())
+    }
+}

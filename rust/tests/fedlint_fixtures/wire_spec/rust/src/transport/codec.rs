@@ -1,0 +1,10 @@
+// wire_spec fixture: TAG_GHOST is deliberately undocumented, and the
+// doc's tag-5 row is deliberately stale.
+
+pub const MAGIC: u16 = 0x464d;
+pub const VERSION: u8 = 1;
+pub const HEADER_BYTES: usize = 24;
+
+pub const TAG_DENSE: u8 = 0;
+pub const TAG_Q8: u8 = 1;
+pub const TAG_GHOST: u8 = 9;

@@ -1,0 +1,12 @@
+// wire_spec fixture: constants the doc tables must agree with. The doc
+// states the wrong magic and omits the `welcome` kind on purpose.
+
+pub const FRAME_MAGIC: u16 = 0x4c46;
+pub const FRAME_VERSION: u8 = 2;
+pub const FRAME_HEADER_BYTES: usize = 16;
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+pub enum FrameKind {
+    Hello = 0,
+    Welcome = 1,
+}

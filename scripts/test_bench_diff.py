@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Unit tests for bench_diff.py — stdlib only, no Rust toolchain needed.
+
+Run from the repo root (or anywhere):
+
+    python3 scripts/test_bench_diff.py
+"""
+
+import contextlib
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import bench_diff  # noqa: E402
+
+
+def doc(arms, schema=1):
+    return {
+        "schema": schema,
+        "budget_ms": 100,
+        "results": [
+            {"name": name, "iters": 10, "median_ns": med, "p10_ns": med, "p90_ns": med}
+            for name, med in arms.items()
+        ],
+    }
+
+
+class BenchDiffTest(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+
+    def write(self, name, payload):
+        path = os.path.join(self.dir.name, name)
+        with open(path, "w") as f:
+            if isinstance(payload, str):
+                f.write(payload)
+            else:
+                json.dump(payload, f)
+        return path
+
+    def run_main(self, baseline, fresh, extra=()):
+        argv = ["bench_diff.py", baseline, fresh, *extra]
+        out, err = io.StringIO(), io.StringIO()
+        old = sys.argv
+        sys.argv = argv
+        try:
+            with contextlib.redirect_stdout(out), contextlib.redirect_stderr(err):
+                code = bench_diff.main()
+        finally:
+            sys.argv = old
+        return code, out.getvalue(), err.getvalue()
+
+    def test_within_threshold_passes(self):
+        base = self.write("base.json", doc({"fold": 100.0, "encode": 200.0}))
+        fresh = self.write("fresh.json", doc({"fold": 140.0, "encode": 150.0}))
+        code, out, _ = self.run_main(base, fresh)
+        self.assertEqual(code, 0)
+        self.assertIn("2 shared arm(s) within 1.5x", out)
+        self.assertNotIn("REGRESSION", out)
+
+    def test_exactly_at_threshold_is_not_a_regression(self):
+        # the gate is strictly greater-than, so 1.5x on the nose passes
+        base = self.write("base.json", doc({"fold": 100.0}))
+        fresh = self.write("fresh.json", doc({"fold": 150.0}))
+        code, out, _ = self.run_main(base, fresh)
+        self.assertEqual(code, 0)
+        self.assertNotIn("REGRESSION", out)
+
+    def test_past_threshold_fails_and_names_the_arm(self):
+        base = self.write("base.json", doc({"fold": 100.0, "encode": 50.0}))
+        fresh = self.write("fresh.json", doc({"fold": 151.0, "encode": 50.0}))
+        code, out, err = self.run_main(base, fresh)
+        self.assertEqual(code, 1)
+        self.assertIn("REGRESSION", out)
+        self.assertIn("fold", err)
+        self.assertNotIn("encode", err)
+
+    def test_custom_threshold_is_respected(self):
+        base = self.write("base.json", doc({"fold": 100.0}))
+        fresh = self.write("fresh.json", doc({"fold": 250.0}))
+        code, _, _ = self.run_main(base, fresh, extra=["--threshold", "3.0"])
+        self.assertEqual(code, 0)
+
+    def test_zero_baseline_median_counts_as_regression(self):
+        base = self.write("base.json", doc({"fold": 0.0}))
+        fresh = self.write("fresh.json", doc({"fold": 1.0}))
+        code, out, _ = self.run_main(base, fresh)
+        self.assertEqual(code, 1)
+        self.assertIn("REGRESSION", out)
+
+    def test_new_and_retired_arms_report_but_never_gate(self):
+        base = self.write("base.json", doc({"fold": 100.0, "old_arm": 10.0}))
+        fresh = self.write("fresh.json", doc({"fold": 100.0, "new_arm": 10.0}))
+        code, out, _ = self.run_main(base, fresh)
+        self.assertEqual(code, 0)
+        self.assertIn("new arm", out)
+        self.assertIn("new_arm", out)
+        self.assertIn("retired", out)
+        self.assertIn("old_arm", out)
+
+    def test_unknown_schema_is_rejected(self):
+        base = self.write("base.json", doc({"fold": 100.0}, schema=2))
+        fresh = self.write("fresh.json", doc({"fold": 100.0}))
+        with self.assertRaises(SystemExit) as ctx:
+            self.run_main(base, fresh)
+        self.assertIn("unknown bench schema", str(ctx.exception))
+
+    def test_malformed_json_raises(self):
+        base = self.write("base.json", "{not json")
+        fresh = self.write("fresh.json", doc({"fold": 100.0}))
+        with self.assertRaises(json.JSONDecodeError):
+            self.run_main(base, fresh)
+
+
+if __name__ == "__main__":
+    unittest.main()

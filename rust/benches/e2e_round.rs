@@ -8,23 +8,93 @@
 use std::sync::Arc;
 
 use fedmask::config::experiment::ExperimentConfig;
-use fedmask::fl::masking::MaskPolicy;
+use fedmask::fl::masking::{
+    selective_mask_rust_with, MaskPolicy, MaskScope, MaskScratch,
+};
+use fedmask::fl::pipeline::mask_stream_selective;
 use fedmask::fl::server::Server;
-use fedmask::runtime::manifest::Manifest;
+use fedmask::runtime::bufpool::BufferPool;
+use fedmask::runtime::manifest::{LayerInfo, Manifest};
 use fedmask::runtime::pool::EnginePool;
+use fedmask::sim::rng::Rng;
+use fedmask::transport::codec::{
+    encode_masked, encode_update_cached_with, EncodeScratch, Encoding, MaskedStream,
+};
 use fedmask::util::bench::Bench;
 
+/// The client-side upload hot path in isolation, with no engine in the
+/// loop: the staged mask-then-encode pair vs the fused single-pass
+/// pipeline (`fl::pipeline` + `encode_masked` + pooled frames). Runs with
+/// or without artifacts — this is the half of the round the fused path
+/// optimizes, at each paper model's true P.
+fn bench_fused_vs_staged(b: &mut Bench) {
+    println!("== fused mask+encode vs staged (engine-free) ==");
+    let mut rng = Rng::new(7);
+    for (model, p) in [("lenet", 20_522usize), ("gru", 154_768), ("vggmini", 51_666)] {
+        let wn: Vec<f32> = (0..p).map(|_| rng.next_normal()).collect();
+        let wo: Vec<f32> = (0..p).map(|_| rng.next_normal()).collect();
+        let layers =
+            vec![LayerInfo { name: "w".into(), shape: vec![p], offset: 0, size: p, masked: true }];
+        for (elabel, enc) in [("auto", Encoding::Auto), ("autoq8", Encoding::AutoQ8)] {
+            let mut mask_scratch = MaskScratch::default();
+            let mut enc_scratch = EncodeScratch::default();
+            let mut stream = MaskedStream::default();
+            let pool = BufferPool::new();
+            // parity gate before timing: the two paths must emit the same
+            // bytes, or the comparison is meaningless
+            let staged_bytes = {
+                let masked = selective_mask_rust_with(
+                    &wn, &wo, 0.3, &layers, MaskScope::PerLayer, &mut mask_scratch,
+                );
+                encode_update_cached_with(&mut enc_scratch, 1, 1, 64, &masked, enc, None)
+            };
+            mask_stream_selective(
+                &wn, &wo, 0.3, &layers, MaskScope::PerLayer, &mut mask_scratch, &mut stream,
+            )
+            .unwrap();
+            let mut probe = pool.take();
+            encode_masked(&mut enc_scratch, &mut probe, 1, 1, 64, &stream, enc, None).unwrap();
+            assert_eq!(probe, staged_bytes, "fused must be bitwise-identical to staged");
+            pool.put(probe);
+
+            let m = b.run(&format!("mask_encode_staged/{model}/{elabel}"), || {
+                let masked = selective_mask_rust_with(
+                    &wn, &wo, 0.3, &layers, MaskScope::PerLayer, &mut mask_scratch,
+                );
+                encode_update_cached_with(&mut enc_scratch, 1, 1, 64, &masked, enc, None).len()
+            });
+            println!("{}", m.report(Some((p as f64, "param"))));
+            let m = b.run(&format!("mask_encode_fused/{model}/{elabel}"), || {
+                mask_stream_selective(
+                    &wn, &wo, 0.3, &layers, MaskScope::PerLayer, &mut mask_scratch, &mut stream,
+                )
+                .unwrap();
+                let mut payload = pool.take();
+                encode_masked(&mut enc_scratch, &mut payload, 1, 1, 64, &stream, enc, None)
+                    .unwrap();
+                let n = payload.len();
+                pool.put(payload);
+                n
+            });
+            println!("{}", m.report(Some((p as f64, "param"))));
+        }
+    }
+}
+
 fn main() {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let Ok(manifest) = Manifest::load(&dir) else {
-        println!("(artifacts missing: run `make artifacts` first)");
-        return;
-    };
     std::env::set_var(
         "FEDMASK_BENCH_MS",
         std::env::var("FEDMASK_BENCH_MS").unwrap_or_else(|_| "3000".into()),
     );
     let mut b = Bench::new();
+    bench_fused_vs_staged(&mut b);
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(manifest) = Manifest::load(&dir) else {
+        b.write_trajectory("BENCH_e2e_round.json");
+        println!("(artifacts missing: skipping full rounds; run `make artifacts` first)");
+        return;
+    };
     for (model, clients, n_train, n_test) in
         [("lenet", 6usize, 1536usize, 512usize), ("gru", 4, 20_000, 8_000)]
     {
@@ -46,4 +116,5 @@ fn main() {
             println!("{}", m.report(Some((clients as f64, "client"))));
         }
     }
+    b.write_trajectory("BENCH_e2e_round.json");
 }

@@ -20,12 +20,14 @@ use std::time::Duration;
 
 use crate::config::experiment::ExperimentConfig;
 use crate::data::{batcher, Dataset};
-use crate::fl::masking::{random_mask_rust, selective_mask_rust_with, MaskEngine, MaskPolicy};
+use crate::fl::masking::{random_mask_rust, MaskEngine, MaskPolicy};
+use crate::fl::pipeline::mask_stream_selective;
 use crate::runtime::engine::Engine;
 use crate::runtime::pool::WorkerScratch;
 use crate::sim::rng::Rng;
 use crate::transport::codec::{
-    decode_update, encode_update_cached_with, BROADCAST_DELTA, BROADCAST_FULL, BROADCAST_SENDER,
+    decode_update, encode_masked, encode_update_cached_into, BROADCAST_DELTA, BROADCAST_FULL,
+    BROADCAST_SENDER,
 };
 use crate::transport::link::{DownlinkSource, DEFAULT_UPLOAD_TIMEOUT};
 use crate::transport::session::IndexCache;
@@ -177,9 +179,10 @@ impl ClientJob {
     }
 
     /// Run the local update on an engine worker. `scratch` is the worker's
-    /// long-lived buffer arena (mask deltas, encode temporaries), so a
-    /// steady-state round allocates nothing per client beyond the payload
-    /// and the materialized broadcast.
+    /// long-lived buffer arena (mask deltas, the fused mask→encode stream,
+    /// encode temporaries, and the shared payload-frame pool), so a
+    /// steady-state round allocates nothing per client on the mask/encode
+    /// path beyond the materialized broadcast.
     pub fn run(&self, engine: &Engine, scratch: &mut WorkerScratch) -> Result<LocalOutcome> {
         let model = &self.cfg.model;
         let mm = engine.model(model)?.clone();
@@ -219,47 +222,77 @@ impl ClientJob {
             last_loss = loss_acc / chunks.len().max(1) as f32;
         }
 
-        // Masking (Alg. 2 line 9-12 / Alg. 4 line 9-14).
-        let masked = match self.cfg.masking {
-            MaskPolicy::None => params,
-            MaskPolicy::Random { gamma } => {
-                let mut rng = self.rng(0xa5);
-                random_mask_rust(&params, gamma, &mm.layers, &mut rng)
-            }
-            MaskPolicy::Selective { gamma, engine: me, scope } => match me {
-                MaskEngine::Hlo => engine.mask(model, &params, &global, gamma)?,
-                MaskEngine::Rust => selective_mask_rust_with(
-                    &params,
-                    &global,
-                    gamma,
-                    &mm.layers,
-                    scope,
-                    &mut scratch.mask,
-                ),
-            },
-        };
-
-        // The masked (sparse) vector is what crosses the wire. The Delta
+        // Masking (Alg. 2 line 9-12 / Alg. 4 line 9-14) + wire encoding.
+        //
+        // The masked (sparse) update is what crosses the wire. The Delta
         // mask-target reconstruction (dropped weights revert to their
         // broadcast values) happens server-side after decode — the server
         // knows w_old, it sent it. Lossy codecs (q8) need no special-casing
         // anymore: the server aggregates exactly what it decodes.
         // Unmasked uploads are a full model by definition (incidental exact
         // zeros in trained weights are not a sparsity the protocol exploits).
-        let nnz = match self.cfg.masking {
-            MaskPolicy::None => masked.len(),
-            _ => masked.iter().filter(|v| **v != 0.0).count(),
-        };
+        //
+        // The exact-rust selective path is *fused*: the masker's top-k
+        // partition feeds kept (index, value) pairs straight into the
+        // worker's `MaskedStream` (census sideband accumulated in the same
+        // pass) and `encode_masked` writes the frame from the stream — no
+        // dense masked vector, no second census walk. Every path encodes
+        // into a frame checked out of the shared `BufferPool`, returned by
+        // the round driver after the fold, so a steady-state round performs
+        // zero encode-side heap allocation (pinned by tests/alloc_count.rs).
         let n_samples = self.shard.n_samples(mm.x_elem_shape.first().copied().unwrap_or(1) + 1) as u32;
-        let payload = encode_update_cached_with(
-            &mut scratch.encode,
-            self.client_id as u32,
-            self.round as u32,
-            n_samples,
-            &masked,
-            self.cfg.encoding,
-            self.index_cache.as_deref(),
-        );
+        let mut payload = scratch.buffers.take();
+        let nnz = match self.cfg.masking {
+            MaskPolicy::Selective { gamma, engine: MaskEngine::Rust, scope } => {
+                mask_stream_selective(
+                    &params,
+                    &global,
+                    gamma,
+                    &mm.layers,
+                    scope,
+                    &mut scratch.mask,
+                    &mut scratch.stream,
+                )?;
+                encode_masked(
+                    &mut scratch.encode,
+                    &mut payload,
+                    self.client_id as u32,
+                    self.round as u32,
+                    n_samples,
+                    &scratch.stream,
+                    self.cfg.encoding,
+                    self.index_cache.as_deref(),
+                )?;
+                scratch.stream.nnz()
+            }
+            _ => {
+                let masked = match self.cfg.masking {
+                    MaskPolicy::None => params,
+                    MaskPolicy::Random { gamma } => {
+                        let mut rng = self.rng(0xa5);
+                        random_mask_rust(&params, gamma, &mm.layers, &mut rng)
+                    }
+                    MaskPolicy::Selective { gamma, .. } => {
+                        engine.mask(model, &params, &global, gamma)?
+                    }
+                };
+                let nnz = match self.cfg.masking {
+                    MaskPolicy::None => masked.len(),
+                    _ => masked.iter().filter(|v| **v != 0.0).count(),
+                };
+                encode_update_cached_into(
+                    &mut scratch.encode,
+                    &mut payload,
+                    self.client_id as u32,
+                    self.round as u32,
+                    n_samples,
+                    &masked,
+                    self.cfg.encoding,
+                    self.index_cache.as_deref(),
+                );
+                nnz
+            }
+        };
 
         Ok(LocalOutcome {
             client: self.client_id,

@@ -47,6 +47,7 @@ use crate::config::experiment::{ExperimentConfig, NetworkKind};
 use crate::fl::aggregate::{Aggregator, Contribution, SparseContribution};
 use crate::fl::chaos::{ChaosLog, ChaosTransport, DownlinkFate, FaultLog, FaultPlan, UploadFate};
 use crate::fl::tree::ShardedAggregator;
+use crate::runtime::bufpool::BufferPool;
 use crate::sim::availability::{AvailabilityModel, ClientState};
 use crate::sim::rng::Rng;
 use crate::transport::codec::{
@@ -181,6 +182,14 @@ fn support_of_view(view: &WireView<'_>) -> Vec<u32> {
 /// for the driver's post-round cache refresh; `None` disables both. Free
 /// function by design: it needs no engine, so the dead-client regression
 /// tests drive it directly with hand-built channels and transports.
+///
+/// `pool`: the shared payload-frame [`BufferPool`] to return serially
+/// folded payloads to once the fold has consumed them — the downstream
+/// half of the zero-allocation encode loop (workers `take` before
+/// encoding). `None` (tests, poolless callers) simply drops frames as
+/// before. Sharded rounds never return frames: the payload's ownership
+/// moves into the shard worker's channel (see `fl::tree`), and recycling
+/// is an optimization the pool contract says we may skip.
 #[allow(clippy::too_many_arguments)] // round context; precedent: data/synth.rs
 fn drain_round_uploads(
     transport: &mut dyn Transport,
@@ -195,6 +204,7 @@ fn drain_round_uploads(
     tolerate_strays: bool,
     upload_timeout: Duration,
     drain_poll: Duration,
+    pool: Option<&BufferPool>,
 ) -> Result<Drained> {
     let n_jobs = selected.len();
     debug_assert_eq!(expect_upload.len(), n_jobs);
@@ -347,6 +357,9 @@ fn drain_round_uploads(
                     Ok(u) => u,
                     Err(e) => {
                         reject_upload(&mut rejected, tolerate_strays, e)?;
+                        if let Some(pool) = pool {
+                            pool.put(payload);
+                        }
                         continue;
                     }
                 };
@@ -367,6 +380,11 @@ fn drain_round_uploads(
                         values,
                         n_samples: update.n_samples,
                     })?,
+                }
+                // Fold consumed the frame (views may borrow it, so only
+                // now): recycle it to the encode side.
+                if let Some(pool) = pool {
+                    pool.put(payload);
                 }
             }
             // Sharded: ship the body encoded (plus the session's cache);
@@ -545,6 +563,12 @@ pub struct RoundDriver {
     upload_timeout: Duration,
     /// Drain-loop poll granularity (config `drain_poll_ms`).
     drain_poll: Duration,
+    /// The engine pool's shared payload-frame pool, when the server
+    /// attached one: serially folded payloads are `put` back here so the
+    /// encode side can `take` them next round — closing the
+    /// zero-allocation loop. `None` (engine-free tests) keeps the old
+    /// drop-after-fold behavior.
+    buffer_pool: Option<Arc<BufferPool>>,
 }
 
 impl RoundDriver {
@@ -645,6 +669,7 @@ impl RoundDriver {
             decode_scratch: DecodeScratch::default(),
             upload_timeout: DEFAULT_UPLOAD_TIMEOUT,
             drain_poll,
+            buffer_pool: None,
         })
     }
 
@@ -672,6 +697,16 @@ impl RoundDriver {
     /// Override the collect phase's inactivity timeout (tests).
     pub fn set_upload_timeout(&mut self, timeout: Duration) {
         self.upload_timeout = timeout;
+    }
+
+    /// Attach the engine pool's shared payload-frame pool
+    /// ([`crate::runtime::pool::EnginePool::buffer_pool`]): serially
+    /// folded payloads return to it after the fold consumes them, so
+    /// workers' next-round encodes reuse the frames instead of
+    /// allocating. Purely an optimization — correctness is identical
+    /// with or without it.
+    pub fn attach_buffer_pool(&mut self, pool: Arc<BufferPool>) {
+        self.buffer_pool = Some(pool);
     }
 
     /// Upload sink client jobs push their encoded payloads through.
@@ -1031,6 +1066,7 @@ impl RoundDriver {
             tolerate_strays,
             self.upload_timeout,
             self.drain_poll,
+            self.buffer_pool.as_deref(),
         )?;
         self.refresh_index_caches(&outlook.spawned, drained.supports);
         let (dup_frames, dup_bytes) = self.round_duplicates(cohort.round);
@@ -1072,6 +1108,7 @@ impl RoundDriver {
             tolerate_strays,
             self.upload_timeout,
             self.drain_poll,
+            None, // sharded routing moves payload ownership to the workers
         )?;
         self.refresh_index_caches(&outlook.spawned, drained.supports);
         let (dup_frames, dup_bytes) = self.round_duplicates(cohort.round);
@@ -1208,6 +1245,7 @@ mod tests {
             false,
             DEFAULT_UPLOAD_TIMEOUT,
             Duration::from_millis(25),
+            None,
         )
         .unwrap_err();
         let elapsed = started.elapsed();
@@ -1250,6 +1288,7 @@ mod tests {
             false,
             DEFAULT_UPLOAD_TIMEOUT,
             Duration::from_millis(25),
+            None,
         )
         .unwrap_err();
         assert!(err.to_string().contains("client 1 exploded"), "{err}");
@@ -1297,6 +1336,7 @@ mod tests {
                 false,
                 Duration::from_secs(30),
                 Duration::from_millis(25),
+                None,
             )
             .unwrap()
             .metas;
@@ -1347,6 +1387,7 @@ mod tests {
             false,
             Duration::from_millis(150),
             Duration::from_millis(25),
+            None,
         )
         .unwrap_err();
         assert!(matches!(err, Error::Transport(_)), "{err}");
@@ -1382,6 +1423,7 @@ mod tests {
             false,
             Duration::from_secs(5),
             Duration::from_millis(25),
+            None,
         )
         .unwrap_err();
         assert!(err.to_string().contains("round"), "{err}");
@@ -1409,6 +1451,7 @@ mod tests {
             true,
             Duration::from_secs(5),
             Duration::from_millis(25),
+            None,
         )
         .unwrap()
         .metas;
@@ -1907,6 +1950,7 @@ mod tests {
             false,
             Duration::from_secs(30),
             Duration::from_millis(25),
+            None,
         )
         .unwrap();
         let reference = agg.finish().unwrap();
@@ -1929,6 +1973,7 @@ mod tests {
                 false,
                 Duration::from_secs(30),
                 Duration::from_millis(25),
+                None,
             )
             .unwrap()
             .metas;

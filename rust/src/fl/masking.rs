@@ -160,14 +160,30 @@ pub fn keep_count(size: usize, gamma: f32) -> usize {
 #[derive(Debug, Default)]
 pub struct MaskScratch {
     /// |w_new - w_old| per segment entry, in segment order.
-    deltas: Vec<f32>,
+    pub(crate) deltas: Vec<f32>,
     /// Partition workspace for `select_nth_unstable` (kept separate so
     /// `deltas` stays index-aligned with the segment).
-    part: Vec<f32>,
+    pub(crate) part: Vec<f32>,
     /// Global-scope gather buffers.
-    gather_idx: Vec<usize>,
-    gather_new: Vec<f32>,
-    gather_old: Vec<f32>,
+    pub(crate) gather_idx: Vec<usize>,
+    pub(crate) gather_new: Vec<f32>,
+    pub(crate) gather_old: Vec<f32>,
+}
+
+/// Descending k-th-largest partition over `part` (clobbered): returns the
+/// keep threshold and the count of strictly-above-threshold entries — the
+/// seed for the tie budget (`kept`) that the keep walk increments. This is
+/// the single source of truth for selective-mask tie-breaking, shared by
+/// the staged masker below and the fused pipeline (`fl::pipeline`), so the
+/// two paths cannot drift. Requires `1 <= k <= part.len()`.
+pub(crate) fn segment_threshold(part: &mut [f32], k: usize) -> (f32, usize) {
+    debug_assert!(1 <= k && k <= part.len());
+    // threshold = k-th largest |delta|; after the descending partition every
+    // strictly-above-threshold element sits in the prefix [0, k-1), so the
+    // tie budget comes straight from the partition — no second O(n) pass.
+    let (above, nth, _) = part.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+    let t = *nth;
+    (t, above.iter().filter(|d| **d > t).count())
 }
 
 /// Exact selective mask of one flat segment: zero all but the top-k
@@ -186,18 +202,9 @@ fn selective_mask_segment(w_new: &mut [f32], w_old: &[f32], gamma: f32, scratch:
     scratch
         .deltas
         .extend(w_new.iter().zip(w_old).map(|(n, o)| (n - o).abs()));
-    // threshold = k-th largest |delta|; after the descending partition every
-    // strictly-above-threshold element sits in the prefix [0, k-1), so the
-    // tie budget comes straight from the partition — no second O(n) pass.
     scratch.part.clear();
     scratch.part.extend_from_slice(&scratch.deltas);
-    let (thresh, mut kept) = {
-        let (above, nth, _) = scratch
-            .part
-            .select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
-        let t = *nth;
-        (t, above.iter().filter(|d| **d > t).count())
-    };
+    let (thresh, mut kept) = segment_threshold(&mut scratch.part, k);
     // keep d >= thresh, but cap kept count at k to resolve ties exactly
     // like the sort-based oracle (first-come within equal values).
     for (w, &d) in w_new.iter_mut().zip(scratch.deltas.iter()) {

@@ -6,6 +6,10 @@
 //! * [`masking`] — upload masking policies: none, **random** (Alg. 2) and
 //!   **selective top-k by |delta|** (Alg. 4), with both the exact rust
 //!   implementation and the L1 Pallas kernel path.
+//! * [`pipeline`] — the fused mask→stream hot path: selective masking
+//!   emitted directly as a `MaskedStream` (kept pairs plus census
+//!   sideband) for the single-pass encoder — no dense masked vector on
+//!   the upload path (see `docs/SCALE.md` §"Hot path & memory").
 //! * [`aggregate`] — streaming weighted federated averaging (Eq. 2): the
 //!   [`aggregate::Aggregator`] trait folds decoded wire updates as they
 //!   arrive (O(p) state, O(nnz) per sparse fold for FedAvg; buffering
@@ -36,6 +40,7 @@ pub mod chaos;
 pub mod client;
 pub mod driver;
 pub mod masking;
+pub mod pipeline;
 pub mod sampling;
 pub mod server;
 pub mod tree;
@@ -48,5 +53,6 @@ pub use client::receive_broadcast;
 pub use driver::{Cohort, Collected, RoundCost, RoundDriver, RoundWire};
 pub use tree::ShardedAggregator;
 pub use masking::{MaskEngine, MaskPolicy, MaskScope, MaskScratch, MaskTarget};
+pub use pipeline::mask_stream_selective;
 pub use sampling::SamplingSchedule;
 pub use server::{Server, ServerOutcome};

@@ -1,0 +1,452 @@
+//! The fused mask→stream pipeline — the client upload hot path.
+//!
+//! [`mask_stream_selective`] is the single-pass twin of
+//! [`selective_mask_rust_with`]: instead of materializing a dense masked
+//! `Vec<f32>` that the encoder then re-walks to census, it feeds the kept
+//! (index, value) pairs of the top-k partition *directly* into a
+//! [`MaskedStream`], which accumulates the census sideband (nnz, varint
+//! gap bytes, quantizer min/max) as the pairs arrive. Downstream,
+//! [`crate::transport::codec::encode_masked`] prices and writes the wire
+//! frame straight from the stream — so on the fused path no dense masked
+//! vector, no second census walk, and no intermediate code vector exist.
+//!
+//! Correctness anchor: the keep decision is *shared code*, not parallel
+//! code — [`segment_threshold`] (the descending `select_nth_unstable`
+//! partition and tie budget) is the same function the staged masker
+//! calls, so the two paths cannot drift on tie-breaking. The property
+//! suite pins `fused == staged` bitwise across every encoding, scope and
+//! mask target (`tests/properties.rs`).
+//!
+//! This module is on the `fedlint` panic-free SCOPE (whole file): no
+//! indexing, no unwrap/expect, typed errors for contract violations the
+//! staged path would assert on. Layer tables that are in-bounds but not
+//! sorted/disjoint (never produced by a manifest, but representable) take
+//! a cold fallback through the staged masker so the emitted stream stays
+//! bitwise-faithful to the oracle in every reachable configuration.
+
+use crate::fl::masking::{
+    keep_count, segment_threshold, selective_mask_rust_with, MaskScope, MaskScratch,
+};
+use crate::runtime::manifest::LayerInfo;
+use crate::transport::codec::MaskedStream;
+use crate::util::error::{Error, Result};
+
+/// Every layer's `[offset, offset + size)` fits in a `p`-vector without
+/// overflow.
+fn table_in_bounds(layers: &[LayerInfo], p: usize) -> bool {
+    layers
+        .iter()
+        .all(|l| l.offset.checked_add(l.size).is_some_and(|end| end <= p))
+}
+
+/// Layers are sorted by offset and non-overlapping — the precondition for
+/// emitting stream indices in strictly increasing order with one walk.
+fn table_sorted_disjoint(layers: &[LayerInfo]) -> bool {
+    let mut pos = 0usize;
+    for l in layers {
+        if l.offset < pos {
+            return false;
+        }
+        // in-bounds was checked first, so this add cannot overflow; stay
+        // defensive anyway
+        match l.offset.checked_add(l.size) {
+            Some(end) => pos = end,
+            None => return false,
+        }
+    }
+    true
+}
+
+/// Emit `w[start..end]` into the stream verbatim (gaps between layers and
+/// unmasked layers pass through untouched; the stream drops exact zeros,
+/// exactly as the census would have).
+fn push_passthrough(stream: &mut MaskedStream, w: &[f32], start: usize, end: usize) {
+    if let Some(seg) = w.get(start..end) {
+        for (j, &v) in seg.iter().enumerate() {
+            stream.push((start + j) as u32, v);
+        }
+    }
+}
+
+/// Fused equivalent of `selective_mask_segment`: top-k of one masked
+/// segment by |w_new - w_old|, kept entries pushed into the stream at
+/// `offset + j` instead of zeroing the rest in place.
+fn push_segment_masked(
+    stream: &mut MaskedStream,
+    w_new: &[f32],
+    w_old: &[f32],
+    offset: usize,
+    gamma: f32,
+    scratch: &mut MaskScratch,
+) {
+    let n = w_new.len();
+    let k = keep_count(n, gamma);
+    if k == 0 {
+        return; // the staged path zero-fills; here the entries just never exist
+    }
+    if k >= n {
+        for (j, &v) in w_new.iter().enumerate() {
+            stream.push((offset + j) as u32, v);
+        }
+        return;
+    }
+    scratch.deltas.clear();
+    scratch
+        .deltas
+        .extend(w_new.iter().zip(w_old).map(|(n, o)| (n - o).abs()));
+    scratch.part.clear();
+    scratch.part.extend_from_slice(&scratch.deltas);
+    let (thresh, mut kept) = segment_threshold(&mut scratch.part, k);
+    // keep d >= thresh, tie budget capped at k — the same walk, in the
+    // same order, as the staged masker
+    for ((j, &w), &d) in w_new.iter().enumerate().zip(scratch.deltas.iter()) {
+        let keep = if d > thresh {
+            true
+        } else if d == thresh && kept < k {
+            kept += 1;
+            true
+        } else {
+            false
+        };
+        if keep {
+            stream.push((offset + j) as u32, w);
+        }
+    }
+}
+
+/// Selective masking (Alg. 4) fused with stream construction: fills
+/// `stream` with exactly the (index, value) pairs that
+/// `selective_mask_rust_with(w_new, w_old, gamma, layers, scope)` would
+/// leave non-zero, in one pass, with zero steady-state allocation (all
+/// buffers live in `scratch` / `stream` and reuse capacity).
+///
+/// Errors (typed, where the staged path would panic): `w_new` / `w_old`
+/// length mismatch, or a layer extending past the model dimension.
+pub fn mask_stream_selective(
+    w_new: &[f32],
+    w_old: &[f32],
+    gamma: f32,
+    layers: &[LayerInfo],
+    scope: MaskScope,
+    scratch: &mut MaskScratch,
+    stream: &mut MaskedStream,
+) -> Result<()> {
+    let p = w_new.len();
+    if w_old.len() != p {
+        return Err(Error::invalid(format!(
+            "pipeline: w_new has {p} params, w_old has {}",
+            w_old.len()
+        )));
+    }
+    if !table_in_bounds(layers, p) {
+        return Err(Error::invalid(format!(
+            "pipeline: layer table extends past model dimension {p}"
+        )));
+    }
+    if !table_sorted_disjoint(layers) {
+        // cold path for irregular (test-only) tables: run the staged
+        // oracle and lift its dense result into the stream — allocates,
+        // but stays bitwise-faithful where the fused walk cannot run
+        let masked = selective_mask_rust_with(w_new, w_old, gamma, layers, scope, scratch);
+        stream.from_dense(&masked);
+        return Ok(());
+    }
+
+    stream.reset(p);
+    match scope {
+        MaskScope::PerLayer => {
+            let mut pos = 0usize;
+            for l in layers {
+                push_passthrough(stream, w_new, pos, l.offset);
+                let end = l.offset + l.size;
+                if l.masked {
+                    let (Some(ns), Some(os)) =
+                        (w_new.get(l.offset..end), w_old.get(l.offset..end))
+                    else {
+                        return Err(Error::invalid("pipeline: layer slice out of range"));
+                    };
+                    push_segment_masked(stream, ns, os, l.offset, gamma, scratch);
+                } else {
+                    push_passthrough(stream, w_new, l.offset, end);
+                }
+                pos = end;
+            }
+            push_passthrough(stream, w_new, pos, p);
+        }
+        MaskScope::Global => {
+            // pass 1: gather |delta| over all masked entries, in table
+            // (== index) order, and derive the joint threshold
+            scratch.deltas.clear();
+            for l in layers.iter().filter(|l| l.masked) {
+                let end = l.offset + l.size;
+                let (Some(ns), Some(os)) = (w_new.get(l.offset..end), w_old.get(l.offset..end))
+                else {
+                    return Err(Error::invalid("pipeline: layer slice out of range"));
+                };
+                scratch
+                    .deltas
+                    .extend(ns.iter().zip(os).map(|(n, o)| (n - o).abs()));
+            }
+            let m = scratch.deltas.len();
+            let k = keep_count(m, gamma);
+            let keep_all = k >= m;
+            let (thresh, mut kept) = if keep_all || k == 0 {
+                (0.0f32, 0usize) // unused sentinels; both branches short-circuit
+            } else {
+                scratch.part.clear();
+                scratch.part.extend_from_slice(&scratch.deltas);
+                segment_threshold(&mut scratch.part, k)
+            };
+            // pass 2: one walk over the model — passthrough outside the
+            // masked regions, the shared keep rule (with a single global
+            // tie budget) inside them, a cursor into the gathered deltas
+            let mut pos = 0usize;
+            let mut dcur = 0usize;
+            for l in layers {
+                push_passthrough(stream, w_new, pos, l.offset);
+                let end = l.offset + l.size;
+                if l.masked {
+                    let (Some(ns), Some(ds)) =
+                        (w_new.get(l.offset..end), scratch.deltas.get(dcur..dcur + l.size))
+                    else {
+                        return Err(Error::invalid("pipeline: delta cursor out of range"));
+                    };
+                    for ((j, &w), &d) in ns.iter().enumerate().zip(ds.iter()) {
+                        let keep = if keep_all {
+                            true
+                        } else if k == 0 {
+                            false
+                        } else if d > thresh {
+                            true
+                        } else if d == thresh && kept < k {
+                            kept += 1;
+                            true
+                        } else {
+                            false
+                        };
+                        if keep {
+                            stream.push((l.offset + j) as u32, w);
+                        }
+                    }
+                    dcur += l.size;
+                } else {
+                    push_passthrough(stream, w_new, l.offset, end);
+                }
+                pos = end;
+            }
+            push_passthrough(stream, w_new, pos, p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::masking::selective_mask_rust;
+    use crate::util::prop::{check, Gen};
+
+    fn layers_of(sizes: &[(usize, bool)]) -> Vec<LayerInfo> {
+        let mut out = Vec::new();
+        let mut offset = 0;
+        for (i, &(size, masked)) in sizes.iter().enumerate() {
+            out.push(LayerInfo {
+                name: format!("l{i}"),
+                shape: vec![size],
+                offset,
+                size,
+                masked,
+            });
+            offset += size;
+        }
+        out
+    }
+
+    fn stream_to_dense(stream: &MaskedStream) -> Vec<f32> {
+        let mut out = vec![0.0f32; stream.p()];
+        for (&i, &v) in stream.indices().iter().zip(stream.values()) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    #[test]
+    fn fused_stream_matches_staged_mask_both_scopes() {
+        check("fused mask == staged mask", 60, |g| {
+            let a = g.usize_in(4, 200);
+            let b = g.usize_in(4, 200);
+            let c = g.usize_in(1, 50);
+            let gamma = g.f32_in(0.05, 1.0);
+            let layers = layers_of(&[(a, true), (c, false), (b, true)]);
+            let p = a + b + c;
+            let wn = g.normal_vec(p);
+            let wo = g.normal_vec(p);
+            let mut scratch = MaskScratch::default();
+            let mut stream = MaskedStream::default();
+            for scope in [MaskScope::PerLayer, MaskScope::Global] {
+                let staged = selective_mask_rust(&wn, &wo, gamma, &layers, scope);
+                mask_stream_selective(&wn, &wo, gamma, &layers, scope, &mut scratch, &mut stream)
+                    .unwrap();
+                assert_eq!(
+                    stream_to_dense(&stream),
+                    staged,
+                    "scope {scope:?} seed {:#x}",
+                    g.seed
+                );
+                assert_eq!(
+                    stream.nnz(),
+                    staged.iter().filter(|v| **v != 0.0).count(),
+                    "nnz sideband must match"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn tie_heavy_input_matches_staged_exactly() {
+        // constant |delta| everywhere: every entry ties, the budget walk
+        // decides — both paths must pick the same prefix
+        let layers = layers_of(&[(10, true), (10, true)]);
+        let wo = vec![0.0f32; 20];
+        let wn = vec![2.0f32; 20];
+        let mut scratch = MaskScratch::default();
+        let mut stream = MaskedStream::default();
+        for scope in [MaskScope::PerLayer, MaskScope::Global] {
+            let staged = selective_mask_rust(&wn, &wo, 0.5, &layers, scope);
+            mask_stream_selective(&wn, &wo, 0.5, &layers, scope, &mut scratch, &mut stream)
+                .unwrap();
+            assert_eq!(stream_to_dense(&stream), staged, "{scope:?}");
+        }
+    }
+
+    #[test]
+    fn gaps_and_unmasked_layers_pass_through() {
+        // a layer table with a hole: [0,5) masked, [5,8) untracked gap,
+        // [8,12) unmasked — gap and unmasked entries must arrive verbatim
+        let layers = vec![
+            LayerInfo {
+                name: "a".into(),
+                shape: vec![5],
+                offset: 0,
+                size: 5,
+                masked: true,
+            },
+            LayerInfo {
+                name: "b".into(),
+                shape: vec![4],
+                offset: 8,
+                size: 4,
+                masked: false,
+            },
+        ];
+        let wn: Vec<f32> = (1..=12).map(|i| i as f32).collect();
+        let wo = vec![0.0f32; 12];
+        let mut scratch = MaskScratch::default();
+        let mut stream = MaskedStream::default();
+        mask_stream_selective(
+            &wn,
+            &wo,
+            0.4,
+            &layers,
+            MaskScope::PerLayer,
+            &mut scratch,
+            &mut stream,
+        )
+        .unwrap();
+        let dense = stream_to_dense(&stream);
+        assert_eq!(&dense[5..12], &wn[5..12], "gap + unmasked pass through");
+        assert_eq!(dense[..5].iter().filter(|v| **v != 0.0).count(), 2); // keep_count(5, 0.4)
+    }
+
+    #[test]
+    fn empty_and_all_zero_inputs() {
+        let mut scratch = MaskScratch::default();
+        let mut stream = MaskedStream::default();
+        // empty model
+        mask_stream_selective(
+            &[],
+            &[],
+            0.5,
+            &[],
+            MaskScope::PerLayer,
+            &mut scratch,
+            &mut stream,
+        )
+        .unwrap();
+        assert_eq!(stream.nnz(), 0);
+        assert_eq!(stream.p(), 0);
+        // all-zero weights: everything masked or not, nothing survives
+        let layers = layers_of(&[(16, true)]);
+        let wn = vec![0.0f32; 16];
+        let wo = vec![0.0f32; 16];
+        for scope in [MaskScope::PerLayer, MaskScope::Global] {
+            mask_stream_selective(&wn, &wo, 0.5, &layers, scope, &mut scratch, &mut stream)
+                .unwrap();
+            assert_eq!(stream.nnz(), 0, "{scope:?}");
+        }
+    }
+
+    #[test]
+    fn contract_violations_are_typed_errors() {
+        let mut scratch = MaskScratch::default();
+        let mut stream = MaskedStream::default();
+        // length mismatch
+        let err = mask_stream_selective(
+            &[1.0, 2.0],
+            &[1.0],
+            0.5,
+            &[],
+            MaskScope::PerLayer,
+            &mut scratch,
+            &mut stream,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("w_old"), "{err}");
+        // out-of-bounds layer
+        let layers = layers_of(&[(10, true)]);
+        let err = mask_stream_selective(
+            &[0.0; 5],
+            &[0.0; 5],
+            0.5,
+            &layers,
+            MaskScope::PerLayer,
+            &mut scratch,
+            &mut stream,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("past model dimension"), "{err}");
+    }
+
+    #[test]
+    fn unsorted_table_takes_the_staged_fallback_bitwise() {
+        // two disjoint but out-of-order layers: fused walk can't emit
+        // increasing indices, so the result must equal the staged oracle
+        let layers = vec![
+            LayerInfo {
+                name: "hi".into(),
+                shape: vec![6],
+                offset: 6,
+                size: 6,
+                masked: true,
+            },
+            LayerInfo {
+                name: "lo".into(),
+                shape: vec![6],
+                offset: 0,
+                size: 6,
+                masked: true,
+            },
+        ];
+        let mut g = Gen::new(11);
+        let wn = g.normal_vec(12);
+        let wo = g.normal_vec(12);
+        let mut scratch = MaskScratch::default();
+        let mut stream = MaskedStream::default();
+        for scope in [MaskScope::PerLayer, MaskScope::Global] {
+            let staged = selective_mask_rust(&wn, &wo, 0.3, &layers, scope);
+            mask_stream_selective(&wn, &wo, 0.3, &layers, scope, &mut scratch, &mut stream)
+                .unwrap();
+            assert_eq!(stream_to_dense(&stream), staged, "{scope:?}");
+        }
+    }
+}

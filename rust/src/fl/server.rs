@@ -141,7 +141,11 @@ impl Server {
         let cfg = Arc::new(cfg);
         // The communication plane: builds the configured transport.
         // Sessions open lazily, per cohort, at each round's broadcast.
-        let driver = RoundDriver::new(Arc::clone(&cfg), p)?;
+        let mut driver = RoundDriver::new(Arc::clone(&cfg), p)?;
+        // Close the payload-recycling loop: serially folded frames return
+        // to the pool the workers encode out of, so steady-state rounds
+        // perform zero encode-side heap allocation (tests/alloc_count.rs).
+        driver.attach_buffer_pool(Arc::clone(pool.buffer_pool()));
 
         Ok(Server {
             cfg,

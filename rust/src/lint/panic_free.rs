@@ -74,6 +74,14 @@ pub const SCOPE: Scope = &[
             "corrupt",
         ]),
     ),
+    // the fused mask→stream pipeline: the per-client hot path every
+    // worker runs every round — a panic here kills the worker thread and
+    // with it the whole round
+    ("rust/src/fl/pipeline.rs", None),
+    // the shared payload-frame pool: sits on the same hot path on both
+    // the encode (worker) and fold (drain) sides; a poisoned mutex must
+    // degrade, never panic
+    ("rust/src/runtime/bufpool.rs", None),
 ];
 
 const MACRO_TOKENS: &[&str] = &["panic!", "unreachable!", "todo!", "unimplemented!"];

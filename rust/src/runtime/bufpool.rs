@@ -1,0 +1,139 @@
+//! A shared pool of reusable `Vec<u8>` payload buffers — the encode-side
+//! analog of the decoder's `DecodeScratch` discipline.
+//!
+//! Every client upload used to allocate its wire frame fresh
+//! (`Vec::with_capacity` in the encoder) and drop it after the server
+//! fold — one allocation plus one deallocation per client per round, on
+//! the hottest path the simulation has. The pool closes that loop:
+//! workers [`BufferPool::take`] a buffer before encoding, the payload
+//! travels through the transport as a plain owned `Vec<u8>` (no wrapper
+//! type, so the `UploadSink`/`Transport` signatures are untouched), and
+//! the round driver [`BufferPool::put`]s it back once the fold consumed
+//! it. After the first round every buffer in steady state has warmed to
+//! the largest frame its slot has seen, and the encode path performs
+//! zero heap allocation — pinned by `tests/alloc_count.rs`, and described
+//! in `docs/SCALE.md` §"Hot path & memory".
+//!
+//! Design constraints, in order:
+//!
+//! * **Unintrusive** — `take` hands out a plain `Vec<u8>` (cleared, with
+//!   whatever capacity its previous life earned); `put` accepts any
+//!   `Vec<u8>`, including ones the pool never issued. Payloads that exit
+//!   through a path that cannot return them (a sharded aggregation
+//!   worker, a socket writer) are simply dropped — the pool refills
+//!   lazily; recycling is an optimization, never a correctness
+//!   obligation.
+//! * **Bounded** — at most [`BufferPool::MAX_POOLED`] buffers are
+//!   retained; beyond that `put` drops. A burst can therefore never pin
+//!   unbounded memory on the pool.
+//! * **Panic-free** — this type sits on the upload hot path next to
+//!   untrusted-input code, so it observes the same `fedlint` panic-free
+//!   discipline (`lint::panic_free::SCOPE`): a poisoned mutex degrades to
+//!   allocate-fresh / drop, never a panic.
+
+use std::sync::Mutex;
+
+/// A bounded, mutex-guarded stack of cleared `Vec<u8>` buffers shared by
+/// every worker of an engine pool and the round driver's drain loop.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    slots: Mutex<Vec<Vec<u8>>>,
+}
+
+impl BufferPool {
+    /// Retention bound: `put` beyond this many pooled buffers drops the
+    /// buffer instead. Sized to the largest worker fan-out the engine
+    /// pool reaches plus in-flight frames in the drain loop.
+    pub const MAX_POOLED: usize = 64;
+
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// Check out a cleared buffer: a recycled one when available (keeping
+    /// the capacity it earned in earlier rounds), a fresh empty `Vec`
+    /// otherwise. A poisoned pool degrades to the fresh path.
+    pub fn take(&self) -> Vec<u8> {
+        match self.slots.lock() {
+            Ok(mut slots) => slots.pop().unwrap_or_default(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Return a buffer to the pool. The buffer is cleared here (length
+    /// zero, capacity kept) so a future `take` can never observe stale
+    /// bytes. Zero-capacity buffers and overflow beyond
+    /// [`Self::MAX_POOLED`] are dropped; a poisoned pool drops too.
+    pub fn put(&self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        if let Ok(mut slots) = self.slots.lock() {
+            if slots.len() < Self::MAX_POOLED {
+                slots.push(buf);
+            }
+        }
+    }
+
+    /// Buffers currently pooled (diagnostics / tests).
+    pub fn pooled(&self) -> usize {
+        match self.slots.lock() {
+            Ok(slots) => slots.len(),
+            Err(_) => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_from_empty_pool_is_a_fresh_buffer() {
+        let pool = BufferPool::new();
+        let b = pool.take();
+        assert!(b.is_empty());
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn put_take_roundtrip_preserves_capacity_and_clears_contents() {
+        let pool = BufferPool::new();
+        let mut b = pool.take();
+        b.extend_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let cap = b.capacity();
+        pool.put(b);
+        assert_eq!(pool.pooled(), 1);
+        let b = pool.take();
+        assert!(b.is_empty(), "recycled buffer must come back cleared");
+        assert_eq!(b.capacity(), cap, "recycled buffer must keep its capacity");
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_not_pooled() {
+        let pool = BufferPool::new();
+        pool.put(Vec::new());
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn retention_is_bounded() {
+        let pool = BufferPool::new();
+        for _ in 0..BufferPool::MAX_POOLED + 10 {
+            pool.put(Vec::with_capacity(16));
+        }
+        assert_eq!(pool.pooled(), BufferPool::MAX_POOLED);
+    }
+
+    #[test]
+    fn foreign_buffers_are_accepted() {
+        // the drain loop returns payloads the pool never issued (e.g. a
+        // socket transport's read buffer) — that must just work
+        let pool = BufferPool::new();
+        pool.put(vec![9u8; 100]);
+        assert_eq!(pool.pooled(), 1);
+        assert_eq!(pool.take().capacity(), 100);
+    }
+}

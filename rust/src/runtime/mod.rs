@@ -7,15 +7,19 @@
 //!   entry points (`init` / `train_epoch` / `eval_chunk` / `mask`).
 //! * [`pool`] — a multi-worker engine pool (PJRT wrappers are not `Send`,
 //!   so each worker thread owns a full engine; jobs fan out over a channel).
+//! * [`bufpool`] — the shared upload-frame buffer pool backing the
+//!   zero-allocation encode path (see `docs/SCALE.md` §"Hot path & memory").
 //!
 //! Python never runs here: the rust binary is self-contained once
 //! `make artifacts` has produced the HLO text.
 
+pub mod bufpool;
 pub mod engine;
 pub mod manifest;
 pub mod pool;
 pub mod tensor;
 
+pub use bufpool::BufferPool;
 pub use engine::Engine;
 pub use manifest::{LayerInfo, Manifest, ModelManifest};
 pub use pool::EnginePool;

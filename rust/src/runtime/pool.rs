@@ -30,19 +30,38 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::fl::masking::MaskScratch;
+use crate::runtime::bufpool::BufferPool;
 use crate::runtime::engine::Engine;
 use crate::runtime::manifest::Manifest;
-use crate::transport::codec::EncodeScratch;
+use crate::transport::codec::{EncodeScratch, MaskedStream};
 use crate::util::error::{Error, Result};
 
 /// Per-worker reusable buffers, created once per worker thread and threaded
 /// through every scratch-aware job it runs.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct WorkerScratch {
     /// Selective-masking arena (per-segment deltas + partition workspace).
     pub mask: MaskScratch,
-    /// Wire-encode temporaries (q8 value gather).
+    /// Wire-encode temporaries (q8 value gather, set-delta, code buffer).
     pub encode: EncodeScratch,
+    /// The fused pipeline's kept-pairs + census-sideband stream
+    /// (`fl::pipeline` fills it, `encode_masked` drains it).
+    pub stream: MaskedStream,
+    /// Payload-frame pool shared by every worker of the pool and the round
+    /// driver's drain loop (take before encode, put after fold). Defaults
+    /// to a private pool so standalone scratches still recycle per-worker.
+    pub buffers: Arc<BufferPool>,
+}
+
+impl Default for WorkerScratch {
+    fn default() -> WorkerScratch {
+        WorkerScratch {
+            mask: MaskScratch::default(),
+            encode: EncodeScratch::default(),
+            stream: MaskedStream::default(),
+            buffers: Arc::new(BufferPool::new()),
+        }
+    }
 }
 
 type Job = Box<dyn FnOnce(&Engine, &mut WorkerScratch) + Send + 'static>;
@@ -52,6 +71,10 @@ pub struct EnginePool {
     tx: Sender<Job>,
     handles: Vec<JoinHandle<()>>,
     workers: usize,
+    /// The payload-frame pool every worker's [`WorkerScratch`] shares;
+    /// the server hands the same `Arc` to the round driver so drained
+    /// payloads flow back to the encoders.
+    buffers: Arc<BufferPool>,
 }
 
 impl EnginePool {
@@ -62,12 +85,14 @@ impl EnginePool {
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let buffers = Arc::new(BufferPool::new());
         let mut handles = Vec::with_capacity(workers);
         for wid in 0..workers {
             let rx = Arc::clone(&rx);
             let ready = ready_tx.clone();
             let manifest = manifest.clone();
             let models: Vec<String> = models.iter().map(|s| s.to_string()).collect();
+            let worker_buffers = Arc::clone(&buffers);
             handles.push(std::thread::spawn(move || {
                 let model_refs: Vec<&str> = models.iter().map(String::as_str).collect();
                 let engine = match Engine::load(&manifest, &model_refs) {
@@ -81,7 +106,10 @@ impl EnginePool {
                     }
                 };
                 log::debug!("engine pool worker {wid} ready");
-                let mut scratch = WorkerScratch::default();
+                let mut scratch = WorkerScratch {
+                    buffers: worker_buffers,
+                    ..WorkerScratch::default()
+                };
                 loop {
                     // Hold the lock only while receiving, not while running.
                     let job = match rx.lock() {
@@ -105,11 +133,19 @@ impl EnginePool {
             tx,
             handles,
             workers,
+            buffers,
         })
     }
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The shared payload-frame pool — hand this to the round driver
+    /// ([`crate::fl::driver::RoundDriver::attach_buffer_pool`]) so frames
+    /// drained by the serial fold loop return to the encode side.
+    pub fn buffer_pool(&self) -> &Arc<BufferPool> {
+        &self.buffers
     }
 
     /// Submit a job; returns a receiver for its result.

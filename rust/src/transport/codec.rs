@@ -64,8 +64,8 @@
 //! reads.
 
 use crate::transport::quantize::{
-    q4_code, quantize, quantize4, rice_decode, rice_encode, rice_plan, Quantized, Quantized4,
-    RICE_MAX_K,
+    grid_code, grid_scale, q4_code, quantize, quantize4, rice_decode, rice_encode, rice_plan,
+    Quantized, Quantized4, RICE_MAX_K,
 };
 use crate::transport::session::IndexCache;
 use crate::util::error::{Error, Result};
@@ -391,19 +391,29 @@ impl WireUpdate {
         }
     }
 
-    /// Materialize the full dense vector (O(p)); test/compat convenience —
-    /// the server hot path never calls this.
-    pub fn to_dense(&self) -> Vec<f32> {
+    /// The full dense vector as a copy-on-write view: a dense body is
+    /// **borrowed** (no O(p) copy — the broadcast-decode path reads the
+    /// model through this without deep-copying it per client), a sparse
+    /// body is materialized. Callers that only read keep the borrow;
+    /// `into_owned()` reproduces the old [`Self::to_dense`] behavior.
+    pub fn dense_cow(&self) -> std::borrow::Cow<'_, [f32]> {
         match &self.body {
-            DecodedBody::Dense(v) => v.clone(),
+            DecodedBody::Dense(v) => std::borrow::Cow::Borrowed(v.as_slice()),
             DecodedBody::Sparse { indices, values } => {
                 let mut out = vec![0.0f32; self.p];
                 for (&i, &v) in indices.iter().zip(values) {
                     out[i as usize] = v;
                 }
-                out
+                std::borrow::Cow::Owned(out)
             }
         }
+    }
+
+    /// Materialize the full dense vector (O(p)); test/compat convenience —
+    /// the server hot path never calls this. Prefer [`Self::dense_cow`]
+    /// when the caller only needs to read.
+    pub fn to_dense(&self) -> Vec<f32> {
+        self.dense_cow().into_owned()
     }
 
     /// [`Self::to_dense`], consuming: a dense body is moved out, not cloned.
@@ -453,14 +463,21 @@ pub struct DecodeScratch {
     codes: Vec<u8>,
 }
 
-/// Reusable encode temporaries (the q8 sparse value gather and the
-/// cached-arm set-delta lists). The returned payload itself is an owned
-/// message and is allocated per call — it outlives the encoder by design.
+/// Reusable encode temporaries (the q8 sparse value gather, the
+/// cached-arm set-delta lists, and the fused path's quantizer-code and
+/// group-grid buffers). Held across payloads — the `*_into` entry points
+/// and [`encode_masked`] write into a caller-supplied output buffer too,
+/// so a worker that also recycles its frame buffers (see
+/// `runtime::bufpool::BufferPool`) encodes with zero steady-state heap
+/// allocation.
 #[derive(Debug, Default)]
 pub struct EncodeScratch {
     vals: Vec<f32>,
     removed: Vec<u32>,
     added: Vec<u32>,
+    /// Quantizer codes of the fused path (q8 / grouped-q8 / Rice arms) —
+    /// replaces the per-call `codes` vectors the staged arms allocate.
+    codes: Vec<u8>,
 }
 
 /// Wire size in bytes for a payload with `nnz` non-zeros out of `p`.
@@ -548,8 +565,8 @@ pub fn encode_update_with(
     encode_update_cached_with(scratch, client, round, n_samples, params, enc, None)
 }
 
-/// [`encode_update_cached`] with caller-held scratch — the full-featured
-/// encoder every other entry point delegates to.
+/// [`encode_update_cached`] with caller-held scratch — delegates to
+/// [`encode_update_cached_into`] with a fresh output buffer.
 pub fn encode_update_cached_with(
     scratch: &mut EncodeScratch,
     client: u32,
@@ -559,6 +576,27 @@ pub fn encode_update_cached_with(
     enc: Encoding,
     cache: Option<&IndexCache>,
 ) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_update_cached_into(scratch, &mut out, client, round, n_samples, params, enc, cache);
+    out
+}
+
+/// The full-featured staged encoder every other entry point delegates
+/// to, writing the frame into a caller-supplied buffer (`out` is cleared
+/// first, then filled) — with a recycled buffer from
+/// `runtime::bufpool::BufferPool` the steady-state frame write allocates
+/// nothing. Byte-for-byte identical output to the allocating wrappers.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_update_cached_into(
+    scratch: &mut EncodeScratch,
+    out: &mut Vec<u8>,
+    client: u32,
+    round: u32,
+    n_samples: u32,
+    params: &[f32],
+    enc: Encoding,
+    cache: Option<&IndexCache>,
+) {
     let p = params.len();
     // Only the payload-dependent encodings need the varint census; the
     // flat sparse choice needs just the non-zero count, and a fixed dense
@@ -674,7 +712,8 @@ pub fn encode_update_cached_with(
             }
         }
     };
-    let mut out = Vec::with_capacity(HEADER_BYTES + body_len);
+    out.clear();
+    out.reserve(HEADER_BYTES + body_len);
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.push(VERSION);
     out.push(tag);
@@ -835,7 +874,492 @@ pub fn encode_update_cached_with(
         HEADER_BYTES + body_len,
         "codec: emitted size disagrees with the selection-time size formula"
     );
-    out
+}
+
+// ---------------------------------------------------------------------
+// Fused mask→quantize→encode path (the client upload hot path)
+// ---------------------------------------------------------------------
+
+/// The kept (index, value) pairs of a masked update **plus the census
+/// sideband accumulated in the same pass**: non-zero count, the exact
+/// varint byte length of the sparse-delta index-gap block, the carried
+/// value range for the quantizer grids, and a finiteness flag.
+///
+/// Produced directly by the selective masker's partition
+/// (`fl::pipeline::mask_stream_selective`) — so no dense masked vector
+/// ever exists on the upload path — and consumed by [`encode_masked`],
+/// which prices every wire arm from the sideband without the second
+/// census walk the staged `encode_update_*` entry points perform.
+/// Entries with value exactly `0.0` are dropped at [`MaskedStream::push`]
+/// (a kept-but-zero weight is indistinguishable on the wire from a
+/// masked one — the same rule [`census`] applies to a dense payload).
+///
+/// The buffers are reused across rounds: `reset` keeps capacity, so a
+/// worker holding its stream in `WorkerScratch` builds it with zero
+/// steady-state allocation.
+#[derive(Debug, Clone)]
+pub struct MaskedStream {
+    /// Full model dimension the indices address into.
+    p: usize,
+    /// Strictly increasing kept positions.
+    indices: Vec<u32>,
+    /// The kept values, all non-zero, in index order.
+    values: Vec<f32>,
+    /// Exact byte length of the varint index-gap block ([`census`]'s
+    /// second output), accumulated per push.
+    delta_bytes: usize,
+    /// Running min/max over carried values (+inf / -inf while empty).
+    vmin: f32,
+    vmax: f32,
+    /// Every carried value is finite so far (the lossy arms refuse a
+    /// non-finite stream with a typed error).
+    finite: bool,
+}
+
+impl Default for MaskedStream {
+    fn default() -> MaskedStream {
+        MaskedStream {
+            p: 0,
+            indices: Vec::new(),
+            values: Vec::new(),
+            delta_bytes: 0,
+            vmin: f32::INFINITY,
+            vmax: f32::NEG_INFINITY,
+            finite: true,
+        }
+    }
+}
+
+impl MaskedStream {
+    /// Clear the stream for a model of dimension `p`, keeping buffer
+    /// capacity.
+    pub fn reset(&mut self, p: usize) {
+        self.p = p;
+        self.indices.clear();
+        self.values.clear();
+        self.delta_bytes = 0;
+        self.vmin = f32::INFINITY;
+        self.vmax = f32::NEG_INFINITY;
+        self.finite = true;
+    }
+
+    /// Append one kept coordinate. Indices must arrive strictly
+    /// increasing and `< p` (the masker walks the model in order, so
+    /// this is free); a `0.0` value is dropped, mirroring the census
+    /// rule for dense payloads. Note `-0.0 == 0.0`, so negative zeros
+    /// are canonicalized away — see `docs/SCALE.md` §"Hot path & memory"
+    /// for the one (dense-arm) bitwise caveat this creates.
+    pub fn push(&mut self, index: u32, value: f32) {
+        debug_assert!((index as usize) < self.p, "stream index {index} out of range {}", self.p);
+        debug_assert!(
+            self.indices.last().map_or(true, |&last| last < index),
+            "stream indices must be strictly increasing"
+        );
+        if value == 0.0 {
+            return;
+        }
+        let delta = match self.indices.last() {
+            Some(&prev) => index - prev,
+            None => index,
+        };
+        self.delta_bytes += varint_len(delta);
+        self.vmin = self.vmin.min(value);
+        self.vmax = self.vmax.max(value);
+        self.finite &= value.is_finite();
+        self.indices.push(index);
+        self.values.push(value);
+    }
+
+    /// Rebuild the stream from a dense vector — the bridge for payloads
+    /// that were *not* produced by the fused masker (random masking, the
+    /// HLO mask engine, tests).
+    pub fn from_dense(&mut self, params: &[f32]) {
+        self.reset(params.len());
+        for (i, &v) in params.iter().enumerate() {
+            self.push(i as u32, v);
+        }
+    }
+
+    /// Carried (non-zero) entry count.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Full model dimension.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// The kept positions, strictly increasing.
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// The kept values, in index order.
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Quantizer grid over the **carried values only** — what the sparse
+    /// lossy arms use. `(min, scale)`; degenerate `(0.0, 0.0)` when
+    /// empty, matching the staged encoder's empty-gather special case.
+    fn sparse_grid(&self, levels: f32) -> (f32, f32) {
+        if self.values.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (self.vmin, grid_scale(self.vmin, self.vmax, levels))
+        }
+    }
+
+    /// Quantizer grid over the **full dense vector** the stream
+    /// represents — what the dense lossy arms use. When any position is
+    /// zero (`nnz < p`) the staged full-vector min/max fold would have
+    /// included `0.0`, so the carried range is widened to cover it;
+    /// when the stream is full-support the carried range IS the vector
+    /// range. Bit-identical to `quantize(params)`'s grid for finite,
+    /// negative-zero-free input.
+    fn dense_grid(&self, levels: f32) -> (f32, f32) {
+        if self.indices.len() == self.p {
+            self.sparse_grid(levels)
+        } else {
+            let min = self.vmin.min(0.0);
+            let max = self.vmax.max(0.0);
+            (min, grid_scale(min, max, levels))
+        }
+    }
+}
+
+/// Encode a [`MaskedStream`] — the fused-path twin of
+/// [`encode_update_cached_into`]. Same selection structure, same exact
+/// byte-length pricing, same tie-breaking, and (for negative-zero-free
+/// input) byte-for-byte identical frames, but everything is derived from
+/// the stream's census sideband in O(nnz): no dense masked vector, no
+/// second census walk, and no intermediate `codes` allocation (the
+/// grouped/Rice arms write through `scratch.codes`, which is reused
+/// across calls). `out` is cleared, then filled.
+///
+/// Errors (typed, where the staged path would panic): a non-finite
+/// carried value under a lossy encoding.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_masked(
+    scratch: &mut EncodeScratch,
+    out: &mut Vec<u8>,
+    client: u32,
+    round: u32,
+    n_samples: u32,
+    stream: &MaskedStream,
+    enc: Encoding,
+    cache: Option<&IndexCache>,
+) -> Result<()> {
+    let p = stream.p;
+    let nnz = stream.indices.len();
+    let delta_bytes = stream.delta_bytes;
+    if !stream.finite
+        && matches!(enc, Encoding::AutoQ8 | Encoding::AutoQ4 | Encoding::GroupedQ8)
+    {
+        return Err(Error::invalid("cannot quantize non-finite values"));
+    }
+    let body_dense = 4 * p;
+    let body_sparse = 8 * nnz;
+    let body_sparse_delta = delta_bytes + 4 * nnz;
+    let mut rice_k = 0u8;
+    let mut cached_epoch: Option<u32> = None;
+    // Exact byte length of the tag-7 set-delta body against `cache`,
+    // filling `scratch.removed` / `scratch.added` as a side effect — the
+    // same core the staged encoder prices with ([`set_delta_iter`]).
+    let cached_body = |scratch: &mut EncodeScratch, c: &IndexCache| {
+        set_delta_iter(
+            &c.indices,
+            stream.indices.iter().copied(),
+            &mut scratch.removed,
+            &mut scratch.added,
+        );
+        12 + delta_block_len(&scratch.removed) + delta_block_len(&scratch.added) + 4 * nnz
+    };
+    let (tag, body_len) = match enc {
+        Encoding::Dense => (TAG_DENSE, body_dense),
+        Encoding::Sparse => (TAG_SPARSE, body_sparse),
+        Encoding::SparseDelta => (TAG_SPARSE_DELTA, body_sparse_delta),
+        Encoding::Auto => {
+            // ties break toward the earlier (simpler) representation; the
+            // stateful cached arm competes last and must win strictly
+            let mut best = (TAG_DENSE, body_dense);
+            if body_sparse < best.1 {
+                best = (TAG_SPARSE, body_sparse);
+            }
+            if body_sparse_delta < best.1 {
+                best = (TAG_SPARSE_DELTA, body_sparse_delta);
+            }
+            if let Some(c) = cache {
+                let len = cached_body(scratch, c);
+                if len < best.1 {
+                    cached_epoch = Some(c.epoch);
+                    best = (TAG_SPARSE_CACHED, len);
+                }
+            }
+            best
+        }
+        Encoding::AutoQ8 => {
+            // the carried-value quantizer falls straight out of the
+            // sideband's (vmin, vmax) — no gather, codes into scratch
+            let (min, scale) = stream.sparse_grid(255.0);
+            scratch.codes.clear();
+            scratch
+                .codes
+                .extend(stream.values.iter().map(|&v| grid_code(v, min, scale, 255)));
+            let (k, rice_len) = rice_plan(&scratch.codes);
+            let dense_q8 = QHEADER + p;
+            let sparse_q8 = QHEADER + 5 * nnz;
+            let rice = QHEADER + 1 + delta_bytes + rice_len;
+            let best = dense_q8.min(sparse_q8).min(rice);
+            if best == dense_q8 {
+                (TAG_DENSE_Q8, dense_q8)
+            } else if best == sparse_q8 {
+                (TAG_SPARSE_Q8, sparse_q8)
+            } else {
+                rice_k = k;
+                (TAG_SPARSE_RICE8, rice)
+            }
+        }
+        Encoding::AutoQ4 => {
+            let dense_q4 = QHEADER + p.div_ceil(2);
+            let sparse_q4 = QHEADER + delta_bytes + nnz.div_ceil(2);
+            if sparse_q4 < dense_q4 {
+                (TAG_SPARSE_DELTA_Q4, sparse_q4)
+            } else {
+                (TAG_DENSE_Q4, dense_q4)
+            }
+        }
+        Encoding::SparseCached => match cache {
+            Some(c) => {
+                let len = cached_body(scratch, c);
+                if len < body_sparse_delta {
+                    cached_epoch = Some(c.epoch);
+                    (TAG_SPARSE_CACHED, len)
+                } else {
+                    (TAG_SPARSE_DELTA, body_sparse_delta)
+                }
+            }
+            None => (TAG_SPARSE_DELTA, body_sparse_delta),
+        },
+        Encoding::GroupedQ8 => {
+            let dense_gq8 = 8 * p.div_ceil(GQ8_GROUP) + p;
+            let sparse_gq8 = 8 * nnz.div_ceil(GQ8_GROUP) + delta_bytes + nnz;
+            if sparse_gq8 < dense_gq8 {
+                (TAG_SPARSE_GQ8, sparse_gq8)
+            } else {
+                (TAG_DENSE_GQ8, dense_gq8)
+            }
+        }
+    };
+    out.clear();
+    out.reserve(HEADER_BYTES + body_len);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(VERSION);
+    out.push(tag);
+    out.extend_from_slice(&client.to_le_bytes());
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&n_samples.to_le_bytes());
+    out.extend_from_slice(&(p as u32).to_le_bytes());
+    match tag {
+        TAG_DENSE => {
+            // zero-fill + scatter: positions the stream dropped are
+            // 0.0f32's bit pattern (this is where a `-0.0` in the
+            // original vector canonicalizes to `+0.0`)
+            out.extend_from_slice(&(p as u32).to_le_bytes());
+            let start = out.len();
+            out.resize(start + 4 * p, 0);
+            for (&idx, &v) in stream.indices.iter().zip(&stream.values) {
+                let at = start + 4 * idx as usize;
+                out[at..at + 4].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        TAG_SPARSE => {
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            let start = out.len();
+            out.resize(start + 8 * nnz, 0);
+            let pairs = stream.indices.iter().zip(&stream.values);
+            for (slot, (&idx, &v)) in out[start..].chunks_exact_mut(8).zip(pairs) {
+                slot[..4].copy_from_slice(&idx.to_le_bytes());
+                slot[4..].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        TAG_SPARSE_DELTA => {
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            push_index_delta_block(out, &stream.indices);
+            for &v in &stream.values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        TAG_DENSE_Q8 => {
+            let (min, scale) = stream.dense_grid(255.0);
+            out.extend_from_slice(&(p as u32).to_le_bytes());
+            out.extend_from_slice(&min.to_le_bytes());
+            out.extend_from_slice(&scale.to_le_bytes());
+            // fill with the zero-value's code, then scatter kept codes
+            let start = out.len();
+            out.resize(start + p, grid_code(0.0, min, scale, 255));
+            for (&idx, &v) in stream.indices.iter().zip(&stream.values) {
+                out[start + idx as usize] = grid_code(v, min, scale, 255);
+            }
+        }
+        TAG_SPARSE_Q8 => {
+            let (min, scale) = stream.sparse_grid(255.0);
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            out.extend_from_slice(&min.to_le_bytes());
+            out.extend_from_slice(&scale.to_le_bytes());
+            let start = out.len();
+            out.resize(start + 5 * nnz, 0);
+            let pairs = stream.indices.iter().zip(&scratch.codes);
+            for (slot, (&idx, &code)) in out[start..].chunks_exact_mut(5).zip(pairs) {
+                slot[..4].copy_from_slice(&idx.to_le_bytes());
+                slot[4] = code;
+            }
+        }
+        TAG_DENSE_Q4 => {
+            let (min, scale) = stream.dense_grid(15.0);
+            out.extend_from_slice(&(p as u32).to_le_bytes());
+            out.extend_from_slice(&min.to_le_bytes());
+            out.extend_from_slice(&scale.to_le_bytes());
+            let zero = grid_code(0.0, min, scale, 15);
+            let start = out.len();
+            out.resize(start + p.div_ceil(2), zero | (zero << 4));
+            if p % 2 == 1 {
+                // the unused high nibble of an odd-length tensor's last
+                // byte must be zero on the wire
+                if let Some(last) = out.last_mut() {
+                    *last = zero;
+                }
+            }
+            for (&idx, &v) in stream.indices.iter().zip(&stream.values) {
+                let i = idx as usize;
+                let shift = 4 * (i & 1) as u8;
+                let slot = &mut out[start + i / 2];
+                *slot = (*slot & !(0x0f << shift)) | (grid_code(v, min, scale, 15) << shift);
+            }
+        }
+        TAG_SPARSE_DELTA_Q4 => {
+            let (min, scale) = stream.sparse_grid(15.0);
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            out.extend_from_slice(&min.to_le_bytes());
+            out.extend_from_slice(&scale.to_le_bytes());
+            push_index_delta_block(out, &stream.indices);
+            let start = out.len();
+            out.resize(start + nnz.div_ceil(2), 0);
+            for (k, &v) in stream.values.iter().enumerate() {
+                out[start + k / 2] |= grid_code(v, min, scale, 15) << (4 * (k & 1));
+            }
+        }
+        TAG_SPARSE_CACHED => {
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            out.extend_from_slice(
+                &cached_epoch.expect("cache checked at selection").to_le_bytes(),
+            );
+            out.extend_from_slice(&(scratch.removed.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(scratch.added.len() as u32).to_le_bytes());
+            push_index_delta_block(out, &scratch.removed);
+            push_index_delta_block(out, &scratch.added);
+            for &v in &stream.values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        TAG_DENSE_GQ8 => {
+            out.extend_from_slice(&(p as u32).to_le_bytes());
+            // pass 1: per-group grids — heads to the wire, (min, scale)
+            // pairs into the scratch value buffer for the code pass. A
+            // group with no kept entry is all-zero (scale 0); a partially
+            // kept group widens its carried range over 0.0, exactly like
+            // the staged full-chunk fold.
+            scratch.vals.clear();
+            let ngroups = p.div_ceil(GQ8_GROUP);
+            let mut cur = 0usize;
+            for g in 0..ngroups {
+                let lo = g * GQ8_GROUP;
+                let hi = (lo + GQ8_GROUP).min(p);
+                let begin = cur;
+                while cur < nnz && (stream.indices[cur] as usize) < hi {
+                    cur += 1;
+                }
+                let kept = cur - begin;
+                let (mn, mx) = if kept == 0 {
+                    (0.0f32, 0.0f32)
+                } else {
+                    let mut mn = f32::INFINITY;
+                    let mut mx = f32::NEG_INFINITY;
+                    for &v in &stream.values[begin..cur] {
+                        mn = mn.min(v);
+                        mx = mx.max(v);
+                    }
+                    if kept < hi - lo {
+                        (mn.min(0.0), mx.max(0.0))
+                    } else {
+                        (mn, mx)
+                    }
+                };
+                let scale = grid_scale(mn, mx, 255.0);
+                out.extend_from_slice(&mn.to_le_bytes());
+                out.extend_from_slice(&scale.to_le_bytes());
+                scratch.vals.push(mn);
+                scratch.vals.push(scale);
+            }
+            // pass 2: codes written straight into the frame — the staged
+            // arm's per-call `codes` vector does not exist here
+            let start = out.len();
+            out.resize(start + p, 0);
+            let mut cur = 0usize;
+            for g in 0..ngroups {
+                let lo = g * GQ8_GROUP;
+                let hi = (lo + GQ8_GROUP).min(p);
+                let mn = scratch.vals[2 * g];
+                let scale = scratch.vals[2 * g + 1];
+                let zero = grid_code(0.0, mn, scale, 255);
+                if zero != 0 {
+                    out[start + lo..start + hi].fill(zero);
+                }
+                while cur < nnz && (stream.indices[cur] as usize) < hi {
+                    out[start + stream.indices[cur] as usize] =
+                        grid_code(stream.values[cur], mn, scale, 255);
+                    cur += 1;
+                }
+            }
+        }
+        TAG_SPARSE_GQ8 => {
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            // groups are runs of carried values in index order; heads to
+            // the wire, codes into scratch (reused, not allocated)
+            scratch.codes.clear();
+            for chunk in stream.values.chunks(GQ8_GROUP) {
+                let mut mn = f32::INFINITY;
+                let mut mx = f32::NEG_INFINITY;
+                for &v in chunk {
+                    mn = mn.min(v);
+                    mx = mx.max(v);
+                }
+                let scale = grid_scale(mn, mx, 255.0);
+                out.extend_from_slice(&mn.to_le_bytes());
+                out.extend_from_slice(&scale.to_le_bytes());
+                scratch.codes.extend(chunk.iter().map(|&v| grid_code(v, mn, scale, 255)));
+            }
+            push_index_delta_block(out, &stream.indices);
+            out.extend_from_slice(&scratch.codes);
+        }
+        TAG_SPARSE_RICE8 => {
+            let (min, scale) = stream.sparse_grid(255.0);
+            out.extend_from_slice(&(nnz as u32).to_le_bytes());
+            out.extend_from_slice(&min.to_le_bytes());
+            out.extend_from_slice(&scale.to_le_bytes());
+            out.push(rice_k);
+            push_index_delta_block(out, &stream.indices);
+            rice_encode(&scratch.codes, rice_k, out);
+        }
+        _ => unreachable!(),
+    }
+    debug_assert_eq!(
+        out.len(),
+        HEADER_BYTES + body_len,
+        "codec: fused emitted size disagrees with the selection-time size formula"
+    );
+    Ok(())
 }
 
 /// Append the varint delta-coded index block for `params`' non-zero
@@ -880,19 +1404,23 @@ fn delta_block_len(indices: &[u32]) -> usize {
     n
 }
 
-/// Two-pointer set difference of the cached index set against `params`'
-/// non-zero support: `removed` = cached positions now zero, `added` = new
-/// non-zero positions absent from the cache. Both outputs come out sorted
-/// and disjoint — the canonical tag-7 set-delta.
-fn set_delta(cached: &[u32], params: &[f32], removed: &mut Vec<u32>, added: &mut Vec<u32>) {
+/// Two-pointer set difference of the cached index set against a strictly
+/// increasing support iterator: `removed` = cached positions no longer in
+/// the support, `added` = support positions absent from the cache. Both
+/// outputs come out sorted and disjoint — the canonical tag-7 set-delta.
+/// One core serves both the staged encoder (support = a dense payload's
+/// non-zero positions) and the fused encoder (support = the
+/// [`MaskedStream`]'s index list), so the two emit identical blocks.
+fn set_delta_iter(
+    cached: &[u32],
+    support: impl Iterator<Item = u32>,
+    removed: &mut Vec<u32>,
+    added: &mut Vec<u32>,
+) {
     removed.clear();
     added.clear();
     let mut ci = 0usize;
-    for (i, &v) in params.iter().enumerate() {
-        if v == 0.0 {
-            continue;
-        }
-        let idx = i as u32;
+    for idx in support {
         while ci < cached.len() && cached[ci] < idx {
             removed.push(cached[ci]);
             ci += 1;
@@ -904,6 +1432,16 @@ fn set_delta(cached: &[u32], params: &[f32], removed: &mut Vec<u32>, added: &mut
         }
     }
     removed.extend_from_slice(&cached[ci..]);
+}
+
+/// [`set_delta_iter`] over a dense payload's non-zero support.
+fn set_delta(cached: &[u32], params: &[f32], removed: &mut Vec<u32>, added: &mut Vec<u32>) {
+    let support = params
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| **v != 0.0)
+        .map(|(i, _)| i as u32);
+    set_delta_iter(cached, support, removed, added);
 }
 
 fn take<const N: usize>(data: &[u8], at: &mut usize) -> Result<[u8; N]> {

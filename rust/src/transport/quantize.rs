@@ -34,6 +34,34 @@ impl Quantized {
     }
 }
 
+/// Grid step for values spanning `[min, max]` at `levels` quantization
+/// steps (255.0 for q8, 15.0 for q4): `range / levels`, or `0.0` for
+/// zero-range (degenerate, exact) inputs. Shared by the staged
+/// quantizers below and the fused single-pass encoder
+/// (`transport::codec::encode_masked`), so the two paths derive the
+/// same grid bit for bit.
+#[inline]
+pub fn grid_scale(min: f32, max: f32, levels: f32) -> f32 {
+    let range = max - min;
+    if range > 0.0 {
+        range / levels
+    } else {
+        0.0
+    }
+}
+
+/// One value's linear code on the `(min, scale)` grid, clamped to
+/// `[0, max_code]` — the single rounding formula every quantization
+/// consumer shares (see [`grid_scale`]). `scale == 0.0` codes to 0.
+#[inline]
+pub fn grid_code(v: f32, min: f32, scale: f32, max_code: i64) -> u8 {
+    if scale == 0.0 {
+        0u8
+    } else {
+        (((v - min) / scale).round() as i64).clamp(0, max_code) as u8
+    }
+}
+
 /// Quantize to 256 levels over [min, max]. Zero-range inputs get scale 0.
 pub fn quantize(values: &[f32]) -> Result<Quantized> {
     if values.is_empty() {
@@ -44,18 +72,8 @@ pub fn quantize(values: &[f32]) -> Result<Quantized> {
     }
     let min = values.iter().copied().fold(f32::INFINITY, f32::min);
     let max = values.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let range = max - min;
-    let scale = if range > 0.0 { range / 255.0 } else { 0.0 };
-    let codes = values
-        .iter()
-        .map(|&v| {
-            if scale == 0.0 {
-                0u8
-            } else {
-                (((v - min) / scale).round() as i64).clamp(0, 255) as u8
-            }
-        })
-        .collect();
+    let scale = grid_scale(min, max, 255.0);
+    let codes = values.iter().map(|&v| grid_code(v, min, scale, 255)).collect();
     Ok(Quantized { min, scale, codes })
 }
 
@@ -105,16 +123,10 @@ pub fn quantize4(values: &[f32]) -> Result<Quantized4> {
     }
     let min = values.iter().copied().fold(f32::INFINITY, f32::min);
     let max = values.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let range = max - min;
-    let scale = if range > 0.0 { range / 15.0 } else { 0.0 };
+    let scale = grid_scale(min, max, 15.0);
     let mut packed = vec![0u8; values.len().div_ceil(2)];
     for (k, &v) in values.iter().enumerate() {
-        let code = if scale == 0.0 {
-            0u8
-        } else {
-            (((v - min) / scale).round() as i64).clamp(0, 15) as u8
-        };
-        packed[k / 2] |= code << (4 * (k & 1));
+        packed[k / 2] |= grid_code(v, min, scale, 15) << (4 * (k & 1));
     }
     Ok(Quantized4 {
         min,

@@ -1,0 +1,207 @@
+//! Allocation-count regression harness for the fused client hot path.
+//!
+//! The whole point of the fused mask→quantize→encode pipeline and the
+//! shared [`BufferPool`] is that a **steady-state** round performs zero
+//! heap allocation on the client encode side (mask → stream → frame) and
+//! zero on the server fold side (decode view → sparse/dense fold → frame
+//! returned to the pool). This test pins that claim with a counting
+//! global allocator: after a warmup pass brings every scratch buffer to
+//! its steady-state capacity, a full client-encode + server-fold cycle
+//! across the wire encodings the upload path uses must allocate exactly
+//! **zero** times.
+//!
+//! The harness lives in its own integration-test binary so the counting
+//! allocator sees no other tests' traffic, and the one `#[test]` runs on
+//! a single thread, so the count is deterministic. `unsafe` is required
+//! by the `GlobalAlloc` contract and nothing else; the crate-wide
+//! `unsafe_code = "deny"` lint is overridden for this file only.
+
+#![allow(unsafe_code)]
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use fedmask::fl::aggregate::{Contribution, SparseContribution, StreamingFedAvg};
+use fedmask::fl::masking::{MaskScope, MaskScratch};
+use fedmask::fl::pipeline::mask_stream_selective;
+use fedmask::runtime::bufpool::BufferPool;
+use fedmask::runtime::manifest::LayerInfo;
+use fedmask::transport::codec::{
+    decode_update_view_cached, encode_masked, BodyView, DecodeScratch, EncodeScratch, Encoding,
+    MaskedStream,
+};
+use fedmask::transport::session::IndexCache;
+
+/// Counts every allocation (fresh, zeroed, and growth reallocs) passing
+/// through the global allocator. Frees are deliberately not counted: the
+/// invariant under test is "no allocation", not "balanced allocation".
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Everything one steady-state cycle touches, owned across iterations the
+/// way a worker thread (encode side) and the round driver (fold side)
+/// own their scratch across rounds.
+struct Bench {
+    wn: Vec<f32>,
+    wo: Vec<f32>,
+    layers: Vec<LayerInfo>,
+    p: usize,
+    cache: IndexCache,
+    pool: BufferPool,
+    mask: MaskScratch,
+    stream: MaskedStream,
+    enc: EncodeScratch,
+    dec: DecodeScratch,
+    agg: StreamingFedAvg,
+}
+
+impl Bench {
+    /// One full client-encode + server-fold cycle: check a frame out of
+    /// the pool, fused mask+encode into it, decode it as a borrowed view,
+    /// fold, return the frame. This is exactly the dance `ClientJob::run`
+    /// and the serial drain loop perform per upload.
+    fn cycle(&mut self, enc: Encoding, scope: MaskScope, with_cache: bool) {
+        let cache = if with_cache { Some(&self.cache) } else { None };
+        let mut payload = self.pool.take();
+        mask_stream_selective(
+            &self.wn,
+            &self.wo,
+            0.3,
+            &self.layers,
+            scope,
+            &mut self.mask,
+            &mut self.stream,
+        )
+        .expect("regular layer table");
+        encode_masked(&mut self.enc, &mut payload, 1, 1, 10, &self.stream, enc, cache)
+            .expect("finite values");
+        let view =
+            decode_update_view_cached(&payload, &mut self.dec, cache).expect("own bytes decode");
+        match view.body {
+            BodyView::Dense(d) => self
+                .agg
+                .fold(Contribution { client: 1, params: d, n_samples: 10 })
+                .expect("dense fold"),
+            BodyView::Sparse { indices, values } => self
+                .agg
+                .fold_sparse(SparseContribution {
+                    client: 1,
+                    p: self.p,
+                    indices,
+                    values,
+                    n_samples: 10,
+                })
+                .expect("sparse fold"),
+        }
+        self.pool.put(payload);
+    }
+}
+
+/// The upload-path encodings a steady-state client actually selects
+/// among, paired with whether the cycle runs against the session's
+/// cross-round index cache (the `SparseCached` arm requires it).
+const ARMS: &[(Encoding, bool)] = &[
+    (Encoding::Dense, false),
+    (Encoding::Auto, false),
+    (Encoding::AutoQ8, false),
+    (Encoding::AutoQ4, false),
+    (Encoding::GroupedQ8, false),
+    (Encoding::SparseCached, true),
+];
+
+#[test]
+fn steady_state_encode_and_fold_allocate_zero() {
+    let p = 4096usize;
+    // two masked tensors and an unmasked bias tail, like a real manifest
+    let layers = vec![
+        LayerInfo { name: "w0".into(), shape: vec![1800], offset: 0, size: 1800, masked: true },
+        LayerInfo { name: "w1".into(), shape: vec![1800], offset: 1800, size: 1800, masked: true },
+        LayerInfo { name: "b".into(), shape: vec![496], offset: 3600, size: 496, masked: false },
+    ];
+    // deterministic, allocation-free value streams (no RNG state)
+    let wo: Vec<f32> = (0..p).map(|i| (i as f32 * 0.37).sin()).collect();
+    let wn: Vec<f32> = (0..p).map(|i| (i as f32 * 0.37).sin() + (i as f32 * 0.91).cos() * 0.1).collect();
+
+    // the cache a previous accepted round would have left behind: this
+    // round's own support, so the SparseCached arm wins its size race
+    let mut mask = MaskScratch::default();
+    let mut stream = MaskedStream::default();
+    mask_stream_selective(&wn, &wo, 0.3, &layers, MaskScope::PerLayer, &mut mask, &mut stream)
+        .expect("regular layer table");
+    let cache = IndexCache::first(stream.indices().to_vec());
+
+    let mut bench = Bench {
+        wn,
+        wo,
+        layers,
+        p,
+        cache,
+        pool: BufferPool::new(),
+        mask,
+        stream,
+        enc: EncodeScratch::default(),
+        dec: DecodeScratch::default(),
+        agg: StreamingFedAvg::new(p),
+    };
+
+    // Warmup: grow every scratch/pool buffer to steady-state capacity.
+    // Three passes so growth that feeds on a previous pass's result (e.g.
+    // pooled frame capacity across encodings of different sizes) settles.
+    for _ in 0..3 {
+        for &(enc, with_cache) in ARMS {
+            for scope in [MaskScope::PerLayer, MaskScope::Global] {
+                bench.cycle(enc, scope, with_cache);
+            }
+        }
+    }
+
+    // Measured steady state. A miss on the first attempt is treated as
+    // residual warmup (some capacity settled late) and retried; the final
+    // attempt must be exactly zero.
+    let mut last = usize::MAX;
+    for _attempt in 0..3 {
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..5 {
+            for &(enc, with_cache) in ARMS {
+                for scope in [MaskScope::PerLayer, MaskScope::Global] {
+                    bench.cycle(enc, scope, with_cache);
+                }
+            }
+        }
+        last = ALLOCS.load(Ordering::Relaxed) - before;
+        if last == 0 {
+            break;
+        }
+    }
+    assert_eq!(
+        last, 0,
+        "steady-state fused encode + fold must not touch the heap \
+         ({last} allocations across 5 warm cycles of {} arms)",
+        ARMS.len() * 2
+    );
+}

@@ -10,10 +10,15 @@ use fedmask::config::experiment::AggregatorKind;
 use fedmask::fl::aggregate::{
     make_aggregator, weighted_mean, Aggregator, Contribution, SparseContribution, StreamingFedAvg,
 };
-use fedmask::fl::masking::{self, MaskScope, MaskTarget};
+use fedmask::fl::masking::{self, MaskScope, MaskScratch, MaskTarget};
+use fedmask::fl::pipeline::mask_stream_selective;
 use fedmask::fl::sampling::SamplingSchedule;
 use fedmask::runtime::manifest::{LayerInfo, Manifest};
-use fedmask::transport::codec::{decode_update, encode_update, DecodedBody, Encoding};
+use fedmask::transport::codec::{
+    decode_update, encode_masked, encode_update, encode_update_cached_with, DecodedBody,
+    EncodeScratch, Encoding, MaskedStream,
+};
+use fedmask::transport::session::IndexCache;
 use fedmask::transport::cost::eq6_cost;
 use fedmask::util::prop::{check, Gen};
 
@@ -419,6 +424,161 @@ fn prop_selective_mask_idempotent() {
         // re-masking with gamma=1 is identity)
         let again = masking::selective_mask_rust(&once, &wo, 1.0, &layers, MaskScope::PerLayer);
         assert_eq!(once, again);
+    });
+}
+
+/// Fused-pipeline acceptance: the single-pass mask→quantize→encode path
+/// (`mask_stream_selective` + `encode_masked`) must be a drop-in for the
+/// staged mask-then-encode path at the **byte** level. Checked for every
+/// wire encoding, both mask scopes, index cache present and absent, and
+/// the degenerate inputs the masker can face — empty model, all-zero
+/// delta, and tie-heavy constant-|delta| vectors (which exercise the
+/// shared tie budget). The stream's census sideband (nnz) must also match
+/// the dense nonzero count. Both mask *targets* ship these same uplink
+/// bytes (Delta reconstruction is server-side), so target equivalence is
+/// checked at the fold: aggregating the fused frame under `Weights` and
+/// `Delta` is bitwise identical to folding the staged dense mask.
+#[test]
+fn prop_fused_mask_encode_bitwise_equals_staged() {
+    check("fused mask+encode == staged, all encodings", 40, |g| {
+        // 1-3 consecutive layers, first always masked, zero-size allowed
+        let nl = g.usize_in(1, 3);
+        let mut layers = Vec::new();
+        let mut off = 0usize;
+        for i in 0..nl {
+            let size = match g.usize_in(0, 5) {
+                0 => 0,
+                _ => g.usize_in(1, 250),
+            };
+            let mut l = layer(off, size, i == 0 || g.bool());
+            l.name = format!("l{i}");
+            layers.push(l);
+            off += size;
+        }
+        let p = off;
+        let wo = g.normal_vec(p);
+        let wn: Vec<f32> = match g.usize_in(0, 3) {
+            0 => wo.clone(),                            // all-zero delta
+            1 => wo.iter().map(|v| v + 0.25).collect(), // tie-heavy
+            _ => g.normal_vec(p),
+        };
+        let gamma = match g.usize_in(0, 4) {
+            0 => 0.0,
+            1 => 1.0,
+            _ => g.f32_in(0.05, 0.95),
+        };
+        let cache = IndexCache::first((0..p as u32).filter(|_| g.bool()).collect());
+        let mut mask_scratch = MaskScratch::default();
+        let mut stream = MaskedStream::default();
+        let mut scratch = EncodeScratch::default();
+        let mut fused = Vec::new();
+        for scope in [MaskScope::PerLayer, MaskScope::Global] {
+            let masked = masking::selective_mask_rust(&wn, &wo, gamma, &layers, scope);
+            mask_stream_selective(&wn, &wo, gamma, &layers, scope, &mut mask_scratch, &mut stream)
+                .unwrap();
+            assert_eq!(
+                stream.nnz(),
+                masked.iter().filter(|v| **v != 0.0).count(),
+                "census nnz, scope {scope:?} seed {:#x}",
+                g.seed
+            );
+            for &enc in Encoding::ALL {
+                for cached in [None, Some(&cache)] {
+                    let staged =
+                        encode_update_cached_with(&mut scratch, 7, 3, 55, &masked, enc, cached);
+                    encode_masked(&mut scratch, &mut fused, 7, 3, 55, &stream, enc, cached)
+                        .unwrap();
+                    assert_eq!(
+                        fused, staged,
+                        "enc {enc:?} scope {scope:?} cache {} gamma {gamma} p {p} seed {:#x}",
+                        cached.is_some(),
+                        g.seed
+                    );
+                }
+            }
+            for target in [MaskTarget::Weights, MaskTarget::Delta] {
+                let mut make = || -> StreamingFedAvg {
+                    match target {
+                        MaskTarget::Weights => StreamingFedAvg::new(p),
+                        MaskTarget::Delta => {
+                            StreamingFedAvg::with_delta_baseline(&wo, &layers).unwrap()
+                        }
+                    }
+                };
+                let mut from_wire = make();
+                let mut from_dense = make();
+                encode_masked(&mut scratch, &mut fused, 7, 3, 55, &stream, Encoding::Auto, None)
+                    .unwrap();
+                let u = decode_update(&fused).unwrap();
+                match &u.body {
+                    DecodedBody::Dense(d) => from_wire
+                        .fold(Contribution { client: 7, params: d, n_samples: 55 })
+                        .unwrap(),
+                    DecodedBody::Sparse { indices, values } => from_wire
+                        .fold_sparse(SparseContribution {
+                            client: 7,
+                            p,
+                            indices,
+                            values,
+                            n_samples: 55,
+                        })
+                        .unwrap(),
+                }
+                from_dense
+                    .fold(Contribution { client: 7, params: &masked, n_samples: 55 })
+                    .unwrap();
+                assert_eq!(
+                    Box::new(from_wire).finish().unwrap(),
+                    Box::new(from_dense).finish().unwrap(),
+                    "target {target:?} scope {scope:?} seed {:#x}",
+                    g.seed
+                );
+            }
+        }
+    });
+}
+
+/// Encoder-only anchor for the fused path: loading a `MaskedStream` from
+/// an arbitrary (unmasked) sparse vector via `from_dense` and encoding it
+/// with `encode_masked` yields the exact bytes of the staged encoder, for
+/// every encoding and cache state — pinning the stream-fed encoder
+/// independently of the masker that normally feeds it.
+#[test]
+fn prop_stream_from_dense_encode_matches_staged_encoder() {
+    check("from_dense + encode_masked == staged encoder", 60, |g| {
+        let p = match g.usize_in(0, 9) {
+            0 => 0,
+            1 => 1,
+            _ => g.usize_in(2, 1200),
+        };
+        let density = g.f32_in(0.0, 1.0);
+        let params: Vec<f32> = (0..p)
+            .map(|_| {
+                if g.f32_in(0.0, 1.0) < density {
+                    g.f32_in(-2.0, 2.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let cache = IndexCache::first((0..p as u32).filter(|_| g.bool()).collect());
+        let mut stream = MaskedStream::default();
+        stream.from_dense(&params);
+        let mut scratch = EncodeScratch::default();
+        let mut fused = Vec::new();
+        for &enc in Encoding::ALL {
+            for cached in [None, Some(&cache)] {
+                let staged =
+                    encode_update_cached_with(&mut scratch, 2, 9, 31, &params, enc, cached);
+                encode_masked(&mut scratch, &mut fused, 2, 9, 31, &stream, enc, cached).unwrap();
+                assert_eq!(
+                    fused, staged,
+                    "enc {enc:?} cache {} p {p} seed {:#x}",
+                    cached.is_some(),
+                    g.seed
+                );
+            }
+        }
     });
 }
 
